@@ -1,0 +1,174 @@
+//! End-to-end driver (DESIGN.md §5.2): train a LeNet-style CNN on a
+//! synthetic MNIST-shaped corpus for a few hundred minibatch steps through
+//! the FULL stack — DML source → compiler (constant folding, exec-type
+//! selection) → hybrid runtime (builtin conv operators; ACCEL offload when
+//! `--accel` and the conv artifacts match) — and log the loss curve.
+//!
+//! ```bash
+//! cargo run --release --example lenet_train            # CP backend
+//! cargo run --release --example lenet_train -- --accel # PJRT offload
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::agg;
+use systemml::runtime::matrix::randgen::synthetic_images;
+use systemml::util::metrics;
+
+/// LeNet-ish: conv(8@3x3, same) → relu → maxpool 2x2 → conv(16@3x3, same)
+/// → relu → maxpool 2x2 → affine → softmax. Images are 1x28x28 like MNIST.
+const LENET: &str = r#"
+source("nn/layers/softmax.dml") as softmax
+source("nn/layers/cross_entropy_loss.dml") as ce
+source("nn/optim/sgd.dml") as sgd
+
+# ---- hyperparameters -----------------------------------------------------
+C = 1; Hin = 28; Win = 28
+K1 = 8; K2 = 16; F = 3
+lr = 0.05
+batch_size = 16
+N = nrow(X)
+num_classes = ncol(Y)
+
+# ---- init ------------------------------------------------------------
+W1 = rand(rows=K1, cols=C*F*F, min=-1, max=1, seed=1) * sqrt(2.0 / (C*F*F))
+b1 = matrix(0, rows=K1, cols=1)
+W2 = rand(rows=K2, cols=K1*F*F, min=-1, max=1, seed=2) * sqrt(2.0 / (K1*F*F))
+b2 = matrix(0, rows=K2, cols=1)
+D3 = K2 * 7 * 7
+W3 = rand(rows=D3, cols=num_classes, min=-1, max=1, seed=3) * sqrt(2.0 / D3)
+b3 = matrix(0, rows=1, cols=num_classes)
+
+num_iter = (N %/% batch_size) * epochs
+loss_curve = matrix(0, rows=num_iter, cols=1)
+iter = 0
+for (ep in 1:epochs) {
+  for (bi in 1:(N %/% batch_size)) {
+    iter = iter + 1
+    beg = (bi-1)*batch_size + 1; end = bi*batch_size
+    Xb = X[beg:end,]; Yb = Y[beg:end,]
+
+    # ---- forward ----------------------------------------------------
+    c1pre = bias_add(conv2d(Xb, W1, input_shape=[batch_size,C,Hin,Win],
+              filter_shape=[K1,C,F,F], stride=[1,1], padding=[1,1]), b1)
+    c1 = max(c1pre, 0)
+    p1 = max_pool(c1, input_shape=[batch_size,K1,28,28], pool_size=[2,2],
+                  stride=[2,2], padding=[0,0])
+    c2pre = bias_add(conv2d(p1, W2, input_shape=[batch_size,K1,14,14],
+              filter_shape=[K2,K1,F,F], stride=[1,1], padding=[1,1]), b2)
+    c2 = max(c2pre, 0)
+    p2 = max_pool(c2, input_shape=[batch_size,K2,14,14], pool_size=[2,2],
+                  stride=[2,2], padding=[0,0])
+    scores = p2 %*% W3 + b3
+    probs = softmax::forward(scores)
+    loss = ce::forward(probs, Yb)
+    loss_curve[iter, 1] = loss
+
+    # ---- backward -----------------------------------------------------
+    dscores = (probs - Yb) / batch_size
+    dW3 = t(p2) %*% dscores
+    db3 = colSums(dscores)
+    dp2 = dscores %*% t(W3)
+    dc2 = max_pool_backward(c2, dp2, input_shape=[batch_size,K2,14,14],
+                            pool_size=[2,2], stride=[2,2], padding=[0,0])
+    dc2pre = dc2 * (c2pre > 0)
+    dW2 = conv2d_backward_filter(p1, dc2pre, input_shape=[batch_size,K1,14,14],
+            filter_shape=[K2,K1,F,F], stride=[1,1], padding=[1,1])
+    db2 = matrix(0, rows=K2, cols=1)
+    for (k in 1:K2) { db2[k, 1] = sum(dc2pre[, ((k-1)*196+1):(k*196)]) }
+    dp1 = conv2d_backward_data(W2, dc2pre, input_shape=[batch_size,K1,14,14],
+            filter_shape=[K2,K1,F,F], stride=[1,1], padding=[1,1])
+    dc1 = max_pool_backward(c1, dp1, input_shape=[batch_size,K1,28,28],
+                            pool_size=[2,2], stride=[2,2], padding=[0,0])
+    dc1pre = dc1 * (c1pre > 0)
+    dW1 = conv2d_backward_filter(Xb, dc1pre, input_shape=[batch_size,C,Hin,Win],
+            filter_shape=[K1,C,F,F], stride=[1,1], padding=[1,1])
+    db1 = matrix(0, rows=K1, cols=1)
+    for (k in 1:K1) { db1[k, 1] = sum(dc1pre[, ((k-1)*784+1):(k*784)]) }
+
+    # ---- update ----------------------------------------------------
+    W1 = sgd::update(W1, dW1, lr); b1 = sgd::update(b1, db1, lr)
+    W2 = sgd::update(W2, dW2, lr); b2 = sgd::update(b2, db2, lr)
+    W3 = sgd::update(W3, dW3, lr); b3 = sgd::update(b3, db3, lr)
+  }
+}
+
+# ---- final training accuracy over the first 256 rows ---------------------
+Xa = X[1:256,]
+na = 256
+a1pre = bias_add(conv2d(Xa, W1, input_shape=[na,C,Hin,Win],
+          filter_shape=[K1,C,F,F], stride=[1,1], padding=[1,1]), b1)
+a1 = max(a1pre, 0)
+ap1 = max_pool(a1, input_shape=[na,K1,28,28], pool_size=[2,2], stride=[2,2], padding=[0,0])
+a2pre = bias_add(conv2d(ap1, W2, input_shape=[na,K1,14,14],
+          filter_shape=[K2,K1,F,F], stride=[1,1], padding=[1,1]), b2)
+a2 = max(a2pre, 0)
+ap2 = max_pool(a2, input_shape=[na,K2,14,14], pool_size=[2,2], stride=[2,2], padding=[0,0])
+final_scores = ap2 %*% W3 + b3
+acc = mean(rowIndexMax(final_scores) == rowIndexMax(Y[1:256,]))
+"#;
+
+fn main() {
+    let accel = std::env::args().any(|a| a == "--accel");
+    let steps_arg: Option<usize> = std::env::args()
+        .skip_while(|a| a != "--epochs")
+        .nth(1)
+        .and_then(|s| s.parse().ok());
+
+    // 512 images x (1*28*28), 10 classes; 32 batches/epoch * 10 epochs =
+    // 320 minibatch steps by default.
+    let n = 512usize;
+    let epochs = steps_arg.unwrap_or(10);
+    let (x, y) = synthetic_images(n, 1, 28, 28, 10, 7);
+
+    let mut config = SystemConfig::default();
+    config.accel_enabled = accel;
+    let ctx = MLContext::with_config(config);
+
+    println!(
+        "LeNet e2e: {} images, {} epochs ({} minibatch steps), backend: {}",
+        n,
+        epochs,
+        epochs * (n / 16),
+        if accel { "CP+ACCEL(PJRT)" } else { "CP" }
+    );
+    let before = metrics::global().snapshot();
+    let t0 = std::time::Instant::now();
+    let script = Script::from_str(LENET)
+        .input("X", x)
+        .input("Y", y)
+        .input_scalar("epochs", epochs as f64)
+        .output("loss_curve")
+        .output("acc");
+    let res = ctx.execute(script).expect("training failed");
+    let wall = t0.elapsed();
+    let d = metrics::global().snapshot().delta(&before);
+
+    let lc = res.matrix("loss_curve").unwrap();
+    let total = lc.rows();
+    println!("\nloss curve ({total} steps):");
+    for i in (0..total).step_by((total / 16).max(1)) {
+        let bars = (lc.get(i, 0) * 20.0).round() as usize;
+        println!("  step {:4}  loss {:.4}  {}", i + 1, lc.get(i, 0), "#".repeat(bars.min(60)));
+    }
+    let first = lc.get(0, 0);
+    let last = lc.get(total - 1, 0);
+    let acc = res.double("acc").unwrap();
+    println!("\nfirst loss {first:.4} -> last loss {last:.4} | train accuracy {:.1}%", acc * 100.0);
+    println!(
+        "wallclock {wall:?} | {:.1} steps/s | flops {:.2e} | accel launches {}",
+        total as f64 / wall.as_secs_f64(),
+        d.flops as f64,
+        d.accel_launches
+    );
+    let mean_first: f64 = (0..4).map(|i| lc.get(i, 0)).sum::<f64>() / 4.0;
+    let mean_last: f64 = (total - 4..total).map(|i| lc.get(i, 0)).sum::<f64>() / 4.0;
+    assert!(
+        mean_last < mean_first * 0.5,
+        "loss must drop by >2x: {mean_first:.4} -> {mean_last:.4}"
+    );
+    let _ = agg::full_agg(&lc, agg::AggOp::Min);
+    println!("E2E OK");
+}

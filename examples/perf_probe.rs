@@ -1,0 +1,16 @@
+//! Quick perf probe for the dense matmult kernel variants.
+use systemml::runtime::matrix::mult;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::util::bench::bench;
+
+fn main() {
+    for n in [256usize, 512, 768] {
+        let a = rand(n, n, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+        let b = rand(n, n, -1.0, 1.0, 1.0, Pdf::Uniform, 2).unwrap();
+        let m = bench(&format!("mm{n}"), || {
+            mult::matmult(&a, &b).unwrap();
+        });
+        let gf = 2.0 * (n * n * n) as f64 / m.median.as_secs_f64() / 1e9;
+        println!("{n}: {:?} -> {gf:.2} GFLOP/s", m.median);
+    }
+}

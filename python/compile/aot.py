@@ -1,0 +1,153 @@
+"""AOT driver: lower the L2 graphs to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the rust `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE here (`make artifacts`); the rust binary then loads and
+executes the artifacts via PJRT with no python on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # DML matrices are double
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(r, c):
+    return jax.ShapeDtypeStruct((r, c), jax.numpy.float64)
+
+
+def entries():
+    """The artifact set: (name, fn, input shapes, op, attrs, n_outputs)."""
+    out = []
+
+    # GEMM shapes: the accel-vs-CP experiment (E6) + classifier layers.
+    for (m, k, n) in [(256, 256, 256), (384, 384, 384), (32, 784, 10)]:
+        out.append(
+            dict(
+                name=f"matmul_{m}x{k}x{n}",
+                fn=functools.partial(model.matmul, pallas=False),
+                inputs=[(m, k), (k, n)],
+                op="matmul",
+                attrs=dict(m=m, k=k, n=n),
+                num_outputs=1,
+            )
+        )
+
+    # LeNet-ish conv shapes (E6 conv offload).
+    for (n, c, h, w, k, r, s, stride, pad) in [
+        (16, 1, 28, 28, 8, 3, 3, 1, 1),
+        (16, 8, 14, 14, 16, 3, 3, 1, 1),
+    ]:
+        fn = functools.partial(
+            model.conv2d, n=n, c=c, h=h, w=w, k=k, r=r, s=s, stride=stride,
+            pad=pad, pallas=False,
+        )
+        out.append(
+            dict(
+                name=f"conv2d_n{n}c{c}h{h}w{w}_k{k}r{r}s{s}_st{stride}p{pad}",
+                fn=fn,
+                inputs=[(n, c * h * w), (k, c * r * s)],
+                op="conv2d",
+                attrs=dict(n=n, c=c, h=h, w=w, k=k, r=r, s=s, stride=stride, pad=pad),
+                num_outputs=1,
+            )
+        )
+
+    # Fused softmax-classifier train step (paper §2 script, one iteration).
+    bs, d, kk = 32, 784, 10
+    out.append(
+        dict(
+            name=f"softmax_train_step_bs{bs}_d{d}_k{kk}",
+            fn=functools.partial(model.softmax_train_step, lr=0.1, pallas=False),
+            inputs=[(bs, d), (d, kk), (1, kk), (bs, kk)],
+            op="softmax_train_step",
+            attrs=dict(bs=bs, d=d, k=kk),
+            num_outputs=3,
+        )
+    )
+
+    # Fused MLP train step (hidden 256).
+    hid = 256
+    out.append(
+        dict(
+            name=f"mlp_train_step_bs{bs}_d{d}_h{hid}_k{kk}",
+            fn=functools.partial(model.mlp_train_step, lr=0.1, pallas=False),
+            inputs=[(bs, d), (d, hid), (1, hid), (hid, kk), (1, kk), (bs, kk)],
+            op="mlp_train_step",
+            attrs=dict(bs=bs, d=d, hidden=hid, k=kk),
+            num_outputs=5,
+        )
+    )
+    # Pallas-kernel twins (L1 validation artifacts): same graphs with the
+    # interpret-mode Pallas kernels inlined. The rust tests assert the twin
+    # computes exactly what the native variant computes.
+    pallas_twins = []
+    for e in out:
+        if e["op"] in ("matmul", "softmax_train_step"):
+            fn = e["fn"]
+            twin = dict(e)
+            twin["name"] = e["name"] + "_pallas"
+            twin["op"] = e["op"] + "_pallas"
+            twin["fn"] = functools.partial(fn.func, *fn.args, **{**fn.keywords, "pallas": True}) if isinstance(fn, functools.partial) else functools.partial(fn, pallas=True)
+            pallas_twins.append(twin)
+    out.extend(pallas_twins)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    # legacy single-file arg kept for Makefile compat; unused beyond touch
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"entries": []}
+    for e in entries():
+        specs = [spec(r, c) for (r, c) in e["inputs"]]
+        lowered = jax.jit(e["fn"]).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = e["name"] + ".hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            dict(
+                name=e["name"],
+                file=fname,
+                op=e["op"],
+                attrs=e["attrs"],
+                inputs=[[r, c] for (r, c) in e["inputs"]],
+                num_outputs=e["num_outputs"],
+            )
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if args.out:
+        # Makefile stamp target.
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: MXU-tiled matrix multiplication.
+
+The paper's compute hot spot (§3: "Most of the time in training a deep
+neural network is spent in matrix multiplications and convolution
+operations") on a GPU maps to CuBLAS GEMM; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) tiles the operands into VMEM-resident blocks sized
+for the 128x128 MXU systolic array. BlockSpecs express the HBM->VMEM
+schedule that CUDA expressed with threadblocks.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode (plain HLO) is the correctness and
+AOT path; real-TPU efficiency is estimated structurally in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile edge.
+MXU_TILE = 128
+
+
+def _largest_divisor_le(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (block sizes must tile evenly)."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction of VMEM-resident tiles.
+
+    The f32/f64 accumulation happens inside the dot; with bm = bn = 128 the
+    MXU is fully occupied on real hardware.
+    """
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, y, bm: int = MXU_TILE, bn: int = MXU_TILE):
+    """Tiled matmul via pallas_call. x: (m, k), y: (k, n) -> (m, n)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _largest_divisor_le(m, bm)
+    bn = _largest_divisor_le(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # Row-block of x: varies with i, full K panel resident in VMEM.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # Col-block of y: varies with j.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU-PJRT executable HLO; see module docstring
+    )(x, y)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, itemsize: int = 8,
+                         bm: int = MXU_TILE, bn: int = MXU_TILE) -> int:
+    """Estimated VMEM residency per grid step (inputs + output tile).
+
+    Used by DESIGN.md §Perf to check the schedule fits the ~16 MiB VMEM of
+    a TPU core: bm*k + k*bn + bm*bn elements.
+    """
+    bm = _largest_divisor_le(m, bm)
+    bn = _largest_divisor_le(n, bn)
+    return itemsize * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and L2 graphs."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul oracle."""
+    return jnp.matmul(x, y)
+
+
+def softmax_ref(x):
+    """Row-wise stable softmax oracle."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def conv2d_ref(x_lin, w_lin, n, c, h, w, k, r, s, stride, pad):
+    """Convolution oracle over the linearized SystemML layout.
+
+    x_lin: (N, C*H*W), w_lin: (K, C*R*S) -> (N, K*P*Q), matching the
+    paper's tensor representation (§3) and the rust runtime's conv2d.
+    """
+    x4 = x_lin.reshape(n, c, h, w)
+    w4 = w_lin.reshape(k, c, r, s)
+    out = lax.conv_general_dilated(
+        x4,
+        w4,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    nn, kk, p, q = out.shape
+    return out.reshape(nn, kk * p * q)
+
+
+def softmax_train_step_ref(x, w, b, y, lr):
+    """One fused minibatch step of the paper's §2 softmax classifier."""
+    nrows = x.shape[0]
+    scores = x @ w + b
+    probs = softmax_ref(scores)
+    eps = 1e-12
+    loss = -jnp.mean(jnp.sum(y * jnp.log(probs + eps), axis=-1))
+    dscores = (probs - y) / nrows
+    dw = x.T @ dscores
+    db = jnp.sum(dscores, axis=0, keepdims=True)
+    return w - lr * dw, b - lr * db, loss.reshape(1, 1)

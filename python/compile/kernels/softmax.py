@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: row-wise numerically-stable softmax.
+
+Row-blocked so each grid step normalizes a VMEM-resident panel of rows;
+fused with the classifier GEMMs at L2 (model.py) into a single HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _largest_divisor_le(n: int, cap: int) -> int:
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_rows(x, block_rows: int = 128):
+    """Row-wise softmax via pallas_call. x: (n, d) -> (n, d)."""
+    n, d = x.shape
+    br = _largest_divisor_le(n, block_rows)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x)

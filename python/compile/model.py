@@ -1,0 +1,111 @@
+"""L2: JAX compute graphs for the operators the ACCEL backend offloads.
+
+Each entry point composes the L1 Pallas kernels (tiled matmul, row
+softmax) into the fused graphs SystemML's GPU backend would run as
+CuBLAS/CuDNN call sequences:
+
+* ``matmul`` — the BLAS-3 workhorse;
+* ``conv2d`` — im2col lowering [5] + Pallas GEMM, producing the same
+  K-major N x (K*P*Q) linearized layout as the rust runtime;
+* ``softmax_train_step`` — one fused minibatch SGD step of the paper's §2
+  softmax classifier (forward + backward + update), the "fused operator"
+  case where python stays off the request path: rust feeds and consumes
+  device buffers only.
+
+All graphs are f64 (DML's value type): aot.py enables jax_enable_x64.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul as pallas_matmul
+from compile.kernels.softmax import softmax_rows as pallas_softmax
+
+# Kernel selection: the ``pallas`` flag picks the L1 Pallas kernels
+# (interpret=True — the TPU-shaped kernels, CPU-emulated) or the XLA-native
+# jnp ops. aot.py emits BOTH variants per entry: the native one is what the
+# rust ACCEL backend dispatches on CPU (interpret-mode Pallas emulation is
+# not a serving path); the ``*_pallas`` twin exists so pytest + the rust
+# tests can assert the two lower to identical numerics. On a real TPU the
+# Pallas variant would be the deployed one (DESIGN.md §Hardware-Adaptation).
+
+
+def _mm(pallas):
+    return pallas_matmul if pallas else jnp.matmul
+
+
+def _softmax(x, pallas):
+    if pallas:
+        return pallas_softmax(x)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def matmul(x, y, *, pallas=True):
+    """GEMM via the L1 Pallas kernel (or the XLA-native op)."""
+    return (_mm(pallas)(x, y),)
+
+
+def conv2d(x_lin, w_lin, *, n, c, h, w, k, r, s, stride, pad, pallas=True):
+    """conv2d forward over the linearized layout via im2col + Pallas GEMM."""
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    x4 = x_lin.reshape(n, c, h, w)
+    xp = jnp.pad(x4, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    # im2col: gather (C,R,S) patches for every output position.
+    # cols: (N, P*Q, C*R*S)
+    patches = []
+    for dr in range(r):
+        for ds in range(s):
+            sl = xp[:, :, dr : dr + stride * p : stride, ds : ds + stride * q : stride]
+            patches.append(sl.reshape(n, c, p * q))
+    # (R*S, N, C, PQ) -> (N, PQ, C, R*S) -> (N, PQ, C*R*S)
+    col = jnp.stack(patches, axis=-1)  # (N, C, PQ, R*S)
+    col = col.transpose(0, 2, 1, 3).reshape(n, p * q, c * r * s)
+    # One GEMM per batch via a single reshaped GEMM: (N*PQ, CRS) @ (CRS, K).
+    flat = col.reshape(n * p * q, c * r * s)
+    prod = _mm(pallas)(flat, w_lin.T)  # (N*PQ, K)
+    out = prod.reshape(n, p * q, k).transpose(0, 2, 1).reshape(n, k * p * q)
+    return (out,)
+
+
+def softmax_train_step(x, w, b, y, *, lr, pallas=True):
+    """Fused minibatch step: returns (W', b', loss[1,1])."""
+    mm = _mm(pallas)
+    nrows = x.shape[0]
+    scores = mm(x, w) + b
+    probs = _softmax(scores, pallas)
+    eps = 1e-12
+    loss = -jnp.mean(jnp.sum(y * jnp.log(probs + eps), axis=-1))
+    dscores = (probs - y) / nrows
+    dw = mm(x.T, dscores)
+    db = jnp.sum(dscores, axis=0, keepdims=True)
+    return (w - lr * dw, b - lr * db, loss.reshape(1, 1))
+
+
+def mlp_train_step(x, w1, b1, w2, b2, y, *, lr, pallas=True):
+    """Fused 2-layer MLP (relu) minibatch step: the LeNet-class fused path.
+
+    Returns (W1', b1', W2', b2', loss[1,1]).
+    """
+    mm = _mm(pallas)
+    nrows = x.shape[0]
+    h_pre = mm(x, w1) + b1
+    h = jnp.maximum(h_pre, 0.0)
+    scores = mm(h, w2) + b2
+    probs = _softmax(scores, pallas)
+    eps = 1e-12
+    loss = -jnp.mean(jnp.sum(y * jnp.log(probs + eps), axis=-1))
+    dscores = (probs - y) / nrows
+    dw2 = mm(h.T, dscores)
+    db2 = jnp.sum(dscores, axis=0, keepdims=True)
+    dh = mm(dscores, w2.T) * (h_pre > 0.0)
+    dw1 = mm(x.T, dh)
+    db1 = jnp.sum(dh, axis=0, keepdims=True)
+    return (
+        w1 - lr * dw1,
+        b1 - lr * db1,
+        w2 - lr * dw2,
+        b2 - lr * db2,
+        loss.reshape(1, 1),
+    )

@@ -1,0 +1,80 @@
+"""L2 graph correctness: fused models vs oracles, in the exact layouts the
+rust runtime expects."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    c=st.integers(1, 3),
+    hw=st.integers(5, 9),
+    k=st.integers(1, 4),
+    rs=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, c, hw, k, rs, stride, pad, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, c * hw * hw))
+    w = _rand(rng, (k, c * rs * rs))
+    got = model.conv2d(x, w, n=n, c=c, h=hw, w=hw, k=k, r=rs, s=rs, stride=stride, pad=pad)[0]
+    want = ref.conv2d_ref(x, w, n, c, hw, hw, k, rs, rs, stride, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_softmax_train_step_matches_ref():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (32, 20))
+    w = _rand(rng, (20, 5)) * 0.1
+    b = jnp.zeros((1, 5), dtype=jnp.float64)
+    y = jnp.eye(5, dtype=jnp.float64)[rng.integers(0, 5, 32)]
+    got = model.softmax_train_step(x, w, b, y, lr=0.1)
+    want = ref.softmax_train_step_ref(x, w, b, y, 0.1)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(g, wv, rtol=1e-10, atol=1e-12)
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(8)
+    x = _rand(rng, (32, 10))
+    w = jnp.zeros((10, 3), dtype=jnp.float64)
+    b = jnp.zeros((1, 3), dtype=jnp.float64)
+    y = jnp.eye(3, dtype=jnp.float64)[rng.integers(0, 3, 32)]
+    losses = []
+    for _ in range(30):
+        w, b, loss = model.softmax_train_step(x, w, b, y, lr=0.5)
+        losses.append(float(loss[0, 0]))
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]
+
+
+def test_mlp_train_step_shapes_and_descent():
+    rng = np.random.default_rng(9)
+    bs, d, h, k = 16, 12, 8, 3
+    x = _rand(rng, (bs, d))
+    w1 = _rand(rng, (d, h)) * 0.1
+    b1 = jnp.zeros((1, h), dtype=jnp.float64)
+    w2 = _rand(rng, (h, k)) * 0.1
+    b2 = jnp.zeros((1, k), dtype=jnp.float64)
+    y = jnp.eye(k, dtype=jnp.float64)[rng.integers(0, k, bs)]
+    first = None
+    for _ in range(40):
+        w1, b1, w2, b2, loss = model.mlp_train_step(x, w1, b1, w2, b2, y, lr=0.5)
+        if first is None:
+            first = float(loss[0, 0])
+    assert float(loss[0, 0]) < first
+    assert w1.shape == (d, h) and w2.shape == (h, k)

@@ -1,0 +1,60 @@
+//! E7 — builtin NN functions vs DML-loop implementations (paper §3
+//! "Builtin NN Functions": "we've added them as built-in functions to
+//! enable efficient implementations"). Runs the same convolution and
+//! pooling as (a) native builtins and (b) the pure-DML nn-library loops.
+
+use systemml::api::{MLContext, Script};
+use systemml::util::bench::{bench_config, print_table, BenchConfig, Measurement};
+
+fn main() {
+    let ctx = MLContext::new();
+    let cfg = BenchConfig { warmup: 1, min_iters: 3, max_iters: 6, ..Default::default() };
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    let builtin = r#"
+        source("nn/layers/conv2d_builtin.dml") as conv
+        X = rand(rows=4, cols=2*12*12, min=-1, max=1, seed=1)
+        [W, b] = conv::init(4, 2, 3, 3)
+        [out, Hout, Wout] = conv::forward(X, W, b, 2, 12, 12, 3, 3, 1, 1, 1, 1)
+        s = sum(out)
+    "#;
+    let dml_loops = r#"
+        source("nn/layers/conv2d.dml") as conv
+        source("nn/layers/conv2d_builtin.dml") as convb
+        X = rand(rows=4, cols=2*12*12, min=-1, max=1, seed=1)
+        [W, b] = convb::init(4, 2, 3, 3)
+        [out, Hout, Wout] = conv::forward(X, W, b, 2, 12, 12, 3, 3, 1, 1)
+        s = sum(out)
+    "#;
+    rows.push(bench_config("conv2d builtin", cfg, &mut || {
+        ctx.execute(Script::from_str(builtin).output("s")).unwrap();
+    }));
+    rows.push(bench_config("conv2d DML loops", cfg, &mut || {
+        ctx.execute(Script::from_str(dml_loops).output("s")).unwrap();
+    }));
+
+    let pool_builtin = r#"
+        source("nn/layers/max_pool2d_builtin.dml") as pool
+        X = rand(rows=8, cols=2*16*16, min=-1, max=1, seed=2)
+        [out, Hout, Wout] = pool::forward(X, 2, 16, 16, 2, 2, 2, 2)
+        s = sum(out)
+    "#;
+    let pool_loops = r#"
+        source("nn/layers/max_pool2d.dml") as pool
+        X = rand(rows=8, cols=2*16*16, min=-1, max=1, seed=2)
+        [out, Hout, Wout] = pool::forward(X, 2, 16, 16, 2, 2, 2, 2)
+        s = sum(out)
+    "#;
+    rows.push(bench_config("max_pool builtin", cfg, &mut || {
+        ctx.execute(Script::from_str(pool_builtin).output("s")).unwrap();
+    }));
+    rows.push(bench_config("max_pool DML loops", cfg, &mut || {
+        ctx.execute(Script::from_str(pool_loops).output("s")).unwrap();
+    }));
+
+    print_table("E7: builtin NN functions vs DML-loop implementations", &rows, &[], |_| vec![]);
+    let conv_ratio = rows[1].median.as_secs_f64() / rows[0].median.as_secs_f64();
+    let pool_ratio = rows[3].median.as_secs_f64() / rows[2].median.as_secs_f64();
+    println!("\nbuiltin speedup: conv2d {conv_ratio:.0}x, max_pool {pool_ratio:.0}x");
+    assert!(conv_ratio > 5.0, "builtin conv must be much faster than DML loops");
+}

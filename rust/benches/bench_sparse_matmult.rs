@@ -1,0 +1,42 @@
+//! E2 — sparse vs dense matmult physical operators (paper §3): density
+//! sweep over A %*% B at 384^2, reporting the selected operator, time,
+//! and FLOPs. Sparse wins at low density; dense wins near-dense — the
+//! crossover is the sparsity turn point story.
+
+use systemml::runtime::matrix::mult::matmult_traced;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::util::bench::{bench, print_table, Measurement};
+
+fn main() {
+    let n = 384usize;
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut ops: Vec<String> = Vec::new();
+    for density in [1.0, 0.6, 0.4, 0.2, 0.1, 0.05, 0.01] {
+        let a = rand(n, n, -1.0, 1.0, density, Pdf::Uniform, 1).unwrap();
+        let b = rand(n, n, -1.0, 1.0, density, Pdf::Uniform, 2).unwrap();
+        let mut selected = None;
+        let m = bench(&format!("density={density:.2}"), || {
+            let (_, op) = matmult_traced(&a, &b).unwrap();
+            selected = Some(op);
+        });
+        ops.push(format!("{:?}", selected.unwrap()));
+        rows.push(m);
+    }
+    let ops2 = ops.clone();
+    print_table(
+        "E2: matmult operator selection vs density (384x384 @ 384x384)",
+        &rows,
+        &["operator", "MFLOP/iter", "GFLOP/s"],
+        |m| {
+            let idx = rows.iter().position(|r| std::ptr::eq(r, m)).unwrap_or(0);
+            vec![
+                ops2[idx].clone(),
+                format!("{:.2}", m.flops_per_iter() / 1e6),
+                format!("{:.2}", m.gflops()),
+            ]
+        },
+    );
+    let dense_t = rows[0].median.as_secs_f64();
+    let sparse_t = rows[6].median.as_secs_f64();
+    println!("\n1% density speedup over dense-dense: {:.1}x", dense_t / sparse_t);
+}

@@ -1,0 +1,56 @@
+//! E4 — train_algo="minibatch" vs "batch" (paper §3): the same Keras2DML
+//! model compiled to the two loop structures. Minibatch does many small
+//! updates (better loss per epoch); batch does one large update per epoch
+//! whose big matmults are what the distributed backend is for.
+
+use systemml::nn::keras2dml::{FitConfig, Keras2DML, SequentialModel};
+use systemml::runtime::matrix::randgen::synthetic_classification;
+use systemml::util::bench::{bench_config, print_table, BenchConfig, Measurement};
+use systemml::MLContext;
+
+const MODEL: &str = r#"{
+    "name": "m", "input_dim": 64,
+    "layers": [
+        {"type": "dense", "units": 64, "activation": "relu"},
+        {"type": "dense", "units": 8, "activation": "softmax"}
+    ],
+    "optimizer": {"type": "sgd", "lr": 0.05}
+}"#;
+
+fn main() {
+    let (x, y) = synthetic_classification(2048, 64, 8, 11);
+    let cfg = BenchConfig { warmup: 1, min_iters: 3, max_iters: 6, ..Default::default() };
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut extra: Vec<(usize, f64)> = Vec::new();
+    for (algo, epochs) in [("minibatch", 2usize), ("batch", 2usize)] {
+        let model = SequentialModel::from_json(MODEL).unwrap();
+        let mut k2d = Keras2DML::new(MLContext::new(), model);
+        k2d.fit_config =
+            FitConfig { train_algo: algo.into(), epochs, ..FitConfig::default() };
+        let mut last = (0usize, 0.0f64);
+        let m = bench_config(&format!("train_algo={algo}"), cfg, &mut || {
+            let t = k2d.fit(x.clone(), y.clone()).unwrap();
+            last = (t.loss_curve.len(), *t.loss_curve.last().unwrap());
+        });
+        extra.push(last);
+        rows.push(m);
+    }
+    let extra2 = extra.clone();
+    print_table(
+        "E4: train_algo minibatch vs batch (2048x64, 8 classes, 2 epochs)",
+        &rows,
+        &["updates", "final loss"],
+        |m| {
+            let idx = rows.iter().position(|r| std::ptr::eq(r, m)).unwrap_or(0);
+            vec![extra2[idx].0.to_string(), format!("{:.4}", extra2[idx].1)]
+        },
+    );
+    assert!(extra[0].0 > extra[1].0, "minibatch must perform more updates");
+    assert!(
+        extra[0].1 < extra[1].1,
+        "minibatch should reach lower loss in equal epochs: {} vs {}",
+        extra[0].1,
+        extra[1].1
+    );
+    println!("\nminibatch reaches {:.4} vs batch {:.4} in equal epochs", extra[0].1, extra[1].1);
+}

@@ -1,0 +1,138 @@
+//! Matrix I/O: CSV and a simple binary block format (SystemML's
+//! read/write with format="csv" / "binary").
+
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::runtime::matrix::{DenseMatrix, Matrix};
+use crate::util::error::{DmlError, Result};
+
+/// Write a matrix as CSV.
+pub fn write_csv(m: &Matrix, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let d = m.to_dense();
+    for r in 0..d.rows {
+        let row: Vec<String> = d.row(r).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV matrix.
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Matrix> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut data = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Vec<f64> = line
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| DmlError::rt(format!("csv parse error at row {rows}: {e}")))?;
+        if rows == 0 {
+            cols = vals.len();
+        } else if vals.len() != cols {
+            return Err(DmlError::rt(format!(
+                "csv: row {rows} has {} columns, expected {cols}",
+                vals.len()
+            )));
+        }
+        data.extend(vals);
+        rows += 1;
+    }
+    Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)?).examine_and_convert())
+}
+
+/// Binary format: magic, dims, then row-major f64 little-endian.
+const MAGIC: &[u8; 8] = b"SYSMLMB1";
+
+/// Write the binary block format.
+pub fn write_binary(m: &Matrix, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for v in m.to_row_major_vec() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary block format.
+pub fn read_binary(path: impl AsRef<Path>) -> Result<Matrix> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(DmlError::rt("not a systemml binary matrix file".to_string()));
+    }
+    let mut dims = [0u8; 16];
+    f.read_exact(&mut dims)?;
+    let rows = u64::from_le_bytes(dims[..8].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(dims[8..].try_into().unwrap()) as usize;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() != rows * cols * 8 {
+        return Err(DmlError::rt(format!(
+            "binary matrix: expected {} bytes of data, found {}",
+            rows * cols * 8,
+            buf.len()
+        )));
+    }
+    let data: Vec<f64> =
+        buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)?).examine_and_convert())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sysml_io_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.5, -2.0, 0.0], &[3.25, 4.0, 1e-3]]);
+        let p = tmpfile("a.csv");
+        write_csv(&m, &p).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let m = Matrix::from_rows(&[&[std::f64::consts::PI, f64::MIN_POSITIVE], &[-0.0, 1e300]]);
+        let p = tmpfile("b.bin");
+        write_binary(&m, &p).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(back.to_row_major_vec(), m.to_row_major_vec());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmpfile("bad.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let p = tmpfile("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! MLContext-style public API (paper §2): build a [`Script`], bind inputs,
+//! execute, fetch outputs.
+//!
+//! ```no_run
+//! use systemml::api::{MLContext, Script};
+//! use systemml::runtime::matrix::Matrix;
+//!
+//! let ctx = MLContext::new();
+//! let script = Script::from_str("Y = X %*% t(X)\ns = sum(Y)")
+//!     .input("X", Matrix::filled(4, 4, 1.0))
+//!     .output("s");
+//! let results = ctx.execute(script).unwrap();
+//! assert_eq!(results.double("s").unwrap(), 64.0);
+//! ```
+
+pub mod io;
+
+use std::collections::HashMap;
+
+use crate::conf::SystemConfig;
+use crate::dml::parser::parse;
+use crate::dml::validate::{self, Bundle};
+use crate::runtime::interp::registry::build_bundle;
+use crate::runtime::interp::{Interpreter, Scope, Value};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+
+/// A DML script plus its input bindings and requested outputs.
+#[derive(Clone, Debug, Default)]
+pub struct Script {
+    pub source: String,
+    pub inputs: HashMap<String, Value>,
+    pub outputs: Vec<String>,
+}
+
+impl Script {
+    /// Script from DML source text.
+    pub fn from_str(src: impl Into<String>) -> Script {
+        Script { source: src.into(), inputs: HashMap::new(), outputs: Vec::new() }
+    }
+
+    /// Script from a .dml file.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Script> {
+        Ok(Script::from_str(std::fs::read_to_string(path)?))
+    }
+
+    /// Bind a matrix input.
+    pub fn input(mut self, name: &str, m: Matrix) -> Script {
+        self.inputs.insert(name.to_string(), Value::Matrix(m));
+        self
+    }
+
+    /// Bind a scalar input.
+    pub fn input_scalar(mut self, name: &str, v: f64) -> Script {
+        self.inputs.insert(name.to_string(), Value::Double(v));
+        self
+    }
+
+    /// Bind a string input.
+    pub fn input_str(mut self, name: &str, v: &str) -> Script {
+        self.inputs.insert(name.to_string(), Value::Str(v.to_string()));
+        self
+    }
+
+    /// Request an output variable.
+    pub fn output(mut self, name: &str) -> Script {
+        self.outputs.push(name.to_string());
+        self
+    }
+}
+
+/// Execution results: the requested outputs plus captured print output.
+#[derive(Clone, Debug, Default)]
+pub struct Results {
+    values: HashMap<String, Value>,
+    pub stdout: Vec<String>,
+}
+
+impl Results {
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.values.get(name)
+    }
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        Ok(self
+            .values
+            .get(name)
+            .ok_or_else(|| DmlError::rt(format!("no output '{name}'")))?
+            .as_matrix()?
+            .clone())
+    }
+    pub fn double(&self, name: &str) -> Result<f64> {
+        self.values
+            .get(name)
+            .ok_or_else(|| DmlError::rt(format!("no output '{name}'")))?
+            .as_double()
+    }
+}
+
+/// The MLContext: configuration + execution entry point.
+#[derive(Default)]
+pub struct MLContext {
+    pub config: SystemConfig,
+    /// Echo DML print() output to stdout.
+    pub echo: bool,
+}
+
+impl MLContext {
+    /// Context with default configuration.
+    pub fn new() -> MLContext {
+        MLContext { config: SystemConfig::default(), echo: false }
+    }
+
+    /// Context with explicit configuration.
+    pub fn with_config(config: SystemConfig) -> MLContext {
+        MLContext { config, echo: false }
+    }
+
+    /// Parse + validate a script without executing (SystemML `-explain`).
+    pub fn compile(&self, script: &Script) -> Result<(Bundle, Vec<String>)> {
+        let mut prog = parse(&script.source)?;
+        // Static rewrites (HOP-level): constant folding.
+        crate::hop::rewrite::fold_program(&mut prog);
+        let bundle = build_bundle(prog, &self.config)?;
+        // Seed the validator scope with bound inputs by prepending dummy
+        // assignments? Instead: validation treats inputs as pre-defined.
+        let warnings = validate_with_inputs(&bundle, script.inputs.keys())?;
+        Ok((bundle, warnings))
+    }
+
+    /// Execute a script and collect its outputs.
+    pub fn execute(&self, script: Script) -> Result<Results> {
+        let (bundle, _warnings) = self.compile(&script)?;
+        let interp = Interpreter::new(bundle, self.config.clone());
+        let interp = Interpreter { echo: self.echo, ..interp };
+        let scope: Scope = script.inputs.clone().into_iter().collect();
+        let final_scope = interp.run(scope)?;
+        let mut out = Results { values: HashMap::new(), stdout: interp.output() };
+        for name in &script.outputs {
+            let v = final_scope.get(name).ok_or_else(|| {
+                DmlError::rt(format!("requested output '{name}' was never assigned"))
+            })?;
+            out.values.insert(name.clone(), v.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// Validate, treating bound inputs as pre-defined variables.
+fn validate_with_inputs<'a>(
+    bundle: &Bundle,
+    inputs: impl Iterator<Item = &'a String>,
+) -> Result<Vec<String>> {
+    // Wrap: synthesize `name = name` wouldn't parse; instead reuse the
+    // validator by injecting the inputs into a shadow program whose body
+    // starts with assignments from a reserved literal.
+    let mut shadow = bundle.clone();
+    let mut pre: Vec<crate::dml::ast::Stmt> = Vec::new();
+    for name in inputs {
+        pre.push(crate::dml::ast::Stmt::Assign {
+            target: crate::dml::ast::AssignTarget::Var(name.clone()),
+            value: crate::dml::ast::Expr::Num(0.0, crate::dml::ast::Pos::default()),
+            pos: crate::dml::ast::Pos::default(),
+        });
+    }
+    pre.extend(shadow.main.body);
+    shadow.main.body = pre;
+    validate::validate(&shadow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn execute_simple_script() {
+        let ctx = MLContext::new();
+        let script = Script::from_str("Y = X * 2\ns = sum(Y)")
+            .input("X", Matrix::filled(3, 3, 1.0))
+            .output("s")
+            .output("Y");
+        let res = ctx.execute(script).unwrap();
+        assert_eq!(res.double("s").unwrap(), 18.0);
+        assert_eq!(res.matrix("Y").unwrap(), Matrix::filled(3, 3, 2.0));
+    }
+
+    #[test]
+    fn missing_output_is_error() {
+        let ctx = MLContext::new();
+        let script = Script::from_str("x = 1").output("nope");
+        assert!(ctx.execute(script).is_err());
+    }
+
+    #[test]
+    fn validation_catches_undefined_vars() {
+        let ctx = MLContext::new();
+        let script = Script::from_str("y = undefined_thing + 1");
+        assert!(ctx.execute(script).is_err());
+    }
+
+    #[test]
+    fn inputs_are_visible_to_validator() {
+        let ctx = MLContext::new();
+        let script = Script::from_str("y = sum(X)").input("X", Matrix::filled(2, 2, 1.0));
+        assert!(ctx.execute(script).is_ok());
+    }
+
+    #[test]
+    fn print_output_captured() {
+        let ctx = MLContext::new();
+        let script = Script::from_str("print(\"hello \" + 42)");
+        let res = ctx.execute(script).unwrap();
+        assert_eq!(res.stdout, vec!["hello 42"]);
+    }
+}

@@ -1,0 +1,74 @@
+//! System configuration — the knobs SystemML exposes through
+//! SparkContext/JVM settings, mapped to this runtime.
+
+use std::path::PathBuf;
+
+/// Runtime configuration for compiler decisions and backends.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Driver ("JVM heap") memory budget in bytes. Operations whose
+    /// estimated memory exceeds this are compiled to the distributed
+    /// backend (paper §3 Distributed Operations).
+    pub driver_memory: usize,
+    /// Simulated cluster size (number of workers/executors).
+    pub num_workers: usize,
+    /// Per-worker memory budget in bytes.
+    pub worker_memory: usize,
+    /// Block size (rows/cols) for blocked distributed matrices.
+    pub block_size: usize,
+    /// Enable the distributed backend (if false, everything runs CP and
+    /// over-budget allocations are errors — like local-mode SystemML).
+    pub dist_enabled: bool,
+    /// Enable the accelerator (PJRT) backend — the paper's GPU backend.
+    pub accel_enabled: bool,
+    /// Accelerator "device memory" budget in bytes (drives LRU eviction).
+    pub accel_memory: usize,
+    /// Directories searched by `source("...")`.
+    pub script_paths: Vec<PathBuf>,
+    /// Directory holding AOT artifacts (manifest.json + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Print plan/exec-type decisions (SystemML's `-explain`).
+    pub explain: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        SystemConfig {
+            driver_memory: 512 * 1024 * 1024,
+            num_workers: 4,
+            worker_memory: 512 * 1024 * 1024,
+            block_size: 1024,
+            dist_enabled: true,
+            accel_enabled: false,
+            accel_memory: 256 * 1024 * 1024,
+            script_paths: vec![
+                PathBuf::from("."),
+                PathBuf::from("scripts"),
+                manifest_dir.join("scripts"),
+            ],
+            artifacts_dir: manifest_dir.join("artifacts"),
+            explain: false,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// A config with a tiny driver budget, forcing distributed plans
+    /// (used by tests and the hybrid-plan experiments).
+    pub fn tiny_driver(budget: usize) -> Self {
+        SystemConfig { driver_memory: budget, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_paths_include_manifest_scripts() {
+        let c = SystemConfig::default();
+        assert!(c.script_paths.iter().any(|p| p.ends_with("scripts")));
+        assert!(c.dist_enabled);
+    }
+}

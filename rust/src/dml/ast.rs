@@ -1,0 +1,226 @@
+//! Abstract syntax tree for DML (Declarative Machine Learning language).
+//!
+//! DML is the R-like language of the paper's §2: matrix-typed variables,
+//! user-defined functions with multiple returns, `source(...) as ns`
+//! imports, control flow (`if`/`for`/`while`/`parfor`), 1-based inclusive
+//! matrix indexing, and a large builtin library.
+
+/// Source position (1-based line/col) for error reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Pos {
+    pub line: usize,
+    pub col: usize,
+}
+
+/// DML value types (scalars are double/int/boolean/string; `matrix[double]`
+/// is the only matrix type, as in SystemML 1.x).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueType {
+    Double,
+    Int,
+    Boolean,
+    Str,
+    Matrix,
+    /// Unknown until validation (e.g. untyped function args in practice).
+    Unknown,
+}
+
+/// A parsed program: top-level statements plus function definitions
+/// (possibly inside namespaces populated by `source`).
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    /// `source("path") as ns` imports discovered during parsing.
+    pub imports: Vec<Import>,
+    /// Functions defined at top level of this file.
+    pub functions: Vec<FunctionDef>,
+    /// Executable top-level statements.
+    pub body: Vec<Stmt>,
+}
+
+/// A `source("file.dml") as ns` import.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Import {
+    pub path: String,
+    pub namespace: String,
+    pub pos: Pos,
+}
+
+/// Function definition: `name = function(args) return (rets) { body }`.
+#[derive(Clone, Debug)]
+pub struct FunctionDef {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub returns: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub pos: Pos,
+}
+
+/// Typed parameter, optionally with a default (DML allows `int x = 5`).
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub vtype: ValueType,
+    pub default: Option<Expr>,
+}
+
+/// Statements.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `x = expr` or `X[i:j, k:l] = expr` (left indexing).
+    Assign { target: AssignTarget, value: Expr, pos: Pos },
+    /// `[a, b] = f(...)` multi-assignment from a multi-return function.
+    MultiAssign { targets: Vec<String>, value: Expr, pos: Pos },
+    /// `if (cond) { .. } else { .. }`.
+    If { cond: Expr, then_branch: Vec<Stmt>, else_branch: Vec<Stmt>, pos: Pos },
+    /// `for (i in from:to)` or `for (i in seq(a,b,c))`.
+    For { var: String, range: RangeExpr, body: Vec<Stmt>, pos: Pos },
+    /// `parfor (i in from:to, opts)` — task-parallel loop (paper §3).
+    ParFor {
+        var: String,
+        range: RangeExpr,
+        body: Vec<Stmt>,
+        /// Parsed options: check=, par=, mode=, resultmerge=.
+        opts: ParForOpts,
+        pos: Pos,
+    },
+    /// `while (cond) { .. }`.
+    While { cond: Expr, body: Vec<Stmt>, pos: Pos },
+    /// Bare expression statement (e.g. `print(...)`).
+    ExprStmt { expr: Expr, pos: Pos },
+}
+
+/// parfor options (subset of SystemML's).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParForOpts {
+    /// check=0 disables the dependency analysis (expert mode).
+    pub check: bool,
+    /// Requested degree of parallelism (0 = let the optimizer pick).
+    pub par: usize,
+    /// Execution mode hint: "local", "remote", or "" (optimizer decides).
+    pub mode: String,
+}
+
+impl ParForOpts {
+    pub fn new() -> Self {
+        ParForOpts { check: true, par: 0, mode: String::new() }
+    }
+}
+
+/// Assignment target: scalar/matrix variable or an indexed region.
+#[derive(Clone, Debug)]
+pub enum AssignTarget {
+    Var(String),
+    /// X[rows, cols] = ... with optional ranges (None = all).
+    Indexed { name: String, rows: IndexRange, cols: IndexRange },
+}
+
+/// One dimension of an indexing expression.
+#[derive(Clone, Debug)]
+pub enum IndexRange {
+    /// `X[, j]` — whole dimension.
+    All,
+    /// `X[i, _]` — single index.
+    Single(Box<Expr>),
+    /// `X[a:b, _]` — inclusive range.
+    Range(Box<Expr>, Box<Expr>),
+}
+
+/// Loop range: `from:to` (step 1) or general seq with step.
+#[derive(Clone, Debug)]
+pub struct RangeExpr {
+    pub from: Box<Expr>,
+    pub to: Box<Expr>,
+    pub step: Option<Box<Expr>>,
+}
+
+/// Binary operators at the AST level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AstBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Mod,
+    IntDiv,
+    MatMul,
+    Eq,
+    Neq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AstUnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions.
+#[derive(Clone, Debug)]
+pub enum Expr {
+    /// Numeric literal.
+    Num(f64, Pos),
+    /// Integer literal (kept separate for loop semantics).
+    Int(i64, Pos),
+    /// String literal.
+    Str(String, Pos),
+    /// `TRUE` / `FALSE`.
+    Bool(bool, Pos),
+    /// Variable reference.
+    Var(String, Pos),
+    /// `ns::name` reference (function value in call position only).
+    Binary { op: AstBinOp, lhs: Box<Expr>, rhs: Box<Expr>, pos: Pos },
+    Unary { op: AstUnOp, operand: Box<Expr>, pos: Pos },
+    /// Function or builtin call: `f(args)` or `ns::f(args)`. Named args
+    /// (`rows=10`) are kept separately.
+    Call { namespace: Option<String>, name: String, args: Vec<Arg>, pos: Pos },
+    /// Right indexing `X[r, c]`.
+    Index { base: Box<Expr>, rows: IndexRange, cols: IndexRange, pos: Pos },
+    /// List literal `[a, b, c]` — used for shape arguments of the NN
+    /// builtins (e.g. `conv2d(X, W, input_shape=[N,C,H,W], ...)`).
+    List(Vec<Expr>, Pos),
+}
+
+/// Call argument, optionally named.
+#[derive(Clone, Debug)]
+pub struct Arg {
+    pub name: Option<String>,
+    pub value: Expr,
+}
+
+impl Expr {
+    pub fn pos(&self) -> Pos {
+        match self {
+            Expr::Num(_, p)
+            | Expr::Int(_, p)
+            | Expr::Str(_, p)
+            | Expr::Bool(_, p)
+            | Expr::Var(_, p) => *p,
+            Expr::List(_, p) => *p,
+            Expr::Binary { pos, .. }
+            | Expr::Unary { pos, .. }
+            | Expr::Call { pos, .. }
+            | Expr::Index { pos, .. } => *pos,
+        }
+    }
+}
+
+impl Stmt {
+    pub fn pos(&self) -> Pos {
+        match self {
+            Stmt::Assign { pos, .. }
+            | Stmt::MultiAssign { pos, .. }
+            | Stmt::If { pos, .. }
+            | Stmt::For { pos, .. }
+            | Stmt::ParFor { pos, .. }
+            | Stmt::While { pos, .. }
+            | Stmt::ExprStmt { pos, .. } => *pos,
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! DML lexer.
+//!
+//! Tokenizes the R-like DML syntax: `#` line comments, `/* */` block
+//! comments, numbers (int/double/scientific), strings (double or single
+//! quoted), identifiers (including dotted names like `cross_entropy.loss`
+//! — dots are identifier characters in DML), and the operator set
+//! including `%*%`, `%%`, `%/%`, `::`, `<-`.
+
+use crate::util::error::{DmlError, Result};
+
+/// Token kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Ident(String),
+    // keywords
+    KwFunction,
+    KwReturn,
+    KwIf,
+    KwElse,
+    KwFor,
+    KwParFor,
+    KwWhile,
+    KwIn,
+    KwSource,
+    KwAs,
+    KwTrue,
+    KwFalse,
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    DColon, // ::
+    Assign, // = or <-
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Caret,
+    MatMul, // %*%
+    Mod,    // %%
+    IntDiv, // %/%
+    Eq,     // ==
+    Neq,    // !=
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And, // & or &&
+    Or,  // | or ||
+    Not, // !
+    Eof,
+}
+
+/// Token with position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Tokenize a DML source string.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+
+    macro_rules! err {
+        ($msg:expr) => {
+            return Err(DmlError::Lex { line, col, msg: $msg.to_string() })
+        };
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        let (tline, tcol) = (line, col);
+        macro_rules! push {
+            ($t:expr, $n:expr) => {{
+                toks.push(Token { tok: $t, line: tline, col: tcol });
+                i += $n;
+                col += $n;
+            }};
+        }
+        match c {
+            '\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == b'*' => {
+                i += 2;
+                col += 2;
+                loop {
+                    if i + 1 >= bytes.len() {
+                        err!("unterminated block comment");
+                    }
+                    if bytes[i] == b'*' && bytes[i + 1] == b'/' {
+                        i += 2;
+                        col += 2;
+                        break;
+                    }
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                        col = 1;
+                    } else {
+                        col += 1;
+                    }
+                    i += 1;
+                }
+            }
+            '"' | '\'' => {
+                let quote = bytes[i];
+                let mut s = String::new();
+                let mut j = i + 1;
+                loop {
+                    if j >= bytes.len() {
+                        err!("unterminated string");
+                    }
+                    if bytes[j] == quote {
+                        break;
+                    }
+                    if bytes[j] == b'\\' && j + 1 < bytes.len() {
+                        match bytes[j + 1] {
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'"' => s.push('"'),
+                            b'\'' => s.push('\''),
+                            b'\\' => s.push('\\'),
+                            other => {
+                                s.push('\\');
+                                s.push(other as char);
+                            }
+                        }
+                        j += 2;
+                    } else {
+                        s.push(bytes[j] as char);
+                        j += 1;
+                    }
+                }
+                let n = j + 1 - i;
+                push!(Tok::Str(s), n);
+            }
+            '0'..='9' | '.' if c != '.' || (i + 1 < bytes.len() && bytes[i + 1].is_ascii_digit()) => {
+                let start = i;
+                let mut j = i;
+                let mut is_double = false;
+                while j < bytes.len() && bytes[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if j < bytes.len() && bytes[j] == b'.' {
+                    is_double = true;
+                    j += 1;
+                    while j < bytes.len() && bytes[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                if j < bytes.len() && (bytes[j] == b'e' || bytes[j] == b'E') {
+                    let mut k = j + 1;
+                    if k < bytes.len() && (bytes[k] == b'+' || bytes[k] == b'-') {
+                        k += 1;
+                    }
+                    if k < bytes.len() && bytes[k].is_ascii_digit() {
+                        is_double = true;
+                        j = k;
+                        while j < bytes.len() && bytes[j].is_ascii_digit() {
+                            j += 1;
+                        }
+                    }
+                }
+                let text = std::str::from_utf8(&bytes[start..j]).unwrap();
+                let n = j - start;
+                if is_double {
+                    match text.parse::<f64>() {
+                        Ok(v) => push!(Tok::Num(v), n),
+                        Err(_) => err!(format!("bad number '{text}'")),
+                    }
+                } else {
+                    match text.parse::<i64>() {
+                        Ok(v) => push!(Tok::Int(v), n),
+                        Err(_) => err!(format!("bad integer '{text}'")),
+                    }
+                }
+            }
+            'a'..='z' | 'A'..='Z' | '_' | '.' => {
+                let start = i;
+                let mut j = i;
+                while j < bytes.len()
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'.')
+                {
+                    j += 1;
+                }
+                let word = std::str::from_utf8(&bytes[start..j]).unwrap().to_string();
+                let n = j - start;
+                let tok = match word.as_str() {
+                    "function" => Tok::KwFunction,
+                    "return" => Tok::KwReturn,
+                    "if" => Tok::KwIf,
+                    "else" => Tok::KwElse,
+                    "for" => Tok::KwFor,
+                    "parfor" => Tok::KwParFor,
+                    "while" => Tok::KwWhile,
+                    "in" => Tok::KwIn,
+                    "source" => Tok::KwSource,
+                    "as" => Tok::KwAs,
+                    "TRUE" => Tok::KwTrue,
+                    "FALSE" => Tok::KwFalse,
+                    _ => Tok::Ident(word),
+                };
+                push!(tok, n);
+            }
+            '%' => {
+                if bytes[i..].starts_with(b"%*%") {
+                    push!(Tok::MatMul, 3);
+                } else if bytes[i..].starts_with(b"%/%") {
+                    push!(Tok::IntDiv, 3);
+                } else if bytes[i..].starts_with(b"%%") {
+                    push!(Tok::Mod, 2);
+                } else {
+                    err!("unexpected '%'");
+                }
+            }
+            '(' => push!(Tok::LParen, 1),
+            ')' => push!(Tok::RParen, 1),
+            '{' => push!(Tok::LBrace, 1),
+            '}' => push!(Tok::RBrace, 1),
+            '[' => push!(Tok::LBracket, 1),
+            ']' => push!(Tok::RBracket, 1),
+            ',' => push!(Tok::Comma, 1),
+            ';' => push!(Tok::Semi, 1),
+            ':' => {
+                if bytes[i..].starts_with(b"::") {
+                    push!(Tok::DColon, 2);
+                } else {
+                    push!(Tok::Colon, 1);
+                }
+            }
+            '=' => {
+                if bytes[i..].starts_with(b"==") {
+                    push!(Tok::Eq, 2);
+                } else {
+                    push!(Tok::Assign, 1);
+                }
+            }
+            '<' => {
+                if bytes[i..].starts_with(b"<-") {
+                    push!(Tok::Assign, 2);
+                } else if bytes[i..].starts_with(b"<=") {
+                    push!(Tok::Le, 2);
+                } else {
+                    push!(Tok::Lt, 1);
+                }
+            }
+            '>' => {
+                if bytes[i..].starts_with(b">=") {
+                    push!(Tok::Ge, 2);
+                } else {
+                    push!(Tok::Gt, 1);
+                }
+            }
+            '!' => {
+                if bytes[i..].starts_with(b"!=") {
+                    push!(Tok::Neq, 2);
+                } else {
+                    push!(Tok::Not, 1);
+                }
+            }
+            '&' => {
+                let n = if bytes[i..].starts_with(b"&&") { 2 } else { 1 };
+                push!(Tok::And, n);
+            }
+            '|' => {
+                let n = if bytes[i..].starts_with(b"||") { 2 } else { 1 };
+                push!(Tok::Or, n);
+            }
+            '+' => push!(Tok::Plus, 1),
+            '-' => push!(Tok::Minus, 1),
+            '*' => push!(Tok::Star, 1),
+            '/' => push!(Tok::Slash, 1),
+            '^' => push!(Tok::Caret, 1),
+            other => err!(format!("unexpected character '{other}'")),
+        }
+    }
+    toks.push(Token { tok: Tok::Eof, line, col });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn numbers_ints_doubles() {
+        assert_eq!(
+            kinds("42 3.14 1e3 2.5e-2"),
+            vec![Tok::Int(42), Tok::Num(3.14), Tok::Num(1000.0), Tok::Num(0.025), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn operators_including_matmul() {
+        assert_eq!(
+            kinds("X %*% Y %% 2 %/% 3"),
+            vec![
+                Tok::Ident("X".into()),
+                Tok::MatMul,
+                Tok::Ident("Y".into()),
+                Tok::Mod,
+                Tok::Int(2),
+                Tok::IntDiv,
+                Tok::Int(3),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        assert_eq!(
+            kinds("a = 1 # comment\nb /* block\ncomment */ = 2"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Ident("b".into()),
+                Tok::Assign,
+                Tok::Int(2),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        assert_eq!(
+            kinds(r#""hello\n" 'world'"#),
+            vec![Tok::Str("hello\n".into()), Tok::Str("world".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn keywords_and_namespaced_idents() {
+        assert_eq!(
+            kinds("source(\"nn/layers/affine.dml\") as affine\naffine::init"),
+            vec![
+                Tok::KwSource,
+                Tok::LParen,
+                Tok::Str("nn/layers/affine.dml".into()),
+                Tok::RParen,
+                Tok::KwAs,
+                Tok::Ident("affine".into()),
+                Tok::Ident("affine".into()),
+                Tok::DColon,
+                Tok::Ident("init".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn dotted_identifiers() {
+        assert_eq!(
+            kinds("cross_entropy.loss"),
+            vec![Tok::Ident("cross_entropy.loss".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn arrow_assignment() {
+        assert_eq!(kinds("x <- 3"), vec![Tok::Ident("x".into()), Tok::Assign, Tok::Int(3), Tok::Eof]);
+    }
+
+    #[test]
+    fn positions_tracked() {
+        let toks = lex("a =\n  b").unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[2].line, toks[2].col), (2, 3));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a = @").is_err());
+        assert!(lex("\"unterminated").is_err());
+        assert!(lex("/* unterminated").is_err());
+        assert!(lex("a % b").is_err());
+    }
+
+    #[test]
+    fn true_false_literals() {
+        assert_eq!(kinds("TRUE FALSE"), vec![Tok::KwTrue, Tok::KwFalse, Tok::Eof]);
+    }
+}

@@ -1,0 +1,9 @@
+//! The DML language front end: lexer, parser, AST, and validation.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod validate;
+
+pub use ast::Program;
+pub use parser::parse;

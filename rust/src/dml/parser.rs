@@ -1,0 +1,772 @@
+//! Recursive-descent parser for DML.
+//!
+//! Operator precedence follows R (which DML mirrors):
+//! `||` < `&&` < `!` < comparisons < `+ -` < `* / %% %/%` < `%*%` <
+//! unary `-` < `^` < postfix (indexing, calls).
+
+use crate::dml::ast::*;
+use crate::dml::lexer::{lex, Tok, Token};
+use crate::util::error::{DmlError, Result};
+
+/// Parse a DML source string into a [`Program`].
+pub fn parse(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek_at(&self, n: usize) -> &Tok {
+        &self.toks[(self.pos + n).min(self.toks.len() - 1)].tok
+    }
+    fn here(&self) -> Pos {
+        let t = &self.toks[self.pos];
+        Pos { line: t.line, col: t.col }
+    }
+    fn advance(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+    fn err(&self, msg: impl Into<String>) -> DmlError {
+        let t = &self.toks[self.pos];
+        DmlError::Parse { line: t.line, col: t.col, msg: msg.into() }
+    }
+    fn expect(&mut self, tok: Tok, what: &str) -> Result<()> {
+        if *self.peek() == tok {
+            self.advance();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {what}, found {:?}", self.peek())))
+        }
+    }
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.peek() == tok {
+            self.advance();
+            true
+        } else {
+            false
+        }
+    }
+    fn skip_semis(&mut self) {
+        while self.eat(&Tok::Semi) {}
+    }
+
+    // ---- program structure ------------------------------------------------
+
+    fn program(&mut self) -> Result<Program> {
+        let mut prog = Program::default();
+        self.skip_semis();
+        while *self.peek() != Tok::Eof {
+            if *self.peek() == Tok::KwSource {
+                prog.imports.push(self.import()?);
+            } else if self.is_function_def() {
+                prog.functions.push(self.function_def()?);
+            } else {
+                prog.body.push(self.statement()?);
+            }
+            self.skip_semis();
+        }
+        Ok(prog)
+    }
+
+    fn import(&mut self) -> Result<Import> {
+        let pos = self.here();
+        self.expect(Tok::KwSource, "'source'")?;
+        self.expect(Tok::LParen, "'('")?;
+        let path = match self.advance() {
+            Tok::Str(s) => s,
+            _ => return Err(self.err("expected string path in source(...)")),
+        };
+        self.expect(Tok::RParen, "')'")?;
+        self.expect(Tok::KwAs, "'as'")?;
+        let namespace = self.ident("namespace")?;
+        Ok(Import { path, namespace, pos })
+    }
+
+    /// Lookahead: `ident = function` (or `ident <- function`).
+    fn is_function_def(&self) -> bool {
+        matches!(self.peek(), Tok::Ident(_))
+            && *self.peek_at(1) == Tok::Assign
+            && *self.peek_at(2) == Tok::KwFunction
+    }
+
+    fn function_def(&mut self) -> Result<FunctionDef> {
+        let pos = self.here();
+        let name = self.ident("function name")?;
+        self.expect(Tok::Assign, "'='")?;
+        self.expect(Tok::KwFunction, "'function'")?;
+        self.expect(Tok::LParen, "'('")?;
+        let params = self.param_list(Tok::RParen)?;
+        self.expect(Tok::RParen, "')'")?;
+        let mut returns = Vec::new();
+        if self.eat(&Tok::KwReturn) {
+            self.expect(Tok::LParen, "'(' after return")?;
+            returns = self.param_list(Tok::RParen)?;
+            self.expect(Tok::RParen, "')'")?;
+        }
+        let body = self.block()?;
+        Ok(FunctionDef { name, params, returns, body, pos })
+    }
+
+    fn param_list(&mut self, end: Tok) -> Result<Vec<Param>> {
+        let mut params = Vec::new();
+        if *self.peek() == end {
+            return Ok(params);
+        }
+        loop {
+            params.push(self.param()?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        Ok(params)
+    }
+
+    /// `matrix[double] X`, `double lr = 0.01`, or bare `X`.
+    fn param(&mut self) -> Result<Param> {
+        let first = self.ident("parameter")?;
+        let (vtype, name) = match first.as_str() {
+            "matrix" => {
+                // optional [double] element type
+                if self.eat(&Tok::LBracket) {
+                    self.ident("element type")?;
+                    self.expect(Tok::RBracket, "']'")?;
+                }
+                (ValueType::Matrix, self.ident("parameter name")?)
+            }
+            "double" => (ValueType::Double, self.ident("parameter name")?),
+            "int" | "integer" => (ValueType::Int, self.ident("parameter name")?),
+            "boolean" | "bool" => (ValueType::Boolean, self.ident("parameter name")?),
+            "string" | "str" => (ValueType::Str, self.ident("parameter name")?),
+            _ => (ValueType::Unknown, first),
+        };
+        let default = if self.eat(&Tok::Assign) { Some(self.expr()?) } else { None };
+        Ok(Param { name, vtype, default })
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String> {
+        match self.advance() {
+            Tok::Ident(s) => Ok(s),
+            other => {
+                self.pos = self.pos.saturating_sub(1);
+                Err(self.err(format!("expected {what}, found {other:?}")))
+            }
+        }
+    }
+
+    // ---- statements ---------------------------------------------------
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        if self.eat(&Tok::LBrace) {
+            let mut stmts = Vec::new();
+            self.skip_semis();
+            while *self.peek() != Tok::RBrace {
+                if *self.peek() == Tok::Eof {
+                    return Err(self.err("unexpected end of file in block"));
+                }
+                stmts.push(self.statement()?);
+                self.skip_semis();
+            }
+            self.expect(Tok::RBrace, "'}'")?;
+            Ok(stmts)
+        } else {
+            Ok(vec![self.statement()?])
+        }
+    }
+
+    fn statement(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        match self.peek() {
+            Tok::KwIf => self.if_stmt(),
+            Tok::KwFor => self.for_stmt(false),
+            Tok::KwParFor => self.for_stmt(true),
+            Tok::KwWhile => {
+                self.advance();
+                self.expect(Tok::LParen, "'('")?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                let body = self.block()?;
+                Ok(Stmt::While { cond, body, pos })
+            }
+            Tok::LBracket => self.multi_assign(),
+            _ => self.assign_or_expr(),
+        }
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.expect(Tok::KwIf, "'if'")?;
+        self.expect(Tok::LParen, "'('")?;
+        let cond = self.expr()?;
+        self.expect(Tok::RParen, "')'")?;
+        let then_branch = self.block()?;
+        let else_branch = if self.eat(&Tok::KwElse) {
+            if *self.peek() == Tok::KwIf {
+                vec![self.if_stmt()?]
+            } else {
+                self.block()?
+            }
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::If { cond, then_branch, else_branch, pos })
+    }
+
+    fn for_stmt(&mut self, parallel: bool) -> Result<Stmt> {
+        let pos = self.here();
+        self.advance(); // for / parfor
+        self.expect(Tok::LParen, "'('")?;
+        let var = self.ident("loop variable")?;
+        self.expect(Tok::KwIn, "'in'")?;
+        let range = self.range_expr()?;
+        let mut opts = ParForOpts::new();
+        while self.eat(&Tok::Comma) {
+            let key = self.ident("loop option")?;
+            self.expect(Tok::Assign, "'='")?;
+            match key.as_str() {
+                "check" => {
+                    let v = self.expr()?;
+                    opts.check = !matches!(v, Expr::Int(0, _));
+                }
+                "par" => {
+                    if let Expr::Int(n, _) = self.expr()? {
+                        opts.par = n.max(0) as usize;
+                    }
+                }
+                "mode" | "opt" => {
+                    opts.mode = match self.advance() {
+                        Tok::Ident(s) | Tok::Str(s) => s.to_lowercase(),
+                        _ => return Err(self.err("expected mode value")),
+                    };
+                }
+                other => return Err(self.err(format!("unknown loop option '{other}'"))),
+            }
+        }
+        self.expect(Tok::RParen, "')'")?;
+        let body = self.block()?;
+        if parallel {
+            Ok(Stmt::ParFor { var, range, body, opts, pos })
+        } else {
+            Ok(Stmt::For { var, range, body, pos })
+        }
+    }
+
+    /// `from:to` or `seq(from, to, step)`.
+    fn range_expr(&mut self) -> Result<RangeExpr> {
+        // seq(...) form
+        if let Tok::Ident(name) = self.peek() {
+            if name == "seq" && *self.peek_at(1) == Tok::LParen {
+                self.advance();
+                self.advance();
+                let from = self.expr()?;
+                self.expect(Tok::Comma, "','")?;
+                let to = self.expr()?;
+                let step = if self.eat(&Tok::Comma) { Some(Box::new(self.expr()?)) } else { None };
+                self.expect(Tok::RParen, "')'")?;
+                return Ok(RangeExpr { from: Box::new(from), to: Box::new(to), step });
+            }
+        }
+        let from = self.expr()?;
+        self.expect(Tok::Colon, "':' in loop range")?;
+        let to = self.expr()?;
+        Ok(RangeExpr { from: Box::new(from), to: Box::new(to), step: None })
+    }
+
+    /// `[a, b] = f(...)`.
+    fn multi_assign(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.expect(Tok::LBracket, "'['")?;
+        let mut targets = Vec::new();
+        loop {
+            targets.push(self.ident("assignment target")?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RBracket, "']'")?;
+        self.expect(Tok::Assign, "'='")?;
+        let value = self.expr()?;
+        Ok(Stmt::MultiAssign { targets, value, pos })
+    }
+
+    /// Assignment (incl. left-indexed), or a bare expression statement.
+    fn assign_or_expr(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        // Try: ident [index]? = expr
+        if let Tok::Ident(name) = self.peek().clone() {
+            // Plain `x = expr`
+            if *self.peek_at(1) == Tok::Assign {
+                self.advance();
+                self.advance();
+                let value = self.expr()?;
+                return Ok(Stmt::Assign { target: AssignTarget::Var(name), value, pos });
+            }
+            // Left-indexed `X[...] = expr`: scan for matching ']' then '='.
+            if *self.peek_at(1) == Tok::LBracket {
+                if let Some(close) = self.matching_bracket(self.pos + 1) {
+                    if self.toks[close + 1].tok == Tok::Assign {
+                        self.advance(); // name
+                        self.advance(); // [
+                        let (rows, cols) = self.index_ranges()?;
+                        self.expect(Tok::RBracket, "']'")?;
+                        self.expect(Tok::Assign, "'='")?;
+                        let value = self.expr()?;
+                        return Ok(Stmt::Assign {
+                            target: AssignTarget::Indexed { name, rows, cols },
+                            value,
+                            pos,
+                        });
+                    }
+                }
+            }
+        }
+        let expr = self.expr()?;
+        Ok(Stmt::ExprStmt { expr, pos })
+    }
+
+    /// Index of the `]` matching the `[` at token index `open`.
+    fn matching_bracket(&self, open: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        for i in open..self.toks.len() {
+            match self.toks[i].tok {
+                Tok::LBracket | Tok::LParen => depth += 1,
+                Tok::RBracket | Tok::RParen => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i);
+                    }
+                }
+                Tok::Eof => return None,
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// The two dimensions of an index expression `rows, cols` (either may
+    /// be empty, single, or a:b).
+    fn index_ranges(&mut self) -> Result<(IndexRange, IndexRange)> {
+        let rows = self.index_range_dim()?;
+        let cols = if self.eat(&Tok::Comma) { self.index_range_dim()? } else { IndexRange::All };
+        Ok((rows, cols))
+    }
+
+    fn index_range_dim(&mut self) -> Result<IndexRange> {
+        if matches!(self.peek(), Tok::Comma | Tok::RBracket) {
+            return Ok(IndexRange::All);
+        }
+        let lo = self.expr()?;
+        if self.eat(&Tok::Colon) {
+            let hi = self.expr()?;
+            Ok(IndexRange::Range(Box::new(lo), Box::new(hi)))
+        } else {
+            Ok(IndexRange::Single(Box::new(lo)))
+        }
+    }
+
+    // ---- expressions -----------------------------------------------------
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while *self.peek() == Tok::Or {
+            let pos = self.here();
+            self.advance();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary { op: AstBinOp::Or, lhs: Box::new(lhs), rhs: Box::new(rhs), pos };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.not_expr()?;
+        while *self.peek() == Tok::And {
+            let pos = self.here();
+            self.advance();
+            let rhs = self.not_expr()?;
+            lhs = Expr::Binary { op: AstBinOp::And, lhs: Box::new(lhs), rhs: Box::new(rhs), pos };
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if *self.peek() == Tok::Not {
+            let pos = self.here();
+            self.advance();
+            let operand = self.not_expr()?;
+            return Ok(Expr::Unary { op: AstUnOp::Not, operand: Box::new(operand), pos });
+        }
+        self.compare_expr()
+    }
+
+    fn compare_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Eq => AstBinOp::Eq,
+            Tok::Neq => AstBinOp::Neq,
+            Tok::Lt => AstBinOp::Lt,
+            Tok::Le => AstBinOp::Le,
+            Tok::Gt => AstBinOp::Gt,
+            Tok::Ge => AstBinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        let pos = self.here();
+        self.advance();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), pos })
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => AstBinOp::Add,
+                Tok::Minus => AstBinOp::Sub,
+                _ => break,
+            };
+            let pos = self.here();
+            self.advance();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), pos };
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.matmul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => AstBinOp::Mul,
+                Tok::Slash => AstBinOp::Div,
+                Tok::Mod => AstBinOp::Mod,
+                Tok::IntDiv => AstBinOp::IntDiv,
+                _ => break,
+            };
+            let pos = self.here();
+            self.advance();
+            let rhs = self.matmul_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), pos };
+        }
+        Ok(lhs)
+    }
+
+    fn matmul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        while *self.peek() == Tok::MatMul {
+            let pos = self.here();
+            self.advance();
+            let rhs = self.unary_expr()?;
+            lhs =
+                Expr::Binary { op: AstBinOp::MatMul, lhs: Box::new(lhs), rhs: Box::new(rhs), pos };
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        if *self.peek() == Tok::Minus {
+            let pos = self.here();
+            self.advance();
+            let operand = self.unary_expr()?;
+            return Ok(Expr::Unary { op: AstUnOp::Neg, operand: Box::new(operand), pos });
+        }
+        if *self.peek() == Tok::Plus {
+            self.advance();
+            return self.unary_expr();
+        }
+        self.power_expr()
+    }
+
+    fn power_expr(&mut self) -> Result<Expr> {
+        let base = self.postfix_expr()?;
+        if *self.peek() == Tok::Caret {
+            let pos = self.here();
+            self.advance();
+            // Right associative.
+            let exp = self.unary_expr()?;
+            return Ok(Expr::Binary {
+                op: AstBinOp::Pow,
+                lhs: Box::new(base),
+                rhs: Box::new(exp),
+                pos,
+            });
+        }
+        Ok(base)
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek() {
+                // Indexing must start on the same source line as the token
+                // it follows — otherwise `x = y` + newline + `[W,b] = f()`
+                // would misparse as `y[W, b]` (DML, like R, is
+                // newline-sensitive here).
+                Tok::LBracket if self.same_line_as_prev() => {
+                    let pos = self.here();
+                    self.advance();
+                    let (rows, cols) = self.index_ranges()?;
+                    self.expect(Tok::RBracket, "']'")?;
+                    e = Expr::Index { base: Box::new(e), rows, cols, pos };
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    /// Is the current token on the same line as the previous one?
+    fn same_line_as_prev(&self) -> bool {
+        self.pos > 0 && self.toks[self.pos].line == self.toks[self.pos - 1].line
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        let pos = self.here();
+        match self.advance() {
+            Tok::Num(v) => Ok(Expr::Num(v, pos)),
+            Tok::Int(v) => Ok(Expr::Int(v, pos)),
+            Tok::Str(s) => Ok(Expr::Str(s, pos)),
+            Tok::KwTrue => Ok(Expr::Bool(true, pos)),
+            Tok::KwFalse => Ok(Expr::Bool(false, pos)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            Tok::LBracket => {
+                // List literal [a, b, c] (shape args of NN builtins).
+                let mut items = Vec::new();
+                if !self.eat(&Tok::RBracket) {
+                    loop {
+                        items.push(self.expr()?);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RBracket, "']'")?;
+                }
+                Ok(Expr::List(items, pos))
+            }
+            Tok::Ident(name) => {
+                // namespace::func(...)
+                if *self.peek() == Tok::DColon {
+                    self.advance();
+                    let fname = self.ident("function name after '::'")?;
+                    self.expect(Tok::LParen, "'(' after namespaced function")?;
+                    let args = self.call_args()?;
+                    return Ok(Expr::Call { namespace: Some(name), name: fname, args, pos });
+                }
+                // func(...)
+                if *self.peek() == Tok::LParen {
+                    self.advance();
+                    let args = self.call_args()?;
+                    return Ok(Expr::Call { namespace: None, name, args, pos });
+                }
+                Ok(Expr::Var(name, pos))
+            }
+            other => Err(self.err(format!("unexpected token {other:?} in expression"))),
+        }
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Arg>> {
+        let mut args = Vec::new();
+        if self.eat(&Tok::RParen) {
+            return Ok(args);
+        }
+        loop {
+            // Named arg: ident = expr (but not ident == expr).
+            let name = if matches!(self.peek(), Tok::Ident(_)) && *self.peek_at(1) == Tok::Assign {
+                let n = self.ident("argument name")?;
+                self.advance(); // =
+                Some(n)
+            } else {
+                None
+            };
+            let value = self.expr()?;
+            args.push(Arg { name, value });
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RParen, "')'")?;
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_softmax_script() {
+        // The §2 listing (with its typos fixed as in the real nn examples).
+        let src = r#"
+source("nn/layers/affine.dml") as affine
+source("nn/layers/cross_entropy_loss.dml") as cross_entropy_loss
+source("nn/layers/softmax.dml") as softmax
+source("nn/optim/sgd.dml") as sgd
+train = function(matrix[double] X, matrix[double] Y) {
+  D = ncol(X) # num features
+  K = ncol(Y) # num classes
+  lr = 0.01; batch_size = 32; num_iter = nrow(X) / batch_size
+  [W, b] = affine::init(D, K)
+  for (i in 1:num_iter) {
+    beg = (i-1)*batch_size + 1; end = beg + batch_size
+    X_batch = X[beg:end,]; y_batch = Y[beg:end,]
+    scores = affine::forward(X_batch, W, b)
+    probs = softmax::forward(scores)
+    dprobs = cross_entropy_loss::backward(probs, y_batch)
+    dscores = softmax::backward(dprobs, scores)
+    [dX_batch, dW, db] = affine::backward(dscores, X_batch, W, b)
+    W = sgd::update(W, dW, lr)
+    b = sgd::update(b, db, lr)
+  }
+}
+"#;
+        let prog = parse(src).unwrap();
+        assert_eq!(prog.imports.len(), 4);
+        assert_eq!(prog.imports[0].namespace, "affine");
+        assert_eq!(prog.functions.len(), 1);
+        let f = &prog.functions[0];
+        assert_eq!(f.name, "train");
+        assert_eq!(f.params.len(), 2);
+        assert_eq!(f.params[0].vtype, ValueType::Matrix);
+        // body: D, K, lr, batch_size, num_iter, [W,b], for
+        assert!(matches!(f.body.last().unwrap(), Stmt::For { .. }));
+    }
+
+    #[test]
+    fn matmul_precedence_tighter_than_add() {
+        let prog = parse("y = X %*% W + b").unwrap();
+        match &prog.body[0] {
+            Stmt::Assign { value: Expr::Binary { op: AstBinOp::Add, lhs, .. }, .. } => {
+                assert!(matches!(**lhs, Expr::Binary { op: AstBinOp::MatMul, .. }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn power_binds_tighter_than_unary_minus() {
+        let prog = parse("y = -x^2").unwrap();
+        match &prog.body[0] {
+            Stmt::Assign { value: Expr::Unary { op: AstUnOp::Neg, operand, .. }, .. } => {
+                assert!(matches!(**operand, Expr::Binary { op: AstBinOp::Pow, .. }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn indexing_variants() {
+        let prog = parse("a = X[1, 2]\nb = X[1:3,]\nc = X[, 2:4]\nd = X[i:j, k]").unwrap();
+        assert_eq!(prog.body.len(), 4);
+        match &prog.body[1] {
+            Stmt::Assign { value: Expr::Index { rows, cols, .. }, .. } => {
+                assert!(matches!(rows, IndexRange::Range(..)));
+                assert!(matches!(cols, IndexRange::All));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn left_indexing_assignment() {
+        let prog = parse("X[1:2, 3] = Y").unwrap();
+        match &prog.body[0] {
+            Stmt::Assign { target: AssignTarget::Indexed { name, rows, cols }, .. } => {
+                assert_eq!(name, "X");
+                assert!(matches!(rows, IndexRange::Range(..)));
+                assert!(matches!(cols, IndexRange::Single(..)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parfor_with_options() {
+        let prog = parse("parfor (i in 1:10, check=0, par=4, mode=remote) { y = i }").unwrap();
+        match &prog.body[0] {
+            Stmt::ParFor { opts, .. } => {
+                assert!(!opts.check);
+                assert_eq!(opts.par, 4);
+                assert_eq!(opts.mode, "remote");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_else_chain() {
+        let prog = parse("if (a > 1) { b = 1 } else if (a > 0) { b = 2 } else { b = 3 }").unwrap();
+        match &prog.body[0] {
+            Stmt::If { else_branch, .. } => {
+                assert!(matches!(else_branch[0], Stmt::If { .. }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn while_and_named_args() {
+        let prog =
+            parse("while (i < 10) { X = rand(rows=10, cols=5, sparsity=0.5); i = i + 1 }").unwrap();
+        match &prog.body[0] {
+            Stmt::While { body, .. } => match &body[0] {
+                Stmt::Assign { value: Expr::Call { name, args, .. }, .. } => {
+                    assert_eq!(name, "rand");
+                    assert_eq!(args[0].name.as_deref(), Some("rows"));
+                }
+                other => panic!("unexpected {other:?}"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comparison_not_confused_with_named_arg() {
+        let prog = parse("y = sum(a == b)").unwrap();
+        match &prog.body[0] {
+            Stmt::Assign { value: Expr::Call { args, .. }, .. } => {
+                assert!(args[0].name.is_none());
+                assert!(matches!(args[0].value, Expr::Binary { op: AstBinOp::Eq, .. }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_errors_have_positions() {
+        let e = parse("x = ").unwrap_err();
+        match e {
+            DmlError::Parse { line, .. } => assert_eq!(line, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(parse("if (x { }").is_err());
+        assert!(parse("for i in 1:3 { }").is_err());
+    }
+
+    #[test]
+    fn function_with_defaults_and_returns() {
+        let src = "f = function(matrix[double] X, double lr = 0.01, int k = 5) return (matrix[double] W, double loss) { W = X; loss = lr * k }";
+        let prog = parse(src).unwrap();
+        let f = &prog.functions[0];
+        assert_eq!(f.params.len(), 3);
+        assert!(f.params[1].default.is_some());
+        assert_eq!(f.returns.len(), 2);
+        assert_eq!(f.returns[1].vtype, ValueType::Double);
+    }
+}

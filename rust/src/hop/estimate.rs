@@ -1,0 +1,87 @@
+//! Worst-case memory and sparsity estimates — the inputs to the
+//! compiler's execution-type decisions (paper §3: an operation runs on the
+//! driver only if inputs, intermediates and output fit in the driver JVM;
+//! on the GPU only if they fit in device memory).
+
+use crate::runtime::matrix::{Matrix, SPARSITY_TURN_POINT};
+
+/// Bytes for a dense block of the given shape.
+pub fn dense_size(rows: usize, cols: usize) -> usize {
+    8 * rows * cols + 48
+}
+
+/// Bytes for a sparse (CSR) block with the given nnz.
+pub fn sparse_size(rows: usize, nnz: usize) -> usize {
+    12 * nnz + 8 * (rows + 1) + 48
+}
+
+/// Worst-case size of a matrix with given shape and sparsity estimate.
+pub fn estimate_size(rows: usize, cols: usize, sparsity: f64) -> usize {
+    if sparsity < SPARSITY_TURN_POINT && rows * cols >= 1024 {
+        sparse_size(rows, (sparsity * rows as f64 * cols as f64).ceil() as usize)
+    } else {
+        dense_size(rows, cols)
+    }
+}
+
+/// Worst-case output sparsity of matmult (SystemML's estimator):
+/// 1 - (1 - sA·sB)^k, the probability a cell has at least one
+/// contributing nonzero product.
+pub fn matmult_output_sparsity(sa: f64, sb: f64, k: usize) -> f64 {
+    let p = (sa * sb).clamp(0.0, 1.0);
+    1.0 - (1.0 - p).powi(k.min(10_000) as i32)
+}
+
+/// Total memory estimate for running `a %*% b` in CP: both inputs plus the
+/// (worst-case) output must fit.
+pub fn matmult_mem_estimate(a: &Matrix, b: &Matrix) -> usize {
+    let out_sp = matmult_output_sparsity(a.sparsity(), b.sparsity(), a.cols());
+    a.size_in_bytes() + b.size_in_bytes() + estimate_size(a.rows(), b.cols(), out_sp)
+}
+
+/// Memory estimate for an elementwise binary op.
+pub fn binary_mem_estimate(a: &Matrix, b: &Matrix) -> usize {
+    a.size_in_bytes() + b.size_in_bytes() + estimate_size(a.rows(), a.cols(), 1.0)
+}
+
+/// Memory estimate for conv2d forward in CP, including the im2col
+/// intermediate ((P·Q)×(C·R·S) per image).
+pub fn conv2d_mem_estimate(
+    n: usize,
+    chw: usize,
+    krs_filter: usize,
+    pq: usize,
+    crs: usize,
+    k: usize,
+) -> usize {
+    dense_size(n, chw) + dense_size(k, krs_filter) + dense_size(pq, crs) + dense_size(n, k * pq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_vs_sparse_size() {
+        assert!(sparse_size(100, 100) < dense_size(100, 100));
+        // At full density sparse is bigger (12 vs 8 bytes per cell).
+        assert!(sparse_size(100, 100 * 100) > dense_size(100, 100));
+    }
+
+    #[test]
+    fn matmult_sparsity_estimator_monotone() {
+        let s1 = matmult_output_sparsity(0.01, 0.01, 100);
+        let s2 = matmult_output_sparsity(0.1, 0.1, 100);
+        assert!(s1 < s2);
+        assert!(matmult_output_sparsity(1.0, 1.0, 5) == 1.0);
+        assert!(matmult_output_sparsity(0.0, 0.5, 5) == 0.0);
+    }
+
+    #[test]
+    fn matmult_estimate_includes_output() {
+        let a = Matrix::filled(100, 50, 1.0);
+        let b = Matrix::filled(50, 200, 1.0);
+        let est = matmult_mem_estimate(&a, &b);
+        assert!(est >= dense_size(100, 50) + dense_size(50, 200) + dense_size(100, 200));
+    }
+}

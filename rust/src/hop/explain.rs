@@ -1,0 +1,127 @@
+//! Plan explanation (`sysml explain`, SystemML's `-explain`): program
+//! structure, per-statement operator summary, CSE opportunities, and the
+//! execution-type thresholds in force.
+
+use std::fmt::Write as _;
+
+use crate::conf::SystemConfig;
+use crate::dml::ast::*;
+use crate::dml::validate::Bundle;
+use crate::hop::rewrite::{cse_candidates, print_expr};
+
+/// Render a human-readable plan for a compiled bundle.
+pub fn explain_bundle(bundle: &Bundle, config: &SystemConfig) -> String {
+    let mut s = String::new();
+    writeln!(s, "# PROGRAM").unwrap();
+    writeln!(
+        s,
+        "# driver budget: {} B | workers: {} | block: {} | accel: {}",
+        config.driver_memory, config.num_workers, config.block_size, config.accel_enabled
+    )
+    .unwrap();
+    for imp in &bundle.main.imports {
+        writeln!(s, "# source {:?} as {}", imp.path, imp.namespace).unwrap();
+    }
+    for (ns, funcs) in &bundle.namespaces {
+        writeln!(s, "--FUNCTIONS namespace {ns}: {} functions", funcs.len()).unwrap();
+    }
+    for f in &bundle.main.functions {
+        writeln!(
+            s,
+            "--FUNCTION {} ({} params, {} returns, {} stmts)",
+            f.name,
+            f.params.len(),
+            f.returns.len(),
+            f.body.len()
+        )
+        .unwrap();
+        explain_stmts(&f.body, 1, &mut s);
+    }
+    writeln!(s, "--MAIN ({} stmts)", bundle.main.body.len()).unwrap();
+    explain_stmts(&bundle.main.body, 1, &mut s);
+    s
+}
+
+fn explain_stmts(stmts: &[Stmt], depth: usize, s: &mut String) {
+    let ind = "  ".repeat(depth);
+    for st in stmts {
+        match st {
+            Stmt::Assign { target, value, .. } => {
+                let tgt = match target {
+                    AssignTarget::Var(n) => n.clone(),
+                    AssignTarget::Indexed { name, .. } => format!("{name}[...]"),
+                };
+                writeln!(s, "{ind}ASSIGN {tgt} <- {}", print_expr(value)).unwrap();
+                for (expr, count) in cse_candidates(value) {
+                    writeln!(s, "{ind}  ^ CSE candidate x{count}: {expr}").unwrap();
+                }
+            }
+            Stmt::MultiAssign { targets, value, .. } => {
+                writeln!(s, "{ind}MASSIGN [{}] <- {}", targets.join(","), print_expr(value))
+                    .unwrap();
+            }
+            Stmt::If { then_branch, else_branch, cond, .. } => {
+                writeln!(s, "{ind}IF {}", print_expr(cond)).unwrap();
+                explain_stmts(then_branch, depth + 1, s);
+                if !else_branch.is_empty() {
+                    writeln!(s, "{ind}ELSE").unwrap();
+                    explain_stmts(else_branch, depth + 1, s);
+                }
+            }
+            Stmt::For { var, body, .. } => {
+                writeln!(s, "{ind}FOR {var}").unwrap();
+                explain_stmts(body, depth + 1, s);
+            }
+            Stmt::ParFor { var, body, opts, .. } => {
+                writeln!(
+                    s,
+                    "{ind}PARFOR {var} (check={}, par={}, mode={})",
+                    opts.check,
+                    opts.par,
+                    if opts.mode.is_empty() { "auto" } else { &opts.mode }
+                )
+                .unwrap();
+                explain_stmts(body, depth + 1, s);
+            }
+            Stmt::While { cond, body, .. } => {
+                writeln!(s, "{ind}WHILE {}", print_expr(cond)).unwrap();
+                explain_stmts(body, depth + 1, s);
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                writeln!(s, "{ind}EXPR {}", print_expr(expr)).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+
+    #[test]
+    fn explain_renders_structure() {
+        let bundle = Bundle {
+            main: parse(
+                "s = 0\nfor (i in 1:3) { s = s + i }\nparfor (j in 1:4, par=2) { P = j }",
+            )
+            .unwrap(),
+            namespaces: Default::default(),
+        };
+        let out = explain_bundle(&bundle, &SystemConfig::default());
+        assert!(out.contains("--MAIN (3 stmts)"));
+        assert!(out.contains("FOR i"));
+        assert!(out.contains("PARFOR j (check=true, par=2, mode=auto)"));
+        assert!(out.contains("ASSIGN s <- (s + i)"));
+    }
+
+    #[test]
+    fn explain_flags_cse() {
+        let bundle = Bundle {
+            main: parse("y = exp(q * 2) + exp(q * 2)").unwrap(),
+            namespaces: Default::default(),
+        };
+        let out = explain_bundle(&bundle, &SystemConfig::default());
+        assert!(out.contains("CSE candidate x2"), "{out}");
+    }
+}

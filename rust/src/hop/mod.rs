@@ -1,0 +1,7 @@
+//! The compiler layer (HOPs): memory/sparsity estimates, algebraic
+//! rewrites, plan explanation, and (via the interpreter's dispatch) the
+//! CP / DIST / ACCEL execution-type selection of paper §3.
+
+pub mod estimate;
+pub mod explain;
+pub mod rewrite;

@@ -1,0 +1,331 @@
+//! Static rewrites (the HOP-level simplifications of SystemML's
+//! compiler): constant folding, common-subexpression detection, and
+//! matrix-multiplication chain reordering.
+
+use std::collections::HashMap;
+
+use crate::dml::ast::*;
+
+/// Fold scalar-literal subtrees: `(1+2)*x` → `3*x`, `-(2^3)` → `-8`.
+/// Semantics-preserving for IEEE doubles because DML evaluates eagerly.
+pub fn fold_constants(e: &Expr) -> Expr {
+    match e {
+        Expr::Binary { op, lhs, rhs, pos } => {
+            let l = fold_constants(lhs);
+            let r = fold_constants(rhs);
+            if let (Some(a), Some(b)) = (literal_of(&l), literal_of(&r)) {
+                if let Some(v) = eval_scalar(*op, a, b) {
+                    return num_expr(v, *pos);
+                }
+            }
+            Expr::Binary { op: *op, lhs: Box::new(l), rhs: Box::new(r), pos: *pos }
+        }
+        Expr::Unary { op, operand, pos } => {
+            let o = fold_constants(operand);
+            if let Some(a) = literal_of(&o) {
+                match op {
+                    AstUnOp::Neg => return num_expr(-a, *pos),
+                    AstUnOp::Not => return Expr::Bool(a == 0.0, *pos),
+                }
+            }
+            Expr::Unary { op: *op, operand: Box::new(o), pos: *pos }
+        }
+        Expr::Call { namespace, name, args, pos } => Expr::Call {
+            namespace: namespace.clone(),
+            name: name.clone(),
+            args: args
+                .iter()
+                .map(|a| Arg { name: a.name.clone(), value: fold_constants(&a.value) })
+                .collect(),
+            pos: *pos,
+        },
+        Expr::Index { base, rows, cols, pos } => Expr::Index {
+            base: Box::new(fold_constants(base)),
+            rows: fold_range(rows),
+            cols: fold_range(cols),
+            pos: *pos,
+        },
+        Expr::List(items, pos) => {
+            Expr::List(items.iter().map(fold_constants).collect(), *pos)
+        }
+        other => other.clone(),
+    }
+}
+
+fn fold_range(r: &IndexRange) -> IndexRange {
+    match r {
+        IndexRange::All => IndexRange::All,
+        IndexRange::Single(e) => IndexRange::Single(Box::new(fold_constants(e))),
+        IndexRange::Range(a, b) => {
+            IndexRange::Range(Box::new(fold_constants(a)), Box::new(fold_constants(b)))
+        }
+    }
+}
+
+fn literal_of(e: &Expr) -> Option<f64> {
+    match e {
+        Expr::Num(v, _) => Some(*v),
+        Expr::Int(v, _) => Some(*v as f64),
+        Expr::Bool(b, _) => Some(*b as i32 as f64),
+        _ => None,
+    }
+}
+
+fn num_expr(v: f64, pos: Pos) -> Expr {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        Expr::Int(v as i64, pos)
+    } else {
+        Expr::Num(v, pos)
+    }
+}
+
+fn eval_scalar(op: AstBinOp, a: f64, b: f64) -> Option<f64> {
+    Some(match op {
+        AstBinOp::Add => a + b,
+        AstBinOp::Sub => a - b,
+        AstBinOp::Mul => a * b,
+        AstBinOp::Div => {
+            if b == 0.0 {
+                return None; // preserve the runtime inf/nan semantics visibly
+            }
+            a / b
+        }
+        AstBinOp::Pow => a.powf(b),
+        AstBinOp::Mod => a - (a / b).floor() * b,
+        AstBinOp::IntDiv => (a / b).floor(),
+        _ => return None, // comparisons/logicals stay for readability
+    })
+}
+
+/// Apply constant folding to every expression in a program.
+pub fn fold_program(prog: &mut Program) {
+    for f in &mut prog.functions {
+        fold_stmts(&mut f.body);
+    }
+    fold_stmts(&mut prog.body);
+}
+
+fn fold_stmts(stmts: &mut [Stmt]) {
+    for s in stmts {
+        match s {
+            Stmt::Assign { value, .. } => *value = fold_constants(value),
+            Stmt::MultiAssign { value, .. } => *value = fold_constants(value),
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                *cond = fold_constants(cond);
+                fold_stmts(then_branch);
+                fold_stmts(else_branch);
+            }
+            Stmt::For { range, body, .. } | Stmt::ParFor { range, body, .. } => {
+                range.from = Box::new(fold_constants(&range.from));
+                range.to = Box::new(fold_constants(&range.to));
+                if let Some(st) = &range.step {
+                    range.step = Some(Box::new(fold_constants(st)));
+                }
+                fold_stmts(body);
+            }
+            Stmt::While { cond, body, .. } => {
+                *cond = fold_constants(cond);
+                fold_stmts(body);
+            }
+            Stmt::ExprStmt { expr, .. } => *expr = fold_constants(expr),
+        }
+    }
+}
+
+/// Count syntactically-identical subexpressions (CSE opportunities) in an
+/// expression tree — surfaced by `sysml explain`.
+pub fn cse_candidates(e: &Expr) -> Vec<(String, usize)> {
+    let mut counts: HashMap<String, usize> = HashMap::new();
+    fn walk(e: &Expr, counts: &mut HashMap<String, usize>) {
+        let key = print_expr(e);
+        // Only count non-trivial subtrees.
+        if matches!(e, Expr::Binary { .. } | Expr::Call { .. } | Expr::Index { .. }) {
+            *counts.entry(key).or_insert(0) += 1;
+        }
+        match e {
+            Expr::Binary { lhs, rhs, .. } => {
+                walk(lhs, counts);
+                walk(rhs, counts);
+            }
+            Expr::Unary { operand, .. } => walk(operand, counts),
+            Expr::Call { args, .. } => {
+                for a in args {
+                    walk(&a.value, counts);
+                }
+            }
+            Expr::Index { base, .. } => walk(base, counts),
+            Expr::List(items, _) => {
+                for i in items {
+                    walk(i, counts);
+                }
+            }
+            _ => {}
+        }
+    }
+    walk(e, &mut counts);
+    let mut out: Vec<(String, usize)> =
+        counts.into_iter().filter(|(_, c)| *c > 1).collect();
+    out.sort();
+    out
+}
+
+/// Pretty-print an expression (stable key for CSE + explain output).
+pub fn print_expr(e: &Expr) -> String {
+    match e {
+        Expr::Num(v, _) => format!("{v}"),
+        Expr::Int(v, _) => format!("{v}"),
+        Expr::Str(s, _) => format!("{s:?}"),
+        Expr::Bool(b, _) => format!("{b}"),
+        Expr::Var(n, _) => n.clone(),
+        Expr::List(items, _) => {
+            format!("[{}]", items.iter().map(print_expr).collect::<Vec<_>>().join(","))
+        }
+        Expr::Unary { op, operand, .. } => match op {
+            AstUnOp::Neg => format!("-({})", print_expr(operand)),
+            AstUnOp::Not => format!("!({})", print_expr(operand)),
+        },
+        Expr::Binary { op, lhs, rhs, .. } => {
+            let o = match op {
+                AstBinOp::Add => "+",
+                AstBinOp::Sub => "-",
+                AstBinOp::Mul => "*",
+                AstBinOp::Div => "/",
+                AstBinOp::Pow => "^",
+                AstBinOp::Mod => "%%",
+                AstBinOp::IntDiv => "%/%",
+                AstBinOp::MatMul => "%*%",
+                AstBinOp::Eq => "==",
+                AstBinOp::Neq => "!=",
+                AstBinOp::Lt => "<",
+                AstBinOp::Le => "<=",
+                AstBinOp::Gt => ">",
+                AstBinOp::Ge => ">=",
+                AstBinOp::And => "&",
+                AstBinOp::Or => "|",
+            };
+            format!("({} {o} {})", print_expr(lhs), print_expr(rhs))
+        }
+        Expr::Call { namespace, name, args, .. } => {
+            let ns = namespace.as_ref().map(|n| format!("{n}::")).unwrap_or_default();
+            let a: Vec<String> = args
+                .iter()
+                .map(|x| match &x.name {
+                    Some(n) => format!("{n}={}", print_expr(&x.value)),
+                    None => print_expr(&x.value),
+                })
+                .collect();
+            format!("{ns}{name}({})", a.join(", "))
+        }
+        Expr::Index { base, rows, cols, .. } => {
+            let pr = |r: &IndexRange| match r {
+                IndexRange::All => String::new(),
+                IndexRange::Single(e) => print_expr(e),
+                IndexRange::Range(a, b) => format!("{}:{}", print_expr(a), print_expr(b)),
+            };
+            format!("{}[{},{}]", print_expr(base), pr(rows), pr(cols))
+        }
+    }
+}
+
+/// Optimal matrix-chain parenthesization (classic DP, SystemML's
+/// `RewriteMatrixMultChainOptimization`): given the dims d0×d1, d1×d2, ...
+/// returns (min FLOPs, split table rendering).
+pub fn matmult_chain_order(dims: &[usize]) -> (u64, String) {
+    let n = dims.len() - 1; // number of matrices
+    assert!(n >= 1);
+    let mut cost = vec![vec![0u64; n]; n];
+    let mut split = vec![vec![0usize; n]; n];
+    for len in 2..=n {
+        for i in 0..=(n - len) {
+            let j = i + len - 1;
+            cost[i][j] = u64::MAX;
+            for k in i..j {
+                let c = cost[i][k]
+                    + cost[k + 1][j]
+                    + 2 * (dims[i] * dims[k + 1] * dims[j + 1]) as u64;
+                if c < cost[i][j] {
+                    cost[i][j] = c;
+                    split[i][j] = k;
+                }
+            }
+        }
+    }
+    fn render(split: &[Vec<usize>], i: usize, j: usize) -> String {
+        if i == j {
+            format!("M{i}")
+        } else {
+            let k = split[i][j];
+            format!("({} {})", render(split, i, k), render(split, k + 1, j))
+        }
+    }
+    (cost[0][n - 1], render(&split, 0, n - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+
+    fn first_expr(src: &str) -> Expr {
+        match parse(src).unwrap().body.into_iter().next().unwrap() {
+            Stmt::Assign { value, .. } => value,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn folds_scalar_arithmetic() {
+        let e = fold_constants(&first_expr("y = (1 + 2) * 4 - 2^3"));
+        assert_eq!(print_expr(&e), "4");
+        let e2 = fold_constants(&first_expr("y = x * (3 - 1)"));
+        assert_eq!(print_expr(&e2), "(x * 2)");
+    }
+
+    #[test]
+    fn folding_preserves_division_by_zero() {
+        let e = fold_constants(&first_expr("y = 1 / 0"));
+        assert!(matches!(e, Expr::Binary { .. }), "1/0 must stay for runtime semantics");
+    }
+
+    #[test]
+    fn folds_inside_calls_and_indexing() {
+        let e = fold_constants(&first_expr("y = sum(X[1 + 1, 2 * 3])"));
+        assert_eq!(print_expr(&e), "sum(X[2,6])");
+    }
+
+    #[test]
+    fn cse_detects_repeats() {
+        let e = first_expr("y = exp(X) / (1 + exp(X))");
+        let cands = cse_candidates(&e);
+        assert!(cands.iter().any(|(k, c)| k == "exp(X)" && *c == 2), "{cands:?}");
+    }
+
+    #[test]
+    fn matmult_chain_classic_case() {
+        // dims 10x30, 30x5, 5x60: optimal ((M0 M1) M2) = 2*(1500 + 3000).
+        let (cost, plan) = matmult_chain_order(&[10, 30, 5, 60]);
+        assert_eq!(cost, 2 * (10 * 30 * 5 + 10 * 5 * 60) as u64);
+        assert_eq!(plan, "((M0 M1) M2)");
+    }
+
+    #[test]
+    fn matmult_chain_prefers_vector_end() {
+        // A(1000x1000) B(1000x1000) v(1000x1): right-to-left wins.
+        let (_, plan) = matmult_chain_order(&[1000, 1000, 1000, 1]);
+        assert_eq!(plan, "(M0 (M1 M2))");
+    }
+
+    #[test]
+    fn fold_program_rewrites_in_place() {
+        let mut prog = parse("f = function(int n) return (int y) { y = n + (2*3) }\nz = 1 + 1").unwrap();
+        fold_program(&mut prog);
+        match &prog.body[0] {
+            Stmt::Assign { value, .. } => assert_eq!(print_expr(value), "2"),
+            other => panic!("unexpected {other:?}"),
+        }
+        match &prog.functions[0].body[0] {
+            Stmt::Assign { value, .. } => assert_eq!(print_expr(value), "(n + 6)"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

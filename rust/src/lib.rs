@@ -1,0 +1,30 @@
+//! systemml — a Rust reproduction of "Deep Learning with Apache SystemML"
+//! (Pansare et al., 2018).
+//!
+//! The crate implements a declarative machine-learning system in three layers:
+//!
+//! * **L3 (this crate)** — the DML language (lexer/parser/AST), a cost-based
+//!   compiler that produces hybrid single-node / distributed / accelerator
+//!   execution plans, a matrix runtime with dense and sparse physical
+//!   operators, a task-parallel `parfor` optimizer/executor, a simulated
+//!   blocked distributed backend, and a PJRT accelerator backend.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs for the
+//!   compute-intensive fused operators, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled matmul,
+//!   im2col convolution) called by the L2 graphs.
+//!
+//! The public entry point is [`api::MLContext`], mirroring SystemML's
+//! MLContext API: create a context, bind inputs, execute a DML
+//! [`api::Script`], fetch outputs.
+
+pub mod api;
+pub mod conf;
+pub mod dml;
+pub mod hop;
+pub mod nn;
+pub mod runtime;
+pub mod util;
+
+pub use api::{MLContext, Script};
+pub use conf::SystemConfig;
+pub use util::error::{DmlError, Result};

@@ -1,0 +1,186 @@
+//! `sysml` — command-line launcher for the SystemML reproduction.
+//!
+//! Subcommands (hand-rolled arg parsing; `clap` is not in the offline
+//! registry):
+//!
+//! ```text
+//! sysml run <script.dml> [-stats] [-explain] [--accel] [--workers N]
+//! sysml keras2dml <model.json> [--print-dml] [--train-algo A] [--test-algo A]
+//! sysml explain <script.dml>
+//! sysml artifacts
+//! ```
+
+use std::collections::HashMap;
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::nn::keras2dml::{FitConfig, Keras2DML, SequentialModel};
+use systemml::runtime::matrix::randgen::synthetic_classification;
+use systemml::util::metrics;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage:\n  sysml run <script.dml> [-stats] [-explain] [--accel] [--workers N] [--driver-mem BYTES]\n  sysml keras2dml <model.json> [--print-dml] [--train-algo minibatch|batch] [--test-algo naive|allreduce]\n  sysml explain <script.dml>\n  sysml artifacts".to_string()
+}
+
+fn run(args: &[String]) -> systemml::Result<()> {
+    let mut flags: HashMap<String, String> = HashMap::new();
+    let mut positional: Vec<&String> = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value = matches!(name, "workers" | "driver-mem" | "train-algo" | "test-algo");
+            if takes_value {
+                let v = it
+                    .next()
+                    .ok_or_else(|| systemml::DmlError::rt(format!("--{name} needs a value")))?;
+                flags.insert(name.to_string(), v.clone());
+            } else {
+                flags.insert(name.to_string(), "true".into());
+            }
+        } else if let Some(name) = a.strip_prefix('-') {
+            flags.insert(name.to_string(), "true".into());
+        } else {
+            positional.push(a);
+        }
+    }
+    let Some(cmd) = positional.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+
+    let mut config = SystemConfig::default();
+    if let Some(w) = flags.get("workers") {
+        config.num_workers = w.parse().unwrap_or(config.num_workers);
+    }
+    if let Some(m) = flags.get("driver-mem") {
+        config.driver_memory = m.parse().unwrap_or(config.driver_memory);
+    }
+    if flags.contains_key("accel") {
+        config.accel_enabled = true;
+    }
+    if flags.contains_key("explain") {
+        config.explain = true;
+    }
+
+    match cmd.as_str() {
+        "run" => {
+            let path = positional
+                .get(1)
+                .ok_or_else(|| systemml::DmlError::rt("run: missing script path"))?;
+            let mut ctx = MLContext::with_config(config);
+            ctx.echo = true;
+            let before = metrics::global().snapshot();
+            let t0 = std::time::Instant::now();
+            ctx.execute(Script::from_file(path)?)?;
+            let wall = t0.elapsed();
+            if flags.contains_key("stats") {
+                let d = metrics::global().snapshot().delta(&before);
+                println!("-- statistics ----------------------------------");
+                println!("wallclock:        {wall:?}");
+                println!("instructions:     {}", d.instructions);
+                println!("flops:            {}", d.flops);
+                println!("dist tasks:       {}", d.dist_tasks);
+                println!("shuffle bytes:    {}", d.shuffle_bytes);
+                println!("broadcast bytes:  {}", d.broadcast_bytes);
+                println!("parfor tasks:     {}", d.parfor_tasks);
+                println!("accel launches:   {}", d.accel_launches);
+                println!("h2d/d2h bytes:    {}/{}", d.h2d_bytes, d.d2h_bytes);
+            }
+            Ok(())
+        }
+        "explain" => {
+            let path = positional
+                .get(1)
+                .ok_or_else(|| systemml::DmlError::rt("explain: missing script path"))?;
+            let ctx = MLContext::with_config(config);
+            let script = Script::from_file(path)?;
+            let (bundle, warnings) = ctx.compile(&script)?;
+            println!("{}", systemml::hop::explain::explain_bundle(&bundle, &ctx.config));
+            for w in warnings {
+                println!("warning: {w}");
+            }
+            Ok(())
+        }
+        "keras2dml" => {
+            let path = positional
+                .get(1)
+                .ok_or_else(|| systemml::DmlError::rt("keras2dml: missing model.json"))?;
+            let json = std::fs::read_to_string(path)?;
+            let model = SequentialModel::from_json(&json)?;
+            let mut fit = FitConfig::default();
+            if let Some(t) = flags.get("train-algo") {
+                fit.train_algo = t.clone();
+            }
+            if let Some(t) = flags.get("test-algo") {
+                fit.test_algo = t.clone();
+            }
+            if flags.contains_key("print-dml") {
+                println!("# ===== training script =====");
+                println!("{}", model.to_dml(&fit)?);
+                println!("# ===== scoring script =====");
+                println!("{}", model.to_predict_dml(&fit)?);
+                return Ok(());
+            }
+            // Demo fit on synthetic data matching the model's input width.
+            let d = match model.input {
+                systemml::nn::keras2dml::InputShape::Flat(d) => d,
+                systemml::nn::keras2dml::InputShape::Volume { c, h, w } => c * h * w,
+            };
+            let k = model
+                .layers
+                .iter()
+                .rev()
+                .find_map(|l| match l {
+                    systemml::nn::keras2dml::Layer::Dense { units, .. } => Some(*units),
+                    _ => None,
+                })
+                .unwrap_or(2);
+            let (x, y) = synthetic_classification(256, d, k, 7);
+            let mut k2d = Keras2DML::new(MLContext::with_config(config), model);
+            k2d.fit_config = fit;
+            let trained = k2d.fit(x, y)?;
+            println!(
+                "trained '{}': first loss {:.4}, last loss {:.4} over {} iterations",
+                k2d.model.name,
+                trained.loss_curve.first().unwrap_or(&0.0),
+                trained.loss_curve.last().unwrap_or(&0.0),
+                trained.loss_curve.len()
+            );
+            Ok(())
+        }
+        "artifacts" => {
+            config.accel_enabled = true;
+            match systemml::runtime::accel::AccelBackend::open(&config) {
+                Ok(b) => {
+                    println!(
+                        "{} artifacts in {}:",
+                        b.artifacts().len(),
+                        config.artifacts_dir.display()
+                    );
+                    for a in b.artifacts() {
+                        println!("  {:40} op={:20} inputs={:?}", a.name, a.op, a.inputs);
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(e),
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}

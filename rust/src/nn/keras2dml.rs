@@ -1,0 +1,796 @@
+//! Keras2DML (paper §2): accept a sequential model description (JSON,
+//! mirroring a Keras `Sequential` config), generate the equivalent DML
+//! training/scoring script, and expose a scikit-learn-like `fit`/`predict`
+//! API on top of [`MLContext`].
+//!
+//! The `train_algo`/`test_algo` knobs reproduce the paper's §3
+//! "Distributed Operations": `train_algo="minibatch"` emits a for-loop
+//! over batches; `train_algo="batch"` emits full-batch updates (which the
+//! compiler sends to the distributed backend when over budget);
+//! `test_algo="allreduce"` emits a row-partitioned `parfor` scoring loop
+//! (the shuffle-free plan of the ResNet-50 claim).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::api::{MLContext, Script};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::json::Json;
+
+/// Supported layer kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    /// Fully-connected with `units` outputs and an optional activation.
+    Dense { units: usize, activation: Activation },
+    /// 2D convolution (stride-1x1 "same"/"valid" padding) + activation.
+    Conv2d { filters: usize, kernel: (usize, usize), same_pad: bool, activation: Activation },
+    /// Max pooling.
+    MaxPool2d { pool: (usize, usize), stride: (usize, usize) },
+    /// Flatten a conv volume into a dense vector (no-op on the linearized
+    /// representation; only changes tracked shape).
+    Flatten,
+    /// Inverted dropout with retain probability 1-rate.
+    Dropout { rate: f64 },
+}
+
+/// Activation functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Sigmoid,
+    Tanh,
+    Softmax,
+}
+
+impl Activation {
+    fn parse(s: &str) -> Result<Activation> {
+        Ok(match s {
+            "" | "linear" | "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            "softmax" => Activation::Softmax,
+            other => return Err(DmlError::val(format!("unknown activation '{other}'"))),
+        })
+    }
+}
+
+/// Optimizer configs (the six of the paper's NN library).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Optimizer {
+    Sgd { lr: f64 },
+    Momentum { lr: f64, mu: f64 },
+    Nesterov { lr: f64, mu: f64 },
+    Adagrad { lr: f64 },
+    Rmsprop { lr: f64, decay: f64 },
+    Adam { lr: f64, beta1: f64, beta2: f64 },
+}
+
+/// Input shape: flat features or a conv volume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InputShape {
+    Flat(usize),
+    Volume { c: usize, h: usize, w: usize },
+}
+
+/// A sequential model (the Keras2DML input).
+#[derive(Clone, Debug)]
+pub struct SequentialModel {
+    pub name: String,
+    pub input: InputShape,
+    pub layers: Vec<Layer>,
+    pub optimizer: Optimizer,
+}
+
+/// Training hyper-parameters and the paper's execution knobs.
+#[derive(Clone, Debug)]
+pub struct FitConfig {
+    /// "minibatch" or "batch" (paper §3 train_algo).
+    pub train_algo: String,
+    /// "naive" (plain loop) or "allreduce" (row-partitioned parfor).
+    pub test_algo: String,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            train_algo: "minibatch".into(),
+            test_algo: "allreduce".into(),
+            batch_size: 32,
+            epochs: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl SequentialModel {
+    /// Parse the JSON model descriptor.
+    pub fn from_json(text: &str) -> Result<SequentialModel> {
+        let doc = Json::parse(text)?;
+        let name = doc.get("name").as_str().unwrap_or("model").to_string();
+        let input = if let Some(d) = doc.get("input_dim").as_usize() {
+            InputShape::Flat(d)
+        } else if let Some(shape) = doc.get("input_shape").as_arr() {
+            if shape.len() != 3 {
+                return Err(DmlError::val("input_shape must be [C,H,W]".to_string()));
+            }
+            InputShape::Volume {
+                c: shape[0].as_usize().unwrap_or(1),
+                h: shape[1].as_usize().unwrap_or(1),
+                w: shape[2].as_usize().unwrap_or(1),
+            }
+        } else {
+            return Err(DmlError::val("model needs input_dim or input_shape".to_string()));
+        };
+        let mut layers = Vec::new();
+        for l in doc.get("layers").as_arr().unwrap_or(&[]) {
+            let ty = l.get("type").as_str().unwrap_or_default();
+            let act = Activation::parse(l.get("activation").as_str().unwrap_or(""))?;
+            match ty {
+                "dense" => layers.push(Layer::Dense {
+                    units: l
+                        .get("units")
+                        .as_usize()
+                        .ok_or_else(|| DmlError::val("dense needs units".to_string()))?,
+                    activation: act,
+                }),
+                "conv2d" => {
+                    let kernel = l.get("kernel").as_arr().map(|a| {
+                        (
+                            a[0].as_usize().unwrap_or(3),
+                            a.get(1).and_then(|v| v.as_usize()).unwrap_or(3),
+                        )
+                    });
+                    layers.push(Layer::Conv2d {
+                        filters: l
+                            .get("filters")
+                            .as_usize()
+                            .ok_or_else(|| DmlError::val("conv2d needs filters".to_string()))?,
+                        kernel: kernel.unwrap_or((3, 3)),
+                        same_pad: l.get("padding").as_str().unwrap_or("same") == "same",
+                        activation: act,
+                    });
+                }
+                "maxpool2d" => {
+                    let pool = l
+                        .get("pool")
+                        .as_arr()
+                        .map(|a| {
+                            (
+                                a[0].as_usize().unwrap_or(2),
+                                a.get(1).and_then(|v| v.as_usize()).unwrap_or(2),
+                            )
+                        })
+                        .unwrap_or((2, 2));
+                    let stride = l
+                        .get("stride")
+                        .as_arr()
+                        .map(|a| {
+                            (
+                                a[0].as_usize().unwrap_or(pool.0),
+                                a.get(1).and_then(|v| v.as_usize()).unwrap_or(pool.1),
+                            )
+                        })
+                        .unwrap_or(pool);
+                    layers.push(Layer::MaxPool2d { pool, stride });
+                }
+                "flatten" => layers.push(Layer::Flatten),
+                "dropout" => {
+                    layers.push(Layer::Dropout { rate: l.get("rate").as_f64().unwrap_or(0.5) })
+                }
+                other => return Err(DmlError::val(format!("unknown layer type '{other}'"))),
+            }
+        }
+        if layers.is_empty() {
+            return Err(DmlError::val("model has no layers".to_string()));
+        }
+        let opt = doc.get("optimizer");
+        let lr = opt.get("lr").as_f64().unwrap_or(0.01);
+        let optimizer = match opt.get("type").as_str().unwrap_or("sgd") {
+            "sgd" => Optimizer::Sgd { lr },
+            "momentum" | "sgd_momentum" => {
+                Optimizer::Momentum { lr, mu: opt.get("momentum").as_f64().unwrap_or(0.9) }
+            }
+            "nesterov" | "sgd_nesterov" => {
+                Optimizer::Nesterov { lr, mu: opt.get("momentum").as_f64().unwrap_or(0.9) }
+            }
+            "adagrad" => Optimizer::Adagrad { lr },
+            "rmsprop" => {
+                Optimizer::Rmsprop { lr, decay: opt.get("decay").as_f64().unwrap_or(0.99) }
+            }
+            "adam" => Optimizer::Adam {
+                lr,
+                beta1: opt.get("beta1").as_f64().unwrap_or(0.9),
+                beta2: opt.get("beta2").as_f64().unwrap_or(0.999),
+            },
+            other => return Err(DmlError::val(format!("unknown optimizer '{other}'"))),
+        };
+        Ok(SequentialModel { name, input, layers, optimizer })
+    }
+
+    /// Parameterized layers (those with weights) with their shapes.
+    /// Returns (layer_index, W_shape, b_shape) per parameterized layer.
+    pub fn param_shapes(&self) -> Result<Vec<(usize, (usize, usize), (usize, usize))>> {
+        let mut shapes = Vec::new();
+        let mut cur = self.input;
+        for (i, l) in self.layers.iter().enumerate() {
+            match l {
+                Layer::Dense { units, .. } => {
+                    let d = match cur {
+                        InputShape::Flat(d) => d,
+                        InputShape::Volume { c, h, w } => c * h * w, // implicit flatten
+                    };
+                    shapes.push((i, (d, *units), (1, *units)));
+                    cur = InputShape::Flat(*units);
+                }
+                Layer::Conv2d { filters, kernel, same_pad, .. } => {
+                    let InputShape::Volume { c, h, w } = cur else {
+                        return Err(DmlError::val(format!(
+                            "layer {i}: conv2d requires a volume input"
+                        )));
+                    };
+                    let (kh, kw) = *kernel;
+                    shapes.push((i, (*filters, c * kh * kw), (*filters, 1)));
+                    let (ph, pw) = if *same_pad { (kh / 2, kw / 2) } else { (0, 0) };
+                    cur = InputShape::Volume {
+                        c: *filters,
+                        h: h + 2 * ph - kh + 1,
+                        w: w + 2 * pw - kw + 1,
+                    };
+                }
+                Layer::MaxPool2d { pool, stride } => {
+                    let InputShape::Volume { c, h, w } = cur else {
+                        return Err(DmlError::val(format!(
+                            "layer {i}: maxpool2d requires a volume input"
+                        )));
+                    };
+                    cur = InputShape::Volume {
+                        c,
+                        h: (h - pool.0) / stride.0 + 1,
+                        w: (w - pool.1) / stride.1 + 1,
+                    };
+                }
+                Layer::Flatten => {
+                    if let InputShape::Volume { c, h, w } = cur {
+                        cur = InputShape::Flat(c * h * w);
+                    }
+                }
+                Layer::Dropout { .. } => {}
+            }
+        }
+        Ok(shapes)
+    }
+
+    /// Generate the DML **forward pass** from variable `Xb`, writing
+    /// statements into `out` and returning the output variable name.
+    fn gen_forward(&self, out: &mut String, training: bool, indent: &str) -> Result<String> {
+        let mut cur = self.input;
+        let mut var = "Xb".to_string();
+        for (i, l) in self.layers.iter().enumerate() {
+            match l {
+                Layer::Dense { units, activation } => {
+                    // A volume input is implicitly flattened (layout no-op).
+                    let pre = format!("pre_{i}");
+                    writeln!(out, "{indent}{pre} = {var} %*% W_{i} + b_{i}").unwrap();
+                    var = self.gen_activation(out, activation, &pre, i, indent);
+                    cur = InputShape::Flat(*units);
+                }
+                Layer::Conv2d { filters, kernel, same_pad, activation } => {
+                    let InputShape::Volume { c, h, w } = cur else {
+                        return Err(DmlError::val("conv2d over flat input".to_string()));
+                    };
+                    let (kh, kw) = *kernel;
+                    let (ph, pw) = if *same_pad { (kh / 2, kw / 2) } else { (0, 0) };
+                    let pre = format!("pre_{i}");
+                    writeln!(
+                        out,
+                        "{indent}{pre} = bias_add(conv2d({var}, W_{i}, input_shape=[nrow({var}),{c},{h},{w}], filter_shape=[{filters},{c},{kh},{kw}], stride=[1,1], padding=[{ph},{pw}]), b_{i})"
+                    )
+                    .unwrap();
+                    var = self.gen_activation(out, activation, &pre, i, indent);
+                    cur = InputShape::Volume {
+                        c: *filters,
+                        h: h + 2 * ph - kh + 1,
+                        w: w + 2 * pw - kw + 1,
+                    };
+                }
+                Layer::MaxPool2d { pool, stride } => {
+                    let InputShape::Volume { c, h, w } = cur else {
+                        return Err(DmlError::val("maxpool2d over flat input".to_string()));
+                    };
+                    let nv = format!("out_{i}");
+                    writeln!(
+                        out,
+                        "{indent}{nv} = max_pool({var}, input_shape=[nrow({var}),{c},{h},{w}], pool_size=[{},{}], stride=[{},{}], padding=[0,0])",
+                        pool.0, pool.1, stride.0, stride.1
+                    )
+                    .unwrap();
+                    var = nv;
+                    cur = InputShape::Volume {
+                        c,
+                        h: (h - pool.0) / stride.0 + 1,
+                        w: (w - pool.1) / stride.1 + 1,
+                    };
+                }
+                Layer::Flatten => {
+                    if let InputShape::Volume { c, h, w } = cur {
+                        #[allow(unused_assignments)]
+                        {
+                            cur = InputShape::Flat(c * h * w);
+                        }
+                    }
+                }
+                Layer::Dropout { rate } => {
+                    if training {
+                        let nv = format!("out_{i}");
+                        writeln!(
+                            out,
+                            "{indent}[{nv}, mask_{i}] = dropout::forward({var}, {}, {i} + iter * 131)",
+                            1.0 - rate
+                        )
+                        .unwrap();
+                        var = nv;
+                    }
+                    // scoring: identity (inverted dropout)
+                }
+            }
+        }
+        Ok(var)
+    }
+
+    fn gen_activation(
+        &self,
+        out: &mut String,
+        act: &Activation,
+        pre: &str,
+        i: usize,
+        indent: &str,
+    ) -> String {
+        let nv = format!("out_{i}");
+        match act {
+            Activation::None => return pre.to_string(),
+            Activation::Relu => writeln!(out, "{indent}{nv} = max({pre}, 0)").unwrap(),
+            Activation::Sigmoid => writeln!(out, "{indent}{nv} = 1 / (1 + exp(-{pre}))").unwrap(),
+            Activation::Tanh => {
+                writeln!(out, "{indent}{nv} = (exp(2*{pre}) - 1) / (exp(2*{pre}) + 1)").unwrap()
+            }
+            Activation::Softmax => writeln!(out, "{indent}{nv} = softmax::forward({pre})").unwrap(),
+        }
+        nv
+    }
+
+    /// Generate the full training script (the Keras2DML codegen product).
+    pub fn to_dml(&self, fit: &FitConfig) -> Result<String> {
+        let shapes = self.param_shapes()?;
+        let mut s = String::new();
+        writeln!(s, "# ---- generated by Keras2DML for model '{}' ----", self.name).unwrap();
+        writeln!(s, "source(\"nn/layers/softmax.dml\") as softmax").unwrap();
+        writeln!(s, "source(\"nn/layers/cross_entropy_loss.dml\") as ce").unwrap();
+        writeln!(s, "source(\"nn/layers/dropout.dml\") as dropout").unwrap();
+        for opt_file in ["sgd", "sgd_momentum", "sgd_nesterov", "adagrad", "rmsprop", "adam"] {
+            writeln!(s, "source(\"nn/optim/{opt_file}.dml\") as {opt_file}").unwrap();
+        }
+        writeln!(s).unwrap();
+        // Param init.
+        for (i, wsh, bsh) in &shapes {
+            writeln!(
+                s,
+                "W_{i} = rand(rows={}, cols={}, min=-1, max=1, seed={}) * sqrt(2.0 / {})",
+                wsh.0,
+                wsh.1,
+                fit.seed + *i as u64,
+                wsh.0
+            )
+            .unwrap();
+            writeln!(s, "b_{i} = matrix(0, rows={}, cols={})", bsh.0, bsh.1).unwrap();
+            match self.optimizer {
+                Optimizer::Sgd { .. } => {}
+                Optimizer::Adam { .. } => {
+                    writeln!(s, "mW_{i} = matrix(0, rows={}, cols={})", wsh.0, wsh.1).unwrap();
+                    writeln!(s, "vW_{i} = matrix(0, rows={}, cols={})", wsh.0, wsh.1).unwrap();
+                    writeln!(s, "mb_{i} = matrix(0, rows={}, cols={})", bsh.0, bsh.1).unwrap();
+                    writeln!(s, "vb_{i} = matrix(0, rows={}, cols={})", bsh.0, bsh.1).unwrap();
+                }
+                _ => {
+                    writeln!(s, "vW_{i} = matrix(0, rows={}, cols={})", wsh.0, wsh.1).unwrap();
+                    writeln!(s, "vb_{i} = matrix(0, rows={}, cols={})", bsh.0, bsh.1).unwrap();
+                }
+            }
+        }
+        writeln!(s).unwrap();
+        // Training loop.
+        let n_batches = match fit.train_algo.as_str() {
+            "minibatch" => format!("nrow(X) %/% {}", fit.batch_size),
+            "batch" => "1".to_string(),
+            other => return Err(DmlError::val(format!("unknown train_algo '{other}'"))),
+        };
+        writeln!(s, "nbatches = {n_batches}").unwrap();
+        writeln!(s, "loss_curve = matrix(0, rows={} * nbatches, cols=1)", fit.epochs).unwrap();
+        writeln!(s, "iter = 0").unwrap();
+        writeln!(s, "for (ep in 1:{}) {{", fit.epochs).unwrap();
+        writeln!(s, "  for (bi in 1:nbatches) {{").unwrap();
+        writeln!(s, "    iter = iter + 1").unwrap();
+        if fit.train_algo == "minibatch" {
+            writeln!(s, "    beg = (bi-1)*{} + 1; end = bi*{}", fit.batch_size, fit.batch_size)
+                .unwrap();
+            writeln!(s, "    Xb = X[beg:end,]; Yb = Y[beg:end,]").unwrap();
+        } else {
+            writeln!(s, "    Xb = X; Yb = Y").unwrap();
+        }
+        let out_var = self.gen_forward(&mut s, true, "    ")?;
+        writeln!(s, "    probs = {out_var}").unwrap();
+        writeln!(s, "    loss = ce::forward(probs, Yb)").unwrap();
+        writeln!(s, "    loss_curve[iter, 1] = loss").unwrap();
+        self.gen_backward(&mut s, "    ")?;
+        for (i, ..) in &shapes {
+            self.gen_update(&mut s, *i, "    ");
+        }
+        writeln!(s, "  }}").unwrap();
+        writeln!(s, "}}").unwrap();
+        Ok(s)
+    }
+
+    /// Backward pass (reverse layer order), softmax+CE head fused.
+    fn gen_backward(&self, s: &mut String, ind: &str) -> Result<()> {
+        writeln!(s, "{ind}d_cur = (probs - Yb) / nrow(Yb)").unwrap();
+        let mut cur_shapes = self.shapes_per_layer()?;
+        for (i, l) in self.layers.iter().enumerate().rev() {
+            let (in_shape, _out_shape) = cur_shapes.pop().unwrap();
+            match l {
+                Layer::Dense { activation, .. } => {
+                    match activation {
+                        Activation::Relu => {
+                            writeln!(s, "{ind}d_cur = d_cur * (pre_{i} > 0)").unwrap()
+                        }
+                        Activation::Sigmoid => {
+                            writeln!(s, "{ind}sig_{i} = 1 / (1 + exp(-pre_{i}))").unwrap();
+                            writeln!(s, "{ind}d_cur = d_cur * sig_{i} * (1 - sig_{i})").unwrap();
+                        }
+                        Activation::Tanh => {
+                            writeln!(
+                                s,
+                                "{ind}th_{i} = (exp(2*pre_{i}) - 1) / (exp(2*pre_{i}) + 1)"
+                            )
+                            .unwrap();
+                            writeln!(s, "{ind}d_cur = d_cur * (1 - th_{i} * th_{i})").unwrap();
+                        }
+                        // Softmax head gradient already fused with CE.
+                        Activation::Softmax | Activation::None => {}
+                    }
+                    let src = self.input_var_of(i);
+                    writeln!(s, "{ind}dW_{i} = t({src}) %*% d_cur").unwrap();
+                    writeln!(s, "{ind}db_{i} = colSums(d_cur)").unwrap();
+                    writeln!(s, "{ind}d_cur = d_cur %*% t(W_{i})").unwrap();
+                }
+                Layer::Conv2d { filters, kernel, same_pad, activation } => {
+                    match activation {
+                        Activation::Relu => {
+                            writeln!(s, "{ind}d_cur = d_cur * (pre_{i} > 0)").unwrap()
+                        }
+                        Activation::None => {}
+                        _ => {
+                            return Err(DmlError::val(
+                                "conv2d codegen supports relu/linear activations".to_string(),
+                            ))
+                        }
+                    }
+                    let InputShape::Volume { c, h, w } = in_shape else {
+                        return Err(DmlError::val("conv backward over flat".to_string()));
+                    };
+                    let (kh, kw) = *kernel;
+                    let (ph, pw) = if *same_pad { (kh / 2, kw / 2) } else { (0, 0) };
+                    let src = self.input_var_of(i);
+                    writeln!(
+                        s,
+                        "{ind}dW_{i} = conv2d_backward_filter({src}, d_cur, input_shape=[nrow({src}),{c},{h},{w}], filter_shape=[{filters},{c},{kh},{kw}], stride=[1,1], padding=[{ph},{pw}])"
+                    )
+                    .unwrap();
+                    let p = h + 2 * ph - kh + 1;
+                    let q = w + 2 * pw - kw + 1;
+                    writeln!(s, "{ind}db_{i} = matrix(0, rows={filters}, cols=1)").unwrap();
+                    writeln!(s, "{ind}for (kk in 1:{filters}) {{").unwrap();
+                    writeln!(
+                        s,
+                        "{ind}  db_{i}[kk, 1] = sum(d_cur[, ((kk-1)*{0}+1):(kk*{0})])",
+                        p * q
+                    )
+                    .unwrap();
+                    writeln!(s, "{ind}}}").unwrap();
+                    writeln!(
+                        s,
+                        "{ind}d_cur = conv2d_backward_data(W_{i}, d_cur, input_shape=[nrow({src}),{c},{h},{w}], filter_shape=[{filters},{c},{kh},{kw}], stride=[1,1], padding=[{ph},{pw}])"
+                    )
+                    .unwrap();
+                }
+                Layer::MaxPool2d { pool, stride } => {
+                    let InputShape::Volume { c, h, w } = in_shape else {
+                        return Err(DmlError::val("pool backward over flat".to_string()));
+                    };
+                    let src = self.input_var_of(i);
+                    writeln!(
+                        s,
+                        "{ind}d_cur = max_pool_backward({src}, d_cur, input_shape=[nrow({src}),{c},{h},{w}], pool_size=[{},{}], stride=[{},{}], padding=[0,0])",
+                        pool.0, pool.1, stride.0, stride.1
+                    )
+                    .unwrap();
+                }
+                Layer::Flatten => {}
+                Layer::Dropout { .. } => {
+                    writeln!(s, "{ind}d_cur = dropout::backward(d_cur, mask_{i})").unwrap();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The variable feeding layer i in the generated forward code.
+    fn input_var_of(&self, i: usize) -> String {
+        for j in (0..i).rev() {
+            match &self.layers[j] {
+                Layer::Flatten => continue,
+                Layer::Dense { activation, .. } | Layer::Conv2d { activation, .. } => {
+                    return if *activation == Activation::None {
+                        format!("pre_{j}")
+                    } else {
+                        format!("out_{j}")
+                    }
+                }
+                _ => return format!("out_{j}"),
+            }
+        }
+        "Xb".to_string()
+    }
+
+    /// (input_shape, output_shape) per layer.
+    fn shapes_per_layer(&self) -> Result<Vec<(InputShape, InputShape)>> {
+        let mut out = Vec::new();
+        let mut cur = self.input;
+        for l in &self.layers {
+            let inp = cur;
+            match l {
+                Layer::Dense { units, .. } => cur = InputShape::Flat(*units),
+                Layer::Conv2d { filters, kernel, same_pad, .. } => {
+                    let InputShape::Volume { h, w, .. } = cur else {
+                        return Err(DmlError::val("conv over flat".to_string()));
+                    };
+                    let (kh, kw) = *kernel;
+                    let (ph, pw) = if *same_pad { (kh / 2, kw / 2) } else { (0, 0) };
+                    cur = InputShape::Volume {
+                        c: *filters,
+                        h: h + 2 * ph - kh + 1,
+                        w: w + 2 * pw - kw + 1,
+                    };
+                }
+                Layer::MaxPool2d { pool, stride } => {
+                    let InputShape::Volume { c, h, w } = cur else {
+                        return Err(DmlError::val("pool over flat".to_string()));
+                    };
+                    cur = InputShape::Volume {
+                        c,
+                        h: (h - pool.0) / stride.0 + 1,
+                        w: (w - pool.1) / stride.1 + 1,
+                    };
+                }
+                Layer::Flatten => {
+                    if let InputShape::Volume { c, h, w } = cur {
+                        cur = InputShape::Flat(c * h * w);
+                    }
+                }
+                Layer::Dropout { .. } => {}
+            }
+            out.push((inp, cur));
+        }
+        Ok(out)
+    }
+
+    fn gen_update(&self, s: &mut String, i: usize, ind: &str) {
+        match &self.optimizer {
+            Optimizer::Sgd { lr } => {
+                writeln!(s, "{ind}W_{i} = sgd::update(W_{i}, dW_{i}, {lr})").unwrap();
+                writeln!(s, "{ind}b_{i} = sgd::update(b_{i}, db_{i}, {lr})").unwrap();
+            }
+            Optimizer::Momentum { lr, mu } => {
+                writeln!(s, "{ind}[W_{i}, vW_{i}] = sgd_momentum::update(W_{i}, dW_{i}, {lr}, {mu}, vW_{i})").unwrap();
+                writeln!(s, "{ind}[b_{i}, vb_{i}] = sgd_momentum::update(b_{i}, db_{i}, {lr}, {mu}, vb_{i})").unwrap();
+            }
+            Optimizer::Nesterov { lr, mu } => {
+                writeln!(s, "{ind}[W_{i}, vW_{i}] = sgd_nesterov::update(W_{i}, dW_{i}, {lr}, {mu}, vW_{i})").unwrap();
+                writeln!(s, "{ind}[b_{i}, vb_{i}] = sgd_nesterov::update(b_{i}, db_{i}, {lr}, {mu}, vb_{i})").unwrap();
+            }
+            Optimizer::Adagrad { lr } => {
+                writeln!(s, "{ind}[W_{i}, vW_{i}] = adagrad::update(W_{i}, dW_{i}, {lr}, 1e-8, vW_{i})").unwrap();
+                writeln!(s, "{ind}[b_{i}, vb_{i}] = adagrad::update(b_{i}, db_{i}, {lr}, 1e-8, vb_{i})").unwrap();
+            }
+            Optimizer::Rmsprop { lr, decay } => {
+                writeln!(s, "{ind}[W_{i}, vW_{i}] = rmsprop::update(W_{i}, dW_{i}, {lr}, {decay}, 1e-8, vW_{i})").unwrap();
+                writeln!(s, "{ind}[b_{i}, vb_{i}] = rmsprop::update(b_{i}, db_{i}, {lr}, {decay}, 1e-8, vb_{i})").unwrap();
+            }
+            Optimizer::Adam { lr, beta1, beta2 } => {
+                writeln!(s, "{ind}[W_{i}, mW_{i}, vW_{i}] = adam::update(W_{i}, dW_{i}, {lr}, {beta1}, {beta2}, 1e-8, iter, mW_{i}, vW_{i})").unwrap();
+                writeln!(s, "{ind}[b_{i}, mb_{i}, vb_{i}] = adam::update(b_{i}, db_{i}, {lr}, {beta1}, {beta2}, 1e-8, iter, mb_{i}, vb_{i})").unwrap();
+            }
+        }
+    }
+
+    /// Generate the scoring script (respects `test_algo`).
+    pub fn to_predict_dml(&self, fit: &FitConfig) -> Result<String> {
+        let k_out = match self.layers.iter().rev().find_map(|l| match l {
+            Layer::Dense { units, .. } => Some(*units),
+            _ => None,
+        }) {
+            Some(k) => k,
+            None => return Err(DmlError::val("predict: model has no dense output".to_string())),
+        };
+        let mut s = String::new();
+        writeln!(s, "source(\"nn/layers/softmax.dml\") as softmax").unwrap();
+        writeln!(s, "source(\"nn/layers/dropout.dml\") as dropout").unwrap();
+        writeln!(s, "iter = 0").unwrap();
+        match fit.test_algo.as_str() {
+            "allreduce" => {
+                // Row-partitioned parfor over row blocks (paper §3: avoids
+                // shuffling, scales linearly). Row count must divide into
+                // full blocks for the disjointness analysis.
+                writeln!(s, "n = nrow(X)").unwrap();
+                writeln!(s, "bs = {}", fit.batch_size).unwrap();
+                writeln!(s, "nb = n %/% bs").unwrap();
+                writeln!(s, "P = matrix(0, rows=n, cols={k_out})").unwrap();
+                writeln!(s, "parfor (pi in 1:nb, mode=remote) {{").unwrap();
+                writeln!(s, "  beg = (pi-1)*bs + 1; end = pi*bs").unwrap();
+                writeln!(s, "  Xb = X[beg:end,]").unwrap();
+                let v = self.gen_forward(&mut s, false, "  ")?;
+                writeln!(s, "  P[beg:end, ] = {v}").unwrap();
+                writeln!(s, "}}").unwrap();
+            }
+            _ => {
+                writeln!(s, "Xb = X").unwrap();
+                let v = self.gen_forward(&mut s, false, "")?;
+                writeln!(s, "P = {v}").unwrap();
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// Scikit-learn-like wrapper (the paper's `Keras2DML(spark, model, ...)`).
+pub struct Keras2DML {
+    pub model: SequentialModel,
+    pub fit_config: FitConfig,
+    pub ctx: MLContext,
+}
+
+/// Trained parameters + the loss curve.
+pub struct Trained {
+    pub params: HashMap<String, Matrix>,
+    pub loss_curve: Vec<f64>,
+}
+
+impl Keras2DML {
+    pub fn new(ctx: MLContext, model: SequentialModel) -> Keras2DML {
+        Keras2DML { model, fit_config: FitConfig::default(), ctx }
+    }
+
+    /// Set the execution knobs (`train_algo`, `test_algo`), mirroring
+    /// `sysml_model.set(train_algo=..., test_algo=...)` from the paper.
+    pub fn set(&mut self, train_algo: &str, test_algo: &str) -> &mut Self {
+        self.fit_config.train_algo = train_algo.to_string();
+        self.fit_config.test_algo = test_algo.to_string();
+        self
+    }
+
+    /// Train; returns trained params and the per-iteration loss curve.
+    pub fn fit(&self, x: Matrix, y: Matrix) -> Result<Trained> {
+        let dml = self.model.to_dml(&self.fit_config)?;
+        let mut script = Script::from_str(dml).input("X", x).input("Y", y).output("loss_curve");
+        for (i, ..) in self.model.param_shapes()? {
+            script = script.output(&format!("W_{i}")).output(&format!("b_{i}"));
+        }
+        let res = self.ctx.execute(script)?;
+        let mut params = HashMap::new();
+        for (i, ..) in self.model.param_shapes()? {
+            params.insert(format!("W_{i}"), res.matrix(&format!("W_{i}"))?);
+            params.insert(format!("b_{i}"), res.matrix(&format!("b_{i}"))?);
+        }
+        let lc = res.matrix("loss_curve")?;
+        let loss_curve = (0..lc.rows()).map(|r| lc.get(r, 0)).collect();
+        Ok(Trained { params, loss_curve })
+    }
+
+    /// Score with trained params (respects `test_algo`).
+    pub fn predict(&self, trained: &Trained, x: Matrix) -> Result<Matrix> {
+        let dml = self.model.to_predict_dml(&self.fit_config)?;
+        let mut script = Script::from_str(dml).input("X", x).output("P");
+        for (name, m) in &trained.params {
+            script = script.input(name, m.clone());
+        }
+        self.ctx.execute(script)?.matrix("P")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MLP_JSON: &str = r#"{
+        "name": "mlp",
+        "input_dim": 16,
+        "layers": [
+            {"type": "dense", "units": 32, "activation": "relu"},
+            {"type": "dense", "units": 4, "activation": "softmax"}
+        ],
+        "optimizer": {"type": "sgd", "lr": 0.1}
+    }"#;
+
+    #[test]
+    fn parses_model_json() {
+        let m = SequentialModel::from_json(MLP_JSON).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.input, InputShape::Flat(16));
+        assert_eq!(m.optimizer, Optimizer::Sgd { lr: 0.1 });
+        let shapes = m.param_shapes().unwrap();
+        assert_eq!(shapes[0].1, (16, 32));
+        assert_eq!(shapes[1].1, (32, 4));
+    }
+
+    #[test]
+    fn rejects_bad_models() {
+        assert!(SequentialModel::from_json("{}").is_err());
+        assert!(SequentialModel::from_json(r#"{"input_dim": 4, "layers": []}"#).is_err());
+        assert!(
+            SequentialModel::from_json(r#"{"input_dim": 4, "layers": [{"type": "warp"}]}"#)
+                .is_err()
+        );
+        // conv over flat input is a shape error
+        let m = SequentialModel::from_json(
+            r#"{"input_dim": 4, "layers": [{"type": "conv2d", "filters": 2}]}"#,
+        )
+        .unwrap();
+        assert!(m.param_shapes().is_err());
+    }
+
+    #[test]
+    fn generated_dml_parses() {
+        let m = SequentialModel::from_json(MLP_JSON).unwrap();
+        let dml = m.to_dml(&FitConfig::default()).unwrap();
+        crate::dml::parser::parse(&dml).expect("generated train DML must parse");
+        let pdml = m.to_predict_dml(&FitConfig::default()).unwrap();
+        crate::dml::parser::parse(&pdml).expect("generated predict DML must parse");
+    }
+
+    #[test]
+    fn conv_model_shapes_and_codegen() {
+        let json = r#"{
+            "name": "cnn",
+            "input_shape": [1, 8, 8],
+            "layers": [
+                {"type": "conv2d", "filters": 4, "kernel": [3,3], "padding": "same", "activation": "relu"},
+                {"type": "maxpool2d", "pool": [2,2]},
+                {"type": "flatten"},
+                {"type": "dense", "units": 3, "activation": "softmax"}
+            ],
+            "optimizer": {"type": "adam", "lr": 0.01}
+        }"#;
+        let m = SequentialModel::from_json(json).unwrap();
+        let shapes = m.param_shapes().unwrap();
+        assert_eq!(shapes[0].1, (4, 9)); // K x C*R*S
+        assert_eq!(shapes[1].1, (4 * 4 * 4, 3)); // flatten of 4x4x4
+        let dml = m.to_dml(&FitConfig::default()).unwrap();
+        crate::dml::parser::parse(&dml).expect("generated CNN DML must parse");
+    }
+
+    #[test]
+    fn batch_vs_minibatch_codegen_differs() {
+        let m = SequentialModel::from_json(MLP_JSON).unwrap();
+        let mini = m.to_dml(&FitConfig::default()).unwrap();
+        let full = m
+            .to_dml(&FitConfig { train_algo: "batch".into(), ..FitConfig::default() })
+            .unwrap();
+        assert!(mini.contains("X[beg:end,]"));
+        assert!(full.contains("Xb = X"));
+        assert!(!full.contains("X[beg:end,]"));
+    }
+}

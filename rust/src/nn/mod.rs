@@ -1,0 +1,3 @@
+//! Model-import APIs: the Keras2DML analog (paper §2).
+
+pub mod keras2dml;

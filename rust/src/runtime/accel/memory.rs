@@ -1,0 +1,234 @@
+//! Device memory manager: LRU eviction with dirty write-back and lazy
+//! copies — the paper's GPU memory-management semantics (§3 "GPU
+//! Backend": "Data is lazily copied back and forth ... evicted from the
+//! GPU memory using an LRU strategy ... copied back to the host memory if
+//! it was dirty when evicted").
+//!
+//! With a CPU PJRT plugin there is no physically separate device memory,
+//! so the manager tracks a *budgeted* device-resident set with the same
+//! policy and full metrics (h2d/d2h bytes, evictions); see DESIGN.md
+//! §Substitutions.
+
+use std::collections::HashMap;
+
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+/// A device-resident buffer.
+#[derive(Clone, Debug)]
+struct DeviceBuffer {
+    data: Matrix,
+    bytes: usize,
+    dirty: bool,
+    /// Logical clock of last use (for LRU).
+    last_used: u64,
+}
+
+/// LRU-managed device memory.
+#[derive(Debug)]
+pub struct DeviceMemoryManager {
+    capacity: usize,
+    used: usize,
+    clock: u64,
+    buffers: HashMap<String, DeviceBuffer>,
+    /// Dirty buffers written back to host on eviction (host shadow store).
+    host_store: HashMap<String, Matrix>,
+}
+
+impl DeviceMemoryManager {
+    pub fn new(capacity: usize) -> Self {
+        DeviceMemoryManager {
+            capacity,
+            used: 0,
+            clock: 0,
+            buffers: HashMap::new(),
+            host_store: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+    pub fn used(&self) -> usize {
+        self.used
+    }
+    pub fn resident(&self) -> usize {
+        self.buffers.len()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Lazily place a matrix on the device under `key`. If already
+    /// resident, only the LRU clock advances (no copy — the lazy part).
+    pub fn put(&mut self, key: &str, m: &Matrix) -> Result<()> {
+        let bytes = 8 * m.len();
+        if bytes > self.capacity {
+            return Err(DmlError::Accel(format!(
+                "buffer '{key}' ({bytes} B) exceeds device memory ({} B)",
+                self.capacity
+            )));
+        }
+        let t = self.tick();
+        if let Some(buf) = self.buffers.get_mut(key) {
+            buf.last_used = t;
+            return Ok(());
+        }
+        self.make_room(bytes)?;
+        metrics::global().h2d_bytes.fetch_add(bytes as u64, std::sync::atomic::Ordering::Relaxed);
+        self.buffers
+            .insert(key.to_string(), DeviceBuffer { data: m.clone(), bytes, dirty: false, last_used: t });
+        self.used += bytes;
+        Ok(())
+    }
+
+    /// Get a device-resident matrix (advances LRU). None if evicted/absent.
+    pub fn get(&mut self, key: &str) -> Option<Matrix> {
+        let t = self.tick();
+        let buf = self.buffers.get_mut(key)?;
+        buf.last_used = t;
+        Some(buf.data.clone())
+    }
+
+    /// Overwrite a device buffer (marks dirty — will be written back on
+    /// eviction).
+    pub fn update(&mut self, key: &str, m: &Matrix) -> Result<()> {
+        let t = self.tick();
+        match self.buffers.get_mut(key) {
+            Some(buf) => {
+                let new_bytes = 8 * m.len();
+                self.used = self.used - buf.bytes + new_bytes;
+                buf.data = m.clone();
+                buf.bytes = new_bytes;
+                buf.dirty = true;
+                buf.last_used = t;
+                Ok(())
+            }
+            None => {
+                self.put(key, m)?;
+                if let Some(buf) = self.buffers.get_mut(key) {
+                    buf.dirty = true;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Read back from the device or the host shadow (after eviction).
+    pub fn fetch(&mut self, key: &str) -> Option<Matrix> {
+        if let Some(m) = self.get(key) {
+            return Some(m);
+        }
+        self.host_store.get(key).cloned()
+    }
+
+    /// Evict LRU buffers until `bytes` fit.
+    fn make_room(&mut self, bytes: usize) -> Result<()> {
+        while self.used + bytes > self.capacity {
+            let victim = self
+                .buffers
+                .iter()
+                .min_by_key(|(_, b)| b.last_used)
+                .map(|(k, _)| k.clone())
+                .ok_or_else(|| {
+                    DmlError::Accel("device memory exhausted with no evictable buffers".into())
+                })?;
+            self.evict(&victim);
+        }
+        Ok(())
+    }
+
+    /// Evict one buffer; dirty data is copied back to the host store.
+    pub fn evict(&mut self, key: &str) {
+        if let Some(buf) = self.buffers.remove(key) {
+            self.used -= buf.bytes;
+            metrics::global()
+                .device_evictions
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if buf.dirty {
+                metrics::global()
+                    .d2h_bytes
+                    .fetch_add(buf.bytes as u64, std::sync::atomic::Ordering::Relaxed);
+                self.host_store.insert(key.to_string(), buf.data);
+            }
+        }
+    }
+
+    /// Drop everything (end of script).
+    pub fn clear(&mut self) {
+        let keys: Vec<String> = self.buffers.keys().cloned().collect();
+        for k in keys {
+            self.evict(&k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(n: usize, v: f64) -> Matrix {
+        Matrix::filled(n, 1, v)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut m = DeviceMemoryManager::new(1024);
+        m.put("a", &mat(4, 1.0)).unwrap();
+        assert_eq!(m.get("a").unwrap(), mat(4, 1.0));
+        assert_eq!(m.resident(), 1);
+        assert_eq!(m.used(), 32);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut m = DeviceMemoryManager::new(100); // fits 3 x 32B
+        m.put("a", &mat(4, 1.0)).unwrap();
+        m.put("b", &mat(4, 2.0)).unwrap();
+        m.put("c", &mat(4, 3.0)).unwrap();
+        m.get("a"); // refresh a — b is now LRU
+        m.put("d", &mat(4, 4.0)).unwrap(); // evicts b
+        assert!(m.get("b").is_none());
+        assert!(m.get("a").is_some());
+        assert!(m.get("d").is_some());
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        let mut m = DeviceMemoryManager::new(64); // fits 2 x 32B
+        m.put("w", &mat(4, 1.0)).unwrap();
+        m.update("w", &mat(4, 9.0)).unwrap(); // dirty
+        m.put("x", &mat(4, 0.0)).unwrap();
+        m.put("y", &mat(4, 0.0)).unwrap(); // evicts w (dirty → host)
+        assert!(m.get("w").is_none());
+        assert_eq!(m.fetch("w").unwrap(), mat(4, 9.0)); // from host shadow
+    }
+
+    #[test]
+    fn clean_eviction_discards() {
+        let mut m = DeviceMemoryManager::new(32);
+        m.put("a", &mat(4, 1.0)).unwrap();
+        m.put("b", &mat(4, 2.0)).unwrap(); // evicts clean a
+        assert!(m.fetch("a").is_none());
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let mut m = DeviceMemoryManager::new(16);
+        assert!(m.put("big", &mat(100, 1.0)).is_err());
+    }
+
+    #[test]
+    fn eviction_metrics_counted() {
+        let before = metrics::global().snapshot();
+        let mut m = DeviceMemoryManager::new(32);
+        m.put("a", &mat(4, 1.0)).unwrap();
+        m.put("b", &mat(4, 2.0)).unwrap();
+        let d = metrics::global().snapshot().delta(&before);
+        assert!(d.device_evictions >= 1);
+        assert!(d.h2d_bytes >= 64);
+    }
+}

@@ -1,0 +1,258 @@
+//! Accelerator backend (paper §3 "GPU Backend" / "Native BLAS
+//! Exploitation"), reimplemented over XLA/PJRT.
+//!
+//! SystemML compiles an operator to the GPU when its inputs/intermediates/
+//! outputs fit in device memory, invoking CuBLAS/CuDNN kernels with lazy
+//! host↔device copies and LRU eviction. Here the "device" is the PJRT CPU
+//! client executing **AOT-compiled JAX/Pallas artifacts** (HLO text lowered
+//! by `python/compile/aot.py`; see DESIGN.md §Hardware-Adaptation): an
+//! operator is offloaded when a compiled artifact matching its exact shape
+//! exists and the buffers fit the configured device-memory budget. The
+//! device-memory manager (LRU + dirty write-back, [`memory`]) reproduces
+//! the paper's memory semantics.
+
+pub mod memory;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::conf::SystemConfig;
+use crate::runtime::conv::ConvShape;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::json::Json;
+use crate::util::metrics;
+pub use memory::DeviceMemoryManager;
+
+/// One AOT-compiled entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    /// Operator kind: "matmul", "conv2d", "softmax_train_step", ...
+    pub op: String,
+    /// Op-specific integer attributes (shapes).
+    pub attrs: HashMap<String, usize>,
+    /// Input shapes (rows, cols) in call order.
+    pub inputs: Vec<(usize, usize)>,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+}
+
+/// The PJRT client plus its compile cache. The `xla` crate's wrappers use
+/// `Rc` internally and are neither `Send` nor `Sync`; every access is
+/// serialized through the mutex in [`AccelBackend`], and the PJRT CPU C
+/// API itself is thread-safe, so confining the `Rc` refcounts inside the
+/// lock is sound (see the `unsafe impl`s below).
+struct AccelInner {
+    client: xla::PjRtClient,
+    /// name -> compiled executable (compile-once cache).
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT accelerator backend.
+pub struct AccelBackend {
+    inner: Mutex<AccelInner>,
+    artifacts: Vec<Artifact>,
+    /// Simulated device memory with LRU + dirty write-back.
+    pub memory: Mutex<DeviceMemoryManager>,
+}
+
+// SAFETY: all `Rc`-holding state (client, executables, literals) lives
+// inside `inner` and is only touched while holding the Mutex; no Rc clone
+// escapes `execute`. The underlying PJRT C API is thread-safe.
+unsafe impl Send for AccelBackend {}
+unsafe impl Sync for AccelBackend {}
+
+impl AccelBackend {
+    /// Open the backend: create the PJRT client and read the artifact
+    /// manifest. Fails (gracefully handled by callers) when artifacts are
+    /// missing — run `make artifacts` first.
+    pub fn open(config: &SystemConfig) -> Result<AccelBackend> {
+        let manifest_path = config.artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            DmlError::Accel(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for e in doc.get("entries").as_arr().unwrap_or(&[]) {
+            let mut attrs = HashMap::new();
+            if let Some(obj) = e.get("attrs").as_obj() {
+                for (k, v) in obj {
+                    if let Some(n) = v.as_usize() {
+                        attrs.insert(k.clone(), n);
+                    }
+                }
+            }
+            let inputs = e
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| {
+                    let dims = s.as_arr()?;
+                    Some((dims.first()?.as_usize()?, dims.get(1)?.as_usize()?))
+                })
+                .collect();
+            artifacts.push(Artifact {
+                name: e.get("name").as_str().unwrap_or_default().to_string(),
+                file: config.artifacts_dir.join(e.get("file").as_str().unwrap_or_default()),
+                op: e.get("op").as_str().unwrap_or_default().to_string(),
+                attrs,
+                inputs,
+                num_outputs: e.get("num_outputs").as_usize().unwrap_or(1),
+            });
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| DmlError::Accel(format!("PJRT client: {e}")))?;
+        Ok(AccelBackend {
+            inner: Mutex::new(AccelInner { client, compiled: HashMap::new() }),
+            artifacts,
+            memory: Mutex::new(DeviceMemoryManager::new(config.accel_memory)),
+        })
+    }
+
+    /// All loaded artifact entries.
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    fn find(&self, op: &str, pred: impl Fn(&Artifact) -> bool) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.op == op && pred(a))
+    }
+
+    /// Compile (cached) an artifact and execute it on the given inputs.
+    pub fn execute(&self, art: &Artifact, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let mut inner = self.inner.lock().unwrap();
+        // Ensure compiled.
+        if !inner.compiled.contains_key(&art.name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.file.to_str().ok_or_else(|| DmlError::Accel("bad path".into()))?,
+            )
+            .map_err(|e| DmlError::Accel(format!("load {}: {e}", art.file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| DmlError::Accel(format!("compile {}: {e}", art.name)))?;
+            inner.compiled.insert(art.name.clone(), exe);
+        }
+        // Host->device: build literals (f64; aot.py enables x64).
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, m) in inputs.iter().enumerate() {
+            let expect = art.inputs.get(i).copied().unwrap_or(m.shape());
+            if m.shape() != expect {
+                return Err(DmlError::Accel(format!(
+                    "{}: input {i} is {}x{}, artifact expects {}x{}",
+                    art.name,
+                    m.rows(),
+                    m.cols(),
+                    expect.0,
+                    expect.1
+                )));
+            }
+            let data = m.to_row_major_vec();
+            metrics::global().h2d_bytes.fetch_add(
+                (8 * data.len()) as u64,
+                std::sync::atomic::Ordering::Relaxed,
+            );
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .map_err(|e| DmlError::Accel(format!("literal: {e}")))?;
+            lits.push(lit);
+        }
+        let exe = inner.compiled.get(&art.name).unwrap();
+        metrics::global().accel_launches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| DmlError::Accel(format!("execute {}: {e}", art.name)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| DmlError::Accel(format!("sync: {e}")))?;
+        // aot.py lowers with return_tuple=True.
+        let items = result
+            .to_tuple()
+            .map_err(|e| DmlError::Accel(format!("tuple: {e}")))?;
+        let mut out = Vec::with_capacity(items.len());
+        for lit in items {
+            let shape = lit
+                .array_shape()
+                .map_err(|e| DmlError::Accel(format!("shape: {e}")))?;
+            let dims = shape.dims();
+            let (r, c) = match dims.len() {
+                0 => (1, 1),
+                1 => (1, dims[0] as usize),
+                _ => (dims[0] as usize, dims[1] as usize),
+            };
+            let data: Vec<f64> = lit
+                .to_vec()
+                .map_err(|e| DmlError::Accel(format!("to_vec: {e}")))?;
+            metrics::global()
+                .d2h_bytes
+                .fetch_add((8 * data.len()) as u64, std::sync::atomic::Ordering::Relaxed);
+            out.push(Matrix::from_vec(r, c, data)?);
+        }
+        Ok(out)
+    }
+
+    /// Offload a matmult if a matching artifact exists and fits device
+    /// memory. Returns Ok(None) to fall back to CP.
+    pub fn try_matmult(&self, a: &Matrix, b: &Matrix) -> Result<Option<Matrix>> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let needed = 8 * (m * k + k * n + m * n);
+        if needed > self.memory.lock().unwrap().capacity() {
+            return Ok(None); // does not fit device memory → CP/dist
+        }
+        let art = match self.find("matmul", |art| {
+            art.attrs.get("m") == Some(&m)
+                && art.attrs.get("k") == Some(&k)
+                && art.attrs.get("n") == Some(&n)
+        }) {
+            Some(a) => a.clone(),
+            None => return Ok(None),
+        };
+        let out = self.execute(&art, &[a, b])?;
+        Ok(out.into_iter().next())
+    }
+
+    /// Offload a conv2d forward if a matching artifact exists.
+    pub fn try_conv2d(
+        &self,
+        input: &Matrix,
+        filter: &Matrix,
+        sh: &ConvShape,
+    ) -> Result<Option<Matrix>> {
+        let n = input.rows();
+        let art = match self.find("conv2d", |art| {
+            art.attrs.get("n") == Some(&n)
+                && art.attrs.get("c") == Some(&sh.c)
+                && art.attrs.get("h") == Some(&sh.h)
+                && art.attrs.get("w") == Some(&sh.w)
+                && art.attrs.get("k") == Some(&sh.k)
+                && art.attrs.get("r") == Some(&sh.r)
+                && art.attrs.get("s") == Some(&sh.s)
+                && art.attrs.get("stride") == Some(&sh.stride.0)
+                && art.attrs.get("pad") == Some(&sh.pad.0)
+        }) {
+            Some(a) => a.clone(),
+            None => return Ok(None),
+        };
+        let out = self.execute(&art, &[input, filter])?;
+        Ok(out.into_iter().next())
+    }
+
+    /// Run a named artifact (used by examples/benches for fused steps like
+    /// `softmax_train_step`).
+    pub fn run_named(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let art = self
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .cloned()
+            .ok_or_else(|| DmlError::Accel(format!("no artifact named '{name}'")))?;
+        self.execute(&art, inputs)
+    }
+}

@@ -1,0 +1,194 @@
+//! im2col / col2im lowering for convolution (cuDNN-style [5]).
+//!
+//! `im2col` extracts a (P·Q)×(C·R·S) patch matrix per image. The sparse
+//! variant walks only the non-zero input cells and scatters them into the
+//! rows they contribute to — this is what makes the sparse-input physical
+//! conv operators sparse-safe (FLOPs ∝ nnz).
+
+use crate::runtime::conv::ConvShape;
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::sparse::SparseCoo;
+use crate::runtime::matrix::Matrix;
+use crate::util::metrics;
+
+/// Extract the im2col matrix for image `img`: (P·Q)×(C·R·S).
+pub fn im2col(input: &Matrix, img: usize, sh: &ConvShape) -> Matrix {
+    match input {
+        Matrix::Dense(d) => Matrix::Dense(im2col_dense(d, img, sh)),
+        Matrix::Sparse(_) => im2col_sparse(input, img, sh),
+    }
+}
+
+fn im2col_dense(input: &DenseMatrix, img: usize, sh: &ConvShape) -> DenseMatrix {
+    let (p, q) = (sh.p(), sh.q());
+    let crs = sh.c * sh.r * sh.s;
+    let row = input.row(img);
+    let mut out = DenseMatrix::zeros(p * q, crs);
+    metrics::global().add_flops((p * q * crs) as u64 / 4); // data movement cost proxy
+    for op in 0..p {
+        for oq in 0..q {
+            let orow = out.row_mut(op * q + oq);
+            for c in 0..sh.c {
+                let chan = &row[c * sh.h * sh.w..(c + 1) * sh.h * sh.w];
+                for fr in 0..sh.r {
+                    let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                    if ih < 0 || ih >= sh.h as isize {
+                        continue;
+                    }
+                    let ih = ih as usize;
+                    let base = c * sh.r * sh.s + fr * sh.s;
+                    // Contiguous span when stride-1 and no horizontal clipping.
+                    let iw0 = (oq * sh.stride.1) as isize - sh.pad.1 as isize;
+                    for fs in 0..sh.s {
+                        let iw = iw0 + fs as isize;
+                        if iw < 0 || iw >= sh.w as isize {
+                            continue;
+                        }
+                        orow[base + fs] = chan[ih * sh.w + iw as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sparse im2col: iterate nnz of the image row; each non-zero input cell
+/// (c, ih, iw) contributes to every output position whose receptive field
+/// covers it.
+fn im2col_sparse(input: &Matrix, img: usize, sh: &ConvShape) -> Matrix {
+    let (p, q) = (sh.p(), sh.q());
+    let crs = sh.c * sh.r * sh.s;
+    let s = match input {
+        Matrix::Sparse(s) => s,
+        _ => unreachable!(),
+    };
+    let (cols, vals) = s.row(img);
+    metrics::global().add_flops((cols.len() * sh.r * sh.s) as u64);
+    let mut coo = SparseCoo::new(p * q, crs);
+    for (cell, v) in cols.iter().zip(vals) {
+        let cell = *cell as usize;
+        let c = cell / (sh.h * sh.w);
+        let rest = cell % (sh.h * sh.w);
+        let (ih, iw) = (rest / sh.w, rest % sh.w);
+        // Output rows op with op*stride - pad <= ih <= op*stride - pad + r-1.
+        for fr in 0..sh.r {
+            let num = ih as isize + sh.pad.0 as isize - fr as isize;
+            if num < 0 || num % sh.stride.0 as isize != 0 {
+                continue;
+            }
+            let op = (num / sh.stride.0 as isize) as usize;
+            if op >= p {
+                continue;
+            }
+            for fs in 0..sh.s {
+                let num2 = iw as isize + sh.pad.1 as isize - fs as isize;
+                if num2 < 0 || num2 % sh.stride.1 as isize != 0 {
+                    continue;
+                }
+                let oq = (num2 / sh.stride.1 as isize) as usize;
+                if oq >= q {
+                    continue;
+                }
+                coo.push(op * q + oq, c * sh.r * sh.s + fr * sh.s + fs, *v);
+            }
+        }
+    }
+    Matrix::Sparse(coo.to_csr())
+}
+
+/// col2im with accumulation: scatter-add a (P·Q)×(C·R·S) gradient matrix
+/// back into a C·H·W image row (used by conv2d_backward_data).
+pub fn col2im_accumulate(dcol: &DenseMatrix, out_row: &mut [f64], sh: &ConvShape) {
+    let (p, q) = (sh.p(), sh.q());
+    for op in 0..p {
+        for oq in 0..q {
+            let row = dcol.row(op * q + oq);
+            for c in 0..sh.c {
+                for fr in 0..sh.r {
+                    let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                    if ih < 0 || ih >= sh.h as isize {
+                        continue;
+                    }
+                    for fs in 0..sh.s {
+                        let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                        if iw < 0 || iw >= sh.w as isize {
+                            continue;
+                        }
+                        out_row[c * sh.h * sh.w + ih as usize * sh.w + iw as usize] +=
+                            row[c * sh.r * sh.s + fr * sh.s + fs];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn shape() -> ConvShape {
+        ConvShape { c: 2, h: 5, w: 4, k: 1, r: 3, s: 3, stride: (1, 1), pad: (1, 1) }
+    }
+
+    #[test]
+    fn sparse_im2col_matches_dense() {
+        let mut rng = Prng::new(77);
+        let sh = shape();
+        let mut d = DenseMatrix::zeros(2, sh.c * sh.h * sh.w);
+        for v in d.data.iter_mut() {
+            if rng.next_f64() < 0.3 {
+                *v = rng.uniform(-1.0, 1.0);
+            }
+        }
+        let dense_in = Matrix::Dense(d);
+        let sparse_in = dense_in.clone().into_sparse_format();
+        for img in 0..2 {
+            let a = im2col(&dense_in, img, &sh);
+            let b = im2col(&sparse_in, img, &sh);
+            assert_eq!(a.to_row_major_vec(), b.to_row_major_vec(), "img {img}");
+        }
+    }
+
+    #[test]
+    fn strided_sparse_im2col_matches_dense() {
+        let mut rng = Prng::new(78);
+        let sh = ConvShape { c: 1, h: 7, w: 7, k: 1, r: 3, s: 3, stride: (2, 2), pad: (0, 0) };
+        let mut d = DenseMatrix::zeros(1, 49);
+        for v in d.data.iter_mut() {
+            if rng.next_f64() < 0.4 {
+                *v = rng.uniform(-1.0, 1.0);
+            }
+        }
+        let dense_in = Matrix::Dense(d);
+        let sparse_in = dense_in.clone().into_sparse_format();
+        assert_eq!(
+            im2col(&dense_in, 0, &sh).to_row_major_vec(),
+            im2col(&sparse_in, 0, &sh).to_row_major_vec()
+        );
+    }
+
+    #[test]
+    fn im2col_identity_kernel_1x1() {
+        // 1x1 kernel, no pad: im2col is just the flattened image per position.
+        let sh = ConvShape { c: 1, h: 2, w: 2, k: 1, r: 1, s: 1, stride: (1, 1), pad: (0, 0) };
+        let input = Matrix::from_rows(&[&[1.0, 2.0, 3.0, 4.0]]);
+        let col = im2col(&input, 0, &sh);
+        assert_eq!(col.to_row_major_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(col.shape(), (4, 1));
+    }
+
+    #[test]
+    fn col2im_inverts_im2col_for_disjoint_patches() {
+        // stride == kernel size → patches disjoint → col2im(im2col(x)) == x.
+        let sh = ConvShape { c: 1, h: 4, w: 4, k: 1, r: 2, s: 2, stride: (2, 2), pad: (0, 0) };
+        let input =
+            Matrix::from_rows(&[&(1..=16).map(|v| v as f64).collect::<Vec<_>>()[..]]);
+        let col = im2col(&input, 0, &sh).to_dense();
+        let mut back = vec![0.0; 16];
+        col2im_accumulate(&col, &mut back, &sh);
+        assert_eq!(back, input.to_row_major_vec());
+    }
+}

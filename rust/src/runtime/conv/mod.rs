@@ -1,0 +1,425 @@
+//! Builtin NN functions (paper §3): conv2d (forward, backward_data,
+//! backward_filter), pooling, and bias ops over linearized tensors.
+//!
+//! Tensors follow the paper's representation: an [N, C, H, W] tensor is an
+//! N×(C·H·W) matrix. Convolution lowers to GEMM via im2col (the "lowering
+//! technique [5]" — cuDNN), which is also how the L1 Pallas kernel is
+//! structured. Four physical forward operators cover the
+//! {dense,sparse} input × {dense,sparse} filter combinations
+//! (paper §3 "Sparse Operations").
+
+pub mod im2col;
+pub mod pool;
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::mult;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+pub use pool::{avg_pool2d, max_pool2d, max_pool2d_backward};
+
+/// Convolution geometry. `N` is taken from the input matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels.
+    pub c: usize,
+    /// Input height / width.
+    pub h: usize,
+    pub w: usize,
+    /// Number of filters (output channels).
+    pub k: usize,
+    /// Filter height / width.
+    pub r: usize,
+    pub s: usize,
+    /// Stride (rows, cols).
+    pub stride: (usize, usize),
+    /// Zero padding (rows, cols).
+    pub pad: (usize, usize),
+}
+
+impl ConvShape {
+    /// Output spatial height.
+    pub fn p(&self) -> usize {
+        (self.h + 2 * self.pad.0 - self.r) / self.stride.0 + 1
+    }
+    /// Output spatial width.
+    pub fn q(&self) -> usize {
+        (self.w + 2 * self.pad.1 - self.s) / self.stride.1 + 1
+    }
+    /// Validate against input/filter matrix shapes.
+    pub fn validate(&self, input: &Matrix, filter: &Matrix) -> Result<usize> {
+        let n = input.rows();
+        if input.cols() != self.c * self.h * self.w {
+            return Err(DmlError::rt(format!(
+                "conv2d: input has {} cols, expected C*H*W = {}",
+                input.cols(),
+                self.c * self.h * self.w
+            )));
+        }
+        if filter.rows() != self.k || filter.cols() != self.c * self.r * self.s {
+            return Err(DmlError::rt(format!(
+                "conv2d: filter is {}x{}, expected K x C*R*S = {}x{}",
+                filter.rows(),
+                filter.cols(),
+                self.k,
+                self.c * self.r * self.s
+            )));
+        }
+        if self.r > self.h + 2 * self.pad.0 || self.s > self.w + 2 * self.pad.1 {
+            return Err(DmlError::rt("conv2d: filter larger than padded input"));
+        }
+        Ok(n)
+    }
+}
+
+/// Which physical conv operator ran (the paper's four variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvOperator {
+    DenseDense,
+    SparseDense,
+    DenseSparse,
+    SparseSparse,
+}
+
+/// conv2d forward: input N×(CHW), filter K×(CRS) → output N×(K·P·Q).
+pub fn conv2d(input: &Matrix, filter: &Matrix, shape: &ConvShape) -> Result<Matrix> {
+    Ok(conv2d_traced(input, filter, shape)?.0)
+}
+
+/// conv2d forward that also reports the selected physical operator.
+///
+/// All four variants share the im2col→GEMM lowering; sparsity of the
+/// input selects a sparse im2col (only non-zero input cells are
+/// scattered), and sparsity of the filter selects the sparse GEMM side.
+pub fn conv2d_traced(
+    input: &Matrix,
+    filter: &Matrix,
+    shape: &ConvShape,
+) -> Result<(Matrix, ConvOperator)> {
+    let n = shape.validate(input, filter)?;
+    let (p, q) = (shape.p(), shape.q());
+    let k = shape.k;
+    let op = match (input.is_sparse(), filter.is_sparse()) {
+        (false, false) => ConvOperator::DenseDense,
+        (true, false) => ConvOperator::SparseDense,
+        (false, true) => ConvOperator::DenseSparse,
+        (true, true) => ConvOperator::SparseSparse,
+    };
+    // Filter as (CRS)×K for a single GEMM per image: col-matrix %*% filter^T.
+    let ft = crate::runtime::matrix::reorg::transpose(filter);
+    let mut out = DenseMatrix::zeros(n, k * p * q);
+    for img in 0..n {
+        // 1. im2col: (P·Q)×(C·R·S) patch matrix (sparse-aware).
+        let col = im2col::im2col(input, img, shape);
+        // 2. GEMM: (P·Q)×(CRS) %*% (CRS)×K = (P·Q)×K.
+        let prod = mult::matmult(&col, &ft)?;
+        // 3. Transpose-scatter into the output row (K-major: [K, P, Q]).
+        let pd = prod.to_dense();
+        let orow = out.row_mut(img);
+        for pq in 0..p * q {
+            let prow = pd.row(pq);
+            for kk in 0..k {
+                orow[kk * p * q + pq] = prow[kk];
+            }
+        }
+    }
+    metrics::global().accel_launches.load(std::sync::atomic::Ordering::Relaxed);
+    Ok((Matrix::Dense(out).examine_and_convert(), op))
+}
+
+/// conv2d_backward_filter: dFilter = Σ_img col(img)^T %*% dout(img).
+pub fn conv2d_backward_filter(
+    input: &Matrix,
+    dout: &Matrix,
+    shape: &ConvShape,
+) -> Result<Matrix> {
+    let n = input.rows();
+    let (p, q) = (shape.p(), shape.q());
+    let (k, crs) = (shape.k, shape.c * shape.r * shape.s);
+    if dout.rows() != n || dout.cols() != k * p * q {
+        return Err(DmlError::rt(format!(
+            "conv2d_backward_filter: dout is {}x{}, expected {}x{}",
+            dout.rows(),
+            dout.cols(),
+            n,
+            k * p * q
+        )));
+    }
+    let mut df = DenseMatrix::zeros(k, crs);
+    for img in 0..n {
+        let col = im2col::im2col(input, img, shape); // (PQ)×(CRS)
+        // dout image as (PQ)×K (stored K-major, so gather transposed).
+        let dd = dout_image_as_pq_by_k(dout, img, k, p * q);
+        // dF += dd^T %*% col → K×CRS
+        let ddt = crate::runtime::matrix::reorg::transpose(&Matrix::Dense(dd));
+        let contrib = mult::matmult(&ddt, &col)?.to_dense();
+        for i in 0..k * crs {
+            df.data[i] += contrib.data[i];
+        }
+    }
+    Ok(Matrix::Dense(df))
+}
+
+/// conv2d_backward_data: dInput(img) = col2im( dout(img) %*% filter ).
+pub fn conv2d_backward_data(
+    filter: &Matrix,
+    dout: &Matrix,
+    shape: &ConvShape,
+) -> Result<Matrix> {
+    let n = dout.rows();
+    let (p, q) = (shape.p(), shape.q());
+    let (k, chw) = (shape.k, shape.c * shape.h * shape.w);
+    if filter.rows() != k || dout.cols() != k * p * q {
+        return Err(DmlError::rt("conv2d_backward_data: shape mismatch"));
+    }
+    let mut din = DenseMatrix::zeros(n, chw);
+    for img in 0..n {
+        let dd = dout_image_as_pq_by_k(dout, img, k, p * q); // (PQ)×K
+        // dcol = dd %*% filter → (PQ)×(CRS)
+        let dcol = mult::matmult(&Matrix::Dense(dd), filter)?.to_dense();
+        im2col::col2im_accumulate(&dcol, din.row_mut(img), shape);
+    }
+    Ok(Matrix::Dense(din).examine_and_convert())
+}
+
+/// Gather one image of dout (stored K-major [K,P,Q]) as a (PQ)×K dense.
+fn dout_image_as_pq_by_k(dout: &Matrix, img: usize, k: usize, pq: usize) -> DenseMatrix {
+    let mut dd = DenseMatrix::zeros(pq, k);
+    match dout {
+        Matrix::Dense(d) => {
+            let row = d.row(img);
+            for kk in 0..k {
+                for i in 0..pq {
+                    dd.data[i * k + kk] = row[kk * pq + i];
+                }
+            }
+        }
+        Matrix::Sparse(s) => {
+            let (cols, vals) = s.row(img);
+            for (c, v) in cols.iter().zip(vals) {
+                let c = *c as usize;
+                let (kk, i) = (c / pq, c % pq);
+                dd.data[i * k + kk] = *v;
+            }
+        }
+    }
+    dd
+}
+
+/// bias_add: out[n, k*pq + i] = input[n, k*pq + i] + bias[k] (bias K×1).
+pub fn bias_add(input: &Matrix, bias: &Matrix, k: usize) -> Result<Matrix> {
+    if bias.rows() != k || bias.cols() != 1 {
+        return Err(DmlError::rt(format!(
+            "bias_add: bias must be {}x1, got {}x{}",
+            k,
+            bias.rows(),
+            bias.cols()
+        )));
+    }
+    if input.cols() % k != 0 {
+        return Err(DmlError::rt("bias_add: ncol(input) not divisible by K"));
+    }
+    let pq = input.cols() / k;
+    let mut out = input.to_dense();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        for kk in 0..k {
+            let b = bias.get(kk, 0);
+            for i in 0..pq {
+                row[kk * pq + i] += b;
+            }
+        }
+    }
+    Ok(Matrix::Dense(out))
+}
+
+/// bias_multiply: channel-wise scaling, same layout as bias_add.
+pub fn bias_multiply(input: &Matrix, bias: &Matrix, k: usize) -> Result<Matrix> {
+    if bias.rows() != k || bias.cols() != 1 {
+        return Err(DmlError::rt("bias_multiply: bias must be Kx1"));
+    }
+    let pq = input.cols() / k;
+    let mut out = input.to_dense();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        for kk in 0..k {
+            let b = bias.get(kk, 0);
+            for i in 0..pq {
+                row[kk * pq + i] *= b;
+            }
+        }
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::approx_eq_slice;
+
+    /// Direct (naive) convolution oracle.
+    fn conv2d_naive(input: &Matrix, filter: &Matrix, sh: &ConvShape) -> Vec<f64> {
+        let n = input.rows();
+        let (p, q) = (sh.p(), sh.q());
+        let mut out = vec![0.0; n * sh.k * p * q];
+        for img in 0..n {
+            for kk in 0..sh.k {
+                for op in 0..p {
+                    for oq in 0..q {
+                        let mut acc = 0.0;
+                        for c in 0..sh.c {
+                            for fr in 0..sh.r {
+                                for fs in 0..sh.s {
+                                    let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                                    let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                                    if ih < 0 || iw < 0 || ih >= sh.h as isize || iw >= sh.w as isize
+                                    {
+                                        continue;
+                                    }
+                                    let iv = input
+                                        .get(img, c * sh.h * sh.w + ih as usize * sh.w + iw as usize);
+                                    let fv = filter.get(kk, c * sh.r * sh.s + fr * sh.s + fs);
+                                    acc += iv * fv;
+                                }
+                            }
+                        }
+                        out[img * sh.k * p * q + kk * p * q + op * q + oq] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_matrix(rng: &mut Prng, r: usize, c: usize, density: f64) -> Matrix {
+        let mut d = crate::runtime::matrix::DenseMatrix::zeros(r, c);
+        for v in d.data.iter_mut() {
+            if rng.next_f64() < density {
+                *v = rng.uniform(-1.0, 1.0);
+            }
+        }
+        Matrix::Dense(d)
+    }
+
+    fn shapes() -> Vec<ConvShape> {
+        vec![
+            ConvShape { c: 1, h: 5, w: 5, k: 2, r: 3, s: 3, stride: (1, 1), pad: (0, 0) },
+            ConvShape { c: 2, h: 6, w: 5, k: 3, r: 3, s: 2, stride: (2, 1), pad: (1, 1) },
+            ConvShape { c: 3, h: 8, w: 8, k: 4, r: 5, s: 5, stride: (1, 1), pad: (2, 2) },
+        ]
+    }
+
+    #[test]
+    fn conv2d_all_four_operators_match_naive() {
+        let mut rng = Prng::new(21);
+        for sh in shapes() {
+            let n = 3;
+            let input = rand_matrix(&mut rng, n, sh.c * sh.h * sh.w, 0.5);
+            let filter = rand_matrix(&mut rng, sh.k, sh.c * sh.r * sh.s, 0.5);
+            let expect = conv2d_naive(&input, &filter, &sh);
+            let combos = [
+                (input.clone(), filter.clone(), ConvOperator::DenseDense),
+                (input.clone().into_sparse_format(), filter.clone(), ConvOperator::SparseDense),
+                (input.clone(), filter.clone().into_sparse_format(), ConvOperator::DenseSparse),
+                (
+                    input.clone().into_sparse_format(),
+                    filter.clone().into_sparse_format(),
+                    ConvOperator::SparseSparse,
+                ),
+            ];
+            for (iv, fv, want) in combos {
+                let (out, op) = conv2d_traced(&iv, &fv, &sh).unwrap();
+                assert_eq!(op, want);
+                assert!(
+                    approx_eq_slice(&out.to_row_major_vec(), &expect, 1e-9),
+                    "operator {op:?} mismatch for {sh:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_rejects_bad_shapes() {
+        let sh = ConvShape { c: 1, h: 4, w: 4, k: 1, r: 3, s: 3, stride: (1, 1), pad: (0, 0) };
+        let input = Matrix::zeros(2, 99);
+        let filter = Matrix::zeros(1, 9);
+        assert!(conv2d(&input, &filter, &sh).is_err());
+    }
+
+    #[test]
+    fn backward_filter_matches_numeric_gradient() {
+        let mut rng = Prng::new(31);
+        let sh = ConvShape { c: 1, h: 5, w: 5, k: 2, r: 3, s: 3, stride: (1, 1), pad: (1, 1) };
+        let n = 2;
+        let input = rand_matrix(&mut rng, n, sh.c * sh.h * sh.w, 1.0);
+        let filter = rand_matrix(&mut rng, sh.k, 9, 1.0);
+        // loss = sum(conv2d(input, filter)); dL/dout = ones.
+        let (p, q) = (sh.p(), sh.q());
+        let dout = Matrix::filled(n, sh.k * p * q, 1.0);
+        let grad = conv2d_backward_filter(&input, &dout, &sh).unwrap();
+        // Numeric check on a few filter weights.
+        let eps = 1e-5;
+        for &(kk, idx) in &[(0usize, 0usize), (1, 4), (0, 8)] {
+            let mut fp = filter.to_dense();
+            fp.set(kk, idx, fp.get(kk, idx) + eps);
+            let lp: f64 = conv2d(&input, &Matrix::Dense(fp.clone()), &sh)
+                .unwrap()
+                .to_row_major_vec()
+                .iter()
+                .sum();
+            fp.set(kk, idx, fp.get(kk, idx) - 2.0 * eps);
+            let lm: f64 = conv2d(&input, &Matrix::Dense(fp), &sh)
+                .unwrap()
+                .to_row_major_vec()
+                .iter()
+                .sum();
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = grad.get(kk, idx);
+            assert!((num - ana).abs() < 1e-5, "dF[{kk},{idx}]: numeric {num} vs analytic {ana}");
+        }
+    }
+
+    #[test]
+    fn backward_data_matches_numeric_gradient() {
+        let mut rng = Prng::new(32);
+        let sh = ConvShape { c: 2, h: 4, w: 4, k: 2, r: 3, s: 3, stride: (1, 1), pad: (1, 1) };
+        let input = rand_matrix(&mut rng, 1, sh.c * sh.h * sh.w, 1.0);
+        let filter = rand_matrix(&mut rng, sh.k, sh.c * 9, 1.0);
+        let (p, q) = (sh.p(), sh.q());
+        let dout = Matrix::filled(1, sh.k * p * q, 1.0);
+        let grad = conv2d_backward_data(&filter, &dout, &sh).unwrap();
+        let eps = 1e-5;
+        for &idx in &[0usize, 7, 20, 31] {
+            let mut ip = input.to_dense();
+            ip.set(0, idx, ip.get(0, idx) + eps);
+            let lp: f64 =
+                conv2d(&Matrix::Dense(ip.clone()), &filter, &sh).unwrap().to_row_major_vec().iter().sum();
+            ip.set(0, idx, ip.get(0, idx) - 2.0 * eps);
+            let lm: f64 =
+                conv2d(&Matrix::Dense(ip), &filter, &sh).unwrap().to_row_major_vec().iter().sum();
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = grad.get(0, idx);
+            assert!((num - ana).abs() < 1e-5, "dX[{idx}]: numeric {num} vs analytic {ana}");
+        }
+    }
+
+    #[test]
+    fn bias_add_per_channel() {
+        // 1 image, K=2, P*Q=2
+        let x = Matrix::from_rows(&[&[1.0, 2.0, 3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[10.0], &[20.0]]);
+        let out = bias_add(&x, &b, 2).unwrap();
+        assert_eq!(out, Matrix::from_rows(&[&[11.0, 12.0, 23.0, 24.0]]));
+        assert!(bias_add(&x, &b, 3).is_err());
+    }
+
+    #[test]
+    fn bias_multiply_per_channel() {
+        let x = Matrix::from_rows(&[&[1.0, 2.0, 3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[2.0], &[0.5]]);
+        let out = bias_multiply(&x, &b, 2).unwrap();
+        assert_eq!(out, Matrix::from_rows(&[&[2.0, 4.0, 1.5, 2.0]]));
+    }
+}

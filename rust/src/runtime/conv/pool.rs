@@ -1,0 +1,242 @@
+//! Pooling builtins: max_pool / avg_pool forward and max_pool backward,
+//! over the linearized N×(C·H·W) representation.
+
+use crate::runtime::conv::ConvShape;
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+
+/// Pooling geometry: reuses [`ConvShape`] with r×s as the window and k
+/// ignored (channels preserved).
+fn validate_pool(input: &Matrix, sh: &ConvShape) -> Result<usize> {
+    if input.cols() != sh.c * sh.h * sh.w {
+        return Err(DmlError::rt(format!(
+            "pool: input has {} cols, expected C*H*W = {}",
+            input.cols(),
+            sh.c * sh.h * sh.w
+        )));
+    }
+    Ok(input.rows())
+}
+
+/// max_pool forward → N×(C·P·Q).
+pub fn max_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
+    let n = validate_pool(input, sh)?;
+    let (p, q) = (sh.p(), sh.q());
+    let d = input.to_dense();
+    let mut out = DenseMatrix::zeros(n, sh.c * p * q);
+    for img in 0..n {
+        let row = d.row(img);
+        let orow = out.row_mut(img);
+        for c in 0..sh.c {
+            let chan = &row[c * sh.h * sh.w..(c + 1) * sh.h * sh.w];
+            for op in 0..p {
+                for oq in 0..q {
+                    let mut best = f64::NEG_INFINITY;
+                    for fr in 0..sh.r {
+                        let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                        if ih < 0 || ih >= sh.h as isize {
+                            // Padding contributes 0 (SystemML pads with -inf
+                            // only for interior windows; DML nn uses 0-pad).
+                            best = best.max(0.0);
+                            continue;
+                        }
+                        for fs in 0..sh.s {
+                            let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                            if iw < 0 || iw >= sh.w as isize {
+                                best = best.max(0.0);
+                                continue;
+                            }
+                            best = best.max(chan[ih as usize * sh.w + iw as usize]);
+                        }
+                    }
+                    orow[c * p * q + op * q + oq] = best;
+                }
+            }
+        }
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// max_pool backward: route dout to the argmax input cell of each window.
+pub fn max_pool2d_backward(input: &Matrix, dout: &Matrix, sh: &ConvShape) -> Result<Matrix> {
+    let n = validate_pool(input, sh)?;
+    let (p, q) = (sh.p(), sh.q());
+    if dout.rows() != n || dout.cols() != sh.c * p * q {
+        return Err(DmlError::rt("max_pool backward: dout shape mismatch"));
+    }
+    let d = input.to_dense();
+    let dd = dout.to_dense();
+    let mut din = DenseMatrix::zeros(n, sh.c * sh.h * sh.w);
+    for img in 0..n {
+        let row = d.row(img);
+        let dorow = dd.row(img);
+        let dirow = din.row_mut(img);
+        for c in 0..sh.c {
+            let chan = &row[c * sh.h * sh.w..(c + 1) * sh.h * sh.w];
+            for op in 0..p {
+                for oq in 0..q {
+                    // Find argmax (first max wins, matching nn library).
+                    let mut best = f64::NEG_INFINITY;
+                    let mut best_idx: Option<usize> = None;
+                    for fr in 0..sh.r {
+                        let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                        if ih < 0 || ih >= sh.h as isize {
+                            continue;
+                        }
+                        for fs in 0..sh.s {
+                            let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                            if iw < 0 || iw >= sh.w as isize {
+                                continue;
+                            }
+                            let idx = ih as usize * sh.w + iw as usize;
+                            if chan[idx] > best {
+                                best = chan[idx];
+                                best_idx = Some(idx);
+                            }
+                        }
+                    }
+                    if let Some(idx) = best_idx {
+                        dirow[c * sh.h * sh.w + idx] += dorow[c * p * q + op * q + oq];
+                    }
+                }
+            }
+        }
+    }
+    Ok(Matrix::Dense(din).examine_and_convert())
+}
+
+/// avg_pool forward → N×(C·P·Q). Divides by the full window size
+/// (count_include_pad, matching SystemML).
+pub fn avg_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
+    let n = validate_pool(input, sh)?;
+    let (p, q) = (sh.p(), sh.q());
+    let d = input.to_dense();
+    let win = (sh.r * sh.s) as f64;
+    let mut out = DenseMatrix::zeros(n, sh.c * p * q);
+    for img in 0..n {
+        let row = d.row(img);
+        let orow = out.row_mut(img);
+        for c in 0..sh.c {
+            let chan = &row[c * sh.h * sh.w..(c + 1) * sh.h * sh.w];
+            for op in 0..p {
+                for oq in 0..q {
+                    let mut acc = 0.0;
+                    for fr in 0..sh.r {
+                        let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                        if ih < 0 || ih >= sh.h as isize {
+                            continue;
+                        }
+                        for fs in 0..sh.s {
+                            let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                            if iw < 0 || iw >= sh.w as isize {
+                                continue;
+                            }
+                            acc += chan[ih as usize * sh.w + iw as usize];
+                        }
+                    }
+                    orow[c * p * q + op * q + oq] = acc / win;
+                }
+            }
+        }
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool_shape() -> ConvShape {
+        ConvShape { c: 1, h: 4, w: 4, k: 1, r: 2, s: 2, stride: (2, 2), pad: (0, 0) }
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Matrix::from_rows(&[&[
+            1.0, 2.0, 5.0, 6.0, //
+            3.0, 4.0, 7.0, 8.0, //
+            9.0, 10.0, 13.0, 14.0, //
+            11.0, 12.0, 15.0, 16.0,
+        ]]);
+        let out = max_pool2d(&x, &pool_shape()).unwrap();
+        assert_eq!(out, Matrix::from_rows(&[&[4.0, 8.0, 12.0, 16.0]]));
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let x = Matrix::from_rows(&[&[
+            1.0, 2.0, 5.0, 6.0, //
+            3.0, 4.0, 7.0, 8.0, //
+            9.0, 10.0, 13.0, 14.0, //
+            11.0, 12.0, 15.0, 16.0,
+        ]]);
+        let out = avg_pool2d(&x, &pool_shape()).unwrap();
+        assert_eq!(out, Matrix::from_rows(&[&[2.5, 6.5, 10.5, 14.5]]));
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_argmax() {
+        let x = Matrix::from_rows(&[&[
+            1.0, 2.0, 5.0, 6.0, //
+            3.0, 4.0, 7.0, 8.0, //
+            9.0, 10.0, 13.0, 14.0, //
+            11.0, 12.0, 15.0, 16.0,
+        ]]);
+        let dout = Matrix::from_rows(&[&[1.0, 2.0, 3.0, 4.0]]);
+        let din = max_pool2d_backward(&x, &dout, &pool_shape()).unwrap();
+        // Max entries: 4 (idx 5), 8 (idx 7), 12 (idx 13), 16 (idx 15).
+        let v = din.to_row_major_vec();
+        assert_eq!(v[5], 1.0);
+        assert_eq!(v[7], 2.0);
+        assert_eq!(v[13], 3.0);
+        assert_eq!(v[15], 4.0);
+        assert_eq!(v.iter().filter(|x| **x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn max_pool_backward_numeric_gradient() {
+        // Distinct values so the argmax is unique and the numeric gradient valid.
+        let x = Matrix::from_rows(&[&[
+            0.11, 0.52, 0.23, 0.94, //
+            0.35, 0.16, 0.87, 0.48, //
+            0.69, 0.21, 0.33, 0.75, //
+            0.14, 0.96, 0.57, 0.28,
+        ]]);
+        let sh = pool_shape();
+        let dout = Matrix::filled(1, 4, 1.0);
+        let grad = max_pool2d_backward(&x, &dout, &sh).unwrap();
+        let eps = 1e-6;
+        for idx in 0..16 {
+            let mut xp = x.to_dense();
+            xp.set(0, idx, xp.get(0, idx) + eps);
+            let lp: f64 =
+                max_pool2d(&Matrix::Dense(xp.clone()), &sh).unwrap().to_row_major_vec().iter().sum();
+            xp.set(0, idx, xp.get(0, idx) - 2.0 * eps);
+            let lm: f64 =
+                max_pool2d(&Matrix::Dense(xp), &sh).unwrap().to_row_major_vec().iter().sum();
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - grad.get(0, idx)).abs() < 1e-6,
+                "idx {idx}: numeric {num} vs {}",
+                grad.get(0, idx)
+            );
+        }
+    }
+
+    #[test]
+    fn padded_stride_pool_shapes() {
+        let sh = ConvShape { c: 2, h: 5, w: 5, k: 1, r: 3, s: 3, stride: (2, 2), pad: (1, 1) };
+        let x = Matrix::filled(3, 50, 1.0);
+        let out = max_pool2d(&x, &sh).unwrap();
+        assert_eq!(out.shape(), (3, 2 * sh.p() * sh.q()));
+        assert_eq!(out.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn pool_rejects_bad_input() {
+        let sh = pool_shape();
+        assert!(max_pool2d(&Matrix::zeros(1, 7), &sh).is_err());
+        assert!(max_pool2d_backward(&Matrix::zeros(1, 16), &Matrix::zeros(1, 3), &sh).is_err());
+    }
+}

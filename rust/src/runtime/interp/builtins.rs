@@ -1,0 +1,420 @@
+//! Builtin function dispatch (paper §3 "Builtin NN Functions" plus the
+//! standard DML builtin library).
+
+use crate::runtime::conv::{self, ConvShape};
+use crate::runtime::interp::{Interpreter, Value};
+use crate::runtime::matrix::agg::{self, AggOp};
+use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
+use crate::runtime::matrix::{randgen, reorg, solve, Matrix};
+use crate::util::error::{DmlError, Result};
+
+type EArg = (Option<String>, Value);
+
+/// Access helper over evaluated args.
+struct Args<'a> {
+    name: &'a str,
+    args: &'a [EArg],
+}
+
+impl<'a> Args<'a> {
+    /// Named arg, else positional index.
+    fn get(&self, pos: usize, name: &str) -> Option<&Value> {
+        for (n, v) in self.args {
+            if n.as_deref() == Some(name) {
+                return Some(v);
+            }
+        }
+        // positional args are the unnamed ones, in order
+        self.args.iter().filter(|(n, _)| n.is_none()).nth(pos).map(|(_, v)| v)
+    }
+    fn require(&self, pos: usize, name: &str) -> Result<&Value> {
+        self.get(pos, name).ok_or_else(|| {
+            DmlError::rt(format!("{}: missing argument '{name}'", self.name))
+        })
+    }
+    fn matrix(&self, pos: usize, name: &str) -> Result<Matrix> {
+        Ok(self.require(pos, name)?.as_matrix()?.clone())
+    }
+    fn double(&self, pos: usize, name: &str, default: f64) -> Result<f64> {
+        match self.get(pos, name) {
+            Some(v) => v.as_double(),
+            None => Ok(default),
+        }
+    }
+    fn usize_or(&self, pos: usize, name: &str, default: usize) -> Result<usize> {
+        match self.get(pos, name) {
+            Some(v) => Ok(v.as_int()? as usize),
+            None => Ok(default),
+        }
+    }
+    fn str_or(&self, pos: usize, name: &str, default: &str) -> Result<String> {
+        match self.get(pos, name) {
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(other) => Err(DmlError::rt(format!(
+                "{}: argument '{name}' must be a string, found {}",
+                self.name,
+                other.type_name()
+            ))),
+            None => Ok(default.to_string()),
+        }
+    }
+    fn shape_list(&self, name: &str) -> Result<Vec<usize>> {
+        for (n, v) in self.args {
+            if n.as_deref() == Some(name) {
+                return v.as_usize_list();
+            }
+        }
+        Err(DmlError::rt(format!("{}: missing shape argument '{name}'", self.name)))
+    }
+    fn count(&self) -> usize {
+        self.args.len()
+    }
+}
+
+/// Parse conv/pool geometry from the SystemML-style named arguments:
+/// `input_shape=[N,C,H,W], filter_shape=[K,C,R,S], stride=[h,w], padding=[h,w]`.
+fn conv_shape(a: &Args, need_filter: bool) -> Result<ConvShape> {
+    let ins = a.shape_list("input_shape")?;
+    if ins.len() != 4 {
+        return Err(DmlError::rt(format!("{}: input_shape must be [N,C,H,W]", a.name)));
+    }
+    let (c, h, w) = (ins[1], ins[2], ins[3]);
+    let (k, r, s) = if need_filter {
+        let fs = a.shape_list("filter_shape")?;
+        if fs.len() != 4 {
+            return Err(DmlError::rt(format!("{}: filter_shape must be [K,C,R,S]", a.name)));
+        }
+        (fs[0], fs[2], fs[3])
+    } else {
+        // pooling: pool_size=[r,s]
+        let ps = a.shape_list("pool_size")?;
+        (c, ps[0], ps[1])
+    };
+    let stride = a.shape_list("stride").unwrap_or_else(|_| vec![1, 1]);
+    let padding = a.shape_list("padding").unwrap_or_else(|_| vec![0, 0]);
+    Ok(ConvShape {
+        c,
+        h,
+        w,
+        k,
+        r,
+        s,
+        stride: (stride[0], stride.get(1).copied().unwrap_or(stride[0])),
+        pad: (padding[0], padding.get(1).copied().unwrap_or(padding[0])),
+    })
+}
+
+/// Dispatch a builtin call. Returns the (possibly empty) result list.
+pub fn call_builtin(interp: &Interpreter, name: &str, args: &[EArg]) -> Result<Vec<Value>> {
+    let a = Args { name, args };
+    let one = |v: Value| Ok(vec![v]);
+    let m1 = |m: Matrix| Ok(vec![Value::Matrix(m)]);
+
+    match name {
+        // ---- shape ------------------------------------------------------
+        "nrow" => one(Value::Int(a.matrix(0, "target")?.rows() as i64)),
+        "ncol" => one(Value::Int(a.matrix(0, "target")?.cols() as i64)),
+        "length" => one(Value::Int(a.matrix(0, "target")?.len() as i64)),
+        "nnz" => one(Value::Int(a.matrix(0, "target")?.nnz() as i64)),
+
+        // ---- aggregates ---------------------------------------------------
+        "sum" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Sum))),
+        "mean" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Mean))),
+        "prod" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Prod))),
+        "var" => {
+            let m = a.matrix(0, "target")?;
+            let mu = agg::full_agg(&m, AggOp::Mean);
+            let ss = agg::full_agg(&m, AggOp::SumSq);
+            let n = m.len() as f64;
+            one(Value::Double((ss - n * mu * mu) / (n - 1.0).max(1.0)))
+        }
+        "sd" => {
+            let out = call_builtin(interp, "var", args)?;
+            one(Value::Double(out[0].as_double()?.sqrt()))
+        }
+        "min" | "max" => {
+            let op = if name == "min" { AggOp::Min } else { AggOp::Max };
+            let bop = if name == "min" { BinOp::Min } else { BinOp::Max };
+            if a.count() == 1 {
+                match a.require(0, "target")? {
+                    Value::Matrix(m) => one(Value::Double(agg::full_agg(m, op))),
+                    other => one(Value::Double(other.as_double()?)),
+                }
+            } else {
+                let x = a.require(0, "a")?;
+                let y = a.require(1, "b")?;
+                match (x, y) {
+                    (Value::Matrix(mx), Value::Matrix(my)) => {
+                        m1(elementwise::binary(mx, my, bop)?)
+                    }
+                    (Value::Matrix(mx), sv) => {
+                        m1(elementwise::scalar_op(mx, sv.as_double()?, bop, false)?)
+                    }
+                    (sv, Value::Matrix(my)) => {
+                        m1(elementwise::scalar_op(my, sv.as_double()?, bop, true)?)
+                    }
+                    (sx, sy) => one(Value::Double(bop.apply(sx.as_double()?, sy.as_double()?))),
+                }
+            }
+        }
+        "rowSums" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Sum)),
+        "colSums" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Sum)),
+        "rowMeans" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Mean)),
+        "colMeans" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Mean)),
+        "rowMaxs" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Max)),
+        "colMaxs" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Max)),
+        "rowMins" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Min)),
+        "colMins" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Min)),
+        "rowIndexMax" => m1(agg::row_index_max(&a.matrix(0, "target")?)),
+        "trace" => one(Value::Double(agg::trace(&a.matrix(0, "target")?))),
+        "cumsum" => m1(agg::cumsum(&a.matrix(0, "target")?)),
+
+        // ---- unary cell ops --------------------------------------------
+        "exp" | "log" | "sqrt" | "abs" | "round" | "floor" | "ceil" | "ceiling" | "sign"
+        | "sin" | "cos" | "tan" | "sigmoid" => {
+            let uop = match name {
+                "exp" => UnaryOp::Exp,
+                "log" => UnaryOp::Log,
+                "sqrt" => UnaryOp::Sqrt,
+                "abs" => UnaryOp::Abs,
+                "round" => UnaryOp::Round,
+                "floor" => UnaryOp::Floor,
+                "ceil" | "ceiling" => UnaryOp::Ceil,
+                "sign" => UnaryOp::Sign,
+                "sin" => UnaryOp::Sin,
+                "cos" => UnaryOp::Cos,
+                "tan" => UnaryOp::Tan,
+                _ => UnaryOp::Sigmoid,
+            };
+            match a.require(0, "target")? {
+                Value::Matrix(m) => {
+                    // log(X, base)
+                    if name == "log" && a.count() > 1 {
+                        let base = a.double(1, "base", std::f64::consts::E)?;
+                        let ln = elementwise::unary(m, UnaryOp::Log);
+                        return m1(elementwise::scalar_op(&ln, base.ln(), BinOp::Div, false)?);
+                    }
+                    m1(elementwise::unary(m, uop))
+                }
+                sv => {
+                    let x = sv.as_double()?;
+                    if name == "log" && a.count() > 1 {
+                        let base = a.double(1, "base", std::f64::consts::E)?;
+                        return one(Value::Double(x.ln() / base.ln()));
+                    }
+                    one(Value::Double(uop.apply(x)))
+                }
+            }
+        }
+
+        // ---- construction ------------------------------------------------
+        "matrix" => {
+            let first = a.require(0, "data")?;
+            let rows = a.usize_or(1, "rows", 0)?;
+            let cols = a.usize_or(2, "cols", 0)?;
+            match first {
+                Value::Matrix(m) => m1(reorg::reshape(m, rows, cols)?), // reshape form
+                sv => m1(Matrix::filled(rows, cols, sv.as_double()?)),  // fill form
+            }
+        }
+        "rand" => {
+            let rows = a.usize_or(0, "rows", 1)?;
+            let cols = a.usize_or(1, "cols", 1)?;
+            let min = a.double(2, "min", 0.0)?;
+            let max = a.double(3, "max", 1.0)?;
+            let sparsity = a.double(4, "sparsity", 1.0)?;
+            let pdf = match a.str_or(5, "pdf", "uniform")?.as_str() {
+                "uniform" => randgen::Pdf::Uniform,
+                "normal" => randgen::Pdf::Normal,
+                other => return Err(DmlError::rt(format!("rand: unknown pdf '{other}'"))),
+            };
+            let seed = a.double(6, "seed", 0.0)? as u64;
+            m1(randgen::rand(rows, cols, min, max, sparsity, pdf, seed)?)
+        }
+        "seq" => {
+            let from = a.double(0, "from", 1.0)?;
+            let to = a.double(1, "to", 1.0)?;
+            let incr = a.double(2, "incr", if from <= to { 1.0 } else { -1.0 })?;
+            m1(randgen::seq(from, to, incr)?)
+        }
+
+        // ---- reorg ------------------------------------------------------
+        "t" => m1(reorg::transpose(&a.matrix(0, "target")?)),
+        "rev" => m1(reorg::rev(&a.matrix(0, "target")?)),
+        "cbind" => {
+            let mut out = a.matrix(0, "a")?;
+            for i in 1..a.count() {
+                out = reorg::cbind(&out, &a.matrix(i, "_")?)?;
+            }
+            m1(out)
+        }
+        "rbind" => {
+            let mut out = a.matrix(0, "a")?;
+            for i in 1..a.count() {
+                out = reorg::rbind(&out, &a.matrix(i, "_")?)?;
+            }
+            m1(out)
+        }
+        "diag" => m1(reorg::diag(&a.matrix(0, "target")?)),
+        "outer" => {
+            let u = a.matrix(0, "u")?;
+            let v = a.matrix(1, "v")?;
+            let opname = a.str_or(2, "op", "*")?;
+            let bop = match opname.as_str() {
+                "*" => BinOp::Mul,
+                "+" => BinOp::Add,
+                "-" => BinOp::Sub,
+                "/" => BinOp::Div,
+                "<" => BinOp::Lt,
+                ">" => BinOp::Gt,
+                "==" => BinOp::Eq,
+                other => return Err(DmlError::rt(format!("outer: unknown op '{other}'"))),
+            };
+            m1(reorg::outer(&u, &v, bop)?)
+        }
+        "table" => {
+            let i = a.matrix(0, "i")?;
+            let j = a.matrix(1, "j")?;
+            let odim1 = a.usize_or(2, "odim1", 0)?;
+            let odim2 = a.usize_or(3, "odim2", 0)?;
+            let rows = if odim1 > 0 {
+                odim1
+            } else {
+                agg::full_agg(&i, AggOp::Max) as usize
+            };
+            let cols = if odim2 > 0 {
+                odim2
+            } else {
+                agg::full_agg(&j, AggOp::Max) as usize
+            };
+            m1(reorg::table(&i, &j, rows, cols)?)
+        }
+        "removeEmpty" => {
+            let t = a.matrix(0, "target")?;
+            let margin = a.str_or(1, "margin", "rows")?;
+            m1(reorg::remove_empty(&t, margin == "rows"))
+        }
+        "solve" => m1(solve::solve(&a.matrix(0, "a")?, &a.matrix(1, "b")?)?),
+        "inv" => m1(solve::inverse(&a.matrix(0, "a")?)?),
+
+        // ---- casts --------------------------------------------------------
+        "as.scalar" => {
+            let m = a.matrix(0, "target")?;
+            if m.shape() != (1, 1) {
+                return Err(DmlError::rt(format!(
+                    "as.scalar: matrix is {}x{}, expected 1x1",
+                    m.rows(),
+                    m.cols()
+                )));
+            }
+            one(Value::Double(m.get(0, 0)))
+        }
+        "as.matrix" => match a.require(0, "target")? {
+            Value::Matrix(m) => m1(m.clone()),
+            sv => m1(Matrix::scalar(sv.as_double()?)),
+        },
+        "as.integer" => one(Value::Int(a.require(0, "target")?.as_int()?)),
+        "as.double" => one(Value::Double(a.require(0, "target")?.as_double()?)),
+        "as.logical" => one(Value::Bool(a.require(0, "target")?.as_bool()?)),
+
+        // ---- control / io ------------------------------------------------
+        "print" => {
+            let msg = a.require(0, "target")?.to_display_string();
+            interp.emit(msg);
+            Ok(vec![])
+        }
+        "toString" => one(Value::Str(a.require(0, "target")?.to_display_string())),
+        "stop" => {
+            let msg = a.require(0, "message")?.to_display_string();
+            Err(DmlError::rt(format!("stop: {msg}")))
+        }
+        "assert" => {
+            if !a.require(0, "condition")?.as_bool()? {
+                return Err(DmlError::rt("assert failed"));
+            }
+            Ok(vec![])
+        }
+        "ifelse" => {
+            let c = a.require(0, "condition")?;
+            match c {
+                Value::Matrix(cm) => {
+                    // Cell-wise select: c*a + (1-c)*b.
+                    let x = a.require(1, "a")?.to_matrix()?;
+                    let y = a.require(2, "b")?.to_matrix()?;
+                    let ind = elementwise::scalar_op(cm, 0.0, BinOp::Neq, false)?;
+                    let not_ind = elementwise::scalar_op(&ind, 1.0, BinOp::Sub, true)?;
+                    let xa = elementwise::binary(&ind, &x, BinOp::Mul)?;
+                    let xb = elementwise::binary(&not_ind, &y, BinOp::Mul)?;
+                    m1(elementwise::binary(&xa, &xb, BinOp::Add)?)
+                }
+                sv => {
+                    if sv.as_bool()? {
+                        one(a.require(1, "a")?.clone())
+                    } else {
+                        one(a.require(2, "b")?.clone())
+                    }
+                }
+            }
+        }
+        "time" => {
+            let ns = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as i64)
+                .unwrap_or(0);
+            one(Value::Int(ns))
+        }
+
+        // ---- NN builtins (paper §3) ------------------------------------
+        "conv2d" => {
+            let x = a.matrix(0, "input")?;
+            let w = a.matrix(1, "filter")?;
+            let sh = conv_shape(&a, true)?;
+            if let Some(accel) = &interp.accel {
+                if let Some(out) = accel.try_conv2d(&x, &w, &sh)? {
+                    return m1(out);
+                }
+            }
+            m1(conv::conv2d(&x, &w, &sh)?)
+        }
+        "conv2d_backward_filter" => {
+            let x = a.matrix(0, "input")?;
+            let dout = a.matrix(1, "dout")?;
+            let sh = conv_shape(&a, true)?;
+            m1(conv::conv2d_backward_filter(&x, &dout, &sh)?)
+        }
+        "conv2d_backward_data" => {
+            let w = a.matrix(0, "filter")?;
+            let dout = a.matrix(1, "dout")?;
+            let sh = conv_shape(&a, true)?;
+            m1(conv::conv2d_backward_data(&w, &dout, &sh)?)
+        }
+        "max_pool" => {
+            let x = a.matrix(0, "input")?;
+            let sh = conv_shape(&a, false)?;
+            m1(conv::max_pool2d(&x, &sh)?)
+        }
+        "max_pool_backward" => {
+            let x = a.matrix(0, "input")?;
+            let dout = a.matrix(1, "dout")?;
+            let sh = conv_shape(&a, false)?;
+            m1(conv::max_pool2d_backward(&x, &dout, &sh)?)
+        }
+        "avg_pool" => {
+            let x = a.matrix(0, "input")?;
+            let sh = conv_shape(&a, false)?;
+            m1(conv::avg_pool2d(&x, &sh)?)
+        }
+        "bias_add" => {
+            let x = a.matrix(0, "input")?;
+            let b = a.matrix(1, "bias")?;
+            m1(conv::bias_add(&x, &b, b.rows())?)
+        }
+        "bias_multiply" => {
+            let x = a.matrix(0, "input")?;
+            let b = a.matrix(1, "bias")?;
+            m1(conv::bias_multiply(&x, &b, b.rows())?)
+        }
+
+        other => Err(DmlError::rt(format!("unknown builtin '{other}'"))),
+    }
+}

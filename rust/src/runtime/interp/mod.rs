@@ -1,0 +1,588 @@
+//! The DML interpreter: executes validated programs over the matrix
+//! runtime, honoring the compiler's execution-type decisions for heavy
+//! operators (CP / distributed / accelerator).
+
+pub mod builtins;
+pub mod registry;
+pub mod value;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::conf::SystemConfig;
+use crate::dml::ast::*;
+use crate::dml::validate::Bundle;
+use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
+use crate::runtime::matrix::{mult, reorg, Matrix};
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+pub use value::Value;
+
+/// Variable scope (one frame; DML functions do not close over callers).
+pub type Scope = HashMap<String, Value>;
+
+/// Maximum user-function call depth. Kept conservative because each DML
+/// frame costs several native interpreter frames (test threads default to
+/// 2 MB stacks); ML scripts are iterative, not deeply recursive.
+const MAX_CALL_DEPTH: usize = 48;
+
+/// The interpreter. Cheap to share across threads (parfor workers hold
+/// `&Interpreter`).
+pub struct Interpreter {
+    pub bundle: Arc<Bundle>,
+    pub config: SystemConfig,
+    /// Captured `print` output (also echoed to stdout when `echo` is set).
+    pub sink: Arc<Mutex<Vec<String>>>,
+    /// Echo prints to stdout.
+    pub echo: bool,
+    /// Distributed backend handle (simulated cluster), if enabled.
+    pub cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+    /// Accelerator backend handle (PJRT), if enabled.
+    pub accel: Option<Arc<crate::runtime::accel::AccelBackend>>,
+}
+
+/// Per-execution context: current namespace (for bare-call resolution in
+/// sourced functions) and call depth.
+#[derive(Clone, Default)]
+pub struct Ctx {
+    pub namespace: Option<String>,
+    pub depth: usize,
+}
+
+impl Interpreter {
+    pub fn new(bundle: Bundle, config: SystemConfig) -> Self {
+        let cluster = if config.dist_enabled {
+            Some(Arc::new(crate::runtime::dist::Cluster::new(
+                config.num_workers,
+                config.block_size,
+            )))
+        } else {
+            None
+        };
+        let accel = if config.accel_enabled {
+            crate::runtime::accel::AccelBackend::open(&config)
+                .map(Arc::new)
+                .map_err(|e| {
+                    eprintln!("warning: accelerator backend unavailable: {e}");
+                    e
+                })
+                .ok()
+        } else {
+            None
+        };
+        Interpreter {
+            bundle: Arc::new(bundle),
+            config,
+            sink: Arc::new(Mutex::new(Vec::new())),
+            echo: false,
+            cluster,
+            accel,
+        }
+    }
+
+    /// Execute the main program body with the given input bindings;
+    /// returns the final top-level scope.
+    pub fn run(&self, inputs: Scope) -> Result<Scope> {
+        let mut scope = inputs;
+        let body = self.bundle.main.body.clone();
+        self.exec_block(&body, &mut scope, &Ctx::default())?;
+        Ok(scope)
+    }
+
+    /// Print-sink contents.
+    pub fn output(&self) -> Vec<String> {
+        self.sink.lock().unwrap().clone()
+    }
+
+    pub(crate) fn emit(&self, line: String) {
+        if self.echo {
+            println!("{line}");
+        }
+        self.sink.lock().unwrap().push(line);
+    }
+
+    // ---- statements ------------------------------------------------------
+
+    pub fn exec_block(&self, stmts: &[Stmt], scope: &mut Scope, ctx: &Ctx) -> Result<()> {
+        for s in stmts {
+            self.exec_stmt(s, scope, ctx)?;
+        }
+        Ok(())
+    }
+
+    pub fn exec_stmt(&self, stmt: &Stmt, scope: &mut Scope, ctx: &Ctx) -> Result<()> {
+        metrics::global().instructions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match stmt {
+            Stmt::Assign { target, value, .. } => {
+                let v = self.eval(value, scope, ctx)?;
+                match target {
+                    AssignTarget::Var(name) => {
+                        scope.insert(name.clone(), v);
+                    }
+                    AssignTarget::Indexed { name, rows, cols } => {
+                        let base = scope
+                            .get(name)
+                            .ok_or_else(|| DmlError::rt(format!("undefined variable '{name}'")))?
+                            .as_matrix()?
+                            .clone();
+                        let (rl, ru) = self.range_bounds(rows, base.rows(), scope, ctx)?;
+                        let (cl, cu) = self.range_bounds(cols, base.cols(), scope, ctx)?;
+                        let src = match &v {
+                            Value::Matrix(m) => m.clone(),
+                            other => {
+                                // Scalar broadcast into the region.
+                                Matrix::filled(ru - rl, cu - cl, other.as_double()?)
+                                    .into_dense_format()
+                            }
+                        };
+                        if src.shape() != (ru - rl, cu - cl) {
+                            return Err(DmlError::rt(format!(
+                                "left-indexing: rhs is {}x{} but target region is {}x{}",
+                                src.rows(),
+                                src.cols(),
+                                ru - rl,
+                                cu - cl
+                            )));
+                        }
+                        let out = reorg::left_index(&base, rl, cl, &src)?;
+                        scope.insert(name.clone(), Value::Matrix(out));
+                    }
+                }
+            }
+            Stmt::MultiAssign { targets, value, .. } => {
+                let results = match value {
+                    Expr::Call { namespace, name, args, .. } => {
+                        self.call_multi(namespace.as_deref(), name, args, scope, ctx)?
+                    }
+                    _ => return Err(DmlError::rt("multi-assignment requires a function call")),
+                };
+                if results.len() < targets.len() {
+                    return Err(DmlError::rt(format!(
+                        "function returned {} values, expected {}",
+                        results.len(),
+                        targets.len()
+                    )));
+                }
+                for (t, v) in targets.iter().zip(results) {
+                    scope.insert(t.clone(), v);
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                if self.eval(cond, scope, ctx)?.as_bool()? {
+                    self.exec_block(then_branch, scope, ctx)?;
+                } else {
+                    self.exec_block(else_branch, scope, ctx)?;
+                }
+            }
+            Stmt::For { var, range, body, .. } => {
+                for v in self.range_values(range, scope, ctx)? {
+                    scope.insert(var.clone(), Value::Double(v));
+                    self.exec_block(body, scope, ctx)?;
+                }
+            }
+            Stmt::ParFor { var, range, body, opts, .. } => {
+                let iters = self.range_values(range, scope, ctx)?;
+                crate::runtime::parfor::execute_parfor(self, var, &iters, body, opts, scope, ctx)?;
+            }
+            Stmt::While { cond, body, .. } => {
+                let mut guard = 0usize;
+                while self.eval(cond, scope, ctx)?.as_bool()? {
+                    self.exec_block(body, scope, ctx)?;
+                    guard += 1;
+                    if guard > 100_000_000 {
+                        return Err(DmlError::rt("while loop exceeded iteration guard"));
+                    }
+                }
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                self.eval(expr, scope, ctx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Iteration values of a loop range.
+    fn range_values(&self, range: &RangeExpr, scope: &mut Scope, ctx: &Ctx) -> Result<Vec<f64>> {
+        let from = self.eval(&range.from, scope, ctx)?.as_double()?;
+        let to = self.eval(&range.to, scope, ctx)?.as_double()?;
+        let step = match &range.step {
+            Some(s) => self.eval(s, scope, ctx)?.as_double()?,
+            None => {
+                if from <= to {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        };
+        if step == 0.0 {
+            return Err(DmlError::rt("loop range step must be nonzero"));
+        }
+        let mut vals = Vec::new();
+        let mut v = from;
+        if step > 0.0 {
+            while v <= to + 1e-12 {
+                vals.push(v);
+                v += step;
+            }
+        } else {
+            while v >= to - 1e-12 {
+                vals.push(v);
+                v += step;
+            }
+        }
+        Ok(vals)
+    }
+
+    /// Translate a DML 1-based inclusive [`IndexRange`] to 0-based
+    /// half-open bounds, checking limits.
+    pub fn range_bounds(
+        &self,
+        r: &IndexRange,
+        dim: usize,
+        scope: &mut Scope,
+        ctx: &Ctx,
+    ) -> Result<(usize, usize)> {
+        match r {
+            IndexRange::All => Ok((0, dim)),
+            IndexRange::Single(e) => {
+                let i = self.eval(e, scope, ctx)?.as_int()?;
+                if i < 1 || i as usize > dim {
+                    return Err(DmlError::rt(format!("index {i} out of range [1,{dim}]")));
+                }
+                Ok((i as usize - 1, i as usize))
+            }
+            IndexRange::Range(a, b) => {
+                let lo = self.eval(a, scope, ctx)?.as_int()?;
+                let hi = self.eval(b, scope, ctx)?.as_int()?;
+                if lo < 1 || hi < lo || hi as usize > dim {
+                    return Err(DmlError::rt(format!(
+                        "index range {lo}:{hi} out of range [1,{dim}]"
+                    )));
+                }
+                Ok((lo as usize - 1, hi as usize))
+            }
+        }
+    }
+
+    // ---- expressions -------------------------------------------------
+
+    pub fn eval(&self, expr: &Expr, scope: &mut Scope, ctx: &Ctx) -> Result<Value> {
+        match expr {
+            Expr::Num(v, _) => Ok(Value::Double(*v)),
+            Expr::Int(v, _) => Ok(Value::Int(*v)),
+            Expr::Str(s, _) => Ok(Value::Str(s.clone())),
+            Expr::Bool(b, _) => Ok(Value::Bool(*b)),
+            Expr::Var(name, pos) => scope.get(name).cloned().ok_or_else(|| {
+                DmlError::rt(format!("line {}: undefined variable '{name}'", pos.line))
+            }),
+            Expr::List(items, _) => {
+                let vals: Result<Vec<Value>> =
+                    items.iter().map(|e| self.eval(e, scope, ctx)).collect();
+                Ok(Value::List(vals?))
+            }
+            Expr::Unary { op, operand, .. } => {
+                let v = self.eval(operand, scope, ctx)?;
+                match (op, v) {
+                    (AstUnOp::Neg, Value::Int(i)) => Ok(Value::Int(-i)),
+                    (AstUnOp::Neg, Value::Double(d)) => Ok(Value::Double(-d)),
+                    (AstUnOp::Neg, Value::Matrix(m)) => {
+                        Ok(Value::Matrix(elementwise::unary(&m, UnaryOp::Neg)))
+                    }
+                    (AstUnOp::Not, Value::Matrix(m)) => {
+                        Ok(Value::Matrix(elementwise::unary(&m, UnaryOp::Not)))
+                    }
+                    (AstUnOp::Not, v) => Ok(Value::Bool(!v.as_bool()?)),
+                    (AstUnOp::Neg, v) => Ok(Value::Double(-v.as_double()?)),
+                }
+            }
+            Expr::Binary { op, lhs, rhs, pos } => {
+                // Short-circuit scalar && / ||.
+                if matches!(op, AstBinOp::And | AstBinOp::Or) {
+                    let l = self.eval(lhs, scope, ctx)?;
+                    if !l.is_matrix() {
+                        let lb = l.as_bool()?;
+                        if *op == AstBinOp::And && !lb {
+                            return Ok(Value::Bool(false));
+                        }
+                        if *op == AstBinOp::Or && lb {
+                            return Ok(Value::Bool(true));
+                        }
+                        let rb = self.eval(rhs, scope, ctx)?.as_bool()?;
+                        return Ok(Value::Bool(rb));
+                    }
+                    let r = self.eval(rhs, scope, ctx)?;
+                    return self.binary_matrix_op(*op, &l, &r, pos);
+                }
+                let l = self.eval(lhs, scope, ctx)?;
+                let r = self.eval(rhs, scope, ctx)?;
+                self.binary_value_op(*op, &l, &r, pos)
+            }
+            Expr::Index { base, rows, cols, .. } => {
+                let b = self.eval(base, scope, ctx)?;
+                let m = b.as_matrix()?;
+                let (rl, ru) = self.range_bounds(rows, m.rows(), scope, ctx)?;
+                let (cl, cu) = self.range_bounds(cols, m.cols(), scope, ctx)?;
+                let s = reorg::slice(m, rl, ru, cl, cu)?;
+                // A 1x1 slice stays a matrix in DML (as.scalar converts).
+                Ok(Value::Matrix(s))
+            }
+            Expr::Call { namespace, name, args, .. } => {
+                let mut results = self.call_multi(namespace.as_deref(), name, args, scope, ctx)?;
+                if results.is_empty() {
+                    // void builtins (print, stop targets) return empty; DML
+                    // allows using them only as statements.
+                    Ok(Value::Bool(true))
+                } else {
+                    Ok(results.remove(0))
+                }
+            }
+        }
+    }
+
+    /// Scalar/matrix dispatch for binary operators.
+    fn binary_value_op(&self, op: AstBinOp, l: &Value, r: &Value, pos: &Pos) -> Result<Value> {
+        // String concatenation with `+`.
+        if op == AstBinOp::Add {
+            if let (Value::Str(a), b) = (l, r) {
+                return Ok(Value::Str(format!("{a}{}", b.to_display_string())));
+            }
+            if let (a, Value::Str(b)) = (l, r) {
+                return Ok(Value::Str(format!("{}{b}", a.to_display_string())));
+            }
+        }
+        if op == AstBinOp::Eq {
+            if let (Value::Str(a), Value::Str(b)) = (l, r) {
+                return Ok(Value::Bool(a == b));
+            }
+        }
+        if op == AstBinOp::Neq {
+            if let (Value::Str(a), Value::Str(b)) = (l, r) {
+                return Ok(Value::Bool(a != b));
+            }
+        }
+        if l.is_matrix() || r.is_matrix() {
+            return self.binary_matrix_op(op, l, r, pos);
+        }
+        // Pure scalar arithmetic; ints stay ints where DML does.
+        let bop = ast_to_binop(op);
+        if let (Value::Int(a), Value::Int(b)) = (l, r) {
+            match op {
+                AstBinOp::Add => return Ok(Value::Int(a + b)),
+                AstBinOp::Sub => return Ok(Value::Int(a - b)),
+                AstBinOp::Mul => return Ok(Value::Int(a * b)),
+                AstBinOp::IntDiv if *b != 0 => return Ok(Value::Int(a.div_euclid(*b))),
+                AstBinOp::Mod if *b != 0 => return Ok(Value::Int(a.rem_euclid(*b))),
+                _ => {}
+            }
+        }
+        let a = l.as_double()?;
+        let b = r.as_double()?;
+        let out = bop.apply(a, b);
+        match op {
+            AstBinOp::Eq
+            | AstBinOp::Neq
+            | AstBinOp::Lt
+            | AstBinOp::Le
+            | AstBinOp::Gt
+            | AstBinOp::Ge
+            | AstBinOp::And
+            | AstBinOp::Or => Ok(Value::Bool(out != 0.0)),
+            _ => Ok(Value::Double(out)),
+        }
+    }
+
+    fn binary_matrix_op(&self, op: AstBinOp, l: &Value, r: &Value, pos: &Pos) -> Result<Value> {
+        if op == AstBinOp::MatMul {
+            let (a, b) = (l.as_matrix()?, r.as_matrix()?);
+            return Ok(Value::Matrix(self.dispatch_matmult(a, b)?));
+        }
+        let bop = ast_to_binop(op);
+        let out = match (l, r) {
+            (Value::Matrix(a), Value::Matrix(b)) => elementwise::binary(a, b, bop)?,
+            (Value::Matrix(a), other) => elementwise::scalar_op(a, other.as_double()?, bop, false)?,
+            (other, Value::Matrix(b)) => elementwise::scalar_op(b, other.as_double()?, bop, true)?,
+            _ => {
+                return Err(DmlError::rt(format!(
+                    "line {}: invalid operands for {op:?}",
+                    pos.line
+                )))
+            }
+        };
+        Ok(Value::Matrix(out))
+    }
+
+    /// Heavy-operator dispatch: CP vs distributed vs accelerator, driven by
+    /// worst-case memory estimates against the driver budget (paper §3).
+    pub fn dispatch_matmult(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        // Accelerator first: compiled artifacts handle specific shapes.
+        if let Some(accel) = &self.accel {
+            if let Some(out) = accel.try_matmult(a, b)? {
+                return Ok(out);
+            }
+        }
+        let est = crate::hop::estimate::matmult_mem_estimate(a, b);
+        if est > self.config.driver_memory {
+            if let Some(cluster) = &self.cluster {
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: %*% ({}x{} @ {}x{}) -> DIST (est {} B > budget {} B)",
+                        a.rows(),
+                        a.cols(),
+                        b.rows(),
+                        b.cols(),
+                        est,
+                        self.config.driver_memory
+                    ));
+                }
+                return crate::runtime::dist::ops::matmult(cluster, a, b);
+            }
+            return Err(DmlError::rt(format!(
+                "matmult memory estimate {est} B exceeds driver budget and the distributed \
+                 backend is disabled"
+            )));
+        }
+        mult::matmult(a, b)
+    }
+
+    // ---- calls ---------------------------------------------------------
+
+    /// Call a function or builtin; returns all results (multi-return).
+    pub fn call_multi(
+        &self,
+        namespace: Option<&str>,
+        name: &str,
+        args: &[Arg],
+        scope: &mut Scope,
+        ctx: &Ctx,
+    ) -> Result<Vec<Value>> {
+        // Resolve user functions: explicit ns, local, then current ns.
+        let func = if let Some(ns) = namespace {
+            self.bundle.resolve(Some(ns), name).cloned().map(|f| (f, Some(ns.to_string())))
+        } else {
+            self.bundle
+                .resolve(None, name)
+                .cloned()
+                .map(|f| (f, None))
+                .or_else(|| {
+                    ctx.namespace.as_ref().and_then(|ns| {
+                        self.bundle
+                            .resolve(Some(ns), name)
+                            .cloned()
+                            .map(|f| (f, Some(ns.clone())))
+                    })
+                })
+        };
+        if let Some((f, fns)) = func {
+            return self.call_user_function(&f, fns, args, scope, ctx);
+        }
+        if namespace.is_none() {
+            // Builtins: evaluate args (keeping names) and dispatch.
+            let mut eargs = Vec::with_capacity(args.len());
+            for a in args {
+                eargs.push((a.name.clone(), self.eval(&a.value, scope, ctx)?));
+            }
+            return builtins::call_builtin(self, name, &eargs);
+        }
+        Err(DmlError::rt(format!(
+            "unknown function '{}{name}'",
+            namespace.map(|n| format!("{n}::")).unwrap_or_default()
+        )))
+    }
+
+    fn call_user_function(
+        &self,
+        f: &FunctionDef,
+        fns: Option<String>,
+        args: &[Arg],
+        scope: &mut Scope,
+        ctx: &Ctx,
+    ) -> Result<Vec<Value>> {
+        if ctx.depth >= MAX_CALL_DEPTH {
+            return Err(DmlError::rt(format!(
+                "maximum call depth {MAX_CALL_DEPTH} exceeded in '{}'",
+                f.name
+            )));
+        }
+        let mut frame: Scope = HashMap::new();
+        let fctx = Ctx { namespace: fns, depth: ctx.depth + 1 };
+        // Positional then named arguments.
+        let mut positional = 0usize;
+        for a in args {
+            match &a.name {
+                None => {
+                    if positional >= f.params.len() {
+                        return Err(DmlError::rt(format!(
+                            "too many arguments to '{}' (takes {})",
+                            f.name,
+                            f.params.len()
+                        )));
+                    }
+                    let v = self.eval(&a.value, scope, ctx)?;
+                    frame.insert(f.params[positional].name.clone(), v);
+                    positional += 1;
+                }
+                Some(n) => {
+                    if !f.params.iter().any(|p| &p.name == n) {
+                        return Err(DmlError::rt(format!(
+                            "unknown named argument '{n}' for '{}'",
+                            f.name
+                        )));
+                    }
+                    let v = self.eval(&a.value, scope, ctx)?;
+                    frame.insert(n.clone(), v);
+                }
+            }
+        }
+        // Defaults for unbound params.
+        for p in &f.params {
+            if !frame.contains_key(&p.name) {
+                match &p.default {
+                    Some(d) => {
+                        let v = self.eval(d, &mut frame.clone(), &fctx)?;
+                        frame.insert(p.name.clone(), v);
+                    }
+                    None => {
+                        return Err(DmlError::rt(format!(
+                            "missing argument '{}' in call to '{}'",
+                            p.name, f.name
+                        )))
+                    }
+                }
+            }
+        }
+        self.exec_block(&f.body, &mut frame, &fctx)?;
+        let mut out = Vec::with_capacity(f.returns.len());
+        for r in &f.returns {
+            let v = frame.remove(&r.name).ok_or_else(|| {
+                DmlError::rt(format!(
+                    "function '{}' did not assign return variable '{}'",
+                    f.name, r.name
+                ))
+            })?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+fn ast_to_binop(op: AstBinOp) -> BinOp {
+    match op {
+        AstBinOp::Add => BinOp::Add,
+        AstBinOp::Sub => BinOp::Sub,
+        AstBinOp::Mul => BinOp::Mul,
+        AstBinOp::Div => BinOp::Div,
+        AstBinOp::Pow => BinOp::Pow,
+        AstBinOp::Mod => BinOp::Mod,
+        AstBinOp::IntDiv => BinOp::IntDiv,
+        AstBinOp::Eq => BinOp::Eq,
+        AstBinOp::Neq => BinOp::Neq,
+        AstBinOp::Lt => BinOp::Lt,
+        AstBinOp::Le => BinOp::Le,
+        AstBinOp::Gt => BinOp::Gt,
+        AstBinOp::Ge => BinOp::Ge,
+        AstBinOp::And => BinOp::And,
+        AstBinOp::Or => BinOp::Or,
+        AstBinOp::MatMul => unreachable!("matmul handled separately"),
+    }
+}

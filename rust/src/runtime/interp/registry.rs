@@ -1,0 +1,124 @@
+//! Script registry: resolves `source("path") as ns` imports, parses the
+//! referenced files (searching the configured script paths), and builds a
+//! validated [`Bundle`]. Sourced files may source further files; imports
+//! are resolved transitively with cycle detection.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+
+use crate::conf::SystemConfig;
+use crate::dml::ast::Program;
+use crate::dml::parser::parse;
+use crate::dml::validate::Bundle;
+use crate::util::error::{DmlError, Result};
+
+/// Build a [`Bundle`] for a parsed main program, loading its imports.
+pub fn build_bundle(main: Program, config: &SystemConfig) -> Result<Bundle> {
+    let mut bundle = Bundle { main, namespaces: HashMap::new() };
+    let mut loading: HashSet<String> = HashSet::new();
+    let imports = bundle.main.imports.clone();
+    for imp in &imports {
+        load_namespace(&imp.path, &imp.namespace, config, &mut bundle, &mut loading)?;
+    }
+    Ok(bundle)
+}
+
+fn load_namespace(
+    path: &str,
+    ns: &str,
+    config: &SystemConfig,
+    bundle: &mut Bundle,
+    loading: &mut HashSet<String>,
+) -> Result<()> {
+    if bundle.namespaces.contains_key(ns) {
+        return Ok(()); // already loaded under this namespace
+    }
+    if !loading.insert(path.to_string()) {
+        return Err(DmlError::val(format!("cyclic source() import of '{path}'")));
+    }
+    let text = read_script(path, config)?;
+    let prog = parse(&text).map_err(|e| {
+        DmlError::val(format!("while parsing sourced file '{path}': {e}"))
+    })?;
+    // Register this namespace's functions.
+    let mut funcs = HashMap::new();
+    for f in prog.functions {
+        funcs.insert(f.name.clone(), f);
+    }
+    bundle.namespaces.insert(ns.to_string(), funcs);
+    // Transitive imports: loaded under their own namespace names; function
+    // calls inside the sourced file resolve through those namespaces.
+    for imp in &prog.imports {
+        load_namespace(&imp.path, &imp.namespace, config, bundle, loading)?;
+    }
+    loading.remove(path);
+    Ok(())
+}
+
+/// Locate and read a script by trying each configured search path.
+pub fn read_script(path: &str, config: &SystemConfig) -> Result<String> {
+    for base in &config.script_paths {
+        let candidate: PathBuf = if Path::new(path).is_absolute() {
+            PathBuf::from(path)
+        } else {
+            base.join(path)
+        };
+        if candidate.is_file() {
+            return Ok(std::fs::read_to_string(&candidate)?);
+        }
+    }
+    Err(DmlError::val(format!(
+        "source: script '{path}' not found in search paths {:?}",
+        config.script_paths
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config_with_tmp(dir: &Path) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.script_paths.insert(0, dir.to_path_buf());
+        c
+    }
+
+    #[test]
+    fn loads_imports_transitively() {
+        let dir = std::env::temp_dir().join(format!("sysml_reg_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("lib")).unwrap();
+        std::fs::write(
+            dir.join("lib/a.dml"),
+            "source(\"lib/b.dml\") as b\nfa = function(int x) return (int y) { y = b::fb(x) + 1 }",
+        )
+        .unwrap();
+        std::fs::write(dir.join("lib/b.dml"), "fb = function(int x) return (int y) { y = x * 2 }")
+            .unwrap();
+        let main = parse("source(\"lib/a.dml\") as a\nz = a::fa(3)").unwrap();
+        let bundle = build_bundle(main, &config_with_tmp(&dir)).unwrap();
+        assert!(bundle.resolve(Some("a"), "fa").is_some());
+        assert!(bundle.resolve(Some("b"), "fb").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_script_errors() {
+        let main = parse("source(\"no/such/file.dml\") as x").unwrap();
+        assert!(build_bundle(main, &SystemConfig::default()).is_err());
+    }
+
+    #[test]
+    fn cyclic_imports_terminate() {
+        // Mutually-sourcing files must not recurse forever; the second
+        // visit of an already-registered namespace is a no-op.
+        let dir = std::env::temp_dir().join(format!("sysml_cyc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("c1.dml"), "source(\"c2.dml\") as c2").unwrap();
+        std::fs::write(dir.join("c2.dml"), "source(\"c1.dml\") as c1").unwrap();
+        let main = parse("source(\"c1.dml\") as c1").unwrap();
+        let bundle = build_bundle(main, &config_with_tmp(&dir)).unwrap();
+        assert!(bundle.namespaces.contains_key("c1"));
+        assert!(bundle.namespaces.contains_key("c2"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

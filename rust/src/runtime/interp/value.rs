@@ -1,0 +1,162 @@
+//! Runtime values for DML variables.
+
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+
+/// A DML runtime value.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Double(f64),
+    Int(i64),
+    Bool(bool),
+    Str(String),
+    Matrix(Matrix),
+    /// List literal (only flows into builtin shape arguments).
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// Coerce to f64 (scalars and 1x1 matrices).
+    pub fn as_double(&self) -> Result<f64> {
+        match self {
+            Value::Double(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            Value::Bool(b) => Ok(*b as i32 as f64),
+            Value::Matrix(m) if m.shape() == (1, 1) => Ok(m.get(0, 0)),
+            other => Err(DmlError::rt(format!("expected scalar, found {}", other.type_name()))),
+        }
+    }
+
+    /// Coerce to integer (truncating doubles, like DML's implicit casts in
+    /// loop bounds and index expressions).
+    pub fn as_int(&self) -> Result<i64> {
+        Ok(self.as_double()? as i64)
+    }
+
+    /// Coerce to boolean.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Ok(other.as_double()? != 0.0),
+        }
+    }
+
+    /// Borrow as a matrix; errors on scalars (DML requires as.matrix).
+    pub fn as_matrix(&self) -> Result<&Matrix> {
+        match self {
+            Value::Matrix(m) => Ok(m),
+            other => Err(DmlError::rt(format!("expected matrix, found {}", other.type_name()))),
+        }
+    }
+
+    /// Matrix, scalar promoted to 1x1 (for cell-op operands).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self {
+            Value::Matrix(m) => Ok(m.clone()),
+            other => Ok(Matrix::scalar(other.as_double()?)),
+        }
+    }
+
+    /// String representation for print/toString.
+    pub fn to_display_string(&self) -> String {
+        match self {
+            Value::Double(v) => format_double(*v),
+            Value::Int(v) => v.to_string(),
+            Value::Bool(b) => if *b { "TRUE" } else { "FALSE" }.to_string(),
+            Value::Str(s) => s.clone(),
+            Value::Matrix(m) => {
+                let (r, c) = m.shape();
+                let mut out = String::new();
+                for i in 0..r.min(10) {
+                    let cells: Vec<String> =
+                        (0..c.min(12)).map(|j| format_double(m.get(i, j))).collect();
+                    out.push_str(&cells.join(" "));
+                    if c > 12 {
+                        out.push_str(" ...");
+                    }
+                    out.push('\n');
+                }
+                if r > 10 {
+                    out.push_str(&format!("... ({r}x{c} matrix)\n"));
+                }
+                out
+            }
+            Value::List(items) => {
+                let parts: Vec<String> = items.iter().map(|v| v.to_display_string()).collect();
+                format!("[{}]", parts.join(", "))
+            }
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Double(_) => "double",
+            Value::Int(_) => "int",
+            Value::Bool(_) => "boolean",
+            Value::Str(_) => "string",
+            Value::Matrix(_) => "matrix",
+            Value::List(_) => "list",
+        }
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        matches!(self, Value::Matrix(_))
+    }
+
+    /// List of usize (shape arguments like input_shape=[N,C,H,W]).
+    pub fn as_usize_list(&self) -> Result<Vec<usize>> {
+        match self {
+            Value::List(items) => items.iter().map(|v| Ok(v.as_int()? as usize)).collect(),
+            other => Err(DmlError::rt(format!(
+                "expected list (e.g. [N,C,H,W]), found {}",
+                other.type_name()
+            ))),
+        }
+    }
+}
+
+/// Format a double like DML's print (integral values without ".0...").
+pub fn format_double(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_coercions() {
+        assert_eq!(Value::Int(3).as_double().unwrap(), 3.0);
+        assert_eq!(Value::Double(2.5).as_int().unwrap(), 2);
+        assert!(Value::Bool(true).as_bool().unwrap());
+        assert!(Value::Double(1.0).as_bool().unwrap());
+        assert!(!Value::Double(0.0).as_bool().unwrap());
+        assert!(Value::Str("x".into()).as_double().is_err());
+    }
+
+    #[test]
+    fn one_by_one_matrix_is_scalar_coercible() {
+        let v = Value::Matrix(Matrix::scalar(7.0));
+        assert_eq!(v.as_double().unwrap(), 7.0);
+        let m = Value::Matrix(Matrix::zeros(2, 2));
+        assert!(m.as_double().is_err());
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Value::Double(3.0).to_display_string(), "3");
+        assert_eq!(Value::Bool(false).to_display_string(), "FALSE");
+        assert_eq!(Value::Int(-2).to_display_string(), "-2");
+    }
+
+    #[test]
+    fn usize_list() {
+        let l = Value::List(vec![Value::Int(1), Value::Int(28)]);
+        assert_eq!(l.as_usize_list().unwrap(), vec![1, 28]);
+        assert!(Value::Int(1).as_usize_list().is_err());
+    }
+}

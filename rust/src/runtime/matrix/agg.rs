@@ -1,0 +1,285 @@
+//! Aggregations: full, row-wise and column-wise reductions, index
+//! aggregates, and cumulative aggregates.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::Matrix;
+use crate::util::metrics;
+
+/// Reduction kinds shared by full/row/col aggregates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggOp {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    /// Sum of squares (used by var/sd and l2 norms).
+    SumSq,
+    /// Product of all cells.
+    Prod,
+}
+
+impl AggOp {
+    fn init(self) -> f64 {
+        match self {
+            AggOp::Sum | AggOp::Mean | AggOp::SumSq => 0.0,
+            AggOp::Min => f64::INFINITY,
+            AggOp::Max => f64::NEG_INFINITY,
+            AggOp::Prod => 1.0,
+        }
+    }
+    #[inline]
+    fn fold(self, acc: f64, v: f64) -> f64 {
+        match self {
+            AggOp::Sum | AggOp::Mean => acc + v,
+            AggOp::SumSq => acc + v * v,
+            AggOp::Min => acc.min(v),
+            AggOp::Max => acc.max(v),
+            AggOp::Prod => acc * v,
+        }
+    }
+    /// Does skipping zeros change the result (i.e. not sparse-safe)?
+    fn needs_zeros(self) -> bool {
+        matches!(self, AggOp::Min | AggOp::Max | AggOp::Prod)
+    }
+}
+
+/// Full aggregate over all cells.
+pub fn full_agg(m: &Matrix, op: AggOp) -> f64 {
+    metrics::global().add_flops(m.len() as u64);
+    let n = m.len() as f64;
+    let mut acc = op.init();
+    match m {
+        Matrix::Dense(d) => {
+            for v in &d.data {
+                acc = op.fold(acc, *v);
+            }
+        }
+        Matrix::Sparse(s) => {
+            for v in &s.values {
+                acc = op.fold(acc, *v);
+            }
+            if op.needs_zeros() && s.nnz() < m.len() {
+                acc = op.fold(acc, 0.0);
+                if op == AggOp::Prod {
+                    acc = 0.0; // any implicit zero nullifies the product
+                }
+            }
+        }
+    }
+    if op == AggOp::Mean {
+        acc / n.max(1.0)
+    } else {
+        acc
+    }
+}
+
+/// Row-wise aggregate → n×1 column vector.
+pub fn row_agg(m: &Matrix, op: AggOp) -> Matrix {
+    metrics::global().add_flops(m.len() as u64);
+    let (rows, cols) = m.shape();
+    let mut out = DenseMatrix::zeros(rows, 1);
+    match m {
+        Matrix::Dense(d) => {
+            for r in 0..rows {
+                let mut acc = op.init();
+                for v in d.row(r) {
+                    acc = op.fold(acc, *v);
+                }
+                out.data[r] = finish(op, acc, cols);
+            }
+        }
+        Matrix::Sparse(s) => {
+            for r in 0..rows {
+                let (idx, vals) = s.row(r);
+                let mut acc = op.init();
+                for v in vals {
+                    acc = op.fold(acc, *v);
+                }
+                if op.needs_zeros() && idx.len() < cols {
+                    acc = op.fold(acc, 0.0);
+                    if op == AggOp::Prod {
+                        acc = 0.0;
+                    }
+                }
+                out.data[r] = finish(op, acc, cols);
+            }
+        }
+    }
+    Matrix::Dense(out)
+}
+
+/// Column-wise aggregate → 1×m row vector.
+pub fn col_agg(m: &Matrix, op: AggOp) -> Matrix {
+    metrics::global().add_flops(m.len() as u64);
+    let (rows, cols) = m.shape();
+    let mut acc: Vec<f64> = vec![op.init(); cols];
+    let mut counts = vec![0usize; if op.needs_zeros() { cols } else { 0 }];
+    match m {
+        Matrix::Dense(d) => {
+            for r in 0..rows {
+                for (c, v) in d.row(r).iter().enumerate() {
+                    acc[c] = op.fold(acc[c], *v);
+                }
+            }
+        }
+        Matrix::Sparse(s) => {
+            for r in 0..rows {
+                let (idx, vals) = s.row(r);
+                for (c, v) in idx.iter().zip(vals) {
+                    acc[*c as usize] = op.fold(acc[*c as usize], *v);
+                    if op.needs_zeros() {
+                        counts[*c as usize] += 1;
+                    }
+                }
+            }
+            if op.needs_zeros() {
+                for c in 0..cols {
+                    if counts[c] < rows {
+                        acc[c] = op.fold(acc[c], 0.0);
+                        if op == AggOp::Prod {
+                            acc[c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let data: Vec<f64> = acc.into_iter().map(|a| finish(op, a, rows)).collect();
+    Matrix::Dense(DenseMatrix::from_vec(1, cols, data).unwrap())
+}
+
+#[inline]
+fn finish(op: AggOp, acc: f64, n: usize) -> f64 {
+    if op == AggOp::Mean {
+        acc / n.max(1) as f64
+    } else {
+        acc
+    }
+}
+
+/// rowIndexMax: 1-based index of the max entry per row (DML semantics).
+pub fn row_index_max(m: &Matrix) -> Matrix {
+    let (rows, cols) = m.shape();
+    let d = m.to_dense();
+    let mut out = DenseMatrix::zeros(rows, 1);
+    for r in 0..rows {
+        let row = d.row(r);
+        let mut best = 0usize;
+        for c in 1..cols {
+            if row[c] > row[best] {
+                best = c;
+            }
+        }
+        out.data[r] = (best + 1) as f64;
+    }
+    Matrix::Dense(out)
+}
+
+/// Trace of a square matrix.
+pub fn trace(m: &Matrix) -> f64 {
+    let n = m.rows().min(m.cols());
+    (0..n).map(|i| m.get(i, i)).sum()
+}
+
+/// Column-wise variance (1×m), using the two-pass algorithm.
+pub fn col_var(m: &Matrix) -> Matrix {
+    let (rows, cols) = m.shape();
+    let means = col_agg(m, AggOp::Mean);
+    let d = m.to_dense();
+    let mut acc = vec![0.0f64; cols];
+    for r in 0..rows {
+        for (c, v) in d.row(r).iter().enumerate() {
+            let dv = v - means.get(0, c);
+            acc[c] += dv * dv;
+        }
+    }
+    let denom = (rows.max(2) - 1) as f64;
+    let data = acc.into_iter().map(|a| a / denom).collect();
+    Matrix::Dense(DenseMatrix::from_vec(1, cols, data).unwrap())
+}
+
+/// Cumulative column-wise sum (cumsum, DML semantics: along rows).
+pub fn cumsum(m: &Matrix) -> Matrix {
+    let (rows, cols) = m.shape();
+    let d = m.to_dense();
+    let mut out = DenseMatrix::zeros(rows, cols);
+    let mut acc = vec![0.0f64; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            acc[c] += d.get(r, c);
+            out.set(r, c, acc[c]);
+        }
+    }
+    Matrix::Dense(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Matrix {
+        Matrix::from_rows(&[&[1.0, -2.0, 3.0], &[4.0, 0.0, -6.0]])
+    }
+
+    #[test]
+    fn full_aggregates() {
+        assert_eq!(full_agg(&m(), AggOp::Sum), 0.0);
+        assert_eq!(full_agg(&m(), AggOp::Min), -6.0);
+        assert_eq!(full_agg(&m(), AggOp::Max), 4.0);
+        assert_eq!(full_agg(&m(), AggOp::Mean), 0.0);
+        assert_eq!(full_agg(&m(), AggOp::SumSq), 1.0 + 4.0 + 9.0 + 16.0 + 36.0);
+    }
+
+    #[test]
+    fn sparse_min_accounts_for_implicit_zeros() {
+        let s = Matrix::from_rows(&[&[5.0, 0.0], &[0.0, 7.0]]).into_sparse_format();
+        assert_eq!(full_agg(&s, AggOp::Min), 0.0);
+        assert_eq!(full_agg(&s, AggOp::Max), 7.0);
+        assert_eq!(full_agg(&s, AggOp::Prod), 0.0);
+    }
+
+    #[test]
+    fn row_col_aggregates() {
+        assert_eq!(row_agg(&m(), AggOp::Sum), Matrix::from_rows(&[&[2.0], &[-2.0]]));
+        assert_eq!(col_agg(&m(), AggOp::Sum), Matrix::from_rows(&[&[5.0, -2.0, -3.0]]));
+        assert_eq!(row_agg(&m(), AggOp::Max), Matrix::from_rows(&[&[3.0], &[4.0]]));
+        assert_eq!(col_agg(&m(), AggOp::Min), Matrix::from_rows(&[&[1.0, -2.0, -6.0]]));
+        assert_eq!(row_agg(&m(), AggOp::Mean), Matrix::from_rows(&[&[2.0 / 3.0], &[-2.0 / 3.0]]));
+    }
+
+    #[test]
+    fn sparse_row_col_agree_with_dense() {
+        let d = Matrix::from_rows(&[&[0.0, 2.0, 0.0], &[1.0, 0.0, 0.0], &[0.0, 0.0, 0.0]]);
+        let s = d.clone().into_sparse_format();
+        for op in [AggOp::Sum, AggOp::Min, AggOp::Max, AggOp::Mean, AggOp::SumSq] {
+            assert_eq!(row_agg(&d, op), row_agg(&s, op), "{op:?} row");
+            assert_eq!(col_agg(&d, op), col_agg(&s, op), "{op:?} col");
+            assert_eq!(full_agg(&d, op), full_agg(&s, op), "{op:?} full");
+        }
+    }
+
+    #[test]
+    fn row_index_max_is_one_based() {
+        let x = Matrix::from_rows(&[&[0.1, 0.7, 0.2], &[0.9, 0.05, 0.05]]);
+        assert_eq!(row_index_max(&x), Matrix::from_rows(&[&[2.0], &[1.0]]));
+    }
+
+    #[test]
+    fn trace_square() {
+        let x = Matrix::from_rows(&[&[1.0, 9.0], &[9.0, 2.0]]);
+        assert_eq!(trace(&x), 3.0);
+    }
+
+    #[test]
+    fn col_var_matches_manual() {
+        let x = Matrix::from_rows(&[&[1.0], &[3.0], &[5.0]]);
+        let v = col_var(&x);
+        assert!((v.get(0, 0) - 4.0).abs() < 1e-12); // var([1,3,5]) = 4
+    }
+
+    #[test]
+    fn cumsum_columns() {
+        let x = Matrix::from_rows(&[&[1.0, 1.0], &[2.0, 3.0]]);
+        assert_eq!(cumsum(&x), Matrix::from_rows(&[&[1.0, 1.0], &[3.0, 4.0]]));
+    }
+}

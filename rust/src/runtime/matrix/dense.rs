@@ -1,0 +1,183 @@
+//! Dense row-major matrix block (the CP dense physical representation).
+
+use crate::util::error::{DmlError, Result};
+
+/// Dense, row-major, f64 matrix. DML's value type is `double`, matching
+/// SystemML's `MatrixBlock` dense layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Allocate a zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Constant-filled matrix.
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        DenseMatrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from a row-major vec; length must equal rows*cols.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(DmlError::rt(format!(
+                "dense from_vec: {}x{} needs {} values, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    /// Build from nested rows (used by tests).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        DenseMatrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Count non-zero entries (exact).
+    pub fn count_nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Transpose with cache-friendly tiling.
+    pub fn transpose(&self) -> DenseMatrix {
+        const TILE: usize = 32;
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        for rb in (0..self.rows).step_by(TILE) {
+            for cb in (0..self.cols).step_by(TILE) {
+                let rmax = (rb + TILE).min(self.rows);
+                let cmax = (cb + TILE).min(self.cols);
+                for r in rb..rmax {
+                    for c in cb..cmax {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract the sub-matrix rows [rl, ru) × cols [cl, cu) (0-based, exclusive).
+    pub fn slice(&self, rl: usize, ru: usize, cl: usize, cu: usize) -> Result<DenseMatrix> {
+        if ru > self.rows || cu > self.cols || rl > ru || cl > cu {
+            return Err(DmlError::rt(format!(
+                "slice [{rl}:{ru},{cl}:{cu}] out of bounds for {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut out = DenseMatrix::zeros(ru - rl, cu - cl);
+        for (or, r) in (rl..ru).enumerate() {
+            let src = &self.data[r * self.cols + cl..r * self.cols + cu];
+            out.row_mut(or).copy_from_slice(src);
+        }
+        Ok(out)
+    }
+
+    /// In-place left-indexing assignment: self[rl.., cl..] = src.
+    pub fn assign(&mut self, rl: usize, cl: usize, src: &DenseMatrix) -> Result<()> {
+        if rl + src.rows > self.rows || cl + src.cols > self.cols {
+            return Err(DmlError::rt(format!(
+                "assign of {}x{} at ({rl},{cl}) out of bounds for {}x{}",
+                src.rows, src.cols, self.rows, self.cols
+            )));
+        }
+        for r in 0..src.rows {
+            let dst = &mut self.data[(rl + r) * self.cols + cl..(rl + r) * self.cols + cl + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        let m = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = DenseMatrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_large_tiled() {
+        let mut m = DenseMatrix::zeros(70, 45);
+        for r in 0..70 {
+            for c in 0..45 {
+                m.set(r, c, (r * 1000 + c) as f64);
+            }
+        }
+        let t = m.transpose();
+        for r in 0..70 {
+            for c in 0..45 {
+                assert_eq!(t.get(c, r), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn slice_and_assign() {
+        let m = DenseMatrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &[7.0, 8.0, 9.0]]);
+        let s = m.slice(1, 3, 0, 2).unwrap();
+        assert_eq!(s, DenseMatrix::from_rows(&[&[4.0, 5.0], &[7.0, 8.0]]));
+        let mut m2 = DenseMatrix::zeros(3, 3);
+        m2.assign(1, 1, &DenseMatrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]])).unwrap();
+        assert_eq!(m2.get(2, 2), 4.0);
+        assert_eq!(m2.get(0, 0), 0.0);
+        assert!(m.slice(0, 4, 0, 1).is_err());
+    }
+
+    #[test]
+    fn nnz_counts_zeros() {
+        let m = DenseMatrix::from_rows(&[&[0.0, 1.0], &[2.0, 0.0]]);
+        assert_eq!(m.count_nnz(), 2);
+    }
+}

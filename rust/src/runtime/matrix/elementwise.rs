@@ -1,0 +1,452 @@
+//! Elementwise (cell-wise) binary, unary and scalar operators, including
+//! row/column vector broadcasting — the cell-op subsystem of the runtime.
+//!
+//! Sparse-safety drives the physical operator choice, exactly as in
+//! SystemML: a sparse-safe op (op(0,0)=0, e.g. `*`) over sparse inputs
+//! touches only non-zeros; non-sparse-safe ops (e.g. `+ 1`) densify.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::sparse::{SparseCoo, SparseCsr};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+/// Binary cell operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Min,
+    Max,
+    /// Comparison ops produce 0/1 matrices.
+    Eq,
+    Neq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// Logical ops treat nonzero as true.
+    And,
+    Or,
+    /// Integer-style modulus / integer division (DML %% and %/%).
+    Mod,
+    IntDiv,
+}
+
+impl BinOp {
+    /// Apply to two scalars.
+    #[inline]
+    pub fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Pow => a.powf(b),
+            BinOp::Min => a.min(b),
+            BinOp::Max => a.max(b),
+            BinOp::Eq => (a == b) as i32 as f64,
+            BinOp::Neq => (a != b) as i32 as f64,
+            BinOp::Lt => (a < b) as i32 as f64,
+            BinOp::Le => (a <= b) as i32 as f64,
+            BinOp::Gt => (a > b) as i32 as f64,
+            BinOp::Ge => (a >= b) as i32 as f64,
+            BinOp::And => ((a != 0.0) && (b != 0.0)) as i32 as f64,
+            BinOp::Or => ((a != 0.0) || (b != 0.0)) as i32 as f64,
+            BinOp::Mod => a - (a / b).floor() * b,
+            BinOp::IntDiv => (a / b).floor(),
+        }
+    }
+
+    /// Is op(0, 0) == 0 (so an all-zero cell stays zero)?
+    pub fn sparse_safe(self) -> bool {
+        self.apply(0.0, 0.0) == 0.0
+    }
+
+    /// Is op(x, 0) == 0 for all x (true for Mul, And)? Enables
+    /// intersection-style sparse-sparse execution.
+    pub fn zero_absorbing(self) -> bool {
+        matches!(self, BinOp::Mul | BinOp::And)
+    }
+}
+
+/// Unary cell operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnaryOp {
+    Exp,
+    Log,
+    Sqrt,
+    Abs,
+    Round,
+    Floor,
+    Ceil,
+    Sign,
+    Neg,
+    Not,
+    Sin,
+    Cos,
+    Tan,
+    Sigmoid,
+}
+
+impl UnaryOp {
+    #[inline]
+    pub fn apply(self, a: f64) -> f64 {
+        match self {
+            UnaryOp::Exp => a.exp(),
+            UnaryOp::Log => a.ln(),
+            UnaryOp::Sqrt => a.sqrt(),
+            UnaryOp::Abs => a.abs(),
+            UnaryOp::Round => a.round(),
+            UnaryOp::Floor => a.floor(),
+            UnaryOp::Ceil => a.ceil(),
+            UnaryOp::Sign => {
+                if a > 0.0 {
+                    1.0
+                } else if a < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            UnaryOp::Neg => -a,
+            UnaryOp::Not => (a == 0.0) as i32 as f64,
+            UnaryOp::Sin => a.sin(),
+            UnaryOp::Cos => a.cos(),
+            UnaryOp::Tan => a.tan(),
+            UnaryOp::Sigmoid => 1.0 / (1.0 + (-a).exp()),
+        }
+    }
+
+    /// op(0) == 0 → sparse inputs stay sparse.
+    pub fn sparse_safe(self) -> bool {
+        self.apply(0.0) == 0.0
+    }
+}
+
+/// How the rhs broadcasts against the lhs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Broadcast {
+    /// Same shape.
+    Cell,
+    /// rhs is a column vector (n×1) matched against lhs rows.
+    ColVector,
+    /// rhs is a row vector (1×m) matched against lhs cols.
+    RowVector,
+    /// rhs is 1×1.
+    Scalar,
+}
+
+fn broadcast_kind(lhs: &Matrix, rhs: &Matrix, op: &str) -> Result<Broadcast> {
+    let ((lr, lc), (rr, rc)) = (lhs.shape(), rhs.shape());
+    if (rr, rc) == (1, 1) && (lr, lc) != (1, 1) {
+        Ok(Broadcast::Scalar)
+    } else if lr == rr && lc == rc {
+        Ok(Broadcast::Cell)
+    } else if lr == rr && rc == 1 {
+        Ok(Broadcast::ColVector)
+    } else if lc == rc && rr == 1 {
+        Ok(Broadcast::RowVector)
+    } else {
+        Err(DmlError::DimMismatch {
+            op: op.to_string(),
+            lhs_rows: lr,
+            lhs_cols: lc,
+            rhs_rows: rr,
+            rhs_cols: rc,
+        })
+    }
+}
+
+/// Matrix ⊕ matrix with broadcasting (matches DML cell-op semantics).
+pub fn binary(lhs: &Matrix, rhs: &Matrix, op: BinOp) -> Result<Matrix> {
+    let kind = broadcast_kind(lhs, rhs, &format!("{op:?}"))?;
+    metrics::global().add_flops(lhs.len() as u64);
+    let out = match kind {
+        Broadcast::Scalar => return scalar_op(lhs, rhs.get(0, 0), op, false),
+        Broadcast::Cell => binary_cell(lhs, rhs, op),
+        Broadcast::ColVector | Broadcast::RowVector => {
+            // Vector broadcasts densify (outputs are usually dense anyway).
+            let ld = lhs.to_dense();
+            let mut out = DenseMatrix::zeros(ld.rows, ld.cols);
+            match kind {
+                Broadcast::ColVector => {
+                    for r in 0..ld.rows {
+                        let v = rhs.get(r, 0);
+                        let src = ld.row(r);
+                        let dst = out.row_mut(r);
+                        for c in 0..src.len() {
+                            dst[c] = op.apply(src[c], v);
+                        }
+                    }
+                }
+                Broadcast::RowVector => {
+                    let rv: Vec<f64> = (0..ld.cols).map(|c| rhs.get(0, c)).collect();
+                    for r in 0..ld.rows {
+                        let src = ld.row(r);
+                        let dst = out.row_mut(r);
+                        for c in 0..src.len() {
+                            dst[c] = op.apply(src[c], rv[c]);
+                        }
+                    }
+                }
+                _ => unreachable!(),
+            }
+            Matrix::Dense(out)
+        }
+    };
+    Ok(out.examine_and_convert())
+}
+
+/// Same-shape cell op with sparse-aware physical operators.
+fn binary_cell(lhs: &Matrix, rhs: &Matrix, op: BinOp) -> Matrix {
+    match (lhs, rhs) {
+        (Matrix::Sparse(a), Matrix::Sparse(b)) if op.zero_absorbing() => {
+            metrics::global().sparse_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            sparse_sparse_intersect(a, b, op)
+        }
+        (Matrix::Sparse(a), Matrix::Sparse(b)) if op.sparse_safe() => {
+            metrics::global().sparse_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            sparse_sparse_union(a, b, op)
+        }
+        _ => {
+            metrics::global().dense_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let a = lhs.to_dense();
+            let b = rhs.to_dense();
+            let mut out = DenseMatrix::zeros(a.rows, a.cols);
+            for i in 0..a.data.len() {
+                out.data[i] = op.apply(a.data[i], b.data[i]);
+            }
+            Matrix::Dense(out)
+        }
+    }
+}
+
+/// Sparse ∩ sparse for zero-absorbing ops (Mul/And): merge-join per row.
+fn sparse_sparse_intersect(a: &SparseCsr, b: &SparseCsr, op: BinOp) -> Matrix {
+    let mut out = SparseCoo::new(a.rows, a.cols);
+    for r in 0..a.rows {
+        let (ac, av) = a.row(r);
+        let (bc, bv) = b.row(r);
+        let (mut i, mut j) = (0, 0);
+        while i < ac.len() && j < bc.len() {
+            match ac[i].cmp(&bc[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    out.push(r, ac[i] as usize, op.apply(av[i], bv[j]));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    Matrix::Sparse(out.to_csr())
+}
+
+/// Sparse ∪ sparse for sparse-safe ops (Add/Sub/...): merge per row.
+fn sparse_sparse_union(a: &SparseCsr, b: &SparseCsr, op: BinOp) -> Matrix {
+    let mut out = SparseCoo::new(a.rows, a.cols);
+    for r in 0..a.rows {
+        let (ac, av) = a.row(r);
+        let (bc, bv) = b.row(r);
+        let (mut i, mut j) = (0, 0);
+        while i < ac.len() || j < bc.len() {
+            if j >= bc.len() || (i < ac.len() && ac[i] < bc[j]) {
+                out.push(r, ac[i] as usize, op.apply(av[i], 0.0));
+                i += 1;
+            } else if i >= ac.len() || bc[j] < ac[i] {
+                out.push(r, bc[j] as usize, op.apply(0.0, bv[j]));
+                j += 1;
+            } else {
+                out.push(r, ac[i] as usize, op.apply(av[i], bv[j]));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    Matrix::Sparse(out.to_csr())
+}
+
+/// Matrix ⊕ scalar. `swapped` means the scalar is the lhs (e.g. `2 - X`).
+pub fn scalar_op(m: &Matrix, s: f64, op: BinOp, swapped: bool) -> Result<Matrix> {
+    metrics::global().add_flops(m.len() as u64);
+    let f = |x: f64| if swapped { op.apply(s, x) } else { op.apply(x, s) };
+    // Sparse-safe iff f(0) == 0.
+    let out = match m {
+        Matrix::Sparse(sp) if f(0.0) == 0.0 => {
+            let mut out = sp.clone();
+            for v in out.values.iter_mut() {
+                *v = f(*v);
+            }
+            // f may map nonzeros to zero (e.g. X * 0): recompact via COO.
+            if out.values.iter().any(|v| *v == 0.0) {
+                let mut coo = SparseCoo::new(out.rows, out.cols);
+                for r in 0..out.rows {
+                    let (cols, vals) = out.row(r);
+                    for (c, v) in cols.iter().zip(vals) {
+                        coo.push(r, *c as usize, *v);
+                    }
+                }
+                Matrix::Sparse(coo.to_csr())
+            } else {
+                Matrix::Sparse(out)
+            }
+        }
+        _ => {
+            let d = m.to_dense();
+            let mut out = DenseMatrix::zeros(d.rows, d.cols);
+            for i in 0..d.data.len() {
+                out.data[i] = f(d.data[i]);
+            }
+            Matrix::Dense(out)
+        }
+    };
+    Ok(out.examine_and_convert())
+}
+
+/// Unary cell op.
+pub fn unary(m: &Matrix, op: UnaryOp) -> Matrix {
+    metrics::global().add_flops(m.len() as u64);
+    let out = match m {
+        Matrix::Sparse(sp) if op.sparse_safe() => {
+            let mut out = sp.clone();
+            for v in out.values.iter_mut() {
+                *v = op.apply(*v);
+            }
+            Matrix::Sparse(out)
+        }
+        _ => {
+            let d = m.to_dense();
+            let mut out = DenseMatrix::zeros(d.rows, d.cols);
+            for i in 0..d.data.len() {
+                out.data[i] = op.apply(d.data[i]);
+            }
+            Matrix::Dense(out)
+        }
+    };
+    out.examine_and_convert()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(rows: &[&[f64]]) -> Matrix {
+        Matrix::from_rows(rows)
+    }
+
+    #[test]
+    fn add_cell() {
+        let a = dense(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = dense(&[&[10.0, 20.0], &[30.0, 40.0]]);
+        let c = binary(&a, &b, BinOp::Add).unwrap();
+        assert_eq!(c, dense(&[&[11.0, 22.0], &[33.0, 44.0]]));
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let a = dense(&[&[1.0, 2.0]]);
+        let b = dense(&[&[1.0], &[2.0], &[3.0]]);
+        assert!(binary(&a, &b, BinOp::Add).is_err());
+    }
+
+    #[test]
+    fn broadcast_col_and_row_vectors() {
+        let a = dense(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let col = dense(&[&[10.0], &[20.0]]);
+        let row = dense(&[&[100.0, 200.0]]);
+        assert_eq!(binary(&a, &col, BinOp::Add).unwrap(), dense(&[&[11.0, 12.0], &[23.0, 24.0]]));
+        assert_eq!(
+            binary(&a, &row, BinOp::Add).unwrap(),
+            dense(&[&[101.0, 202.0], &[103.0, 204.0]])
+        );
+    }
+
+    #[test]
+    fn broadcast_scalar_1x1() {
+        let a = dense(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let s = Matrix::scalar(5.0);
+        assert_eq!(binary(&a, &s, BinOp::Mul).unwrap(), dense(&[&[5.0, 10.0], &[15.0, 20.0]]));
+    }
+
+    #[test]
+    fn sparse_sparse_mul_intersection() {
+        let a = dense(&[&[1.0, 0.0, 2.0], &[0.0, 3.0, 0.0]]).into_sparse_format();
+        let b = dense(&[&[4.0, 5.0, 0.0], &[0.0, 6.0, 7.0]]).into_sparse_format();
+        let c = binary(&a, &b, BinOp::Mul).unwrap();
+        assert_eq!(c, dense(&[&[4.0, 0.0, 0.0], &[0.0, 18.0, 0.0]]));
+    }
+
+    #[test]
+    fn sparse_sparse_add_union() {
+        let a = dense(&[&[1.0, 0.0], &[0.0, 2.0]]).into_sparse_format();
+        let b = dense(&[&[0.0, 3.0], &[0.0, 4.0]]).into_sparse_format();
+        let c = binary(&a, &b, BinOp::Add).unwrap();
+        assert_eq!(c, dense(&[&[1.0, 3.0], &[0.0, 6.0]]));
+    }
+
+    #[test]
+    fn non_sparse_safe_densifies() {
+        let a = dense(&[&[0.0, 1.0], &[0.0, 0.0]]).into_sparse_format();
+        let c = scalar_op(&a, 1.0, BinOp::Add, false).unwrap();
+        assert_eq!(c.get(0, 0), 1.0);
+        assert_eq!(c.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn scalar_swapped() {
+        let a = dense(&[&[1.0, 2.0]]);
+        let c = scalar_op(&a, 10.0, BinOp::Sub, true).unwrap(); // 10 - X
+        assert_eq!(c, dense(&[&[9.0, 8.0]]));
+    }
+
+    #[test]
+    fn scalar_mul_zero_recompacts() {
+        let a = dense(&[&[1.0, 0.0], &[0.0, 2.0]]).into_sparse_format();
+        let c = scalar_op(&a, 0.0, BinOp::Mul, false).unwrap();
+        assert_eq!(c.nnz(), 0);
+    }
+
+    #[test]
+    fn comparisons_produce_indicators() {
+        let a = dense(&[&[1.0, 5.0], &[3.0, 2.0]]);
+        let c = scalar_op(&a, 2.5, BinOp::Gt, false).unwrap();
+        assert_eq!(c, dense(&[&[0.0, 1.0], &[1.0, 0.0]]));
+    }
+
+    #[test]
+    fn unary_sparse_safe_stays_sparse() {
+        let a = dense(&[&[4.0, 0.0], &[0.0, 9.0]]).into_sparse_format();
+        let c = unary(&a, UnaryOp::Sqrt);
+        assert_eq!(c, dense(&[&[2.0, 0.0], &[0.0, 3.0]]));
+    }
+
+    #[test]
+    fn unary_exp_densifies() {
+        let a = dense(&[&[0.0, 1.0]]);
+        let c = unary(&a, UnaryOp::Exp);
+        assert!((c.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((c.get(0, 1) - std::f64::consts::E).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_and_relu_patterns() {
+        let a = dense(&[&[-1.0, 0.0, 1.0]]);
+        let s = unary(&a, UnaryOp::Sigmoid);
+        assert!((s.get(0, 1) - 0.5).abs() < 1e-12);
+        // relu = max(X, 0)
+        let r = scalar_op(&a, 0.0, BinOp::Max, false).unwrap();
+        assert_eq!(r, dense(&[&[0.0, 0.0, 1.0]]));
+    }
+
+    #[test]
+    fn mod_intdiv_match_dml_semantics() {
+        assert_eq!(BinOp::Mod.apply(7.0, 3.0), 1.0);
+        assert_eq!(BinOp::Mod.apply(-7.0, 3.0), 2.0); // R-style mod
+        assert_eq!(BinOp::IntDiv.apply(7.0, 2.0), 3.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! The matrix runtime: physical formats and operators.
+//!
+//! [`Matrix`] is the runtime value for DML's `matrix[double]`: a dense
+//! row-major block or a CSR sparse block, with the format chosen by the
+//! same sparsity rules SystemML uses (sparse iff sparsity < 0.4 and the
+//! matrix is large enough for the overhead to pay off). `nnz` is
+//! maintained by every operator so format decisions and sparse-safe FLOP
+//! accounting (paper §3 "Sparse Operations") stay exact.
+
+pub mod agg;
+pub mod dense;
+pub mod elementwise;
+pub mod mult;
+pub mod randgen;
+pub mod reorg;
+pub mod solve;
+pub mod sparse;
+
+use crate::util::error::{DmlError, Result};
+pub use dense::DenseMatrix;
+pub use sparse::{SparseCoo, SparseCsr, SparseMcsr};
+
+/// SystemML's sparsity turn point: below this density, sparse formats win.
+pub const SPARSITY_TURN_POINT: f64 = 0.4;
+/// Minimum cell count before the sparse format is considered at all.
+pub const MIN_SPARSE_CELLS: usize = 1024;
+
+/// Runtime matrix value: dense or CSR block.
+#[derive(Clone, Debug)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Sparse(SparseCsr),
+}
+
+impl Matrix {
+    // ---- constructors ------------------------------------------------
+
+    /// Zero matrix in the cheapest format (sparse if large).
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        if rows * cols >= MIN_SPARSE_CELLS {
+            Matrix::Sparse(SparseCsr::zeros(rows, cols))
+        } else {
+            Matrix::Dense(DenseMatrix::zeros(rows, cols))
+        }
+    }
+
+    /// Dense constant matrix (sparse zero-matrix if v == 0).
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Matrix {
+        if v == 0.0 {
+            Matrix::zeros(rows, cols)
+        } else {
+            Matrix::Dense(DenseMatrix::filled(rows, cols, v))
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Matrix> {
+        Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)?))
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Matrix {
+        Matrix::Dense(DenseMatrix::from_rows(rows))
+    }
+
+    /// 1x1 matrix (DML treats scalars and 1x1 matrices distinctly, but
+    /// `as.matrix` produces these).
+    pub fn scalar(v: f64) -> Matrix {
+        Matrix::Dense(DenseMatrix::from_vec(1, 1, vec![v]).unwrap())
+    }
+
+    // ---- shape / format ------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => d.rows,
+            Matrix::Sparse(s) => s.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => d.cols,
+            Matrix::Sparse(s) => s.cols,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Matrix::Sparse(_))
+    }
+
+    /// Exact number of non-zeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => d.count_nnz(),
+            Matrix::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// nnz / (rows*cols); 0 for empty matrices.
+    pub fn sparsity(&self) -> f64 {
+        if self.len() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.len() as f64
+        }
+    }
+
+    /// In-memory size estimate in bytes (mirrors SystemML's
+    /// MatrixBlock::estimateSizeInMemory, simplified).
+    pub fn size_in_bytes(&self) -> usize {
+        match self {
+            Matrix::Dense(d) => 8 * d.data.len() + 48,
+            Matrix::Sparse(s) => 8 * s.values.len() + 4 * s.col_idx.len() + 8 * s.row_ptr.len() + 48,
+        }
+    }
+
+    /// Would the sparse format be chosen for (rows, cols, nnz)?
+    pub fn prefers_sparse(rows: usize, cols: usize, nnz: usize) -> bool {
+        let cells = rows * cols;
+        cells >= MIN_SPARSE_CELLS && (nnz as f64) < SPARSITY_TURN_POINT * cells as f64
+    }
+
+    /// Re-examine nnz and convert to the preferred format.
+    pub fn examine_and_convert(self) -> Matrix {
+        let (r, c) = self.shape();
+        let nnz = self.nnz();
+        if Matrix::prefers_sparse(r, c, nnz) {
+            self.into_sparse_format()
+        } else {
+            self.into_dense_format()
+        }
+    }
+
+    /// Force dense representation.
+    pub fn into_dense_format(self) -> Matrix {
+        match self {
+            Matrix::Dense(_) => self,
+            Matrix::Sparse(s) => Matrix::Dense(s.to_dense()),
+        }
+    }
+
+    /// Force sparse (CSR) representation.
+    pub fn into_sparse_format(self) -> Matrix {
+        match self {
+            Matrix::Sparse(_) => self,
+            Matrix::Dense(d) => Matrix::Sparse(SparseCsr::from_dense(&d)),
+        }
+    }
+
+    /// Borrow as dense, converting if needed (clones when sparse).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Matrix::Dense(d) => d.clone(),
+            Matrix::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Borrow as CSR, converting if needed.
+    pub fn to_csr(&self) -> SparseCsr {
+        match self {
+            Matrix::Dense(d) => SparseCsr::from_dense(d),
+            Matrix::Sparse(s) => s.clone(),
+        }
+    }
+
+    /// Point lookup.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        match self {
+            Matrix::Dense(d) => d.get(r, c),
+            Matrix::Sparse(s) => s.get(r, c),
+        }
+    }
+
+    /// Copy out as a row-major Vec<f64>.
+    pub fn to_row_major_vec(&self) -> Vec<f64> {
+        match self {
+            Matrix::Dense(d) => d.data.clone(),
+            Matrix::Sparse(s) => s.to_dense().data,
+        }
+    }
+
+    /// Check dims match, else a DimMismatch error tagged with `op`.
+    pub fn check_same_dims(&self, other: &Matrix, op: &str) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(DmlError::DimMismatch {
+                op: op.to_string(),
+                lhs_rows: self.rows(),
+                lhs_cols: self.cols(),
+                rhs_rows: other.rows(),
+                rhs_cols: other.cols(),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl PartialEq for Matrix {
+    /// Value equality irrespective of physical format.
+    fn eq(&self, other: &Self) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        match (self, other) {
+            (Matrix::Dense(a), Matrix::Dense(b)) => a == b,
+            (Matrix::Sparse(a), Matrix::Sparse(b)) => a == b,
+            _ => self.to_row_major_vec() == other.to_row_major_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_decision_thresholds() {
+        assert!(!Matrix::prefers_sparse(10, 10, 1)); // too small
+        assert!(Matrix::prefers_sparse(100, 100, 100)); // 1% density
+        assert!(!Matrix::prefers_sparse(100, 100, 5000)); // 50% density
+    }
+
+    #[test]
+    fn examine_and_convert_switches_format() {
+        let mut d = DenseMatrix::zeros(64, 64);
+        d.set(0, 0, 1.0);
+        let m = Matrix::Dense(d).examine_and_convert();
+        assert!(m.is_sparse());
+        assert_eq!(m.nnz(), 1);
+
+        let dense = Matrix::filled(64, 64, 2.0).examine_and_convert();
+        assert!(!dense.is_sparse());
+    }
+
+    #[test]
+    fn equality_across_formats() {
+        let d = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let s = d.clone().into_sparse_format();
+        assert_eq!(d, s);
+    }
+
+    #[test]
+    fn size_in_bytes_sparse_smaller_when_sparse() {
+        let mut d = DenseMatrix::zeros(100, 100);
+        d.set(5, 5, 1.0);
+        let dense = Matrix::Dense(d);
+        let sparse = dense.clone().into_sparse_format();
+        assert!(sparse.size_in_bytes() < dense.size_in_bytes() / 10);
+    }
+}

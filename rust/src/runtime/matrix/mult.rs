@@ -1,0 +1,365 @@
+//! Matrix multiplication: the four physical operators (dense×dense,
+//! sparse×dense, dense×sparse, sparse×sparse) with selection by input
+//! formats, plus output-format decision from a sparsity estimate —
+//! mirroring SystemML's MatrixMult library (paper §3 Sparse Operations).
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::sparse::{SparseCoo, SparseCsr};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+/// Which physical matmult operator ran (exposed for tests/benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmOperator {
+    DenseDense,
+    SparseDense,
+    DenseSparse,
+    SparseSparse,
+}
+
+/// `lhs %*% rhs` with automatic physical-operator selection.
+pub fn matmult(lhs: &Matrix, rhs: &Matrix) -> Result<Matrix> {
+    Ok(matmult_traced(lhs, rhs)?.0)
+}
+
+/// Like [`matmult`] but also reports which operator was selected.
+pub fn matmult_traced(lhs: &Matrix, rhs: &Matrix) -> Result<(Matrix, MmOperator)> {
+    if lhs.cols() != rhs.rows() {
+        return Err(DmlError::DimMismatch {
+            op: "%*%".into(),
+            lhs_rows: lhs.rows(),
+            lhs_cols: lhs.cols(),
+            rhs_rows: rhs.rows(),
+            rhs_cols: rhs.cols(),
+        });
+    }
+    let m = metrics::global();
+    let (out, op) = match (lhs, rhs) {
+        (Matrix::Dense(a), Matrix::Dense(b)) => {
+            m.dense_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            (Matrix::Dense(mm_dense_dense(a, b)), MmOperator::DenseDense)
+        }
+        (Matrix::Sparse(a), Matrix::Dense(b)) => {
+            m.sparse_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            (Matrix::Dense(mm_sparse_dense(a, b)), MmOperator::SparseDense)
+        }
+        (Matrix::Dense(a), Matrix::Sparse(b)) => {
+            m.sparse_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            (Matrix::Dense(mm_dense_sparse(a, b)), MmOperator::DenseSparse)
+        }
+        (Matrix::Sparse(a), Matrix::Sparse(b)) => {
+            m.sparse_ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            (mm_sparse_sparse(a, b), MmOperator::SparseSparse)
+        }
+    };
+    Ok((out.examine_and_convert(), op))
+}
+
+/// Dense×dense: cache-blocked i-k-j kernel with 4-wide inner unrolling.
+/// This is the CP hot path; see EXPERIMENTS.md §Perf for the iteration log.
+pub fn mm_dense_dense(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    metrics::global().add_flops(2 * (m * k * n) as u64);
+    let mut c = DenseMatrix::zeros(m, n);
+    // Block sizes tuned on the benchmark VM (see EXPERIMENTS.md §Perf):
+    // the B panel (KB x NB x 8B = 192 KB) stays L2-resident, and the
+    // 2-row micro-kernel halves B traffic per FLOP.
+    const MB: usize = 64;
+    const KB: usize = 128;
+    const NB: usize = 192;
+    for i0 in (0..m).step_by(MB) {
+        let i1 = (i0 + MB).min(m);
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for j0 in (0..n).step_by(NB) {
+                let j1 = (j0 + NB).min(n);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n + j0..i * n + j1];
+                    // k-unrolled by 4: one pass over the C row consumes four
+                    // B rows, quartering C load/store traffic per FLOP.
+                    let mut kk = k0;
+                    while kk + 3 < k1 {
+                        let a0 = arow[kk];
+                        let a1 = arow[kk + 1];
+                        let a2 = arow[kk + 2];
+                        let a3 = arow[kk + 3];
+                        let b0 = &b.data[kk * n + j0..kk * n + j1];
+                        let b1 = &b.data[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                        let b2 = &b.data[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                        let b3 = &b.data[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                        for (i2, cv) in crow.iter_mut().enumerate() {
+                            *cv += a0 * b0[i2] + a1 * b1[i2] + a2 * b2[i2] + a3 * b3[i2];
+                        }
+                        kk += 4;
+                    }
+                    while kk < k1 {
+                        let aik = arow[kk];
+                        if aik != 0.0 {
+                            let bj = &b.data[kk * n + j0..kk * n + j1];
+                            for (cv, bv) in crow.iter_mut().zip(bj) {
+                                *cv += aik * *bv;
+                            }
+                        }
+                        kk += 1;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Sparse×dense: row-wise saxpy over the lhs non-zeros.
+/// FLOPs scale with nnz(lhs)·ncol(rhs) — the sparse-safe claim of E2.
+pub fn mm_sparse_dense(a: &SparseCsr, b: &DenseMatrix) -> DenseMatrix {
+    let n = b.cols;
+    metrics::global().add_flops(2 * (a.nnz() * n) as u64);
+    let mut c = DenseMatrix::zeros(a.rows, n);
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        let crow = &mut c.data[r * n..(r + 1) * n];
+        for (ci, v) in cols.iter().zip(vals) {
+            let brow = &b.data[*ci as usize * n..(*ci as usize + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += *v * *bv;
+            }
+        }
+    }
+    c
+}
+
+/// Dense×sparse: for each lhs row, scatter rhs rows scaled by a[i][k].
+/// Implemented by iterating rhs in CSR row order for locality.
+pub fn mm_dense_sparse(a: &DenseMatrix, b: &SparseCsr) -> DenseMatrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    metrics::global().add_flops(2 * (a.count_nnz() / k.max(1) * b.nnz()).max(m * b.nnz() / k.max(1)) as u64);
+    let mut c = DenseMatrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (kk, aik) in arow.iter().enumerate() {
+            if *aik == 0.0 {
+                continue;
+            }
+            let (cols, vals) = b.row(kk);
+            for (ci, v) in cols.iter().zip(vals) {
+                crow[*ci as usize] += aik * v;
+            }
+        }
+    }
+    c
+}
+
+/// Sparse×sparse: classic Gustavson with a dense accumulator per output
+/// row; output format decided from the result's actual sparsity.
+pub fn mm_sparse_sparse(a: &SparseCsr, b: &SparseCsr) -> Matrix {
+    let n = b.cols;
+    let mut out = SparseCoo::new(a.rows, n);
+    let mut acc = vec![0.0f64; n];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut flops = 0u64;
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        for (kk, av) in cols.iter().zip(vals) {
+            let (bcols, bvals) = b.row(*kk as usize);
+            flops += 2 * bcols.len() as u64;
+            for (bc, bv) in bcols.iter().zip(bvals) {
+                if acc[*bc as usize] == 0.0 {
+                    touched.push(*bc);
+                }
+                acc[*bc as usize] += av * bv;
+            }
+        }
+        touched.sort_unstable();
+        for c in touched.drain(..) {
+            out.push(r, c as usize, acc[c as usize]);
+            acc[c as usize] = 0.0;
+        }
+    }
+    metrics::global().add_flops(flops);
+    Matrix::Sparse(out.to_csr())
+}
+
+/// Transpose-self matmult `t(X) %*% X` (tsmm), a common fused pattern.
+pub fn tsmm(x: &Matrix) -> Result<Matrix> {
+    // Exploit symmetry for the dense case; sparse falls back to matmult.
+    match x {
+        Matrix::Dense(d) => {
+            let (m, n) = (d.rows, d.cols);
+            metrics::global().add_flops((m * n * n) as u64);
+            let mut c = DenseMatrix::zeros(n, n);
+            for r in 0..m {
+                let row = d.row(r);
+                for i in 0..n {
+                    let vi = row[i];
+                    if vi == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for j in i..n {
+                        crow[j] += vi * row[j];
+                    }
+                }
+            }
+            // Mirror the upper triangle.
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    c.data[j * n + i] = c.data[i * n + j];
+                }
+            }
+            Ok(Matrix::Dense(c).examine_and_convert())
+        }
+        Matrix::Sparse(s) => {
+            let t = Matrix::Sparse(s.transpose());
+            matmult(&t, x)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::approx_eq_slice;
+
+    fn dense(rows: &[&[f64]]) -> Matrix {
+        Matrix::from_rows(rows)
+    }
+
+    /// Random matrix with the given density.
+    fn random(rng: &mut Prng, r: usize, c: usize, density: f64) -> Matrix {
+        let mut d = DenseMatrix::zeros(r, c);
+        for v in d.data.iter_mut() {
+            if rng.next_f64() < density {
+                *v = rng.uniform(-2.0, 2.0);
+            }
+        }
+        Matrix::Dense(d)
+    }
+
+    fn naive_mm(a: &Matrix, b: &Matrix) -> Vec<f64> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let (ad, bd) = (a.to_dense(), b.to_dense());
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += ad.get(i, kk) * bd.get(kk, j);
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn basic_2x2() {
+        let a = dense(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = dense(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmult(&a, &b).unwrap();
+        assert_eq!(c, dense(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn dim_mismatch() {
+        let a = dense(&[&[1.0, 2.0]]);
+        assert!(matmult(&a, &a).is_err());
+    }
+
+    #[test]
+    fn all_four_operators_agree() {
+        let mut rng = Prng::new(99);
+        for &(m, k, n) in &[(7usize, 5usize, 9usize), (33, 70, 17), (64, 64, 64)] {
+            let a = random(&mut rng, m, k, 0.3);
+            let b = random(&mut rng, k, n, 0.3);
+            let expect = naive_mm(&a, &b);
+            let variants = [
+                (a.clone(), b.clone(), MmOperator::DenseDense),
+                (a.clone().into_sparse_format(), b.clone(), MmOperator::SparseDense),
+                (a.clone(), b.clone().into_sparse_format(), MmOperator::DenseSparse),
+                (
+                    a.clone().into_sparse_format(),
+                    b.clone().into_sparse_format(),
+                    MmOperator::SparseSparse,
+                ),
+            ];
+            for (av, bv, want_op) in variants {
+                let (c, op) = matmult_traced(&av, &bv).unwrap();
+                assert_eq!(op, want_op);
+                assert!(
+                    approx_eq_slice(&c.to_row_major_vec(), &expect, 1e-9),
+                    "operator {op:?} mismatch at {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_matches_naive_on_odd_sizes() {
+        let mut rng = Prng::new(5);
+        let a = random(&mut rng, 130, 301, 1.0);
+        let b = random(&mut rng, 301, 67, 1.0);
+        let c = matmult(&a, &b).unwrap();
+        assert!(approx_eq_slice(&c.to_row_major_vec(), &naive_mm(&a, &b), 1e-9));
+    }
+
+    #[test]
+    fn sparse_sparse_output_stays_sparse_when_sparse() {
+        let mut rng = Prng::new(6);
+        let a = random(&mut rng, 100, 100, 0.01).into_sparse_format();
+        let b = random(&mut rng, 100, 100, 0.01).into_sparse_format();
+        let c = matmult(&a, &b).unwrap();
+        assert!(c.is_sparse(), "1%×1% product should stay sparse");
+        assert!(approx_eq_slice(&c.to_row_major_vec(), &naive_mm(&a, &b), 1e-9));
+    }
+
+    #[test]
+    fn sparse_flops_scale_with_nnz() {
+        let mut rng = Prng::new(7);
+        let dense_a = random(&mut rng, 128, 128, 1.0);
+        let sparse_a = random(&mut rng, 128, 128, 0.05).into_sparse_format();
+        let b = random(&mut rng, 128, 128, 1.0);
+
+        let m0 = metrics::global().snapshot();
+        matmult(&dense_a, &b).unwrap();
+        let dd = metrics::global().snapshot().delta(&m0).flops;
+
+        let m1 = metrics::global().snapshot();
+        matmult(&sparse_a, &b).unwrap();
+        let sd = metrics::global().snapshot().delta(&m1).flops;
+
+        assert!(sd * 5 < dd, "sparse-dense flops {sd} should be ≪ dense-dense {dd}");
+    }
+
+    #[test]
+    fn tsmm_matches_explicit() {
+        let mut rng = Prng::new(8);
+        for density in [1.0, 0.1] {
+            let x = random(&mut rng, 40, 23, density);
+            let explicit = matmult(&x.clone().into_dense_format().to_dense().transpose().into(), &x)
+                .unwrap()
+                .to_row_major_vec();
+            let fast = tsmm(&x).unwrap().to_row_major_vec();
+            assert!(approx_eq_slice(&fast, &explicit, 1e-9));
+            let xs = x.into_sparse_format();
+            let fast_sparse = tsmm(&xs).unwrap().to_row_major_vec();
+            assert!(approx_eq_slice(&fast_sparse, &explicit, 1e-9));
+        }
+    }
+
+    #[test]
+    fn vector_times_matrix() {
+        let v = dense(&[&[1.0, 2.0, 3.0]]);
+        let m = dense(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        assert_eq!(matmult(&v, &m).unwrap(), dense(&[&[4.0, 5.0]]));
+    }
+}
+
+impl From<DenseMatrix> for Matrix {
+    fn from(d: DenseMatrix) -> Matrix {
+        Matrix::Dense(d)
+    }
+}

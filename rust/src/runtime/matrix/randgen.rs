@@ -1,0 +1,212 @@
+//! Data generation: rand (uniform/normal with target sparsity), seq, and
+//! synthetic dataset helpers used by examples/benches.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::sparse::SparseCoo;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::prng::Prng;
+
+/// Probability density function for `rand`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pdf {
+    Uniform,
+    Normal,
+}
+
+/// DML `rand(rows, cols, min, max, sparsity, pdf, seed)`.
+///
+/// With sparsity < 1 the non-zero positions are sampled uniformly; the
+/// output format follows the usual sparsity rules.
+pub fn rand(
+    rows: usize,
+    cols: usize,
+    min: f64,
+    max: f64,
+    sparsity: f64,
+    pdf: Pdf,
+    seed: u64,
+) -> Result<Matrix> {
+    if !(0.0..=1.0).contains(&sparsity) {
+        return Err(DmlError::rt(format!("rand: sparsity {sparsity} not in [0,1]")));
+    }
+    let mut rng = Prng::new(seed);
+    let gen = |rng: &mut Prng| match pdf {
+        Pdf::Uniform => rng.uniform(min, max),
+        // DML: normal pdf ignores min/max (standard normal).
+        Pdf::Normal => rng.normal(),
+    };
+    let cells = rows * cols;
+    let target_nnz = (sparsity * cells as f64).round() as usize;
+    if Matrix::prefers_sparse(rows, cols, target_nnz) {
+        // Sample positions via per-cell Bernoulli to stay O(cells) once but
+        // memory O(nnz) — matches SystemML's sparse randgen.
+        let mut coo = SparseCoo::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.next_f64() < sparsity {
+                    let mut v = gen(&mut rng);
+                    if v == 0.0 {
+                        v = f64::MIN_POSITIVE;
+                    }
+                    coo.push(r, c, v);
+                }
+            }
+        }
+        Ok(Matrix::Sparse(coo.to_csr()))
+    } else {
+        let mut d = DenseMatrix::zeros(rows, cols);
+        if sparsity >= 1.0 {
+            for v in d.data.iter_mut() {
+                *v = gen(&mut rng);
+            }
+        } else {
+            for v in d.data.iter_mut() {
+                if rng.next_f64() < sparsity {
+                    *v = gen(&mut rng);
+                }
+            }
+        }
+        Ok(Matrix::Dense(d))
+    }
+}
+
+/// DML `seq(from, to, incr)` → column vector.
+pub fn seq(from: f64, to: f64, incr: f64) -> Result<Matrix> {
+    if incr == 0.0 {
+        return Err(DmlError::rt("seq: increment must be nonzero"));
+    }
+    let n = ((to - from) / incr).floor();
+    if n < 0.0 {
+        return Err(DmlError::rt(format!("seq({from},{to},{incr}): empty range")));
+    }
+    let n = n as usize + 1;
+    let data: Vec<f64> = (0..n).map(|i| from + i as f64 * incr).collect();
+    Ok(Matrix::Dense(DenseMatrix::from_vec(n, 1, data)?))
+}
+
+/// Synthetic classification dataset: X ~ class-dependent Gaussians,
+/// Y one-hot n×k. Deterministic for a seed. Used by examples/benches in
+/// place of the paper's MNIST-style inputs (see DESIGN.md §Substitutions).
+pub fn synthetic_classification(
+    n: usize,
+    d: usize,
+    k: usize,
+    seed: u64,
+) -> (Matrix, Matrix) {
+    let mut rng = Prng::new(seed);
+    // Random class centroids scaled so classes are separable.
+    let mut centroids = DenseMatrix::zeros(k, d);
+    for v in centroids.data.iter_mut() {
+        *v = rng.normal() * 2.0;
+    }
+    let mut x = DenseMatrix::zeros(n, d);
+    let mut y = DenseMatrix::zeros(n, k);
+    for r in 0..n {
+        let class = rng.next_usize(k);
+        let c = centroids.row(class);
+        let row = x.row_mut(r);
+        for j in 0..d {
+            row[j] = c[j] + rng.normal() * 0.5;
+        }
+        y.set(r, class, 1.0);
+    }
+    (Matrix::Dense(x), Matrix::Dense(y))
+}
+
+/// Synthetic image-classification dataset shaped like MNIST: X is
+/// n×(c*h*w) in [0,1] with class-dependent blob patterns, Y one-hot.
+pub fn synthetic_images(
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    seed: u64,
+) -> (Matrix, Matrix) {
+    let mut rng = Prng::new(seed);
+    let d = c * h * w;
+    let mut x = DenseMatrix::zeros(n, d);
+    let mut y = DenseMatrix::zeros(n, k);
+    for r in 0..n {
+        let class = rng.next_usize(k);
+        y.set(r, class, 1.0);
+        // A class-specific bright blob location + noise.
+        let cy = (class * h / k.max(1)) % h;
+        let cx = (class * w / k.max(1)) % w;
+        let row = x.row_mut(r);
+        for ch in 0..c {
+            for i in 0..h {
+                for j in 0..w {
+                    let dy = i as f64 - cy as f64;
+                    let dx = j as f64 - cx as f64;
+                    let sig = (-(dy * dy + dx * dx) / 8.0).exp();
+                    let noise = rng.next_f64() * 0.1;
+                    row[ch * h * w + i * w + j] = (sig + noise).min(1.0);
+                }
+            }
+        }
+    }
+    (Matrix::Dense(x), Matrix::Dense(y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rand_deterministic_and_in_range() {
+        let a = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 42).unwrap();
+        let b = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 42).unwrap();
+        assert_eq!(a, b);
+        for v in a.to_row_major_vec() {
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rand_sparsity_approximate() {
+        let m = rand(100, 100, 0.0, 1.0, 0.1, Pdf::Uniform, 7).unwrap();
+        assert!(m.is_sparse());
+        let sp = m.sparsity();
+        assert!((sp - 0.1).abs() < 0.03, "sparsity {sp}");
+    }
+
+    #[test]
+    fn rand_rejects_bad_sparsity() {
+        assert!(rand(2, 2, 0.0, 1.0, 1.5, Pdf::Uniform, 0).is_err());
+    }
+
+    #[test]
+    fn seq_basics() {
+        assert_eq!(
+            seq(1.0, 4.0, 1.0).unwrap(),
+            Matrix::from_rows(&[&[1.0], &[2.0], &[3.0], &[4.0]])
+        );
+        assert_eq!(seq(5.0, 1.0, -2.0).unwrap(), Matrix::from_rows(&[&[5.0], &[3.0], &[1.0]]));
+        assert!(seq(1.0, 2.0, 0.0).is_err());
+        assert!(seq(2.0, 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn synthetic_classification_shapes() {
+        let (x, y) = synthetic_classification(50, 8, 3, 1);
+        assert_eq!(x.shape(), (50, 8));
+        assert_eq!(y.shape(), (50, 3));
+        // one-hot rows
+        for r in 0..50 {
+            let s: f64 = (0..3).map(|c| y.get(r, c)).sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn synthetic_images_bounded() {
+        let (x, y) = synthetic_images(10, 1, 8, 8, 4, 2);
+        assert_eq!(x.shape(), (10, 64));
+        assert_eq!(y.shape(), (10, 4));
+        for v in x.to_row_major_vec() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

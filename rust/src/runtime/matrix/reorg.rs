@@ -1,0 +1,357 @@
+//! Reorganization ops: transpose, reshape, rev, indexing (right/left),
+//! cbind/rbind, diag, outer, table, removeEmpty.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::sparse::{SparseCoo, SparseMcsr};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::runtime::matrix::elementwise::BinOp;
+
+/// `t(X)` with a format-preserving physical operator.
+pub fn transpose(m: &Matrix) -> Matrix {
+    match m {
+        Matrix::Dense(d) => Matrix::Dense(d.transpose()),
+        Matrix::Sparse(s) => Matrix::Sparse(s.transpose()),
+    }
+}
+
+/// Row-major reshape (DML: matrix(X, rows=r, cols=c)).
+pub fn reshape(m: &Matrix, rows: usize, cols: usize) -> Result<Matrix> {
+    if rows * cols != m.len() {
+        return Err(DmlError::rt(format!(
+            "reshape: cannot reshape {}x{} into {rows}x{cols}",
+            m.rows(),
+            m.cols()
+        )));
+    }
+    match m {
+        Matrix::Dense(d) => {
+            Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, d.data.clone())?))
+        }
+        Matrix::Sparse(s) => {
+            let oc = m.cols();
+            let mut coo = SparseCoo::new(rows, cols);
+            for r in 0..s.rows {
+                let (idx, vals) = s.row(r);
+                for (c, v) in idx.iter().zip(vals) {
+                    let linear = r * oc + *c as usize;
+                    coo.push(linear / cols, linear % cols, *v);
+                }
+            }
+            Ok(Matrix::Sparse(coo.to_csr()))
+        }
+    }
+}
+
+/// Reverse rows (DML rev).
+pub fn rev(m: &Matrix) -> Matrix {
+    let d = m.to_dense();
+    let mut out = DenseMatrix::zeros(d.rows, d.cols);
+    for r in 0..d.rows {
+        out.row_mut(r).copy_from_slice(d.row(d.rows - 1 - r));
+    }
+    Matrix::Dense(out).examine_and_convert()
+}
+
+/// Right indexing X[rl:ru, cl:cu] — 0-based, half-open (callers translate
+/// DML's 1-based inclusive ranges).
+pub fn slice(m: &Matrix, rl: usize, ru: usize, cl: usize, cu: usize) -> Result<Matrix> {
+    if ru > m.rows() || cu > m.cols() || rl >= ru || cl >= cu {
+        return Err(DmlError::rt(format!(
+            "index [{}:{},{}:{}] out of range for {}x{} matrix",
+            rl + 1,
+            ru,
+            cl + 1,
+            cu,
+            m.rows(),
+            m.cols()
+        )));
+    }
+    match m {
+        Matrix::Dense(d) => Ok(Matrix::Dense(d.slice(rl, ru, cl, cu)?)),
+        Matrix::Sparse(s) => {
+            if cl == 0 && cu == m.cols() {
+                Ok(Matrix::Sparse(s.slice_rows(rl, ru)))
+            } else {
+                let mut coo = SparseCoo::new(ru - rl, cu - cl);
+                for r in rl..ru {
+                    let (idx, vals) = s.row(r);
+                    for (c, v) in idx.iter().zip(vals) {
+                        let c = *c as usize;
+                        if c >= cl && c < cu {
+                            coo.push(r - rl, c - cl, *v);
+                        }
+                    }
+                }
+                Ok(Matrix::Sparse(coo.to_csr()))
+            }
+        }
+    }
+}
+
+/// Left indexing: returns a copy of `target` with `src` written at
+/// (rl, cl). DML semantics: X[rl:ru, cl:cu] = src.
+pub fn left_index(target: &Matrix, rl: usize, cl: usize, src: &Matrix) -> Result<Matrix> {
+    if rl + src.rows() > target.rows() || cl + src.cols() > target.cols() {
+        return Err(DmlError::rt(format!(
+            "left-index of {}x{} at ({},{}) exceeds {}x{}",
+            src.rows(),
+            src.cols(),
+            rl + 1,
+            cl + 1,
+            target.rows(),
+            target.cols()
+        )));
+    }
+    match target {
+        Matrix::Dense(d) => {
+            let mut out = d.clone();
+            out.assign(rl, cl, &src.to_dense())?;
+            Ok(Matrix::Dense(out))
+        }
+        Matrix::Sparse(s) => {
+            // MCSR supports cheap row updates — the paper's modified-CSR use.
+            let mut m = SparseMcsr::zeros(s.rows, s.cols);
+            for r in 0..s.rows {
+                let (idx, vals) = s.row(r);
+                m.set_row(r, idx, vals);
+            }
+            let sd = src.to_dense();
+            for r in 0..sd.rows {
+                for c in 0..sd.cols {
+                    m.set(rl + r, cl + c, sd.get(r, c));
+                }
+            }
+            Ok(Matrix::Sparse(m.to_csr()).examine_and_convert())
+        }
+    }
+}
+
+/// Column concatenation (DML cbind).
+pub fn cbind(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.rows() != b.rows() {
+        return Err(DmlError::rt(format!(
+            "cbind: row mismatch {} vs {}",
+            a.rows(),
+            b.rows()
+        )));
+    }
+    let (ad, bd) = (a.to_dense(), b.to_dense());
+    let mut out = DenseMatrix::zeros(ad.rows, ad.cols + bd.cols);
+    for r in 0..ad.rows {
+        out.row_mut(r)[..ad.cols].copy_from_slice(ad.row(r));
+        out.row_mut(r)[ad.cols..].copy_from_slice(bd.row(r));
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// Row concatenation (DML rbind).
+pub fn rbind(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols() != b.cols() {
+        return Err(DmlError::rt(format!(
+            "rbind: col mismatch {} vs {}",
+            a.cols(),
+            b.cols()
+        )));
+    }
+    let (ad, bd) = (a.to_dense(), b.to_dense());
+    let mut data = ad.data;
+    data.extend_from_slice(&bd.data);
+    Ok(Matrix::Dense(DenseMatrix::from_vec(ad.rows + bd.rows, ad.cols, data)?)
+        .examine_and_convert())
+}
+
+/// diag: vector→diagonal matrix, or matrix→diagonal column vector.
+pub fn diag(m: &Matrix) -> Matrix {
+    let (r, c) = m.shape();
+    if c == 1 {
+        let mut coo = SparseCoo::new(r, r);
+        for i in 0..r {
+            coo.push(i, i, m.get(i, 0));
+        }
+        Matrix::Sparse(coo.to_csr()).examine_and_convert()
+    } else {
+        let n = r.min(c);
+        let mut out = DenseMatrix::zeros(n, 1);
+        for i in 0..n {
+            out.data[i] = m.get(i, i);
+        }
+        Matrix::Dense(out)
+    }
+}
+
+/// outer(u, v, op): u is n×1, v is 1×m → n×m.
+pub fn outer(u: &Matrix, v: &Matrix, op: BinOp) -> Result<Matrix> {
+    if u.cols() != 1 || v.rows() != 1 {
+        return Err(DmlError::rt("outer: requires column vector and row vector".to_string()));
+    }
+    let (n, m) = (u.rows(), v.cols());
+    let mut out = DenseMatrix::zeros(n, m);
+    for i in 0..n {
+        let uv = u.get(i, 0);
+        let row = out.row_mut(i);
+        for j in 0..m {
+            row[j] = op.apply(uv, v.get(0, j));
+        }
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// table(i, j): contingency table of two column vectors of 1-based indices
+/// (DML's one-hot building block: table(seq(1,n), y, n, k)).
+pub fn table(i: &Matrix, j: &Matrix, out_rows: usize, out_cols: usize) -> Result<Matrix> {
+    if i.cols() != 1 || j.cols() != 1 || i.rows() != j.rows() {
+        return Err(DmlError::rt("table: arguments must be equal-length column vectors"));
+    }
+    let mut coo = SparseCoo::new(out_rows, out_cols);
+    let mut m = SparseMcsr::zeros(out_rows, out_cols);
+    for r in 0..i.rows() {
+        let ri = i.get(r, 0).round() as isize - 1;
+        let ci = j.get(r, 0).round() as isize - 1;
+        if ri < 0 || ci < 0 {
+            return Err(DmlError::rt("table: indices must be >= 1"));
+        }
+        let (ri, ci) = (ri as usize, ci as usize);
+        if ri < out_rows && ci < out_cols {
+            m.set(ri, ci, m.get(ri, ci) + 1.0);
+        }
+    }
+    for r in 0..out_rows {
+        let row = &m.row_data[r];
+        for (c, v) in row.idx.iter().zip(&row.vals) {
+            coo.push(r, *c as usize, *v);
+        }
+    }
+    Ok(Matrix::Sparse(coo.to_csr()).examine_and_convert())
+}
+
+/// removeEmpty(target, margin="rows"): drop all-zero rows (or columns).
+pub fn remove_empty(m: &Matrix, rows_margin: bool) -> Matrix {
+    if rows_margin {
+        let keep: Vec<usize> = (0..m.rows())
+            .filter(|r| (0..m.cols()).any(|c| m.get(*r, c) != 0.0))
+            .collect();
+        if keep.is_empty() {
+            return Matrix::zeros(1, m.cols());
+        }
+        let d = m.to_dense();
+        let mut out = DenseMatrix::zeros(keep.len(), m.cols());
+        for (or, r) in keep.iter().enumerate() {
+            out.row_mut(or).copy_from_slice(d.row(*r));
+        }
+        Matrix::Dense(out).examine_and_convert()
+    } else {
+        let t = transpose(m);
+        transpose(&remove_empty(&t, true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Matrix {
+        Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn transpose_formats() {
+        let d = m();
+        let s = d.clone().into_sparse_format();
+        assert_eq!(transpose(&d), transpose(&s));
+        assert_eq!(transpose(&d).shape(), (3, 2));
+    }
+
+    #[test]
+    fn reshape_row_major() {
+        let r = reshape(&m(), 3, 2).unwrap();
+        assert_eq!(r, Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]));
+        assert!(reshape(&m(), 4, 2).is_err());
+        // Sparse reshape agrees with dense.
+        let s = m().into_sparse_format();
+        assert_eq!(reshape(&s, 6, 1).unwrap(), reshape(&m(), 6, 1).unwrap());
+    }
+
+    #[test]
+    fn rev_reverses_rows() {
+        assert_eq!(rev(&m()), Matrix::from_rows(&[&[4.0, 5.0, 6.0], &[1.0, 2.0, 3.0]]));
+    }
+
+    #[test]
+    fn slice_dense_sparse_agree() {
+        let d = Matrix::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 3.0, 0.0], &[4.0, 0.0, 5.0]]);
+        let s = d.clone().into_sparse_format();
+        assert_eq!(slice(&d, 0, 2, 1, 3).unwrap(), slice(&s, 0, 2, 1, 3).unwrap());
+        assert_eq!(slice(&s, 1, 3, 0, 3).unwrap(), slice(&d, 1, 3, 0, 3).unwrap());
+        assert!(slice(&d, 0, 4, 0, 1).is_err());
+    }
+
+    #[test]
+    fn left_index_dense_and_sparse() {
+        let base = Matrix::zeros(64, 64); // sparse by construction
+        let patch = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let out = left_index(&base, 10, 20, &patch).unwrap();
+        assert_eq!(out.get(10, 20), 1.0);
+        assert_eq!(out.get(11, 21), 4.0);
+        assert_eq!(out.nnz(), 4);
+
+        let based = Matrix::filled(8, 8, 1.0);
+        let out2 = left_index(&based, 0, 0, &patch).unwrap();
+        assert_eq!(out2.get(0, 1), 2.0);
+        assert_eq!(out2.get(7, 7), 1.0);
+        assert!(left_index(&patch, 1, 1, &based).is_err());
+    }
+
+    #[test]
+    fn cbind_rbind() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0], &[4.0]]);
+        assert_eq!(cbind(&a, &b).unwrap(), Matrix::from_rows(&[&[1.0, 3.0], &[2.0, 4.0]]));
+        assert_eq!(
+            rbind(&a, &b).unwrap(),
+            Matrix::from_rows(&[&[1.0], &[2.0], &[3.0], &[4.0]])
+        );
+        assert!(cbind(&a, &Matrix::zeros(3, 1)).is_err());
+        assert!(rbind(&a, &Matrix::zeros(1, 2)).is_err());
+    }
+
+    #[test]
+    fn diag_both_directions() {
+        let v = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let d = diag(&v);
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(1, 1), 2.0);
+        assert_eq!(d.get(0, 1), 0.0);
+        let back = diag(&d);
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn outer_product() {
+        let u = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let v = Matrix::from_rows(&[&[3.0, 4.0]]);
+        assert_eq!(
+            outer(&u, &v, BinOp::Mul).unwrap(),
+            Matrix::from_rows(&[&[3.0, 4.0], &[6.0, 8.0]])
+        );
+    }
+
+    #[test]
+    fn table_builds_one_hot() {
+        // one-hot of labels y = [2, 1, 2] over 3 classes
+        let i = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        let y = Matrix::from_rows(&[&[2.0], &[1.0], &[2.0]]);
+        let t = table(&i, &y, 3, 3).unwrap();
+        assert_eq!(
+            t,
+            Matrix::from_rows(&[&[0.0, 1.0, 0.0], &[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0]])
+        );
+    }
+
+    #[test]
+    fn remove_empty_rows_cols() {
+        let x = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0], &[0.0, 0.0]]);
+        assert_eq!(remove_empty(&x, true), Matrix::from_rows(&[&[1.0, 0.0]]));
+        assert_eq!(remove_empty(&x, false), Matrix::from_rows(&[&[0.0], &[1.0], &[0.0]]));
+    }
+}

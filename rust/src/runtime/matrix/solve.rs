@@ -1,0 +1,162 @@
+//! Linear system solve (DML builtin `solve(A, b)`): Gaussian elimination
+//! with partial pivoting. Also exposes `inverse` via repeated solve.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+/// Solve A x = B for x, where A is n×n and B is n×m.
+pub fn solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(DmlError::rt(format!("solve: A must be square, got {}x{}", n, a.cols())));
+    }
+    if b.rows() != n {
+        return Err(DmlError::rt(format!(
+            "solve: dimension mismatch A {}x{} vs b {}x{}",
+            n,
+            n,
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let m = b.cols();
+    metrics::global().add_flops((2 * n * n * n / 3 + n * n * m) as u64);
+    let mut lu = a.to_dense();
+    let mut x = b.to_dense();
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        let mut max = lu.get(col, col).abs();
+        for r in (col + 1)..n {
+            let v = lu.get(r, col).abs();
+            if v > max {
+                max = v;
+                piv = r;
+            }
+        }
+        if max < 1e-300 {
+            return Err(DmlError::rt("solve: matrix is singular"));
+        }
+        if piv != col {
+            for c in 0..n {
+                let t = lu.get(col, c);
+                lu.set(col, c, lu.get(piv, c));
+                lu.set(piv, c, t);
+            }
+            for c in 0..m {
+                let t = x.get(col, c);
+                x.set(col, c, x.get(piv, c));
+                x.set(piv, c, t);
+            }
+        }
+        // Eliminate below.
+        let d = lu.get(col, col);
+        for r in (col + 1)..n {
+            let f = lu.get(r, col) / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                let v = lu.get(r, c) - f * lu.get(col, c);
+                lu.set(r, c, v);
+            }
+            for c in 0..m {
+                let v = x.get(r, c) - f * x.get(col, c);
+                x.set(r, c, v);
+            }
+        }
+    }
+    // Back substitution.
+    for col in (0..n).rev() {
+        let d = lu.get(col, col);
+        for c in 0..m {
+            let mut s = x.get(col, c);
+            for k in (col + 1)..n {
+                s -= lu.get(col, k) * x.get(k, c);
+            }
+            x.set(col, c, s / d);
+        }
+    }
+    Ok(Matrix::Dense(x))
+}
+
+/// Matrix inverse via solve(A, I).
+pub fn inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    let mut eye = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        eye.set(i, i, 1.0);
+    }
+    solve(a, &Matrix::Dense(eye))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::matrix::mult::matmult;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::approx_eq_slice;
+
+    #[test]
+    fn solves_2x2() {
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let b = Matrix::from_rows(&[&[5.0], &[10.0]]);
+        let x = solve(&a, &b).unwrap();
+        assert!((x.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((x.get(1, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Leading zero forces a row swap.
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let b = Matrix::from_rows(&[&[2.0], &[3.0]]);
+        let x = solve(&a, &b).unwrap();
+        assert!((x.get(0, 0) - 3.0).abs() < 1e-12);
+        assert!((x.get(1, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        assert!(solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn random_roundtrip_ax_equals_b() {
+        let mut rng = Prng::new(3);
+        let n = 12;
+        let mut ad = crate::runtime::matrix::DenseMatrix::zeros(n, n);
+        for v in ad.data.iter_mut() {
+            *v = rng.uniform(-1.0, 1.0);
+        }
+        // Diagonal dominance to guarantee non-singularity.
+        for i in 0..n {
+            let v = ad.get(i, i) + 5.0;
+            ad.set(i, i, v);
+        }
+        let a = Matrix::Dense(ad);
+        let mut bd = crate::runtime::matrix::DenseMatrix::zeros(n, 3);
+        for v in bd.data.iter_mut() {
+            *v = rng.uniform(-1.0, 1.0);
+        }
+        let b = Matrix::Dense(bd);
+        let x = solve(&a, &b).unwrap();
+        let back = matmult(&a, &x).unwrap();
+        assert!(approx_eq_slice(&back.to_row_major_vec(), &b.to_row_major_vec(), 1e-8));
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        let a = Matrix::from_rows(&[&[4.0, 7.0], &[2.0, 6.0]]);
+        let inv = inverse(&a).unwrap();
+        let eye = matmult(&a, &inv).unwrap();
+        assert!((eye.get(0, 0) - 1.0).abs() < 1e-10);
+        assert!((eye.get(0, 1)).abs() < 1e-10);
+        assert!((eye.get(1, 0)).abs() < 1e-10);
+        assert!((eye.get(1, 1) - 1.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,345 @@
+//! Sparse matrix formats: COO, CSR, and MCSR (modified CSR).
+//!
+//! The paper (§3 Tensor Representation) lists COO, CSR and Modified CSR as
+//! the physical sparse formats that tensor linearization lets DL ops reuse.
+//! CSR is the read-optimized operational format; COO is the construction /
+//! interchange format; MCSR (a vec of per-row arrays) supports cheap
+//! incremental row updates and is used when building outputs row by row.
+
+use crate::runtime::matrix::dense::DenseMatrix;
+
+/// Coordinate-format sparse matrix (row, col, value) triples.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseCoo {
+    pub rows: usize,
+    pub cols: usize,
+    /// Triples, not necessarily sorted.
+    pub tuples: Vec<(u32, u32, f64)>,
+}
+
+impl SparseCoo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        SparseCoo { rows, cols, tuples: Vec::new() }
+    }
+
+    /// Append an entry (zeros are skipped).
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        if v != 0.0 {
+            self.tuples.push((r as u32, c as u32, v));
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.tuples.len()
+    }
+
+    /// Sort triples into row-major order and convert to CSR.
+    pub fn to_csr(mut self) -> SparseCsr {
+        self.tuples.sort_unstable_by_key(|(r, c, _)| (*r, *c));
+        let mut csr = SparseCsr::with_capacity(self.rows, self.cols, self.tuples.len());
+        let mut cur_row = 0usize;
+        for (r, c, v) in self.tuples {
+            while cur_row <= r as usize {
+                csr.row_ptr[cur_row] = csr.values.len();
+                cur_row += 1;
+            }
+            csr.col_idx.push(c);
+            csr.values.push(v);
+        }
+        while cur_row <= self.rows {
+            csr.row_ptr[cur_row] = csr.values.len();
+            cur_row += 1;
+        }
+        csr
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseCsr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length rows+1; row r occupies values[row_ptr[r]..row_ptr[r+1]].
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl SparseCsr {
+    /// Empty CSR with reserved nnz capacity.
+    pub fn with_capacity(rows: usize, cols: usize, nnz: usize) -> Self {
+        SparseCsr {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::with_capacity(nnz),
+            values: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::with_capacity(rows, cols, 0)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (col indices, values) of row r.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Point lookup (binary search within the row).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let row = out.row_mut(r);
+            for (c, v) in cols.iter().zip(vals) {
+                row[*c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Build CSR from a dense matrix, skipping zeros.
+    pub fn from_dense(d: &DenseMatrix) -> SparseCsr {
+        let mut csr = SparseCsr::with_capacity(d.rows, d.cols, 0);
+        for r in 0..d.rows {
+            csr.row_ptr[r] = csr.values.len();
+            for (c, v) in d.row(r).iter().enumerate() {
+                if *v != 0.0 {
+                    csr.col_idx.push(c as u32);
+                    csr.values.push(*v);
+                }
+            }
+        }
+        csr.row_ptr[d.rows] = csr.values.len();
+        csr
+    }
+
+    /// CSR transpose via counting sort over columns — O(nnz + rows + cols).
+    pub fn transpose(&self) -> SparseCsr {
+        let mut out = SparseCsr::with_capacity(self.cols, self.rows, self.nnz());
+        out.col_idx = vec![0; self.nnz()];
+        out.values = vec![0.0; self.nnz()];
+        // Count entries per output row (= input column).
+        let mut counts = vec![0usize; self.cols + 1];
+        for c in &self.col_idx {
+            counts[*c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        out.row_ptr.copy_from_slice(&counts);
+        let mut next = counts;
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let pos = next[*c as usize];
+                out.col_idx[pos] = r as u32;
+                out.values[pos] = *v;
+                next[*c as usize] += 1;
+            }
+        }
+        out
+    }
+
+    /// Row slice [rl, ru) as CSR (cheap: copies the row ranges).
+    pub fn slice_rows(&self, rl: usize, ru: usize) -> SparseCsr {
+        let (s, e) = (self.row_ptr[rl], self.row_ptr[ru]);
+        let mut out = SparseCsr::with_capacity(ru - rl, self.cols, e - s);
+        out.col_idx.extend_from_slice(&self.col_idx[s..e]);
+        out.values.extend_from_slice(&self.values[s..e]);
+        for r in rl..=ru {
+            out.row_ptr[r - rl] = self.row_ptr[r] - s;
+        }
+        out
+    }
+}
+
+/// Modified CSR: one growable array pair per row. Cheap single-row updates
+/// (used when assembling outputs incrementally, e.g. left-indexing into a
+/// sparse target or parfor result merge).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseMcsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_data: Vec<SparseRow>,
+}
+
+/// One sparse row: sorted column indices + values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseRow {
+    pub idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl SparseRow {
+    /// Set (insert/overwrite/delete-on-zero) a single entry.
+    pub fn set(&mut self, c: u32, v: f64) {
+        match self.idx.binary_search(&c) {
+            Ok(i) => {
+                if v == 0.0 {
+                    self.idx.remove(i);
+                    self.vals.remove(i);
+                } else {
+                    self.vals[i] = v;
+                }
+            }
+            Err(i) => {
+                if v != 0.0 {
+                    self.idx.insert(i, c);
+                    self.vals.insert(i, v);
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, c: u32) -> f64 {
+        match self.idx.binary_search(&c) {
+            Ok(i) => self.vals[i],
+            Err(_) => 0.0,
+        }
+    }
+}
+
+impl SparseMcsr {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        SparseMcsr { rows, cols, row_data: vec![SparseRow::default(); rows] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_data.iter().map(|r| r.idx.len()).sum()
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.row_data[r].set(c as u32, v);
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.row_data[r].get(c as u32)
+    }
+
+    /// Replace a whole row from (cols, vals) slices.
+    pub fn set_row(&mut self, r: usize, cols: &[u32], vals: &[f64]) {
+        self.row_data[r] = SparseRow { idx: cols.to_vec(), vals: vals.to_vec() };
+    }
+
+    /// Compact into CSR.
+    pub fn to_csr(&self) -> SparseCsr {
+        let nnz = self.nnz();
+        let mut csr = SparseCsr::with_capacity(self.rows, self.cols, nnz);
+        for (r, row) in self.row_data.iter().enumerate() {
+            csr.row_ptr[r] = csr.values.len();
+            csr.col_idx.extend_from_slice(&row.idx);
+            csr.values.extend_from_slice(&row.vals);
+        }
+        csr.row_ptr[self.rows] = csr.values.len();
+        csr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_dense() -> DenseMatrix {
+        DenseMatrix::from_rows(&[
+            &[1.0, 0.0, 2.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0],
+            &[3.0, 4.0, 0.0, 5.0],
+        ])
+    }
+
+    #[test]
+    fn coo_to_csr_sorted_and_unsorted() {
+        let mut coo = SparseCoo::new(3, 4);
+        coo.push(2, 3, 5.0);
+        coo.push(0, 0, 1.0);
+        coo.push(2, 0, 3.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 1, 4.0);
+        coo.push(1, 1, 0.0); // dropped
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 5);
+        assert_eq!(csr.to_dense(), sample_dense());
+    }
+
+    #[test]
+    fn csr_from_to_dense_roundtrip() {
+        let d = sample_dense();
+        let csr = SparseCsr::from_dense(&d);
+        assert_eq!(csr.nnz(), 5);
+        assert_eq!(csr.get(2, 1), 4.0);
+        assert_eq!(csr.get(1, 2), 0.0);
+        assert_eq!(csr.to_dense(), d);
+    }
+
+    #[test]
+    fn csr_transpose_matches_dense_transpose() {
+        let d = sample_dense();
+        let t = SparseCsr::from_dense(&d).transpose();
+        assert_eq!(t.to_dense(), d.transpose());
+        assert_eq!(t.rows, 4);
+        assert_eq!(t.cols, 3);
+    }
+
+    #[test]
+    fn csr_empty_rows_ok() {
+        let csr = SparseCsr::zeros(5, 5);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.get(3, 3), 0.0);
+        assert_eq!(csr.transpose().nnz(), 0);
+    }
+
+    #[test]
+    fn csr_slice_rows() {
+        let csr = SparseCsr::from_dense(&sample_dense());
+        let s = csr.slice_rows(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.to_dense(), sample_dense().slice(1, 3, 0, 4).unwrap());
+    }
+
+    #[test]
+    fn mcsr_set_get_delete() {
+        let mut m = SparseMcsr::zeros(2, 4);
+        m.set(0, 2, 7.0);
+        m.set(0, 1, 3.0);
+        m.set(1, 0, 1.0);
+        assert_eq!(m.get(0, 2), 7.0);
+        assert_eq!(m.nnz(), 3);
+        m.set(0, 2, 0.0); // delete
+        assert_eq!(m.get(0, 2), 0.0);
+        assert_eq!(m.nnz(), 2);
+        m.set(0, 1, 9.0); // overwrite
+        assert_eq!(m.get(0, 1), 9.0);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn mcsr_to_csr() {
+        let mut m = SparseMcsr::zeros(3, 4);
+        m.set(0, 0, 1.0);
+        m.set(0, 2, 2.0);
+        m.set(2, 0, 3.0);
+        m.set(2, 1, 4.0);
+        m.set(2, 3, 5.0);
+        assert_eq!(m.to_csr().to_dense(), sample_dense());
+    }
+}

@@ -1,0 +1,9 @@
+//! The SystemML runtime: matrix engine, NN builtins, interpreter,
+//! distributed blocked backend, parfor, and the PJRT accelerator backend.
+
+pub mod accel;
+pub mod conv;
+pub mod dist;
+pub mod interp;
+pub mod matrix;
+pub mod parfor;

@@ -1,0 +1,336 @@
+//! parfor loop-carried dependency analysis.
+//!
+//! Mirrors SystemML's linear-function analysis [3]: a candidate result
+//! variable (defined before the loop and written inside it) is safe iff
+//! every write is a left-indexing whose row (or column) range is an affine
+//! function of the loop variable with disjoint footprints across
+//! iterations; whole-variable rebinds of outer variables are loop-carried
+//! dependencies and rejected (unless `check=0`).
+
+use std::collections::HashSet;
+
+use crate::dml::ast::*;
+use crate::runtime::interp::{Scope, Value};
+use crate::util::error::{DmlError, Result};
+
+/// An affine form `a * i + b` of an index expression in the loop var.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Affine {
+    pub a: f64,
+    pub b: f64,
+}
+
+/// Try to express `e` as affine in `var`, resolving other variables from
+/// the (pre-loop) scope as constants and loop-local scalar definitions
+/// from `locals` (scalar propagation, as in SystemML's linear analysis:
+/// `beg = (i-1)*bs + 1; P[beg:end,] = ...`). Returns None when non-affine.
+pub fn affine_of(
+    e: &Expr,
+    var: &str,
+    scope: &Scope,
+    locals: &std::collections::HashMap<String, Affine>,
+) -> Option<Affine> {
+    match e {
+        Expr::Num(v, _) => Some(Affine { a: 0.0, b: *v }),
+        Expr::Int(v, _) => Some(Affine { a: 0.0, b: *v as f64 }),
+        Expr::Var(name, _) if name == var => Some(Affine { a: 1.0, b: 0.0 }),
+        Expr::Var(name, _) => {
+            if let Some(f) = locals.get(name) {
+                return Some(*f);
+            }
+            let v = scope.get(name)?;
+            match v {
+                Value::Double(d) => Some(Affine { a: 0.0, b: *d }),
+                Value::Int(i) => Some(Affine { a: 0.0, b: *i as f64 }),
+                _ => None,
+            }
+        }
+        Expr::Unary { op: AstUnOp::Neg, operand, .. } => {
+            let f = affine_of(operand, var, scope, locals)?;
+            Some(Affine { a: -f.a, b: -f.b })
+        }
+        Expr::Binary { op, lhs, rhs, .. } => {
+            let l = affine_of(lhs, var, scope, locals)?;
+            let r = affine_of(rhs, var, scope, locals)?;
+            match op {
+                AstBinOp::Add => Some(Affine { a: l.a + r.a, b: l.b + r.b }),
+                AstBinOp::Sub => Some(Affine { a: l.a - r.a, b: l.b - r.b }),
+                AstBinOp::Mul => {
+                    // Affine only when one side is constant.
+                    if l.a == 0.0 {
+                        Some(Affine { a: l.b * r.a, b: l.b * r.b })
+                    } else if r.a == 0.0 {
+                        Some(Affine { a: l.a * r.b, b: l.b * r.b })
+                    } else {
+                        None
+                    }
+                }
+                AstBinOp::Div if r.a == 0.0 && r.b != 0.0 => {
+                    Some(Affine { a: l.a / r.b, b: l.b / r.b })
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// The write footprint of one dimension of an indexed write, as affine
+/// bounds [lo, hi] in the loop variable.
+#[derive(Clone, Copy, Debug)]
+pub enum DimFootprint {
+    /// Entire dimension (e.g. `X[i, ]` columns).
+    All,
+    /// [lo(i), hi(i)] affine bounds.
+    Span(Affine, Affine),
+    /// Not analyzable.
+    Unknown,
+}
+
+fn dim_footprint(
+    r: &IndexRange,
+    var: &str,
+    scope: &Scope,
+    locals: &std::collections::HashMap<String, Affine>,
+) -> DimFootprint {
+    match r {
+        IndexRange::All => DimFootprint::All,
+        IndexRange::Single(e) => match affine_of(e, var, scope, locals) {
+            Some(f) => DimFootprint::Span(f, f),
+            None => DimFootprint::Unknown,
+        },
+        IndexRange::Range(a, b) => {
+            match (affine_of(a, var, scope, locals), affine_of(b, var, scope, locals)) {
+                (Some(fa), Some(fb)) => DimFootprint::Span(fa, fb),
+                _ => DimFootprint::Unknown,
+            }
+        }
+    }
+}
+
+/// Is a span footprint disjoint across distinct iterations i != j?
+/// [lo, hi] with lo = a·i + b1, hi = a·i + b2 (same slope required):
+/// disjoint iff |a| > (b2 - b1)  i.e. the stride exceeds the span width.
+fn span_disjoint(lo: Affine, hi: Affine) -> bool {
+    if (lo.a - hi.a).abs() > 1e-9 {
+        return false; // widths vary with i — give up conservatively
+    }
+    let width = hi.b - lo.b;
+    if width < 0.0 {
+        return false;
+    }
+    lo.a.abs() > width + 1e-9
+}
+
+/// Result of the dependency check.
+#[derive(Clone, Debug, Default)]
+pub struct DepReport {
+    /// Matrix result variables safe to merge after the loop.
+    pub result_vars: Vec<String>,
+    /// Human-readable explanations for rejected loops.
+    pub violations: Vec<String>,
+}
+
+/// Analyze a parfor body. `outer` is the pre-loop scope.
+pub fn analyze(var: &str, body: &[Stmt], outer: &Scope) -> Result<DepReport> {
+    let mut report = DepReport::default();
+    let mut locals: HashSet<String> = HashSet::new();
+    locals.insert(var.to_string());
+    let mut result_vars: HashSet<String> = HashSet::new();
+    let mut affine_locals: std::collections::HashMap<String, Affine> = Default::default();
+    check_block(
+        var,
+        body,
+        outer,
+        &mut locals,
+        &mut affine_locals,
+        &mut result_vars,
+        &mut report.violations,
+    );
+    report.result_vars = result_vars.into_iter().collect();
+    report.result_vars.sort();
+    if report.violations.is_empty() {
+        Ok(report)
+    } else {
+        Err(DmlError::val(format!(
+            "parfor dependency analysis failed:\n  {}",
+            report.violations.join("\n  ")
+        )))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_block(
+    var: &str,
+    body: &[Stmt],
+    outer: &Scope,
+    locals: &mut HashSet<String>,
+    affine_locals: &mut std::collections::HashMap<String, Affine>,
+    result_vars: &mut HashSet<String>,
+    violations: &mut Vec<String>,
+) {
+    for stmt in body {
+        match stmt {
+            Stmt::Assign { target, value, .. } => match target {
+                AssignTarget::Var(name) => {
+                    // Scalar propagation for the footprint analysis.
+                    match affine_of(value, var, outer, affine_locals) {
+                        Some(f) => {
+                            affine_locals.insert(name.clone(), f);
+                        }
+                        None => {
+                            affine_locals.remove(name);
+                        }
+                    }
+                    if outer.contains_key(name) && !locals.contains(name) {
+                        // Rebinding an outer variable — loop-carried.
+                        violations.push(format!(
+                            "line {}: variable '{name}' is defined before the loop and \
+                             re-assigned as a whole inside it (loop-carried dependency)",
+                            stmt.pos().line
+                        ));
+                    }
+                    locals.insert(name.clone());
+                }
+                AssignTarget::Indexed { name, rows, cols } => {
+                    if locals.contains(name) {
+                        continue; // local accumulation is iteration-private
+                    }
+                    if !outer.contains_key(name) {
+                        violations.push(format!(
+                            "line {}: left-indexing into '{name}' which is not defined \
+                             before the parfor",
+                            stmt.pos().line
+                        ));
+                        continue;
+                    }
+                    let rfp = dim_footprint(rows, var, outer, affine_locals);
+                    let cfp = dim_footprint(cols, var, outer, affine_locals);
+                    let row_disjoint = matches!(rfp, DimFootprint::Span(lo, hi) if span_disjoint(lo, hi));
+                    let col_disjoint = matches!(cfp, DimFootprint::Span(lo, hi) if span_disjoint(lo, hi));
+                    let unknown = matches!(rfp, DimFootprint::Unknown)
+                        || matches!(cfp, DimFootprint::Unknown);
+                    if (row_disjoint || col_disjoint) && !unknown {
+                        result_vars.insert(name.clone());
+                    } else {
+                        violations.push(format!(
+                            "line {}: write footprint of '{name}' is not provably disjoint \
+                             across iterations (index must be affine in '{var}' with stride \
+                             exceeding the written span)",
+                            stmt.pos().line
+                        ));
+                    }
+                }
+            },
+            Stmt::MultiAssign { targets, .. } => {
+                for t in targets {
+                    if outer.contains_key(t) && !locals.contains(t) {
+                        violations.push(format!(
+                            "line {}: multi-assignment rebinds outer variable '{t}'",
+                            stmt.pos().line
+                        ));
+                    }
+                    locals.insert(t.clone());
+                }
+            }
+            Stmt::If { then_branch, else_branch, .. } => {
+                check_block(var, then_branch, outer, locals, affine_locals, result_vars, violations);
+                check_block(var, else_branch, outer, locals, affine_locals, result_vars, violations);
+            }
+            Stmt::For { var: v2, body, .. } | Stmt::ParFor { var: v2, body, .. } => {
+                locals.insert(v2.clone());
+                // Inner loop vars are not affine in the outer loop var.
+                affine_locals.remove(v2);
+                check_block(var, body, outer, locals, affine_locals, result_vars, violations);
+            }
+            Stmt::While { body, .. } => {
+                check_block(var, body, outer, locals, affine_locals, result_vars, violations);
+            }
+            Stmt::ExprStmt { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+    use crate::runtime::matrix::Matrix;
+
+    fn scope_with(names: &[(&str, Value)]) -> Scope {
+        names.iter().map(|(n, v)| (n.to_string(), v.clone())).collect()
+    }
+
+    fn body_of(src: &str) -> (String, Vec<Stmt>) {
+        let prog = parse(src).unwrap();
+        match prog.body.into_iter().next().unwrap() {
+            Stmt::ParFor { var, body, .. } => (var, body),
+            other => panic!("expected parfor, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn row_partitioned_write_is_safe() {
+        let (var, body) = body_of("parfor (i in 1:10) { P[i, ] = i }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(10, 3)))]);
+        let rep = analyze(&var, &body, &outer).unwrap();
+        assert_eq!(rep.result_vars, vec!["P".to_string()]);
+    }
+
+    #[test]
+    fn strided_range_write_is_safe() {
+        // rows (i-1)*4+1 : i*4 — stride 4, span 3 → disjoint.
+        let (var, body) = body_of("parfor (i in 1:5) { P[(i-1)*4+1 : i*4, ] = 1 }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(20, 2)))]);
+        assert!(analyze(&var, &body, &outer).is_ok());
+    }
+
+    #[test]
+    fn overlapping_range_rejected() {
+        // rows i : i+5 — stride 1, span 5 → overlapping.
+        let (var, body) = body_of("parfor (i in 1:5) { P[i : i+5, ] = 1 }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(20, 2)))]);
+        assert!(analyze(&var, &body, &outer).is_err());
+    }
+
+    #[test]
+    fn scalar_accumulation_rejected() {
+        let (var, body) = body_of("parfor (i in 1:5) { s = s + i }");
+        let outer = scope_with(&[("s", Value::Double(0.0))]);
+        assert!(analyze(&var, &body, &outer).is_err());
+    }
+
+    #[test]
+    fn constant_index_rejected() {
+        let (var, body) = body_of("parfor (i in 1:5) { P[1, ] = i }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(5, 2)))]);
+        assert!(analyze(&var, &body, &outer).is_err());
+    }
+
+    #[test]
+    fn local_temporaries_allowed() {
+        let (var, body) = body_of("parfor (i in 1:5) { tmp = i * 2; P[i, ] = tmp }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(5, 2)))]);
+        let rep = analyze(&var, &body, &outer).unwrap();
+        assert_eq!(rep.result_vars, vec!["P".to_string()]);
+    }
+
+    #[test]
+    fn column_partitioned_write_is_safe() {
+        let (var, body) = body_of("parfor (j in 1:4) { P[, j] = j }");
+        let outer = scope_with(&[("P", Value::Matrix(Matrix::zeros(3, 4)))]);
+        assert!(analyze(&var, &body, &outer).is_ok());
+    }
+
+    #[test]
+    fn affine_extraction() {
+        let prog = parse("y = (i-1)*32 + 1").unwrap();
+        let e = match &prog.body[0] {
+            Stmt::Assign { value, .. } => value.clone(),
+            _ => unreachable!(),
+        };
+        let f = affine_of(&e, "i", &Scope::new(), &Default::default()).unwrap();
+        assert_eq!(f.a, 32.0);
+        assert_eq!(f.b, -31.0);
+    }
+}

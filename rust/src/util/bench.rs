@@ -1,0 +1,182 @@
+//! Hand-rolled benchmark harness.
+//!
+//! `criterion` is not available in the offline registry, so the
+//! `rust/benches/*.rs` targets (built with `harness = false`) use this
+//! module: warmup + timed iterations, robust summary statistics, and a
+//! paper-style table printer. Benches also report [`crate::util::metrics`]
+//! deltas (FLOPs, shuffle bytes, ...) next to wallclock, which is how the
+//! sparse/distributed experiments express their headline numbers.
+
+use std::time::{Duration, Instant};
+
+use crate::util::metrics::{self, MetricsSnapshot};
+
+/// Result of one measured configuration.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Configuration label (one table row).
+    pub label: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Median per-iteration wallclock.
+    pub median: Duration,
+    /// Mean per-iteration wallclock.
+    pub mean: Duration,
+    /// Min / max per-iteration wallclock.
+    pub min: Duration,
+    pub max: Duration,
+    /// Metrics delta across all timed iterations (divide by `iters`).
+    pub metrics: MetricsSnapshot,
+}
+
+impl Measurement {
+    /// FLOPs per iteration (from the global metrics counters).
+    pub fn flops_per_iter(&self) -> f64 {
+        self.metrics.flops as f64 / self.iters.max(1) as f64
+    }
+    /// GFLOP/s based on median time.
+    pub fn gflops(&self) -> f64 {
+        let s = self.median.as_secs_f64();
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.flops_per_iter() / s / 1e9
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed runs, then timed runs until either
+/// `min_iters` iterations and `min_time` elapsed (whichever is later),
+/// capped at `max_iters`.
+pub fn bench<F: FnMut()>(label: &str, mut f: F) -> Measurement {
+    bench_config(label, BenchConfig::default(), &mut f)
+}
+
+/// Tunable harness parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Fully configurable variant of [`bench`].
+pub fn bench_config<F: FnMut()>(label: &str, cfg: BenchConfig, f: &mut F) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let m0 = metrics::global().snapshot();
+    let mut times = Vec::new();
+    let started = Instant::now();
+    while times.len() < cfg.max_iters
+        && (times.len() < cfg.min_iters || started.elapsed() < cfg.min_time)
+    {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    let m1 = metrics::global().snapshot();
+    times.sort();
+    let iters = times.len();
+    let median = times[iters / 2];
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    Measurement {
+        label: label.to_string(),
+        iters,
+        median,
+        mean,
+        min: times[0],
+        max: times[iters - 1],
+        metrics: m1.delta(&m0),
+    }
+}
+
+/// Format a duration compactly (µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Print a paper-style results table.
+///
+/// `columns` are header names for the per-row extra values produced by
+/// `extra(m)`; the harness prints label, median, and the extras.
+pub fn print_table(
+    title: &str,
+    rows: &[Measurement],
+    columns: &[&str],
+    extra: impl Fn(&Measurement) -> Vec<String>,
+) {
+    println!("\n=== {title} ===");
+    let mut header = vec!["config".to_string(), "median".to_string(), "iters".to_string()];
+    header.extend(columns.iter().map(|s| s.to_string()));
+    let mut table: Vec<Vec<String>> = vec![header];
+    for m in rows {
+        let mut row = vec![m.label.clone(), fmt_duration(m.median), m.iters.to_string()];
+        row.extend(extra(m));
+        table.push(row);
+    }
+    let ncols = table.iter().map(|r| r.len()).max().unwrap_or(0);
+    let mut widths = vec![0usize; ncols];
+    for row in &table {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    for (ri, row) in table.iter().enumerate() {
+        let line: Vec<String> =
+            row.iter().enumerate().map(|(i, c)| format!("{:<w$}", c, w = widths[i])).collect();
+        println!("  {}", line.join("  "));
+        if ri == 0 {
+            println!("  {}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut count = 0usize;
+        let cfg = BenchConfig {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 5,
+            min_time: Duration::from_millis(1),
+        };
+        let m = bench_config("t", cfg, &mut || {
+            count += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert!(m.iters >= 3);
+        assert!(count >= 4); // warmup + timed
+        assert!(m.median >= Duration::from_micros(100));
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the DML compiler and runtime.
+#[derive(Error, Debug)]
+pub enum DmlError {
+    /// Lexical error with source position.
+    #[error("lex error at line {line}, col {col}: {msg}")]
+    Lex { line: usize, col: usize, msg: String },
+
+    /// Parse error with source position.
+    #[error("parse error at line {line}, col {col}: {msg}")]
+    Parse { line: usize, col: usize, msg: String },
+
+    /// Semantic validation error (types, shapes, unknown identifiers).
+    #[error("validation error: {0}")]
+    Validate(String),
+
+    /// Runtime error raised while executing a program.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Dimension mismatch in a matrix operation.
+    #[error("dimension mismatch in {op}: lhs {lhs_rows}x{lhs_cols}, rhs {rhs_rows}x{rhs_cols}")]
+    DimMismatch { op: String, lhs_rows: usize, lhs_cols: usize, rhs_rows: usize, rhs_cols: usize },
+
+    /// I/O error (script files, matrix files, artifacts).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Accelerator backend error (PJRT compile/execute).
+    #[error("accelerator error: {0}")]
+    Accel(String),
+}
+
+impl DmlError {
+    /// Shorthand constructor for runtime errors.
+    pub fn rt(msg: impl Into<String>) -> Self {
+        DmlError::Runtime(msg.into())
+    }
+    /// Shorthand constructor for validation errors.
+    pub fn val(msg: impl Into<String>) -> Self {
+        DmlError::Validate(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DmlError>;

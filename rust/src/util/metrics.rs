@@ -1,0 +1,160 @@
+//! Global runtime metrics.
+//!
+//! SystemML exposes statistics (`-stats`) about executed instructions,
+//! FLOPs, spark shuffle volume, GPU transfers etc. We keep the analogous
+//! counters here as process-global atomics so the benches can attribute
+//! work (e.g. FLOP reduction of sparse operators, shuffle bytes of
+//! distributed plans) without threading a handle everywhere.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global counters. All methods are lock-free.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Floating point operations executed by matrix kernels (mul+add = 2).
+    pub flops: AtomicU64,
+    /// Bytes moved through simulated-cluster shuffles.
+    pub shuffle_bytes: AtomicU64,
+    /// Bytes broadcast to simulated workers.
+    pub broadcast_bytes: AtomicU64,
+    /// Distributed tasks launched.
+    pub dist_tasks: AtomicU64,
+    /// parfor tasks launched.
+    pub parfor_tasks: AtomicU64,
+    /// Host->device bytes copied by the accelerator backend.
+    pub h2d_bytes: AtomicU64,
+    /// Device->host bytes copied by the accelerator backend.
+    pub d2h_bytes: AtomicU64,
+    /// Device buffer evictions (LRU).
+    pub device_evictions: AtomicU64,
+    /// Accelerator executions.
+    pub accel_launches: AtomicU64,
+    /// Interpreter instructions executed.
+    pub instructions: AtomicU64,
+    /// Sparse-operator invocations (any of the sparse physical operators).
+    pub sparse_ops: AtomicU64,
+    /// Dense-operator invocations.
+    pub dense_ops: AtomicU64,
+}
+
+static GLOBAL: Metrics = Metrics {
+    flops: AtomicU64::new(0),
+    shuffle_bytes: AtomicU64::new(0),
+    broadcast_bytes: AtomicU64::new(0),
+    dist_tasks: AtomicU64::new(0),
+    parfor_tasks: AtomicU64::new(0),
+    h2d_bytes: AtomicU64::new(0),
+    d2h_bytes: AtomicU64::new(0),
+    device_evictions: AtomicU64::new(0),
+    accel_launches: AtomicU64::new(0),
+    instructions: AtomicU64::new(0),
+    sparse_ops: AtomicU64::new(0),
+    dense_ops: AtomicU64::new(0),
+};
+
+/// Access the global metrics instance.
+pub fn global() -> &'static Metrics {
+    &GLOBAL
+}
+
+impl Metrics {
+    #[inline]
+    pub fn add_flops(&self, n: u64) {
+        self.flops.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_shuffle(&self, bytes: u64) {
+        self.shuffle_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_broadcast(&self, bytes: u64) {
+        self.broadcast_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            flops: self.flops.load(Ordering::Relaxed),
+            shuffle_bytes: self.shuffle_bytes.load(Ordering::Relaxed),
+            broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
+            dist_tasks: self.dist_tasks.load(Ordering::Relaxed),
+            parfor_tasks: self.parfor_tasks.load(Ordering::Relaxed),
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            device_evictions: self.device_evictions.load(Ordering::Relaxed),
+            accel_launches: self.accel_launches.load(Ordering::Relaxed),
+            instructions: self.instructions.load(Ordering::Relaxed),
+            sparse_ops: self.sparse_ops.load(Ordering::Relaxed),
+            dense_ops: self.dense_ops.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset all counters to zero (benches call this between configs).
+    pub fn reset(&self) {
+        self.flops.store(0, Ordering::Relaxed);
+        self.shuffle_bytes.store(0, Ordering::Relaxed);
+        self.broadcast_bytes.store(0, Ordering::Relaxed);
+        self.dist_tasks.store(0, Ordering::Relaxed);
+        self.parfor_tasks.store(0, Ordering::Relaxed);
+        self.h2d_bytes.store(0, Ordering::Relaxed);
+        self.d2h_bytes.store(0, Ordering::Relaxed);
+        self.device_evictions.store(0, Ordering::Relaxed);
+        self.accel_launches.store(0, Ordering::Relaxed);
+        self.instructions.store(0, Ordering::Relaxed);
+        self.sparse_ops.store(0, Ordering::Relaxed);
+        self.dense_ops.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-old-data snapshot of [`Metrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub flops: u64,
+    pub shuffle_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub dist_tasks: u64,
+    pub parfor_tasks: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub device_evictions: u64,
+    pub accel_launches: u64,
+    pub instructions: u64,
+    pub sparse_ops: u64,
+    pub dense_ops: u64,
+}
+
+impl MetricsSnapshot {
+    /// Counter deltas since `earlier`.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            flops: self.flops - earlier.flops,
+            shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,
+            broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
+            dist_tasks: self.dist_tasks - earlier.dist_tasks,
+            parfor_tasks: self.parfor_tasks - earlier.parfor_tasks,
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            device_evictions: self.device_evictions - earlier.device_evictions,
+            accel_launches: self.accel_launches - earlier.accel_launches,
+            instructions: self.instructions - earlier.instructions,
+            sparse_ops: self.sparse_ops - earlier.sparse_ops,
+            dense_ops: self.dense_ops - earlier.dense_ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_tracks_increments() {
+        let before = global().snapshot();
+        global().add_flops(100);
+        global().add_shuffle(64);
+        let after = global().snapshot();
+        let d = after.delta(&before);
+        assert!(d.flops >= 100);
+        assert!(d.shuffle_bytes >= 64);
+    }
+}

@@ -1,0 +1,13 @@
+//! Utility modules shared across the stack: error types, a deterministic
+//! PRNG (the offline registry ships no `rand` crate), a minimal JSON
+//! parser (no `serde`), a bench harness (no `criterion`), and a small
+//! property-testing helper (no `proptest`). See DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod error;
+pub mod json;
+pub mod metrics;
+pub mod prng;
+pub mod quickcheck;
+
+pub use error::{DmlError, Result};

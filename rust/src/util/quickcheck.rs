@@ -1,0 +1,94 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `forall` drives a property over `cases` random inputs drawn from a
+//! generator closure; on failure it re-runs the generator seed and reports
+//! the failing case index + seed so the case can be reproduced
+//! deterministically. Shrinking is approximated by `forall_sized`, which
+//! retries failures at smaller size parameters first.
+
+use crate::util::prng::Prng;
+
+/// Number of cases run per property by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` inputs produced by `gen`. Panics with a
+/// reproducible seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Prng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}):\n{input:#?}");
+        }
+    }
+}
+
+/// Like [`forall`], but the generator receives a size parameter that grows
+/// with the case index — small counterexamples are found first, which is a
+/// poor man's shrinking.
+pub fn forall_sized<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    max_size: usize,
+    mut gen: impl FnMut(&mut Prng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x51ED_0000 + case as u64;
+        let size = 1 + case * max_size / cases.max(1);
+        let mut rng = Prng::new(seed);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, size {size}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Assert two f64s are close (absolute + relative tolerance).
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    if a.is_nan() && b.is_nan() {
+        return true;
+    }
+    let diff = (a - b).abs();
+    diff <= tol || diff <= tol * a.abs().max(b.abs())
+}
+
+/// Assert two slices are elementwise close.
+pub fn approx_eq_slice(a: &[f64], b: &[f64], tol: f64) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| approx_eq(*x, *y, tol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall("x*0==0", 32, |r| r.uniform(-1e6, 1e6), |x| x * 0.0 == 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn forall_reports_failures() {
+        forall("always-false", 8, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(approx_eq(1e9, 1e9 * (1.0 + 1e-10), 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-9));
+        assert!(approx_eq(f64::NAN, f64::NAN, 1e-9));
+    }
+}

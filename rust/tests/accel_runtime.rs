@@ -1,0 +1,186 @@
+//! Accelerator backend integration: load AOT artifacts, execute via PJRT,
+//! and check numerics against the CP runtime. Requires `make artifacts`.
+
+use systemml::conf::SystemConfig;
+use systemml::runtime::accel::AccelBackend;
+use systemml::runtime::conv::{self, ConvShape};
+use systemml::runtime::matrix::randgen::{rand, synthetic_classification, Pdf};
+use systemml::runtime::matrix::{mult, Matrix};
+use systemml::util::quickcheck::approx_eq_slice;
+
+fn backend() -> Option<AccelBackend> {
+    let mut config = SystemConfig::default();
+    config.accel_enabled = true;
+    match AccelBackend::open(&config) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            // Artifacts not built: skip (CI runs `make artifacts` first).
+            eprintln!("skipping accel tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn matmul_offload_matches_cp() {
+    let Some(b) = backend() else { return };
+    let x = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+    let y = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 2).unwrap();
+    let accel = b.try_matmult(&x, &y).unwrap().expect("256^3 artifact exists");
+    let cp = mult::matmult(&x, &y).unwrap();
+    assert!(approx_eq_slice(&accel.to_row_major_vec(), &cp.to_row_major_vec(), 1e-9));
+}
+
+#[test]
+fn matmul_without_artifact_falls_back() {
+    let Some(b) = backend() else { return };
+    let x = Matrix::filled(33, 17, 1.0);
+    let y = Matrix::filled(17, 5, 1.0);
+    assert!(b.try_matmult(&x, &y).unwrap().is_none(), "no artifact for 33x17x5");
+}
+
+#[test]
+fn conv2d_offload_matches_cp() {
+    let Some(b) = backend() else { return };
+    let sh = ConvShape { c: 1, h: 28, w: 28, k: 8, r: 3, s: 3, stride: (1, 1), pad: (1, 1) };
+    let x = rand(16, 784, 0.0, 1.0, 1.0, Pdf::Uniform, 3).unwrap();
+    let w = rand(8, 9, -1.0, 1.0, 1.0, Pdf::Uniform, 4).unwrap();
+    let accel = b.try_conv2d(&x, &w, &sh).unwrap().expect("lenet conv1 artifact");
+    let cp = conv::conv2d(&x, &w, &sh).unwrap();
+    assert!(approx_eq_slice(&accel.to_row_major_vec(), &cp.to_row_major_vec(), 1e-9));
+}
+
+#[test]
+fn fused_train_step_matches_dml_script() {
+    // The fused softmax_train_step artifact must compute exactly what the
+    // paper's §2 DML script computes for one iteration.
+    let Some(b) = backend() else { return };
+    let (x_all, y_all) = synthetic_classification(32, 784, 10, 5);
+    let w0 = rand(784, 10, -0.1, 0.1, 1.0, Pdf::Uniform, 6).unwrap();
+    let b0 = Matrix::zeros(1, 10).into_dense_format();
+
+    // Accel step.
+    let outs = b
+        .run_named("softmax_train_step_bs32_d784_k10", &[&x_all, &w0, &b0, &y_all])
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+
+    // CP step via DML.
+    let ctx = systemml::MLContext::new();
+    let script = systemml::Script::from_str(
+        r#"
+        source("nn/layers/softmax.dml") as softmax
+        source("nn/layers/cross_entropy_loss.dml") as ce
+        N = nrow(X)
+        scores = X %*% W + b
+        probs = softmax::forward(scores)
+        loss = ce::forward(probs, Y)
+        dscores = (probs - Y) / N
+        W2 = W - 0.1 * (t(X) %*% dscores)
+        b2 = b - 0.1 * colSums(dscores)
+        "#,
+    )
+    .input("X", x_all)
+    .input("Y", y_all)
+    .input("W", w0)
+    .input("b", b0)
+    .output("W2")
+    .output("b2")
+    .output("loss");
+    let res = ctx.execute(script).unwrap();
+
+    assert!(approx_eq_slice(
+        &outs[0].to_row_major_vec(),
+        &res.matrix("W2").unwrap().to_row_major_vec(),
+        1e-9
+    ));
+    assert!(approx_eq_slice(
+        &outs[1].to_row_major_vec(),
+        &res.matrix("b2").unwrap().to_row_major_vec(),
+        1e-9
+    ));
+    let accel_loss = outs[2].get(0, 0);
+    let cp_loss = res.double("loss").unwrap();
+    assert!((accel_loss - cp_loss).abs() < 1e-9, "loss {accel_loss} vs {cp_loss}");
+}
+
+#[test]
+fn accel_metrics_recorded() {
+    let Some(b) = backend() else { return };
+    let before = systemml::util::metrics::global().snapshot();
+    let x = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 7).unwrap();
+    let y = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 8).unwrap();
+    b.try_matmult(&x, &y).unwrap().unwrap();
+    let d = systemml::util::metrics::global().snapshot().delta(&before);
+    assert!(d.accel_launches >= 1);
+    assert!(d.h2d_bytes >= (2 * 256 * 256 * 8) as u64);
+    assert!(d.d2h_bytes >= (256 * 256 * 8) as u64);
+}
+
+#[test]
+fn compile_cache_reused() {
+    let Some(b) = backend() else { return };
+    let x = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 9).unwrap();
+    let y = rand(256, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 10).unwrap();
+    let t0 = std::time::Instant::now();
+    b.try_matmult(&x, &y).unwrap().unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        b.try_matmult(&x, &y).unwrap().unwrap();
+    }
+    let warm = t1.elapsed() / 3;
+    assert!(warm < first, "warm {warm:?} should be faster than cold {first:?} (compile cached)");
+}
+
+#[test]
+fn dml_script_uses_accel_when_enabled() {
+    // conv2d builtin routed through the accelerator from DML.
+    let mut config = SystemConfig::default();
+    config.accel_enabled = true;
+    if AccelBackend::open(&config).is_err() {
+        return;
+    }
+    let ctx = systemml::MLContext::with_config(config);
+    let before = systemml::util::metrics::global().snapshot();
+    let script = systemml::Script::from_str(
+        r#"
+        X = rand(rows=16, cols=784, min=0, max=1, seed=1)
+        W = rand(rows=8, cols=9, min=-1, max=1, seed=2)
+        out = conv2d(X, W, input_shape=[16,1,28,28], filter_shape=[8,1,3,3],
+                     stride=[1,1], padding=[1,1])
+        s = sum(out)
+        "#,
+    )
+    .output("s");
+    let res = ctx.execute(script).unwrap();
+    let d = systemml::util::metrics::global().snapshot().delta(&before);
+    assert!(d.accel_launches >= 1, "conv2d should offload to the accelerator");
+    assert!(res.double("s").unwrap().is_finite());
+}
+
+#[test]
+fn pallas_twin_artifacts_match_native() {
+    // L1 validation: the interpret-mode Pallas kernel graphs must compute
+    // exactly what the XLA-native graphs compute (same HLO interface).
+    let Some(b) = backend() else { return };
+    let x = rand(384, 384, -1.0, 1.0, 1.0, Pdf::Uniform, 21).unwrap();
+    let y = rand(384, 384, -1.0, 1.0, 1.0, Pdf::Uniform, 22).unwrap();
+    let native = b.run_named("matmul_384x384x384", &[&x, &y]).unwrap();
+    let pallas = b.run_named("matmul_384x384x384_pallas", &[&x, &y]).unwrap();
+    assert!(approx_eq_slice(
+        &native[0].to_row_major_vec(),
+        &pallas[0].to_row_major_vec(),
+        1e-12
+    ));
+
+    let (xs, ys) = synthetic_classification(32, 784, 10, 23);
+    let w0 = rand(784, 10, -0.1, 0.1, 1.0, Pdf::Uniform, 24).unwrap();
+    let b0 = Matrix::zeros(1, 10).into_dense_format();
+    let native = b.run_named("softmax_train_step_bs32_d784_k10", &[&xs, &w0, &b0, &ys]).unwrap();
+    let pallas =
+        b.run_named("softmax_train_step_bs32_d784_k10_pallas", &[&xs, &w0, &b0, &ys]).unwrap();
+    for (n, p) in native.iter().zip(&pallas) {
+        assert!(approx_eq_slice(&n.to_row_major_vec(), &p.to_row_major_vec(), 1e-12));
+    }
+}

@@ -1,0 +1,260 @@
+//! Classic-ML algorithm scripts (`scripts/algorithms/`): the paper's
+//! "unified framework for machine learning and deep learning" claim —
+//! the same language/runtime runs LinearRegCG, multinomial logistic
+//! regression, k-means and PCA next to the NN library.
+
+use systemml::api::{MLContext, Script};
+use systemml::runtime::matrix::agg;
+use systemml::runtime::matrix::randgen::{rand, synthetic_classification, Pdf};
+use systemml::runtime::matrix::{elementwise, mult, Matrix};
+
+fn ctx() -> MLContext {
+    MLContext::new()
+}
+
+#[test]
+fn linear_regression_cg_recovers_weights() {
+    // y = X w* + noise; CG must recover w* closely.
+    let n = 200;
+    let d = 12;
+    let x = rand(n, d, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+    let w_true = rand(d, 1, -2.0, 2.0, 1.0, Pdf::Uniform, 2).unwrap();
+    let noise = rand(n, 1, -0.01, 0.01, 1.0, Pdf::Uniform, 3).unwrap();
+    let y = elementwise::binary(
+        &mult::matmult(&x, &w_true).unwrap(),
+        &noise,
+        elementwise::BinOp::Add,
+    )
+    .unwrap();
+    let script = Script::from_str(
+        r#"
+        source("algorithms/lm_cg.dml") as lm
+        [w, final_norm, iters] = lm::train(X, y, 0.0001, 60, 0.0000001)
+        yhat = lm::predict(X, w)
+        mse = sum((yhat - y)^2) / nrow(y)
+        "#,
+    )
+    .input("X", x)
+    .input("y", y)
+    .output("w")
+    .output("mse")
+    .output("iters");
+    let res = ctx().execute(script).unwrap();
+    assert!(res.double("mse").unwrap() < 1e-3, "mse {}", res.double("mse").unwrap());
+    let w = res.matrix("w").unwrap();
+    for i in 0..d {
+        assert!(
+            (w.get(i, 0) - w_true.get(i, 0)).abs() < 0.05,
+            "w[{i}] {} vs {}",
+            w.get(i, 0),
+            w_true.get(i, 0)
+        );
+    }
+    assert!(res.double("iters").unwrap() <= 60.0);
+}
+
+#[test]
+fn logistic_regression_separates_classes() {
+    let (x, y) = synthetic_classification(240, 10, 3, 5);
+    let script = Script::from_str(
+        r#"
+        source("algorithms/logistic.dml") as mlr
+        [W, losses] = mlr::train(X, Y, 0.5, 0.001, 60)
+        P = mlr::predict(X, W)
+        acc = mean(rowIndexMax(P) == rowIndexMax(Y))
+        first_loss = as.scalar(losses[1, 1])
+        last_loss = as.scalar(losses[60, 1])
+        "#,
+    )
+    .input("X", x)
+    .input("Y", y)
+    .output("acc")
+    .output("first_loss")
+    .output("last_loss");
+    let res = ctx().execute(script).unwrap();
+    assert!(res.double("acc").unwrap() > 0.9, "acc {}", res.double("acc").unwrap());
+    assert!(res.double("last_loss").unwrap() < res.double("first_loss").unwrap() * 0.5);
+}
+
+#[test]
+fn kmeans_clusters_separated_blobs() {
+    // Three well-separated gaussian blobs; k-means must give low WCSS and
+    // consistent assignments within blobs.
+    let (x, y) = synthetic_classification(150, 6, 3, 9);
+    let script = Script::from_str(
+        r#"
+        source("algorithms/kmeans.dml") as km
+        [C, assign, wcss] = km::train(X, 3, 15, 7)
+        "#,
+    )
+    .input("X", x)
+    .output("C")
+    .output("assign")
+    .output("wcss");
+    let res = ctx().execute(script).unwrap();
+    assert_eq!(res.matrix("C").unwrap().shape(), (3, 6));
+    let assign = res.matrix("assign").unwrap();
+    // Cluster purity vs the generating labels (labels unknown to kmeans):
+    // for each true class, the dominant cluster should cover >80%.
+    let truth = agg::row_index_max(&y);
+    let mut purity_total = 0usize;
+    for class in 1..=3 {
+        let mut counts = [0usize; 4];
+        let mut class_n = 0usize;
+        for r in 0..150 {
+            if truth.get(r, 0) == class as f64 {
+                counts[assign.get(r, 0) as usize] += 1;
+                class_n += 1;
+            }
+        }
+        let dominant = *counts.iter().max().unwrap();
+        assert!(
+            dominant * 10 >= class_n * 8,
+            "class {class}: dominant cluster covers {dominant}/{class_n}"
+        );
+        purity_total += dominant;
+    }
+    assert!(purity_total >= 120);
+}
+
+#[test]
+fn pca_finds_dominant_direction() {
+    // Data stretched along a known direction: first component must align.
+    let n = 300;
+    let base = rand(n, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 11).unwrap();
+    let noise = rand(n, 4, -0.05, 0.05, 1.0, Pdf::Uniform, 12).unwrap();
+    // X = base * dir + noise, dir = (2, 1, 0, -1)/sqrt(6)
+    let dir = Matrix::from_rows(&[&[2.0, 1.0, 0.0, -1.0]]);
+    let x = elementwise::binary(
+        &mult::matmult(&base, &dir).unwrap(),
+        &noise,
+        elementwise::BinOp::Add,
+    )
+    .unwrap();
+    let script = Script::from_str(
+        r#"
+        source("algorithms/pca.dml") as pca
+        [components, evalues] = pca::train(X, 2, 80)
+        Z = pca::transform(X, components)
+        "#,
+    )
+    .input("X", x)
+    .output("components")
+    .output("evalues")
+    .output("Z");
+    let res = ctx().execute(script).unwrap();
+    let comp = res.matrix("components").unwrap();
+    // cos similarity of first component with the true direction.
+    let norm_dir = 6.0f64.sqrt();
+    let mut dot = 0.0;
+    for i in 0..4 {
+        dot += comp.get(i, 0) * dir.get(0, i) / norm_dir;
+    }
+    assert!(dot.abs() > 0.99, "cosine {dot}");
+    let ev = res.matrix("evalues").unwrap();
+    assert!(ev.get(0, 0) > 10.0 * ev.get(1, 0), "dominant eigenvalue must dominate");
+    assert_eq!(res.matrix("Z").unwrap().shape(), (n, 2));
+}
+
+#[test]
+fn extended_layers_smoke_and_gradients() {
+    // The U-Net/transformer-plumbing layers added beyond the core 24.
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/gelu.dml") as gelu
+        source("nn/layers/swish.dml") as swish
+        source("nn/layers/softplus.dml") as softplus
+        source("nn/layers/huber_loss.dml") as huber
+        source("nn/layers/layer_norm.dml") as ln
+        source("nn/layers/global_avg_pool2d.dml") as gap
+        source("nn/layers/padding2d.dml") as padl
+        source("nn/layers/upsample2d.dml") as up
+
+        X = rand(rows=4, cols=8, min=-2, max=2, seed=1)
+        g = gelu::forward(X)
+        s = swish::forward(X)
+        sp = softplus::forward(X)
+        y = rand(rows=4, cols=8, min=-2, max=2, seed=2)
+        hl = huber::forward(X, y, 1.0)
+        [gamma, beta] = ln::init(8)
+        lno = ln::forward(X, gamma, beta, 0.00001)
+        lnm = max(abs(rowMeans(lno)))
+
+        I = rand(rows=2, cols=1*4*4, min=0, max=1, seed=3)
+        gp = gap::forward(I, 1, 4, 4)
+        [P, Hp, Wp] = padl::forward(I, 1, 4, 4, 1)
+        [U, Hu, Wu] = up::forward(I, 1, 4, 4)
+        up_mean_diff = abs(mean(U) - mean(I))
+        pad_sum_diff = abs(sum(P) - sum(I))
+        "#,
+            )
+            .output("g")
+            .output("s")
+            .output("sp")
+            .output("hl")
+            .output("lnm")
+            .output("gp")
+            .output("up_mean_diff")
+            .output("pad_sum_diff"),
+        )
+        .unwrap();
+    // gelu(0)=0 region sanity: outputs bounded by |x|.
+    assert_eq!(res.matrix("g").unwrap().shape(), (4, 8));
+    assert!(res.double("hl").unwrap() > 0.0);
+    assert!(res.double("lnm").unwrap() < 1e-9, "layer-norm rows must be zero-mean");
+    assert_eq!(res.matrix("gp").unwrap().shape(), (2, 1));
+    assert!(res.double("up_mean_diff").unwrap() < 1e-12, "NN upsample preserves the mean");
+    assert!(res.double("pad_sum_diff").unwrap() < 1e-12, "zero-padding preserves the sum");
+
+    // Numeric gradient checks for swish/softplus/huber.
+    for (name, setup, loss, grad) in [
+        (
+            "swish",
+            "source(\"nn/layers/swish.dml\") as l\ndout = matrix(1, rows=3, cols=4)",
+            "sum(l::forward(X))",
+            "l::backward(dout, X)",
+        ),
+        (
+            "softplus",
+            "source(\"nn/layers/softplus.dml\") as l\ndout = matrix(1, rows=3, cols=4)",
+            "sum(l::forward(X))",
+            "l::backward(dout, X)",
+        ),
+        (
+            "huber",
+            "source(\"nn/layers/huber_loss.dml\") as l\ny = matrix(0.2, rows=3, cols=4)",
+            "l::forward(X, y, 1.0)",
+            "l::backward(X, y, 1.0)",
+        ),
+    ] {
+        let x = rand(3, 4, -2.0, 2.0, 1.0, Pdf::Uniform, 55).unwrap();
+        let src = format!("{setup}\nloss_v = {loss}\ngrad_v = {grad}");
+        let script = Script::from_str(&src).input("X", x.clone()).output("grad_v");
+        let analytic = ctx().execute(script).unwrap().matrix("grad_v").unwrap();
+        let eps = 1e-5;
+        for idx in [0usize, 5, 11] {
+            let (r, c) = (idx / 4, idx % 4);
+            let mut xp = x.to_dense();
+            xp.set(r, c, xp.get(r, c) + eps);
+            let lp = eval_scalar(&format!("{setup}\nloss_v = {loss}"), &Matrix::Dense(xp.clone()));
+            xp.set(r, c, xp.get(r, c) - 2.0 * eps);
+            let lm = eval_scalar(&format!("{setup}\nloss_v = {loss}"), &Matrix::Dense(xp));
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic.get(r, c)).abs() < 1e-4,
+                "{name} grad at ({r},{c}): {numeric} vs {}",
+                analytic.get(r, c)
+            );
+        }
+    }
+}
+
+fn eval_scalar(src: &str, x: &Matrix) -> f64 {
+    ctx()
+        .execute(Script::from_str(src).input("X", x.clone()).output("loss_v"))
+        .unwrap()
+        .double("loss_v")
+        .unwrap()
+}

@@ -1,0 +1,114 @@
+//! Compiler-level tests: execution-type selection against the driver
+//! budget, memory estimates, rewrites, and plan explanation.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::hop::{estimate, rewrite};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::Matrix;
+use systemml::util::metrics;
+
+#[test]
+fn cp_chosen_when_under_budget() {
+    let ctx = MLContext::new(); // default 512 MB driver
+    let before = metrics::global().snapshot();
+    let script = Script::from_str("Y = X %*% X\ns = sum(Y)")
+        .input("X", Matrix::filled(64, 64, 1.0))
+        .output("s");
+    ctx.execute(script).unwrap();
+    let d = metrics::global().snapshot().delta(&before);
+    assert_eq!(d.dist_tasks, 0, "small matmult must stay CP");
+}
+
+#[test]
+fn dist_chosen_when_over_budget_and_correct() {
+    let mut config = SystemConfig::tiny_driver(32 * 1024);
+    config.block_size = 32;
+    let ctx = MLContext::with_config(config);
+    let before = metrics::global().snapshot();
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 3).unwrap();
+    let script = Script::from_str("Y = X %*% X\ns = sum(Y)").input("X", x.clone()).output("Y");
+    let res = ctx.execute(script).unwrap();
+    let d = metrics::global().snapshot().delta(&before);
+    assert!(d.dist_tasks > 0);
+    // Cross-check numerics against CP.
+    let cp = systemml::runtime::matrix::mult::matmult(&x, &x).unwrap();
+    assert!(systemml::util::quickcheck::approx_eq_slice(
+        &res.matrix("Y").unwrap().to_row_major_vec(),
+        &cp.to_row_major_vec(),
+        1e-9
+    ));
+}
+
+#[test]
+fn over_budget_without_dist_backend_errors() {
+    let mut config = SystemConfig::tiny_driver(16 * 1024);
+    config.dist_enabled = false;
+    let ctx = MLContext::with_config(config);
+    let script = Script::from_str("Y = X %*% X")
+        .input("X", Matrix::filled(128, 128, 1.0))
+        .output("Y");
+    assert!(ctx.execute(script).is_err(), "local-only mode must refuse over-budget plans");
+}
+
+#[test]
+fn sparsity_aware_estimates_keep_sparse_matmult_local() {
+    // A dense 400x400 matmult would blow a small budget, but at 1% density
+    // the worst-case estimate keeps it CP (sparse operator).
+    let budget = 900 * 1024; // 900 KB; dense would need ~3.8 MB
+    let ctx = MLContext::with_config(SystemConfig::tiny_driver(budget));
+    let x = rand(400, 400, -1.0, 1.0, 0.01, Pdf::Uniform, 4).unwrap();
+    assert!(x.is_sparse());
+    let before = metrics::global().snapshot();
+    let script = Script::from_str("Y = X %*% X\ns = sum(Y)").input("X", x).output("s");
+    ctx.execute(script).unwrap();
+    let d = metrics::global().snapshot().delta(&before);
+    assert_eq!(d.dist_tasks, 0, "sparse matmult should fit the driver budget");
+}
+
+#[test]
+fn estimates_are_monotone_in_shape() {
+    let small = estimate::estimate_size(100, 100, 1.0);
+    let large = estimate::estimate_size(1000, 1000, 1.0);
+    assert!(large > small * 50);
+    let sp = estimate::estimate_size(1000, 1000, 0.01);
+    assert!(sp < large / 10, "1% sparse estimate should be far below dense");
+}
+
+#[test]
+fn constant_folding_observable_via_explain() {
+    let ctx = MLContext::new();
+    let script = Script::from_str("y = 2 * 3 + 1");
+    let (bundle, _) = ctx.compile(&script).unwrap();
+    let plan = systemml::hop::explain::explain_bundle(&bundle, &ctx.config);
+    assert!(plan.contains("ASSIGN y <- 7"), "constant folding should appear in the plan:\n{plan}");
+}
+
+#[test]
+fn matmult_chain_dp_agrees_with_bruteforce_small() {
+    // Property: DP cost <= any left-to-right or right-to-left evaluation.
+    let dims = [37, 91, 13, 64, 5];
+    let (best, _) = rewrite::matmult_chain_order(&dims);
+    let mut left = 0u64;
+    for i in 1..dims.len() - 1 {
+        left += 2 * (dims[0] * dims[i] * dims[i + 1]) as u64;
+    }
+    let mut right = 0u64;
+    for i in (1..dims.len() - 1).rev() {
+        right += 2 * (dims[0] * dims[i] * dims[i + 1]) as u64; // same formula shape
+    }
+    assert!(best <= left.min(right));
+}
+
+#[test]
+fn explain_cli_shape() {
+    let ctx = MLContext::new();
+    let script = Script::from_str(
+        "parfor (i in 1:4) { v = i }\nwhile (FALSE) { q = 1 }\nif (1 > 0) { a = 1 } else { a = 2 }",
+    );
+    let (bundle, _) = ctx.compile(&script).unwrap();
+    let plan = systemml::hop::explain::explain_bundle(&bundle, &ctx.config);
+    for needle in ["PARFOR i", "WHILE", "IF", "ELSE", "--MAIN (3 stmts)"] {
+        assert!(plan.contains(needle), "missing {needle} in:\n{plan}");
+    }
+}

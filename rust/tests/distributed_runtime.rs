@@ -1,0 +1,156 @@
+//! Distributed-backend integration: blocked matrices over the simulated
+//! cluster agree with local execution, and the communication accounting
+//! matches the plan shapes (broadcast vs shuffle).
+
+use systemml::runtime::dist::{ops, BlockedMatrix, Cluster};
+use systemml::runtime::matrix::agg::AggOp;
+use systemml::runtime::matrix::elementwise::BinOp;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::{agg, elementwise, mult};
+use systemml::util::metrics;
+use systemml::util::quickcheck::{approx_eq_slice, forall_sized};
+use systemml::util::prng::Prng;
+
+#[test]
+fn property_blockify_roundtrip() {
+    forall_sized(
+        "blockify-roundtrip",
+        24,
+        200,
+        |rng: &mut Prng, size| {
+            let r = 1 + rng.next_usize(size.max(1));
+            let c = 1 + rng.next_usize(size.max(1));
+            let density = [1.0, 0.3, 0.02][rng.next_usize(3)];
+            rand(r, c, -1.0, 1.0, density, Pdf::Uniform, rng.next_u64()).unwrap()
+        },
+        |m| {
+            let b = BlockedMatrix::from_local(m, 32).unwrap();
+            b.to_local().unwrap() == *m && b.nnz() == m.nnz()
+        },
+    );
+}
+
+#[test]
+fn property_dist_matmult_equals_local() {
+    let cluster = Cluster::new(4, 24);
+    forall_sized(
+        "dist-matmult",
+        12,
+        80,
+        |rng: &mut Prng, size| {
+            let m = 1 + rng.next_usize(size.max(1));
+            let k = 1 + rng.next_usize(size.max(1));
+            let n = 1 + rng.next_usize(size.max(1));
+            let density = [1.0, 0.2][rng.next_usize(2)];
+            (
+                rand(m, k, -1.0, 1.0, density, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(k, n, -1.0, 1.0, density, Pdf::Uniform, rng.next_u64()).unwrap(),
+            )
+        },
+        |(a, b)| {
+            let local = mult::matmult(a, b).unwrap();
+            let dist = ops::matmult(&cluster, a, b).unwrap();
+            approx_eq_slice(&dist.to_row_major_vec(), &local.to_row_major_vec(), 1e-9)
+        },
+    );
+}
+
+#[test]
+fn property_dist_cellops_equal_local() {
+    let cluster = Cluster::new(3, 16);
+    forall_sized(
+        "dist-cellops",
+        16,
+        60,
+        |rng: &mut Prng, size| {
+            let r = 1 + rng.next_usize(size.max(1));
+            let c = 1 + rng.next_usize(size.max(1));
+            (
+                rand(r, c, -2.0, 2.0, 0.5, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(r, c, -2.0, 2.0, 0.5, Pdf::Uniform, rng.next_u64()).unwrap(),
+            )
+        },
+        |(a, b)| {
+            let ab = BlockedMatrix::from_local(a, 16).unwrap();
+            let bb = BlockedMatrix::from_local(b, 16).unwrap();
+            [BinOp::Add, BinOp::Mul, BinOp::Min].iter().all(|op| {
+                let local = elementwise::binary(a, b, *op).unwrap();
+                let dist =
+                    ops::binary_blocked(&cluster, &ab, &bb, *op).unwrap().to_local().unwrap();
+                approx_eq_slice(&dist.to_row_major_vec(), &local.to_row_major_vec(), 1e-12)
+            })
+        },
+    );
+}
+
+#[test]
+fn property_dist_aggregates_equal_local() {
+    let cluster = Cluster::new(4, 20);
+    forall_sized(
+        "dist-agg",
+        16,
+        70,
+        |rng: &mut Prng, size| {
+            let r = 1 + rng.next_usize(size.max(1));
+            let c = 1 + rng.next_usize(size.max(1));
+            rand(r, c, -2.0, 2.0, 0.4, Pdf::Uniform, rng.next_u64()).unwrap()
+        },
+        |m| {
+            let b = BlockedMatrix::from_local(m, 20).unwrap();
+            [AggOp::Sum, AggOp::Min, AggOp::Max, AggOp::Mean].iter().all(|op| {
+                (agg::full_agg(m, *op) - ops::full_agg_blocked(&cluster, &b, *op)).abs() < 1e-9
+            })
+        },
+    );
+}
+
+#[test]
+fn rmm_shuffles_mapmm_broadcasts() {
+    let cluster = Cluster::new(4, 64);
+    // Small rhs → mapmm (broadcast only).
+    let a = rand(256, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 9).unwrap();
+    let b = rand(128, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 10).unwrap();
+    let m0 = metrics::global().snapshot();
+    ops::matmult(&cluster, &a, &b).unwrap();
+    let d1 = metrics::global().snapshot().delta(&m0);
+    assert!(d1.broadcast_bytes > 0);
+    assert_eq!(d1.shuffle_bytes, 0);
+}
+
+#[test]
+fn worker_balance_on_uniform_blocks() {
+    let cluster = Cluster::new(4, 32);
+    cluster.reset_accounting();
+    let a = rand(512, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 11).unwrap();
+    let b = rand(128, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 12).unwrap();
+    ops::matmult(&cluster, &a, &b).unwrap();
+    let wf = cluster.worker_flops();
+    let max = *wf.iter().max().unwrap() as f64;
+    let min = *wf.iter().min().unwrap() as f64;
+    assert!(min > 0.0, "all workers busy: {wf:?}");
+    assert!(max / min < 4.0, "imbalance too high: {wf:?}");
+}
+
+#[test]
+fn modeled_scaling_is_linearish_for_balanced_work() {
+    // The E3-style modeled-time claim: doubling workers ~halves modeled
+    // time for shuffle-free, balanced workloads.
+    let a = rand(512, 256, -1.0, 1.0, 1.0, Pdf::Uniform, 13).unwrap();
+    let b = rand(256, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 14).unwrap();
+    let mut times = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let cluster = Cluster::new(workers, 64);
+        cluster.reset_accounting();
+        ops::matmult(&cluster, &a, &b).unwrap();
+        times.push(cluster.modeled_time_seconds(1e9, 0));
+    }
+    for w in 1..times.len() {
+        let speedup = times[0] / times[w];
+        let ideal = (1 << w) as f64;
+        assert!(
+            speedup > ideal * 0.5,
+            "modeled speedup at {}x workers: {speedup:.2} (ideal {ideal})",
+            1 << w
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! End-to-end interpreter tests: full DML programs through MLContext.
+
+use systemml::api::{MLContext, Script};
+use systemml::runtime::matrix::randgen::synthetic_classification;
+use systemml::runtime::matrix::Matrix;
+
+fn run(src: &str, inputs: &[(&str, Matrix)], outputs: &[&str]) -> systemml::api::Results {
+    let ctx = MLContext::new();
+    let mut script = Script::from_str(src);
+    for (n, m) in inputs {
+        script = script.input(n, m.clone());
+    }
+    for o in outputs {
+        script = script.output(o);
+    }
+    ctx.execute(script).unwrap()
+}
+
+#[test]
+fn control_flow_and_arithmetic() {
+    let res = run(
+        r#"
+        s = 0
+        for (i in 1:10) {
+          if (i %% 2 == 0) { s = s + i }
+        }
+        j = 0
+        while (j < 5) { j = j + 1 }
+        "#,
+        &[],
+        &["s", "j"],
+    );
+    assert_eq!(res.double("s").unwrap(), 30.0);
+    assert_eq!(res.double("j").unwrap(), 5.0);
+}
+
+#[test]
+fn matrix_indexing_and_left_indexing() {
+    let res = run(
+        r#"
+        X = matrix(seq(1, 12), rows=3, cols=4)
+        a = X[2, 3]
+        B = X[1:2, ]
+        X[3, ] = matrix(0, rows=1, cols=4)
+        rs = rowSums(X)
+        "#,
+        &[],
+        &["a", "B", "rs"],
+    );
+    assert_eq!(res.matrix("a").unwrap().get(0, 0), 7.0);
+    assert_eq!(res.matrix("B").unwrap().shape(), (2, 4));
+    assert_eq!(res.matrix("rs").unwrap().get(2, 0), 0.0);
+}
+
+#[test]
+fn user_functions_with_defaults_and_multireturn() {
+    let res = run(
+        r#"
+        stats = function(matrix[double] X, double scale = 2.0)
+            return (double s, double m) {
+          s = sum(X) * scale
+          m = mean(X)
+        }
+        [a, b] = stats(matrix(3, rows=2, cols=2))
+        c = stats(matrix(1, rows=1, cols=1), scale=10)
+        "#,
+        &[],
+        &["a", "b", "c"],
+    );
+    assert_eq!(res.double("a").unwrap(), 24.0);
+    assert_eq!(res.double("b").unwrap(), 3.0);
+    assert_eq!(res.double("c").unwrap(), 10.0);
+}
+
+#[test]
+fn recursion_bounded() {
+    let ctx = MLContext::new();
+    let script = Script::from_str(
+        "f = function(int n) return (int y) { if (n <= 0) { y = 0 } else { y = f(n - 1) } }\nz = f(10000)",
+    )
+    .output("z");
+    assert!(ctx.execute(script).is_err(), "deep recursion must error, not overflow");
+}
+
+#[test]
+fn paper_softmax_classifier_script_trains() {
+    // The §2 DML listing, lightly adapted (real nn file layout, loss print).
+    let src = r#"
+source("nn/layers/affine.dml") as affine
+source("nn/layers/cross_entropy_loss.dml") as cross_entropy_loss
+source("nn/layers/softmax.dml") as softmax
+source("nn/optim/sgd.dml") as sgd
+
+train = function(matrix[double] X, matrix[double] Y)
+    return (matrix[double] W, matrix[double] b, double first_loss, double last_loss) {
+  D = ncol(X)  # num features
+  K = ncol(Y)  # num classes
+  lr = 0.1; batch_size = 32; num_iter = nrow(X) / batch_size
+  [W, b] = affine::init(D, K)
+  first_loss = 0; last_loss = 0
+  for (i in 1:num_iter) {
+    # Get batch
+    beg = (i-1)*batch_size + 1; end = beg + batch_size - 1
+    X_batch = X[beg:end,]; y_batch = Y[beg:end,]
+    # Perform forward pass
+    scores = affine::forward(X_batch, W, b)
+    probs = softmax::forward(scores)
+    loss = cross_entropy_loss::forward(probs, y_batch)
+    if (i == 1) { first_loss = loss }
+    last_loss = loss
+    # Perform backward pass
+    dprobs = cross_entropy_loss::backward(probs, y_batch)
+    dscores = softmax::backward(dprobs, scores)
+    [dX_batch, dW, db] = affine::backward(dscores, X_batch, W, b)
+    # Perform update
+    W = sgd::update(W, dW, lr)
+    b = sgd::update(b, db, lr)
+  }
+}
+
+[W, b, first_loss, last_loss] = train(X, Y)
+"#;
+    let (x, y) = synthetic_classification(320, 16, 4, 11);
+    let res = run(src, &[("X", x), ("Y", y)], &["W", "b", "first_loss", "last_loss"]);
+    let first = res.double("first_loss").unwrap();
+    let last = res.double("last_loss").unwrap();
+    assert!(first > 0.5, "initial loss should be near ln(4)≈1.39, got {first}");
+    assert!(last < first * 0.6, "loss should drop: first {first}, last {last}");
+    assert_eq!(res.matrix("W").unwrap().shape(), (16, 4));
+}
+
+#[test]
+fn parfor_row_partitioned_scoring() {
+    let res = run(
+        r#"
+        n = nrow(X)
+        P = matrix(0, rows=n, cols=1)
+        parfor (i in 1:n) {
+          P[i, ] = sum(X[i, ]) * 2
+        }
+        total = sum(P)
+        "#,
+        &[("X", Matrix::filled(64, 8, 0.5))],
+        &["P", "total"],
+    );
+    assert_eq!(res.double("total").unwrap(), 64.0 * 8.0);
+    assert_eq!(res.matrix("P").unwrap().get(63, 0), 8.0);
+}
+
+#[test]
+fn parfor_detects_dependencies() {
+    let ctx = MLContext::new();
+    let script = Script::from_str(
+        "s = 0\nparfor (i in 1:10) { s = s + i }",
+    );
+    let err = ctx.execute(script);
+    assert!(err.is_err(), "scalar accumulation across parfor iterations must be rejected");
+}
+
+#[test]
+fn parfor_check0_overrides_analysis() {
+    // With check=0 the loop runs even though the analysis would reject it;
+    // row-disjoint writes still merge correctly.
+    let res = run(
+        r#"
+        P = matrix(0, rows=8, cols=2)
+        parfor (i in 1:8, check=0) {
+          P[i, ] = matrix(i, rows=1, cols=2)
+        }
+        t = sum(P)
+        "#,
+        &[],
+        &["t"],
+    );
+    assert_eq!(res.double("t").unwrap(), 2.0 * (1..=8).sum::<i32>() as f64);
+}
+
+#[test]
+fn conv_builtins_work_from_dml() {
+    let res = run(
+        r#"
+        N = 2
+        X = rand(rows=N, cols=1*6*6, min=0, max=1, seed=3)
+        W = rand(rows=4, cols=1*3*3, min=-1, max=1, seed=4)
+        out = conv2d(X, W, input_shape=[N,1,6,6], filter_shape=[4,1,3,3],
+                     stride=[1,1], padding=[1,1])
+        pooled = max_pool(out, input_shape=[N,4,6,6], pool_size=[2,2],
+                          stride=[2,2], padding=[0,0])
+        s = sum(pooled)
+        "#,
+        &[],
+        &["out", "pooled", "s"],
+    );
+    assert_eq!(res.matrix("out").unwrap().shape(), (2, 4 * 6 * 6));
+    assert_eq!(res.matrix("pooled").unwrap().shape(), (2, 4 * 3 * 3));
+}
+
+#[test]
+fn hybrid_plan_over_budget_goes_distributed() {
+    // Tiny driver budget: the matmult must route through the simulated
+    // cluster (and still be numerically exact).
+    let mut config = systemml::SystemConfig::tiny_driver(64 * 1024);
+    config.num_workers = 4;
+    config.block_size = 64;
+    let ctx = MLContext::with_config(config);
+    let before = systemml::util::metrics::global().snapshot();
+    let script = Script::from_str("Y = X %*% X\ns = sum(Y)")
+        .input("X", Matrix::filled(128, 128, 0.5))
+        .output("s");
+    let res = ctx.execute(script).unwrap();
+    let delta = systemml::util::metrics::global().snapshot().delta(&before);
+    assert!(delta.dist_tasks > 0, "expected distributed tasks for over-budget matmult");
+    assert!((res.double("s").unwrap() - 128.0 * 128.0 * 128.0 * 0.25).abs() < 1e-6);
+}
+
+#[test]
+fn string_ops_and_print() {
+    let ctx = MLContext::new();
+    let script = Script::from_str(
+        r#"
+        name = "systemml"
+        msg = "hello " + name + " " + 1 + 0.5
+        print(msg)
+        "#,
+    );
+    let res = ctx.execute(script).unwrap();
+    assert_eq!(res.stdout, vec!["hello systemml 10.5"]);
+}
+
+#[test]
+fn stop_aborts_execution() {
+    let ctx = MLContext::new();
+    let script = Script::from_str("stop(\"boom\")\nx = 1").output("x");
+    let err = ctx.execute(script).unwrap_err();
+    assert!(err.to_string().contains("boom"));
+}
+
+#[test]
+fn builtin_coverage_sweep() {
+    // One expression per remaining builtin family, checking plausibility.
+    let res = run(
+        r#"
+        X = matrix(seq(1, 6), rows=2, cols=3)
+        a1 = as.scalar(rowIndexMax(X)[1,1])
+        a2 = trace(X %*% t(X))
+        a3 = sum(cumsum(X))
+        a4 = as.scalar(diag(diag(matrix(seq(1,4), rows=4, cols=1)))[2,1])
+        a5 = sum(outer(matrix(1, rows=3, cols=1), matrix(2, rows=1, cols=2), "*"))
+        a6 = sum(removeEmpty(rbind(X * 0, X), margin="rows"))
+        a7 = sum(table(seq(1,4), matrix(1, rows=4, cols=1), 4, 2))
+        a8 = as.scalar(solve(matrix(2, rows=1, cols=1), matrix(8, rows=1, cols=1)))
+        a9 = ifelse(sum(X) > 20, 1, 2)
+        a10 = sum(rev(X))
+        "#,
+        &[],
+        &["a1", "a2", "a3", "a4", "a5", "a6", "a7", "a8", "a9", "a10"],
+    );
+    assert_eq!(res.double("a1").unwrap(), 3.0);
+    assert_eq!(res.double("a2").unwrap(), 14.0 + 77.0);
+    assert_eq!(res.double("a3").unwrap(), 1.0 + 2.0 + 3.0 + 5.0 + 7.0 + 9.0);
+    assert_eq!(res.double("a4").unwrap(), 2.0);
+    assert_eq!(res.double("a5").unwrap(), 12.0);
+    assert_eq!(res.double("a6").unwrap(), 21.0);
+    assert_eq!(res.double("a7").unwrap(), 4.0);
+    assert_eq!(res.double("a8").unwrap(), 4.0);
+    assert_eq!(res.double("a9").unwrap(), 1.0);
+    assert_eq!(res.double("a10").unwrap(), 21.0);
+}

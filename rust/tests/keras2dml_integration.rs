@@ -1,0 +1,118 @@
+//! Keras2DML end-to-end: JSON model → generated DML → fit/predict via the
+//! full runtime, mirroring the paper's §2 Python listing.
+
+use systemml::nn::keras2dml::{Keras2DML, SequentialModel};
+use systemml::runtime::matrix::agg;
+use systemml::runtime::matrix::randgen::synthetic_classification;
+use systemml::MLContext;
+
+const SOFTMAX_JSON: &str = r#"{
+    "name": "softmax_classifier",
+    "input_dim": 16,
+    "layers": [
+        {"type": "dense", "units": 4, "activation": "softmax"}
+    ],
+    "optimizer": {"type": "sgd", "lr": 0.1}
+}"#;
+
+#[test]
+fn paper_listing_fit_and_predict() {
+    // model.add(Dense(K, activation="softmax", input_dim=D)); SGD(lr=0.1);
+    // Keras2DML(...).set(train_algo="minibatch", test_algo="allreduce").fit(X, Y)
+    let model = SequentialModel::from_json(SOFTMAX_JSON).unwrap();
+    let mut k2d = Keras2DML::new(MLContext::new(), model);
+    k2d.set("minibatch", "allreduce");
+    let (x, y) = synthetic_classification(256, 16, 4, 77);
+    let trained = k2d.fit(x.clone(), y.clone()).unwrap();
+
+    // Loss must decrease over the epoch.
+    let first = trained.loss_curve[0];
+    let last = *trained.loss_curve.last().unwrap();
+    assert!(last < first * 0.8, "loss did not drop: {first} -> {last}");
+
+    // allreduce scoring: row-partitioned parfor, zero shuffle.
+    let before = systemml::util::metrics::global().snapshot();
+    let probs = k2d.predict(&trained, x.clone()).unwrap();
+    let delta = systemml::util::metrics::global().snapshot().delta(&before);
+    assert_eq!(probs.shape(), (256, 4));
+    assert!(delta.parfor_tasks > 0, "allreduce scoring must run as parfor tasks");
+    assert_eq!(delta.shuffle_bytes, 0, "row-partitioned scoring must not shuffle");
+
+    // Probabilities: rows sum to 1.
+    let rs = agg::row_agg(&probs, agg::AggOp::Sum);
+    for r in 0..256 {
+        assert!((rs.get(r, 0) - 1.0).abs() < 1e-9);
+    }
+
+    // Accuracy on separable synthetic data should beat chance soundly.
+    let pred = agg::row_index_max(&probs);
+    let truth = agg::row_index_max(&y);
+    let correct = (0..256).filter(|r| pred.get(*r, 0) == truth.get(*r, 0)).count();
+    assert!(correct > 128, "accuracy {}/256 not better than chance", correct);
+}
+
+#[test]
+fn train_algo_batch_executes() {
+    let model = SequentialModel::from_json(SOFTMAX_JSON).unwrap();
+    let mut k2d = Keras2DML::new(MLContext::new(), model);
+    k2d.set("batch", "naive");
+    k2d.fit_config.epochs = 30;
+    let (x, y) = synthetic_classification(64, 16, 4, 78);
+    let trained = k2d.fit(x.clone(), y).unwrap();
+    assert_eq!(trained.loss_curve.len(), 30); // one update per epoch
+    let first = trained.loss_curve[0];
+    let last = *trained.loss_curve.last().unwrap();
+    assert!(last < first, "full-batch GD must descend: {first} -> {last}");
+    let probs = k2d.predict(&trained, x).unwrap();
+    assert_eq!(probs.shape(), (64, 4));
+}
+
+#[test]
+fn momentum_and_adam_models_train() {
+    for opt in [r#"{"type": "momentum", "lr": 0.05}"#, r#"{"type": "adam", "lr": 0.01}"#] {
+        let json = format!(
+            r#"{{
+            "name": "m", "input_dim": 8,
+            "layers": [
+                {{"type": "dense", "units": 16, "activation": "tanh"}},
+                {{"type": "dense", "units": 3, "activation": "softmax"}}
+            ],
+            "optimizer": {opt}
+        }}"#
+        );
+        let model = SequentialModel::from_json(&json).unwrap();
+        let k2d = Keras2DML::new(MLContext::new(), model);
+        let (x, y) = synthetic_classification(128, 8, 3, 79);
+        let trained = k2d.fit(x, y).unwrap();
+        let first = trained.loss_curve[0];
+        let last = *trained.loss_curve.last().unwrap();
+        assert!(last < first, "{opt}: loss did not drop ({first} -> {last})");
+    }
+}
+
+#[test]
+fn cnn_model_trains_one_epoch() {
+    let json = r#"{
+        "name": "tiny_lenet",
+        "input_shape": [1, 8, 8],
+        "layers": [
+            {"type": "conv2d", "filters": 4, "kernel": [3,3], "padding": "same", "activation": "relu"},
+            {"type": "maxpool2d", "pool": [2,2]},
+            {"type": "flatten"},
+            {"type": "dense", "units": 3, "activation": "softmax"}
+        ],
+        "optimizer": {"type": "sgd", "lr": 0.1}
+    }"#;
+    let model = SequentialModel::from_json(json).unwrap();
+    let mut k2d = Keras2DML::new(MLContext::new(), model);
+    k2d.fit_config.batch_size = 16;
+    k2d.fit_config.epochs = 2;
+    let (x, y) =
+        systemml::runtime::matrix::randgen::synthetic_images(64, 1, 8, 8, 3, 80);
+    let trained = k2d.fit(x.clone(), y).unwrap();
+    let first = trained.loss_curve[0];
+    let last = *trained.loss_curve.last().unwrap();
+    assert!(last < first, "CNN loss did not drop ({first} -> {last})");
+    let probs = k2d.predict(&trained, x).unwrap();
+    assert_eq!(probs.shape(), (64, 3));
+}

@@ -1,0 +1,378 @@
+//! NN library tests: every layer's forward runs, and every backward is
+//! verified against numeric differentiation *through the interpreter* —
+//! the same gradient checks SystemML's nn library ships in nn/test.
+
+use systemml::api::{MLContext, Script};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::Matrix;
+
+fn ctx() -> MLContext {
+    MLContext::new()
+}
+
+/// Evaluate `loss_expr` (a scalar DML expression over matrix X plus fixed
+/// setup) with X perturbed at (r, c) by eps.
+fn eval_loss(setup: &str, loss_expr: &str, x: &Matrix) -> f64 {
+    let src = format!("{setup}\nloss_value = {loss_expr}");
+    let script = Script::from_str(src).input("X", x.clone()).output("loss_value");
+    ctx().execute(script).unwrap().double("loss_value").unwrap()
+}
+
+/// Numeric-vs-analytic gradient check: `setup` sources libs, `loss_expr`
+/// computes a scalar from X, `grad_expr` computes dX analytically.
+fn grad_check(name: &str, setup: &str, loss_expr: &str, grad_expr: &str, x: &Matrix) {
+    let src = format!("{setup}\nloss_value = {loss_expr}\ngrad_value = {grad_expr}");
+    let script = Script::from_str(src).input("X", x.clone()).output("grad_value");
+    let analytic = ctx().execute(script).unwrap().matrix("grad_value").unwrap();
+    let eps = 1e-5;
+    // Check a deterministic sample of cells.
+    let cells: Vec<(usize, usize)> = (0..x.rows())
+        .flat_map(|r| (0..x.cols()).map(move |c| (r, c)))
+        .step_by(1 + x.len() / 6)
+        .collect();
+    for (r, c) in cells {
+        let mut xp = x.to_dense();
+        xp.set(r, c, xp.get(r, c) + eps);
+        let lp = eval_loss(setup, loss_expr, &Matrix::Dense(xp.clone()));
+        xp.set(r, c, xp.get(r, c) - 2.0 * eps);
+        let lm = eval_loss(setup, loss_expr, &Matrix::Dense(xp));
+        let numeric = (lp - lm) / (2.0 * eps);
+        let ana = analytic.get(r, c);
+        assert!(
+            (numeric - ana).abs() < 1e-4 * (1.0 + numeric.abs().max(ana.abs())),
+            "{name}: grad mismatch at ({r},{c}): numeric {numeric} vs analytic {ana}"
+        );
+    }
+}
+
+fn x_small(seed: u64) -> Matrix {
+    rand(4, 6, -1.0, 1.0, 1.0, Pdf::Uniform, seed).unwrap()
+}
+
+#[test]
+fn relu_gradient() {
+    grad_check(
+        "relu",
+        r#"source("nn/layers/relu.dml") as relu
+           dout = matrix(1, rows=4, cols=6)"#,
+        "sum(relu::forward(X))",
+        "relu::backward(dout, X)",
+        &x_small(1),
+    );
+}
+
+#[test]
+fn leaky_relu_and_elu_gradients() {
+    grad_check(
+        "leaky_relu",
+        r#"source("nn/layers/leaky_relu.dml") as lrelu
+           dout = matrix(1, rows=4, cols=6)"#,
+        "sum(lrelu::forward(X, 0.1))",
+        "lrelu::backward(dout, X, 0.1)",
+        &x_small(2),
+    );
+    grad_check(
+        "elu",
+        r#"source("nn/layers/elu.dml") as elu
+           dout = matrix(1, rows=4, cols=6)"#,
+        "sum(elu::forward(X, 1.0))",
+        "elu::backward(dout, X, 1.0)",
+        &x_small(3),
+    );
+}
+
+#[test]
+fn sigmoid_tanh_gradients() {
+    grad_check(
+        "sigmoid",
+        r#"source("nn/layers/sigmoid.dml") as sig
+           dout = matrix(1, rows=4, cols=6)"#,
+        "sum(sig::forward(X))",
+        "sig::backward(dout, X)",
+        &x_small(4),
+    );
+    grad_check(
+        "tanh",
+        r#"source("nn/layers/tanh.dml") as th
+           dout = matrix(1, rows=4, cols=6)"#,
+        "sum(th::forward(X))",
+        "th::backward(dout, X)",
+        &x_small(5),
+    );
+}
+
+#[test]
+fn affine_gradient_wrt_input() {
+    grad_check(
+        "affine",
+        r#"source("nn/layers/affine.dml") as affine
+           W = rand(rows=6, cols=3, min=-1, max=1, seed=9)
+           b = rand(rows=1, cols=3, min=-1, max=1, seed=10)
+           dout = matrix(1, rows=4, cols=3)"#,
+        "sum(affine::forward(X, W, b))",
+        "as.matrix(affine::backward(dout, X, W, b))",
+        &x_small(6),
+    );
+}
+
+#[test]
+fn softmax_cross_entropy_gradient() {
+    // Gradient of CE(softmax(X), y) wrt X via the two layers' backwards.
+    grad_check(
+        "softmax+ce",
+        r#"source("nn/layers/softmax.dml") as softmax
+           source("nn/layers/cross_entropy_loss.dml") as ce
+           y = table(seq(1, 4), matrix(seq(1, 4), rows=4, cols=1), 4, 6)"#,
+        "ce::forward(softmax::forward(X), y)",
+        "softmax::backward(ce::backward(softmax::forward(X), y), X)",
+        &x_small(7),
+    );
+}
+
+#[test]
+fn l1_l2_losses_and_reg() {
+    grad_check(
+        "l2_loss",
+        r#"source("nn/layers/l2_loss.dml") as l2
+           y = matrix(0.5, rows=4, cols=6)"#,
+        "l2::forward(X, y)",
+        "l2::backward(X, y)",
+        &x_small(8),
+    );
+    grad_check(
+        "l2_reg",
+        r#"source("nn/layers/l2_reg.dml") as reg"#,
+        "reg::forward(X, 0.1)",
+        "reg::backward(X, 0.1)",
+        &x_small(9),
+    );
+    grad_check(
+        "l1_reg",
+        r#"source("nn/layers/l1_reg.dml") as reg"#,
+        "reg::forward(X, 0.1)",
+        "reg::backward(X, 0.1)",
+        &x_small(10),
+    );
+}
+
+#[test]
+fn scale_shift_and_batch_norm_forward() {
+    let ctx = ctx();
+    let script = Script::from_str(
+        r#"
+        source("nn/layers/batch_norm1d.dml") as bn
+        source("nn/layers/scale_shift.dml") as ss
+        X = rand(rows=16, cols=4, min=-2, max=2, seed=20)
+        [gamma, beta] = bn::init(4)
+        [out, mu, varr] = bn::forward(X, gamma, beta, 1e-5)
+        m_out = colMeans(out)
+        v_out = colMeans(out^2) - m_out^2
+        [g2, b2] = ss::init(4)
+        out2 = ss::forward(out, g2 * 3, b2 + 1)
+        check = mean(out2 - (out * 3 + 1))
+        "#,
+    )
+    .output("m_out")
+    .output("v_out")
+    .output("check");
+    let res = ctx.execute(script).unwrap();
+    let m = res.matrix("m_out").unwrap();
+    let v = res.matrix("v_out").unwrap();
+    for c in 0..4 {
+        assert!(m.get(0, c).abs() < 1e-10, "bn mean ~0");
+        assert!((v.get(0, c) - 1.0).abs() < 1e-3, "bn var ~1, got {}", v.get(0, c));
+    }
+    assert!(res.double("check").unwrap().abs() < 1e-12);
+}
+
+#[test]
+fn dropout_mask_properties() {
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/dropout.dml") as dropout
+        X = matrix(1, rows=50, cols=40)
+        [out, mask] = dropout::forward(X, 0.7, 99)
+        keep_frac = sum(mask != 0) / length(mask)
+        # inverted dropout preserves expectation
+        mean_out = mean(out)
+        dX = dropout::backward(matrix(1, rows=50, cols=40), mask)
+        same = sum(dX != mask)
+        "#,
+            )
+            .output("keep_frac")
+            .output("mean_out")
+            .output("same"),
+        )
+        .unwrap();
+    let kf = res.double("keep_frac").unwrap();
+    assert!((kf - 0.7).abs() < 0.05, "keep fraction {kf}");
+    assert!((res.double("mean_out").unwrap() - 1.0).abs() < 0.1);
+    assert_eq!(res.double("same").unwrap(), 0.0);
+}
+
+#[test]
+fn conv_builtin_layer_matches_loop_layer() {
+    // The paper's E7 claim: builtin and DML-loop conv compute the same
+    // function (the builtin being much faster).
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/conv2d_builtin.dml") as conv_fast
+        source("nn/layers/conv2d.dml") as conv_slow
+        N = 2
+        X = rand(rows=N, cols=2*5*5, min=-1, max=1, seed=30)
+        [W, b] = conv_fast::init(3, 2, 3, 3)
+        [fast, Hout, Wout] = conv_fast::forward(X, W, b, 2, 5, 5, 3, 3, 1, 1, 1, 1)
+        [slow, Hout2, Wout2] = conv_slow::forward(X, W, b, 2, 5, 5, 3, 3, 1, 1)
+        diff = max(abs(fast - slow))
+        "#,
+            )
+            .output("diff"),
+        )
+        .unwrap();
+    assert!(res.double("diff").unwrap() < 1e-9);
+}
+
+#[test]
+fn pooling_layers_and_backward() {
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/max_pool2d_builtin.dml") as pool_fast
+        source("nn/layers/max_pool2d.dml") as pool_slow
+        source("nn/layers/avg_pool2d_builtin.dml") as apool
+        N = 2
+        X = rand(rows=N, cols=1*6*6, min=-1, max=1, seed=31)
+        [fast, H1, W1] = pool_fast::forward(X, 1, 6, 6, 2, 2, 2, 2)
+        [slow, H2, W2] = pool_slow::forward(X, 1, 6, 6, 2, 2, 2, 2)
+        diff = max(abs(fast - slow))
+        [avg, H3, W3] = apool::forward(X, 1, 6, 6, 2, 2, 2, 2)
+        avg_check = abs(mean(avg) - mean(X))
+        dX = pool_fast::backward(matrix(1, rows=N, cols=9), X, 1, 6, 6, 2, 2, 2, 2)
+        routed = sum(dX != 0)
+        "#,
+            )
+            .output("diff")
+            .output("avg_check")
+            .output("routed"),
+        )
+        .unwrap();
+    assert!(res.double("diff").unwrap() < 1e-12);
+    assert!(res.double("avg_check").unwrap() < 1e-12);
+    assert_eq!(res.double("routed").unwrap(), 18.0); // one cell per window
+}
+
+#[test]
+fn rnn_and_lstm_shapes_and_determinism() {
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/rnn.dml") as rnn
+        source("nn/layers/lstm.dml") as lstm
+        N = 3; T = 4; D = 5; M = 6
+        X = rand(rows=N, cols=T*D, min=-1, max=1, seed=32)
+        [W, U, b] = rnn::init(D, M)
+        [out, h] = rnn::forward(X, W, U, b, T, D)
+        [W2, b2] = lstm::init(D, M)
+        [out2, c2] = lstm::forward(X, W2, b2, T, D)
+        bound = max(max(abs(out)), max(abs(out2)))
+        "#,
+            )
+            .output("out")
+            .output("out2")
+            .output("h")
+            .output("c2")
+            .output("bound"),
+        )
+        .unwrap();
+    assert_eq!(res.matrix("out").unwrap().shape(), (3, 24));
+    assert_eq!(res.matrix("out2").unwrap().shape(), (3, 24));
+    assert_eq!(res.matrix("h").unwrap().shape(), (3, 6));
+    assert!(res.double("bound").unwrap() <= 1.0 + 1e-9, "tanh-bounded activations");
+}
+
+#[test]
+fn fm_low_rank_and_embedding() {
+    let res = ctx()
+        .execute(
+            Script::from_str(
+                r#"
+        source("nn/layers/fm.dml") as fm
+        source("nn/layers/low_rank_affine.dml") as lra
+        source("nn/layers/embedding.dml") as emb
+        X = rand(rows=4, cols=6, min=-1, max=1, seed=33)
+        [w0, w, V] = fm::init(6, 2)
+        yfm = fm::forward(X, w0, w, V)
+        [U, Vl, b] = lra::init(6, 5, 2)
+        ylra = lra::forward(X, U, Vl, b)
+        E = emb::init(10, 3)
+        ids = matrix(seq(1, 4), rows=4, cols=1)
+        yemb = emb::forward(ids, E)
+        ok = nrow(yfm) + ncol(ylra) + ncol(yemb)
+        "#,
+            )
+            .output("yfm")
+            .output("ylra")
+            .output("yemb"),
+        )
+        .unwrap();
+    assert_eq!(res.matrix("yfm").unwrap().shape(), (4, 1));
+    assert_eq!(res.matrix("ylra").unwrap().shape(), (4, 5));
+    assert_eq!(res.matrix("yemb").unwrap().shape(), (4, 3));
+}
+
+#[test]
+fn all_six_optimizers_reduce_quadratic() {
+    // Minimize f(X) = 0.5*||X||^2 with each optimizer; all must shrink X.
+    let harness = |update_src: &str| -> f64 {
+        let src = format!(
+            r#"
+            {update_src}
+            final_norm = sum(X^2)
+            "#
+        );
+        let script = Script::from_str(src)
+            .input("X", Matrix::filled(4, 4, 1.0))
+            .output("final_norm");
+        ctx().execute(script).unwrap().double("final_norm").unwrap()
+    };
+    let sgd = harness(
+        r#"source("nn/optim/sgd.dml") as sgd
+           for (i in 1:20) { X = sgd::update(X, X, 0.1) }"#,
+    );
+    let mom = harness(
+        r#"source("nn/optim/sgd_momentum.dml") as opt
+           v = opt::init(X)
+           for (i in 1:20) { [X, v] = opt::update(X, X, 0.1, 0.9, v) }"#,
+    );
+    let nest = harness(
+        r#"source("nn/optim/sgd_nesterov.dml") as opt
+           v = opt::init(X)
+           for (i in 1:20) { [X, v] = opt::update(X, X, 0.1, 0.9, v) }"#,
+    );
+    let ada = harness(
+        r#"source("nn/optim/adagrad.dml") as opt
+           c = opt::init(X)
+           for (i in 1:20) { [X, c] = opt::update(X, X, 0.5, 1e-8, c) }"#,
+    );
+    let rms = harness(
+        r#"source("nn/optim/rmsprop.dml") as opt
+           c = opt::init(X)
+           for (i in 1:20) { [X, c] = opt::update(X, X, 0.05, 0.99, 1e-8, c) }"#,
+    );
+    let adam = harness(
+        r#"source("nn/optim/adam.dml") as opt
+           [m, v] = opt::init(X)
+           for (i in 1:20) { [X, m, v] = opt::update(X, X, 0.1, 0.9, 0.999, 1e-8, i, m, v) }"#,
+    );
+    for (name, val) in
+        [("sgd", sgd), ("momentum", mom), ("nesterov", nest), ("adagrad", ada), ("rmsprop", rms), ("adam", adam)]
+    {
+        assert!(val < 16.0 * 0.5, "{name} failed to reduce ||X||²: {val}");
+    }
+}

@@ -1,0 +1,168 @@
+//! parfor integration: optimizer decisions, remote task accounting,
+//! result merging under concurrency, and failure propagation.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::Matrix;
+use systemml::util::metrics;
+
+fn ctx_with_workers(n: usize) -> MLContext {
+    let mut c = SystemConfig::default();
+    c.num_workers = n;
+    MLContext::with_config(c)
+}
+
+#[test]
+fn parfor_merges_disjoint_row_blocks() {
+    let ctx = ctx_with_workers(4);
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=32, cols=3)
+        parfor (i in 1:8) {
+          beg = (i-1)*4 + 1; end = i*4
+          P[beg:end, ] = matrix(i, rows=4, cols=3)
+        }
+        s = sum(P)
+        "#,
+    )
+    .output("P")
+    .output("s");
+    let res = ctx.execute(script).unwrap();
+    assert_eq!(res.double("s").unwrap(), (1..=8).sum::<i32>() as f64 * 12.0);
+    let p = res.matrix("P").unwrap();
+    assert_eq!(p.get(0, 0), 1.0);
+    assert_eq!(p.get(31, 2), 8.0);
+}
+
+#[test]
+fn parfor_remote_mode_counts_cluster_tasks() {
+    let ctx = ctx_with_workers(4);
+    let before = metrics::global().snapshot();
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=16, cols=1)
+        parfor (i in 1:16, mode=remote) {
+          P[i, ] = i * i
+        }
+        "#,
+    )
+    .output("P");
+    let res = ctx.execute(script).unwrap();
+    let d = metrics::global().snapshot().delta(&before);
+    assert_eq!(d.parfor_tasks, 16);
+    assert!(d.dist_tasks >= 16, "remote parfor iterations are cluster tasks");
+    assert_eq!(d.shuffle_bytes, 0, "row-partitioned parfor must not shuffle");
+    assert_eq!(res.matrix("P").unwrap().get(15, 0), 256.0);
+}
+
+#[test]
+fn parfor_degree_capped_by_par_option() {
+    let ctx = ctx_with_workers(8);
+    // par=2 forces 2 chunks even with 8 workers; result must be identical.
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=12, cols=1)
+        parfor (i in 1:12, par=2, mode=local) {
+          P[i, ] = 2 * i
+        }
+        t = sum(P)
+        "#,
+    )
+    .output("t");
+    let res = ctx.execute(script).unwrap();
+    assert_eq!(res.double("t").unwrap(), 2.0 * (1..=12).sum::<i32>() as f64);
+}
+
+#[test]
+fn parfor_error_in_worker_propagates() {
+    let ctx = ctx_with_workers(4);
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=8, cols=1)
+        parfor (i in 1:8) {
+          if (i == 5) { stop("iteration failed") }
+          P[i, ] = i
+        }
+        "#,
+    );
+    let err = ctx.execute(script).unwrap_err();
+    assert!(err.to_string().contains("iteration failed"), "{err}");
+}
+
+#[test]
+fn parfor_inner_heavy_op_still_correct() {
+    // Each iteration does a matmult on a shared read-only input.
+    let ctx = ctx_with_workers(4);
+    let x = Matrix::filled(16, 16, 0.5);
+    let script = Script::from_str(
+        r#"
+        n = 8
+        P = matrix(0, rows=n, cols=1)
+        parfor (i in 1:n) {
+          Y = X %*% X
+          P[i, ] = sum(Y) + i
+        }
+        "#,
+    )
+    .input("X", x.clone())
+    .output("P");
+    let res = ctx.execute(script).unwrap();
+    let expected_base = 16.0 * 16.0 * (16.0 * 0.25);
+    for i in 0..8 {
+        assert!((res.matrix("P").unwrap().get(i, 0) - (expected_base + (i + 1) as f64)).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn nested_for_inside_parfor() {
+    let ctx = ctx_with_workers(2);
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=6, cols=1)
+        parfor (i in 1:6) {
+          acc = 0
+          for (j in 1:i) { acc = acc + j }
+          P[i, ] = acc
+        }
+        "#,
+    )
+    .output("P");
+    let res = ctx.execute(script).unwrap();
+    let p = res.matrix("P").unwrap();
+    for i in 1..=6usize {
+        assert_eq!(p.get(i - 1, 0), (i * (i + 1) / 2) as f64);
+    }
+}
+
+#[test]
+fn parfor_loop_variable_visible_after() {
+    let ctx = ctx_with_workers(2);
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=4, cols=1)
+        parfor (i in 1:4) { P[i, ] = i }
+        last = i
+        "#,
+    )
+    .output("last");
+    assert_eq!(ctx.execute(script).unwrap().double("last").unwrap(), 4.0);
+}
+
+#[test]
+fn column_partitioned_parfor() {
+    let ctx = ctx_with_workers(4);
+    let script = Script::from_str(
+        r#"
+        P = matrix(0, rows=3, cols=8)
+        parfor (j in 1:8) {
+          P[, j] = matrix(j, rows=3, cols=1)
+        }
+        cs = colSums(P)
+        "#,
+    )
+    .output("cs");
+    let cs = ctx.execute(script).unwrap().matrix("cs").unwrap();
+    for j in 0..8 {
+        assert_eq!(cs.get(0, j), 3.0 * (j + 1) as f64);
+    }
+}

@@ -1,0 +1,203 @@
+//! Cross-cutting property tests (quickcheck-lite; `proptest` is not in the
+//! offline registry — see DESIGN.md §Substitutions): algebraic identities
+//! of the matrix runtime across physical formats, format-decision
+//! invariants, and interpreter/runtime agreement.
+
+use systemml::api::{MLContext, Script};
+use systemml::runtime::matrix::agg::{self, AggOp};
+use systemml::runtime::matrix::elementwise::{self, BinOp};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::{mult, reorg, Matrix};
+use systemml::util::prng::Prng;
+use systemml::util::quickcheck::{approx_eq, approx_eq_slice, forall_sized};
+
+fn random_matrix(rng: &mut Prng, size: usize) -> Matrix {
+    let r = 1 + rng.next_usize(size.max(1));
+    let c = 1 + rng.next_usize(size.max(1));
+    let density = [1.0, 0.5, 0.1, 0.01][rng.next_usize(4)];
+    rand(r, c, -3.0, 3.0, density, Pdf::Uniform, rng.next_u64()).unwrap()
+}
+
+#[test]
+fn transpose_is_involutive_all_formats() {
+    forall_sized("t(t(X)) == X", 40, 120, random_matrix, |m| {
+        let tt = reorg::transpose(&reorg::transpose(m));
+        tt == *m
+    });
+}
+
+#[test]
+fn transpose_distributes_over_matmult() {
+    forall_sized(
+        "t(A%*%B) == t(B)%*%t(A)",
+        20,
+        50,
+        |rng: &mut Prng, size| {
+            let m = 1 + rng.next_usize(size.max(1));
+            let k = 1 + rng.next_usize(size.max(1));
+            let n = 1 + rng.next_usize(size.max(1));
+            (
+                rand(m, k, -2.0, 2.0, 0.6, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(k, n, -2.0, 2.0, 0.6, Pdf::Uniform, rng.next_u64()).unwrap(),
+            )
+        },
+        |(a, b)| {
+            let lhs = reorg::transpose(&mult::matmult(a, b).unwrap());
+            let rhs =
+                mult::matmult(&reorg::transpose(b), &reorg::transpose(a)).unwrap();
+            approx_eq_slice(&lhs.to_row_major_vec(), &rhs.to_row_major_vec(), 1e-9)
+        },
+    );
+}
+
+#[test]
+fn format_conversion_preserves_values_and_nnz() {
+    forall_sized("format-roundtrip", 40, 150, random_matrix, |m| {
+        let sparse = m.clone().into_sparse_format();
+        let dense = sparse.clone().into_dense_format();
+        dense == *m && sparse.nnz() == m.nnz() && sparse.sparsity() == m.sparsity()
+    });
+}
+
+#[test]
+fn elementwise_ops_agree_across_formats() {
+    forall_sized(
+        "cellop-format-agreement",
+        24,
+        60,
+        |rng: &mut Prng, size| {
+            let r = 1 + rng.next_usize(size.max(1));
+            let c = 1 + rng.next_usize(size.max(1));
+            (
+                rand(r, c, -2.0, 2.0, 0.3, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(r, c, -2.0, 2.0, 0.3, Pdf::Uniform, rng.next_u64()).unwrap(),
+            )
+        },
+        |(a, b)| {
+            [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Max].iter().all(|op| {
+                let dd = elementwise::binary(
+                    &a.clone().into_dense_format(),
+                    &b.clone().into_dense_format(),
+                    *op,
+                )
+                .unwrap();
+                let ss = elementwise::binary(
+                    &a.clone().into_sparse_format(),
+                    &b.clone().into_sparse_format(),
+                    *op,
+                )
+                .unwrap();
+                dd == ss
+            })
+        },
+    );
+}
+
+#[test]
+fn sum_linear_in_scalar_multiplication() {
+    forall_sized("sum(c*X) == c*sum(X)", 30, 100, random_matrix, |m| {
+        let c = 3.25;
+        let scaled = elementwise::scalar_op(m, c, BinOp::Mul, false).unwrap();
+        approx_eq(agg::full_agg(&scaled, AggOp::Sum), c * agg::full_agg(m, AggOp::Sum), 1e-9)
+    });
+}
+
+#[test]
+fn rowsums_then_sum_equals_total() {
+    forall_sized("sum(rowSums(X)) == sum(X)", 30, 100, random_matrix, |m| {
+        let rs = agg::row_agg(m, AggOp::Sum);
+        approx_eq(agg::full_agg(&rs, AggOp::Sum), agg::full_agg(m, AggOp::Sum), 1e-9)
+    });
+}
+
+#[test]
+fn matmult_distributes_over_addition() {
+    forall_sized(
+        "A(B+C) == AB + AC",
+        16,
+        40,
+        |rng: &mut Prng, size| {
+            let m = 1 + rng.next_usize(size.max(1));
+            let k = 1 + rng.next_usize(size.max(1));
+            let n = 1 + rng.next_usize(size.max(1));
+            (
+                rand(m, k, -1.0, 1.0, 0.7, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(k, n, -1.0, 1.0, 0.7, Pdf::Uniform, rng.next_u64()).unwrap(),
+                rand(k, n, -1.0, 1.0, 0.7, Pdf::Uniform, rng.next_u64()).unwrap(),
+            )
+        },
+        |(a, b, c)| {
+            let lhs =
+                mult::matmult(a, &elementwise::binary(b, c, BinOp::Add).unwrap()).unwrap();
+            let rhs = elementwise::binary(
+                &mult::matmult(a, b).unwrap(),
+                &mult::matmult(a, c).unwrap(),
+                BinOp::Add,
+            )
+            .unwrap();
+            approx_eq_slice(&lhs.to_row_major_vec(), &rhs.to_row_major_vec(), 1e-8)
+        },
+    );
+}
+
+#[test]
+fn slicing_partition_reassembles() {
+    forall_sized("rbind(X[1:k,], X[k+1:n,]) == X", 24, 80, random_matrix, |m| {
+        if m.rows() < 2 {
+            return true;
+        }
+        let k = m.rows() / 2;
+        let top = reorg::slice(m, 0, k, 0, m.cols()).unwrap();
+        let bottom = reorg::slice(m, k, m.rows(), 0, m.cols()).unwrap();
+        reorg::rbind(&top, &bottom).unwrap() == *m
+    });
+}
+
+#[test]
+fn interpreter_matches_direct_runtime() {
+    // Whole-pipeline property: a DML expression equals the same chain
+    // composed directly against the runtime API.
+    forall_sized(
+        "dml == runtime",
+        10,
+        40,
+        |rng: &mut Prng, size| {
+            let n = 2 + rng.next_usize(size.max(1));
+            rand(n, n, -1.0, 1.0, 0.8, Pdf::Uniform, rng.next_u64()).unwrap()
+        },
+        |x| {
+            let ctx = MLContext::new();
+            let script = Script::from_str("Y = t(X) %*% X + 1\ns = sum(Y * 2)")
+                .input("X", x.clone())
+                .output("s");
+            let dml = ctx.execute(script).unwrap().double("s").unwrap();
+            let y = elementwise::scalar_op(
+                &mult::matmult(&reorg::transpose(x), x).unwrap(),
+                1.0,
+                BinOp::Add,
+                false,
+            )
+            .unwrap();
+            let direct =
+                agg::full_agg(&elementwise::scalar_op(&y, 2.0, BinOp::Mul, false).unwrap(), AggOp::Sum);
+            approx_eq(dml, direct, 1e-9)
+        },
+    );
+}
+
+#[test]
+fn rand_sparsity_close_to_target() {
+    forall_sized(
+        "rand-sparsity",
+        12,
+        1,
+        |rng: &mut Prng, _| {
+            let target = [0.05, 0.2, 0.5, 0.9][rng.next_usize(4)];
+            (target, rng.next_u64())
+        },
+        |(target, seed)| {
+            let m = rand(120, 120, -1.0, 1.0, *target, Pdf::Uniform, *seed).unwrap();
+            (m.sparsity() - target).abs() < 0.05
+        },
+    );
+}
