@@ -16,10 +16,13 @@
 pub mod io;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::conf::SystemConfig;
 use crate::dml::parser::parse;
 use crate::dml::validate::{self, Bundle};
+use crate::hop::dag::ShapeInfo;
+use crate::hop::plan::{compile_plan, Plan};
 use crate::runtime::interp::registry::build_bundle;
 use crate::runtime::interp::{Interpreter, Scope, Value};
 use crate::runtime::matrix::Matrix;
@@ -115,23 +118,36 @@ impl MLContext {
         MLContext { config, echo: false }
     }
 
-    /// Parse + validate a script without executing (SystemML `-explain`).
-    pub fn compile(&self, script: &Script) -> Result<(Bundle, Vec<String>)> {
+    /// Parse, validate, and plan a script without executing (SystemML
+    /// `-explain`): constant folding, bundle construction, validation,
+    /// then HOP-DAG lowering + ExecType plan compilation against the
+    /// bound input shapes. The returned bundle reflects plan-driven AST
+    /// rewrites (e.g. matmult chain reordering).
+    pub fn compile(&self, script: &Script) -> Result<Compilation> {
         let mut prog = parse(&script.source)?;
         // Static rewrites (HOP-level): constant folding.
         crate::hop::rewrite::fold_program(&mut prog);
-        let bundle = build_bundle(prog, &self.config)?;
-        // Seed the validator scope with bound inputs by prepending dummy
-        // assignments? Instead: validation treats inputs as pre-defined.
+        let mut bundle = build_bundle(prog, &self.config)?;
+        // Validation treats bound inputs as pre-defined.
         let warnings = validate_with_inputs(&bundle, script.inputs.keys())?;
-        Ok((bundle, warnings))
+        let shapes = input_shapes(&script.inputs);
+        let plan = compile_plan(&mut bundle, &shapes, &self.config);
+        Ok(Compilation { bundle, plan, warnings })
     }
 
-    /// Execute a script and collect its outputs.
+    /// Execute a script and collect its outputs. The interpreter runs
+    /// against the compiled plan's per-operator ExecType placements; with
+    /// `explain` enabled the annotated HOP plan is printed first.
     pub fn execute(&self, script: Script) -> Result<Results> {
-        let (bundle, _warnings) = self.compile(&script)?;
-        let interp = Interpreter::new(bundle, self.config.clone());
-        let interp = Interpreter { echo: self.echo, ..interp };
+        let Compilation { bundle, plan, .. } = self.compile(&script)?;
+        let mut interp = Interpreter::new(bundle, self.config.clone());
+        interp.echo = self.echo;
+        if self.config.explain {
+            for line in plan.render().lines() {
+                interp.emit(line.to_string());
+            }
+        }
+        interp.plan = Some(Arc::new(plan));
         let scope: Scope = script.inputs.clone().into_iter().collect();
         let final_scope = interp.run(scope)?;
         let mut out = Results { values: HashMap::new(), stdout: interp.output() };
@@ -143,6 +159,29 @@ impl MLContext {
         }
         Ok(out)
     }
+}
+
+/// Result of [`MLContext::compile`]: the validated (and plan-rewritten)
+/// bundle, the compiled execution plan, and validation warnings.
+#[derive(Clone, Debug)]
+pub struct Compilation {
+    pub bundle: Bundle,
+    pub plan: Plan,
+    pub warnings: Vec<String>,
+}
+
+/// Compile-time shapes of the bound inputs (rows/cols/sparsity for
+/// matrices, scalar markers otherwise).
+fn input_shapes(inputs: &HashMap<String, Value>) -> HashMap<String, ShapeInfo> {
+    let mut out = HashMap::new();
+    for (name, v) in inputs {
+        let shape = match v {
+            Value::Matrix(m) => ShapeInfo::matrix(m.rows(), m.cols(), m.sparsity()),
+            _ => ShapeInfo::scalar_value(),
+        };
+        out.insert(name.clone(), shape);
+    }
+    out
 }
 
 /// Validate, treating bound inputs as pre-defined variables.

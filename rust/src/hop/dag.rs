@@ -1,0 +1,660 @@
+//! High-level operator (HOP) DAGs.
+//!
+//! Each validated statement's expression tree is lowered into a typed
+//! operator DAG, mirroring SystemML's HOP layer: nodes are operators
+//! (reads, literals, cellwise ops, matmult, aggregates, reorgs, calls),
+//! edges are data dependencies, and every node carries a worst-case
+//! shape/sparsity estimate propagated from the bound inputs. Lowering
+//! hash-conses structurally identical subtrees, so common subexpressions
+//! become shared nodes (DAG-level CSE), and scalar-literal subtrees fold
+//! to literal nodes. The DAG is the substrate the planner
+//! (`hop::plan`) annotates with per-operator execution types and that
+//! `EXPLAIN` renders, like SystemML's `explain(hops)`.
+
+use std::collections::HashMap;
+
+use crate::dml::ast::*;
+use crate::runtime::matrix::agg::AggOp;
+use crate::runtime::matrix::elementwise::BinOp;
+
+/// Node identifier within one [`HopDag`].
+pub type NodeId = usize;
+
+/// Aggregation direction of an `Agg` HOP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggDir {
+    Full,
+    Row,
+    Col,
+}
+
+/// HOP operator kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HopOp {
+    /// Scalar literal.
+    Lit(f64),
+    /// String literal (flows into builtin arguments only).
+    LitStr(String),
+    /// Variable / bound-input read.
+    Read(String),
+    /// Cellwise or scalar binary operator.
+    Binary(AstBinOp),
+    /// Cellwise or scalar unary operator.
+    Unary(AstUnOp),
+    /// Matrix multiplication.
+    MatMul,
+    /// Transpose.
+    Transpose,
+    /// Unary aggregate (sum, rowSums, colMaxs, ...).
+    Agg { op: AggOp, dir: AggDir },
+    /// Right indexing.
+    Index,
+    /// Any other builtin or user-function call.
+    Call(String),
+    /// List literal (shape arguments of NN builtins).
+    List,
+}
+
+impl HopOp {
+    /// Short operator mnemonic for explain output (SystemML style).
+    pub fn mnemonic(&self) -> String {
+        match self {
+            HopOp::Lit(v) => format!("lit {v}"),
+            HopOp::LitStr(s) => format!("lit {s:?}"),
+            HopOp::Read(n) => format!("read {n}"),
+            HopOp::Binary(AstBinOp::MatMul) | HopOp::MatMul => "ba(%*%)".to_string(),
+            HopOp::Binary(op) => format!("b({})", binop_symbol(*op)),
+            HopOp::Unary(AstUnOp::Neg) => "u(-)".to_string(),
+            HopOp::Unary(AstUnOp::Not) => "u(!)".to_string(),
+            HopOp::Transpose => "r(t)".to_string(),
+            HopOp::Agg { op, dir } => {
+                let d = match dir {
+                    AggDir::Full => "ua",
+                    AggDir::Row => "uar",
+                    AggDir::Col => "uac",
+                };
+                format!("{d}({})", agg_name(*op))
+            }
+            HopOp::Index => "rix".to_string(),
+            HopOp::Call(name) => format!("fn({name})"),
+            HopOp::List => "list".to_string(),
+        }
+    }
+}
+
+fn binop_symbol(op: AstBinOp) -> &'static str {
+    match op {
+        AstBinOp::Add => "+",
+        AstBinOp::Sub => "-",
+        AstBinOp::Mul => "*",
+        AstBinOp::Div => "/",
+        AstBinOp::Pow => "^",
+        AstBinOp::Mod => "%%",
+        AstBinOp::IntDiv => "%/%",
+        AstBinOp::MatMul => "%*%",
+        AstBinOp::Eq => "==",
+        AstBinOp::Neq => "!=",
+        AstBinOp::Lt => "<",
+        AstBinOp::Le => "<=",
+        AstBinOp::Gt => ">",
+        AstBinOp::Ge => ">=",
+        AstBinOp::And => "&",
+        AstBinOp::Or => "|",
+    }
+}
+
+/// Canonical short name of an aggregate op (shared by explain rendering
+/// and the runtime dispatch's EXPLAIN lines).
+pub fn agg_name(op: AggOp) -> &'static str {
+    match op {
+        AggOp::Sum => "sum",
+        AggOp::Mean => "mean",
+        AggOp::Min => "min",
+        AggOp::Max => "max",
+        AggOp::SumSq => "sumsq",
+        AggOp::Prod => "prod",
+    }
+}
+
+/// Map an AST binary operator to the runtime cell operator (None for
+/// matmult, which is not a cell op).
+pub fn ast_to_cell_op(op: AstBinOp) -> Option<BinOp> {
+    Some(match op {
+        AstBinOp::Add => BinOp::Add,
+        AstBinOp::Sub => BinOp::Sub,
+        AstBinOp::Mul => BinOp::Mul,
+        AstBinOp::Div => BinOp::Div,
+        AstBinOp::Pow => BinOp::Pow,
+        AstBinOp::Mod => BinOp::Mod,
+        AstBinOp::IntDiv => BinOp::IntDiv,
+        AstBinOp::Eq => BinOp::Eq,
+        AstBinOp::Neq => BinOp::Neq,
+        AstBinOp::Lt => BinOp::Lt,
+        AstBinOp::Le => BinOp::Le,
+        AstBinOp::Gt => BinOp::Gt,
+        AstBinOp::Ge => BinOp::Ge,
+        AstBinOp::And => BinOp::And,
+        AstBinOp::Or => BinOp::Or,
+        AstBinOp::MatMul => return None,
+    })
+}
+
+/// Compile-time shape/sparsity knowledge about a value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShapeInfo {
+    /// Known row count (None = unknown at compile time).
+    pub rows: Option<usize>,
+    /// Known column count.
+    pub cols: Option<usize>,
+    /// Worst-case sparsity estimate (1.0 when unknown).
+    pub sparsity: f64,
+    /// True when the value is a scalar (not a 1×1 matrix).
+    pub scalar: bool,
+}
+
+impl ShapeInfo {
+    pub fn unknown() -> ShapeInfo {
+        ShapeInfo { rows: None, cols: None, sparsity: 1.0, scalar: false }
+    }
+
+    pub fn scalar_value() -> ShapeInfo {
+        ShapeInfo { rows: Some(1), cols: Some(1), sparsity: 1.0, scalar: true }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, sparsity: f64) -> ShapeInfo {
+        ShapeInfo { rows: Some(rows), cols: Some(cols), sparsity, scalar: false }
+    }
+
+    /// Both dimensions known (and the value is a matrix)?
+    pub fn known_dims(&self) -> Option<(usize, usize)> {
+        if self.scalar {
+            return None;
+        }
+        match (self.rows, self.cols) {
+            (Some(r), Some(c)) => Some((r, c)),
+            _ => None,
+        }
+    }
+
+    /// Worst-case in-memory size, when the dims are known.
+    pub fn mem_estimate(&self) -> Option<usize> {
+        let (r, c) = self.known_dims()?;
+        Some(crate::hop::estimate::estimate_size(r, c, self.sparsity))
+    }
+
+    /// Render like `[96x96, sp 0.40]` / `[?x?]` / `[scalar]`.
+    pub fn render(&self) -> String {
+        if self.scalar {
+            return "[scalar]".to_string();
+        }
+        let d = |v: Option<usize>| v.map(|x| x.to_string()).unwrap_or_else(|| "?".to_string());
+        if self.sparsity < 1.0 {
+            format!("[{}x{}, sp {:.2}]", d(self.rows), d(self.cols), self.sparsity)
+        } else {
+            format!("[{}x{}]", d(self.rows), d(self.cols))
+        }
+    }
+}
+
+/// One HOP node.
+#[derive(Clone, Debug)]
+pub struct Hop {
+    pub id: NodeId,
+    pub op: HopOp,
+    pub inputs: Vec<NodeId>,
+    pub shape: ShapeInfo,
+    pub pos: Pos,
+}
+
+/// The operator DAG of one statement expression.
+#[derive(Clone, Debug, Default)]
+pub struct HopDag {
+    pub nodes: Vec<Hop>,
+    /// Root node (the statement's value).
+    pub root: NodeId,
+}
+
+impl HopDag {
+    pub fn shape_of(&self, id: NodeId) -> ShapeInfo {
+        self.nodes[id].shape
+    }
+
+    /// Number of consumers per node (shared nodes = CSE hits).
+    pub fn use_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for i in &n.inputs {
+                counts[*i] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// DAG builder: lowers expressions with hash-consing and shape
+/// propagation against a symbol table of known variable shapes.
+pub struct DagBuilder<'a> {
+    symbols: &'a HashMap<String, ShapeInfo>,
+    nodes: Vec<Hop>,
+    /// Structural key -> existing node (hash-consing / CSE).
+    interned: HashMap<String, NodeId>,
+}
+
+impl<'a> DagBuilder<'a> {
+    pub fn new(symbols: &'a HashMap<String, ShapeInfo>) -> DagBuilder<'a> {
+        DagBuilder { symbols, nodes: Vec::new(), interned: HashMap::new() }
+    }
+
+    /// Lower an expression to a DAG.
+    pub fn build(mut self, expr: &Expr) -> HopDag {
+        let root = self.lower(expr);
+        HopDag { nodes: self.nodes, root }
+    }
+
+    /// Infer just the shape of an expression (used by the chain rewriter).
+    pub fn infer_shape(symbols: &HashMap<String, ShapeInfo>, expr: &Expr) -> ShapeInfo {
+        let mut b = DagBuilder::new(symbols);
+        let id = b.lower(expr);
+        b.nodes[id].shape
+    }
+
+    fn intern(&mut self, op: HopOp, inputs: Vec<NodeId>, shape: ShapeInfo, pos: Pos) -> NodeId {
+        self.intern_salted(op, inputs, shape, pos, "")
+    }
+
+    /// Hash-consing with an extra structural salt for operators whose
+    /// semantics are not captured by (op, inputs) alone (e.g. indexing
+    /// ranges).
+    fn intern_salted(
+        &mut self,
+        op: HopOp,
+        inputs: Vec<NodeId>,
+        shape: ShapeInfo,
+        pos: Pos,
+        salt: &str,
+    ) -> NodeId {
+        let key = format!(
+            "{}|{}|{salt}",
+            op.mnemonic(),
+            inputs.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+        );
+        if let Some(id) = self.interned.get(&key) {
+            return *id;
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Hop { id, op, inputs, shape, pos });
+        self.interned.insert(key, id);
+        id
+    }
+
+    fn lit(&mut self, v: f64, pos: Pos) -> NodeId {
+        self.intern(HopOp::Lit(v), Vec::new(), ShapeInfo::scalar_value(), pos)
+    }
+
+    pub fn lower(&mut self, expr: &Expr) -> NodeId {
+        match expr {
+            Expr::Num(v, pos) => self.lit(*v, *pos),
+            Expr::Int(v, pos) => self.lit(*v as f64, *pos),
+            Expr::Bool(b, pos) => self.lit(*b as i32 as f64, *pos),
+            Expr::Str(s, pos) => self.intern(
+                HopOp::LitStr(s.clone()),
+                Vec::new(),
+                ShapeInfo::scalar_value(),
+                *pos,
+            ),
+            Expr::Var(name, pos) => {
+                let shape =
+                    self.symbols.get(name).copied().unwrap_or_else(ShapeInfo::unknown);
+                self.intern(HopOp::Read(name.clone()), Vec::new(), shape, *pos)
+            }
+            Expr::List(items, pos) => {
+                let ids: Vec<NodeId> = items.iter().map(|e| self.lower(e)).collect();
+                self.intern(HopOp::List, ids, ShapeInfo::unknown(), *pos)
+            }
+            Expr::Unary { op, operand, pos } => {
+                let i = self.lower(operand);
+                // Fold literal operands.
+                if let HopOp::Lit(v) = &self.nodes[i].op {
+                    let folded = match op {
+                        AstUnOp::Neg => -*v,
+                        AstUnOp::Not => (*v == 0.0) as i32 as f64,
+                    };
+                    return self.lit(folded, *pos);
+                }
+                let mut shape = self.nodes[i].shape;
+                if *op == AstUnOp::Not {
+                    shape.sparsity = 1.0; // !0 = 1 densifies
+                }
+                self.intern(HopOp::Unary(*op), vec![i], shape, *pos)
+            }
+            Expr::Binary { op, lhs, rhs, pos } => {
+                let l = self.lower(lhs);
+                let r = self.lower(rhs);
+                // Fold scalar-literal arithmetic.
+                if let (HopOp::Lit(a), HopOp::Lit(b)) =
+                    (self.nodes[l].op.clone(), self.nodes[r].op.clone())
+                {
+                    if let Some(v) = fold_scalar(*op, a, b) {
+                        return self.lit(v, *pos);
+                    }
+                }
+                let shape = self.binary_shape(*op, l, r);
+                self.intern(HopOp::Binary(*op), vec![l, r], shape, *pos)
+            }
+            Expr::Index { base, rows, cols, pos } => {
+                let b = self.lower(base);
+                let base_shape = self.nodes[b].shape;
+                let rdim = self.index_extent(rows, base_shape.rows);
+                let cdim = self.index_extent(cols, base_shape.cols);
+                let shape = ShapeInfo { rows: rdim, cols: cdim, sparsity: 1.0, scalar: false };
+                // Distinct index ranges must not hash-cons together: salt
+                // the key with the printed ranges.
+                let salt = format!("{}|{}", render_range(rows), render_range(cols));
+                self.intern_salted(HopOp::Index, vec![b], shape, *pos, &salt)
+            }
+            Expr::Call { namespace, name, args, pos } => {
+                let ids: Vec<NodeId> = args.iter().map(|a| self.lower(&a.value)).collect();
+                if namespace.is_none() {
+                    if let Some(node) = self.lower_builtin(name, args, &ids, *pos) {
+                        return node;
+                    }
+                }
+                let full = match namespace {
+                    Some(ns) => format!("{ns}::{name}"),
+                    None => name.clone(),
+                };
+                self.intern(HopOp::Call(full), ids, ShapeInfo::unknown(), *pos)
+            }
+        }
+    }
+
+    /// Extent of one indexing dimension, when statically known.
+    fn index_extent(&mut self, r: &IndexRange, whole: Option<usize>) -> Option<usize> {
+        match r {
+            IndexRange::All => whole,
+            IndexRange::Single(_) => Some(1),
+            IndexRange::Range(a, b) => {
+                let la = literal_int(&**a)?;
+                let lb = literal_int(&**b)?;
+                if lb >= la {
+                    Some((lb - la + 1) as usize)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Shape of a binary op from its operand shapes.
+    fn binary_shape(&self, op: AstBinOp, l: NodeId, r: NodeId) -> ShapeInfo {
+        let (ls, rs) = (self.nodes[l].shape, self.nodes[r].shape);
+        if op == AstBinOp::MatMul {
+            let sparsity = match (ls.known_dims(), rs.known_dims()) {
+                (Some((_, k)), Some(_)) => crate::hop::estimate::matmult_output_sparsity(
+                    ls.sparsity,
+                    rs.sparsity,
+                    k,
+                ),
+                _ => 1.0,
+            };
+            return ShapeInfo { rows: ls.rows, cols: rs.cols, sparsity, scalar: false };
+        }
+        if ls.scalar && rs.scalar {
+            return ShapeInfo::scalar_value();
+        }
+        // Cell op: the matrix operand (or the larger under broadcasting)
+        // determines the output shape.
+        let base = if ls.scalar { rs } else { ls };
+        let sparsity = match ast_to_cell_op(op) {
+            Some(BinOp::Mul) | Some(BinOp::And) => ls.sparsity.min(rs.sparsity),
+            Some(BinOp::Add) | Some(BinOp::Sub) => (ls.sparsity + rs.sparsity).min(1.0),
+            _ => 1.0,
+        };
+        ShapeInfo { rows: base.rows, cols: base.cols, sparsity, scalar: false }
+    }
+
+    /// Lower the builtins whose shapes the compiler understands; returns
+    /// None to fall through to an opaque `Call` node.
+    fn lower_builtin(
+        &mut self,
+        name: &str,
+        args: &[Arg],
+        ids: &[NodeId],
+        pos: Pos,
+    ) -> Option<NodeId> {
+        let arg0 = ids.first().copied();
+        let shape0 = arg0.map(|i| self.nodes[i].shape);
+        match name {
+            // Full aggregates → scalar.
+            "sum" | "mean" | "prod" | "min" | "max" if ids.len() == 1 => {
+                let op = match name {
+                    "sum" => AggOp::Sum,
+                    "mean" => AggOp::Mean,
+                    "prod" => AggOp::Prod,
+                    "min" => AggOp::Min,
+                    _ => AggOp::Max,
+                };
+                Some(self.intern(
+                    HopOp::Agg { op, dir: AggDir::Full },
+                    ids.to_vec(),
+                    ShapeInfo::scalar_value(),
+                    pos,
+                ))
+            }
+            // Row/col aggregates → vectors.
+            "rowSums" | "rowMeans" | "rowMaxs" | "rowMins" | "colSums" | "colMeans"
+            | "colMaxs" | "colMins" => {
+                let op = match name {
+                    "rowSums" | "colSums" => AggOp::Sum,
+                    "rowMeans" | "colMeans" => AggOp::Mean,
+                    "rowMaxs" | "colMaxs" => AggOp::Max,
+                    _ => AggOp::Min,
+                };
+                let row_wise = name.starts_with("row");
+                let dir = if row_wise { AggDir::Row } else { AggDir::Col };
+                let s = shape0.unwrap_or_else(ShapeInfo::unknown);
+                let shape = if row_wise {
+                    ShapeInfo { rows: s.rows, cols: Some(1), sparsity: 1.0, scalar: false }
+                } else {
+                    ShapeInfo { rows: Some(1), cols: s.cols, sparsity: 1.0, scalar: false }
+                };
+                Some(self.intern(HopOp::Agg { op, dir }, ids.to_vec(), shape, pos))
+            }
+            "t" => {
+                let s = shape0.unwrap_or_else(ShapeInfo::unknown);
+                let shape =
+                    ShapeInfo { rows: s.cols, cols: s.rows, sparsity: s.sparsity, scalar: false };
+                Some(self.intern(HopOp::Transpose, ids.to_vec(), shape, pos))
+            }
+            // Scalar-producing builtins.
+            "nrow" | "ncol" | "length" | "nnz" | "trace" | "var" | "sd" | "as.scalar"
+            | "as.integer" | "as.double" | "as.logical" => Some(self.intern(
+                HopOp::Call(name.to_string()),
+                ids.to_vec(),
+                ShapeInfo::scalar_value(),
+                pos,
+            )),
+            // Shape-preserving cellwise builtins; sparse-safe ones keep
+            // the input sparsity, the rest densify.
+            "exp" | "log" | "sqrt" | "abs" | "round" | "floor" | "ceil" | "ceiling" | "sign"
+            | "sin" | "cos" | "tan" | "sigmoid" => {
+                let mut s = shape0.unwrap_or_else(ShapeInfo::unknown);
+                if !matches!(name, "sqrt" | "abs" | "round" | "floor" | "sign" | "sin" | "tan") {
+                    s.sparsity = 1.0;
+                }
+                Some(self.intern(HopOp::Call(name.to_string()), ids.to_vec(), s, pos))
+            }
+            // Construction with statically-known shape arguments.
+            "matrix" | "rand" => {
+                let rows = named_or_positional(args, if name == "rand" { 0 } else { 1 }, "rows")
+                    .and_then(literal_int);
+                let cols = named_or_positional(args, if name == "rand" { 1 } else { 2 }, "cols")
+                    .and_then(literal_int);
+                let sparsity = if name == "rand" {
+                    named_or_positional(args, 4, "sparsity")
+                        .and_then(literal_num)
+                        .unwrap_or(1.0)
+                } else {
+                    1.0
+                };
+                let shape = ShapeInfo {
+                    rows: rows.map(|v| v as usize),
+                    cols: cols.map(|v| v as usize),
+                    sparsity: sparsity.clamp(0.0, 1.0),
+                    scalar: false,
+                };
+                Some(self.intern(HopOp::Call(name.to_string()), ids.to_vec(), shape, pos))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Evaluate a scalar binary op over literals (folding semantics match
+/// `hop::rewrite::fold_constants`: division by zero stays a runtime op).
+fn fold_scalar(op: AstBinOp, a: f64, b: f64) -> Option<f64> {
+    Some(match op {
+        AstBinOp::Add => a + b,
+        AstBinOp::Sub => a - b,
+        AstBinOp::Mul => a * b,
+        AstBinOp::Div => {
+            if b == 0.0 {
+                return None;
+            }
+            a / b
+        }
+        AstBinOp::Pow => a.powf(b),
+        _ => return None,
+    })
+}
+
+/// Literal integer value of an expression, if it is one.
+fn literal_int(e: &Expr) -> Option<i64> {
+    match e {
+        Expr::Int(v, _) => Some(*v),
+        Expr::Num(v, _) if v.fract() == 0.0 => Some(*v as i64),
+        _ => None,
+    }
+}
+
+/// Literal numeric value of an expression, if it is one.
+fn literal_num(e: &Expr) -> Option<f64> {
+    match e {
+        Expr::Int(v, _) => Some(*v as f64),
+        Expr::Num(v, _) => Some(*v),
+        _ => None,
+    }
+}
+
+/// Stable rendering of one index range (hash-consing salt).
+fn render_range(r: &IndexRange) -> String {
+    match r {
+        IndexRange::All => String::new(),
+        IndexRange::Single(e) => crate::hop::rewrite::print_expr(e),
+        IndexRange::Range(a, b) => format!(
+            "{}:{}",
+            crate::hop::rewrite::print_expr(a),
+            crate::hop::rewrite::print_expr(b)
+        ),
+    }
+}
+
+/// Resolve a call argument by name, else by unnamed position.
+fn named_or_positional<'e>(args: &'e [Arg], pos: usize, name: &str) -> Option<&'e Expr> {
+    for a in args {
+        if a.name.as_deref() == Some(name) {
+            return Some(&a.value);
+        }
+    }
+    args.iter().filter(|a| a.name.is_none()).nth(pos).map(|a| &a.value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+    use crate::runtime::matrix::SPARSITY_TURN_POINT;
+
+    fn lower_first(src: &str, symbols: &HashMap<String, ShapeInfo>) -> HopDag {
+        let prog = parse(src).unwrap();
+        match &prog.body[0] {
+            Stmt::Assign { value, .. } => DagBuilder::new(symbols).build(value),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn matmult_shape_propagates() {
+        let mut syms = HashMap::new();
+        syms.insert("X".to_string(), ShapeInfo::matrix(100, 50, 1.0));
+        syms.insert("W".to_string(), ShapeInfo::matrix(50, 10, 1.0));
+        let dag = lower_first("Y = X %*% W", &syms);
+        let root = dag.shape_of(dag.root);
+        assert_eq!(root.known_dims(), Some((100, 10)));
+        assert!(matches!(dag.nodes[dag.root].op, HopOp::Binary(AstBinOp::MatMul)));
+    }
+
+    #[test]
+    fn cse_shares_subtrees() {
+        let syms = HashMap::new();
+        let dag = lower_first("y = exp(q) + exp(q)", &syms);
+        // read q + exp(q) shared: nodes are read, exp, plus — not 5.
+        let n_exp = dag
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.op, HopOp::Call(c) if c == "exp"))
+            .count();
+        assert_eq!(n_exp, 1, "{:?}", dag.nodes);
+        let uses = dag.use_counts();
+        let exp_id =
+            dag.nodes.iter().find(|n| matches!(&n.op, HopOp::Call(c) if c == "exp")).unwrap().id;
+        assert_eq!(uses[exp_id], 2);
+    }
+
+    #[test]
+    fn literals_fold_in_dag() {
+        let syms = HashMap::new();
+        let dag = lower_first("y = (1 + 2) * 4", &syms);
+        assert!(matches!(dag.nodes[dag.root].op, HopOp::Lit(v) if v == 12.0));
+    }
+
+    #[test]
+    fn agg_and_rand_shapes() {
+        let mut syms = HashMap::new();
+        syms.insert("X".to_string(), ShapeInfo::matrix(30, 7, 0.5));
+        let dag = lower_first("s = sum(X)", &syms);
+        assert!(dag.shape_of(dag.root).scalar);
+        let dag2 = lower_first("R = rand(rows=20, cols=5, sparsity=0.1)", &syms);
+        let s = dag2.shape_of(dag2.root);
+        assert_eq!(s.known_dims(), Some((20, 5)));
+        assert!((s.sparsity - 0.1).abs() < 1e-12);
+        let dag3 = lower_first("v = rowSums(X)", &syms);
+        assert_eq!(dag3.shape_of(dag3.root).known_dims(), Some((30, 1)));
+    }
+
+    #[test]
+    fn transpose_swaps_dims() {
+        let mut syms = HashMap::new();
+        syms.insert("X".to_string(), ShapeInfo::matrix(9, 4, 0.2));
+        let dag = lower_first("Y = t(X)", &syms);
+        assert_eq!(dag.shape_of(dag.root).known_dims(), Some((4, 9)));
+    }
+
+    #[test]
+    fn unknown_vars_stay_unknown() {
+        let syms = HashMap::new();
+        let dag = lower_first("Y = X %*% W", &syms);
+        assert_eq!(dag.shape_of(dag.root).known_dims(), None);
+        assert!(dag.shape_of(dag.root).mem_estimate().is_none());
+    }
+
+    #[test]
+    fn sparsity_estimator_used_for_matmult() {
+        let mut syms = HashMap::new();
+        syms.insert("X".to_string(), ShapeInfo::matrix(400, 400, 0.01));
+        let dag = lower_first("Y = X %*% X", &syms);
+        let s = dag.shape_of(dag.root);
+        // 1-(1-1e-4)^400 ≈ 0.039 — far below the dense turn point.
+        assert!(s.sparsity < SPARSITY_TURN_POINT, "{}", s.sparsity);
+    }
+}

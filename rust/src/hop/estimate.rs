@@ -5,20 +5,31 @@
 
 use crate::runtime::matrix::{Matrix, SPARSITY_TURN_POINT};
 
-/// Bytes for a dense block of the given shape.
+/// Bytes for a dense block of the given shape. Saturating: planning over
+/// adversarially large declared shapes must not overflow/panic — a
+/// saturated estimate simply never fits any budget.
 pub fn dense_size(rows: usize, cols: usize) -> usize {
-    8 * rows * cols + 48
+    rows.saturating_mul(cols).saturating_mul(8).saturating_add(48)
 }
 
-/// Bytes for a sparse (CSR) block with the given nnz.
+/// Bytes for a sparse (CSR) block with the given nnz (saturating).
 pub fn sparse_size(rows: usize, nnz: usize) -> usize {
-    12 * nnz + 8 * (rows + 1) + 48
+    nnz.saturating_mul(12)
+        .saturating_add(rows.saturating_add(1).saturating_mul(8))
+        .saturating_add(48)
 }
 
 /// Worst-case size of a matrix with given shape and sparsity estimate.
+/// Overflow-safe for huge symbolic dims (saturates at `usize::MAX`).
 pub fn estimate_size(rows: usize, cols: usize, sparsity: f64) -> usize {
-    if sparsity < SPARSITY_TURN_POINT && rows * cols >= 1024 {
-        sparse_size(rows, (sparsity * rows as f64 * cols as f64).ceil() as usize)
+    let cells = rows.saturating_mul(cols);
+    if sparsity < SPARSITY_TURN_POINT && cells >= 1024 {
+        // f64 product of huge dims can exceed usize::MAX; clamp before
+        // the cast (`as usize` would saturate too, but only since Rust
+        // 1.45 — be explicit).
+        let nnz_f = (sparsity * rows as f64 * cols as f64).ceil();
+        let nnz = if nnz_f >= usize::MAX as f64 { usize::MAX } else { nnz_f.max(0.0) as usize };
+        sparse_size(rows, nnz)
     } else {
         dense_size(rows, cols)
     }
@@ -75,6 +86,17 @@ mod tests {
         assert!(s1 < s2);
         assert!(matmult_output_sparsity(1.0, 1.0, 5) == 1.0);
         assert!(matmult_output_sparsity(0.0, 0.5, 5) == 0.0);
+    }
+
+    #[test]
+    fn huge_shapes_saturate_instead_of_panicking() {
+        // rows * cols would overflow usize; the estimator must saturate.
+        let huge = estimate_size(usize::MAX / 2, usize::MAX / 2, 1.0);
+        assert_eq!(huge, usize::MAX);
+        let huge_sparse = estimate_size(usize::MAX / 2, usize::MAX / 2, 0.001);
+        assert_eq!(huge_sparse, usize::MAX);
+        assert_eq!(dense_size(usize::MAX, usize::MAX), usize::MAX);
+        assert_eq!(sparse_size(usize::MAX, usize::MAX), usize::MAX);
     }
 
     #[test]

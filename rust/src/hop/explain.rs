@@ -1,13 +1,20 @@
 //! Plan explanation (`sysml explain`, SystemML's `-explain`): program
-//! structure, per-statement operator summary, CSE opportunities, and the
-//! execution-type thresholds in force.
+//! structure, per-statement operator summary, CSE opportunities, the
+//! execution-type thresholds in force, and the annotated HOP plan
+//! (per-operator ExecType assignments, SystemML's `explain(hops)`).
 
 use std::fmt::Write as _;
 
 use crate::conf::SystemConfig;
 use crate::dml::ast::*;
 use crate::dml::validate::Bundle;
+use crate::hop::plan::Plan;
 use crate::hop::rewrite::{cse_candidates, print_expr};
+
+/// Render the compiled HOP plan with per-operator ExecType annotations.
+pub fn explain_plan(plan: &Plan) -> String {
+    plan.render()
+}
 
 /// Render a human-readable plan for a compiled bundle.
 pub fn explain_bundle(bundle: &Bundle, config: &SystemConfig) -> String {

@@ -1,7 +1,13 @@
-//! The compiler layer (HOPs): memory/sparsity estimates, algebraic
-//! rewrites, plan explanation, and (via the interpreter's dispatch) the
-//! CP / DIST / ACCEL execution-type selection of paper §3.
+//! The compiler layer (HOPs): typed operator DAGs, memory/sparsity
+//! estimates, algebraic rewrites, execution-type plan compilation
+//! (CP / DIST / ACCEL selection of paper §3), and plan explanation.
+//!
+//! Compilation pipeline: parse → validate → HOP DAG ([`dag`]) → rewrites
+//! ([`rewrite`], applied at both AST and DAG level) → ExecType plan
+//! ([`plan`]) → hybrid runtime (`runtime::interp::dispatch`).
 
+pub mod dag;
 pub mod estimate;
 pub mod explain;
+pub mod plan;
 pub mod rewrite;

@@ -1,0 +1,696 @@
+//! Execution-type plan compilation (the tentpole of paper §3): lower each
+//! statement to a HOP DAG, propagate worst-case shape/sparsity estimates
+//! from the bound inputs, reorder matmult chains, and assign every heavy
+//! operator an [`ExecType`] — CP when its estimate fits the driver
+//! budget, DIST when it does not and the distributed backend is enabled,
+//! ACCEL when the accelerator is enabled and the buffers fit device
+//! memory.
+//!
+//! The compiled [`Plan`] is consulted by the interpreter's unified
+//! dispatch (`runtime::interp::dispatch`) through per-operator
+//! placements keyed by source position, and rendered by `EXPLAIN` like
+//! SystemML's `explain(hops)`. Operators whose shapes are unknown at
+//! compile time (loop-carried dims, user-function results) carry no
+//! placement and are decided at runtime with the same cost model
+//! ([`choose_exec`]) — SystemML's dynamic recompilation, in miniature.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::conf::SystemConfig;
+use crate::dml::ast::*;
+use crate::dml::validate::Bundle;
+use crate::hop::dag::{DagBuilder, HopDag, HopOp, NodeId, ShapeInfo};
+use crate::hop::estimate;
+use crate::hop::rewrite::matmult_chain_split;
+
+/// Where an operator executes (paper §3's CP / SPARK / GPU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecType {
+    /// Single-node "control program" on the driver.
+    CP,
+    /// Distributed blocked backend (simulated cluster).
+    Dist,
+    /// Accelerator (PJRT artifacts).
+    Accel,
+}
+
+impl fmt::Display for ExecType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecType::CP => write!(f, "CP"),
+            ExecType::Dist => write!(f, "DIST"),
+            ExecType::Accel => write!(f, "ACCEL"),
+        }
+    }
+}
+
+/// Heavy-operator categories the planner places.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    MatMult,
+    CellBinary,
+    Agg,
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpKind::MatMult => write!(f, "%*%"),
+            OpKind::CellBinary => write!(f, "cellwise"),
+            OpKind::Agg => write!(f, "agg"),
+        }
+    }
+}
+
+/// One placement decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub exec: ExecType,
+    /// Worst-case memory estimate the decision was made against.
+    pub est: usize,
+}
+
+/// A heavy operator the planner placed, with its DAG node.
+#[derive(Clone, Debug)]
+pub struct PlannedOp {
+    pub node: NodeId,
+    pub kind: OpKind,
+    pub pos: Pos,
+    pub exec: Option<ExecType>,
+    pub est: Option<usize>,
+}
+
+/// Plan of one statement: its DAG plus the heavy operators found in it.
+#[derive(Clone, Debug)]
+pub struct StmtPlan {
+    pub pos: Pos,
+    /// Assignment target (or a descriptive label for non-assignments).
+    pub target: String,
+    pub dag: HopDag,
+    pub ops: Vec<PlannedOp>,
+    /// Chain-reordering note, when the rewriter fired for this statement.
+    pub note: Option<String>,
+}
+
+/// The compiled execution plan of a program's straight-line main body.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub stmts: Vec<StmtPlan>,
+    /// (line, col, kind) -> placement, for the interpreter's dispatch.
+    placements: HashMap<(usize, usize, OpKind), Placement>,
+    driver_memory: usize,
+    num_workers: usize,
+    block_size: usize,
+    accel_enabled: bool,
+}
+
+impl Plan {
+    /// Placement compiled for the operator at `pos`, if shapes were known.
+    pub fn placement(&self, pos: Pos, kind: OpKind) -> Option<Placement> {
+        self.placements.get(&(pos.line, pos.col, kind)).copied()
+    }
+
+    /// All (kind, exec) pairs that received a placement, in program order.
+    pub fn placed_execs(&self, kind: OpKind) -> Vec<ExecType> {
+        let mut out = Vec::new();
+        for s in &self.stmts {
+            for op in &s.ops {
+                if op.kind == kind {
+                    if let Some(e) = op.exec {
+                        out.push(e);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the annotated HOP plan (SystemML's `explain(hops)`).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        writeln!(
+            s,
+            "# HOP PLAN (driver {} B | workers {} | block {} | accel {})",
+            self.driver_memory,
+            self.num_workers,
+            self.block_size,
+            if self.accel_enabled { "on" } else { "off" }
+        )
+        .unwrap();
+        for sp in &self.stmts {
+            writeln!(s, "--HOPS line {}: {}", sp.pos.line, sp.target).unwrap();
+            if let Some(note) = &sp.note {
+                writeln!(s, "  ^ {note}").unwrap();
+            }
+            let uses = sp.dag.use_counts();
+            // ops indexed by node for annotation.
+            let mut by_node: HashMap<NodeId, &PlannedOp> = HashMap::new();
+            for op in &sp.ops {
+                by_node.insert(op.node, op);
+            }
+            for n in &sp.dag.nodes {
+                let ins = if n.inputs.is_empty() {
+                    String::new()
+                } else {
+                    format!(
+                        " ({})",
+                        n.inputs.iter().map(|i| format!("h{i}")).collect::<Vec<_>>().join(",")
+                    )
+                };
+                let mut line = format!("  h{} {}{} {}", n.id, n.op.mnemonic(), ins, n.shape.render());
+                if let Some(op) = by_node.get(&n.id) {
+                    match (op.exec, op.est) {
+                        (Some(exec), Some(est)) => {
+                            line.push_str(&format!(" est {est} B -> {exec}"));
+                        }
+                        _ => line.push_str(" est ? -> runtime"),
+                    }
+                }
+                if uses[n.id] > 1 {
+                    line.push_str(&format!(" (shared x{})", uses[n.id]));
+                }
+                writeln!(s, "{line}").unwrap();
+            }
+        }
+        s
+    }
+}
+
+/// The single cost-model decision shared by the compile-time planner and
+/// the runtime dispatch: where does an operator with worst-case memory
+/// `est` run?
+pub fn choose_exec(est: usize, config: &SystemConfig, accel_capable: bool) -> ExecType {
+    if accel_capable && config.accel_enabled && est <= config.accel_memory {
+        return ExecType::Accel;
+    }
+    if est > config.driver_memory && config.dist_enabled {
+        return ExecType::Dist;
+    }
+    ExecType::CP
+}
+
+/// Compile the plan for a bundle's main body. Rewrites matmult chains in
+/// place (the interpreter executes the rewritten AST) and returns the
+/// annotated plan. `inputs` seeds the symbol table with the shapes of
+/// bound script inputs.
+pub fn compile_plan(
+    bundle: &mut Bundle,
+    inputs: &HashMap<String, ShapeInfo>,
+    config: &SystemConfig,
+) -> Plan {
+    let mut plan = Plan {
+        stmts: Vec::new(),
+        placements: HashMap::new(),
+        driver_memory: config.driver_memory,
+        num_workers: config.num_workers,
+        block_size: config.block_size,
+        accel_enabled: config.accel_enabled,
+    };
+    let mut symbols = inputs.clone();
+    let mut body = std::mem::take(&mut bundle.main.body);
+    plan_block(&mut body, &mut symbols, config, &mut plan, true);
+    bundle.main.body = body;
+    plan
+}
+
+/// Plan a statement block, updating `symbols` as assignments execute.
+/// When `record` is false this is a shape-propagation dry run (loop
+/// fixpoint pass) and nothing is added to the plan.
+fn plan_block(
+    stmts: &mut [Stmt],
+    symbols: &mut HashMap<String, ShapeInfo>,
+    config: &SystemConfig,
+    plan: &mut Plan,
+    record: bool,
+) {
+    for stmt in stmts.iter_mut() {
+        match stmt {
+            Stmt::Assign { target, value, pos } => {
+                let (expr, note) = reorder_matmult_chains(value, symbols);
+                *value = expr;
+                let dag = DagBuilder::new(symbols).build(value);
+                let shape = dag.shape_of(dag.root);
+                let name = match target {
+                    AssignTarget::Var(n) => {
+                        symbols.insert(n.clone(), shape);
+                        n.clone()
+                    }
+                    AssignTarget::Indexed { name, .. } => {
+                        // Left-indexing preserves the target's shape.
+                        format!("{name}[...]")
+                    }
+                };
+                if record {
+                    record_stmt(plan, *pos, name, dag, note, config);
+                }
+            }
+            Stmt::MultiAssign { targets, value, pos } => {
+                let dag = DagBuilder::new(symbols).build(value);
+                for t in targets.iter() {
+                    symbols.insert(t.clone(), ShapeInfo::unknown());
+                }
+                if record {
+                    record_stmt(plan, *pos, format!("[{}]", targets.join(",")), dag, None, config);
+                }
+            }
+            Stmt::ExprStmt { expr, pos } => {
+                let (e, note) = reorder_matmult_chains(expr, symbols);
+                *expr = e;
+                let dag = DagBuilder::new(symbols).build(expr);
+                if record {
+                    record_stmt(plan, *pos, "(expr)".to_string(), dag, note, config);
+                }
+            }
+            Stmt::If { then_branch, else_branch, .. } => {
+                // Plan both branches from the same entry state; variables
+                // whose shapes disagree afterwards become unknown.
+                let mut then_syms = symbols.clone();
+                plan_block(then_branch, &mut then_syms, config, plan, record);
+                let mut else_syms = symbols.clone();
+                plan_block(else_branch, &mut else_syms, config, plan, record);
+                merge_symbols(symbols, &then_syms, &else_syms);
+            }
+            Stmt::For { var, body, .. } | Stmt::ParFor { var, body, .. } => {
+                symbols.insert(var.clone(), ShapeInfo::scalar_value());
+                plan_loop_body(body, symbols, config, plan, record);
+            }
+            Stmt::While { body, .. } => {
+                plan_loop_body(body, symbols, config, plan, record);
+            }
+        }
+    }
+}
+
+/// Loop bodies: a dry pass discovers loop-carried variables whose shapes
+/// change across iterations (those become unknown), then the real pass
+/// plans against the stabilized shapes.
+fn plan_loop_body(
+    body: &mut [Stmt],
+    symbols: &mut HashMap<String, ShapeInfo>,
+    config: &SystemConfig,
+    plan: &mut Plan,
+    record: bool,
+) {
+    let mut probe = symbols.clone();
+    plan_block(body, &mut probe, config, plan, false);
+    for (name, shape) in probe.iter() {
+        match symbols.get(name) {
+            Some(prev) if prev == shape => {}
+            Some(_) => {
+                symbols.insert(name.clone(), ShapeInfo::unknown());
+            }
+            // Defined only inside the loop: trust the first-iteration
+            // shape only if a second probe agrees.
+            None => {
+                symbols.insert(name.clone(), *shape);
+            }
+        }
+    }
+    // Second probe from the merged state catches shapes that keep
+    // changing (e.g. X = cbind(X, v)).
+    let mut probe2 = symbols.clone();
+    plan_block(body, &mut probe2, config, plan, false);
+    for (name, shape) in probe2.iter() {
+        if symbols.get(name).is_some_and(|prev| prev != shape) {
+            symbols.insert(name.clone(), ShapeInfo::unknown());
+        }
+    }
+    plan_block(body, symbols, config, plan, record);
+}
+
+/// Keep shapes that agree across both branches; discard the rest.
+fn merge_symbols(
+    out: &mut HashMap<String, ShapeInfo>,
+    a: &HashMap<String, ShapeInfo>,
+    b: &HashMap<String, ShapeInfo>,
+) {
+    let mut names: Vec<&String> = a.keys().collect();
+    names.extend(b.keys());
+    for name in names {
+        match (a.get(name), b.get(name)) {
+            (Some(x), Some(y)) if x == y => {
+                out.insert(name.clone(), *x);
+            }
+            _ => {
+                if a.contains_key(name) || b.contains_key(name) {
+                    out.insert(name.clone(), ShapeInfo::unknown());
+                }
+            }
+        }
+    }
+}
+
+/// Extract the heavy operators of a DAG, place them, and record the
+/// statement plan.
+fn record_stmt(
+    plan: &mut Plan,
+    pos: Pos,
+    target: String,
+    dag: HopDag,
+    note: Option<String>,
+    config: &SystemConfig,
+) {
+    let mut ops = Vec::new();
+    // Keys written by this statement, to detect position collisions
+    // (reordered matmult chains stamp every rebuilt node with one Pos).
+    let mut written: HashMap<(usize, usize, OpKind), usize> = HashMap::new();
+    for n in &dag.nodes {
+        let kind = match &n.op {
+            HopOp::Binary(AstBinOp::MatMul) | HopOp::MatMul => OpKind::MatMult,
+            HopOp::Binary(_) if !n.shape.scalar => OpKind::CellBinary,
+            HopOp::Agg { .. } => OpKind::Agg,
+            _ => continue,
+        };
+        if kind == OpKind::CellBinary {
+            // Cell binaries with a scalar operand run as scalar ops on CP,
+            // and broadcasting pairs (row/col vector operand) also stay CP
+            // in the runtime dispatch — plan neither.
+            let any_scalar = n.inputs.iter().any(|i| dag.nodes[*i].shape.scalar);
+            let broadcast = n.inputs.iter().any(|i| {
+                let s = dag.nodes[*i].shape;
+                s.known_dims().is_some() && s.known_dims() != n.shape.known_dims()
+            });
+            if any_scalar || broadcast {
+                continue;
+            }
+        }
+        let est = op_mem_estimate(&dag, n.id, kind);
+        let exec = est.map(|e| choose_exec(e, config, kind == OpKind::MatMult));
+        if let (Some(e), Some(x)) = (est, exec) {
+            let key = (n.pos.line, n.pos.col, kind);
+            *written.entry(key).or_insert(0) += 1;
+            plan.placements.insert(key, Placement { exec: x, est: e });
+        }
+        ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est });
+    }
+    // A key claimed by more than one distinct operator is ambiguous at
+    // runtime (same source position): drop it and let the per-operand
+    // runtime estimate decide.
+    for (key, count) in written {
+        if count > 1 {
+            plan.placements.remove(&key);
+        }
+    }
+    plan.stmts.push(StmtPlan { pos, target, dag, ops, note });
+}
+
+/// Worst-case memory estimate of one heavy operator: inputs plus output.
+fn op_mem_estimate(dag: &HopDag, node: NodeId, kind: OpKind) -> Option<usize> {
+    let n = &dag.nodes[node];
+    let mut total = 0usize;
+    for i in &n.inputs {
+        let s = dag.nodes[*i].shape;
+        if s.scalar {
+            continue;
+        }
+        total = total.saturating_add(s.mem_estimate()?);
+    }
+    total = match kind {
+        OpKind::Agg => {
+            // Aggregate outputs are vectors/scalars — negligible next to
+            // the input, but still accounted.
+            let (r, c) = match n.shape.known_dims() {
+                Some(d) => d,
+                None if n.shape.scalar => (1, 1),
+                None => return None,
+            };
+            total.saturating_add(estimate::dense_size(r, c))
+        }
+        _ => total.saturating_add(n.shape.mem_estimate()?),
+    };
+    Some(total)
+}
+
+/// Matrix-multiplication chain reordering at the plan level: flatten
+/// `((A %*% B) %*% C)` chains, and when every operand shape is known,
+/// rebuild the tree in the FLOP-optimal association (classic DP). The
+/// rewritten expression is what the interpreter executes. Returns the
+/// (possibly unchanged) expression and an explain note when it fired.
+pub fn reorder_matmult_chains(
+    expr: &Expr,
+    symbols: &HashMap<String, ShapeInfo>,
+) -> (Expr, Option<String>) {
+    let mut note = None;
+    let out = reorder_expr(expr, symbols, &mut note);
+    (out, note)
+}
+
+fn reorder_expr(
+    expr: &Expr,
+    symbols: &HashMap<String, ShapeInfo>,
+    note: &mut Option<String>,
+) -> Expr {
+    match expr {
+        Expr::Binary { op: AstBinOp::MatMul, pos, .. } => {
+            // Flatten the chain, recursively rewriting the operands.
+            let mut operands = Vec::new();
+            flatten_chain(expr, symbols, note, &mut operands);
+            if operands.len() >= 3 {
+                if let Some(dims) = chain_dims(&operands, symbols) {
+                    let (cost, split) = matmult_chain_split(&dims);
+                    let left_deep = left_deep_cost(&dims);
+                    if cost < left_deep {
+                        let rendered =
+                            crate::hop::rewrite::render_chain_split(&split, 0, operands.len() - 1);
+                        *note = Some(format!(
+                            "matmult chain x{} reordered {rendered}: {cost} FLOPs vs {left_deep} left-deep",
+                            operands.len()
+                        ));
+                        return build_chain(&operands, &split, 0, operands.len() - 1, *pos);
+                    }
+                }
+            }
+            // Not rewritable: rebuild left-deep over the (rewritten)
+            // operands only if the original was left-deep; otherwise keep
+            // the original association.
+            rebuild_binary(expr, symbols, note)
+        }
+        _ => rebuild_binary(expr, symbols, note),
+    }
+}
+
+/// Rebuild an expression node, recursing into children.
+fn rebuild_binary(
+    expr: &Expr,
+    symbols: &HashMap<String, ShapeInfo>,
+    note: &mut Option<String>,
+) -> Expr {
+    match expr {
+        Expr::Binary { op, lhs, rhs, pos } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(reorder_expr(lhs, symbols, note)),
+            rhs: Box::new(reorder_expr(rhs, symbols, note)),
+            pos: *pos,
+        },
+        Expr::Unary { op, operand, pos } => Expr::Unary {
+            op: *op,
+            operand: Box::new(reorder_expr(operand, symbols, note)),
+            pos: *pos,
+        },
+        Expr::Call { namespace, name, args, pos } => Expr::Call {
+            namespace: namespace.clone(),
+            name: name.clone(),
+            args: args
+                .iter()
+                .map(|a| Arg { name: a.name.clone(), value: reorder_expr(&a.value, symbols, note) })
+                .collect(),
+            pos: *pos,
+        },
+        Expr::Index { base, rows, cols, pos } => Expr::Index {
+            base: Box::new(reorder_expr(base, symbols, note)),
+            rows: rows.clone(),
+            cols: cols.clone(),
+            pos: *pos,
+        },
+        Expr::List(items, pos) => {
+            Expr::List(items.iter().map(|e| reorder_expr(e, symbols, note)).collect(), *pos)
+        }
+        other => other.clone(),
+    }
+}
+
+/// Flatten nested matmults into an operand list (associativity lets the
+/// planner regroup freely), rewriting non-matmult operands recursively.
+fn flatten_chain(
+    expr: &Expr,
+    symbols: &HashMap<String, ShapeInfo>,
+    note: &mut Option<String>,
+    out: &mut Vec<Expr>,
+) {
+    match expr {
+        Expr::Binary { op: AstBinOp::MatMul, lhs, rhs, .. } => {
+            flatten_chain(lhs, symbols, note, out);
+            flatten_chain(rhs, symbols, note, out);
+        }
+        other => out.push(rebuild_binary(other, symbols, note)),
+    }
+}
+
+/// The dims vector d0..dn of a chain, when every operand shape is known
+/// and the inner dimensions agree.
+fn chain_dims(operands: &[Expr], symbols: &HashMap<String, ShapeInfo>) -> Option<Vec<usize>> {
+    let mut dims = Vec::with_capacity(operands.len() + 1);
+    let mut prev_cols: Option<usize> = None;
+    for o in operands {
+        let s = DagBuilder::infer_shape(symbols, o);
+        let (r, c) = s.known_dims()?;
+        if let Some(pc) = prev_cols {
+            if pc != r {
+                return None; // dim mismatch — leave for runtime to report
+            }
+        } else {
+            dims.push(r);
+        }
+        dims.push(c);
+        prev_cols = Some(c);
+    }
+    Some(dims)
+}
+
+/// FLOP cost of evaluating the chain left-to-right (the parser's default
+/// association). Saturating: declared shapes can be adversarially large.
+fn left_deep_cost(dims: &[usize]) -> u64 {
+    let mut cost = 0u64;
+    for i in 1..dims.len() - 1 {
+        let term = 2u64
+            .saturating_mul(dims[0] as u64)
+            .saturating_mul(dims[i] as u64)
+            .saturating_mul(dims[i + 1] as u64);
+        cost = cost.saturating_add(term);
+    }
+    cost
+}
+
+/// Build the optimally-associated expression tree from the split table.
+fn build_chain(operands: &[Expr], split: &[Vec<usize>], i: usize, j: usize, pos: Pos) -> Expr {
+    if i == j {
+        return operands[i].clone();
+    }
+    let k = split[i][j];
+    Expr::Binary {
+        op: AstBinOp::MatMul,
+        lhs: Box::new(build_chain(operands, split, i, k, pos)),
+        rhs: Box::new(build_chain(operands, split, k + 1, j, pos)),
+        pos,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+    use crate::hop::rewrite::print_expr;
+    use crate::runtime::interp::registry::build_bundle;
+
+    fn plan_src(src: &str, inputs: &[(&str, ShapeInfo)], config: &SystemConfig) -> Plan {
+        let prog = parse(src).unwrap();
+        let mut bundle = build_bundle(prog, config).unwrap();
+        let syms: HashMap<String, ShapeInfo> =
+            inputs.iter().map(|(n, s)| (n.to_string(), *s)).collect();
+        compile_plan(&mut bundle, &syms, config)
+    }
+
+    #[test]
+    fn small_matmult_planned_cp() {
+        let config = SystemConfig::default();
+        let plan = plan_src(
+            "Y = X %*% X\ns = sum(Y)",
+            &[("X", ShapeInfo::matrix(64, 64, 1.0))],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::CP]);
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::CP]);
+        assert!(plan.render().contains("-> CP"), "{}", plan.render());
+    }
+
+    #[test]
+    fn tiny_budget_flips_to_dist() {
+        let config = SystemConfig::tiny_driver(32 * 1024);
+        let plan = plan_src(
+            "Y = X %*% X\ns = sum(Y)",
+            &[("X", ShapeInfo::matrix(96, 96, 1.0))],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist]);
+        assert!(plan.render().contains("-> DIST"), "{}", plan.render());
+    }
+
+    #[test]
+    fn chain_reorder_rewrites_ast() {
+        let config = SystemConfig::default();
+        let prog = parse("y = A %*% B %*% v").unwrap();
+        let mut bundle = build_bundle(prog, &config).unwrap();
+        let syms: HashMap<String, ShapeInfo> = [
+            ("A".to_string(), ShapeInfo::matrix(500, 500, 1.0)),
+            ("B".to_string(), ShapeInfo::matrix(500, 500, 1.0)),
+            ("v".to_string(), ShapeInfo::matrix(500, 1, 1.0)),
+        ]
+        .into_iter()
+        .collect();
+        let plan = compile_plan(&mut bundle, &syms, &config);
+        // The AST the interpreter will execute is right-associated now.
+        match &bundle.main.body[0] {
+            Stmt::Assign { value, .. } => {
+                assert_eq!(print_expr(value), "(A %*% (B %*% v))");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(
+            plan.stmts[0].note.as_deref().unwrap_or("").contains("reordered"),
+            "{:?}",
+            plan.stmts[0].note
+        );
+    }
+
+    #[test]
+    fn loop_carried_growth_goes_unknown() {
+        let config = SystemConfig::default();
+        let plan = plan_src(
+            "for (i in 1:3) { X = cbind(X, X) }\nY = X %*% t(X)",
+            &[("X", ShapeInfo::matrix(8, 8, 1.0))],
+            &config,
+        );
+        // X's shape is loop-carried and growing: the matmult must carry
+        // no placement (decided at runtime).
+        let mm: Vec<&PlannedOp> = plan
+            .stmts
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .filter(|o| o.kind == OpKind::MatMult)
+            .collect();
+        assert!(!mm.is_empty());
+        assert!(mm.iter().all(|o| o.exec.is_none()), "{mm:?}");
+    }
+
+    #[test]
+    fn stable_loop_shapes_stay_planned() {
+        let config = SystemConfig::tiny_driver(64 * 1024);
+        let plan = plan_src(
+            "for (i in 1:3) { w = w - 0.1 * (X %*% w) }",
+            &[
+                ("X", ShapeInfo::matrix(200, 200, 1.0)),
+                ("w", ShapeInfo::matrix(200, 1, 1.0)),
+            ],
+            &config,
+        );
+        // w's shape is loop-stable, so the matmult inside the loop is
+        // planned (to DIST: X alone is 320 KB > 64 KB).
+        assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+    }
+
+    #[test]
+    fn choose_exec_respects_budgets() {
+        let mut config = SystemConfig::tiny_driver(1000);
+        assert_eq!(choose_exec(999, &config, false), ExecType::CP);
+        assert_eq!(choose_exec(1001, &config, false), ExecType::Dist);
+        config.dist_enabled = false;
+        assert_eq!(choose_exec(1001, &config, false), ExecType::CP);
+        config.accel_enabled = true;
+        config.accel_memory = 2000;
+        assert_eq!(choose_exec(1500, &config, true), ExecType::Accel);
+        assert_eq!(choose_exec(2500, &config, true), ExecType::CP);
+    }
+}

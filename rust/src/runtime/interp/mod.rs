@@ -1,8 +1,11 @@
 //! The DML interpreter: executes validated programs over the matrix
 //! runtime, honoring the compiler's execution-type decisions for heavy
-//! operators (CP / distributed / accelerator).
+//! operators (CP / distributed / accelerator) through the unified
+//! [`dispatch`] path, which consults the compiled [`crate::hop::plan::Plan`]
+//! and falls back to runtime estimates for shapes unknown at compile time.
 
 pub mod builtins;
+pub mod dispatch;
 pub mod registry;
 pub mod value;
 
@@ -12,8 +15,9 @@ use std::sync::{Arc, Mutex};
 use crate::conf::SystemConfig;
 use crate::dml::ast::*;
 use crate::dml::validate::Bundle;
+use crate::hop::plan::Plan;
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
-use crate::runtime::matrix::{mult, reorg, Matrix};
+use crate::runtime::matrix::{reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
 pub use value::Value;
@@ -31,6 +35,9 @@ const MAX_CALL_DEPTH: usize = 48;
 pub struct Interpreter {
     pub bundle: Arc<Bundle>,
     pub config: SystemConfig,
+    /// Compiled execution plan (per-operator ExecType placements); None
+    /// when running without the plan-compilation pass.
+    pub plan: Option<Arc<Plan>>,
     /// Captured `print` output (also echoed to stdout when `echo` is set).
     pub sink: Arc<Mutex<Vec<String>>>,
     /// Echo prints to stdout.
@@ -73,6 +80,7 @@ impl Interpreter {
         Interpreter {
             bundle: Arc::new(bundle),
             config,
+            plan: None,
             sink: Arc::new(Mutex::new(Vec::new())),
             echo: false,
             cluster,
@@ -151,8 +159,8 @@ impl Interpreter {
             }
             Stmt::MultiAssign { targets, value, .. } => {
                 let results = match value {
-                    Expr::Call { namespace, name, args, .. } => {
-                        self.call_multi(namespace.as_deref(), name, args, scope, ctx)?
+                    Expr::Call { namespace, name, args, pos } => {
+                        self.call_multi(namespace.as_deref(), name, args, *pos, scope, ctx)?
                     }
                     _ => return Err(DmlError::rt("multi-assignment requires a function call")),
                 };
@@ -327,8 +335,9 @@ impl Interpreter {
                 // A 1x1 slice stays a matrix in DML (as.scalar converts).
                 Ok(Value::Matrix(s))
             }
-            Expr::Call { namespace, name, args, .. } => {
-                let mut results = self.call_multi(namespace.as_deref(), name, args, scope, ctx)?;
+            Expr::Call { namespace, name, args, pos } => {
+                let mut results =
+                    self.call_multi(namespace.as_deref(), name, args, *pos, scope, ctx)?;
                 if results.is_empty() {
                     // void builtins (print, stop targets) return empty; DML
                     // allows using them only as statements.
@@ -392,14 +401,17 @@ impl Interpreter {
         }
     }
 
+    /// Matrix-typed binary ops route through the unified plan-aware
+    /// dispatch (`dispatch.rs`): matmult and cell-aligned matrix∘matrix
+    /// binaries are placed CP/DIST/ACCEL; matrix∘scalar ops stay CP.
     fn binary_matrix_op(&self, op: AstBinOp, l: &Value, r: &Value, pos: &Pos) -> Result<Value> {
         if op == AstBinOp::MatMul {
             let (a, b) = (l.as_matrix()?, r.as_matrix()?);
-            return Ok(Value::Matrix(self.dispatch_matmult(a, b)?));
+            return Ok(Value::Matrix(self.dispatch_matmult_at(a, b, Some(*pos))?));
         }
         let bop = ast_to_binop(op);
         let out = match (l, r) {
-            (Value::Matrix(a), Value::Matrix(b)) => elementwise::binary(a, b, bop)?,
+            (Value::Matrix(a), Value::Matrix(b)) => self.dispatch_binary(a, b, bop, Some(*pos))?,
             (Value::Matrix(a), other) => elementwise::scalar_op(a, other.as_double()?, bop, false)?,
             (other, Value::Matrix(b)) => elementwise::scalar_op(b, other.as_double()?, bop, true)?,
             _ => {
@@ -412,47 +424,17 @@ impl Interpreter {
         Ok(Value::Matrix(out))
     }
 
-    /// Heavy-operator dispatch: CP vs distributed vs accelerator, driven by
-    /// worst-case memory estimates against the driver budget (paper §3).
-    pub fn dispatch_matmult(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
-        // Accelerator first: compiled artifacts handle specific shapes.
-        if let Some(accel) = &self.accel {
-            if let Some(out) = accel.try_matmult(a, b)? {
-                return Ok(out);
-            }
-        }
-        let est = crate::hop::estimate::matmult_mem_estimate(a, b);
-        if est > self.config.driver_memory {
-            if let Some(cluster) = &self.cluster {
-                if self.config.explain {
-                    self.emit(format!(
-                        "EXPLAIN: %*% ({}x{} @ {}x{}) -> DIST (est {} B > budget {} B)",
-                        a.rows(),
-                        a.cols(),
-                        b.rows(),
-                        b.cols(),
-                        est,
-                        self.config.driver_memory
-                    ));
-                }
-                return crate::runtime::dist::ops::matmult(cluster, a, b);
-            }
-            return Err(DmlError::rt(format!(
-                "matmult memory estimate {est} B exceeds driver budget and the distributed \
-                 backend is disabled"
-            )));
-        }
-        mult::matmult(a, b)
-    }
-
     // ---- calls ---------------------------------------------------------
 
     /// Call a function or builtin; returns all results (multi-return).
+    /// `pos` is the call site, used for compiled-placement lookups of
+    /// aggregate builtins.
     pub fn call_multi(
         &self,
         namespace: Option<&str>,
         name: &str,
         args: &[Arg],
+        pos: Pos,
         scope: &mut Scope,
         ctx: &Ctx,
     ) -> Result<Vec<Value>> {
@@ -482,7 +464,7 @@ impl Interpreter {
             for a in args {
                 eargs.push((a.name.clone(), self.eval(&a.value, scope, ctx)?));
             }
-            return builtins::call_builtin(self, name, &eargs);
+            return builtins::call_builtin(self, name, &eargs, pos);
         }
         Err(DmlError::rt(format!(
             "unknown function '{}{name}'",

@@ -1,37 +1,69 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate builds
+//! offline with zero external dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the DML compiler and runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DmlError {
     /// Lexical error with source position.
-    #[error("lex error at line {line}, col {col}: {msg}")]
     Lex { line: usize, col: usize, msg: String },
 
     /// Parse error with source position.
-    #[error("parse error at line {line}, col {col}: {msg}")]
     Parse { line: usize, col: usize, msg: String },
 
     /// Semantic validation error (types, shapes, unknown identifiers).
-    #[error("validation error: {0}")]
     Validate(String),
 
     /// Runtime error raised while executing a program.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Dimension mismatch in a matrix operation.
-    #[error("dimension mismatch in {op}: lhs {lhs_rows}x{lhs_cols}, rhs {rhs_rows}x{rhs_cols}")]
     DimMismatch { op: String, lhs_rows: usize, lhs_cols: usize, rhs_rows: usize, rhs_cols: usize },
 
     /// I/O error (script files, matrix files, artifacts).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Accelerator backend error (PJRT compile/execute).
-    #[error("accelerator error: {0}")]
     Accel(String),
+}
+
+impl fmt::Display for DmlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DmlError::Lex { line, col, msg } => {
+                write!(f, "lex error at line {line}, col {col}: {msg}")
+            }
+            DmlError::Parse { line, col, msg } => {
+                write!(f, "parse error at line {line}, col {col}: {msg}")
+            }
+            DmlError::Validate(msg) => write!(f, "validation error: {msg}"),
+            DmlError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            DmlError::DimMismatch { op, lhs_rows, lhs_cols, rhs_rows, rhs_cols } => write!(
+                f,
+                "dimension mismatch in {op}: lhs {lhs_rows}x{lhs_cols}, rhs {rhs_rows}x{rhs_cols}"
+            ),
+            DmlError::Io(e) => write!(f, "io error: {e}"),
+            DmlError::Accel(msg) => write!(f, "accelerator error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DmlError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DmlError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DmlError {
+    fn from(e: std::io::Error) -> Self {
+        DmlError::Io(e)
+    }
 }
 
 impl DmlError {
@@ -47,3 +79,29 @@ impl DmlError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, DmlError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = DmlError::rt("boom");
+        assert_eq!(e.to_string(), "runtime error: boom");
+        let d = DmlError::DimMismatch {
+            op: "%*%".into(),
+            lhs_rows: 2,
+            lhs_cols: 3,
+            rhs_rows: 4,
+            rhs_cols: 5,
+        };
+        assert!(d.to_string().contains("lhs 2x3, rhs 4x5"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: DmlError = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -8,8 +8,17 @@ use systemml::runtime::matrix::randgen::{rand, Pdf};
 use systemml::runtime::matrix::Matrix;
 use systemml::util::metrics;
 
+/// Metric-delta tests serialize on this lock: the counters are
+/// process-global and the test harness runs tests on multiple threads.
+static METRICS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn metrics_guard() -> std::sync::MutexGuard<'static, ()> {
+    METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[test]
 fn cp_chosen_when_under_budget() {
+    let _g = metrics_guard();
     let ctx = MLContext::new(); // default 512 MB driver
     let before = metrics::global().snapshot();
     let script = Script::from_str("Y = X %*% X\ns = sum(Y)")
@@ -22,6 +31,7 @@ fn cp_chosen_when_under_budget() {
 
 #[test]
 fn dist_chosen_when_over_budget_and_correct() {
+    let _g = metrics_guard();
     let mut config = SystemConfig::tiny_driver(32 * 1024);
     config.block_size = 32;
     let ctx = MLContext::with_config(config);
@@ -53,6 +63,7 @@ fn over_budget_without_dist_backend_errors() {
 
 #[test]
 fn sparsity_aware_estimates_keep_sparse_matmult_local() {
+    let _g = metrics_guard();
     // A dense 400x400 matmult would blow a small budget, but at 1% density
     // the worst-case estimate keeps it CP (sparse operator).
     let budget = 900 * 1024; // 900 KB; dense would need ~3.8 MB
@@ -79,8 +90,8 @@ fn estimates_are_monotone_in_shape() {
 fn constant_folding_observable_via_explain() {
     let ctx = MLContext::new();
     let script = Script::from_str("y = 2 * 3 + 1");
-    let (bundle, _) = ctx.compile(&script).unwrap();
-    let plan = systemml::hop::explain::explain_bundle(&bundle, &ctx.config);
+    let compiled = ctx.compile(&script).unwrap();
+    let plan = systemml::hop::explain::explain_bundle(&compiled.bundle, &ctx.config);
     assert!(plan.contains("ASSIGN y <- 7"), "constant folding should appear in the plan:\n{plan}");
 }
 
@@ -106,8 +117,8 @@ fn explain_cli_shape() {
     let script = Script::from_str(
         "parfor (i in 1:4) { v = i }\nwhile (FALSE) { q = 1 }\nif (1 > 0) { a = 1 } else { a = 2 }",
     );
-    let (bundle, _) = ctx.compile(&script).unwrap();
-    let plan = systemml::hop::explain::explain_bundle(&bundle, &ctx.config);
+    let compiled = ctx.compile(&script).unwrap();
+    let plan = systemml::hop::explain::explain_bundle(&compiled.bundle, &ctx.config);
     for needle in ["PARFOR i", "WHILE", "IF", "ELSE", "--MAIN (3 stmts)"] {
         assert!(plan.contains(needle), "missing {needle} in:\n{plan}");
     }

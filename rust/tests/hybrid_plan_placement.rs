@@ -1,0 +1,130 @@
+//! Plan-level placement tests: the compiled HOP plan assigns ExecTypes
+//! per operator, shrinking the driver budget flips matmult and aggregate
+//! placements from CP to DIST, the runtime honors the placements, and
+//! both plans produce numerically equivalent results (≤ 1e-9).
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::hop::plan::{ExecType, OpKind};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::util::metrics;
+use systemml::util::quickcheck::approx_eq_slice;
+
+const SCRIPT: &str = "Y = X %*% X\nr = rowSums(Y)\ns = sum(Y)";
+
+/// Tests that assert on global metric deltas serialize here — the
+/// counters are process-global and the test harness is multi-threaded.
+static METRICS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn metrics_guard() -> std::sync::MutexGuard<'static, ()> {
+    METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn compile_with_budget(budget: usize) -> systemml::api::Compilation {
+    let mut config = SystemConfig::tiny_driver(budget);
+    config.block_size = 32;
+    let ctx = MLContext::with_config(config);
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 42).unwrap();
+    let script = Script::from_str(SCRIPT).input("X", x);
+    ctx.compile(&script).unwrap()
+}
+
+#[test]
+fn shrinking_budget_flips_matmult_and_agg_to_dist() {
+    // Generous budget: everything CP.
+    let roomy = compile_with_budget(512 * 1024 * 1024);
+    assert_eq!(roomy.plan.placed_execs(OpKind::MatMult), vec![ExecType::CP]);
+    assert!(roomy
+        .plan
+        .placed_execs(OpKind::Agg)
+        .iter()
+        .all(|e| *e == ExecType::CP));
+
+    // Tiny budget: the same operators flip to DIST.
+    let tiny = compile_with_budget(32 * 1024);
+    assert_eq!(tiny.plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+    let aggs = tiny.plan.placed_execs(OpKind::Agg);
+    assert!(!aggs.is_empty());
+    assert!(aggs.iter().all(|e| *e == ExecType::Dist), "{aggs:?}");
+}
+
+#[test]
+fn flipped_plan_is_numerically_equivalent() {
+    let _g = metrics_guard();
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 43).unwrap();
+    let run = |budget: usize| {
+        let mut config = SystemConfig::tiny_driver(budget);
+        config.block_size = 32;
+        let ctx = MLContext::with_config(config);
+        let script = Script::from_str(SCRIPT)
+            .input("X", x.clone())
+            .output("Y")
+            .output("r")
+            .output("s");
+        let before = metrics::global().snapshot();
+        let res = ctx.execute(script).unwrap();
+        let tasks = metrics::global().snapshot().delta(&before).dist_tasks;
+        (res, tasks)
+    };
+    let (cp, cp_tasks) = run(512 * 1024 * 1024);
+    let (dist, dist_tasks) = run(32 * 1024);
+    assert_eq!(cp_tasks, 0, "roomy budget must stay CP");
+    assert!(dist_tasks > 0, "tiny budget must run distributed");
+    assert!(approx_eq_slice(
+        &cp.matrix("Y").unwrap().to_row_major_vec(),
+        &dist.matrix("Y").unwrap().to_row_major_vec(),
+        1e-9
+    ));
+    assert!(approx_eq_slice(
+        &cp.matrix("r").unwrap().to_row_major_vec(),
+        &dist.matrix("r").unwrap().to_row_major_vec(),
+        1e-9
+    ));
+    let (s1, s2) = (cp.double("s").unwrap(), dist.double("s").unwrap());
+    assert!((s1 - s2).abs() <= 1e-9 * s1.abs().max(1.0), "{s1} vs {s2}");
+}
+
+#[test]
+fn explain_prints_hop_plan_with_exec_types() {
+    let _g = metrics_guard();
+    let mut config = SystemConfig::tiny_driver(32 * 1024);
+    config.block_size = 32;
+    config.explain = true;
+    let ctx = MLContext::with_config(config);
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 44).unwrap();
+    let script = Script::from_str(SCRIPT).input("X", x).output("s");
+    let res = ctx.execute(script).unwrap();
+    let out = res.stdout.join("\n");
+    assert!(out.contains("# HOP PLAN"), "{out}");
+    assert!(out.contains("ba(%*%)"), "{out}");
+    assert!(out.contains("-> DIST"), "{out}");
+    // Runtime explain lines are symmetric: CP placements are reported
+    // with estimate-vs-budget too (the 1x1-ish ops here stay CP).
+    assert!(out.contains("EXPLAIN:"), "{out}");
+}
+
+#[test]
+fn plan_render_annotates_each_heavy_operator() {
+    let compiled = compile_with_budget(32 * 1024);
+    let rendered = compiled.plan.render();
+    for needle in ["# HOP PLAN", "read X", "ba(%*%)", "uar(sum)", "ua(sum)", "-> DIST", "est "] {
+        assert!(rendered.contains(needle), "missing {needle:?} in:\n{rendered}");
+    }
+}
+
+#[test]
+fn unknown_shapes_fall_back_to_runtime_dispatch() {
+    let _g = metrics_guard();
+    // X is not bound at compile time -> no placements, but execution
+    // still flips to DIST from runtime estimates.
+    let mut config = SystemConfig::tiny_driver(32 * 1024);
+    config.block_size = 32;
+    let ctx = MLContext::with_config(config);
+    let script = Script::from_str("X = rand(rows=n, cols=n, seed=7)\nY = X %*% X\ns = sum(Y)")
+        .input_scalar("n", 96.0)
+        .output("s");
+    let before = metrics::global().snapshot();
+    ctx.execute(script).unwrap();
+    let d = metrics::global().snapshot().delta(&before);
+    assert!(d.dist_tasks > 0, "runtime fallback must still distribute");
+}

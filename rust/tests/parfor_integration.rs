@@ -49,7 +49,9 @@ fn parfor_remote_mode_counts_cluster_tasks() {
     .output("P");
     let res = ctx.execute(script).unwrap();
     let d = metrics::global().snapshot().delta(&before);
-    assert_eq!(d.parfor_tasks, 16);
+    // Lower bound: the metric counters are process-global and other
+    // tests in this binary may run parfor concurrently.
+    assert!(d.parfor_tasks >= 16, "parfor tasks: {}", d.parfor_tasks);
     assert!(d.dist_tasks >= 16, "remote parfor iterations are cluster tasks");
     assert_eq!(d.shuffle_bytes, 0, "row-partitioned parfor must not shuffle");
     assert_eq!(res.matrix("P").unwrap().get(15, 0), 256.0);
