@@ -14,6 +14,15 @@ pub struct SystemConfig {
     pub num_workers: usize,
     /// Per-worker memory budget in bytes.
     pub worker_memory: usize,
+    /// Per-worker *storage* budget in bytes for resident (cached) block
+    /// partitions — SystemML's executor storage fraction. The cluster's
+    /// block-partition cache holds at most `worker_storage * num_workers`
+    /// bytes before LRU eviction kicks in.
+    pub worker_storage: usize,
+    /// Keep blocked partitions resident across statements (lineage-keyed
+    /// reuse, like Spark RDD caching). When false every DIST operator
+    /// re-blockifies its inputs from the driver copy.
+    pub cache_enabled: bool,
     /// Block size (rows/cols) for blocked distributed matrices.
     pub block_size: usize,
     /// Enable the distributed backend (if false, everything runs CP and
@@ -38,6 +47,8 @@ impl Default for SystemConfig {
             driver_memory: 512 * 1024 * 1024,
             num_workers: 4,
             worker_memory: 512 * 1024 * 1024,
+            worker_storage: 256 * 1024 * 1024,
+            cache_enabled: true,
             block_size: 1024,
             dist_enabled: true,
             accel_enabled: false,

@@ -14,7 +14,7 @@
 //! placement and are decided at runtime with the same cost model
 //! ([`choose_exec`]) — SystemML's dynamic recompilation, in miniature.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 
 use crate::conf::SystemConfig;
@@ -99,6 +99,14 @@ pub struct Plan {
     pub stmts: Vec<StmtPlan>,
     /// (line, col, kind) -> placement, for the interpreter's dispatch.
     placements: HashMap<(usize, usize, OpKind), Placement>,
+    /// Variables the planner marked `Cached`: DIST operands whose
+    /// consumers span statements (or repeat across loop iterations), so
+    /// their blocked partitions should stay resident. Sorted.
+    pub cached_vars: Vec<String>,
+    /// Statement positions at which each variable feeds a DIST operator.
+    dist_read_sites: HashMap<String, HashSet<(usize, usize)>>,
+    /// Variables feeding DIST operators inside loop bodies.
+    dist_loop_reads: HashSet<String>,
     driver_memory: usize,
     num_workers: usize,
     block_size: usize,
@@ -109,6 +117,11 @@ impl Plan {
     /// Placement compiled for the operator at `pos`, if shapes were known.
     pub fn placement(&self, pos: Pos, kind: OpKind) -> Option<Placement> {
         self.placements.get(&(pos.line, pos.col, kind)).copied()
+    }
+
+    /// Did the planner mark this variable's blocked partitions `Cached`?
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cached_vars.iter().any(|n| n == name)
     }
 
     /// All (kind, exec) pairs that received a placement, in program order.
@@ -139,6 +152,14 @@ impl Plan {
             if self.accel_enabled { "on" } else { "off" }
         )
         .unwrap();
+        if !self.cached_vars.is_empty() {
+            writeln!(
+                s,
+                "# CACHE plan: keep resident (cross-statement/loop DIST operands): {}",
+                self.cached_vars.join(", ")
+            )
+            .unwrap();
+        }
         for sp in &self.stmts {
             writeln!(s, "--HOPS line {}: {}", sp.pos.line, sp.target).unwrap();
             if let Some(note) = &sp.note {
@@ -160,6 +181,11 @@ impl Plan {
                     )
                 };
                 let mut line = format!("  h{} {}{} {}", n.id, n.op.mnemonic(), ins, n.shape.render());
+                if let HopOp::Read(name) = &n.op {
+                    if self.is_cached(name) {
+                        line.push_str(" CACHE");
+                    }
+                }
                 if let Some(op) = by_node.get(&n.id) {
                     match (op.exec, op.est) {
                         (Some(exec), Some(est)) => {
@@ -203,6 +229,9 @@ pub fn compile_plan(
     let mut plan = Plan {
         stmts: Vec::new(),
         placements: HashMap::new(),
+        cached_vars: Vec::new(),
+        dist_read_sites: HashMap::new(),
+        dist_loop_reads: HashSet::new(),
         driver_memory: config.driver_memory,
         num_workers: config.num_workers,
         block_size: config.block_size,
@@ -210,8 +239,19 @@ pub fn compile_plan(
     };
     let mut symbols = inputs.clone();
     let mut body = std::mem::take(&mut bundle.main.body);
-    plan_block(&mut body, &mut symbols, config, &mut plan, true);
+    plan_block(&mut body, &mut symbols, config, &mut plan, true, 0);
     bundle.main.body = body;
+    // A DIST operand read at more than one statement — or repeatedly
+    // inside a loop body — benefits from staying resident: mark it
+    // `Cached` so EXPLAIN surfaces the planner's caching intent.
+    let mut cached: Vec<String> = plan
+        .dist_read_sites
+        .iter()
+        .filter(|(name, sites)| sites.len() > 1 || plan.dist_loop_reads.contains(*name))
+        .map(|(name, _)| name.clone())
+        .collect();
+    cached.sort();
+    plan.cached_vars = cached;
     plan
 }
 
@@ -224,6 +264,7 @@ fn plan_block(
     config: &SystemConfig,
     plan: &mut Plan,
     record: bool,
+    loop_depth: usize,
 ) {
     for stmt in stmts.iter_mut() {
         match stmt {
@@ -243,7 +284,7 @@ fn plan_block(
                     }
                 };
                 if record {
-                    record_stmt(plan, *pos, name, dag, note, config);
+                    record_stmt(plan, *pos, name, dag, note, config, loop_depth);
                 }
             }
             Stmt::MultiAssign { targets, value, pos } => {
@@ -252,7 +293,15 @@ fn plan_block(
                     symbols.insert(t.clone(), ShapeInfo::unknown());
                 }
                 if record {
-                    record_stmt(plan, *pos, format!("[{}]", targets.join(",")), dag, None, config);
+                    record_stmt(
+                        plan,
+                        *pos,
+                        format!("[{}]", targets.join(",")),
+                        dag,
+                        None,
+                        config,
+                        loop_depth,
+                    );
                 }
             }
             Stmt::ExprStmt { expr, pos } => {
@@ -260,24 +309,24 @@ fn plan_block(
                 *expr = e;
                 let dag = DagBuilder::new(symbols).build(expr);
                 if record {
-                    record_stmt(plan, *pos, "(expr)".to_string(), dag, note, config);
+                    record_stmt(plan, *pos, "(expr)".to_string(), dag, note, config, loop_depth);
                 }
             }
             Stmt::If { then_branch, else_branch, .. } => {
                 // Plan both branches from the same entry state; variables
                 // whose shapes disagree afterwards become unknown.
                 let mut then_syms = symbols.clone();
-                plan_block(then_branch, &mut then_syms, config, plan, record);
+                plan_block(then_branch, &mut then_syms, config, plan, record, loop_depth);
                 let mut else_syms = symbols.clone();
-                plan_block(else_branch, &mut else_syms, config, plan, record);
+                plan_block(else_branch, &mut else_syms, config, plan, record, loop_depth);
                 merge_symbols(symbols, &then_syms, &else_syms);
             }
             Stmt::For { var, body, .. } | Stmt::ParFor { var, body, .. } => {
                 symbols.insert(var.clone(), ShapeInfo::scalar_value());
-                plan_loop_body(body, symbols, config, plan, record);
+                plan_loop_body(body, symbols, config, plan, record, loop_depth + 1);
             }
             Stmt::While { body, .. } => {
-                plan_loop_body(body, symbols, config, plan, record);
+                plan_loop_body(body, symbols, config, plan, record, loop_depth + 1);
             }
         }
     }
@@ -292,9 +341,10 @@ fn plan_loop_body(
     config: &SystemConfig,
     plan: &mut Plan,
     record: bool,
+    loop_depth: usize,
 ) {
     let mut probe = symbols.clone();
-    plan_block(body, &mut probe, config, plan, false);
+    plan_block(body, &mut probe, config, plan, false, loop_depth);
     for (name, shape) in probe.iter() {
         match symbols.get(name) {
             Some(prev) if prev == shape => {}
@@ -311,13 +361,13 @@ fn plan_loop_body(
     // Second probe from the merged state catches shapes that keep
     // changing (e.g. X = cbind(X, v)).
     let mut probe2 = symbols.clone();
-    plan_block(body, &mut probe2, config, plan, false);
+    plan_block(body, &mut probe2, config, plan, false, loop_depth);
     for (name, shape) in probe2.iter() {
         if symbols.get(name).is_some_and(|prev| prev != shape) {
             symbols.insert(name.clone(), ShapeInfo::unknown());
         }
     }
-    plan_block(body, symbols, config, plan, record);
+    plan_block(body, symbols, config, plan, record, loop_depth);
 }
 
 /// Keep shapes that agree across both branches; discard the rest.
@@ -351,6 +401,7 @@ fn record_stmt(
     dag: HopDag,
     note: Option<String>,
     config: &SystemConfig,
+    loop_depth: usize,
 ) {
     let mut ops = Vec::new();
     // Keys written by this statement, to detect position collisions
@@ -383,6 +434,19 @@ fn record_stmt(
             *written.entry(key).or_insert(0) += 1;
             plan.placements.insert(key, Placement { exec: x, est: e });
         }
+        if exec == Some(ExecType::Dist) {
+            // Track which variables feed this DIST operator (directly or
+            // through a transpose) for the `Cached` operand marking.
+            for name in dist_read_names(&dag, n.id) {
+                plan.dist_read_sites
+                    .entry(name.clone())
+                    .or_default()
+                    .insert((pos.line, pos.col));
+                if loop_depth > 0 {
+                    plan.dist_loop_reads.insert(name);
+                }
+            }
+        }
         ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est });
     }
     // A key claimed by more than one distinct operator is ambiguous at
@@ -394,6 +458,26 @@ fn record_stmt(
         }
     }
     plan.stmts.push(StmtPlan { pos, target, dag, ops, note });
+}
+
+/// Variable reads feeding a DAG node, looking through one transpose
+/// level (`t(X)` keeps `X`'s blocked partitions interesting too).
+fn dist_read_names(dag: &HopDag, node: NodeId) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in &dag.nodes[node].inputs {
+        match &dag.nodes[*i].op {
+            HopOp::Read(name) => out.push(name.clone()),
+            HopOp::Transpose => {
+                if let Some(j) = dag.nodes[*i].inputs.first() {
+                    if let HopOp::Read(name) = &dag.nodes[*j].op {
+                        out.push(name.clone());
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
 }
 
 /// Worst-case memory estimate of one heavy operator: inputs plus output.

@@ -1,0 +1,571 @@
+//! Lineage-keyed block-partition cache (the paper's "RDDs kept resident
+//! across statements", SystemML's lineage caching in miniature).
+//!
+//! Every DIST operator needs its operands in blocked form. Without a
+//! cache, each operator re-blockifies from the driver copy — an O(cells)
+//! repartition per op that dominates iterative algorithms whose big
+//! operand (the feature matrix) never changes. The [`BlockCache`] owned
+//! by [`Cluster`](super::Cluster) maps **lineage keys** — a variable name
+//! plus the version stamped by the interpreter's lineage table at binding
+//! time — to resident [`BlockedMatrix`] handles:
+//!
+//! * **Guard-checked reuse.** A hit is only served when the live driver
+//!   value still matches the resident blocks (dims, nnz, and a full
+//!   content fingerprint), so a stale entry can never change a result —
+//!   at worst it degrades to a miss. The fingerprint is an O(cells) scan
+//!   of the driver copy per acquisition; it is what makes the globally
+//!   versioned lineage table safe across function frames and parfor
+//!   workers. A hit therefore saves the blockify allocation+copy and the
+//!   re-broadcast, not the scan — making hits O(1) needs frame-local
+//!   lineage (see the ROADMAP follow-up).
+//! * **Memory-budgeted LRU.** Resident bytes are bounded by the
+//!   per-worker storage budget × cluster size; least-recently-used
+//!   unpinned entries are evicted to make room.
+//! * **Write invalidation.** The interpreter calls [`BlockCache::invalidate`]
+//!   whenever a variable is rebound or mutated; entries *derived from*
+//!   that variable (e.g. the cached blocks of `t(X)`) are dropped too via
+//!   their recorded dependencies.
+//! * **Pinning.** Loop bodies pin the names they read so loop-carried
+//!   blocked matrices survive eviction pressure for the whole loop —
+//!   iterative algorithms blockify their invariant operand once.
+//! * **Pending-result reuse.** A DIST operator's blocked output is kept
+//!   as a dirty pending handle; a directly-nested consumer (or the
+//!   assignment that names it) picks it up without a round trip through
+//!   the driver. The driver copy is only materialized on CP demand by
+//!   the dispatch layer (the lazy `to_dense` flush).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::dist::{BlockedMatrix, Cluster};
+use crate::runtime::matrix::Matrix;
+use crate::util::error::Result;
+use crate::util::metrics;
+
+/// Runtime lineage reference of an operand: the cache key plus the base
+/// variables the blocked value was derived from (for invalidation).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct LineageRef {
+    /// Cache key name: a variable name (`X`) or a derived form (`t(X)`).
+    pub name: String,
+    /// Lineage version stamped when the base variable was last bound.
+    pub version: u64,
+    /// Base variable names this value depends on (invalidation targets).
+    pub deps: Vec<String>,
+}
+
+impl LineageRef {
+    /// Reference for a plain variable read.
+    pub fn var(name: &str, version: u64) -> LineageRef {
+        LineageRef { name: name.to_string(), version, deps: vec![name.to_string()] }
+    }
+
+    /// Reference for a derived value (e.g. `t(X)`): keyed under `name`,
+    /// invalidated whenever any of `deps` is rebound.
+    pub fn derived(name: String, version: u64, deps: Vec<String>) -> LineageRef {
+        LineageRef { name, version, deps }
+    }
+
+    /// Render like `X#4` for EXPLAIN lines.
+    pub fn render(&self) -> String {
+        format!("{}#{}", self.name, self.version)
+    }
+}
+
+/// Content guard of a resident entry: reuse is only legal while the live
+/// driver value still matches what was blockified. The fingerprint covers
+/// every non-zero cell (position and bit pattern), so dense/sparse
+/// representations of the same content agree and collisions require
+/// identical dims, nnz and cell content.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Guard {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub fingerprint: u64,
+}
+
+impl Guard {
+    /// Guard of a local (driver) matrix: one pass over the cells.
+    pub fn of(m: &Matrix) -> Guard {
+        let (rows, cols) = m.shape();
+        let mut nnz = 0usize;
+        let mut h = FNV_OFFSET;
+        match m {
+            Matrix::Dense(d) => {
+                for (idx, v) in d.data.iter().enumerate() {
+                    if *v != 0.0 {
+                        nnz += 1;
+                        h = fnv_cell(h, idx as u64, *v);
+                    }
+                }
+            }
+            Matrix::Sparse(s) => {
+                for r in 0..rows {
+                    let (cis, vs) = s.row(r);
+                    for (ci, v) in cis.iter().zip(vs) {
+                        if *v != 0.0 {
+                            nnz += 1;
+                            h = fnv_cell(h, (r * cols + *ci as usize) as u64, *v);
+                        }
+                    }
+                }
+            }
+        }
+        Guard { rows, cols, nnz, fingerprint: h }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a (row-major cell index, value bits) pair. Cells must be
+/// visited in row-major order for dense and sparse walks to agree.
+#[inline]
+fn fnv_cell(mut h: u64, idx: u64, v: f64) -> u64 {
+    for b in idx.to_le_bytes().into_iter().chain(v.to_bits().to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Outcome of one cache acquisition, surfaced through EXPLAIN.
+#[derive(Clone, Debug)]
+pub enum CacheOutcome {
+    /// Resident blocks reused (lineage hit or pending-result adoption).
+    Hit { key: String },
+    /// Blockify was required; `evicted`/`evicted_bytes` report the LRU
+    /// evictions performed to make room (0 when none).
+    Miss { key: String, evicted: usize, evicted_bytes: usize },
+}
+
+impl CacheOutcome {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, CacheOutcome::Hit { .. })
+    }
+}
+
+/// One resident entry.
+struct Entry {
+    blocked: Arc<BlockedMatrix>,
+    guard: Guard,
+    deps: Vec<String>,
+    bytes: usize,
+    last_used: u64,
+    /// Produced by a DIST operator (the authoritative copy lives on the
+    /// cluster); kept for statistics/EXPLAIN.
+    dirty: bool,
+}
+
+/// The blocked output of the most recent DIST operator, not yet adopted
+/// under a lineage key. Serves directly-nested consumers.
+struct Pending {
+    blocked: Arc<BlockedMatrix>,
+    guard: Guard,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<(String, u64), Entry>,
+    /// Pin counts per base variable name (loop nesting).
+    pins: HashMap<String, usize>,
+    pending: Option<Pending>,
+    clock: u64,
+    total_bytes: usize,
+}
+
+/// Statistics snapshot of a [`BlockCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+    pub resident_bytes: usize,
+    pub resident_entries: usize,
+}
+
+/// Lineage-keyed cache of resident block partitions; owned by `Cluster`.
+pub struct BlockCache {
+    inner: Mutex<Inner>,
+    /// Total storage budget in bytes (per-worker budget × workers).
+    /// A budget of 0 disables caching entirely (every acquire misses and
+    /// nothing is kept resident) — used for cache-off parity runs.
+    budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl std::fmt::Debug for BlockCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(f, "BlockCache(budget {} B, {s:?})", self.budget)
+    }
+}
+
+impl BlockCache {
+    pub fn new(budget: usize) -> BlockCache {
+        BlockCache {
+            inner: Mutex::new(Inner::default()),
+            budget,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            resident_bytes: inner.total_bytes,
+            resident_entries: inner.entries.len(),
+        }
+    }
+
+    /// Resolve an operand to blocked form: guarded lineage lookup, then
+    /// pending-result adoption, then blockify-and-insert (with LRU
+    /// eviction under the budget). `m` is the live driver value.
+    pub fn acquire(
+        &self,
+        cluster: &Cluster,
+        hint: Option<&LineageRef>,
+        m: &Matrix,
+    ) -> Result<(Arc<BlockedMatrix>, CacheOutcome)> {
+        if !self.enabled() {
+            let b = Arc::new(cluster.blockify(m)?);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            metrics::global().cache_misses.fetch_add(1, Ordering::Relaxed);
+            let key = hint.map(|h| h.render()).unwrap_or_else(|| "(anon)".into());
+            return Ok((b, CacheOutcome::Miss { key, evicted: 0, evicted_bytes: 0 }));
+        }
+        let guard = Guard::of(m);
+        // 1. Guarded lineage lookup.
+        if let Some(h) = hint {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            let key = (h.name.clone(), h.version);
+            let fresh = inner.entries.get(&key).map(|e| e.guard == guard);
+            match fresh {
+                Some(true) => {
+                    let e = inner.entries.get_mut(&key).unwrap();
+                    e.last_used = clock;
+                    let blocked = e.blocked.clone();
+                    drop(inner);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    metrics::global().cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((blocked, CacheOutcome::Hit { key: h.render() }));
+                }
+                Some(false) => {
+                    // Stale: the live value diverged from the resident
+                    // blocks (e.g. same name rebound in another frame).
+                    let e = inner.entries.remove(&key).unwrap();
+                    inner.total_bytes -= e.bytes;
+                }
+                None => {}
+            }
+        }
+        // 2. Pending DIST output whose content matches this operand.
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.pending.as_ref().is_some_and(|p| p.guard == guard) {
+                let p = inner.pending.take().unwrap();
+                let blocked = p.blocked.clone();
+                // Promote under the lineage key so later statements hit too.
+                if let Some(h) = hint {
+                    self.insert_locked(&mut inner, h, blocked.clone(), p.guard, true);
+                }
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                metrics::global().cache_hits.fetch_add(1, Ordering::Relaxed);
+                let key =
+                    hint.map(|h| h.render()).unwrap_or_else(|| "(dist-intermediate)".into());
+                return Ok((blocked, CacheOutcome::Hit { key }));
+            }
+        }
+        // 3. Miss: blockify outside the lock, then insert.
+        let blocked = Arc::new(cluster.blockify(m)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        metrics::global().cache_misses.fetch_add(1, Ordering::Relaxed);
+        let (mut evicted, mut evicted_bytes) = (0, 0);
+        let key = match hint {
+            Some(h) => {
+                let mut inner = self.inner.lock().unwrap();
+                let (n, b) = self.insert_locked(&mut inner, h, blocked.clone(), guard, false);
+                evicted = n;
+                evicted_bytes = b;
+                h.render()
+            }
+            None => "(anon)".to_string(),
+        };
+        Ok((blocked, CacheOutcome::Miss { key, evicted, evicted_bytes }))
+    }
+
+    /// Insert a resident entry, evicting LRU unpinned entries to respect
+    /// the budget. Entries larger than the whole budget (after evicting
+    /// everything evictable) are not kept. Returns (evictions, bytes).
+    fn insert_locked(
+        &self,
+        inner: &mut Inner,
+        h: &LineageRef,
+        blocked: Arc<BlockedMatrix>,
+        guard: Guard,
+        dirty: bool,
+    ) -> (usize, usize) {
+        let bytes = blocked.size_in_bytes();
+        // An entry that can never fit must not wipe the resident working
+        // set on a doomed eviction sweep — serve it unkeyed instead.
+        if bytes > self.budget {
+            return (0, 0);
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        let (evicted, evicted_bytes) = self.evict_to_fit(inner, bytes);
+        if inner.total_bytes.saturating_add(bytes) > self.budget {
+            return (evicted, evicted_bytes); // does not fit; serve unkeyed
+        }
+        inner.total_bytes += bytes;
+        let displaced = inner.entries.insert(
+            (h.name.clone(), h.version),
+            Entry {
+                blocked,
+                guard,
+                deps: h.deps.clone(),
+                bytes,
+                last_used: clock,
+                dirty,
+            },
+        );
+        if let Some(old) = displaced {
+            // Concurrent acquires of the same key (parfor workers share
+            // the cluster) can both miss and insert; the replaced entry's
+            // bytes must leave the accounting.
+            inner.total_bytes -= old.bytes;
+        }
+        (evicted, evicted_bytes)
+    }
+
+    /// Evict least-recently-used unpinned entries until `need` more bytes
+    /// fit in the budget (or nothing evictable remains).
+    fn evict_to_fit(&self, inner: &mut Inner, need: usize) -> (usize, usize) {
+        let mut count = 0usize;
+        let mut freed = 0usize;
+        while inner.total_bytes.saturating_add(need) > self.budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| !e.deps.iter().any(|d| inner.pins.contains_key(d)))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.entries.remove(&k).unwrap();
+                    inner.total_bytes -= e.bytes;
+                    count += 1;
+                    freed += e.bytes;
+                }
+                None => break,
+            }
+        }
+        if count > 0 {
+            self.evictions.fetch_add(count as u64, Ordering::Relaxed);
+            metrics::global().cache_evictions.fetch_add(count as u64, Ordering::Relaxed);
+        }
+        (count, freed)
+    }
+
+    /// Keep a DIST operator's blocked output as the pending result so a
+    /// directly-nested consumer (or the adopting assignment) reuses it
+    /// without re-blockifying the collected driver copy.
+    pub fn offer_result(&self, blocked: Arc<BlockedMatrix>, guard: Guard) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.pending = Some(Pending { blocked, guard });
+    }
+
+    /// Adopt the pending DIST output under `name#version` if it matches
+    /// the value being bound — the interpreter calls this on assignment,
+    /// making the statement's distributed result resident under its
+    /// variable's lineage key (the flush to the driver already happened
+    /// lazily on CP demand).
+    pub fn adopt(&self, name: &str, version: u64, m: &Matrix) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        // Cheap pre-filter before the O(cells) content fingerprint: most
+        // assignments bind CP results while no DIST output is pending.
+        let dims_match = match inner.pending.as_ref() {
+            Some(p) => p.guard.rows == m.rows() && p.guard.cols == m.cols(),
+            None => return,
+        };
+        if !dims_match {
+            return;
+        }
+        let guard = Guard::of(m);
+        if inner.pending.as_ref().is_some_and(|p| p.guard == guard) {
+            let p = inner.pending.take().unwrap();
+            let h = LineageRef::var(name, version);
+            self.insert_locked(&mut inner, &h, p.blocked, p.guard, true);
+        }
+    }
+
+    /// Drop every entry keyed by or derived from `name` (called when the
+    /// interpreter rebinds or mutates the variable).
+    pub fn invalidate(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let stale: Vec<(String, u64)> = inner
+            .entries
+            .iter()
+            .filter(|((n, _), e)| n == name || e.deps.iter().any(|d| d == name))
+            .map(|(k, _)| k.clone())
+            .collect();
+        if stale.is_empty() {
+            return;
+        }
+        self.invalidations.fetch_add(stale.len() as u64, Ordering::Relaxed);
+        for k in stale {
+            let e = inner.entries.remove(&k).unwrap();
+            inner.total_bytes -= e.bytes;
+        }
+    }
+
+    /// Pin base variable names for the duration of a loop: entries that
+    /// depend on a pinned name are never evicted. Pins nest.
+    pub fn pin(&self, names: &[String]) {
+        let mut inner = self.inner.lock().unwrap();
+        for n in names {
+            *inner.pins.entry(n.clone()).or_insert(0) += 1;
+        }
+    }
+
+    /// Release a previous [`BlockCache::pin`].
+    pub fn unpin(&self, names: &[String]) {
+        let mut inner = self.inner.lock().unwrap();
+        for n in names {
+            if let Some(c) = inner.pins.get_mut(n) {
+                *c -= 1;
+                if *c == 0 {
+                    inner.pins.remove(n);
+                }
+            }
+        }
+    }
+
+    /// Number of dirty resident entries (blocked outputs of DIST ops).
+    pub fn dirty_entries(&self) -> usize {
+        self.inner.lock().unwrap().entries.values().filter(|e| e.dirty).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::matrix::randgen::{rand, Pdf};
+
+    fn cluster_with(budget: usize) -> Cluster {
+        Cluster::with_storage(2, 16, budget)
+    }
+
+    #[test]
+    fn guard_agrees_across_formats() {
+        let m = rand(40, 40, -1.0, 1.0, 0.2, Pdf::Uniform, 7).unwrap();
+        let dense = Matrix::Dense(m.to_dense());
+        let sparse = m.clone().into_sparse_format();
+        assert_eq!(Guard::of(&dense), Guard::of(&sparse));
+    }
+
+    #[test]
+    fn guard_distinguishes_content() {
+        let a = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 8).unwrap();
+        let b = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 9).unwrap();
+        assert_ne!(Guard::of(&a).fingerprint, Guard::of(&b).fingerprint);
+    }
+
+    #[test]
+    fn hit_after_miss_and_stale_guard_misses() {
+        let cl = cluster_with(usize::MAX);
+        let m = rand(30, 30, -1.0, 1.0, 1.0, Pdf::Uniform, 10).unwrap();
+        let h = LineageRef::var("X", 1);
+        let (_, o1) = cl.cache().acquire(&cl, Some(&h), &m).unwrap();
+        assert!(!o1.is_hit());
+        let (_, o2) = cl.cache().acquire(&cl, Some(&h), &m).unwrap();
+        assert!(o2.is_hit());
+        // Same key, different live content -> guarded miss, entry replaced.
+        let m2 = rand(30, 30, -1.0, 1.0, 1.0, Pdf::Uniform, 11).unwrap();
+        let (_, o3) = cl.cache().acquire(&cl, Some(&h), &m2).unwrap();
+        assert!(!o3.is_hit());
+        assert_eq!(cl.blockify_count(), 2);
+    }
+
+    #[test]
+    fn invalidate_drops_derived_entries() {
+        let cl = cluster_with(usize::MAX);
+        let m = rand(20, 20, -1.0, 1.0, 1.0, Pdf::Uniform, 12).unwrap();
+        let hx = LineageRef::var("X", 1);
+        let ht = LineageRef::derived("t(X)".into(), 1, vec!["X".into()]);
+        cl.cache().acquire(&cl, Some(&hx), &m).unwrap();
+        cl.cache().acquire(&cl, Some(&ht), &m).unwrap();
+        assert_eq!(cl.cache().stats().resident_entries, 2);
+        cl.cache().invalidate("X");
+        assert_eq!(cl.cache().stats().resident_entries, 0);
+        assert_eq!(cl.cache().stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_pins() {
+        let m1 = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 13).unwrap();
+        let m2 = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 14).unwrap();
+        let one = m1.size_in_bytes() + m1.size_in_bytes() / 2; // fits one, not two
+        let cl = cluster_with(one);
+        let h1 = LineageRef::var("A", 1);
+        let h2 = LineageRef::var("B", 1);
+        cl.cache().acquire(&cl, Some(&h1), &m1).unwrap();
+        cl.cache().acquire(&cl, Some(&h2), &m2).unwrap();
+        let s = cl.cache().stats();
+        assert_eq!(s.evictions, 1, "{s:?}");
+        assert!(s.resident_bytes <= one, "{s:?}");
+        // Re-acquire A: the earlier eviction means a miss.
+        let (_, o) = cl.cache().acquire(&cl, Some(&h1), &m1).unwrap();
+        assert!(!o.is_hit());
+        // Pin B: now A cannot evict it, so A is served unkeyed.
+        cl.cache().pin(&["B".to_string()]);
+        cl.cache().acquire(&cl, Some(&h2), &m2).unwrap();
+        cl.cache().acquire(&cl, Some(&h1), &m1).unwrap();
+        let (_, ob) = cl.cache().acquire(&cl, Some(&h2), &m2).unwrap();
+        assert!(ob.is_hit(), "pinned entry must survive pressure");
+        cl.cache().unpin(&["B".to_string()]);
+    }
+
+    #[test]
+    fn budget_zero_disables_caching() {
+        let cl = cluster_with(0);
+        let m = rand(16, 16, -1.0, 1.0, 1.0, Pdf::Uniform, 15).unwrap();
+        let h = LineageRef::var("X", 1);
+        for _ in 0..3 {
+            let (_, o) = cl.cache().acquire(&cl, Some(&h), &m).unwrap();
+            assert!(!o.is_hit());
+        }
+        assert_eq!(cl.blockify_count(), 3);
+        assert_eq!(cl.cache().stats().resident_entries, 0);
+    }
+}

@@ -17,10 +17,13 @@
 //! assignment (see `hop::plan`) decides when the interpreter routes an
 //! operator here instead of CP.
 
+pub mod cache;
 pub mod ops;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
+use crate::runtime::dist::cache::{BlockCache, CacheOutcome, LineageRef};
 use crate::runtime::matrix::dense::DenseMatrix;
 use crate::runtime::matrix::{reorg, Matrix};
 use crate::util::error::{DmlError, Result};
@@ -45,11 +48,22 @@ pub struct Cluster {
     broadcast_bytes: AtomicU64,
     shuffle_bytes: AtomicU64,
     tasks: AtomicU64,
+    blockify_ops: AtomicU64,
+    collects: AtomicU64,
+    /// Resident block-partition cache (lineage-keyed reuse).
+    cache: BlockCache,
 }
 
 impl Cluster {
-    /// A cluster of `num_workers` executors using `block_size` blocks.
+    /// A cluster of `num_workers` executors using `block_size` blocks and
+    /// an unbounded block-partition cache.
     pub fn new(num_workers: usize, block_size: usize) -> Cluster {
+        Cluster::with_storage(num_workers, block_size, usize::MAX)
+    }
+
+    /// A cluster with an explicit total storage budget (bytes) for the
+    /// resident block-partition cache; 0 disables caching.
+    pub fn with_storage(num_workers: usize, block_size: usize, storage: usize) -> Cluster {
         let workers = num_workers.max(1);
         Cluster {
             num_workers: workers,
@@ -58,11 +72,56 @@ impl Cluster {
             broadcast_bytes: AtomicU64::new(0),
             shuffle_bytes: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
+            blockify_ops: AtomicU64::new(0),
+            collects: AtomicU64::new(0),
+            cache: BlockCache::new(storage),
         }
     }
 
     pub fn num_workers(&self) -> usize {
         self.num_workers
+    }
+
+    /// The resident block-partition cache.
+    pub fn cache(&self) -> &BlockCache {
+        &self.cache
+    }
+
+    /// Partition a driver matrix into blocks, counting the repartition on
+    /// this cluster and in the global metrics. All blockifies of this
+    /// cluster flow through here so reuse is observable per cluster.
+    pub fn blockify(&self, m: &Matrix) -> Result<BlockedMatrix> {
+        let b = BlockedMatrix::from_local(m, self.block_size)?;
+        self.blockify_ops.fetch_add(1, Ordering::Relaxed);
+        metrics::global().blockify_ops.fetch_add(1, Ordering::Relaxed);
+        Ok(b)
+    }
+
+    /// Resolve an operand to blocked form through the cache (see
+    /// [`BlockCache::acquire`]).
+    pub fn acquire_blocked(
+        &self,
+        hint: Option<&LineageRef>,
+        m: &Matrix,
+    ) -> Result<(Arc<BlockedMatrix>, CacheOutcome)> {
+        self.cache.acquire(self, hint, m)
+    }
+
+    /// Collect a blocked matrix to the driver, counting the collect.
+    pub fn collect(&self, b: &BlockedMatrix) -> Result<Matrix> {
+        self.collects.fetch_add(1, Ordering::Relaxed);
+        metrics::global().dist_collects.fetch_add(1, Ordering::Relaxed);
+        b.to_local()
+    }
+
+    /// Blockify operations performed on this cluster since creation.
+    pub fn blockify_count(&self) -> u64 {
+        self.blockify_ops.load(Ordering::Relaxed)
+    }
+
+    /// Collect-to-driver operations performed on this cluster.
+    pub fn collect_count(&self) -> u64 {
+        self.collects.load(Ordering::Relaxed)
     }
 
     /// Zero all per-cluster accounting (benches call this between runs).
@@ -73,6 +132,8 @@ impl Cluster {
         self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.shuffle_bytes.store(0, Ordering::Relaxed);
         self.tasks.store(0, Ordering::Relaxed);
+        self.blockify_ops.store(0, Ordering::Relaxed);
+        self.collects.store(0, Ordering::Relaxed);
     }
 
     /// FLOPs executed per worker since the last reset.
@@ -145,13 +206,17 @@ pub struct BlockedMatrix {
 
 impl BlockedMatrix {
     /// Partition a local matrix into blocks (SystemML's "blockify").
+    ///
+    /// A 0-row/0-column matrix (legal in DML — e.g. the result of an
+    /// empty indexing range) yields an empty blocked handle with a 0-extent
+    /// grid rather than an error.
     pub fn from_local(m: &Matrix, block_size: usize) -> Result<BlockedMatrix> {
         if block_size == 0 {
             return Err(DmlError::rt("blockify: block size must be positive"));
         }
         let (rows, cols) = m.shape();
         if rows == 0 || cols == 0 {
-            return Err(DmlError::rt("blockify: empty matrix"));
+            return Ok(BlockedMatrix { rows, cols, block_size, blocks: Vec::new() });
         }
         let brows = ceil_div(rows, block_size);
         let bcols = ceil_div(cols, block_size);

@@ -7,6 +7,13 @@
 //! accounts per-worker FLOPs and broadcast/shuffle bytes on the
 //! [`Cluster`], and bumps the global `dist_tasks` metric — that is how
 //! benches and tests observe which physical plan ran.
+//!
+//! Communication accounting is **cache-aware**: an operand whose blocked
+//! partitions are already resident on the workers (a block-cache hit —
+//! see [`crate::runtime::dist::cache`]) is not re-broadcast / re-shuffled,
+//! so the cluster's communication totals reflect reuse exactly like
+//! Spark's cached-RDD + reused-broadcast behavior. The [`Residency`]
+//! flags carry that information from the dispatch layer.
 
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::agg::{self, AggOp};
@@ -27,8 +34,8 @@ pub fn matmult(cluster: &Cluster, a: &Matrix, b: &Matrix) -> Result<Matrix> {
             rhs_cols: b.cols(),
         });
     }
-    let ab = BlockedMatrix::from_local(a, cluster.block_size)?;
-    let bb = BlockedMatrix::from_local(b, cluster.block_size)?;
+    let ab = cluster.blockify(a)?;
+    let bb = cluster.blockify(b)?;
     matmult_blocked(cluster, &ab, &bb)?.to_local()
 }
 
@@ -41,11 +48,31 @@ pub enum DistMmOperator {
     Rmm,
 }
 
-/// Blocked matmult with cost-based mapmm/rmm selection.
+/// Which operands are already resident on the workers (block-cache
+/// hits). Resident operands incur no fresh broadcast/shuffle volume.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Residency {
+    pub lhs: bool,
+    pub rhs: bool,
+}
+
+/// Blocked matmult with cost-based mapmm/rmm selection (both operands
+/// treated as freshly distributed).
 pub fn matmult_blocked(
     cluster: &Cluster,
     a: &BlockedMatrix,
     b: &BlockedMatrix,
+) -> Result<BlockedMatrix> {
+    matmult_blocked_reuse(cluster, a, b, Residency::default())
+}
+
+/// Blocked matmult with cache-aware communication accounting: resident
+/// operands are not re-broadcast (mapmm) or re-replicated (rmm).
+pub fn matmult_blocked_reuse(
+    cluster: &Cluster,
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+    resident: Residency,
 ) -> Result<BlockedMatrix> {
     if a.cols() != b.rows() || a.block_size() != b.block_size() {
         return Err(DmlError::rt(format!(
@@ -59,18 +86,33 @@ pub fn matmult_blocked(
         )));
     }
     let (op, _) = choose_mm_operator(cluster, a, b);
-    // Communication accounting per the chosen plan.
+    // Communication accounting per the chosen plan, skipping operands
+    // whose partitions are already resident on the workers.
     match op {
         DistMmOperator::MapMm => {
-            // Broadcast the smaller side to every worker.
-            let small = a.size_in_bytes().min(b.size_in_bytes());
-            cluster.record_broadcast(small as u64);
+            // Broadcast the smaller side to every worker — unless its
+            // blocks are resident from a previous broadcast.
+            let a_small = a.size_in_bytes() <= b.size_in_bytes();
+            let (small, small_resident) = if a_small {
+                (a.size_in_bytes(), resident.lhs)
+            } else {
+                (b.size_in_bytes(), resident.rhs)
+            };
+            if !small_resident {
+                cluster.record_broadcast(small as u64);
+            }
         }
         DistMmOperator::Rmm => {
             // Each block of A is replicated across B's block columns and
-            // vice versa (SystemML's replication-based matmult).
-            let shuffled = a.size_in_bytes() as u64 * b.block_cols() as u64
-                + b.size_in_bytes() as u64 * a.block_rows() as u64;
+            // vice versa (SystemML's replication-based matmult); resident
+            // sides keep their replicated copies.
+            let mut shuffled = 0u64;
+            if !resident.lhs {
+                shuffled += a.size_in_bytes() as u64 * b.block_cols() as u64;
+            }
+            if !resident.rhs {
+                shuffled += b.size_in_bytes() as u64 * a.block_rows() as u64;
+            }
             cluster.record_shuffle(shuffled);
         }
     }
@@ -91,7 +133,16 @@ pub fn matmult_blocked(
                     Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
                 });
             }
-            let out = acc.ok_or_else(|| DmlError::rt("blocked matmult: empty k dimension"))?;
+            // An empty k extent (0-column lhs) contributes an all-zero
+            // product block — empty matrices flow legally from indexing.
+            let out = match acc {
+                Some(m) => m,
+                None => {
+                    let r = (a.rows() - i * bs).min(bs);
+                    let c = (b.cols() - j * bs).min(bs);
+                    Matrix::zeros(r, c)
+                }
+            };
             cluster.record_task(cluster.worker_for(i, j), flops);
             blocks.push(out.examine_and_convert());
         }
@@ -138,7 +189,7 @@ pub fn binary_blocked(
     if a.block_size() != b.block_size() {
         // Align the right side to the left grid (one shuffle).
         cluster.record_shuffle(b.size_in_bytes() as u64);
-        let rb = BlockedMatrix::from_local(&b.to_local()?, a.block_size())?;
+        let rb = cluster.blockify(&b.to_local()?)?;
         return binary_blocked(cluster, a, &rb, op);
     }
     let (brows, bcols) = (a.block_rows(), a.block_cols());
@@ -156,8 +207,8 @@ pub fn binary_blocked(
 
 /// Distributed cellwise binary over local inputs.
 pub fn binary(cluster: &Cluster, a: &Matrix, b: &Matrix, op: BinOp) -> Result<Matrix> {
-    let ab = BlockedMatrix::from_local(a, cluster.block_size)?;
-    let bb = BlockedMatrix::from_local(b, cluster.block_size)?;
+    let ab = cluster.blockify(a)?;
+    let bb = cluster.blockify(b)?;
     binary_blocked(cluster, &ab, &bb, op)?.to_local()
 }
 
@@ -189,7 +240,7 @@ pub fn full_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> f64 
 
 /// Distributed full aggregate over a local input.
 pub fn full_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<f64> {
-    Ok(full_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op))
+    Ok(full_agg_blocked(cluster, &cluster.blockify(m)?, op))
 }
 
 /// Blocked row aggregate → rows×1 vector: per-block row partials combined
@@ -257,12 +308,12 @@ pub fn col_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> Resul
 
 /// Distributed row aggregate over a local input.
 pub fn row_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<Matrix> {
-    row_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op)
+    row_agg_blocked(cluster, &cluster.blockify(m)?, op)
 }
 
 /// Distributed column aggregate over a local input.
 pub fn col_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<Matrix> {
-    col_agg_blocked(cluster, &BlockedMatrix::from_local(m, cluster.block_size)?, op)
+    col_agg_blocked(cluster, &cluster.blockify(m)?, op)
 }
 
 /// How block-row/-column partial aggregates are merged across blocks.

@@ -3,6 +3,7 @@
 
 use crate::dml::ast::Pos;
 use crate::runtime::conv::{self, ConvShape};
+use crate::runtime::dist::cache::LineageRef;
 use crate::runtime::interp::{Interpreter, Value};
 use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
@@ -15,18 +16,33 @@ type EArg = (Option<String>, Value);
 struct Args<'a> {
     name: &'a str,
     args: &'a [EArg],
+    /// Lineage references of the argument expressions (parallel to
+    /// `args`; empty when the caller has no lineage context).
+    hints: &'a [Option<LineageRef>],
 }
 
 impl<'a> Args<'a> {
+    /// Index of the argument named `name`, else of the `pos`-th unnamed.
+    fn index_of(&self, pos: usize, name: &str) -> Option<usize> {
+        if let Some(i) = self.args.iter().position(|(n, _)| n.as_deref() == Some(name)) {
+            return Some(i);
+        }
+        self.args
+            .iter()
+            .enumerate()
+            .filter(|(_, (n, _))| n.is_none())
+            .nth(pos)
+            .map(|(i, _)| i)
+    }
+
     /// Named arg, else positional index.
     fn get(&self, pos: usize, name: &str) -> Option<&Value> {
-        for (n, v) in self.args {
-            if n.as_deref() == Some(name) {
-                return Some(v);
-            }
-        }
-        // positional args are the unnamed ones, in order
-        self.args.iter().filter(|(n, _)| n.is_none()).nth(pos).map(|(_, v)| v)
+        self.index_of(pos, name).map(|i| &self.args[i].1)
+    }
+
+    /// Lineage reference of the argument, when the caller supplied one.
+    fn hint(&self, pos: usize, name: &str) -> Option<&LineageRef> {
+        self.hints.get(self.index_of(pos, name)?)?.as_ref()
     }
     fn require(&self, pos: usize, name: &str) -> Result<&Value> {
         self.get(pos, name).ok_or_else(|| {
@@ -112,9 +128,10 @@ pub fn call_builtin(
     interp: &Interpreter,
     name: &str,
     args: &[EArg],
+    hints: &[Option<LineageRef>],
     pos: Pos,
 ) -> Result<Vec<Value>> {
-    let a = Args { name, args };
+    let a = Args { name, args, hints };
     let one = |v: Value| Ok(vec![v]);
     let m1 = |m: Matrix| Ok(vec![Value::Matrix(m)]);
 
@@ -126,30 +143,34 @@ pub fn call_builtin(
         "nnz" => one(Value::Int(a.matrix(0, "target")?.nnz() as i64)),
 
         // ---- aggregates (plan-aware dispatch: CP or distributed) --------
-        "sum" => one(Value::Double(interp.dispatch_agg_full(
+        "sum" => one(Value::Double(interp.dispatch_agg_full_hinted(
             &a.matrix(0, "target")?,
             AggOp::Sum,
             Some(pos),
+            a.hint(0, "target"),
         )?)),
-        "mean" => one(Value::Double(interp.dispatch_agg_full(
+        "mean" => one(Value::Double(interp.dispatch_agg_full_hinted(
             &a.matrix(0, "target")?,
             AggOp::Mean,
             Some(pos),
+            a.hint(0, "target"),
         )?)),
-        "prod" => one(Value::Double(interp.dispatch_agg_full(
+        "prod" => one(Value::Double(interp.dispatch_agg_full_hinted(
             &a.matrix(0, "target")?,
             AggOp::Prod,
             Some(pos),
+            a.hint(0, "target"),
         )?)),
         "var" => {
             let m = a.matrix(0, "target")?;
-            let mu = interp.dispatch_agg_full(&m, AggOp::Mean, Some(pos))?;
-            let ss = interp.dispatch_agg_full(&m, AggOp::SumSq, Some(pos))?;
+            let h = a.hint(0, "target");
+            let mu = interp.dispatch_agg_full_hinted(&m, AggOp::Mean, Some(pos), h)?;
+            let ss = interp.dispatch_agg_full_hinted(&m, AggOp::SumSq, Some(pos), h)?;
             let n = m.len() as f64;
             one(Value::Double((ss - n * mu * mu) / (n - 1.0).max(1.0)))
         }
         "sd" => {
-            let out = call_builtin(interp, "var", args, pos)?;
+            let out = call_builtin(interp, "var", args, hints, pos)?;
             one(Value::Double(out[0].as_double()?.sqrt()))
         }
         "min" | "max" => {
@@ -157,9 +178,12 @@ pub fn call_builtin(
             let bop = if name == "min" { BinOp::Min } else { BinOp::Max };
             if a.count() == 1 {
                 match a.require(0, "target")? {
-                    Value::Matrix(m) => {
-                        one(Value::Double(interp.dispatch_agg_full(m, op, Some(pos))?))
-                    }
+                    Value::Matrix(m) => one(Value::Double(interp.dispatch_agg_full_hinted(
+                        m,
+                        op,
+                        Some(pos),
+                        a.hint(0, "target"),
+                    )?)),
                     other => one(Value::Double(other.as_double()?)),
                 }
             } else {
@@ -188,7 +212,13 @@ pub fn call_builtin(
                 _ => AggOp::Min,
             };
             let row_wise = name.starts_with("row");
-            m1(interp.dispatch_agg_axis(&a.matrix(0, "target")?, op, row_wise, Some(pos))?)
+            m1(interp.dispatch_agg_axis_hinted(
+                &a.matrix(0, "target")?,
+                op,
+                row_wise,
+                Some(pos),
+                a.hint(0, "target"),
+            )?)
         }
         "rowIndexMax" => m1(agg::row_index_max(&a.matrix(0, "target")?)),
         "trace" => one(Value::Double(agg::trace(&a.matrix(0, "target")?))),

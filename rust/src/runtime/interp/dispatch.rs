@@ -8,12 +8,15 @@
 //! CP, DIST and ACCEL placements alike — with the estimate and budget
 //! that produced it.
 
+use std::sync::Arc;
+
 use crate::dml::ast::Pos;
 use crate::hop::dag::agg_name;
 use crate::hop::estimate;
 use crate::hop::plan::{choose_exec, ExecType, OpKind};
+use crate::runtime::dist::cache::{CacheOutcome, Guard, LineageRef};
 use crate::runtime::dist::ops as dist_ops;
-use crate::runtime::dist::Cluster;
+use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::interp::Interpreter;
 use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::elementwise::{self, BinOp};
@@ -89,6 +92,56 @@ impl Interpreter {
         Ok(exec)
     }
 
+    /// Resolve a DIST operand to blocked form through the cluster's
+    /// lineage-keyed block cache, emitting the `CACHE(hit|miss|evict)`
+    /// EXPLAIN lines that make reuse observable.
+    fn cache_acquire(
+        &self,
+        cluster: &Cluster,
+        hint: Option<&LineageRef>,
+        m: &Matrix,
+        side: &str,
+    ) -> Result<(Arc<BlockedMatrix>, CacheOutcome)> {
+        let (blocked, outcome) = cluster.acquire_blocked(hint, m)?;
+        if self.config.explain {
+            match &outcome {
+                CacheOutcome::Hit { key } => self.emit(format!(
+                    "EXPLAIN: CACHE(hit) {key} {side} ({}x{}, {} blocks resident)",
+                    m.rows(),
+                    m.cols(),
+                    blocked.block_rows() * blocked.block_cols()
+                )),
+                CacheOutcome::Miss { key, evicted, evicted_bytes } => {
+                    self.emit(format!(
+                        "EXPLAIN: CACHE(miss) {key} {side} ({}x{}, blockify {} blocks)",
+                        m.rows(),
+                        m.cols(),
+                        blocked.block_rows() * blocked.block_cols()
+                    ));
+                    if *evicted > 0 {
+                        self.emit(format!(
+                            "EXPLAIN: CACHE(evict) {evicted} entries, {evicted_bytes} B freed (budget {} B)",
+                            cluster.cache().budget()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok((blocked, outcome))
+    }
+
+    /// Run a DIST operator's blocked output back to the driver: the
+    /// blocked handle is offered to the cache (dirty — its authoritative
+    /// copy is the cluster's) so a nested consumer or the adopting
+    /// assignment reuses it, and the driver copy is materialized for the
+    /// CP world (the on-demand flush).
+    fn flush_dist_result(&self, cluster: &Cluster, out: BlockedMatrix) -> Result<Matrix> {
+        let out = Arc::new(out);
+        let local = cluster.collect(&out)?;
+        cluster.cache().offer_result(out, Guard::of(&local));
+        Ok(local)
+    }
+
     /// Heavy-operator dispatch for `%*%`: ACCEL when a compiled artifact
     /// matches, else CP vs DIST by placement/estimate (paper §3).
     pub fn dispatch_matmult(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
@@ -98,6 +151,19 @@ impl Interpreter {
     /// [`Self::dispatch_matmult`] with the operator's source position for
     /// compiled-placement lookup.
     pub fn dispatch_matmult_at(&self, a: &Matrix, b: &Matrix, pos: Option<Pos>) -> Result<Matrix> {
+        self.dispatch_matmult_hinted(a, b, pos, None, None)
+    }
+
+    /// [`Self::dispatch_matmult_at`] with the operands' lineage
+    /// references for block-cache reuse on DIST placements.
+    pub fn dispatch_matmult_hinted(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Matrix> {
         // Accelerator first: compiled artifacts handle specific shapes.
         if let Some(accel) = &self.accel {
             if let Some(out) = accel.try_matmult(a, b)? {
@@ -118,7 +184,15 @@ impl Interpreter {
         let desc =
             format!("%*% ({}x{} @ {}x{})", a.rows(), a.cols(), b.rows(), b.cols());
         match self.resolve_exec(OpKind::MatMult, pos, est, &desc)? {
-            ExecType::Dist => dist_ops::matmult(self.cluster_ref()?, a, b),
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let (ab, oa) = self.cache_acquire(cluster, ha, a, "lhs")?;
+                let (bb, ob) = self.cache_acquire(cluster, hb, b, "rhs")?;
+                let resident =
+                    dist_ops::Residency { lhs: oa.is_hit(), rhs: ob.is_hit() };
+                let out = dist_ops::matmult_blocked_reuse(cluster, &ab, &bb, resident)?;
+                self.flush_dist_result(cluster, out)
+            }
             _ => mult::matmult(a, b),
         }
     }
@@ -133,23 +207,58 @@ impl Interpreter {
         op: BinOp,
         pos: Option<Pos>,
     ) -> Result<Matrix> {
+        self.dispatch_binary_hinted(a, b, op, pos, None, None)
+    }
+
+    /// [`Self::dispatch_binary`] with the operands' lineage references
+    /// for block-cache reuse on DIST placements.
+    pub fn dispatch_binary_hinted(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        op: BinOp,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Matrix> {
         if a.shape() != b.shape() {
             return elementwise::binary(a, b, op);
         }
         let est = estimate::binary_mem_estimate(a, b);
         let desc = format!("b({op:?}) ({}x{})", a.rows(), a.cols());
         match self.resolve_exec(OpKind::CellBinary, pos, est, &desc)? {
-            ExecType::Dist => dist_ops::binary(self.cluster_ref()?, a, b, op),
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let (ab, _) = self.cache_acquire(cluster, ha, a, "lhs")?;
+                let (bb, _) = self.cache_acquire(cluster, hb, b, "rhs")?;
+                let out = dist_ops::binary_blocked(cluster, &ab, &bb, op)?;
+                self.flush_dist_result(cluster, out)
+            }
             _ => elementwise::binary(a, b, op),
         }
     }
 
     /// Unified dispatch for full aggregates (`sum`, `mean`, `min`, ...).
     pub fn dispatch_agg_full(&self, m: &Matrix, op: AggOp, pos: Option<Pos>) -> Result<f64> {
+        self.dispatch_agg_full_hinted(m, op, pos, None)
+    }
+
+    /// [`Self::dispatch_agg_full`] with the operand's lineage reference.
+    pub fn dispatch_agg_full_hinted(
+        &self,
+        m: &Matrix,
+        op: AggOp,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<f64> {
         let est = m.size_in_bytes() + estimate::dense_size(1, 1);
         let desc = format!("ua({}) ({}x{})", agg_name(op), m.rows(), m.cols());
         match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
-            ExecType::Dist => dist_ops::full_agg(self.cluster_ref()?, m, op),
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let (mb, _) = self.cache_acquire(cluster, hint, m, "arg")?;
+                Ok(dist_ops::full_agg_blocked(cluster, &mb, op))
+            }
             _ => Ok(agg::full_agg(m, op)),
         }
     }
@@ -163,6 +272,18 @@ impl Interpreter {
         row_wise: bool,
         pos: Option<Pos>,
     ) -> Result<Matrix> {
+        self.dispatch_agg_axis_hinted(m, op, row_wise, pos, None)
+    }
+
+    /// [`Self::dispatch_agg_axis`] with the operand's lineage reference.
+    pub fn dispatch_agg_axis_hinted(
+        &self,
+        m: &Matrix,
+        op: AggOp,
+        row_wise: bool,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<Matrix> {
         let out = if row_wise {
             estimate::dense_size(m.rows(), 1)
         } else {
@@ -174,10 +295,11 @@ impl Interpreter {
         match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
+                let (mb, _) = self.cache_acquire(cluster, hint, m, "arg")?;
                 if row_wise {
-                    dist_ops::row_agg(cluster, m, op)
+                    dist_ops::row_agg_blocked(cluster, &mb, op)
                 } else {
-                    dist_ops::col_agg(cluster, m, op)
+                    dist_ops::col_agg_blocked(cluster, &mb, op)
                 }
             }
             _ => Ok(if row_wise { agg::row_agg(m, op) } else { agg::col_agg(m, op) }),

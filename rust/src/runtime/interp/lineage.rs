@@ -1,0 +1,222 @@
+//! Variable lineage tracking for the block-partition cache.
+//!
+//! The interpreter stamps every variable binding event (assignment,
+//! left-indexed mutation, multi-assign, function parameter binding,
+//! parfor result merge) with a fresh **lineage version** from a global
+//! counter. A DIST operand that is a plain variable read — or a simple
+//! derived form like `t(X)` — carries a [`LineageRef`] built from that
+//! version into the dispatch layer, which keys the cluster's resident
+//! block cache with it. Rebinding a name bumps its version *and*
+//! invalidates resident entries derived from it, so a stale cached
+//! partition can never be addressed again (and the guard check in the
+//! cache makes even version collisions across scopes safe).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dml::ast::{Arg, AssignTarget, Expr, IndexRange, RangeExpr, Stmt};
+use crate::runtime::dist::cache::LineageRef;
+use crate::runtime::interp::Interpreter;
+
+/// Name → current lineage version. Shared by all frames of one
+/// interpreter (parfor workers included), so versions are unique per
+/// binding event program-wide.
+#[derive(Debug, Default)]
+pub struct LineageTable {
+    versions: Mutex<std::collections::HashMap<String, u64>>,
+    next: AtomicU64,
+}
+
+impl LineageTable {
+    /// Record a (re)binding of `name`; returns the fresh version.
+    pub fn rebind(&self, name: &str) -> u64 {
+        let v = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        self.versions.lock().unwrap().insert(name.to_string(), v);
+        v
+    }
+
+    /// Current version of `name`, if it was ever bound.
+    pub fn current(&self, name: &str) -> Option<u64> {
+        self.versions.lock().unwrap().get(name).copied()
+    }
+}
+
+impl Interpreter {
+    /// Stamp a fresh lineage version for `name` and invalidate any
+    /// resident block partitions derived from it. Every binding site in
+    /// the interpreter funnels through here.
+    pub(crate) fn note_rebind(&self, name: &str) -> u64 {
+        let v = self.lineage.rebind(name);
+        if let Some(cl) = &self.cluster {
+            cl.cache().invalidate(name);
+        }
+        v
+    }
+
+    /// Lineage reference of an operand expression, when it has one: a
+    /// plain variable read `X`, or the derived transpose `t(X)` (keyed
+    /// separately but invalidated with `X`). Anything else is decided by
+    /// the cache's pending-result matching alone.
+    pub(crate) fn lineage_hint(&self, e: &Expr) -> Option<LineageRef> {
+        match e {
+            Expr::Var(name, _) => {
+                Some(LineageRef::var(name, self.lineage.current(name)?))
+            }
+            Expr::Call { namespace: None, name, args, .. } if name == "t" && args.len() == 1 => {
+                match &args[0].value {
+                    Expr::Var(base, _) => Some(LineageRef::derived(
+                        format!("t({base})"),
+                        self.lineage.current(base)?,
+                        vec![base.clone()],
+                    )),
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Pin every variable a loop body reads for the loop's duration so
+    /// loop-carried resident partitions survive eviction pressure; the
+    /// returned guard unpins on drop (including the error path).
+    pub(crate) fn pin_loop_reads(&self, body: &[Stmt]) -> PinGuard {
+        let Some(cluster) = self.cluster.clone() else {
+            return PinGuard { cluster: None, names: Vec::new() };
+        };
+        let mut names: Vec<String> = read_vars(body).into_iter().collect();
+        names.sort();
+        cluster.cache().pin(&names);
+        PinGuard { cluster: Some(cluster), names }
+    }
+}
+
+/// RAII unpin for [`Interpreter::pin_loop_reads`].
+pub(crate) struct PinGuard {
+    cluster: Option<std::sync::Arc<crate::runtime::dist::Cluster>>,
+    names: Vec<String>,
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        if let Some(cl) = &self.cluster {
+            cl.cache().unpin(&self.names);
+        }
+    }
+}
+
+/// Every variable name read anywhere in a statement block (an
+/// over-approximation: names written before read are included too, which
+/// only pins a little more than strictly necessary).
+pub fn read_vars(stmts: &[Stmt]) -> HashSet<String> {
+    let mut out = HashSet::new();
+    walk_stmts(stmts, &mut out);
+    out
+}
+
+fn walk_stmts(stmts: &[Stmt], out: &mut HashSet<String>) {
+    for s in stmts {
+        match s {
+            Stmt::Assign { target, value, .. } => {
+                walk_expr(value, out);
+                if let AssignTarget::Indexed { name, rows, cols } = target {
+                    out.insert(name.clone());
+                    walk_range(rows, out);
+                    walk_range(cols, out);
+                }
+            }
+            Stmt::MultiAssign { value, .. } => walk_expr(value, out),
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                walk_expr(cond, out);
+                walk_stmts(then_branch, out);
+                walk_stmts(else_branch, out);
+            }
+            Stmt::For { range, body, .. } | Stmt::ParFor { range, body, .. } => {
+                walk_loop_range(range, out);
+                walk_stmts(body, out);
+            }
+            Stmt::While { cond, body, .. } => {
+                walk_expr(cond, out);
+                walk_stmts(body, out);
+            }
+            Stmt::ExprStmt { expr, .. } => walk_expr(expr, out),
+        }
+    }
+}
+
+fn walk_loop_range(r: &RangeExpr, out: &mut HashSet<String>) {
+    walk_expr(&r.from, out);
+    walk_expr(&r.to, out);
+    if let Some(s) = &r.step {
+        walk_expr(s, out);
+    }
+}
+
+fn walk_range(r: &IndexRange, out: &mut HashSet<String>) {
+    match r {
+        IndexRange::All => {}
+        IndexRange::Single(e) => walk_expr(e, out),
+        IndexRange::Range(a, b) => {
+            walk_expr(a, out);
+            walk_expr(b, out);
+        }
+    }
+}
+
+fn walk_expr(e: &Expr, out: &mut HashSet<String>) {
+    match e {
+        Expr::Var(name, _) => {
+            out.insert(name.clone());
+        }
+        Expr::Unary { operand, .. } => walk_expr(operand, out),
+        Expr::Binary { lhs, rhs, .. } => {
+            walk_expr(lhs, out);
+            walk_expr(rhs, out);
+        }
+        Expr::Index { base, rows, cols, .. } => {
+            walk_expr(base, out);
+            walk_range(rows, out);
+            walk_range(cols, out);
+        }
+        Expr::Call { args, .. } => {
+            for Arg { value, .. } in args {
+                walk_expr(value, out);
+            }
+        }
+        Expr::List(items, _) => {
+            for i in items {
+                walk_expr(i, out);
+            }
+        }
+        Expr::Num(..) | Expr::Int(..) | Expr::Str(..) | Expr::Bool(..) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+
+    #[test]
+    fn versions_are_unique_and_monotone() {
+        let t = LineageTable::default();
+        let v1 = t.rebind("x");
+        let v2 = t.rebind("y");
+        let v3 = t.rebind("x");
+        assert!(v1 < v2 && v2 < v3);
+        assert_eq!(t.current("x"), Some(v3));
+        assert_eq!(t.current("z"), None);
+    }
+
+    #[test]
+    fn read_vars_covers_loops_and_indexing() {
+        let prog = parse(
+            "while (i < n) { q = t(X) %*% (X %*% p) \n A[1, j] = sum(B) \n i = i + 1 }",
+        )
+        .unwrap();
+        let vars = read_vars(&prog.body);
+        for v in ["i", "n", "X", "p", "A", "j", "B"] {
+            assert!(vars.contains(v), "missing {v}: {vars:?}");
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod builtins;
 pub mod dispatch;
+pub mod lineage;
 pub mod registry;
 pub mod value;
 
@@ -16,6 +17,7 @@ use crate::conf::SystemConfig;
 use crate::dml::ast::*;
 use crate::dml::validate::Bundle;
 use crate::hop::plan::Plan;
+use crate::runtime::dist::cache::LineageRef;
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
 use crate::runtime::matrix::{reorg, Matrix};
 use crate::util::error::{DmlError, Result};
@@ -44,6 +46,8 @@ pub struct Interpreter {
     pub echo: bool,
     /// Distributed backend handle (simulated cluster), if enabled.
     pub cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+    /// Lineage versions of variable bindings (keys of the block cache).
+    pub lineage: Arc<lineage::LineageTable>,
     /// Accelerator backend handle (PJRT), if enabled.
     pub accel: Option<Arc<crate::runtime::accel::AccelBackend>>,
 }
@@ -59,9 +63,17 @@ pub struct Ctx {
 impl Interpreter {
     pub fn new(bundle: Bundle, config: SystemConfig) -> Self {
         let cluster = if config.dist_enabled {
-            Some(Arc::new(crate::runtime::dist::Cluster::new(
+            // The block-partition cache budget is the aggregate worker
+            // storage; cache_enabled=false collapses it to 0 (no reuse).
+            let storage = if config.cache_enabled {
+                config.worker_storage.saturating_mul(config.num_workers.max(1))
+            } else {
+                0
+            };
+            Some(Arc::new(crate::runtime::dist::Cluster::with_storage(
                 config.num_workers,
                 config.block_size,
+                storage,
             )))
         } else {
             None
@@ -84,6 +96,7 @@ impl Interpreter {
             sink: Arc::new(Mutex::new(Vec::new())),
             echo: false,
             cluster,
+            lineage: Arc::new(lineage::LineageTable::default()),
             accel,
         }
     }
@@ -92,6 +105,9 @@ impl Interpreter {
     /// returns the final top-level scope.
     pub fn run(&self, inputs: Scope) -> Result<Scope> {
         let mut scope = inputs;
+        for name in scope.keys() {
+            self.lineage.rebind(name);
+        }
         let body = self.bundle.main.body.clone();
         self.exec_block(&body, &mut scope, &Ctx::default())?;
         Ok(scope)
@@ -125,6 +141,12 @@ impl Interpreter {
                 let v = self.eval(value, scope, ctx)?;
                 match target {
                     AssignTarget::Var(name) => {
+                        let version = self.note_rebind(name);
+                        if let (Some(cl), Value::Matrix(m)) = (&self.cluster, &v) {
+                            // The statement's DIST result stays resident
+                            // under its new lineage key.
+                            cl.cache().adopt(name, version, m);
+                        }
                         scope.insert(name.clone(), v);
                     }
                     AssignTarget::Indexed { name, rows, cols } => {
@@ -153,6 +175,7 @@ impl Interpreter {
                             )));
                         }
                         let out = reorg::left_index(&base, rl, cl, &src)?;
+                        self.note_rebind(name);
                         scope.insert(name.clone(), Value::Matrix(out));
                     }
                 }
@@ -172,6 +195,10 @@ impl Interpreter {
                     )));
                 }
                 for (t, v) in targets.iter().zip(results) {
+                    let version = self.note_rebind(t);
+                    if let (Some(cl), Value::Matrix(m)) = (&self.cluster, &v) {
+                        cl.cache().adopt(t, version, m);
+                    }
                     scope.insert(t.clone(), v);
                 }
             }
@@ -183,16 +210,20 @@ impl Interpreter {
                 }
             }
             Stmt::For { var, range, body, .. } => {
+                let _pins = self.pin_loop_reads(body);
                 for v in self.range_values(range, scope, ctx)? {
+                    self.note_rebind(var);
                     scope.insert(var.clone(), Value::Double(v));
                     self.exec_block(body, scope, ctx)?;
                 }
             }
             Stmt::ParFor { var, range, body, opts, .. } => {
+                let _pins = self.pin_loop_reads(body);
                 let iters = self.range_values(range, scope, ctx)?;
                 crate::runtime::parfor::execute_parfor(self, var, &iters, body, opts, scope, ctx)?;
             }
             Stmt::While { cond, body, .. } => {
+                let _pins = self.pin_loop_reads(body);
                 let mut guard = 0usize;
                 while self.eval(cond, scope, ctx)?.as_bool()? {
                     self.exec_block(body, scope, ctx)?;
@@ -320,11 +351,17 @@ impl Interpreter {
                         return Ok(Value::Bool(rb));
                     }
                     let r = self.eval(rhs, scope, ctx)?;
-                    return self.binary_matrix_op(*op, &l, &r, pos);
+                    let hints = (self.lineage_hint(lhs), self.lineage_hint(rhs));
+                    return self.binary_matrix_op(*op, &l, &r, pos, hints);
                 }
                 let l = self.eval(lhs, scope, ctx)?;
                 let r = self.eval(rhs, scope, ctx)?;
-                self.binary_value_op(*op, &l, &r, pos)
+                let hints = if l.is_matrix() || r.is_matrix() {
+                    (self.lineage_hint(lhs), self.lineage_hint(rhs))
+                } else {
+                    (None, None)
+                };
+                self.binary_value_op(*op, &l, &r, pos, hints)
             }
             Expr::Index { base, rows, cols, .. } => {
                 let b = self.eval(base, scope, ctx)?;
@@ -349,8 +386,17 @@ impl Interpreter {
         }
     }
 
-    /// Scalar/matrix dispatch for binary operators.
-    fn binary_value_op(&self, op: AstBinOp, l: &Value, r: &Value, pos: &Pos) -> Result<Value> {
+    /// Scalar/matrix dispatch for binary operators. `hints` carry the
+    /// operands' lineage references when they are plain variable reads
+    /// (consumed by the block cache on DIST placements).
+    fn binary_value_op(
+        &self,
+        op: AstBinOp,
+        l: &Value,
+        r: &Value,
+        pos: &Pos,
+        hints: (Option<LineageRef>, Option<LineageRef>),
+    ) -> Result<Value> {
         // String concatenation with `+`.
         if op == AstBinOp::Add {
             if let (Value::Str(a), b) = (l, r) {
@@ -371,7 +417,7 @@ impl Interpreter {
             }
         }
         if l.is_matrix() || r.is_matrix() {
-            return self.binary_matrix_op(op, l, r, pos);
+            return self.binary_matrix_op(op, l, r, pos, hints);
         }
         // Pure scalar arithmetic; ints stay ints where DML does.
         let bop = ast_to_binop(op);
@@ -404,14 +450,34 @@ impl Interpreter {
     /// Matrix-typed binary ops route through the unified plan-aware
     /// dispatch (`dispatch.rs`): matmult and cell-aligned matrix∘matrix
     /// binaries are placed CP/DIST/ACCEL; matrix∘scalar ops stay CP.
-    fn binary_matrix_op(&self, op: AstBinOp, l: &Value, r: &Value, pos: &Pos) -> Result<Value> {
+    fn binary_matrix_op(
+        &self,
+        op: AstBinOp,
+        l: &Value,
+        r: &Value,
+        pos: &Pos,
+        hints: (Option<LineageRef>, Option<LineageRef>),
+    ) -> Result<Value> {
         if op == AstBinOp::MatMul {
             let (a, b) = (l.as_matrix()?, r.as_matrix()?);
-            return Ok(Value::Matrix(self.dispatch_matmult_at(a, b, Some(*pos))?));
+            return Ok(Value::Matrix(self.dispatch_matmult_hinted(
+                a,
+                b,
+                Some(*pos),
+                hints.0.as_ref(),
+                hints.1.as_ref(),
+            )?));
         }
         let bop = ast_to_binop(op);
         let out = match (l, r) {
-            (Value::Matrix(a), Value::Matrix(b)) => self.dispatch_binary(a, b, bop, Some(*pos))?,
+            (Value::Matrix(a), Value::Matrix(b)) => self.dispatch_binary_hinted(
+                a,
+                b,
+                bop,
+                Some(*pos),
+                hints.0.as_ref(),
+                hints.1.as_ref(),
+            )?,
             (Value::Matrix(a), other) => elementwise::scalar_op(a, other.as_double()?, bop, false)?,
             (other, Value::Matrix(b)) => elementwise::scalar_op(b, other.as_double()?, bop, true)?,
             _ => {
@@ -459,12 +525,15 @@ impl Interpreter {
             return self.call_user_function(&f, fns, args, scope, ctx);
         }
         if namespace.is_none() {
-            // Builtins: evaluate args (keeping names) and dispatch.
+            // Builtins: evaluate args (keeping names and lineage
+            // references for the cache-aware aggregates) and dispatch.
             let mut eargs = Vec::with_capacity(args.len());
+            let mut hints = Vec::with_capacity(args.len());
             for a in args {
                 eargs.push((a.name.clone(), self.eval(&a.value, scope, ctx)?));
+                hints.push(self.lineage_hint(&a.value));
             }
-            return builtins::call_builtin(self, name, &eargs, pos);
+            return builtins::call_builtin(self, name, &eargs, &hints, pos);
         }
         Err(DmlError::rt(format!(
             "unknown function '{}{name}'",
@@ -501,6 +570,7 @@ impl Interpreter {
                         )));
                     }
                     let v = self.eval(&a.value, scope, ctx)?;
+                    self.note_rebind(&f.params[positional].name);
                     frame.insert(f.params[positional].name.clone(), v);
                     positional += 1;
                 }
@@ -512,6 +582,7 @@ impl Interpreter {
                         )));
                     }
                     let v = self.eval(&a.value, scope, ctx)?;
+                    self.note_rebind(n);
                     frame.insert(n.clone(), v);
                 }
             }
@@ -522,6 +593,7 @@ impl Interpreter {
                 match &p.default {
                     Some(d) => {
                         let v = self.eval(d, &mut frame.clone(), &fctx)?;
+                        self.note_rebind(&p.name);
                         frame.insert(p.name.clone(), v);
                     }
                     None => {

@@ -115,10 +115,17 @@ pub fn execute_parfor(
         }
     }
     for (name, m) in merged {
+        // Merged results are fresh bindings: stamp a new lineage version
+        // and drop any block partitions cached against the old value.
+        let version = interp.note_rebind(&name);
+        if let Some(cl) = &interp.cluster {
+            cl.cache().adopt(&name, version, &m);
+        }
         scope.insert(name, Value::Matrix(m));
     }
     // Loop variable's final value is visible after the loop (DML for-loop
     // semantics).
+    interp.note_rebind(var);
     scope.insert(var.to_string(), Value::Double(*iters.last().unwrap()));
     Ok(())
 }

@@ -19,6 +19,16 @@ pub struct Metrics {
     pub broadcast_bytes: AtomicU64,
     /// Distributed tasks launched.
     pub dist_tasks: AtomicU64,
+    /// Local-matrix -> blocked-partition conversions (SystemML blockify).
+    pub blockify_ops: AtomicU64,
+    /// Blocked -> driver-local collects (SystemML collect-to-driver).
+    pub dist_collects: AtomicU64,
+    /// Block-partition cache hits (resident blocked matrix reused).
+    pub cache_hits: AtomicU64,
+    /// Block-partition cache misses (blockify performed).
+    pub cache_misses: AtomicU64,
+    /// Block-partition cache evictions (LRU under the storage budget).
+    pub cache_evictions: AtomicU64,
     /// parfor tasks launched.
     pub parfor_tasks: AtomicU64,
     /// Host->device bytes copied by the accelerator backend.
@@ -42,6 +52,11 @@ static GLOBAL: Metrics = Metrics {
     shuffle_bytes: AtomicU64::new(0),
     broadcast_bytes: AtomicU64::new(0),
     dist_tasks: AtomicU64::new(0),
+    blockify_ops: AtomicU64::new(0),
+    dist_collects: AtomicU64::new(0),
+    cache_hits: AtomicU64::new(0),
+    cache_misses: AtomicU64::new(0),
+    cache_evictions: AtomicU64::new(0),
     parfor_tasks: AtomicU64::new(0),
     h2d_bytes: AtomicU64::new(0),
     d2h_bytes: AtomicU64::new(0),
@@ -78,6 +93,11 @@ impl Metrics {
             shuffle_bytes: self.shuffle_bytes.load(Ordering::Relaxed),
             broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
             dist_tasks: self.dist_tasks.load(Ordering::Relaxed),
+            blockify_ops: self.blockify_ops.load(Ordering::Relaxed),
+            dist_collects: self.dist_collects.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             parfor_tasks: self.parfor_tasks.load(Ordering::Relaxed),
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
@@ -95,6 +115,11 @@ impl Metrics {
         self.shuffle_bytes.store(0, Ordering::Relaxed);
         self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.dist_tasks.store(0, Ordering::Relaxed);
+        self.blockify_ops.store(0, Ordering::Relaxed);
+        self.dist_collects.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
+        self.cache_evictions.store(0, Ordering::Relaxed);
         self.parfor_tasks.store(0, Ordering::Relaxed);
         self.h2d_bytes.store(0, Ordering::Relaxed);
         self.d2h_bytes.store(0, Ordering::Relaxed);
@@ -113,6 +138,11 @@ pub struct MetricsSnapshot {
     pub shuffle_bytes: u64,
     pub broadcast_bytes: u64,
     pub dist_tasks: u64,
+    pub blockify_ops: u64,
+    pub dist_collects: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
     pub parfor_tasks: u64,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
@@ -131,6 +161,11 @@ impl MetricsSnapshot {
             shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,
             broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
             dist_tasks: self.dist_tasks - earlier.dist_tasks,
+            blockify_ops: self.blockify_ops - earlier.blockify_ops,
+            dist_collects: self.dist_collects - earlier.dist_collects,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
             parfor_tasks: self.parfor_tasks - earlier.parfor_tasks,
             h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
             d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,

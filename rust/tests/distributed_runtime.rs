@@ -154,3 +154,214 @@ fn modeled_scaling_is_linearish_for_balanced_work() {
         );
     }
 }
+
+// ---- block-partition cache (lineage-keyed reuse across statements) ----
+
+use std::sync::Arc;
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::interp::{Interpreter, Scope};
+
+/// Compile a script (placements + cache marking) and run it on a fresh
+/// interpreter whose cluster we can inspect afterwards.
+fn run_inspectable(
+    script: &Script,
+    config: &SystemConfig,
+) -> (Interpreter, Scope, systemml::hop::plan::Plan) {
+    let ctx = MLContext::with_config(config.clone());
+    let comp = ctx.compile(script).expect("compile");
+    let plan = comp.plan.clone();
+    let mut interp = Interpreter::new(comp.bundle, config.clone());
+    interp.plan = Some(Arc::new(comp.plan));
+    let inputs: Scope = script.inputs.clone().into_iter().collect();
+    let out = interp.run(inputs).expect("run");
+    (interp, out, plan)
+}
+
+fn dist_config(budget: usize, block: usize) -> SystemConfig {
+    let mut c = SystemConfig::tiny_driver(budget);
+    c.block_size = block;
+    c.num_workers = 4;
+    c
+}
+
+fn square_input(n: usize, seed: u64) -> systemml::runtime::matrix::Matrix {
+    rand(n, n, -1.0, 1.0, 1.0, Pdf::Uniform, seed).unwrap()
+}
+
+#[test]
+fn cache_hit_after_repeated_use() {
+    // X is blockified once; the second statement's operands and the
+    // aggregate arguments all reuse resident partitions.
+    let config = dist_config(32 * 1024, 32);
+    let x = square_input(96, 40);
+    let script = Script::from_str("s1 = sum(X %*% X)\ns2 = sum(X %*% X)")
+        .input("X", x.clone())
+        .output("s1")
+        .output("s2");
+    let (interp, out, _) = run_inspectable(&script, &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    assert_eq!(cluster.blockify_count(), 1, "X must blockify exactly once");
+    let stats = cluster.cache().stats();
+    assert!(stats.hits >= 3, "rhs reuse + pending reuse + statement reuse: {stats:?}");
+    let expected = agg::full_agg(&mult::matmult(&x, &x).unwrap(), AggOp::Sum);
+    let s1 = out.get("s1").unwrap().as_double().unwrap();
+    let s2 = out.get("s2").unwrap().as_double().unwrap();
+    assert!((s1 - expected).abs() < 1e-6 * expected.abs().max(1.0), "{s1} vs {expected}");
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn cache_invalidated_after_assignment() {
+    // Rebinding X drops its resident partitions; the next DIST op must
+    // see the new content (and the stats record the invalidation).
+    let config = dist_config(32 * 1024, 32);
+    let x = square_input(96, 41);
+    let script = Script::from_str("s1 = sum(X %*% X)\nX = X + 1\ns2 = sum(X %*% X)")
+        .input("X", x.clone())
+        .output("s1")
+        .output("s2");
+    let (interp, out, _) = run_inspectable(&script, &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    let stats = cluster.cache().stats();
+    assert!(stats.invalidations >= 1, "rebinding X must invalidate: {stats:?}");
+    assert_eq!(cluster.blockify_count(), 2, "old and new X each blockify once");
+    let x1 = elementwise::scalar_op(&x, 1.0, BinOp::Add, false).unwrap();
+    let e1 = agg::full_agg(&mult::matmult(&x, &x).unwrap(), AggOp::Sum);
+    let e2 = agg::full_agg(&mult::matmult(&x1, &x1).unwrap(), AggOp::Sum);
+    let s1 = out.get("s1").unwrap().as_double().unwrap();
+    let s2 = out.get("s2").unwrap().as_double().unwrap();
+    assert!((s1 - e1).abs() < 1e-6 * e1.abs().max(1.0));
+    assert!((s2 - e2).abs() < 1e-6 * e2.abs().max(1.0));
+}
+
+#[test]
+fn cache_evicts_under_tiny_storage_budget() {
+    // A storage budget that fits one 96x96 blocked matrix but not two
+    // forces LRU eviction between the A- and B-statements; results stay
+    // correct because eviction only costs a re-blockify.
+    let mut config = dist_config(32 * 1024, 32);
+    let one_matrix = 96 * 96 * 8;
+    config.worker_storage = (one_matrix + one_matrix / 2) / config.num_workers;
+    let a = square_input(96, 42);
+    let b = square_input(96, 43);
+    let script = Script::from_str("sa = sum(A %*% A)\nsb = sum(B %*% B)\nsa2 = sum(A %*% A)")
+        .input("A", a.clone())
+        .input("B", b)
+        .output("sa")
+        .output("sa2");
+    let (interp, out, _) = run_inspectable(&script, &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    let stats = cluster.cache().stats();
+    assert!(stats.evictions >= 1, "budget must force eviction: {stats:?}");
+    assert!(
+        stats.resident_bytes <= cluster.cache().budget(),
+        "resident bytes within budget: {stats:?}"
+    );
+    let sa = out.get("sa").unwrap().as_double().unwrap();
+    let sa2 = out.get("sa2").unwrap().as_double().unwrap();
+    assert_eq!(sa, sa2, "eviction must not change results");
+}
+
+#[test]
+fn cached_and_uncached_results_agree() {
+    // Parity: the cache is purely a data-movement optimization — an
+    // iterative loop computes identical numbers with it on or off.
+    let src = "out = 0\n\
+               for (i in 1:4) {\n\
+                 s = sum(X %*% X)\n\
+                 out = out + s / i\n\
+                 X = X + 0.5\n\
+               }";
+    let x = square_input(96, 44);
+    let mut on = dist_config(32 * 1024, 32);
+    on.cache_enabled = true;
+    let mut off = dist_config(32 * 1024, 32);
+    off.cache_enabled = false;
+    let mk = || {
+        Script::from_str(src).input("X", x.clone()).output("out")
+    };
+    let r_on = MLContext::with_config(on).execute(mk()).unwrap();
+    let r_off = MLContext::with_config(off).execute(mk()).unwrap();
+    let v_on = r_on.double("out").unwrap();
+    let v_off = r_off.double("out").unwrap();
+    assert!(
+        (v_on - v_off).abs() <= 1e-12 * v_off.abs().max(1.0),
+        "cache on/off parity: {v_on} vs {v_off}"
+    );
+}
+
+#[test]
+fn blockify_empty_matrix_returns_empty_handle() {
+    // Regression: a 0-row matrix legally flows out of indexing — it must
+    // blockify to an empty handle, not error.
+    let empty = systemml::runtime::matrix::Matrix::zeros(0, 5);
+    let h = BlockedMatrix::from_local(&empty, 8).expect("empty blockify");
+    assert_eq!(h.shape(), (0, 5));
+    assert_eq!(h.block_rows(), 0);
+    assert_eq!(h.nnz(), 0);
+    let back = h.to_local().expect("empty collect");
+    assert_eq!(back.shape(), (0, 5));
+
+    // Degenerate inner dimension: (3x0) %*% (0x2) is an all-zero 3x2.
+    let cluster = Cluster::new(2, 8);
+    let a = systemml::runtime::matrix::Matrix::zeros(3, 0);
+    let b = systemml::runtime::matrix::Matrix::zeros(0, 2);
+    let out = ops::matmult(&cluster, &a, &b).expect("empty-k matmult");
+    assert_eq!(out.shape(), (3, 2));
+    assert_eq!(out.nnz(), 0);
+}
+
+/// Acceptance: an lm_cg-style loop over a DIST-sized matrix blockifies
+/// its loop-invariant operand exactly once across all iterations, with
+/// the reuse visible as CACHE(hit) EXPLAIN lines and the planner marking
+/// X as a Cached operand.
+#[test]
+fn iterative_loop_blockifies_invariant_operand_once() {
+    const ITERS: u64 = 8;
+    let src = "w = matrix(0, rows=ncol(X), cols=1)\n\
+               r = t(X) %*% y\n\
+               p = r\n\
+               norm_r2 = sum(r^2)\n\
+               i = 0\n\
+               while (i < max_iter) {\n\
+                 i = i + 1\n\
+                 q = t(X) %*% (X %*% p) + 0.001 * p\n\
+                 alpha = norm_r2 / as.scalar(t(p) %*% q)\n\
+                 w = w + alpha * p\n\
+                 r = r - alpha * q\n\
+                 old_norm = norm_r2\n\
+                 norm_r2 = sum(r^2)\n\
+                 p = r + (norm_r2 / old_norm) * p\n\
+               }";
+    let mut config = dist_config(64 * 1024, 48);
+    config.explain = true;
+    let x = rand(160, 120, -1.0, 1.0, 1.0, Pdf::Uniform, 45).unwrap();
+    let y = rand(160, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 46).unwrap();
+    let script = Script::from_str(src)
+        .input("X", x)
+        .input("y", y)
+        .input_scalar("max_iter", ITERS as f64)
+        .output("w");
+    let (interp, _, plan) = run_inspectable(&script, &config);
+    assert!(plan.is_cached("X"), "planner must mark X Cached: {:?}", plan.cached_vars);
+    assert!(plan.render().contains("CACHE"), "{}", plan.render());
+
+    let cluster = interp.cluster.as_ref().unwrap();
+    // Exact blockify budget: warmup partitions t(X) and y (2); the first
+    // iteration partitions X and p (2); every later iteration partitions
+    // only the freshly rebound direction vector p. X and t(X) blockify
+    // once for the whole loop.
+    assert_eq!(
+        cluster.blockify_count(),
+        ITERS + 3,
+        "loop-invariant operand must blockify once (stats: {:?})",
+        cluster.cache().stats()
+    );
+    let stats = cluster.cache().stats();
+    assert!(stats.hits >= 2 * ITERS, "X/t(X)/pending reuse every iteration: {stats:?}");
+    let explain = interp.output().join("\n");
+    assert!(explain.contains("CACHE(hit)"), "EXPLAIN must show cache hits:\n{explain}");
+    assert!(explain.contains("CACHE(miss)"), "first use is an observable miss:\n{explain}");
+}
