@@ -10,10 +10,18 @@
 //! whole loop; per-iteration repartitions are only the freshly rebound
 //! small operands.
 //!
-//! Emits `BENCH_dist.json` (blockify counts, shuffle/broadcast bytes,
-//! cache hit rates, wall time) and exits non-zero when
+//! With first-class blocked values (`Value::Blocked`) the loop's updates
+//! additionally stay distributed end-to-end: lm_cg performs **zero**
+//! driver collects per iteration — scalars come back as per-block
+//! aggregate partials or single-block job outputs, never as a collect of
+//! a blocked matrix.
+//!
+//! Emits `BENCH_dist.json` (blockify/collect counts, shuffle/broadcast
+//! bytes, cache hit rates, wall time) and exits non-zero when
 //! - lm_cg's marginal blockify-per-iteration exceeds 1 (the invariant
 //!   operand is being re-partitioned — a cache regression), or
+//! - lm_cg's marginal collects-per-iteration exceeds 0 (a blocked value
+//!   is being materialized inside the loop — a laziness regression), or
 //! - caching stops reducing blockify volume vs. a cache-off run, or
 //! - cached and uncached runs disagree numerically.
 //!
@@ -70,6 +78,7 @@ wcss = sum(rowMins(D2))
 struct RunStats {
     result: f64,
     blockify: u64,
+    collects: u64,
     cache_hits: u64,
     cache_misses: u64,
     shuffle_bytes: u64,
@@ -107,6 +116,7 @@ fn run(src: &str, iters: usize, cache: bool, output: &str) -> RunStats {
     RunStats {
         result: res.double(output).unwrap(),
         blockify: d.blockify_ops,
+        collects: d.dist_collects,
         cache_hits: d.cache_hits,
         cache_misses: d.cache_misses,
         shuffle_bytes: d.shuffle_bytes,
@@ -120,6 +130,7 @@ struct Bench {
     iters: usize,
     per_iter_cached: f64,
     per_iter_uncached: f64,
+    collects_per_iter: f64,
     long_cached: RunStats,
 }
 
@@ -127,6 +138,11 @@ struct Bench {
 /// warmup repartitions (outside the loop) cancel exactly.
 fn marginal(short: &RunStats, long: &RunStats, di: usize) -> f64 {
     (long.blockify - short.blockify) as f64 / di as f64
+}
+
+/// Marginal driver collects per iteration (same two-run cancellation).
+fn marginal_collects(short: &RunStats, long: &RunStats, di: usize) -> f64 {
+    (long.collects - short.collects) as f64 / di as f64
 }
 
 fn bench(name: &'static str, src: &str, short_iters: usize, long_iters: usize, output: &str) -> Bench {
@@ -147,6 +163,7 @@ fn bench(name: &'static str, src: &str, short_iters: usize, long_iters: usize, o
         iters: long_iters,
         per_iter_cached: marginal(&sc, &lc, di),
         per_iter_uncached: marginal(&su, &lu, di),
+        collects_per_iter: marginal_collects(&sc, &lc, di),
         long_cached: lc,
     }
 }
@@ -159,7 +176,9 @@ fn json_entry(b: &Bench) -> String {
             "    \"iterations\": {},\n",
             "    \"blockify_per_iter\": {:.4},\n",
             "    \"blockify_per_iter_uncached\": {:.4},\n",
+            "    \"collects_per_iter\": {:.4},\n",
             "    \"blockify_total\": {},\n",
+            "    \"collects_total\": {},\n",
             "    \"cache_hits\": {},\n",
             "    \"cache_misses\": {},\n",
             "    \"shuffle_bytes\": {},\n",
@@ -172,7 +191,9 @@ fn json_entry(b: &Bench) -> String {
         b.iters,
         b.per_iter_cached,
         b.per_iter_uncached,
+        b.collects_per_iter,
         s.blockify,
+        s.collects,
         s.cache_hits,
         s.cache_misses,
         s.shuffle_bytes,
@@ -189,10 +210,11 @@ fn main() {
 
     for b in [&lm, &km] {
         println!(
-            "{:8} blockify/iter: {:.2} cached vs {:.2} uncached | hits {} | shuffle {} B | {:.1} ms",
+            "{:8} blockify/iter: {:.2} cached vs {:.2} uncached | collects/iter: {:.2} | hits {} | shuffle {} B | {:.1} ms",
             b.name,
             b.per_iter_cached,
             b.per_iter_uncached,
+            b.collects_per_iter,
             b.long_cached.cache_hits,
             b.long_cached.shuffle_bytes,
             b.long_cached.wall_ms
@@ -212,6 +234,15 @@ fn main() {
         );
         pass = false;
     }
+    // Blocked-value gate: the loop's updates must stay distributed —
+    // zero driver collects per iteration (the tentpole acceptance).
+    if lm.collects_per_iter > 1e-9 {
+        eprintln!(
+            "FAIL: lm_cg collects-per-iteration {} > 0 — blocked values are being materialized inside the loop",
+            lm.collects_per_iter
+        );
+        pass = false;
+    }
     for b in [&lm, &km] {
         if b.per_iter_cached >= b.per_iter_uncached {
             eprintln!(
@@ -223,7 +254,7 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"pass\": {} }}\n}}\n",
+        "{{\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
         json_entry(&lm),
         json_entry(&km),
         pass
@@ -243,5 +274,7 @@ fn main() {
     if !pass {
         std::process::exit(1);
     }
-    println!("bench gate OK: loop-invariant operands blockify once per loop");
+    println!(
+        "bench gate OK: loop-invariant operands blockify once per loop, zero collects per iteration"
+    );
 }

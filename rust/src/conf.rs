@@ -23,6 +23,13 @@ pub struct SystemConfig {
     /// reuse, like Spark RDD caching). When false every DIST operator
     /// re-blockifies its inputs from the driver copy.
     pub cache_enabled: bool,
+    /// Bind DIST operator outputs as first-class blocked values
+    /// (`Value::Blocked`): results stay distributed across statements,
+    /// function calls and parfor bodies, and are only collected to the
+    /// driver when a CP operator, scalar cast, print or I/O actually
+    /// needs dense data. When false every DIST result is collected
+    /// eagerly after the operator (the pre-blocked-value behavior).
+    pub blocked_values: bool,
     /// Block size (rows/cols) for blocked distributed matrices.
     pub block_size: usize,
     /// Enable the distributed backend (if false, everything runs CP and
@@ -49,6 +56,7 @@ impl Default for SystemConfig {
             worker_memory: 512 * 1024 * 1024,
             worker_storage: 256 * 1024 * 1024,
             cache_enabled: true,
+            blocked_values: true,
             block_size: 1024,
             dist_enabled: true,
             accel_enabled: false,

@@ -44,15 +44,47 @@ pub fn matmult_output_sparsity(sa: f64, sb: f64, k: usize) -> f64 {
 }
 
 /// Total memory estimate for running `a %*% b` in CP: both inputs plus the
-/// (worst-case) output must fit.
-pub fn matmult_mem_estimate(a: &Matrix, b: &Matrix) -> usize {
-    let out_sp = matmult_output_sparsity(a.sparsity(), b.sparsity(), a.cols());
-    a.size_in_bytes() + b.size_in_bytes() + estimate_size(a.rows(), b.cols(), out_sp)
+/// (worst-case) output must fit. The parts form is shared by the runtime
+/// dispatch, whose operands may be blocked handles rather than driver
+/// matrices — keeping planner and runtime on one estimator.
+#[allow(clippy::too_many_arguments)]
+pub fn matmult_mem_parts(
+    a_bytes: usize,
+    a_rows: usize,
+    a_cols: usize,
+    a_sparsity: f64,
+    b_bytes: usize,
+    b_cols: usize,
+    b_sparsity: f64,
+) -> usize {
+    let out_sp = matmult_output_sparsity(a_sparsity, b_sparsity, a_cols);
+    a_bytes
+        .saturating_add(b_bytes)
+        .saturating_add(estimate_size(a_rows, b_cols, out_sp))
 }
 
-/// Memory estimate for an elementwise binary op.
+/// [`matmult_mem_parts`] over driver matrices.
+pub fn matmult_mem_estimate(a: &Matrix, b: &Matrix) -> usize {
+    matmult_mem_parts(
+        a.size_in_bytes(),
+        a.rows(),
+        a.cols(),
+        a.sparsity(),
+        b.size_in_bytes(),
+        b.cols(),
+        b.sparsity(),
+    )
+}
+
+/// Memory estimate for an elementwise binary op (parts form shared with
+/// the runtime dispatch).
+pub fn binary_mem_parts(a_bytes: usize, b_bytes: usize, rows: usize, cols: usize) -> usize {
+    a_bytes.saturating_add(b_bytes).saturating_add(estimate_size(rows, cols, 1.0))
+}
+
+/// [`binary_mem_parts`] over driver matrices.
 pub fn binary_mem_estimate(a: &Matrix, b: &Matrix) -> usize {
-    a.size_in_bytes() + b.size_in_bytes() + estimate_size(a.rows(), a.cols(), 1.0)
+    binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), a.rows(), a.cols())
 }
 
 /// Memory estimate for conv2d forward in CP, including the im2col

@@ -51,6 +51,8 @@ pub enum OpKind {
     MatMult,
     CellBinary,
     Agg,
+    /// Reorganization operators (today: transpose).
+    Reorg,
 }
 
 impl fmt::Display for OpKind {
@@ -59,6 +61,7 @@ impl fmt::Display for OpKind {
             OpKind::MatMult => write!(f, "%*%"),
             OpKind::CellBinary => write!(f, "cellwise"),
             OpKind::Agg => write!(f, "agg"),
+            OpKind::Reorg => write!(f, "reorg"),
         }
     }
 }
@@ -217,10 +220,36 @@ pub fn choose_exec(est: usize, config: &SystemConfig, accel_capable: bool) -> Ex
     ExecType::CP
 }
 
-/// Compile the plan for a bundle's main body. Rewrites matmult chains in
-/// place (the interpreter executes the rewritten AST) and returns the
-/// annotated plan. `inputs` seeds the symbol table with the shapes of
-/// bound script inputs.
+/// Shared planning context across the main body and (call-site
+/// specialized) user-function bodies.
+struct PlanCtx<'a> {
+    config: &'a SystemConfig,
+    /// Main-file user functions, plannable by call site. Namespaced
+    /// (sourced) functions are excluded: their source positions can
+    /// collide with the main file's, and placements are keyed by
+    /// position.
+    funcs: HashMap<String, FunctionDef>,
+    /// (function, argument-shape signature) pairs already planned.
+    planned_sigs: HashSet<String>,
+    /// Call-stack guard (recursive functions are planned once per cycle).
+    fn_stack: Vec<String>,
+    /// Placement keys that received conflicting ExecTypes (e.g. the same
+    /// function line planned from call sites with different shapes):
+    /// dropped, so the runtime estimate decides.
+    conflicted: HashSet<(usize, usize, OpKind)>,
+    /// Variables whose current binding is modeled as a first-class
+    /// blocked value (a multi-block DIST output). Reads of these carry
+    /// zero blockify cost and force their consumers DIST, mirroring the
+    /// runtime's blocked-operand rule.
+    blocked_vars: HashSet<String>,
+}
+
+/// Compile the plan for a bundle's main body and, per call site, the
+/// bodies of main-file user functions (with parameter shapes bound from
+/// the call arguments). Rewrites matmult chains in place (the
+/// interpreter executes the rewritten AST) and returns the annotated
+/// plan. `inputs` seeds the symbol table with the shapes of bound
+/// script inputs.
 pub fn compile_plan(
     bundle: &mut Bundle,
     inputs: &HashMap<String, ShapeInfo>,
@@ -237,9 +266,22 @@ pub fn compile_plan(
         block_size: config.block_size,
         accel_enabled: config.accel_enabled,
     };
+    let mut ctx = PlanCtx {
+        config,
+        funcs: bundle
+            .main
+            .functions
+            .iter()
+            .map(|f| (f.name.clone(), f.clone()))
+            .collect(),
+        planned_sigs: HashSet::new(),
+        fn_stack: Vec::new(),
+        conflicted: HashSet::new(),
+        blocked_vars: HashSet::new(),
+    };
     let mut symbols = inputs.clone();
     let mut body = std::mem::take(&mut bundle.main.body);
-    plan_block(&mut body, &mut symbols, config, &mut plan, true, 0);
+    plan_block(&mut body, &mut symbols, &mut ctx, &mut plan, true, 0, None);
     bundle.main.body = body;
     // A DIST operand read at more than one statement — or repeatedly
     // inside a loop body — benefits from staying resident: mark it
@@ -257,76 +299,115 @@ pub fn compile_plan(
 
 /// Plan a statement block, updating `symbols` as assignments execute.
 /// When `record` is false this is a shape-propagation dry run (loop
-/// fixpoint pass) and nothing is added to the plan.
+/// fixpoint pass) and nothing is added to the plan. `fn_label` names the
+/// user function this block belongs to (None for the main body).
+#[allow(clippy::too_many_arguments)]
 fn plan_block(
     stmts: &mut [Stmt],
     symbols: &mut HashMap<String, ShapeInfo>,
-    config: &SystemConfig,
+    ctx: &mut PlanCtx,
     plan: &mut Plan,
     record: bool,
     loop_depth: usize,
+    fn_label: Option<&str>,
 ) {
     for stmt in stmts.iter_mut() {
         match stmt {
             Stmt::Assign { target, value, pos } => {
                 let (expr, note) = reorder_matmult_chains(value, symbols);
                 *value = expr;
+                if record {
+                    plan_user_calls(value, symbols, ctx, plan, loop_depth);
+                }
                 let dag = DagBuilder::new(symbols).build(value);
                 let shape = dag.shape_of(dag.root);
-                let name = match target {
+                let (name, bound_var) = match target {
                     AssignTarget::Var(n) => {
                         symbols.insert(n.clone(), shape);
-                        n.clone()
+                        (n.clone(), Some(n.clone()))
                     }
                     AssignTarget::Indexed { name, .. } => {
-                        // Left-indexing preserves the target's shape.
-                        format!("{name}[...]")
+                        // Left-indexing mutates driver cells: the result
+                        // is driver-resident whatever fed it.
+                        ctx.blocked_vars.remove(name);
+                        (format!("{name}[...]"), None)
                     }
                 };
-                if record {
-                    record_stmt(plan, *pos, name, dag, note, config, loop_depth);
+                let root_blocked =
+                    record_stmt(plan, ctx, *pos, name, dag, note, loop_depth, record, fn_label);
+                if let Some(n) = bound_var {
+                    if root_blocked {
+                        ctx.blocked_vars.insert(n);
+                    } else {
+                        ctx.blocked_vars.remove(&n);
+                    }
                 }
             }
             Stmt::MultiAssign { targets, value, pos } => {
+                if record {
+                    plan_user_calls(value, symbols, ctx, plan, loop_depth);
+                }
                 let dag = DagBuilder::new(symbols).build(value);
                 for t in targets.iter() {
                     symbols.insert(t.clone(), ShapeInfo::unknown());
+                    // Function results have unknown residency.
+                    ctx.blocked_vars.remove(t);
                 }
-                if record {
-                    record_stmt(
-                        plan,
-                        *pos,
-                        format!("[{}]", targets.join(",")),
-                        dag,
-                        None,
-                        config,
-                        loop_depth,
-                    );
-                }
+                record_stmt(
+                    plan,
+                    ctx,
+                    *pos,
+                    format!("[{}]", targets.join(",")),
+                    dag,
+                    None,
+                    loop_depth,
+                    record,
+                    fn_label,
+                );
             }
             Stmt::ExprStmt { expr, pos } => {
                 let (e, note) = reorder_matmult_chains(expr, symbols);
                 *expr = e;
-                let dag = DagBuilder::new(symbols).build(expr);
                 if record {
-                    record_stmt(plan, *pos, "(expr)".to_string(), dag, note, config, loop_depth);
+                    plan_user_calls(expr, symbols, ctx, plan, loop_depth);
                 }
+                let dag = DagBuilder::new(symbols).build(expr);
+                record_stmt(
+                    plan,
+                    ctx,
+                    *pos,
+                    "(expr)".to_string(),
+                    dag,
+                    note,
+                    loop_depth,
+                    record,
+                    fn_label,
+                );
             }
             Stmt::If { then_branch, else_branch, .. } => {
                 // Plan both branches from the same entry state; variables
-                // whose shapes disagree afterwards become unknown.
+                // whose shapes disagree afterwards become unknown, and a
+                // variable is only modeled blocked after the If when
+                // *both* branches leave it blocked (intersection — the
+                // residency analogue of merge_symbols).
+                let entry_blocked = ctx.blocked_vars.clone();
                 let mut then_syms = symbols.clone();
-                plan_block(then_branch, &mut then_syms, config, plan, record, loop_depth);
+                plan_block(then_branch, &mut then_syms, ctx, plan, record, loop_depth, fn_label);
+                let then_blocked =
+                    std::mem::replace(&mut ctx.blocked_vars, entry_blocked);
                 let mut else_syms = symbols.clone();
-                plan_block(else_branch, &mut else_syms, config, plan, record, loop_depth);
+                plan_block(else_branch, &mut else_syms, ctx, plan, record, loop_depth, fn_label);
+                let merged: HashSet<String> =
+                    ctx.blocked_vars.intersection(&then_blocked).cloned().collect();
+                ctx.blocked_vars = merged;
                 merge_symbols(symbols, &then_syms, &else_syms);
             }
             Stmt::For { var, body, .. } | Stmt::ParFor { var, body, .. } => {
                 symbols.insert(var.clone(), ShapeInfo::scalar_value());
-                plan_loop_body(body, symbols, config, plan, record, loop_depth + 1);
+                plan_loop_body(body, symbols, ctx, plan, record, loop_depth + 1, fn_label);
             }
             Stmt::While { body, .. } => {
-                plan_loop_body(body, symbols, config, plan, record, loop_depth + 1);
+                plan_loop_body(body, symbols, ctx, plan, record, loop_depth + 1, fn_label);
             }
         }
     }
@@ -335,16 +416,18 @@ fn plan_block(
 /// Loop bodies: a dry pass discovers loop-carried variables whose shapes
 /// change across iterations (those become unknown), then the real pass
 /// plans against the stabilized shapes.
+#[allow(clippy::too_many_arguments)]
 fn plan_loop_body(
     body: &mut [Stmt],
     symbols: &mut HashMap<String, ShapeInfo>,
-    config: &SystemConfig,
+    ctx: &mut PlanCtx,
     plan: &mut Plan,
     record: bool,
     loop_depth: usize,
+    fn_label: Option<&str>,
 ) {
     let mut probe = symbols.clone();
-    plan_block(body, &mut probe, config, plan, false, loop_depth);
+    plan_block(body, &mut probe, ctx, plan, false, loop_depth, fn_label);
     for (name, shape) in probe.iter() {
         match symbols.get(name) {
             Some(prev) if prev == shape => {}
@@ -361,13 +444,102 @@ fn plan_loop_body(
     // Second probe from the merged state catches shapes that keep
     // changing (e.g. X = cbind(X, v)).
     let mut probe2 = symbols.clone();
-    plan_block(body, &mut probe2, config, plan, false, loop_depth);
+    plan_block(body, &mut probe2, ctx, plan, false, loop_depth, fn_label);
     for (name, shape) in probe2.iter() {
         if symbols.get(name).is_some_and(|prev| prev != shape) {
             symbols.insert(name.clone(), ShapeInfo::unknown());
         }
     }
-    plan_block(body, symbols, config, plan, record, loop_depth);
+    plan_block(body, symbols, ctx, plan, record, loop_depth, fn_label);
+}
+
+/// Plan the bodies of main-file user functions called in `expr`, with
+/// parameter shapes (and blocked-ness) bound from the call-site
+/// arguments. Each (function, shape-signature) pair is planned once;
+/// placements that disagree across call sites are dropped as conflicted
+/// so the runtime estimate decides there.
+fn plan_user_calls(
+    expr: &Expr,
+    symbols: &HashMap<String, ShapeInfo>,
+    ctx: &mut PlanCtx,
+    plan: &mut Plan,
+    loop_depth: usize,
+) {
+    match expr {
+        Expr::Call { namespace: None, name, args, .. } => {
+            for a in args {
+                plan_user_calls(&a.value, symbols, ctx, plan, loop_depth);
+            }
+            let Some(f) = ctx.funcs.get(name).cloned() else { return };
+            if ctx.fn_stack.iter().any(|n| n == name) || ctx.planned_sigs.len() > 64 {
+                return;
+            }
+            // Bind parameter shapes positionally / by name, like the
+            // interpreter's argument binding.
+            let mut fsyms: HashMap<String, ShapeInfo> = HashMap::new();
+            let mut fblocked: HashSet<String> = HashSet::new();
+            let mut positional = 0usize;
+            for a in args {
+                let pname = match &a.name {
+                    None => {
+                        let p = f.params.get(positional).map(|p| p.name.clone());
+                        positional += 1;
+                        p
+                    }
+                    Some(n) => Some(n.clone()),
+                };
+                let Some(pname) = pname else { continue };
+                let shape = DagBuilder::infer_shape(symbols, &a.value);
+                fsyms.insert(pname.clone(), shape);
+                if let Expr::Var(v, _) = &a.value {
+                    if ctx.blocked_vars.contains(v) {
+                        fblocked.insert(pname);
+                    }
+                }
+            }
+            for p in &f.params {
+                fsyms.entry(p.name.clone()).or_insert_with(ShapeInfo::unknown);
+            }
+            let sig = format!(
+                "{name}({})",
+                f.params
+                    .iter()
+                    .map(|p| {
+                        let s = fsyms[&p.name];
+                        let b = if fblocked.contains(&p.name) { "B" } else { "" };
+                        format!("{}{b}", s.render())
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            if !ctx.planned_sigs.insert(sig) {
+                return;
+            }
+            ctx.fn_stack.push(name.clone());
+            let outer_blocked = std::mem::replace(&mut ctx.blocked_vars, fblocked);
+            let mut body = f.body.clone();
+            plan_block(&mut body, &mut fsyms, ctx, plan, true, loop_depth, Some(name));
+            ctx.blocked_vars = outer_blocked;
+            ctx.fn_stack.pop();
+        }
+        Expr::Call { args, .. } => {
+            for a in args {
+                plan_user_calls(&a.value, symbols, ctx, plan, loop_depth);
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            plan_user_calls(lhs, symbols, ctx, plan, loop_depth);
+            plan_user_calls(rhs, symbols, ctx, plan, loop_depth);
+        }
+        Expr::Unary { operand, .. } => plan_user_calls(operand, symbols, ctx, plan, loop_depth),
+        Expr::Index { base, .. } => plan_user_calls(base, symbols, ctx, plan, loop_depth),
+        Expr::List(items, _) => {
+            for i in items {
+                plan_user_calls(i, symbols, ctx, plan, loop_depth);
+            }
+        }
+        _ => {}
+    }
 }
 
 /// Keep shapes that agree across both branches; discard the rest.
@@ -392,72 +564,160 @@ fn merge_symbols(
     }
 }
 
-/// Extract the heavy operators of a DAG, place them, and record the
-/// statement plan.
+/// Extract the heavy operators of a DAG, place them, and (when `record`)
+/// add the statement plan. Models first-class blocked values: a read of
+/// a blocked variable carries zero blockify cost and forces its consumer
+/// DIST; multi-block DIST outputs flow blocked through cellwise/unary
+/// operators. Returns whether the statement's root value is modeled as
+/// blocked (so the bound variable joins `PlanCtx::blocked_vars`).
+#[allow(clippy::too_many_arguments)]
 fn record_stmt(
     plan: &mut Plan,
+    ctx: &mut PlanCtx,
     pos: Pos,
     target: String,
     dag: HopDag,
     note: Option<String>,
-    config: &SystemConfig,
     loop_depth: usize,
-) {
+    record: bool,
+    fn_label: Option<&str>,
+) -> bool {
+    let config = ctx.config;
+    let bs = config.block_size.max(1);
     let mut ops = Vec::new();
     // Keys written by this statement, to detect position collisions
     // (reordered matmult chains stamp every rebuilt node with one Pos).
     let mut written: HashMap<(usize, usize, OpKind), usize> = HashMap::new();
+    // Per node: does its value flow as a first-class blocked value?
+    // (Inputs always have smaller ids than their consumers.)
+    let mut blocked = vec![false; dag.nodes.len()];
     for n in &dag.nodes {
+        let in_blocked = n.inputs.iter().any(|i| blocked[*i]);
         let kind = match &n.op {
             HopOp::Binary(AstBinOp::MatMul) | HopOp::MatMul => OpKind::MatMult,
             HopOp::Binary(_) if !n.shape.scalar => OpKind::CellBinary,
             HopOp::Agg { .. } => OpKind::Agg,
+            HopOp::Transpose => OpKind::Reorg,
+            HopOp::Read(name) => {
+                blocked[n.id] = ctx.blocked_vars.contains(name);
+                continue;
+            }
+            // Unary cell ops map over resident blocks at runtime.
+            HopOp::Unary(_) => {
+                blocked[n.id] = in_blocked;
+                continue;
+            }
+            HopOp::Call(name) if is_cellwise_unary_builtin(name) => {
+                blocked[n.id] = in_blocked;
+                continue;
+            }
+            // Literals, indexing and opaque calls produce driver values.
             _ => continue,
         };
         if kind == OpKind::CellBinary {
-            // Cell binaries with a scalar operand run as scalar ops on CP,
-            // and broadcasting pairs (row/col vector operand) also stay CP
-            // in the runtime dispatch — plan neither.
             let any_scalar = n.inputs.iter().any(|i| dag.nodes[*i].shape.scalar);
             let broadcast = n.inputs.iter().any(|i| {
                 let s = dag.nodes[*i].shape;
                 s.known_dims().is_some() && s.known_dims() != n.shape.known_dims()
             });
-            if any_scalar || broadcast {
+            if broadcast {
+                // Broadcasting pairs run CP (forcing blocked operands).
+                continue;
+            }
+            if any_scalar {
+                // Matrix∘scalar follows its matrix operand's residency
+                // (a blocked operand maps cluster-side, no placement).
+                blocked[n.id] = in_blocked && multi_block(n.shape, bs);
                 continue;
             }
         }
         let est = op_mem_estimate(&dag, n.id, kind);
-        let exec = est.map(|e| choose_exec(e, config, kind == OpKind::MatMult));
-        if let (Some(e), Some(x)) = (est, exec) {
-            let key = (n.pos.line, n.pos.col, kind);
-            *written.entry(key).or_insert(0) += 1;
-            plan.placements.insert(key, Placement { exec: x, est: e });
+        // "Operand already blocked" models zero blockify cost: the
+        // operator runs DIST regardless of its memory estimate, because
+        // collecting a resident operand to run CP is strictly worse.
+        // This is the compile-time mirror of the runtime dispatch rule.
+        let exec = if in_blocked && config.dist_enabled {
+            Some(ExecType::Dist)
+        } else {
+            est.map(|e| choose_exec(e, config, kind == OpKind::MatMult))
+        };
+        if exec == Some(ExecType::Dist) && kind != OpKind::Agg {
+            // Multi-block DIST outputs bind as blocked values;
+            // single-block outputs return to the driver with the job.
+            blocked[n.id] = multi_block(n.shape, bs);
         }
-        if exec == Some(ExecType::Dist) {
-            // Track which variables feed this DIST operator (directly or
-            // through a transpose) for the `Cached` operand marking.
-            for name in dist_read_names(&dag, n.id) {
-                plan.dist_read_sites
-                    .entry(name.clone())
-                    .or_default()
-                    .insert((pos.line, pos.col));
-                if loop_depth > 0 {
-                    plan.dist_loop_reads.insert(name);
+        if record {
+            if let (Some(e), Some(x)) = (est, exec) {
+                let key = (n.pos.line, n.pos.col, kind);
+                *written.entry(key).or_insert(0) += 1;
+                if !ctx.conflicted.contains(&key) {
+                    match plan.placements.get(&key) {
+                        Some(p) if p.exec != x => {
+                            // The same source position was planned with a
+                            // different ExecType (another call site of the
+                            // same function body): ambiguous — drop it and
+                            // let the runtime estimate decide.
+                            plan.placements.remove(&key);
+                            ctx.conflicted.insert(key);
+                        }
+                        _ => {
+                            plan.placements.insert(key, Placement { exec: x, est: e });
+                        }
+                    }
                 }
             }
+            if exec == Some(ExecType::Dist) {
+                // Track which variables feed this DIST operator (directly
+                // or through a transpose) for the `Cached` marking.
+                for name in dist_read_names(&dag, n.id) {
+                    plan.dist_read_sites
+                        .entry(name.clone())
+                        .or_default()
+                        .insert((pos.line, pos.col));
+                    if loop_depth > 0 {
+                        plan.dist_loop_reads.insert(name);
+                    }
+                }
+            }
+            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est });
         }
-        ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est });
     }
-    // A key claimed by more than one distinct operator is ambiguous at
-    // runtime (same source position): drop it and let the per-operand
-    // runtime estimate decide.
-    for (key, count) in written {
-        if count > 1 {
-            plan.placements.remove(&key);
+    let root_blocked = blocked[dag.root];
+    if record {
+        // A key claimed by more than one distinct operator is ambiguous
+        // at runtime (same source position): drop it permanently.
+        for (key, count) in written {
+            if count > 1 {
+                plan.placements.remove(&key);
+                ctx.conflicted.insert(key);
+            }
         }
+        let target = match fn_label {
+            Some(f) => format!("fn {f}: {target}"),
+            None => target,
+        };
+        plan.stmts.push(StmtPlan { pos, target, dag, ops, note });
     }
-    plan.stmts.push(StmtPlan { pos, target, dag, ops, note });
+    root_blocked
+}
+
+/// Does a DIST output of this shape span more than one block (and so
+/// bind as a first-class blocked value)? Unknown matrix dims are assumed
+/// multi-block — the conservative direction for placement, and the
+/// runtime's blocked-operand rule corrects any mismatch.
+fn multi_block(shape: ShapeInfo, block_size: usize) -> bool {
+    match shape.known_dims() {
+        Some((r, c)) => r > block_size || c > block_size,
+        None => !shape.scalar,
+    }
+}
+
+/// Shape-preserving cellwise unary builtins (runtime maps them over
+/// resident blocks when the operand is blocked). Shares the name table
+/// with the interpreter's builtin dispatch so the planner's blocked-ness
+/// dataflow can never drift from runtime behavior.
+fn is_cellwise_unary_builtin(name: &str) -> bool {
+    crate::runtime::matrix::elementwise::UnaryOp::from_builtin_name(name).is_some()
 }
 
 /// Variable reads feeding a DAG node, looking through one transpose

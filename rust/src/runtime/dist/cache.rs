@@ -13,11 +13,17 @@
 //!   value still matches the resident blocks (dims, nnz, and a full
 //!   content fingerprint), so a stale entry can never change a result —
 //!   at worst it degrades to a miss. The fingerprint is an O(cells) scan
-//!   of the driver copy per acquisition; it is what makes the globally
-//!   versioned lineage table safe across function frames and parfor
-//!   workers. A hit therefore saves the blockify allocation+copy and the
-//!   re-broadcast, not the scan — making hits O(1) needs frame-local
-//!   lineage (see the ROADMAP follow-up).
+//!   of the driver copy; it is what makes the globally versioned lineage
+//!   table safe across function frames and parfor workers. Since
+//!   first-class blocked values (`Value::Blocked`) bypass the cache
+//!   entirely — the value *is* the handle — this scan is only paid when
+//!   **adopting a driver-resident matrix** into blocked form, not on the
+//!   hot blocked-to-blocked path.
+//! * **Live-value reservations.** Live blocked values charge their
+//!   resident bytes here ([`BlockCache::reserve`]); the eviction sweep
+//!   counts them against the same budget, and the cluster spills the
+//!   oldest live value to the driver when eviction alone cannot make
+//!   room.
 //! * **Memory-budgeted LRU.** Resident bytes are bounded by the
 //!   per-worker storage budget × cluster size; least-recently-used
 //!   unpinned entries are evicted to make room.
@@ -150,7 +156,11 @@ impl CacheOutcome {
 /// One resident entry.
 struct Entry {
     blocked: Arc<BlockedMatrix>,
-    guard: Guard,
+    /// Content guard of the driver copy this entry was built from; None
+    /// for handle-verified derived entries (e.g. the blocked transpose
+    /// of a guard-verified base), which are only served through
+    /// [`BlockCache::get_keyed`] and never through guarded `acquire`.
+    guard: Option<Guard>,
     deps: Vec<String>,
     bytes: usize,
     last_used: u64,
@@ -194,6 +204,10 @@ pub struct BlockCache {
     /// A budget of 0 disables caching entirely (every acquire misses and
     /// nothing is kept resident) — used for cache-off parity runs.
     budget: usize,
+    /// Bytes reserved by live blocked values (`BlockedHandle`s): they
+    /// share the storage budget with resident cache entries, so the
+    /// eviction sweep makes room for them too.
+    reserved: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -212,6 +226,7 @@ impl BlockCache {
         BlockCache {
             inner: Mutex::new(Inner::default()),
             budget,
+            reserved: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -221,6 +236,72 @@ impl BlockCache {
 
     pub fn budget(&self) -> usize {
         self.budget
+    }
+
+    /// Charge `bytes` of a live blocked value against the budget.
+    pub(crate) fn reserve(&self, bytes: usize) {
+        self.reserved.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Release a previous [`BlockCache::reserve`].
+    pub(crate) fn unreserve(&self, bytes: usize) {
+        self.reserved.fetch_sub(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Bytes currently reserved by live blocked values.
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved.load(Ordering::Relaxed) as usize
+    }
+
+    /// Resident cache bytes plus live-value reservations (what the
+    /// storage budget is compared against).
+    pub fn resident_and_reserved_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.total_bytes.saturating_add(self.reserved_bytes())
+    }
+
+    /// Evict unpinned LRU entries until at least `need` bytes are freed
+    /// (or nothing evictable remains); returns the bytes freed. Used by
+    /// the cluster to make room for live blocked values before spilling.
+    pub(crate) fn reclaim(&self, need: usize) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let floor = inner.total_bytes.saturating_sub(need);
+        self.evict_lru_while(&mut inner, |i| i.total_bytes > floor).1
+    }
+
+    /// Shared pin-aware LRU eviction loop: pop the least-recently-used
+    /// entry with no pinned dependency while `over` holds (or until
+    /// nothing evictable remains). Returns (evictions, bytes freed) and
+    /// bumps the eviction counters.
+    fn evict_lru_while(
+        &self,
+        inner: &mut Inner,
+        over: impl Fn(&Inner) -> bool,
+    ) -> (usize, usize) {
+        let mut count = 0usize;
+        let mut freed = 0usize;
+        while over(inner) {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| !e.deps.iter().any(|d| inner.pins.contains_key(d)))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.entries.remove(&k).unwrap();
+                    inner.total_bytes -= e.bytes;
+                    count += 1;
+                    freed += e.bytes;
+                }
+                None => break,
+            }
+        }
+        if count > 0 {
+            self.evictions.fetch_add(count as u64, Ordering::Relaxed);
+            metrics::global().cache_evictions.fetch_add(count as u64, Ordering::Relaxed);
+        }
+        (count, freed)
     }
 
     pub fn enabled(&self) -> bool {
@@ -262,7 +343,7 @@ impl BlockCache {
             inner.clock += 1;
             let clock = inner.clock;
             let key = (h.name.clone(), h.version);
-            let fresh = inner.entries.get(&key).map(|e| e.guard == guard);
+            let fresh = inner.entries.get(&key).map(|e| e.guard == Some(guard));
             match fresh {
                 Some(true) => {
                     let e = inner.entries.get_mut(&key).unwrap();
@@ -290,7 +371,7 @@ impl BlockCache {
                 let blocked = p.blocked.clone();
                 // Promote under the lineage key so later statements hit too.
                 if let Some(h) = hint {
-                    self.insert_locked(&mut inner, h, blocked.clone(), p.guard, true);
+                    self.insert_locked(&mut inner, h, blocked.clone(), Some(p.guard), true);
                 }
                 drop(inner);
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -308,7 +389,8 @@ impl BlockCache {
         let key = match hint {
             Some(h) => {
                 let mut inner = self.inner.lock().unwrap();
-                let (n, b) = self.insert_locked(&mut inner, h, blocked.clone(), guard, false);
+                let (n, b) =
+                    self.insert_locked(&mut inner, h, blocked.clone(), Some(guard), false);
                 evicted = n;
                 evicted_bytes = b;
                 h.render()
@@ -326,19 +408,24 @@ impl BlockCache {
         inner: &mut Inner,
         h: &LineageRef,
         blocked: Arc<BlockedMatrix>,
-        guard: Guard,
+        guard: Option<Guard>,
         dirty: bool,
     ) -> (usize, usize) {
         let bytes = blocked.size_in_bytes();
         // An entry that can never fit must not wipe the resident working
         // set on a doomed eviction sweep — serve it unkeyed instead.
-        if bytes > self.budget {
+        if bytes.saturating_add(self.reserved_bytes()) > self.budget {
             return (0, 0);
         }
         inner.clock += 1;
         let clock = inner.clock;
         let (evicted, evicted_bytes) = self.evict_to_fit(inner, bytes);
-        if inner.total_bytes.saturating_add(bytes) > self.budget {
+        if inner
+            .total_bytes
+            .saturating_add(self.reserved_bytes())
+            .saturating_add(bytes)
+            > self.budget
+        {
             return (evicted, evicted_bytes); // does not fit; serve unkeyed
         }
         inner.total_bytes += bytes;
@@ -365,30 +452,45 @@ impl BlockCache {
     /// Evict least-recently-used unpinned entries until `need` more bytes
     /// fit in the budget (or nothing evictable remains).
     fn evict_to_fit(&self, inner: &mut Inner, need: usize) -> (usize, usize) {
-        let mut count = 0usize;
-        let mut freed = 0usize;
-        while inner.total_bytes.saturating_add(need) > self.budget {
-            let victim = inner
-                .entries
-                .iter()
-                .filter(|(_, e)| !e.deps.iter().any(|d| inner.pins.contains_key(d)))
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    let e = inner.entries.remove(&k).unwrap();
-                    inner.total_bytes -= e.bytes;
-                    count += 1;
-                    freed += e.bytes;
-                }
-                None => break,
-            }
+        self.evict_lru_while(inner, |i| {
+            i.total_bytes
+                .saturating_add(self.reserved_bytes())
+                .saturating_add(need)
+                > self.budget
+        })
+    }
+
+    /// Resident entry under an exact lineage key, *without* a driver
+    /// guard check. Only sound when the caller has just guard-verified
+    /// the base value at the same version (e.g. the blocked transpose
+    /// `t(X)#v` after a guarded hit on `X#v` — any rebind of `X` would
+    /// have both bumped the version and invalidated the derived entry).
+    pub fn get_keyed(&self, h: &LineageRef) -> Option<Arc<BlockedMatrix>> {
+        if !self.enabled() {
+            return None;
         }
-        if count > 0 {
-            self.evictions.fetch_add(count as u64, Ordering::Relaxed);
-            metrics::global().cache_evictions.fetch_add(count as u64, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let e = inner.entries.get_mut(&(h.name.clone(), h.version))?;
+        e.last_used = clock;
+        let blocked = e.blocked.clone();
+        drop(inner);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        metrics::global().cache_hits.fetch_add(1, Ordering::Relaxed);
+        Some(blocked)
+    }
+
+    /// Keep a derived blocked result (e.g. a distributed transpose)
+    /// resident under its lineage key. The entry carries no driver
+    /// guard — it is only served through [`BlockCache::get_keyed`];
+    /// guarded `acquire` treats it as stale and replaces it.
+    pub fn put_keyed(&self, h: &LineageRef, blocked: Arc<BlockedMatrix>) {
+        if !self.enabled() {
+            return;
         }
-        (count, freed)
+        let mut inner = self.inner.lock().unwrap();
+        self.insert_locked(&mut inner, h, blocked, None, true);
     }
 
     /// Keep a DIST operator's blocked output as the pending result so a
@@ -425,7 +527,7 @@ impl BlockCache {
         if inner.pending.as_ref().is_some_and(|p| p.guard == guard) {
             let p = inner.pending.take().unwrap();
             let h = LineageRef::var(name, version);
-            self.insert_locked(&mut inner, &h, p.blocked, p.guard, true);
+            self.insert_locked(&mut inner, &h, p.blocked, Some(p.guard), true);
         }
     }
 

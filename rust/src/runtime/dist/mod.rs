@@ -21,7 +21,7 @@ pub mod cache;
 pub mod ops;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 use crate::runtime::dist::cache::{BlockCache, CacheOutcome, LineageRef};
 use crate::runtime::matrix::dense::DenseMatrix;
@@ -50,6 +50,18 @@ pub struct Cluster {
     tasks: AtomicU64,
     blockify_ops: AtomicU64,
     collects: AtomicU64,
+    spills: AtomicU64,
+    /// Live first-class blocked values ([`BlockedHandle`]s), oldest
+    /// first. Their resident bytes are charged to the storage budget
+    /// through the cache's reserved-bytes accounting; under pressure the
+    /// oldest live value is *spilled* to the driver (materialize + drop
+    /// blocks) instead of erroring. Dead weak refs are pruned lazily.
+    live: Mutex<Vec<(u64, Weak<HandleInner>)>>,
+    live_seq: AtomicU64,
+    /// Storage budget for resident data overall (cache entries + live
+    /// blocked values); may exceed the cache's own budget when partition
+    /// caching is disabled but blocked values are not.
+    live_budget: usize,
     /// Resident block-partition cache (lineage-keyed reuse).
     cache: BlockCache,
 }
@@ -61,9 +73,25 @@ impl Cluster {
         Cluster::with_storage(num_workers, block_size, usize::MAX)
     }
 
-    /// A cluster with an explicit total storage budget (bytes) for the
-    /// resident block-partition cache; 0 disables caching.
+    /// A cluster with an explicit total storage budget (bytes) shared by
+    /// the resident block-partition cache and live blocked values; a
+    /// budget of 0 disables caching and spills every live value.
     pub fn with_storage(num_workers: usize, block_size: usize, storage: usize) -> Cluster {
+        Cluster::with_budgets(num_workers, block_size, storage, storage)
+    }
+
+    /// A cluster with separate budgets for the lineage cache
+    /// (`cache_storage`; 0 disables partition caching) and for live
+    /// blocked values (`live_storage`). The interpreter uses this so
+    /// turning the partition cache off does **not** also collapse the
+    /// blocked-value budget to zero (which would spill every chained
+    /// DIST result straight back to the driver).
+    pub fn with_budgets(
+        num_workers: usize,
+        block_size: usize,
+        cache_storage: usize,
+        live_storage: usize,
+    ) -> Cluster {
         let workers = num_workers.max(1);
         Cluster {
             num_workers: workers,
@@ -74,7 +102,11 @@ impl Cluster {
             tasks: AtomicU64::new(0),
             blockify_ops: AtomicU64::new(0),
             collects: AtomicU64::new(0),
-            cache: BlockCache::new(storage),
+            spills: AtomicU64::new(0),
+            live: Mutex::new(Vec::new()),
+            live_seq: AtomicU64::new(0),
+            live_budget: live_storage,
+            cache: BlockCache::new(cache_storage),
         }
     }
 
@@ -124,6 +156,70 @@ impl Cluster {
         self.collects.load(Ordering::Relaxed)
     }
 
+    /// Live blocked values spilled to the driver under storage pressure.
+    pub fn spill_count(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    /// Total resident bytes held by live blocked values.
+    pub fn live_blocked_bytes(&self) -> usize {
+        self.cache.reserved_bytes()
+    }
+
+    /// Register a live blocked value: charge its bytes to the storage
+    /// budget (shared with the block-partition cache) and relieve
+    /// pressure by first evicting unpinned cache entries, then spilling
+    /// the *oldest other* live value to the driver. Never errors — the
+    /// worst case is that everything older is spilled and the newest
+    /// value alone exceeds the budget, which we tolerate (the data has to
+    /// live somewhere).
+    fn register_live(&self, inner: &Arc<HandleInner>) {
+        self.cache.reserve(inner.bytes);
+        {
+            let mut live = self.live.lock().unwrap();
+            live.retain(|(_, w)| w.strong_count() > 0);
+            live.push((inner.seq, Arc::downgrade(inner)));
+        }
+        self.enforce_storage(inner.seq);
+    }
+
+    /// Spill oldest-first until resident (cache + live) bytes fit the
+    /// budget; `keep_seq` is the just-registered value, never spilled.
+    fn enforce_storage(&self, keep_seq: u64) {
+        let budget = self.live_budget;
+        loop {
+            let over = self
+                .cache
+                .resident_and_reserved_bytes()
+                .saturating_sub(budget);
+            if over == 0 {
+                return;
+            }
+            // 1. Unpinned cache entries go first (re-blockify is cheaper
+            //    than a driver round trip for a live value).
+            if self.cache.reclaim(over) > 0 {
+                continue;
+            }
+            // 2. Spill the oldest live value that is still resident.
+            let victim: Option<Arc<HandleInner>> = {
+                let mut live = self.live.lock().unwrap();
+                live.retain(|(_, w)| w.strong_count() > 0);
+                live.iter()
+                    .filter(|(seq, _)| *seq != keep_seq)
+                    .filter_map(|(_, w)| w.upgrade())
+                    .find(|h| h.is_resident())
+            };
+            match victim {
+                Some(h) => {
+                    if !h.spill(self) {
+                        return; // raced with a concurrent spill/drop
+                    }
+                }
+                None => return, // nothing left to spill
+            }
+        }
+    }
+
     /// Zero all per-cluster accounting (benches call this between runs).
     pub fn reset_accounting(&self) {
         for w in &self.worker_flops {
@@ -134,6 +230,7 @@ impl Cluster {
         self.tasks.store(0, Ordering::Relaxed);
         self.blockify_ops.store(0, Ordering::Relaxed);
         self.collects.store(0, Ordering::Relaxed);
+        self.spills.store(0, Ordering::Relaxed);
     }
 
     /// FLOPs executed per worker since the last reset.
@@ -308,6 +405,218 @@ impl BlockedMatrix {
     }
 }
 
+// ---- first-class blocked values ---------------------------------------
+
+/// Shared state of one first-class blocked value.
+///
+/// The blocked representation lives on the cluster until it is *spilled*
+/// (driver copy materialized, blocks dropped); the driver copy is
+/// memoized the first time any CP consumer forces it. Invariant: at
+/// least one of `blocks` / `forced` is always populated.
+pub struct HandleInner {
+    cluster: Arc<Cluster>,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    /// Resident size of the blocked representation.
+    bytes: usize,
+    block_size: usize,
+    /// Registration order on the cluster (spill is oldest-first).
+    seq: u64,
+    /// The resident blocked representation; `None` after a spill.
+    blocks: Mutex<Option<Arc<BlockedMatrix>>>,
+    /// Memoized driver materialization (the lazy collect).
+    forced: OnceLock<Matrix>,
+    /// Serializes the first force so concurrent parfor readers perform
+    /// exactly one driver collect.
+    force_lock: Mutex<()>,
+}
+
+impl HandleInner {
+    fn is_resident(&self) -> bool {
+        self.blocks.lock().unwrap().is_some()
+    }
+
+    /// Spill to the driver: make sure the dense copy exists, then drop
+    /// the blocked representation and release its storage charge.
+    /// Returns false if the value was already spilled (racing callers).
+    fn spill(&self, cluster: &Cluster) -> bool {
+        if self.forced.get().is_none() {
+            let _g = self.force_lock.lock().unwrap();
+            if self.forced.get().is_none() {
+                let resident = self.blocks.lock().unwrap().clone();
+                let Some(b) = resident else { return false };
+                match cluster.collect(&b) {
+                    Ok(m) => {
+                        let _ = self.forced.set(m);
+                    }
+                    Err(_) => return false,
+                }
+            }
+        }
+        let taken = self.blocks.lock().unwrap().take();
+        match taken {
+            Some(_) => {
+                cluster.cache.unreserve(self.bytes);
+                cluster.spills.fetch_add(1, Ordering::Relaxed);
+                metrics::global().dist_spills.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+impl Drop for HandleInner {
+    fn drop(&mut self) {
+        // Last reference gone: release the storage charge if the blocked
+        // representation is still resident.
+        if self.blocks.get_mut().map(|b| b.is_some()).unwrap_or(false) {
+            self.cluster.cache.unreserve(self.bytes);
+        }
+    }
+}
+
+/// A first-class blocked matrix value (`Value::Blocked`): a refcounted
+/// handle into the distributed backend, carrying cached dims/nnz
+/// metadata so shape queries never touch the driver. Cloning is an `Arc`
+/// bump — scopes, function frames and parfor workers share one resident
+/// value. Dropping the last handle releases the cluster-side storage.
+#[derive(Clone)]
+pub struct BlockedHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl std::fmt::Debug for BlockedHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "BlockedHandle({}x{}, nnz {}, {}, {})",
+            self.inner.rows,
+            self.inner.cols,
+            self.inner.nnz,
+            if self.is_resident() { "resident" } else { "spilled" },
+            if self.is_forced() { "forced" } else { "lazy" }
+        )
+    }
+}
+
+impl BlockedHandle {
+    /// Bind a DIST operator's blocked output as a live value. Registers
+    /// the resident bytes against the cluster's storage budget (which may
+    /// spill *older* live values to the driver — never this one).
+    pub fn new(cluster: Arc<Cluster>, blocked: Arc<BlockedMatrix>) -> BlockedHandle {
+        let (rows, cols) = blocked.shape();
+        let inner = Arc::new(HandleInner {
+            rows,
+            cols,
+            nnz: blocked.nnz(),
+            bytes: blocked.size_in_bytes(),
+            block_size: blocked.block_size(),
+            seq: cluster.live_seq.fetch_add(1, Ordering::Relaxed),
+            blocks: Mutex::new(Some(blocked)),
+            forced: OnceLock::new(),
+            force_lock: Mutex::new(()),
+            cluster: cluster.clone(),
+        });
+        cluster.register_live(&inner);
+        BlockedHandle { inner }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.inner.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.inner.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.inner.rows, self.inner.cols)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.inner.nnz
+    }
+
+    /// Resident size of the blocked representation in bytes.
+    pub fn size_in_bytes(&self) -> usize {
+        self.inner.bytes
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.inner.block_size
+    }
+
+    /// The cluster this value lives on.
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.inner.cluster
+    }
+
+    /// Is the blocked representation still resident (not spilled)?
+    pub fn is_resident(&self) -> bool {
+        self.inner.is_resident()
+    }
+
+    /// Has the driver copy been materialized?
+    pub fn is_forced(&self) -> bool {
+        self.inner.forced.get().is_some()
+    }
+
+    /// The blocked representation, for DIST consumers. Resident handles
+    /// return their shared blocks; a spilled handle re-blockifies from
+    /// the (guaranteed-present) driver copy and becomes resident again.
+    pub fn blocked(&self) -> Result<Arc<BlockedMatrix>> {
+        if let Some(b) = self.inner.blocks.lock().unwrap().clone() {
+            return Ok(b);
+        }
+        // Spilled: rebuild from the forced driver copy.
+        let m = self.inner.forced.get().ok_or_else(|| {
+            DmlError::rt("blocked value lost both its blocks and its driver copy")
+        })?;
+        let b = Arc::new(self.inner.cluster.blockify(m)?);
+        // Reserve *before* publishing the blocks: a concurrent spill can
+        // only unreserve after it observes the slot populated, so the
+        // accounting can never transiently go negative.
+        self.inner.cluster.cache.reserve(self.inner.bytes);
+        let mut slot = self.inner.blocks.lock().unwrap();
+        if let Some(existing) = slot.clone() {
+            drop(slot);
+            self.inner.cluster.cache.unreserve(self.inner.bytes);
+            return Ok(existing); // raced with another rebuild
+        }
+        *slot = Some(b.clone());
+        drop(slot);
+        self.inner.cluster.enforce_storage(self.inner.seq);
+        Ok(b)
+    }
+
+    /// Force the driver materialization (the lazy collect), memoized:
+    /// the first CP consumer pays one `Cluster::collect`, every later
+    /// consumer reads the cached dense copy.
+    pub fn force(&self) -> Result<&Matrix> {
+        if let Some(m) = self.inner.forced.get() {
+            return Ok(m);
+        }
+        let _g = self.inner.force_lock.lock().unwrap();
+        if self.inner.forced.get().is_none() {
+            let resident = self.inner.blocks.lock().unwrap().clone();
+            let b = resident.ok_or_else(|| {
+                DmlError::rt("blocked value lost both its blocks and its driver copy")
+            })?;
+            let m = self.inner.cluster.collect(&b)?;
+            let _ = self.inner.forced.set(m);
+        }
+        Ok(self.inner.forced.get().unwrap())
+    }
+
+    /// Spill this value's blocked representation to the driver (test and
+    /// storage-pressure hook). Returns true if a spill happened.
+    pub fn spill(&self) -> bool {
+        self.inner.spill(&self.inner.cluster)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,5 +661,65 @@ mod tests {
         c.record_task(1, 2_000_000);
         let t = c.modeled_time_seconds(1e6, 0);
         assert!((t - 2.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn handle_forces_lazily_and_memoizes() {
+        let cluster = Arc::new(Cluster::new(2, 16));
+        let m = rand(40, 40, -1.0, 1.0, 1.0, Pdf::Uniform, 3).unwrap();
+        let b = Arc::new(cluster.blockify(&m).unwrap());
+        let h = BlockedHandle::new(cluster.clone(), b);
+        assert_eq!(h.shape(), (40, 40));
+        assert_eq!(h.nnz(), m.nnz());
+        assert!(h.is_resident() && !h.is_forced());
+        assert_eq!(cluster.collect_count(), 0);
+        assert_eq!(*h.force().unwrap(), m);
+        assert_eq!(*h.force().unwrap(), m);
+        assert_eq!(cluster.collect_count(), 1, "force is memoized");
+    }
+
+    #[test]
+    fn handle_spills_and_rebuilds_correctly() {
+        let cluster = Arc::new(Cluster::new(2, 16));
+        let m = rand(40, 40, -1.0, 1.0, 0.3, Pdf::Uniform, 4).unwrap();
+        let b = Arc::new(cluster.blockify(&m).unwrap());
+        let h = BlockedHandle::new(cluster.clone(), b);
+        let charged = cluster.live_blocked_bytes();
+        assert!(charged > 0, "live value must be charged to storage");
+        assert!(h.spill(), "first spill succeeds");
+        assert!(!h.spill(), "second spill is a no-op");
+        assert!(!h.is_resident() && h.is_forced());
+        assert_eq!(cluster.live_blocked_bytes(), charged - h.size_in_bytes());
+        // DIST re-use after a spill rebuilds the blocks from the driver
+        // copy and re-charges the budget.
+        let rebuilt = h.blocked().unwrap();
+        assert_eq!(rebuilt.to_local().unwrap(), m);
+        assert!(h.is_resident());
+        assert_eq!(cluster.live_blocked_bytes(), charged);
+        // Dropping the last handle releases the charge.
+        drop(h);
+        assert_eq!(cluster.live_blocked_bytes(), 0);
+    }
+
+    #[test]
+    fn storage_pressure_spills_oldest_live_value() {
+        let m = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 5).unwrap();
+        let bytes = BlockedMatrix::from_local(&m, 16).unwrap().size_in_bytes();
+        // Budget fits one live value (plus slack), not two.
+        let cluster = Arc::new(Cluster::with_storage(2, 16, bytes + bytes / 2));
+        let h1 = BlockedHandle::new(
+            cluster.clone(),
+            Arc::new(cluster.blockify(&m).unwrap()),
+        );
+        let m2 = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 6).unwrap();
+        let h2 = BlockedHandle::new(
+            cluster.clone(),
+            Arc::new(cluster.blockify(&m2).unwrap()),
+        );
+        assert_eq!(cluster.spill_count(), 1, "oldest live value spills");
+        assert!(!h1.is_resident() && h1.is_forced(), "{h1:?}");
+        assert!(h2.is_resident(), "newest value is never spilled: {h2:?}");
+        // The spilled value still reads back correctly.
+        assert_eq!(*h1.force().unwrap(), m);
     }
 }

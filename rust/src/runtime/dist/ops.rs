@@ -18,8 +18,8 @@
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::dense::DenseMatrix;
-use crate::runtime::matrix::elementwise::{self, BinOp};
-use crate::runtime::matrix::{mult, Matrix};
+use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
+use crate::runtime::matrix::{mult, reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 
 /// Distributed `a %*% b` over local inputs: blockify, run the blocked
@@ -212,6 +212,62 @@ pub fn binary(cluster: &Cluster, a: &Matrix, b: &Matrix, op: BinOp) -> Result<Ma
     binary_blocked(cluster, &ab, &bb, op)?.to_local()
 }
 
+/// Distributed transpose (`t(X)`) as a real blocked reorg: the output
+/// grid swaps block indices ((i,j) → (j,i)) and every block transposes
+/// locally on its worker. With the symmetric hash placement
+/// (`worker_for(i,j) = (i+j) % n`), block (i,j) and its transposed
+/// position (j,i) land on the *same* worker, so the reorg is
+/// shuffle-free — a narrow dependency, like Spark transpose over a
+/// symmetric partitioner. No collect, no re-blockify.
+pub fn transpose_blocked(cluster: &Cluster, m: &BlockedMatrix) -> BlockedMatrix {
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    // Output grid is bcols × brows, row-major over the swapped indices.
+    for j in 0..bcols {
+        for i in 0..brows {
+            let b = m.block(i, j);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            blocks.push(reorg::transpose(b));
+        }
+    }
+    BlockedMatrix::from_blocks(m.cols(), m.rows(), m.block_size(), blocks)
+}
+
+/// Blocked matrix∘scalar cellwise op: a map over resident blocks (no
+/// communication). `swapped` computes `s op x` instead of `x op s`.
+pub fn scalar_blocked(
+    cluster: &Cluster,
+    m: &BlockedMatrix,
+    s: f64,
+    op: BinOp,
+    swapped: bool,
+) -> Result<BlockedMatrix> {
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = m.block(i, j);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            blocks.push(elementwise::scalar_op(b, s, op, swapped)?);
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks))
+}
+
+/// Blocked unary cellwise op (exp, sqrt, neg, ...): a map over blocks.
+pub fn unary_blocked(cluster: &Cluster, m: &BlockedMatrix, op: UnaryOp) -> BlockedMatrix {
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = m.block(i, j);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            blocks.push(elementwise::unary(b, op));
+        }
+    }
+    BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks)
+}
+
 /// Blocked full aggregate: per-block partials on the workers, combined on
 /// the driver (the classic map + reduce aggregate).
 pub fn full_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> f64 {
@@ -376,6 +432,45 @@ mod tests {
         )
         .unwrap();
         assert_eq!(choose_mm_operator(&cluster, &a, &b).0, DistMmOperator::MapMm);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_local_without_shuffle() {
+        let cluster = Cluster::new(3, 16);
+        let m = rand(45, 70, -1.0, 1.0, 0.4, Pdf::Uniform, 28).unwrap();
+        let t = transpose_blocked(&cluster, &BlockedMatrix::from_local(&m, 16).unwrap());
+        assert_eq!(t.shape(), (70, 45));
+        // Exact: transpose moves cells without arithmetic.
+        assert_eq!(
+            t.to_local().unwrap().to_row_major_vec(),
+            crate::runtime::matrix::reorg::transpose(&m).to_row_major_vec()
+        );
+        // Symmetric placement (i+j) keeps (i,j) and (j,i) on one worker.
+        assert_eq!(cluster.comm_bytes(), 0);
+        assert!(cluster.tasks() > 0);
+    }
+
+    #[test]
+    fn scalar_and_unary_blocked_match_local() {
+        let cluster = Cluster::new(2, 8);
+        let m = rand(20, 14, -2.0, 2.0, 0.6, Pdf::Uniform, 29).unwrap();
+        let b = BlockedMatrix::from_local(&m, 8).unwrap();
+        let s = scalar_blocked(&cluster, &b, 3.5, BinOp::Mul, false)
+            .unwrap()
+            .to_local()
+            .unwrap();
+        let s_local = elementwise::scalar_op(&m, 3.5, BinOp::Mul, false).unwrap();
+        assert_eq!(s.to_row_major_vec(), s_local.to_row_major_vec());
+        // Swapped form: s op x.
+        let d = scalar_blocked(&cluster, &b, 1.0, BinOp::Sub, true)
+            .unwrap()
+            .to_local()
+            .unwrap();
+        let d_local = elementwise::scalar_op(&m, 1.0, BinOp::Sub, true).unwrap();
+        assert_eq!(d.to_row_major_vec(), d_local.to_row_major_vec());
+        let u = unary_blocked(&cluster, &b, UnaryOp::Abs).to_local().unwrap();
+        let u_local = elementwise::unary(&m, UnaryOp::Abs);
+        assert_eq!(u.to_row_major_vec(), u_local.to_row_major_vec());
     }
 
     #[test]

@@ -136,37 +136,41 @@ pub fn call_builtin(
     let m1 = |m: Matrix| Ok(vec![Value::Matrix(m)]);
 
     match name {
-        // ---- shape ------------------------------------------------------
-        "nrow" => one(Value::Int(a.matrix(0, "target")?.rows() as i64)),
-        "ncol" => one(Value::Int(a.matrix(0, "target")?.cols() as i64)),
-        "length" => one(Value::Int(a.matrix(0, "target")?.len() as i64)),
-        "nnz" => one(Value::Int(a.matrix(0, "target")?.nnz() as i64)),
+        // ---- shape (metadata only — never forces a blocked value) -------
+        "nrow" => one(Value::Int(a.require(0, "target")?.matrix_dims()?.0 as i64)),
+        "ncol" => one(Value::Int(a.require(0, "target")?.matrix_dims()?.1 as i64)),
+        "length" => {
+            let (r, c) = a.require(0, "target")?.matrix_dims()?;
+            one(Value::Int((r * c) as i64))
+        }
+        "nnz" => one(Value::Int(a.require(0, "target")?.matrix_nnz()? as i64)),
 
         // ---- aggregates (plan-aware dispatch: CP or distributed) --------
-        "sum" => one(Value::Double(interp.dispatch_agg_full_hinted(
-            &a.matrix(0, "target")?,
+        "sum" => one(Value::Double(interp.dispatch_agg_full_value(
+            a.require(0, "target")?,
             AggOp::Sum,
             Some(pos),
             a.hint(0, "target"),
         )?)),
-        "mean" => one(Value::Double(interp.dispatch_agg_full_hinted(
-            &a.matrix(0, "target")?,
+        "mean" => one(Value::Double(interp.dispatch_agg_full_value(
+            a.require(0, "target")?,
             AggOp::Mean,
             Some(pos),
             a.hint(0, "target"),
         )?)),
-        "prod" => one(Value::Double(interp.dispatch_agg_full_hinted(
-            &a.matrix(0, "target")?,
+        "prod" => one(Value::Double(interp.dispatch_agg_full_value(
+            a.require(0, "target")?,
             AggOp::Prod,
             Some(pos),
             a.hint(0, "target"),
         )?)),
         "var" => {
-            let m = a.matrix(0, "target")?;
+            let v = a.require(0, "target")?;
             let h = a.hint(0, "target");
-            let mu = interp.dispatch_agg_full_hinted(&m, AggOp::Mean, Some(pos), h)?;
-            let ss = interp.dispatch_agg_full_hinted(&m, AggOp::SumSq, Some(pos), h)?;
-            let n = m.len() as f64;
+            let mu = interp.dispatch_agg_full_value(v, AggOp::Mean, Some(pos), h)?;
+            let ss = interp.dispatch_agg_full_value(v, AggOp::SumSq, Some(pos), h)?;
+            let (r, c) = v.matrix_dims()?;
+            let n = (r * c) as f64;
             one(Value::Double((ss - n * mu * mu) / (n - 1.0).max(1.0)))
         }
         "sd" => {
@@ -178,8 +182,8 @@ pub fn call_builtin(
             let bop = if name == "min" { BinOp::Min } else { BinOp::Max };
             if a.count() == 1 {
                 match a.require(0, "target")? {
-                    Value::Matrix(m) => one(Value::Double(interp.dispatch_agg_full_hinted(
-                        m,
+                    v if v.is_matrix() => one(Value::Double(interp.dispatch_agg_full_value(
+                        v,
                         op,
                         Some(pos),
                         a.hint(0, "target"),
@@ -189,17 +193,24 @@ pub fn call_builtin(
             } else {
                 let x = a.require(0, "a")?;
                 let y = a.require(1, "b")?;
-                match (x, y) {
-                    (Value::Matrix(mx), Value::Matrix(my)) => {
-                        m1(elementwise::binary(mx, my, bop)?)
+                match (x.is_matrix(), y.is_matrix()) {
+                    (true, true) => one(interp.dispatch_binary_values(
+                        x,
+                        y,
+                        bop,
+                        Some(pos),
+                        a.hint(0, "a"),
+                        a.hint(1, "b"),
+                    )?),
+                    (true, false) => {
+                        one(interp.dispatch_scalar_value(x, y.as_double()?, bop, false)?)
                     }
-                    (Value::Matrix(mx), sv) => {
-                        m1(elementwise::scalar_op(mx, sv.as_double()?, bop, false)?)
+                    (false, true) => {
+                        one(interp.dispatch_scalar_value(y, x.as_double()?, bop, true)?)
                     }
-                    (sv, Value::Matrix(my)) => {
-                        m1(elementwise::scalar_op(my, sv.as_double()?, bop, true)?)
+                    (false, false) => {
+                        one(Value::Double(bop.apply(x.as_double()?, y.as_double()?)))
                     }
-                    (sx, sy) => one(Value::Double(bop.apply(sx.as_double()?, sy.as_double()?))),
                 }
             }
         }
@@ -212,8 +223,8 @@ pub fn call_builtin(
                 _ => AggOp::Min,
             };
             let row_wise = name.starts_with("row");
-            m1(interp.dispatch_agg_axis_hinted(
-                &a.matrix(0, "target")?,
+            m1(interp.dispatch_agg_axis_value(
+                a.require(0, "target")?,
                 op,
                 row_wise,
                 Some(pos),
@@ -225,31 +236,22 @@ pub fn call_builtin(
         "cumsum" => m1(agg::cumsum(&a.matrix(0, "target")?)),
 
         // ---- unary cell ops --------------------------------------------
-        "exp" | "log" | "sqrt" | "abs" | "round" | "floor" | "ceil" | "ceiling" | "sign"
-        | "sin" | "cos" | "tan" | "sigmoid" => {
-            let uop = match name {
-                "exp" => UnaryOp::Exp,
-                "log" => UnaryOp::Log,
-                "sqrt" => UnaryOp::Sqrt,
-                "abs" => UnaryOp::Abs,
-                "round" => UnaryOp::Round,
-                "floor" => UnaryOp::Floor,
-                "ceil" | "ceiling" => UnaryOp::Ceil,
-                "sign" => UnaryOp::Sign,
-                "sin" => UnaryOp::Sin,
-                "cos" => UnaryOp::Cos,
-                "tan" => UnaryOp::Tan,
-                _ => UnaryOp::Sigmoid,
-            };
+        _ if UnaryOp::from_builtin_name(name).is_some() => {
+            let uop = UnaryOp::from_builtin_name(name).unwrap();
             match a.require(0, "target")? {
-                Value::Matrix(m) => {
+                v if v.is_matrix() => {
                     // log(X, base)
                     if name == "log" && a.count() > 1 {
                         let base = a.double(1, "base", std::f64::consts::E)?;
-                        let ln = elementwise::unary(m, UnaryOp::Log);
-                        return m1(elementwise::scalar_op(&ln, base.ln(), BinOp::Div, false)?);
+                        let ln = interp.dispatch_unary_value(v, UnaryOp::Log)?;
+                        return one(interp.dispatch_scalar_value(
+                            &ln,
+                            base.ln(),
+                            BinOp::Div,
+                            false,
+                        )?);
                     }
-                    m1(elementwise::unary(m, uop))
+                    one(interp.dispatch_unary_value(v, uop)?)
                 }
                 sv => {
                     let x = sv.as_double()?;
@@ -268,8 +270,9 @@ pub fn call_builtin(
             let rows = a.usize_or(1, "rows", 0)?;
             let cols = a.usize_or(2, "cols", 0)?;
             match first {
-                Value::Matrix(m) => m1(reorg::reshape(m, rows, cols)?), // reshape form
-                sv => m1(Matrix::filled(rows, cols, sv.as_double()?)),  // fill form
+                // reshape form (forces a blocked value — CP reorg)
+                v if v.is_matrix() => m1(reorg::reshape(v.as_matrix()?, rows, cols)?),
+                sv => m1(Matrix::filled(rows, cols, sv.as_double()?)), // fill form
             }
         }
         "rand" => {
@@ -294,7 +297,11 @@ pub fn call_builtin(
         }
 
         // ---- reorg ------------------------------------------------------
-        "t" => m1(reorg::transpose(&a.matrix(0, "target")?)),
+        "t" => one(interp.dispatch_transpose_value(
+            a.require(0, "target")?,
+            Some(pos),
+            a.hint(0, "target"),
+        )?),
         "rev" => m1(reorg::rev(&a.matrix(0, "target")?)),
         "cbind" => {
             let mut out = a.matrix(0, "a")?;
@@ -354,18 +361,21 @@ pub fn call_builtin(
 
         // ---- casts --------------------------------------------------------
         "as.scalar" => {
-            let m = a.matrix(0, "target")?;
-            if m.shape() != (1, 1) {
+            // Check the (metadata-only) shape before forcing, so a
+            // blocked non-1x1 errors cleanly without a driver collect.
+            let v = a.require(0, "target")?;
+            let (r, c) = v.matrix_dims()?;
+            if (r, c) != (1, 1) {
                 return Err(DmlError::rt(format!(
-                    "as.scalar: matrix is {}x{}, expected 1x1",
-                    m.rows(),
-                    m.cols()
+                    "as.scalar: matrix is {r}x{c}, expected 1x1"
                 )));
             }
-            one(Value::Double(m.get(0, 0)))
+            one(Value::Double(v.as_double()?))
         }
         "as.matrix" => match a.require(0, "target")? {
-            Value::Matrix(m) => m1(m.clone()),
+            // A blocked value already is a matrix: pass the handle along
+            // without collecting.
+            v if v.is_matrix() => one(v.clone()),
             sv => m1(Matrix::scalar(sv.as_double()?)),
         },
         "as.integer" => one(Value::Int(a.require(0, "target")?.as_int()?)),
@@ -392,8 +402,10 @@ pub fn call_builtin(
         "ifelse" => {
             let c = a.require(0, "condition")?;
             match c {
-                Value::Matrix(cm) => {
-                    // Cell-wise select: c*a + (1-c)*b.
+                c if c.is_matrix() => {
+                    // Cell-wise select: c*a + (1-c)*b (forces blocked
+                    // operands — the select runs CP).
+                    let cm = c.as_matrix()?;
                     let x = a.require(1, "a")?.to_matrix()?;
                     let y = a.require(2, "b")?.to_matrix()?;
                     let ind = elementwise::scalar_op(cm, 0.0, BinOp::Neq, false)?;

@@ -1,12 +1,22 @@
-//! Unified heavy-operator dispatch: every matmult, cellwise binary, and
-//! aggregate flows through one placement path that (1) consults the
-//! compiled plan's ExecType for the operator's source position, (2) falls
-//! back to the same cost model at runtime when the shape was unknown at
-//! compile time, and (3) dynamically "recompiles" when the actual
-//! runtime estimate contradicts the planned placement (paper §3's
-//! recompilation hook). Every decision is surfaced through `EXPLAIN` —
-//! CP, DIST and ACCEL placements alike — with the estimate and budget
-//! that produced it.
+//! Unified heavy-operator dispatch: every matmult, cellwise binary,
+//! transpose, and aggregate flows through one placement path that
+//! (1) consults the compiled plan's ExecType for the operator's source
+//! position, (2) falls back to the same cost model at runtime when the
+//! shape was unknown at compile time, and (3) dynamically "recompiles"
+//! when the actual runtime estimate contradicts the planned placement
+//! (paper §3's recompilation hook). Every decision is surfaced through
+//! `EXPLAIN` — CP, DIST and ACCEL placements alike.
+//!
+//! Operands arrive as [`Operand`]s: either driver-resident matrices or
+//! first-class blocked values (`Value::Blocked`). A blocked operand *is*
+//! the handle — it needs no cache lookup and no guard fingerprint, and
+//! it forces the operator DIST (collecting it to honor a CP placement
+//! would cost more than the distributed op). DIST results are bound as
+//! blocked values again (`bind_dist_result`), so chains of distributed
+//! operators never round-trip through the driver; the only exception is
+//! a single-block output (e.g. the 1x1 of `t(p) %*% q`), which returns
+//! to the driver as part of the job — SystemML's SINGLE_BLOCK
+//! aggregation — rather than staying distributed.
 
 use std::sync::Arc;
 
@@ -16,17 +26,87 @@ use crate::hop::estimate;
 use crate::hop::plan::{choose_exec, ExecType, OpKind};
 use crate::runtime::dist::cache::{CacheOutcome, Guard, LineageRef};
 use crate::runtime::dist::ops as dist_ops;
-use crate::runtime::dist::{BlockedMatrix, Cluster};
-use crate::runtime::interp::Interpreter;
+use crate::runtime::dist::{BlockedHandle, BlockedMatrix, Cluster};
+use crate::runtime::interp::{Interpreter, Value};
 use crate::runtime::matrix::agg::{self, AggOp};
-use crate::runtime::matrix::elementwise::{self, BinOp};
-use crate::runtime::matrix::{mult, Matrix};
+use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
+use crate::runtime::matrix::{mult, reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 
+/// A matrix operand as the dispatch layer sees it: driver-resident, or a
+/// live blocked value whose metadata (dims/nnz/bytes) is available
+/// without touching the driver.
+pub(crate) enum Operand<'a> {
+    Driver(&'a Matrix),
+    Handle(&'a BlockedHandle),
+}
+
+impl<'a> Operand<'a> {
+    pub(crate) fn of(v: &'a Value) -> Result<Operand<'a>> {
+        match v {
+            Value::Matrix(m) => Ok(Operand::Driver(m)),
+            Value::Blocked(h) => Ok(Operand::Handle(h)),
+            other => {
+                Err(DmlError::rt(format!("expected matrix, found {}", other.type_name())))
+            }
+        }
+    }
+
+    fn rows(&self) -> usize {
+        match self {
+            Operand::Driver(m) => m.rows(),
+            Operand::Handle(h) => h.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            Operand::Driver(m) => m.cols(),
+            Operand::Handle(h) => h.cols(),
+        }
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    fn size_in_bytes(&self) -> usize {
+        match self {
+            Operand::Driver(m) => m.size_in_bytes(),
+            Operand::Handle(h) => h.size_in_bytes(),
+        }
+    }
+
+    fn sparsity(&self) -> f64 {
+        let cells = self.rows() * self.cols();
+        if cells == 0 {
+            return 0.0;
+        }
+        let nnz = match self {
+            Operand::Driver(m) => m.nnz(),
+            Operand::Handle(h) => h.nnz(),
+        };
+        nnz as f64 / cells as f64
+    }
+
+    fn is_blocked(&self) -> bool {
+        matches!(self, Operand::Handle(_))
+    }
+
+    /// Driver view of the operand (forces blocked values — the lazy
+    /// collect).
+    fn force(&self) -> Result<&'a Matrix> {
+        match self {
+            Operand::Driver(m) => Ok(*m),
+            Operand::Handle(h) => h.force(),
+        }
+    }
+}
+
 impl Interpreter {
-    fn cluster_ref(&self) -> Result<&Cluster> {
+    fn cluster_ref(&self) -> Result<&Arc<Cluster>> {
         self.cluster
-            .as_deref()
+            .as_ref()
             .ok_or_else(|| DmlError::rt("distributed backend unavailable"))
     }
 
@@ -35,14 +115,26 @@ impl Interpreter {
     /// `est` is the worst-case memory estimate from the *actual* runtime
     /// operands; the compiled placement (if any) wins unless it is no
     /// longer feasible, in which case the operator is re-placed with the
-    /// same cost model (dynamic recompilation).
+    /// same cost model (dynamic recompilation). `blocked_operand` short
+    /// circuits to DIST: the operand's partitions are already resident
+    /// on the cluster, so the blockify cost is zero and collecting it to
+    /// run CP would be strictly worse.
     fn resolve_exec(
         &self,
         kind: OpKind,
         pos: Option<Pos>,
         est: usize,
         desc: &str,
+        blocked_operand: bool,
     ) -> Result<ExecType> {
+        if blocked_operand && self.cluster.is_some() {
+            if self.config.explain {
+                self.emit(format!(
+                    "EXPLAIN: {desc} -> DIST (operand blocked, zero blockify cost, est {est} B)"
+                ));
+            }
+            return Ok(ExecType::Dist);
+        }
         let planned = pos
             .and_then(|p| self.plan.as_ref().and_then(|plan| plan.placement(p, kind)))
             .map(|p| p.exec);
@@ -130,17 +222,63 @@ impl Interpreter {
         Ok((blocked, outcome))
     }
 
-    /// Run a DIST operator's blocked output back to the driver: the
-    /// blocked handle is offered to the cache (dirty — its authoritative
-    /// copy is the cluster's) so a nested consumer or the adopting
-    /// assignment reuses it, and the driver copy is materialized for the
-    /// CP world (the on-demand flush).
-    fn flush_dist_result(&self, cluster: &Cluster, out: BlockedMatrix) -> Result<Matrix> {
-        let out = Arc::new(out);
-        let local = cluster.collect(&out)?;
-        cluster.cache().offer_result(out, Guard::of(&local));
-        Ok(local)
+    /// Resolve one DIST operand to its blocked form: a blocked value
+    /// hands over its resident partitions directly (no cache lookup, no
+    /// guard fingerprint — the value *is* the handle); a driver matrix
+    /// goes through the guarded lineage cache. The bool reports whether
+    /// the partitions were already resident (for communication
+    /// accounting).
+    fn acquire_operand(
+        &self,
+        cluster: &Cluster,
+        op: &Operand,
+        hint: Option<&LineageRef>,
+        side: &str,
+    ) -> Result<(Arc<BlockedMatrix>, bool)> {
+        match op {
+            Operand::Handle(h) => {
+                let b = h.blocked()?;
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: BLOCKED(reuse) {side} ({}x{}, {} blocks resident)",
+                        h.rows(),
+                        h.cols(),
+                        b.block_rows() * b.block_cols()
+                    ));
+                }
+                Ok((b, true))
+            }
+            Operand::Driver(m) => {
+                let (b, outcome) = self.cache_acquire(cluster, hint, m, side)?;
+                Ok((b, outcome.is_hit()))
+            }
+        }
     }
+
+    /// Bind a DIST operator's blocked output as a value. Multi-block
+    /// outputs become first-class blocked values (no driver round trip);
+    /// a single-block output returns to the driver as part of the job
+    /// (SystemML's SINGLE_BLOCK aggregation — it is the job's result,
+    /// not a collect of a distributed object). With `blocked_values`
+    /// disabled, every output is eagerly collected as before.
+    fn bind_dist_result(&self, cluster: &Arc<Cluster>, out: Arc<BlockedMatrix>) -> Result<Value> {
+        if !self.config.blocked_values {
+            let local = cluster.collect(&out)?;
+            cluster.cache().offer_result(out, Guard::of(&local));
+            return Ok(Value::Matrix(local));
+        }
+        if out.block_rows() * out.block_cols() <= 1 {
+            let local = out.to_local()?;
+            // Still offer the partition to the pending cache so a nested
+            // DIST consumer (or the adopting assignment) reuses it
+            // without re-blockifying the driver copy.
+            cluster.cache().offer_result(out, Guard::of(&local));
+            return Ok(Value::Matrix(local));
+        }
+        Ok(Value::Blocked(BlockedHandle::new(cluster.clone(), out)))
+    }
+
+    // ---- matrix multiplication ---------------------------------------
 
     /// Heavy-operator dispatch for `%*%`: ACCEL when a compiled artifact
     /// matches, else CP vs DIST by placement/estimate (paper §3).
@@ -151,11 +289,14 @@ impl Interpreter {
     /// [`Self::dispatch_matmult`] with the operator's source position for
     /// compiled-placement lookup.
     pub fn dispatch_matmult_at(&self, a: &Matrix, b: &Matrix, pos: Option<Pos>) -> Result<Matrix> {
-        self.dispatch_matmult_hinted(a, b, pos, None, None)
+        self.matmult_operands(Operand::Driver(a), Operand::Driver(b), pos, None, None)?
+            .into_matrix()
     }
 
     /// [`Self::dispatch_matmult_at`] with the operands' lineage
-    /// references for block-cache reuse on DIST placements.
+    /// references for block-cache reuse on DIST placements. Returns a
+    /// driver matrix (forcing any blocked result) for pre-blocked-value
+    /// callers.
     pub fn dispatch_matmult_hinted(
         &self,
         a: &Matrix,
@@ -164,42 +305,80 @@ impl Interpreter {
         ha: Option<&LineageRef>,
         hb: Option<&LineageRef>,
     ) -> Result<Matrix> {
-        // Accelerator first: compiled artifacts handle specific shapes.
-        if let Some(accel) = &self.accel {
-            if let Some(out) = accel.try_matmult(a, b)? {
+        self.matmult_operands(Operand::Driver(a), Operand::Driver(b), pos, ha, hb)?
+            .into_matrix()
+    }
+
+    /// Value-level `%*%` dispatch: blocked operands stay on the cluster,
+    /// and the result is bound blocked when it is multi-block.
+    pub fn dispatch_matmult_values(
+        &self,
+        l: &Value,
+        r: &Value,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Value> {
+        self.matmult_operands(Operand::of(l)?, Operand::of(r)?, pos, ha, hb)
+    }
+
+    pub(crate) fn matmult_operands(
+        &self,
+        a: Operand,
+        b: Operand,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Value> {
+        // Accelerator first: compiled artifacts handle specific shapes
+        // (driver-resident operands only — blocked data stays cluster-side).
+        if let (Operand::Driver(am), Operand::Driver(bm), Some(accel)) =
+            (&a, &b, &self.accel)
+        {
+            if let Some(out) = accel.try_matmult(am, bm)? {
                 if self.config.explain {
                     self.emit(format!(
                         "EXPLAIN: %*% ({}x{} @ {}x{}) -> ACCEL (artifact hit, device budget {} B)",
-                        a.rows(),
-                        a.cols(),
-                        b.rows(),
-                        b.cols(),
+                        am.rows(),
+                        am.cols(),
+                        bm.rows(),
+                        bm.cols(),
                         self.config.accel_memory
                     ));
                 }
-                return Ok(out);
+                return Ok(Value::Matrix(out));
             }
         }
-        let est = estimate::matmult_mem_estimate(a, b);
-        let desc =
-            format!("%*% ({}x{} @ {}x{})", a.rows(), a.cols(), b.rows(), b.cols());
-        match self.resolve_exec(OpKind::MatMult, pos, est, &desc)? {
+        let est = estimate::matmult_mem_parts(
+            a.size_in_bytes(),
+            a.rows(),
+            a.cols(),
+            a.sparsity(),
+            b.size_in_bytes(),
+            b.cols(),
+            b.sparsity(),
+        );
+        let desc = format!("%*% ({}x{} @ {}x{})", a.rows(), a.cols(), b.rows(), b.cols());
+        let blocked_in = a.is_blocked() || b.is_blocked();
+        match self.resolve_exec(OpKind::MatMult, pos, est, &desc, blocked_in)? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
-                let (ab, oa) = self.cache_acquire(cluster, ha, a, "lhs")?;
-                let (bb, ob) = self.cache_acquire(cluster, hb, b, "rhs")?;
-                let resident =
-                    dist_ops::Residency { lhs: oa.is_hit(), rhs: ob.is_hit() };
+                let (ab, ra) = self.acquire_operand(cluster, &a, ha, "lhs")?;
+                let (bb, rb) = self.acquire_operand(cluster, &b, hb, "rhs")?;
+                let resident = dist_ops::Residency { lhs: ra, rhs: rb };
                 let out = dist_ops::matmult_blocked_reuse(cluster, &ab, &bb, resident)?;
-                self.flush_dist_result(cluster, out)
+                self.bind_dist_result(cluster, Arc::new(out))
             }
-            _ => mult::matmult(a, b),
+            _ => Ok(Value::Matrix(mult::matmult(a.force()?, b.force()?)?)),
         }
     }
 
+    // ---- cellwise binaries -------------------------------------------
+
     /// Unified dispatch for matrix∘matrix cellwise binaries. Broadcasting
     /// pairs (row/col vector operands) stay CP; cell-aligned pairs over
-    /// the driver budget run blocked on the cluster.
+    /// the driver budget — or with a blocked operand — run blocked on the
+    /// cluster.
     pub fn dispatch_binary(
         &self,
         a: &Matrix,
@@ -221,26 +400,158 @@ impl Interpreter {
         ha: Option<&LineageRef>,
         hb: Option<&LineageRef>,
     ) -> Result<Matrix> {
+        self.binary_operands(Operand::Driver(a), Operand::Driver(b), op, pos, ha, hb)?
+            .into_matrix()
+    }
+
+    /// Value-level cellwise binary dispatch.
+    pub fn dispatch_binary_values(
+        &self,
+        l: &Value,
+        r: &Value,
+        op: BinOp,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Value> {
+        self.binary_operands(Operand::of(l)?, Operand::of(r)?, op, pos, ha, hb)
+    }
+
+    pub(crate) fn binary_operands(
+        &self,
+        a: Operand,
+        b: Operand,
+        op: BinOp,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Value> {
         if a.shape() != b.shape() {
-            return elementwise::binary(a, b, op);
+            // Broadcasting (row/col vector operand) stays CP.
+            return Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?));
         }
-        let est = estimate::binary_mem_estimate(a, b);
+        let est =
+            estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), a.rows(), a.cols());
         let desc = format!("b({op:?}) ({}x{})", a.rows(), a.cols());
-        match self.resolve_exec(OpKind::CellBinary, pos, est, &desc)? {
+        let blocked_in = a.is_blocked() || b.is_blocked();
+        match self.resolve_exec(OpKind::CellBinary, pos, est, &desc, blocked_in)? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
-                let (ab, _) = self.cache_acquire(cluster, ha, a, "lhs")?;
-                let (bb, _) = self.cache_acquire(cluster, hb, b, "rhs")?;
+                let (ab, _) = self.acquire_operand(cluster, &a, ha, "lhs")?;
+                let (bb, _) = self.acquire_operand(cluster, &b, hb, "rhs")?;
                 let out = dist_ops::binary_blocked(cluster, &ab, &bb, op)?;
-                self.flush_dist_result(cluster, out)
+                self.bind_dist_result(cluster, Arc::new(out))
             }
-            _ => elementwise::binary(a, b, op),
+            _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
         }
     }
 
+    /// Matrix∘scalar cellwise op. Driver matrices stay CP (a scalar op
+    /// never changes residency); a blocked operand maps over its resident
+    /// blocks so the chain stays distributed.
+    pub fn dispatch_scalar_value(
+        &self,
+        v: &Value,
+        s: f64,
+        op: BinOp,
+        swapped: bool,
+    ) -> Result<Value> {
+        match v {
+            Value::Blocked(h) => {
+                let cluster = h.cluster();
+                let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, swapped)?;
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => Ok(Value::Matrix(elementwise::scalar_op(v.as_matrix()?, s, op, swapped)?)),
+        }
+    }
+
+    /// Unary cellwise op (exp, sqrt, neg, ...). Blocked operands map
+    /// over resident blocks; driver matrices stay CP.
+    pub fn dispatch_unary_value(&self, v: &Value, op: UnaryOp) -> Result<Value> {
+        match v {
+            Value::Blocked(h) => {
+                let cluster = h.cluster();
+                let out = dist_ops::unary_blocked(cluster, &h.blocked()?, op);
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => Ok(Value::Matrix(elementwise::unary(v.as_matrix()?, op))),
+        }
+    }
+
+    // ---- transpose ----------------------------------------------------
+
+    /// Transpose dispatch: CP reorg under the budget, blocked reorg
+    /// (block-index swap + per-block transpose, shuffle-free under the
+    /// symmetric placement) on DIST placements or blocked operands.
+    /// For a driver operand with a lineage hint the derived `t(X)#v`
+    /// entry is reused when the guarded base `X#v` hit, so iterative
+    /// algorithms transpose their loop-invariant operand once.
+    pub fn dispatch_transpose_value(
+        &self,
+        v: &Value,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<Value> {
+        let a = Operand::of(v)?;
+        let est = a.size_in_bytes()
+            + estimate::estimate_size(a.cols(), a.rows(), a.sparsity());
+        let desc = format!("r(t) ({}x{})", a.rows(), a.cols());
+        match self.resolve_exec(OpKind::Reorg, pos, est, &desc, a.is_blocked())? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                match &a {
+                    Operand::Handle(h) => {
+                        let out = dist_ops::transpose_blocked(cluster, &h.blocked()?);
+                        self.bind_dist_result(cluster, Arc::new(out))
+                    }
+                    Operand::Driver(m) => {
+                        let derived = hint.map(|h| {
+                            LineageRef::derived(
+                                format!("t({})", h.name),
+                                h.version,
+                                h.deps.clone(),
+                            )
+                        });
+                        let (xb, outcome) = self.cache_acquire(cluster, hint, m, "arg")?;
+                        // Note on accounting: a reused derived entry is
+                        // charged both as a cache entry and (briefly) as
+                        // the live handle wrapping the same Arc'd blocks.
+                        // That over-counts shared storage in the
+                        // conservative direction — at worst an early
+                        // spill, never an overrun.
+                        if outcome.is_hit() {
+                            // Base guard-verified at this version: the
+                            // derived transpose (if resident) is valid.
+                            if let Some(d) = &derived {
+                                if let Some(tb) = cluster.cache().get_keyed(d) {
+                                    if self.config.explain {
+                                        self.emit(format!(
+                                            "EXPLAIN: CACHE(hit) {} arg (derived transpose)",
+                                            d.render()
+                                        ));
+                                    }
+                                    return self.bind_dist_result(cluster, tb);
+                                }
+                            }
+                        }
+                        let out = Arc::new(dist_ops::transpose_blocked(cluster, &xb));
+                        if let Some(d) = &derived {
+                            cluster.cache().put_keyed(d, out.clone());
+                        }
+                        self.bind_dist_result(cluster, out)
+                    }
+                }
+            }
+            _ => Ok(Value::Matrix(reorg::transpose(a.force()?))),
+        }
+    }
+
+    // ---- aggregates ---------------------------------------------------
+
     /// Unified dispatch for full aggregates (`sum`, `mean`, `min`, ...).
     pub fn dispatch_agg_full(&self, m: &Matrix, op: AggOp, pos: Option<Pos>) -> Result<f64> {
-        self.dispatch_agg_full_hinted(m, op, pos, None)
+        self.agg_full_operand(Operand::Driver(m), op, pos, None)
     }
 
     /// [`Self::dispatch_agg_full`] with the operand's lineage reference.
@@ -251,15 +562,37 @@ impl Interpreter {
         pos: Option<Pos>,
         hint: Option<&LineageRef>,
     ) -> Result<f64> {
+        self.agg_full_operand(Operand::Driver(m), op, pos, hint)
+    }
+
+    /// Value-level full aggregate (blocked operands aggregate on the
+    /// cluster, per-block partials reduced at the driver — no collect).
+    pub fn dispatch_agg_full_value(
+        &self,
+        v: &Value,
+        op: AggOp,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<f64> {
+        self.agg_full_operand(Operand::of(v)?, op, pos, hint)
+    }
+
+    fn agg_full_operand(
+        &self,
+        m: Operand,
+        op: AggOp,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<f64> {
         let est = m.size_in_bytes() + estimate::dense_size(1, 1);
         let desc = format!("ua({}) ({}x{})", agg_name(op), m.rows(), m.cols());
-        match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
+        match self.resolve_exec(OpKind::Agg, pos, est, &desc, m.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
-                let (mb, _) = self.cache_acquire(cluster, hint, m, "arg")?;
+                let (mb, _) = self.acquire_operand(cluster, &m, hint, "arg")?;
                 Ok(dist_ops::full_agg_blocked(cluster, &mb, op))
             }
-            _ => Ok(agg::full_agg(m, op)),
+            _ => Ok(agg::full_agg(m.force()?, op)),
         }
     }
 
@@ -272,13 +605,36 @@ impl Interpreter {
         row_wise: bool,
         pos: Option<Pos>,
     ) -> Result<Matrix> {
-        self.dispatch_agg_axis_hinted(m, op, row_wise, pos, None)
+        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, None)
     }
 
     /// [`Self::dispatch_agg_axis`] with the operand's lineage reference.
     pub fn dispatch_agg_axis_hinted(
         &self,
         m: &Matrix,
+        op: AggOp,
+        row_wise: bool,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<Matrix> {
+        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, hint)
+    }
+
+    /// Value-level axis aggregate.
+    pub fn dispatch_agg_axis_value(
+        &self,
+        v: &Value,
+        op: AggOp,
+        row_wise: bool,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<Matrix> {
+        self.agg_axis_operand(Operand::of(v)?, op, row_wise, pos, hint)
+    }
+
+    fn agg_axis_operand(
+        &self,
+        m: Operand,
         op: AggOp,
         row_wise: bool,
         pos: Option<Pos>,
@@ -292,17 +648,21 @@ impl Interpreter {
         let est = m.size_in_bytes() + out;
         let dir = if row_wise { "uar" } else { "uac" };
         let desc = format!("{dir}({}) ({}x{})", agg_name(op), m.rows(), m.cols());
-        match self.resolve_exec(OpKind::Agg, pos, est, &desc)? {
+        match self.resolve_exec(OpKind::Agg, pos, est, &desc, m.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
-                let (mb, _) = self.cache_acquire(cluster, hint, m, "arg")?;
+                let (mb, _) = self.acquire_operand(cluster, &m, hint, "arg")?;
                 if row_wise {
                     dist_ops::row_agg_blocked(cluster, &mb, op)
                 } else {
                     dist_ops::col_agg_blocked(cluster, &mb, op)
                 }
             }
-            _ => Ok(if row_wise { agg::row_agg(m, op) } else { agg::col_agg(m, op) }),
+            _ => Ok(if row_wise {
+                agg::row_agg(m.force()?, op)
+            } else {
+                agg::col_agg(m.force()?, op)
+            }),
         }
     }
 }
@@ -381,5 +741,55 @@ mod tests {
         let out = it.output().join("\n");
         assert!(out.contains("-> CP"), "CP placements must be explained too:\n{out}");
         assert!(out.contains("-> DIST"), "{out}");
+    }
+
+    #[test]
+    fn matmult_values_binds_blocked_and_single_block_returns_driver() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        let it = interp(config);
+        let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 35).unwrap();
+        let v = rand(96, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 36).unwrap();
+        let lv = Value::Matrix(x.clone());
+        let rv = Value::Matrix(v.clone());
+        // 96x96 @ 96x1 -> 96x1 over 32-blocks = 3 blocks: stays blocked.
+        let out = it.dispatch_matmult_values(&lv, &rv, None, None, None).unwrap();
+        let cluster = it.cluster.as_ref().unwrap();
+        assert!(matches!(out, Value::Blocked(_)), "{out:?}");
+        assert_eq!(cluster.collect_count(), 0, "no collect for a blocked bind");
+        // Feed the blocked value back in: 1x96 @ 96x1 -> 1x1 single block
+        // returns a driver matrix without a collect.
+        let tv = it
+            .dispatch_transpose_value(&out, None, None)
+            .unwrap();
+        let s = it.dispatch_matmult_values(&tv, &out, None, None, None).unwrap();
+        assert!(matches!(s, Value::Matrix(_)), "{s:?}");
+        assert_eq!(cluster.collect_count(), 0, "single-block output is not a collect");
+        // Numerics match CP end to end.
+        let xv = mult::matmult(&x, &v).unwrap();
+        let expected = mult::matmult(&reorg::transpose(&xv), &xv).unwrap();
+        assert!(approx_eq_slice(
+            &s.as_matrix().unwrap().to_row_major_vec(),
+            &expected.to_row_major_vec(),
+            1e-9
+        ));
+    }
+
+    #[test]
+    fn dist_transpose_matches_local_and_shuffles_nothing() {
+        let mut config = SystemConfig::tiny_driver(16 * 1024);
+        config.block_size = 16;
+        let it = interp(config);
+        let m = rand(70, 33, -1.0, 1.0, 0.4, Pdf::Uniform, 37).unwrap();
+        let before = crate::util::metrics::global().snapshot();
+        let out = it
+            .dispatch_transpose_value(&Value::Matrix(m.clone()), None, None)
+            .unwrap();
+        let d = crate::util::metrics::global().snapshot().delta(&before);
+        assert!(d.dist_tasks > 0, "over-budget transpose must distribute");
+        let local = reorg::transpose(&m);
+        assert_eq!(out.as_matrix().unwrap().to_row_major_vec(), local.to_row_major_vec());
+        // Block-index swap on the symmetric placement is shuffle-free.
+        assert_eq!(it.cluster.as_ref().unwrap().comm_bytes(), 0);
     }
 }

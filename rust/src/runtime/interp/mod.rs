@@ -63,16 +63,17 @@ pub struct Ctx {
 impl Interpreter {
     pub fn new(bundle: Bundle, config: SystemConfig) -> Self {
         let cluster = if config.dist_enabled {
-            // The block-partition cache budget is the aggregate worker
-            // storage; cache_enabled=false collapses it to 0 (no reuse).
-            let storage = if config.cache_enabled {
-                config.worker_storage.saturating_mul(config.num_workers.max(1))
-            } else {
-                0
-            };
-            Some(Arc::new(crate::runtime::dist::Cluster::with_storage(
+            // The aggregate worker storage bounds both resident caches.
+            // cache_enabled=false collapses only the *partition cache*
+            // budget to 0 (no lineage reuse); live blocked values keep
+            // the full budget, so disabling the cache does not force
+            // every chained DIST result back to the driver.
+            let storage = config.worker_storage.saturating_mul(config.num_workers.max(1));
+            let cache_storage = if config.cache_enabled { storage } else { 0 };
+            Some(Arc::new(crate::runtime::dist::Cluster::with_budgets(
                 config.num_workers,
                 config.block_size,
+                cache_storage,
                 storage,
             )))
         } else {
@@ -158,7 +159,9 @@ impl Interpreter {
                         let (rl, ru) = self.range_bounds(rows, base.rows(), scope, ctx)?;
                         let (cl, cu) = self.range_bounds(cols, base.cols(), scope, ctx)?;
                         let src = match &v {
-                            Value::Matrix(m) => m.clone(),
+                            // Left-indexing mutates driver cells: a
+                            // blocked rhs is forced here.
+                            m if m.is_matrix() => m.to_matrix()?,
                             other => {
                                 // Scalar broadcast into the region.
                                 Matrix::filled(ru - rl, cu - cl, other.as_double()?)
@@ -331,6 +334,13 @@ impl Interpreter {
                     (AstUnOp::Not, Value::Matrix(m)) => {
                         Ok(Value::Matrix(elementwise::unary(&m, UnaryOp::Not)))
                     }
+                    // Blocked values map on the cluster and stay blocked.
+                    (AstUnOp::Neg, v @ Value::Blocked(_)) => {
+                        self.dispatch_unary_value(&v, UnaryOp::Neg)
+                    }
+                    (AstUnOp::Not, v @ Value::Blocked(_)) => {
+                        self.dispatch_unary_value(&v, UnaryOp::Not)
+                    }
                     (AstUnOp::Not, v) => Ok(Value::Bool(!v.as_bool()?)),
                     (AstUnOp::Neg, v) => Ok(Value::Double(-v.as_double()?)),
                 }
@@ -449,7 +459,9 @@ impl Interpreter {
 
     /// Matrix-typed binary ops route through the unified plan-aware
     /// dispatch (`dispatch.rs`): matmult and cell-aligned matrix∘matrix
-    /// binaries are placed CP/DIST/ACCEL; matrix∘scalar ops stay CP.
+    /// binaries are placed CP/DIST/ACCEL. Matrix∘scalar ops stay CP for
+    /// driver matrices but map cluster-side for blocked operands, so a
+    /// chain of distributed updates never round-trips through the driver.
     fn binary_matrix_op(
         &self,
         op: AstBinOp,
@@ -459,35 +471,31 @@ impl Interpreter {
         hints: (Option<LineageRef>, Option<LineageRef>),
     ) -> Result<Value> {
         if op == AstBinOp::MatMul {
-            let (a, b) = (l.as_matrix()?, r.as_matrix()?);
-            return Ok(Value::Matrix(self.dispatch_matmult_hinted(
-                a,
-                b,
+            return self.dispatch_matmult_values(
+                l,
+                r,
                 Some(*pos),
                 hints.0.as_ref(),
                 hints.1.as_ref(),
-            )?));
+            );
         }
         let bop = ast_to_binop(op);
-        let out = match (l, r) {
-            (Value::Matrix(a), Value::Matrix(b)) => self.dispatch_binary_hinted(
-                a,
-                b,
+        match (l.is_matrix(), r.is_matrix()) {
+            (true, true) => self.dispatch_binary_values(
+                l,
+                r,
                 bop,
                 Some(*pos),
                 hints.0.as_ref(),
                 hints.1.as_ref(),
-            )?,
-            (Value::Matrix(a), other) => elementwise::scalar_op(a, other.as_double()?, bop, false)?,
-            (other, Value::Matrix(b)) => elementwise::scalar_op(b, other.as_double()?, bop, true)?,
-            _ => {
-                return Err(DmlError::rt(format!(
-                    "line {}: invalid operands for {op:?}",
-                    pos.line
-                )))
-            }
-        };
-        Ok(Value::Matrix(out))
+            ),
+            (true, false) => self.dispatch_scalar_value(l, r.as_double()?, bop, false),
+            (false, true) => self.dispatch_scalar_value(r, l.as_double()?, bop, true),
+            _ => Err(DmlError::rt(format!(
+                "line {}: invalid operands for {op:?}",
+                pos.line
+            ))),
+        }
     }
 
     // ---- calls ---------------------------------------------------------

@@ -1,5 +1,6 @@
 //! Runtime values for DML variables.
 
+use crate::runtime::dist::BlockedHandle;
 use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
 
@@ -11,18 +12,31 @@ pub enum Value {
     Bool(bool),
     Str(String),
     Matrix(Matrix),
+    /// A first-class blocked matrix: the value *is* a handle into the
+    /// distributed backend (`runtime::dist::BlockedHandle`). DIST
+    /// consumers use the resident blocks directly; CP consumers force the
+    /// lazy driver materialization through [`Value::as_matrix`] (one
+    /// collect, memoized on the shared handle).
+    Blocked(BlockedHandle),
     /// List literal (only flows into builtin shape arguments).
     List(Vec<Value>),
 }
 
 impl Value {
-    /// Coerce to f64 (scalars and 1x1 matrices).
+    /// Coerce to f64 (scalars and 1x1 matrices). A 1x1 blocked value is
+    /// forced to the driver first; larger matrices are a clear error.
     pub fn as_double(&self) -> Result<f64> {
         match self {
             Value::Double(v) => Ok(*v),
             Value::Int(v) => Ok(*v as f64),
             Value::Bool(b) => Ok(*b as i32 as f64),
             Value::Matrix(m) if m.shape() == (1, 1) => Ok(m.get(0, 0)),
+            Value::Blocked(h) if h.shape() == (1, 1) => Ok(h.force()?.get(0, 0)),
+            Value::Blocked(h) => Err(DmlError::rt(format!(
+                "expected scalar, found a {}x{} blocked matrix (use as.scalar on a 1x1)",
+                h.rows(),
+                h.cols()
+            ))),
             other => Err(DmlError::rt(format!("expected scalar, found {}", other.type_name()))),
         }
     }
@@ -42,18 +56,52 @@ impl Value {
     }
 
     /// Borrow as a matrix; errors on scalars (DML requires as.matrix).
+    /// Blocked values are *forced* here — this is the lazy collect every
+    /// CP consumer funnels through (memoized per handle).
     pub fn as_matrix(&self) -> Result<&Matrix> {
         match self {
             Value::Matrix(m) => Ok(m),
+            Value::Blocked(h) => h.force(),
             other => Err(DmlError::rt(format!("expected matrix, found {}", other.type_name()))),
         }
     }
 
-    /// Matrix, scalar promoted to 1x1 (for cell-op operands).
+    /// Matrix, scalar promoted to 1x1 (for cell-op operands). Forces
+    /// blocked values.
     pub fn to_matrix(&self) -> Result<Matrix> {
         match self {
             Value::Matrix(m) => Ok(m.clone()),
+            Value::Blocked(h) => Ok(h.force()?.clone()),
             other => Ok(Matrix::scalar(other.as_double()?)),
+        }
+    }
+
+    /// Consume into a driver matrix, forcing blocked values (used by the
+    /// matrix-typed compatibility APIs that predate blocked values).
+    pub fn into_matrix(self) -> Result<Matrix> {
+        match self {
+            Value::Matrix(m) => Ok(m),
+            Value::Blocked(h) => Ok(h.force()?.clone()),
+            other => Err(DmlError::rt(format!("expected matrix, found {}", other.type_name()))),
+        }
+    }
+
+    /// Matrix dimensions without forcing a blocked value (the handle
+    /// carries its metadata).
+    pub fn matrix_dims(&self) -> Result<(usize, usize)> {
+        match self {
+            Value::Matrix(m) => Ok(m.shape()),
+            Value::Blocked(h) => Ok(h.shape()),
+            other => Err(DmlError::rt(format!("expected matrix, found {}", other.type_name()))),
+        }
+    }
+
+    /// Non-zero count without forcing a blocked value.
+    pub fn matrix_nnz(&self) -> Result<usize> {
+        match self {
+            Value::Matrix(m) => Ok(m.nnz()),
+            Value::Blocked(h) => Ok(h.nnz()),
+            other => Err(DmlError::rt(format!("expected matrix, found {}", other.type_name()))),
         }
     }
 
@@ -64,23 +112,12 @@ impl Value {
             Value::Int(v) => v.to_string(),
             Value::Bool(b) => if *b { "TRUE" } else { "FALSE" }.to_string(),
             Value::Str(s) => s.clone(),
-            Value::Matrix(m) => {
-                let (r, c) = m.shape();
-                let mut out = String::new();
-                for i in 0..r.min(10) {
-                    let cells: Vec<String> =
-                        (0..c.min(12)).map(|j| format_double(m.get(i, j))).collect();
-                    out.push_str(&cells.join(" "));
-                    if c > 12 {
-                        out.push_str(" ...");
-                    }
-                    out.push('\n');
-                }
-                if r > 10 {
-                    out.push_str(&format!("... ({r}x{c} matrix)\n"));
-                }
-                out
-            }
+            Value::Matrix(m) => display_matrix(m),
+            Value::Blocked(h) => match h.force() {
+                // Printing is a CP demand: force the driver copy.
+                Ok(m) => display_matrix(m),
+                Err(_) => format!("<blocked {}x{} matrix (unavailable)>", h.rows(), h.cols()),
+            },
             Value::List(items) => {
                 let parts: Vec<String> = items.iter().map(|v| v.to_display_string()).collect();
                 format!("[{}]", parts.join(", "))
@@ -95,15 +132,19 @@ impl Value {
             Value::Bool(_) => "boolean",
             Value::Str(_) => "string",
             Value::Matrix(_) => "matrix",
+            Value::Blocked(_) => "matrix",
             Value::List(_) => "list",
         }
     }
 
+    /// Is this a matrix-typed value (driver-resident or blocked)?
     pub fn is_matrix(&self) -> bool {
-        matches!(self, Value::Matrix(_))
+        matches!(self, Value::Matrix(_) | Value::Blocked(_))
     }
 
     /// List of usize (shape arguments like input_shape=[N,C,H,W]).
+    /// Blocked items are forced through the scalar coercion, which gives
+    /// a clear error (not a panic) for non-1x1 shapes.
     pub fn as_usize_list(&self) -> Result<Vec<usize>> {
         match self {
             Value::List(items) => items.iter().map(|v| Ok(v.as_int()? as usize)).collect(),
@@ -113,6 +154,23 @@ impl Value {
             ))),
         }
     }
+}
+
+fn display_matrix(m: &Matrix) -> String {
+    let (r, c) = m.shape();
+    let mut out = String::new();
+    for i in 0..r.min(10) {
+        let cells: Vec<String> = (0..c.min(12)).map(|j| format_double(m.get(i, j))).collect();
+        out.push_str(&cells.join(" "));
+        if c > 12 {
+            out.push_str(" ...");
+        }
+        out.push('\n');
+    }
+    if r > 10 {
+        out.push_str(&format!("... ({r}x{c} matrix)\n"));
+    }
+    out
 }
 
 /// Format a double like DML's print (integral values without ".0...").
@@ -127,6 +185,8 @@ pub fn format_double(v: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::dist::Cluster;
+    use std::sync::Arc;
 
     #[test]
     fn scalar_coercions() {
@@ -158,5 +218,42 @@ mod tests {
         let l = Value::List(vec![Value::Int(1), Value::Int(28)]);
         assert_eq!(l.as_usize_list().unwrap(), vec![1, 28]);
         assert!(Value::Int(1).as_usize_list().is_err());
+    }
+
+    fn blocked_value(cluster: &Arc<Cluster>, m: &Matrix) -> Value {
+        let b = Arc::new(cluster.blockify(m).unwrap());
+        Value::Blocked(BlockedHandle::new(cluster.clone(), b))
+    }
+
+    #[test]
+    fn blocked_value_is_matrix_typed_and_lazy() {
+        let cluster = Arc::new(Cluster::new(2, 4));
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let v = blocked_value(&cluster, &m);
+        assert!(v.is_matrix());
+        assert_eq!(v.type_name(), "matrix");
+        assert_eq!(v.matrix_dims().unwrap(), (2, 2));
+        assert_eq!(v.matrix_nnz().unwrap(), 4);
+        // Metadata queries must not collect.
+        assert_eq!(cluster.collect_count(), 0);
+        // Forcing collects exactly once, memoized across consumers.
+        assert_eq!(*v.as_matrix().unwrap(), m);
+        assert_eq!(*v.as_matrix().unwrap(), m);
+        assert_eq!(cluster.collect_count(), 1);
+    }
+
+    #[test]
+    fn blocked_scalar_casts_error_clearly_instead_of_panicking() {
+        let cluster = Arc::new(Cluster::new(2, 4));
+        let big = blocked_value(&cluster, &Matrix::filled(3, 2, 1.0));
+        let err = big.as_double().unwrap_err().to_string();
+        assert!(err.contains("3x2"), "{err}");
+        let one = blocked_value(&cluster, &Matrix::scalar(5.0));
+        assert_eq!(one.as_double().unwrap(), 5.0);
+        // A blocked value inside a shape list coerces (or errors) cleanly.
+        let l = Value::List(vec![blocked_value(&cluster, &Matrix::scalar(4.0))]);
+        assert_eq!(l.as_usize_list().unwrap(), vec![4]);
+        let bad = Value::List(vec![blocked_value(&cluster, &Matrix::filled(2, 2, 1.0))]);
+        assert!(bad.as_usize_list().is_err());
     }
 }

@@ -93,6 +93,28 @@ pub enum UnaryOp {
 }
 
 impl UnaryOp {
+    /// Map a DML cellwise unary builtin name to its operator. The single
+    /// source of truth shared by the interpreter's builtin dispatch and
+    /// the planner's blocked-ness dataflow — adding a builtin here keeps
+    /// both in sync.
+    pub fn from_builtin_name(name: &str) -> Option<UnaryOp> {
+        Some(match name {
+            "exp" => UnaryOp::Exp,
+            "log" => UnaryOp::Log,
+            "sqrt" => UnaryOp::Sqrt,
+            "abs" => UnaryOp::Abs,
+            "round" => UnaryOp::Round,
+            "floor" => UnaryOp::Floor,
+            "ceil" | "ceiling" => UnaryOp::Ceil,
+            "sign" => UnaryOp::Sign,
+            "sin" => UnaryOp::Sin,
+            "cos" => UnaryOp::Cos,
+            "tan" => UnaryOp::Tan,
+            "sigmoid" => UnaryOp::Sigmoid,
+            _ => return None,
+        })
+    }
+
     #[inline]
     pub fn apply(self, a: f64) -> f64 {
         match self {

@@ -78,14 +78,16 @@ pub fn execute_parfor(
     }
 
     // Snapshot the originals of result vars for compare-based merge.
-    let originals: Vec<(String, Matrix)> = plan
-        .result_vars
-        .iter()
-        .filter_map(|name| match scope.get(name) {
-            Some(Value::Matrix(m)) => Some((name.clone(), m.clone())),
-            _ => None,
-        })
-        .collect();
+    // A blocked original is forced here: the merge compares driver cells,
+    // so the parfor boundary is a legitimate driver sync point.
+    let mut originals: Vec<(String, Matrix)> = Vec::new();
+    for name in &plan.result_vars {
+        if let Some(v) = scope.get(name) {
+            if v.is_matrix() {
+                originals.push((name.clone(), v.to_matrix()?));
+            }
+        }
+    }
 
     // 2. Execute chunks. Workers get contiguous iteration ranges.
     let chunks: Vec<Vec<f64>> = split_chunks(iters, plan.degree);
@@ -109,8 +111,13 @@ pub fn execute_parfor(
     for ws in worker_scopes {
         let ws = ws?;
         for (name, base) in merged.iter_mut() {
-            if let Some(Value::Matrix(wm)) = ws.get(name) {
-                *base = merge_compare(base, &interp_original(&originals, name), wm)?;
+            if let Some(wv) = ws.get(name) {
+                if wv.is_matrix() {
+                    // Worker results may be blocked (the body ran DIST
+                    // ops): force for the cell-compare merge.
+                    let wm = wv.to_matrix()?;
+                    *base = merge_compare(base, &interp_original(&originals, name), &wm)?;
+                }
             }
         }
     }
@@ -203,7 +210,7 @@ fn collect_written_outer_matrices(body: &[Stmt], scope: &Scope) -> Vec<String> {
         for s in stmts {
             match s {
                 Stmt::Assign { target: AssignTarget::Indexed { name, .. }, .. } => {
-                    if matches!(scope.get(name), Some(Value::Matrix(_))) {
+                    if scope.get(name).is_some_and(|v| v.is_matrix()) {
                         out.push(name.clone());
                     }
                 }

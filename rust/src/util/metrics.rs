@@ -23,6 +23,8 @@ pub struct Metrics {
     pub blockify_ops: AtomicU64,
     /// Blocked -> driver-local collects (SystemML collect-to-driver).
     pub dist_collects: AtomicU64,
+    /// Live blocked values spilled to the driver under storage pressure.
+    pub dist_spills: AtomicU64,
     /// Block-partition cache hits (resident blocked matrix reused).
     pub cache_hits: AtomicU64,
     /// Block-partition cache misses (blockify performed).
@@ -54,6 +56,7 @@ static GLOBAL: Metrics = Metrics {
     dist_tasks: AtomicU64::new(0),
     blockify_ops: AtomicU64::new(0),
     dist_collects: AtomicU64::new(0),
+    dist_spills: AtomicU64::new(0),
     cache_hits: AtomicU64::new(0),
     cache_misses: AtomicU64::new(0),
     cache_evictions: AtomicU64::new(0),
@@ -95,6 +98,7 @@ impl Metrics {
             dist_tasks: self.dist_tasks.load(Ordering::Relaxed),
             blockify_ops: self.blockify_ops.load(Ordering::Relaxed),
             dist_collects: self.dist_collects.load(Ordering::Relaxed),
+            dist_spills: self.dist_spills.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
@@ -117,6 +121,7 @@ impl Metrics {
         self.dist_tasks.store(0, Ordering::Relaxed);
         self.blockify_ops.store(0, Ordering::Relaxed);
         self.dist_collects.store(0, Ordering::Relaxed);
+        self.dist_spills.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
         self.cache_misses.store(0, Ordering::Relaxed);
         self.cache_evictions.store(0, Ordering::Relaxed);
@@ -140,6 +145,7 @@ pub struct MetricsSnapshot {
     pub dist_tasks: u64,
     pub blockify_ops: u64,
     pub dist_collects: u64,
+    pub dist_spills: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
@@ -163,6 +169,7 @@ impl MetricsSnapshot {
             dist_tasks: self.dist_tasks - earlier.dist_tasks,
             blockify_ops: self.blockify_ops - earlier.blockify_ops,
             dist_collects: self.dist_collects - earlier.dist_collects,
+            dist_spills: self.dist_spills - earlier.dist_spills,
             cache_hits: self.cache_hits - earlier.cache_hits,
             cache_misses: self.cache_misses - earlier.cache_misses,
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
