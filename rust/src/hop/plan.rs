@@ -53,6 +53,11 @@ pub enum OpKind {
     Agg,
     /// Reorganization operators (today: transpose).
     Reorg,
+    /// Right indexing (`X[r1:r2, c1:c2]`): block-range selection on DIST.
+    RightIndex,
+    /// Left-index write (`X[r1:r2, c1:c2] = ...`): touched-block rewrite
+    /// on DIST — the target stays blocked.
+    LeftIndex,
 }
 
 impl fmt::Display for OpKind {
@@ -62,6 +67,8 @@ impl fmt::Display for OpKind {
             OpKind::CellBinary => write!(f, "cellwise"),
             OpKind::Agg => write!(f, "agg"),
             OpKind::Reorg => write!(f, "reorg"),
+            OpKind::RightIndex => write!(f, "rix"),
+            OpKind::LeftIndex => write!(f, "lix"),
         }
     }
 }
@@ -82,6 +89,9 @@ pub struct PlannedOp {
     pub pos: Pos,
     pub exec: Option<ExecType>,
     pub est: Option<usize>,
+    /// Vector-broadcast cellwise pair (rendered as `BCAST` in EXPLAIN):
+    /// the rhs is a row/col vector joined map-side on DIST placements.
+    pub bcast: bool,
 }
 
 /// Plan of one statement: its DAG plus the heavy operators found in it.
@@ -94,6 +104,9 @@ pub struct StmtPlan {
     pub ops: Vec<PlannedOp>,
     /// Chain-reordering note, when the rewriter fired for this statement.
     pub note: Option<String>,
+    /// Left-index write placement, when this statement is an indexed
+    /// assignment with a known target shape (rendered as an `IDX` line).
+    pub lix: Option<Placement>,
 }
 
 /// The compiled execution plan of a program's straight-line main body.
@@ -168,6 +181,14 @@ impl Plan {
             if let Some(note) = &sp.note {
                 writeln!(s, "  ^ {note}").unwrap();
             }
+            if let Some(p) = &sp.lix {
+                writeln!(
+                    s,
+                    "  lix {} est {} B -> {} IDX (touched-block write)",
+                    sp.target, p.est, p.exec
+                )
+                .unwrap();
+            }
             let uses = sp.dag.use_counts();
             // ops indexed by node for annotation.
             let mut by_node: HashMap<NodeId, &PlannedOp> = HashMap::new();
@@ -195,6 +216,12 @@ impl Plan {
                             line.push_str(&format!(" est {est} B -> {exec}"));
                         }
                         _ => line.push_str(" est ? -> runtime"),
+                    }
+                    if op.kind == OpKind::RightIndex {
+                        line.push_str(" IDX");
+                    }
+                    if op.bcast {
+                        line.push_str(" BCAST");
                     }
                 }
                 if uses[n.id] > 1 {
@@ -321,20 +348,66 @@ fn plan_block(
                 }
                 let dag = DagBuilder::new(symbols).build(value);
                 let shape = dag.shape_of(dag.root);
+                let mut lix: Option<Placement> = None;
+                // Post-write residency of a left-index target, applied
+                // only *after* the rhs DAG is planned (the rhs reads the
+                // pre-write binding).
+                let mut indexed_residency: Option<(String, bool)> = None;
                 let (name, bound_var) = match target {
                     AssignTarget::Var(n) => {
                         symbols.insert(n.clone(), shape);
                         (n.clone(), Some(n.clone()))
                     }
                     AssignTarget::Indexed { name, .. } => {
-                        // Left-indexing mutates driver cells: the result
-                        // is driver-resident whatever fed it.
-                        ctx.blocked_vars.remove(name);
+                        // Left-index write: on DIST only the touched
+                        // blocks are rewritten, so a blocked target
+                        // **stays blocked** (it no longer forces to the
+                        // driver). CP (or unknown-shape) writes are
+                        // driver-resident.
+                        let target_blocked = ctx.blocked_vars.contains(name);
+                        let tgt = symbols.get(name).copied();
+                        let est = tgt
+                            .and_then(|s| s.mem_estimate())
+                            .map(|m| m.saturating_mul(2));
+                        let exec = if target_blocked && ctx.config.dist_enabled {
+                            Some(ExecType::Dist)
+                        } else {
+                            est.map(|e| choose_exec(e, ctx.config, false))
+                        };
+                        lix = exec.map(|x| Placement { exec: x, est: est.unwrap_or(0) });
+                        if record {
+                            if let Some(p) = lix {
+                                place_key(
+                                    plan,
+                                    ctx,
+                                    (pos.line, pos.col, OpKind::LeftIndex),
+                                    p.exec,
+                                    p.est,
+                                );
+                            }
+                        }
+                        let stays_blocked = exec == Some(ExecType::Dist)
+                            && tgt
+                                .map(|s| multi_block(s, ctx.config.block_size.max(1)))
+                                .unwrap_or(target_blocked);
+                        indexed_residency = Some((name.clone(), stays_blocked));
                         (format!("{name}[...]"), None)
                     }
                 };
                 let root_blocked =
                     record_stmt(plan, ctx, *pos, name, dag, note, loop_depth, record, fn_label);
+                if record {
+                    if let Some(sp) = plan.stmts.last_mut() {
+                        sp.lix = lix;
+                    }
+                }
+                if let Some((n, stays)) = indexed_residency {
+                    if stays {
+                        ctx.blocked_vars.insert(n);
+                    } else {
+                        ctx.blocked_vars.remove(&n);
+                    }
+                }
                 if let Some(n) = bound_var {
                     if root_blocked {
                         ctx.blocked_vars.insert(n);
@@ -598,6 +671,9 @@ fn record_stmt(
             HopOp::Binary(_) if !n.shape.scalar => OpKind::CellBinary,
             HopOp::Agg { .. } => OpKind::Agg,
             HopOp::Transpose => OpKind::Reorg,
+            // Right indexing is a placed operator: block-range selection
+            // on DIST, with blocked-ness flowing through it.
+            HopOp::Index => OpKind::RightIndex,
             HopOp::Read(name) => {
                 blocked[n.id] = ctx.blocked_vars.contains(name);
                 continue;
@@ -611,24 +687,46 @@ fn record_stmt(
                 blocked[n.id] = in_blocked;
                 continue;
             }
-            // Literals, indexing and opaque calls produce driver values.
+            // Literals and opaque calls produce driver values.
             _ => continue,
         };
+        let mut bcast = false;
         if kind == OpKind::CellBinary {
             let any_scalar = n.inputs.iter().any(|i| dag.nodes[*i].shape.scalar);
-            let broadcast = n.inputs.iter().any(|i| {
-                let s = dag.nodes[*i].shape;
-                s.known_dims().is_some() && s.known_dims() != n.shape.known_dims()
-            });
-            if broadcast {
-                // Broadcasting pairs run CP (forcing blocked operands).
-                continue;
-            }
-            if any_scalar {
-                // Matrix∘scalar follows its matrix operand's residency
-                // (a blocked operand maps cluster-side, no placement).
+            let out_dims = n.shape.known_dims();
+            let rhs_dims =
+                n.inputs.get(1).and_then(|i| dag.nodes[*i].shape.known_dims());
+            if any_scalar || rhs_dims == Some((1, 1)) {
+                // Matrix∘scalar (including 1x1-rhs promotion) follows its
+                // matrix operand's residency (a blocked operand maps
+                // cluster-side, no placement).
                 blocked[n.id] = in_blocked && multi_block(n.shape, bs);
                 continue;
+            }
+            let mismatch = n.inputs.iter().any(|i| {
+                let s = dag.nodes[*i].shape;
+                s.known_dims().is_some() && s.known_dims() != out_dims
+            });
+            if mismatch {
+                // Vector-broadcast pair: DIST-eligible as a map-side
+                // broadcast join when the *rhs* is the row/col vector and
+                // the lhs carries the output shape — mirroring the
+                // runtime kernel, which broadcasts only rhs vectors. The
+                // communication cost is the broadcast vector's bytes;
+                // blockify cost is zero when the lhs is already blocked.
+                let rhs_vec = n.inputs.len() == 2
+                    && matches!(rhs_dims, Some((r, c)) if (r == 1) ^ (c == 1));
+                let lhs_out = n
+                    .inputs
+                    .first()
+                    .map(|i| dag.nodes[*i].shape.known_dims() == out_dims)
+                    .unwrap_or(false);
+                if !(rhs_vec && lhs_out) {
+                    // Any other mismatched pair stays CP (forcing
+                    // blocked operands) — or is a runtime shape error.
+                    continue;
+                }
+                bcast = true;
             }
         }
         let est = op_mem_estimate(&dag, n.id, kind);
@@ -636,7 +734,14 @@ fn record_stmt(
         // operator runs DIST regardless of its memory estimate, because
         // collecting a resident operand to run CP is strictly worse.
         // This is the compile-time mirror of the runtime dispatch rule.
-        let exec = if in_blocked && config.dist_enabled {
+        // For a broadcast pair only the *lhs* (the big operand) decides —
+        // the runtime never collects it to honor a CP placement.
+        let eff_blocked = if bcast {
+            n.inputs.first().map(|i| blocked[*i]).unwrap_or(false)
+        } else {
+            in_blocked
+        };
+        let exec = if eff_blocked && config.dist_enabled {
             Some(ExecType::Dist)
         } else {
             est.map(|e| choose_exec(e, config, kind == OpKind::MatMult))
@@ -650,21 +755,11 @@ fn record_stmt(
             if let (Some(e), Some(x)) = (est, exec) {
                 let key = (n.pos.line, n.pos.col, kind);
                 *written.entry(key).or_insert(0) += 1;
-                if !ctx.conflicted.contains(&key) {
-                    match plan.placements.get(&key) {
-                        Some(p) if p.exec != x => {
-                            // The same source position was planned with a
-                            // different ExecType (another call site of the
-                            // same function body): ambiguous — drop it and
-                            // let the runtime estimate decide.
-                            plan.placements.remove(&key);
-                            ctx.conflicted.insert(key);
-                        }
-                        _ => {
-                            plan.placements.insert(key, Placement { exec: x, est: e });
-                        }
-                    }
-                }
+                // Collision rule shared with left-index placements: a key
+                // that ever receives two different ExecTypes (another
+                // call site of the same function body) is dropped, so
+                // the runtime estimate decides there.
+                place_key(plan, ctx, key, x, e);
             }
             if exec == Some(ExecType::Dist) {
                 // Track which variables feed this DIST operator (directly
@@ -679,7 +774,7 @@ fn record_stmt(
                     }
                 }
             }
-            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est });
+            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est, bcast });
         }
     }
     let root_blocked = blocked[dag.root];
@@ -696,9 +791,33 @@ fn record_stmt(
             Some(f) => format!("fn {f}: {target}"),
             None => target,
         };
-        plan.stmts.push(StmtPlan { pos, target, dag, ops, note });
+        plan.stmts.push(StmtPlan { pos, target, dag, ops, note, lix: None });
     }
     root_blocked
+}
+
+/// Insert a placement under `key` with the same position-collision rule
+/// record_stmt applies: a key that ever receives two different ExecTypes
+/// is dropped as conflicted, so the runtime estimate decides there.
+fn place_key(
+    plan: &mut Plan,
+    ctx: &mut PlanCtx,
+    key: (usize, usize, OpKind),
+    exec: ExecType,
+    est: usize,
+) {
+    if ctx.conflicted.contains(&key) {
+        return;
+    }
+    match plan.placements.get(&key) {
+        Some(p) if p.exec != exec => {
+            plan.placements.remove(&key);
+            ctx.conflicted.insert(key);
+        }
+        _ => {
+            plan.placements.insert(key, Placement { exec, est });
+        }
+    }
 }
 
 /// Does a DIST output of this shape span more than one block (and so
@@ -1023,6 +1142,78 @@ mod tests {
         // w's shape is loop-stable, so the matmult inside the loop is
         // planned (to DIST: X alone is 320 KB > 64 KB).
         assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+    }
+
+    #[test]
+    fn right_index_is_planned_and_propagates_blockedness() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        // The 96x96 base does not fit the driver: the slice places DIST,
+        // its multi-block output flows blocked into the matmult, and the
+        // render carries the IDX marker.
+        let plan = plan_src(
+            "B = X[1:64, 1:96]\nY = B %*% t(B)\ns = sum(Y)",
+            &[("X", ShapeInfo::matrix(96, 96, 1.0))],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::RightIndex), vec![ExecType::Dist]);
+        assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+        assert!(plan.render().contains(" IDX"), "{}", plan.render());
+    }
+
+    #[test]
+    fn broadcast_cellwise_is_dist_eligible_and_marked() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        // X - colMeans-style row vector: the pair is placed DIST (est
+        // over budget) instead of being skipped to CP, and renders BCAST.
+        let plan = plan_src(
+            "Y = X - mu\ns = sum(Y)",
+            &[
+                ("X", ShapeInfo::matrix(96, 96, 1.0)),
+                ("mu", ShapeInfo::matrix(1, 96, 1.0)),
+            ],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::CellBinary), vec![ExecType::Dist]);
+        assert!(plan.render().contains(" BCAST"), "{}", plan.render());
+        // A vector *lhs* mirrors the runtime kernel: not DIST-eligible.
+        let plan2 = plan_src(
+            "Y = mu - X\ns = 1",
+            &[
+                ("X", ShapeInfo::matrix(96, 96, 1.0)),
+                ("mu", ShapeInfo::matrix(1, 96, 1.0)),
+            ],
+            &config,
+        );
+        assert!(plan2.placed_execs(OpKind::CellBinary).is_empty(), "{}", plan2.render());
+    }
+
+    #[test]
+    fn left_index_keeps_blocked_target_blocked() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        // Y is a DIST matmult output (blocked). The left-index write is
+        // planned DIST (touched-block rewrite), Y stays blocked, and the
+        // following consumer still sees a blocked operand.
+        let plan = plan_src(
+            "Y = X %*% X\nY[1:8, 1:8] = Z\ns = sum(Y)",
+            &[
+                ("X", ShapeInfo::matrix(96, 96, 1.0)),
+                ("Z", ShapeInfo::matrix(8, 8, 1.0)),
+            ],
+            &config,
+        );
+        let lix = plan
+            .stmts
+            .iter()
+            .find_map(|s| s.lix)
+            .expect("left-index write must carry a placement");
+        assert_eq!(lix.exec, ExecType::Dist);
+        assert!(plan.render().contains("lix"), "{}", plan.render());
+        // The aggregate after the write is DIST because Y is still
+        // blocked (zero blockify), not merely because of its estimate.
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist]);
     }
 
     #[test]

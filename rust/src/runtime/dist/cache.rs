@@ -460,11 +460,18 @@ impl BlockCache {
         })
     }
 
+    /// Is an entry resident under this exact lineage key? Diagnostic /
+    /// test hook — touches neither the LRU clock nor the hit counters.
+    pub fn resident_keyed(&self, h: &LineageRef) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&(h.name.clone(), h.version))
+    }
+
     /// Resident entry under an exact lineage key, *without* a driver
     /// guard check. Only sound when the caller has just guard-verified
     /// the base value at the same version (e.g. the blocked transpose
-    /// `t(X)#v` after a guarded hit on `X#v` — any rebind of `X` would
-    /// have both bumped the version and invalidated the derived entry).
+    /// `t(X)#v` or the blocked slice `X[1:64,1:32]#v` after a guarded
+    /// hit on `X#v` — any rebind or left-index write of `X` would have
+    /// both bumped the version and invalidated the derived entry).
     pub fn get_keyed(&self, h: &LineageRef) -> Option<Arc<BlockedMatrix>> {
         if !self.enabled() {
             return None;

@@ -13,9 +13,13 @@
 //! locally and exactly, so distributed plans are numerically equivalent
 //! to CP plans up to floating-point summation order.
 //!
-//! The blocked operators live in [`ops`]; the compiler's ExecType
-//! assignment (see `hop::plan`) decides when the interpreter routes an
-//! operator here instead of CP.
+//! The blocked operators live in [`ops`] — matmult, cellwise (including
+//! the map-side broadcast join for row/col-vector operands), aggregates,
+//! transpose, and block-range right-/left-indexing, so iterative
+//! mini-batch loops (`X[beg:end,]` → normalize → matmult → aggregate)
+//! stay blocked end-to-end. The compiler's ExecType assignment (see
+//! `hop::plan`) decides when the interpreter routes an operator here
+//! instead of CP.
 
 pub mod cache;
 pub mod ops;

@@ -1,7 +1,9 @@
 //! Blocked physical operators over the simulated cluster: matmult
 //! (broadcast-based `mapmm` vs shuffle-based `rmm`, chosen by a
 //! communication cost model exactly like SystemML's SparkExecutionContext),
-//! cellwise binary ops, and row/col/full aggregates.
+//! cellwise binary ops, row/col/full aggregates, block-range indexing
+//! (right-index selection/trim and touched-block left-index rewrite) and
+//! the map-side broadcast cellwise join for row/col-vector operands.
 //!
 //! Every operator assigns block tasks to workers deterministically,
 //! accounts per-worker FLOPs and broadcast/shuffle bytes on the
@@ -372,6 +374,312 @@ pub fn col_agg(cluster: &Cluster, m: &Matrix, op: AggOp) -> Result<Matrix> {
     col_agg_blocked(cluster, &cluster.blockify(m)?, op)
 }
 
+// ---- indexing ----------------------------------------------------------
+
+/// Blocked right-index `X[rl:ru, cl:cu]` (0-based, half-open): pure block
+/// **selection** plus edge-block **trim**. When the slice origin is
+/// block-aligned (`rl % bs == 0 && cl % bs == 0` — every mini-batch
+/// `X[beg:end,]` with a batch size that is a multiple of the block size)
+/// each output block is one input block, possibly trimmed at the edges:
+/// a narrow dependency, no shuffle. A non-aligned origin re-aligns cells
+/// across block boundaries, which is accounted as a shuffle of the
+/// output's bytes (SystemML's general `rightIndex` Spark instruction).
+/// Is a slice a pure block **selection/trim** — every output block drawn
+/// from a single source block (a narrow, shuffle-free dependency)? Per
+/// axis that holds when the origin is block-aligned, or when the whole
+/// extent fits inside one source block (an interior trim). Shared by the
+/// slice operator's shuffle accounting and the dispatch layer's `IDX`
+/// EXPLAIN line so the two can never disagree.
+pub fn slice_selection_only(bs: usize, rl: usize, ru: usize, cl: usize, cu: usize) -> bool {
+    let axis = |off: usize, len: usize| off % bs == 0 || off % bs + len <= bs;
+    axis(rl, ru - rl) && axis(cl, cu - cl)
+}
+
+pub fn slice_blocked(
+    cluster: &Cluster,
+    m: &BlockedMatrix,
+    rl: usize,
+    ru: usize,
+    cl: usize,
+    cu: usize,
+) -> Result<BlockedMatrix> {
+    if ru > m.rows() || cu > m.cols() || rl >= ru || cl >= cu {
+        return Err(reorg::slice_range_error(rl, ru, cl, cu, m.rows(), m.cols()));
+    }
+    let bs = m.block_size();
+    let (orows, ocols) = (ru - rl, cu - cl);
+    if !slice_selection_only(bs, rl, ru, cl, cu) {
+        cluster.record_shuffle((orows as u64) * (ocols as u64) * 8);
+    }
+    let (obr, obc) = (super::ceil_div(orows, bs), super::ceil_div(ocols, bs));
+    let mut blocks = Vec::with_capacity(obr * obc);
+    for i in 0..obr {
+        let grl = rl + i * bs;
+        let gru = (grl + bs).min(ru);
+        for j in 0..obc {
+            let gcl = cl + j * bs;
+            let gcu = (gcl + bs).min(cu);
+            let out = gather_region(m, grl, gru, gcl, gcu)?;
+            // Task attribution: a single-source selection/trim is a
+            // narrow dependency executed where the source block lives
+            // (that is what makes the aligned case genuinely
+            // shuffle-free); a straddling gather was charged as a
+            // shuffle above and lands on the output block's owner.
+            let (sbi, sbj) = (grl / bs, gcl / bs);
+            let single_source = sbi == (gru - 1) / bs && sbj == (gcu - 1) / bs;
+            let worker = if single_source {
+                cluster.worker_for(sbi, sbj)
+            } else {
+                cluster.worker_for(i, j)
+            };
+            cluster.record_task(worker, out.len() as u64);
+            blocks.push(out);
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(orows, ocols, bs, blocks))
+}
+
+/// Assemble the cells of global region [grl,gru)×[gcl,gcu) from the
+/// source blocks covering it (one block when aligned; up to four when the
+/// region straddles block boundaries).
+fn gather_region(
+    m: &BlockedMatrix,
+    grl: usize,
+    gru: usize,
+    gcl: usize,
+    gcu: usize,
+) -> Result<Matrix> {
+    let bs = m.block_size();
+    let (bi0, bi1) = (grl / bs, (gru - 1) / bs);
+    let (bj0, bj1) = (gcl / bs, (gcu - 1) / bs);
+    if bi0 == bi1 && bj0 == bj1 {
+        // Single source block: whole-block selection (already in its
+        // preferred format — no nnz rescan) or an edge trim.
+        let b = m.block(bi0, bj0);
+        let (r0, c0) = (grl - bi0 * bs, gcl - bj0 * bs);
+        let (r1, c1) = (gru - bi0 * bs, gcu - bj0 * bs);
+        if (r0, c0) == (0, 0) && (r1, c1) == b.shape() {
+            return Ok(b.clone());
+        }
+        return Ok(reorg::slice(b, r0, r1, c0, c1)?.examine_and_convert());
+    }
+    // Straddling region: gather from each overlapping source block.
+    let mut out = DenseMatrix::zeros(gru - grl, gcu - gcl);
+    for bi in bi0..=bi1 {
+        for bj in bj0..=bj1 {
+            let b = m.block(bi, bj);
+            let br0 = (bi * bs).max(grl);
+            let br1 = (bi * bs + b.rows()).min(gru);
+            let bc0 = (bj * bs).max(gcl);
+            let bc1 = (bj * bs + b.cols()).min(gcu);
+            if br0 >= br1 || bc0 >= bc1 {
+                continue;
+            }
+            let piece =
+                reorg::slice(b, br0 - bi * bs, br1 - bi * bs, bc0 - bj * bs, bc1 - bj * bs)?;
+            out.assign(br0 - grl, bc0 - gcl, &piece.to_dense())?;
+        }
+    }
+    Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// Blocked left-index write `X[rl.., cl..] = src`: only the blocks the
+/// region touches are *rewritten* (tasks and FLOP accounting cover just
+/// those); untouched blocks are carried over unchanged, so the target
+/// never leaves the cluster. Note the carry-over is a by-value block
+/// copy in this simulation (`Vec<Matrix>` grid) — refcounted block
+/// sharing is a listed refinement. The patch ships as a cluster-wide
+/// broadcast variable (the broadcast primitive charges every worker,
+/// like Spark's) unless `src_resident` says its cells already live
+/// cluster-side (a gathered blocked rhs).
+pub fn left_index_blocked(
+    cluster: &Cluster,
+    target: &BlockedMatrix,
+    rl: usize,
+    cl: usize,
+    src: &Matrix,
+    src_resident: bool,
+) -> Result<BlockedMatrix> {
+    let (sr, sc) = src.shape();
+    if rl + sr > target.rows() || cl + sc > target.cols() {
+        return Err(reorg::left_index_range_error(sr, sc, rl, cl, target.rows(), target.cols()));
+    }
+    if sr == 0 || sc == 0 {
+        return Ok(target.clone());
+    }
+    if !src_resident {
+        cluster.record_broadcast(src.size_in_bytes() as u64);
+    }
+    rewrite_touched_blocks(cluster, target, rl, rl + sr, cl, cl + sc, |gr0, gr1, gc0, gc1| {
+        reorg::slice(src, gr0 - rl, gr1 - rl, gc0 - cl, gc1 - cl)
+    })
+}
+
+/// Blocked left-index **fill** `X[rl:ru, cl:cu] = scalar`: the touched
+/// blocks build their constant patch worker-side — the scalar rides the
+/// task, so there is no region-sized broadcast and no driver
+/// materialization of the region (the whole point of keeping the target
+/// blocked).
+pub fn left_index_fill_blocked(
+    cluster: &Cluster,
+    target: &BlockedMatrix,
+    rl: usize,
+    ru: usize,
+    cl: usize,
+    cu: usize,
+    v: f64,
+) -> Result<BlockedMatrix> {
+    if ru > target.rows() || cu > target.cols() || rl >= ru || cl >= cu {
+        return Err(reorg::slice_range_error(rl, ru, cl, cu, target.rows(), target.cols()));
+    }
+    rewrite_touched_blocks(cluster, target, rl, ru, cl, cu, |gr0, gr1, gc0, gc1| {
+        Ok(Matrix::filled(gr1 - gr0, gc1 - gc0, v))
+    })
+}
+
+/// Shared touched-block rewrite: carry every block of `target` over and
+/// replace only the blocks intersecting [rl,ru)×[cl,cu), each rewritten
+/// with the patch produced by `patch_for(gr0, gr1, gc0, gc1)` (global
+/// half-open cell bounds of the intersection). Tasks cover touched
+/// blocks only.
+fn rewrite_touched_blocks(
+    cluster: &Cluster,
+    target: &BlockedMatrix,
+    rl: usize,
+    ru: usize,
+    cl: usize,
+    cu: usize,
+    mut patch_for: impl FnMut(usize, usize, usize, usize) -> Result<Matrix>,
+) -> Result<BlockedMatrix> {
+    let bs = target.block_size();
+    let (brows, bcols) = (target.block_rows(), target.block_cols());
+    let (bi0, bi1) = (rl / bs, (ru - 1) / bs);
+    let (bj0, bj1) = (cl / bs, (cu - 1) / bs);
+    // One pass over the grid: untouched blocks are carried over (a
+    // by-value copy in this simulation — refcounted sharing is a listed
+    // refinement); touched blocks are rewritten directly, never cloned
+    // first.
+    let mut blocks: Vec<Matrix> = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = target.block(i, j);
+            let touched =
+                (bi0..=bi1).contains(&i) && (bj0..=bj1).contains(&j);
+            if !touched {
+                blocks.push(b.clone());
+                continue;
+            }
+            let gr0 = (i * bs).max(rl);
+            let gr1 = (i * bs + b.rows()).min(ru);
+            let gc0 = (j * bs).max(cl);
+            let gc1 = (j * bs + b.cols()).min(cu);
+            if gr0 >= gr1 || gc0 >= gc1 {
+                blocks.push(b.clone());
+                continue;
+            }
+            let patch = patch_for(gr0, gr1, gc0, gc1)?;
+            let rewritten = reorg::left_index(b, gr0 - i * bs, gc0 - j * bs, &patch)?;
+            cluster.record_task(cluster.worker_for(i, j), ((gr1 - gr0) * (gc1 - gc0)) as u64);
+            blocks.push(rewritten.examine_and_convert());
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(target.rows(), target.cols(), bs, blocks))
+}
+
+// ---- broadcast cellwise -------------------------------------------------
+
+/// Map-side broadcast cellwise join: the row/col-vector rhs `v` is
+/// broadcast to every worker (charged to broadcast accounting unless
+/// already resident) and joined against each resident block of `m` —
+/// `X - mu` / `X / sigma` run without collecting `X`. Mirrors the CP
+/// kernel exactly: only a rhs vector broadcasts, and a true shape
+/// mismatch raises the same `DimMismatch`.
+pub fn binary_broadcast_blocked(
+    cluster: &Cluster,
+    m: &BlockedMatrix,
+    v: &Matrix,
+    op: BinOp,
+    v_resident: bool,
+) -> Result<BlockedMatrix> {
+    let ((mr, mc), (vr, vc)) = (m.shape(), v.shape());
+    let col = vr == mr && vc == 1;
+    let row = vc == mc && vr == 1;
+    if !(col || row) {
+        return Err(DmlError::DimMismatch {
+            op: format!("{op:?}"),
+            lhs_rows: mr,
+            lhs_cols: mc,
+            rhs_rows: vr,
+            rhs_cols: vc,
+        });
+    }
+    if !v_resident {
+        cluster.record_broadcast(v.size_in_bytes() as u64);
+    }
+    let bs = m.block_size();
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = m.block(i, j);
+            // Each worker joins its block against the matching vector
+            // segment of the broadcast copy.
+            let seg = if col {
+                reorg::slice(v, i * bs, i * bs + b.rows(), 0, 1)?
+            } else {
+                reorg::slice(v, 0, 1, j * bs, j * bs + b.cols())?
+            };
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            blocks.push(elementwise::binary(b, &seg, op)?);
+        }
+    }
+    Ok(BlockedMatrix::from_blocks(mr, mc, bs, blocks))
+}
+
+/// Blocked rowIndexMax: each worker scans its block's cells and the
+/// running (value, index) state folds across the row's column groups at
+/// the driver (the rows×1 output returns with the job, like the axis
+/// aggregates). The fold is **CP's exact left-to-right strict-`>` scan,
+/// chunked by block** — the initial best is the row's first cell and a
+/// candidate only wins with `>` — so first-occurrence ties *and* rows
+/// containing NaN anywhere agree with `agg::row_index_max` by
+/// construction (per-block argmax composition would not: a block-leading
+/// NaN poisons that block's local argmax).
+pub fn row_index_max_blocked(cluster: &Cluster, m: &BlockedMatrix) -> Result<Matrix> {
+    let rows = m.rows();
+    let bs = m.block_size();
+    let mut best_val = vec![f64::NEG_INFINITY; rows];
+    let mut best_idx = vec![1.0f64; rows];
+    for i in 0..m.block_rows() {
+        for j in 0..m.block_cols() {
+            let b = m.block(i, j);
+            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            let d = b.to_dense();
+            for r in 0..d.rows {
+                let g = i * bs + r;
+                let row = d.row(r);
+                let mut start = 0usize;
+                if j == 0 {
+                    // CP's initial best: the row's first cell, NaN
+                    // included (a NaN best is never displaced).
+                    best_val[g] = row[0];
+                    best_idx[g] = 1.0;
+                    start = 1;
+                }
+                for (c, v) in row.iter().enumerate().skip(start) {
+                    if *v > best_val[g] {
+                        best_val[g] = *v;
+                        best_idx[g] = (j * bs + c + 1) as f64;
+                    }
+                }
+            }
+        }
+    }
+    let mut out = DenseMatrix::zeros(rows, 1);
+    out.data.copy_from_slice(&best_idx);
+    Ok(Matrix::Dense(out))
+}
+
 /// How block-row/-column partial aggregates are merged across blocks.
 fn combine_binop(op: AggOp) -> BinOp {
     match op {
@@ -471,6 +779,196 @@ mod tests {
         let u = unary_blocked(&cluster, &b, UnaryOp::Abs).to_local().unwrap();
         let u_local = elementwise::unary(&m, UnaryOp::Abs);
         assert_eq!(u.to_row_major_vec(), u_local.to_row_major_vec());
+    }
+
+    #[test]
+    fn slice_blocked_aligned_is_shuffle_free_and_exact() {
+        let cluster = Cluster::new(3, 16);
+        let m = rand(70, 48, -1.0, 1.0, 0.5, Pdf::Uniform, 61).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        // Block-aligned batch slice: rows 17..48 (0-based 16..48).
+        let s = slice_blocked(&cluster, &b, 16, 48, 0, 48).unwrap();
+        assert_eq!(s.shape(), (32, 48));
+        assert_eq!(
+            s.to_local().unwrap(),
+            reorg::slice(&m, 16, 48, 0, 48).unwrap()
+        );
+        assert_eq!(cluster.comm_bytes(), 0, "aligned selection must not shuffle");
+        assert!(cluster.tasks() > 0);
+    }
+
+    #[test]
+    fn slice_blocked_straddling_matches_local_and_shuffles() {
+        let cluster = Cluster::new(3, 16);
+        let m = rand(70, 48, -1.0, 1.0, 1.0, Pdf::Uniform, 62).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        for (rl, ru, cl, cu) in [(5usize, 37usize, 3usize, 45usize), (1, 2, 0, 48), (0, 70, 7, 8)]
+        {
+            let s = slice_blocked(&cluster, &b, rl, ru, cl, cu).unwrap();
+            assert_eq!(
+                s.to_local().unwrap(),
+                reorg::slice(&m, rl, ru, cl, cu).unwrap(),
+                "[{rl}:{ru},{cl}:{cu}]"
+            );
+        }
+        assert!(cluster.comm_bytes() > 0, "non-aligned slices re-align through a shuffle");
+    }
+
+    #[test]
+    fn slice_blocked_bounds_errors_match_cp() {
+        let cluster = Cluster::new(2, 16);
+        let m = rand(20, 20, -1.0, 1.0, 1.0, Pdf::Uniform, 63).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        for (rl, ru, cl, cu) in [(0usize, 21usize, 0usize, 20usize), (5, 5, 0, 20), (3, 2, 0, 20)]
+        {
+            let cp = reorg::slice(&m, rl, ru, cl, cu).unwrap_err().to_string();
+            let dist = slice_blocked(&cluster, &b, rl, ru, cl, cu).unwrap_err().to_string();
+            assert_eq!(cp, dist, "[{rl}:{ru},{cl}:{cu}]");
+        }
+    }
+
+    #[test]
+    fn left_index_blocked_rewrites_touched_blocks_only() {
+        let cluster = Cluster::new(2, 16);
+        let m = rand(48, 48, -1.0, 1.0, 1.0, Pdf::Uniform, 64).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        let patch = rand(8, 8, 5.0, 6.0, 1.0, Pdf::Uniform, 65).unwrap();
+        cluster.reset_accounting();
+        let out = left_index_blocked(&cluster, &b, 12, 12, &patch, false).unwrap();
+        // The 8x8 patch at (12,12) straddles a 2x2 block neighborhood of
+        // 16-blocks: exactly 4 touched-block tasks, never the whole grid.
+        assert_eq!(cluster.tasks(), 4, "only touched blocks are rewritten");
+        assert!(cluster.comm_bytes() > 0, "the patch is broadcast");
+        assert_eq!(
+            out.to_local().unwrap(),
+            reorg::left_index(&m, 12, 12, &patch).unwrap()
+        );
+        // Out-of-range writes raise the CP error.
+        let cp = reorg::left_index(&m, 45, 45, &patch).unwrap_err().to_string();
+        let dist =
+            left_index_blocked(&cluster, &b, 45, 45, &patch, false).unwrap_err().to_string();
+        assert_eq!(cp, dist);
+    }
+
+    #[test]
+    fn left_index_fill_blocked_matches_cp_without_communication() {
+        let cluster = Cluster::new(2, 16);
+        let m = rand(48, 40, -1.0, 1.0, 1.0, Pdf::Uniform, 73).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        cluster.reset_accounting();
+        let out = left_index_fill_blocked(&cluster, &b, 5, 30, 3, 20, 2.5).unwrap();
+        // The constant rides the tasks: no broadcast of the region.
+        assert_eq!(cluster.comm_bytes(), 0, "scalar fill must not broadcast the region");
+        assert!(cluster.tasks() > 0);
+        let cp = reorg::left_index(&m, 5, 3, &Matrix::filled(25, 17, 2.5)).unwrap();
+        assert_eq!(out.to_local().unwrap(), cp);
+        // Bounds errors are the canonical range error.
+        assert!(left_index_fill_blocked(&cluster, &b, 0, 49, 0, 40, 1.0).is_err());
+    }
+
+    #[test]
+    fn broadcast_join_matches_cp_for_row_and_col_vectors() {
+        let cluster = Cluster::new(3, 16);
+        let m = rand(40, 28, -2.0, 2.0, 0.7, Pdf::Uniform, 66).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        let colv = rand(40, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 67).unwrap();
+        let rowv = rand(1, 28, 0.5, 1.5, 1.0, Pdf::Uniform, 68).unwrap();
+        for op in [BinOp::Add, BinOp::Sub, BinOp::Div, BinOp::Mul] {
+            let d = binary_broadcast_blocked(&cluster, &b, &colv, op, false)
+                .unwrap()
+                .to_local()
+                .unwrap();
+            let l = elementwise::binary(&m, &colv, op).unwrap();
+            assert_eq!(d.to_row_major_vec(), l.to_row_major_vec(), "col {op:?}");
+            let d2 = binary_broadcast_blocked(&cluster, &b, &rowv, op, false)
+                .unwrap()
+                .to_local()
+                .unwrap();
+            let l2 = elementwise::binary(&m, &rowv, op).unwrap();
+            assert_eq!(d2.to_row_major_vec(), l2.to_row_major_vec(), "row {op:?}");
+        }
+        // A true mismatch raises the CP DimMismatch verbatim.
+        let bad = rand(3, 2, 0.0, 1.0, 1.0, Pdf::Uniform, 69).unwrap();
+        let cp = elementwise::binary(&m, &bad, BinOp::Add).unwrap_err().to_string();
+        let dist = binary_broadcast_blocked(&cluster, &b, &bad, BinOp::Add, false)
+            .unwrap_err()
+            .to_string();
+        assert_eq!(cp, dist);
+    }
+
+    #[test]
+    fn broadcast_join_charges_broadcast_bytes() {
+        let cluster = Cluster::new(4, 16);
+        let m = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 70).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        let v = rand(1, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 71).unwrap();
+        cluster.reset_accounting();
+        binary_broadcast_blocked(&cluster, &b, &v, BinOp::Sub, false).unwrap();
+        let charged = cluster.comm_bytes();
+        assert_eq!(charged, v.size_in_bytes() as u64 * 4, "vector bytes x workers");
+        // Resident vectors are not re-broadcast.
+        binary_broadcast_blocked(&cluster, &b, &v, BinOp::Sub, true).unwrap();
+        assert_eq!(cluster.comm_bytes(), charged);
+    }
+
+    #[test]
+    fn row_index_max_blocked_matches_cp_including_ties() {
+        let cluster = Cluster::new(3, 8);
+        // Ties across block boundaries: constant rows must pick column 1.
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for r in 0..20 {
+            rows.push((0..20).map(|c| if r == c { 2.0 } else { 1.0 }).collect());
+        }
+        rows.push(vec![1.0; 20]);
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let m = Matrix::from_rows(&refs);
+        let b = BlockedMatrix::from_local(&m, 8).unwrap();
+        let local = agg::row_index_max(&m);
+        let dist = row_index_max_blocked(&cluster, &b).unwrap();
+        assert_eq!(dist.to_row_major_vec(), local.to_row_major_vec());
+        // And on random data.
+        let m2 = rand(37, 23, -3.0, 3.0, 0.6, Pdf::Uniform, 72).unwrap();
+        let b2 = BlockedMatrix::from_local(&m2, 8).unwrap();
+        assert_eq!(
+            row_index_max_blocked(&cluster, &b2).unwrap().to_row_major_vec(),
+            agg::row_index_max(&m2).to_row_major_vec()
+        );
+        // NaN parity with the CP kernel, wherever the NaN lands: leading
+        // the row (sticks), leading a later block (must not poison that
+        // block's real maximum), or trailing.
+        let nan = f64::NAN;
+        let m3 = Matrix::from_rows(&[
+            &[nan, 5.0, 1.0, 2.0],
+            &[1.0, 2.0, nan, 9.0],
+            &[1.0, 9.0, 2.0, nan],
+            &[3.0, nan, nan, 3.0],
+        ]);
+        let b3 = BlockedMatrix::from_local(&m3, 2).unwrap();
+        assert_eq!(
+            row_index_max_blocked(&cluster, &b3).unwrap().to_row_major_vec(),
+            agg::row_index_max(&m3).to_row_major_vec()
+        );
+    }
+
+    #[test]
+    fn slice_selection_only_predicate() {
+        // Aligned origin: selection whatever the extent.
+        assert!(slice_selection_only(16, 16, 48, 0, 40));
+        // Interior trim inside one block: selection despite misalignment.
+        assert!(slice_selection_only(16, 5, 10, 3, 8));
+        // Extent crossing a source boundary from a misaligned origin.
+        assert!(!slice_selection_only(16, 5, 37, 0, 16));
+        // Interior single-block trims must not be charged as shuffles.
+        let cluster = Cluster::new(2, 16);
+        let m = rand(32, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 74).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        cluster.reset_accounting();
+        let s = slice_blocked(&cluster, &b, 5, 10, 3, 8).unwrap();
+        assert_eq!(cluster.comm_bytes(), 0, "interior trim is a narrow dependency");
+        assert_eq!(
+            s.to_local().unwrap(),
+            reorg::slice(&m, 5, 10, 3, 8).unwrap()
+        );
     }
 
     #[test]

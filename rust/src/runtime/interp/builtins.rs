@@ -231,7 +231,10 @@ pub fn call_builtin(
                 a.hint(0, "target"),
             )?)
         }
-        "rowIndexMax" => m1(agg::row_index_max(&a.matrix(0, "target")?)),
+        // Blocked operands compute per-block argmaxes on the workers and
+        // combine offsets at the driver — no collect (kmeans' assignment
+        // step stays distributed).
+        "rowIndexMax" => m1(interp.dispatch_row_index_max(a.require(0, "target")?)?),
         "trace" => one(Value::Double(agg::trace(&a.matrix(0, "target")?))),
         "cumsum" => m1(agg::cumsum(&a.matrix(0, "target")?)),
 

@@ -1,5 +1,6 @@
-//! Unified heavy-operator dispatch: every matmult, cellwise binary,
-//! transpose, and aggregate flows through one placement path that
+//! Unified heavy-operator dispatch: every matmult, cellwise binary
+//! (cell-aligned or vector-broadcast), transpose, right-/left-index, and
+//! aggregate flows through one placement path that
 //! (1) consults the compiled plan's ExecType for the operator's source
 //! position, (2) falls back to the same cost model at runtime when the
 //! shape was unknown at compile time, and (3) dynamically "recompiles"
@@ -18,6 +19,7 @@
 //! to the driver as part of the job — SystemML's SINGLE_BLOCK
 //! aggregation — rather than staying distributed.
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use crate::dml::ast::Pos;
@@ -100,6 +102,27 @@ impl<'a> Operand<'a> {
             Operand::Driver(m) => Ok(*m),
             Operand::Handle(h) => h.force(),
         }
+    }
+}
+
+/// A blocked rhs operand (broadcast-join vector or left-index patch) in
+/// driver form, plus whether its cells already live cluster-side. A
+/// forced handle's memoized driver copy behaves like any driver operand
+/// (it will be charged as a broadcast, resident = false); an unforced
+/// handle is gathered worker-side — charged as a shuffle here, and
+/// marked resident so the consuming op does not charge a second
+/// broadcast of the same bytes. (Memoizing the gathered copy on the
+/// handle is a listed refinement; today a repeated blocked rhs
+/// re-gathers.)
+fn gather_blocked_rhs<'a>(
+    cluster: &Cluster,
+    h: &'a BlockedHandle,
+) -> Result<(Cow<'a, Matrix>, bool)> {
+    if h.is_forced() {
+        Ok((Cow::Borrowed(h.force()?), false))
+    } else {
+        cluster.record_shuffle(h.size_in_bytes() as u64);
+        Ok((Cow::Owned(h.blocked()?.to_local()?), true))
     }
 }
 
@@ -427,8 +450,9 @@ impl Interpreter {
         hb: Option<&LineageRef>,
     ) -> Result<Value> {
         if a.shape() != b.shape() {
-            // Broadcasting (row/col vector operand) stays CP.
-            return Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?));
+            // Broadcasting pair (1x1 / row-vector / col-vector rhs):
+            // map-side broadcast join on DIST placements.
+            return self.binary_broadcast_operands(a, b, op, pos, ha, hb);
         }
         let est =
             estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), a.rows(), a.cols());
@@ -440,6 +464,91 @@ impl Interpreter {
                 let (ab, _) = self.acquire_operand(cluster, &a, ha, "lhs")?;
                 let (bb, _) = self.acquire_operand(cluster, &b, hb, "rhs")?;
                 let out = dist_ops::binary_blocked(cluster, &ab, &bb, op)?;
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
+        }
+    }
+
+    /// Shape-mismatched cellwise pair. A 1x1 rhs promotes to the scalar
+    /// op (blocked operands map cluster-side); a row/col-vector rhs runs
+    /// as a **map-side broadcast cellwise join** on DIST placements — the
+    /// vector is broadcast to the workers (charged to broadcast
+    /// accounting) and joined against each resident block, so
+    /// `X - mu` / `X / sigma` keep `X` distributed. Everything else falls
+    /// to the CP kernel, whose `DimMismatch` is the canonical error for
+    /// truly incompatible shapes (the DIST path raises the identical
+    /// error). Mirrors the CP kernel: only a *rhs* vector broadcasts.
+    fn binary_broadcast_operands(
+        &self,
+        a: Operand,
+        b: Operand,
+        op: BinOp,
+        pos: Option<Pos>,
+        ha: Option<&LineageRef>,
+        hb: Option<&LineageRef>,
+    ) -> Result<Value> {
+        let ((lr, lc), (rr, rc)) = (a.shape(), b.shape());
+        // 1x1 rhs promotion (the CP kernel's scalar broadcast).
+        if (rr, rc) == (1, 1) && (lr, lc) != (1, 1) {
+            let s = b.force()?.get(0, 0);
+            return match &a {
+                Operand::Handle(h) => {
+                    let cluster = h.cluster();
+                    let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, false)?;
+                    self.bind_dist_result(cluster, Arc::new(out))
+                }
+                Operand::Driver(m) => {
+                    Ok(Value::Matrix(elementwise::scalar_op(m, s, op, false)?))
+                }
+            };
+        }
+        let col = rr == lr && rc == 1;
+        let row = rc == lc && rr == 1;
+        if !(col || row) {
+            // True mismatch (or a vector lhs, which the CP kernel also
+            // rejects): the kernel raises the canonical DimMismatch.
+            return Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?));
+        }
+        let est =
+            estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), lr, lc);
+        let axis = if col { "col" } else { "row" };
+        let desc = format!("b({op:?}) bcast-{axis} ({lr}x{lc} o {rr}x{rc})");
+        match self.resolve_exec(OpKind::CellBinary, pos, est, &desc, a.is_blocked())? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let (ab, _) = self.acquire_operand(cluster, &a, ha, "lhs")?;
+                // Vector operand in driver form; a blocked vector
+                // gathers worker-side (see gather_blocked_rhs — a
+                // shuffle, never a collect). A *named* driver vector
+                // registers in the block cache like matmult's small
+                // side: a guarded hit means the workers already hold
+                // the broadcast, so a loop-invariant `mu`/`sigma` is
+                // charged once, not once per batch. Anonymous vectors
+                // (fresh expressions) skip the cache — blockifying them
+                // would cost more than it saves.
+                let (vm, v_resident): (Cow<Matrix>, bool) = match &b {
+                    Operand::Driver(m) => {
+                        let resident = match hb {
+                            Some(hint) => {
+                                let (_, outcome) =
+                                    self.cache_acquire(cluster, Some(hint), m, "rhs")?;
+                                outcome.is_hit()
+                            }
+                            None => false,
+                        };
+                        (Cow::Borrowed(*m), resident)
+                    }
+                    Operand::Handle(h) => gather_blocked_rhs(cluster, h)?,
+                };
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: BCAST {axis}-vector {rr}x{rc} joined map-side ({} B per worker)",
+                        vm.size_in_bytes()
+                    ));
+                }
+                let out =
+                    dist_ops::binary_broadcast_blocked(cluster, &ab, vm.as_ref(), op, v_resident)?;
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
@@ -544,6 +653,200 @@ impl Interpreter {
                 }
             }
             _ => Ok(Value::Matrix(reorg::transpose(a.force()?))),
+        }
+    }
+
+    // ---- indexing -----------------------------------------------------
+
+    /// Right-index dispatch (`X[r1:r2, c1:c2]`, 0-based half-open
+    /// bounds). Bounds are validated against the operand's metadata
+    /// alone, so a blocked value with out-of-range bounds raises the
+    /// *same* error as the CP path without any force or collect. On DIST
+    /// placements a blocked operand selects/trims resident blocks
+    /// (shuffle-free when the origin is block-aligned — the mini-batch
+    /// `X[beg:end,]` case); a driver operand goes through the lineage
+    /// cache with a derived `X[..]#v` entry reused after a guarded hit
+    /// on `X#v` (invalidated, like every derived entry, when `X` is
+    /// rebound or left-index-written).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_right_index_value(
+        &self,
+        v: &Value,
+        rl: usize,
+        ru: usize,
+        cl: usize,
+        cu: usize,
+        pos: Option<Pos>,
+        hint: Option<&LineageRef>,
+    ) -> Result<Value> {
+        let a = Operand::of(v)?;
+        let (r, c) = a.shape();
+        if ru > r || cu > c || rl >= ru || cl >= cu {
+            return Err(reorg::slice_range_error(rl, ru, cl, cu, r, c));
+        }
+        let est = a.size_in_bytes() + estimate::dense_size(ru - rl, cu - cl);
+        let desc = format!("rix ({}x{} -> {}x{})", r, c, ru - rl, cu - cl);
+        match self.resolve_exec(OpKind::RightIndex, pos, est, &desc, a.is_blocked())? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                if self.config.explain {
+                    let selection =
+                        dist_ops::slice_selection_only(cluster.block_size, rl, ru, cl, cu);
+                    self.emit(format!(
+                        "EXPLAIN: IDX [{}:{},{}:{}] block-range select ({})",
+                        rl + 1,
+                        ru,
+                        cl + 1,
+                        cu,
+                        if selection { "aligned, shuffle-free" } else { "realigned" }
+                    ));
+                }
+                match &a {
+                    Operand::Handle(h) => {
+                        let out = dist_ops::slice_blocked(cluster, &h.blocked()?, rl, ru, cl, cu)?;
+                        self.bind_dist_result(cluster, Arc::new(out))
+                    }
+                    Operand::Driver(m) => {
+                        let derived = hint.map(|h| {
+                            LineageRef::derived(
+                                format!("{}[{}:{},{}:{}]", h.name, rl + 1, ru, cl + 1, cu),
+                                h.version,
+                                h.deps.clone(),
+                            )
+                        });
+                        let (xb, outcome) = self.cache_acquire(cluster, hint, m, "base")?;
+                        if outcome.is_hit() {
+                            // Base guard-verified at this version: a
+                            // resident derived slice is valid.
+                            if let Some(d) = &derived {
+                                if let Some(sb) = cluster.cache().get_keyed(d) {
+                                    if self.config.explain {
+                                        self.emit(format!(
+                                            "EXPLAIN: CACHE(hit) {} base (derived slice)",
+                                            d.render()
+                                        ));
+                                    }
+                                    return self.bind_dist_result(cluster, sb);
+                                }
+                            }
+                        }
+                        let out =
+                            Arc::new(dist_ops::slice_blocked(cluster, &xb, rl, ru, cl, cu)?);
+                        if let Some(d) = &derived {
+                            cluster.cache().put_keyed(d, out.clone());
+                        }
+                        self.bind_dist_result(cluster, out)
+                    }
+                }
+            }
+            _ => Ok(Value::Matrix(reorg::slice(a.force()?, rl, ru, cl, cu)?)),
+        }
+    }
+
+    /// Left-index write dispatch (`X[r1:r2, c1:c2] = rhs`). The region
+    /// and the rhs shape are validated from metadata before anything is
+    /// forced. On DIST placements only the touched blocks of the target
+    /// are rewritten — a blocked target **stays on the cluster** (it no
+    /// longer forces to the driver); the patch ships as a cluster-wide
+    /// broadcast variable. `name` is the target variable (its lineage
+    /// key addresses the block cache for driver-resident targets).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_left_index_value(
+        &self,
+        base: &Value,
+        rhs: &Value,
+        name: &str,
+        rl: usize,
+        ru: usize,
+        cl: usize,
+        cu: usize,
+        pos: Option<Pos>,
+    ) -> Result<Value> {
+        let a = Operand::of(base)?;
+        let (r, c) = a.shape();
+        if ru > r || cu > c || rl >= ru || cl >= cu {
+            // The interpreter's range translation already guards this;
+            // direct callers get the canonical range error instead of a
+            // usize underflow below.
+            return Err(reorg::slice_range_error(rl, ru, cl, cu, r, c));
+        }
+        let region = (ru - rl, cu - cl);
+        if rhs.is_matrix() {
+            // Shape-check against metadata so a blocked rhs is never
+            // forced just to discover the mismatch.
+            let (sr, sc) = rhs.matrix_dims()?;
+            if (sr, sc) != region {
+                return Err(DmlError::rt(format!(
+                    "left-indexing: rhs is {sr}x{sc} but target region is {}x{}",
+                    region.0, region.1
+                )));
+            }
+        }
+        let est = a
+            .size_in_bytes()
+            .saturating_mul(2)
+            .saturating_add(estimate::dense_size(region.0, region.1));
+        let desc = format!("lix ({}x{} <- {}x{})", r, c, region.0, region.1);
+        match self.resolve_exec(OpKind::LeftIndex, pos, est, &desc, a.is_blocked())? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let hint = self
+                    .lineage
+                    .current(name)
+                    .map(|ver| LineageRef::var(name, ver));
+                let (tb, _) = self.acquire_operand(cluster, &a, hint.as_ref(), "target")?;
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: IDX write [{}:{},{}:{}] rewrites touched blocks only",
+                        rl + 1,
+                        ru,
+                        cl + 1,
+                        cu
+                    ));
+                }
+                let out = if rhs.is_matrix() {
+                    // The patch in driver form; a blocked rhs gathers
+                    // worker-side (see gather_blocked_rhs — a shuffle,
+                    // never a collect).
+                    let (src, src_resident): (Cow<Matrix>, bool) = match rhs {
+                        Value::Blocked(h) => gather_blocked_rhs(cluster, h)?,
+                        v => (Cow::Borrowed(v.as_matrix()?), false),
+                    };
+                    dist_ops::left_index_blocked(cluster, &tb, rl, cl, src.as_ref(), src_resident)?
+                } else {
+                    // Scalar fill: the constant rides the tasks — no
+                    // region-sized broadcast, no driver materialization.
+                    dist_ops::left_index_fill_blocked(
+                        cluster,
+                        &tb,
+                        rl,
+                        ru,
+                        cl,
+                        cu,
+                        rhs.as_double()?,
+                    )?
+                };
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => {
+                let src: Matrix = match rhs {
+                    v if v.is_matrix() => v.to_matrix()?,
+                    other => {
+                        Matrix::filled(region.0, region.1, other.as_double()?).into_dense_format()
+                    }
+                };
+                Ok(Value::Matrix(reorg::left_index(a.force()?, rl, cl, &src)?))
+            }
+        }
+    }
+
+    /// rowIndexMax dispatch: a blocked operand computes per-block row
+    /// argmaxes on the workers and combines offsets at the driver — the
+    /// rows×1 output returns with the job, not as a collect.
+    pub fn dispatch_row_index_max(&self, v: &Value) -> Result<Matrix> {
+        match v {
+            Value::Blocked(h) => dist_ops::row_index_max_blocked(h.cluster(), &h.blocked()?),
+            _ => Ok(agg::row_index_max(v.as_matrix()?)),
         }
     }
 
@@ -773,6 +1076,88 @@ mod tests {
             &expected.to_row_major_vec(),
             1e-9
         ));
+    }
+
+    #[test]
+    fn right_index_dispatch_selects_blocks_and_matches_cp() {
+        let mut config = SystemConfig::tiny_driver(16 * 1024);
+        config.block_size = 32;
+        let it = interp(config);
+        let m = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 38).unwrap();
+        let v = Value::Matrix(m.clone());
+        // Over-budget slice distributes; block-aligned origin → no comm.
+        let out = it.dispatch_right_index_value(&v, 32, 96, 0, 96, None, None).unwrap();
+        assert!(matches!(out, Value::Blocked(_)), "{out:?}");
+        let cluster = it.cluster.as_ref().unwrap();
+        assert_eq!(cluster.comm_bytes(), 0, "aligned slice is selection-only");
+        let cp_sliced = reorg::slice(&m, 32, 96, 0, 96).unwrap();
+        assert_eq!(out.as_matrix().unwrap().to_row_major_vec(), cp_sliced.to_row_major_vec());
+        // Bounds failures match the CP error and never touch the driver.
+        let collects = cluster.collect_count();
+        let err = it.dispatch_right_index_value(&out, 0, 200, 0, 96, None, None).unwrap_err();
+        let cp_err = reorg::slice(&cp_sliced, 0, 200, 0, 96).unwrap_err();
+        assert_eq!(err.to_string(), cp_err.to_string());
+        assert_eq!(cluster.collect_count(), collects, "failed slice must not collect");
+    }
+
+    #[test]
+    fn left_index_dispatch_keeps_target_blocked() {
+        let mut config = SystemConfig::tiny_driver(16 * 1024);
+        config.block_size = 32;
+        let it = interp(config);
+        let m = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 39).unwrap();
+        let base = it
+            .dispatch_right_index_value(&Value::Matrix(m.clone()), 0, 96, 0, 96, None, None)
+            .unwrap();
+        assert!(matches!(base, Value::Blocked(_)));
+        let patch = rand(4, 4, 9.0, 10.0, 1.0, Pdf::Uniform, 40).unwrap();
+        let out = it
+            .dispatch_left_index_value(
+                &base,
+                &Value::Matrix(patch.clone()),
+                "m",
+                10,
+                14,
+                10,
+                14,
+                None,
+            )
+            .unwrap();
+        assert!(matches!(out, Value::Blocked(_)), "blocked target stays blocked: {out:?}");
+        assert_eq!(it.cluster.as_ref().unwrap().collect_count(), 0);
+        let expected = reorg::left_index(&m, 10, 10, &patch).unwrap();
+        assert_eq!(out.as_matrix().unwrap().to_row_major_vec(), expected.to_row_major_vec());
+        // A mismatched rhs is rejected from metadata (no force).
+        let bad = it.dispatch_left_index_value(
+            &out,
+            &Value::Matrix(Matrix::filled(3, 3, 1.0)),
+            "m",
+            10,
+            14,
+            10,
+            14,
+            None,
+        );
+        assert!(bad.unwrap_err().to_string().contains("target region"), "shape-checked");
+    }
+
+    #[test]
+    fn broadcast_dispatch_joins_map_side_and_stays_blocked() {
+        let mut config = SystemConfig::tiny_driver(16 * 1024);
+        config.block_size = 32;
+        let it = interp(config);
+        let m = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 41).unwrap();
+        let mu = rand(1, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 42).unwrap();
+        let lv = Value::Matrix(m.clone());
+        let rv = Value::Matrix(mu.clone());
+        let before = crate::util::metrics::global().snapshot();
+        let out = it.dispatch_binary_values(&lv, &rv, BinOp::Sub, None, None, None).unwrap();
+        let d = crate::util::metrics::global().snapshot().delta(&before);
+        assert!(matches!(out, Value::Blocked(_)), "{out:?}");
+        assert!(d.broadcast_bytes > 0, "the vector must be charged as a broadcast");
+        assert_eq!(it.cluster.as_ref().unwrap().collect_count(), 0);
+        let local = elementwise::binary(&m, &mu, BinOp::Sub).unwrap();
+        assert_eq!(out.as_matrix().unwrap().to_row_major_vec(), local.to_row_major_vec());
     }
 
     #[test]

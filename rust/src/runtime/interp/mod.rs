@@ -19,7 +19,6 @@ use crate::dml::validate::Bundle;
 use crate::hop::plan::Plan;
 use crate::runtime::dist::cache::LineageRef;
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
-use crate::runtime::matrix::{reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
 pub use value::Value;
@@ -138,7 +137,7 @@ impl Interpreter {
     pub fn exec_stmt(&self, stmt: &Stmt, scope: &mut Scope, ctx: &Ctx) -> Result<()> {
         metrics::global().instructions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         match stmt {
-            Stmt::Assign { target, value, .. } => {
+            Stmt::Assign { target, value, pos } => {
                 let v = self.eval(value, scope, ctx)?;
                 match target {
                     AssignTarget::Var(name) => {
@@ -151,35 +150,29 @@ impl Interpreter {
                         scope.insert(name.clone(), v);
                     }
                     AssignTarget::Indexed { name, rows, cols } => {
+                        // Bounds and rhs shape are checked against the
+                        // target's metadata — a blocked target is never
+                        // forced; DIST placements rewrite only the
+                        // touched blocks (dispatch_left_index_value).
                         let base = scope
                             .get(name)
-                            .ok_or_else(|| DmlError::rt(format!("undefined variable '{name}'")))?
-                            .as_matrix()?
-                            .clone();
-                        let (rl, ru) = self.range_bounds(rows, base.rows(), scope, ctx)?;
-                        let (cl, cu) = self.range_bounds(cols, base.cols(), scope, ctx)?;
-                        let src = match &v {
-                            // Left-indexing mutates driver cells: a
-                            // blocked rhs is forced here.
-                            m if m.is_matrix() => m.to_matrix()?,
-                            other => {
-                                // Scalar broadcast into the region.
-                                Matrix::filled(ru - rl, cu - cl, other.as_double()?)
-                                    .into_dense_format()
-                            }
-                        };
-                        if src.shape() != (ru - rl, cu - cl) {
-                            return Err(DmlError::rt(format!(
-                                "left-indexing: rhs is {}x{} but target region is {}x{}",
-                                src.rows(),
-                                src.cols(),
-                                ru - rl,
-                                cu - cl
-                            )));
-                        }
-                        let out = reorg::left_index(&base, rl, cl, &src)?;
+                            .cloned()
+                            .ok_or_else(|| DmlError::rt(format!("undefined variable '{name}'")))?;
+                        let (br, bc) = base.matrix_dims()?;
+                        let (rl, ru) = self.range_bounds(rows, br, scope, ctx)?;
+                        let (cl, cu) = self.range_bounds(cols, bc, scope, ctx)?;
+                        let out = self.dispatch_left_index_value(
+                            &base,
+                            &v,
+                            name,
+                            rl,
+                            ru,
+                            cl,
+                            cu,
+                            Some(*pos),
+                        )?;
                         self.note_rebind(name);
-                        scope.insert(name.clone(), Value::Matrix(out));
+                        scope.insert(name.clone(), out);
                     }
                 }
             }
@@ -373,14 +366,17 @@ impl Interpreter {
                 };
                 self.binary_value_op(*op, &l, &r, pos, hints)
             }
-            Expr::Index { base, rows, cols, .. } => {
+            Expr::Index { base, rows, cols, pos } => {
                 let b = self.eval(base, scope, ctx)?;
-                let m = b.as_matrix()?;
-                let (rl, ru) = self.range_bounds(rows, m.rows(), scope, ctx)?;
-                let (cl, cu) = self.range_bounds(cols, m.cols(), scope, ctx)?;
-                let s = reorg::slice(m, rl, ru, cl, cu)?;
-                // A 1x1 slice stays a matrix in DML (as.scalar converts).
-                Ok(Value::Matrix(s))
+                // Bounds come from metadata (never forces a blocked
+                // base); the unified dispatch picks CP slice vs blocked
+                // block-range selection. A 1x1 slice stays a matrix in
+                // DML (as.scalar converts).
+                let (br, bc) = b.matrix_dims()?;
+                let (rl, ru) = self.range_bounds(rows, br, scope, ctx)?;
+                let (cl, cu) = self.range_bounds(cols, bc, scope, ctx)?;
+                let hint = self.lineage_hint(base);
+                self.dispatch_right_index_value(&b, rl, ru, cl, cu, Some(*pos), hint.as_ref())
             }
             Expr::Call { namespace, name, args, pos } => {
                 let mut results =

@@ -53,19 +53,49 @@ pub fn rev(m: &Matrix) -> Matrix {
     Matrix::Dense(out).examine_and_convert()
 }
 
+/// The canonical right-indexing range error. Shared by the CP kernel and
+/// the blocked (distributed) slice so both paths fail identically — the
+/// blocked path checks handle metadata and raises this *before* any
+/// force/collect.
+pub fn slice_range_error(
+    rl: usize,
+    ru: usize,
+    cl: usize,
+    cu: usize,
+    rows: usize,
+    cols: usize,
+) -> DmlError {
+    DmlError::rt(format!(
+        "index [{}:{},{}:{}] out of range for {rows}x{cols} matrix",
+        rl + 1,
+        ru,
+        cl + 1,
+        cu
+    ))
+}
+
+/// The canonical left-indexing bounds error (shared CP/blocked, see
+/// [`slice_range_error`]).
+pub fn left_index_range_error(
+    src_rows: usize,
+    src_cols: usize,
+    rl: usize,
+    cl: usize,
+    rows: usize,
+    cols: usize,
+) -> DmlError {
+    DmlError::rt(format!(
+        "left-index of {src_rows}x{src_cols} at ({},{}) exceeds {rows}x{cols}",
+        rl + 1,
+        cl + 1
+    ))
+}
+
 /// Right indexing X[rl:ru, cl:cu] — 0-based, half-open (callers translate
 /// DML's 1-based inclusive ranges).
 pub fn slice(m: &Matrix, rl: usize, ru: usize, cl: usize, cu: usize) -> Result<Matrix> {
     if ru > m.rows() || cu > m.cols() || rl >= ru || cl >= cu {
-        return Err(DmlError::rt(format!(
-            "index [{}:{},{}:{}] out of range for {}x{} matrix",
-            rl + 1,
-            ru,
-            cl + 1,
-            cu,
-            m.rows(),
-            m.cols()
-        )));
+        return Err(slice_range_error(rl, ru, cl, cu, m.rows(), m.cols()));
     }
     match m {
         Matrix::Dense(d) => Ok(Matrix::Dense(d.slice(rl, ru, cl, cu)?)),
@@ -93,15 +123,14 @@ pub fn slice(m: &Matrix, rl: usize, ru: usize, cl: usize, cu: usize) -> Result<M
 /// (rl, cl). DML semantics: X[rl:ru, cl:cu] = src.
 pub fn left_index(target: &Matrix, rl: usize, cl: usize, src: &Matrix) -> Result<Matrix> {
     if rl + src.rows() > target.rows() || cl + src.cols() > target.cols() {
-        return Err(DmlError::rt(format!(
-            "left-index of {}x{} at ({},{}) exceeds {}x{}",
+        return Err(left_index_range_error(
             src.rows(),
             src.cols(),
-            rl + 1,
-            cl + 1,
+            rl,
+            cl,
             target.rows(),
-            target.cols()
-        )));
+            target.cols(),
+        ));
     }
     match target {
         Matrix::Dense(d) => {

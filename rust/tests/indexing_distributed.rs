@@ -1,0 +1,431 @@
+//! Distributed indexing + broadcast cellwise integration: CP-vs-DIST
+//! parity for right-indexing (aligned / straddling / single-row / single
+//! col), left-index write-then-read, broadcast cellwise (row vector, col
+//! vector, 1x1 promotion), derived `X[..]#v` cache invalidation on
+//! left-index writes, and the zero-collect acceptance gates for the
+//! kmeans and mini-batch training loops.
+
+use std::sync::Arc;
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::dist::cache::LineageRef;
+use systemml::runtime::dist::{ops, Cluster};
+use systemml::runtime::interp::{Interpreter, Scope, Value};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::{mult, reorg, Matrix};
+use systemml::util::quickcheck::approx_eq_slice;
+
+/// Compile a script and run it on an inspectable interpreter.
+fn run_inspectable(
+    script: &Script,
+    config: &SystemConfig,
+) -> (Interpreter, Scope, systemml::hop::plan::Plan) {
+    let ctx = MLContext::with_config(config.clone());
+    let comp = ctx.compile(script).expect("compile");
+    let plan = comp.plan.clone();
+    let mut interp = Interpreter::new(comp.bundle, config.clone());
+    interp.plan = Some(Arc::new(comp.plan));
+    let inputs: Scope = script.inputs.clone().into_iter().collect();
+    let out = interp.run(inputs).expect("run");
+    (interp, out, plan)
+}
+
+fn dist_config(budget: usize, block: usize) -> SystemConfig {
+    let mut c = SystemConfig::tiny_driver(budget);
+    c.block_size = block;
+    c.num_workers = 4;
+    c
+}
+
+/// CP-vs-DIST right-index parity, byte-identical: slicing moves cells
+/// without arithmetic, so a huge-driver (CP) run and a tiny-driver run
+/// (X-sized slices placed DIST, outputs bound blocked) must agree
+/// exactly — across an aligned batch slice, a straddling region, and
+/// single-row / single-column selections.
+#[test]
+fn right_index_parity_cp_vs_dist() {
+    let src = "B1 = X[1:32, ]\n\
+               B2 = X[5:70, 3:40]\n\
+               B3 = X[7, ]\n\
+               B4 = X[, 9]";
+    let x = rand(96, 96, -1.0, 1.0, 0.4, Pdf::Uniform, 80).unwrap();
+    let run = |budget: usize| {
+        let config = dist_config(budget, 32);
+        let script = Script::from_str(src)
+            .input("X", x.clone())
+            .output("B1")
+            .output("B2")
+            .output("B3")
+            .output("B4");
+        run_inspectable(&script, &config)
+    };
+    let (cp_interp, cp_out, _) = run(512 * 1024 * 1024);
+    let (dist_interp, dist_out, _) = run(16 * 1024);
+    assert_eq!(cp_interp.cluster.as_ref().unwrap().blockify_count(), 0, "huge budget stays CP");
+    let dc = dist_interp.cluster.as_ref().unwrap();
+    assert!(dc.tasks() > 0, "tiny budget must run the slices DIST");
+    for name in ["B1", "B2", "B3", "B4"] {
+        let a = cp_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        let b = dist_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        assert_eq!(a, b, "{name} must be byte-identical across CP and DIST slicing");
+    }
+    // The aligned batch slice B1 (origin row 0/col 0 on 32-blocks) is
+    // multi-block, so it binds as a first-class blocked value.
+    assert!(
+        matches!(dist_out.get("B1"), Some(Value::Blocked(_))),
+        "aligned multi-block slice must stay blocked: {:?}",
+        dist_out.get("B1")
+    );
+}
+
+/// Bugfix gate: slicing a *blocked* value with out-of-range or reversed
+/// bounds raises exactly the CP error, decided from handle metadata —
+/// no force, no collect, no panic, no silent clamp.
+#[test]
+fn blocked_slice_bounds_errors_match_cp_without_collect() {
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 81).unwrap();
+    let cases = ["B = Z[1:200, ]", "B = Z[5:2, ]", "B = Z[200, ]", "B = Z[, 97]"];
+    for case in cases {
+        let src = format!("Z = X %*% X\n{case}");
+        // CP reference error (huge budget forces everything driver-side).
+        let cp_err = {
+            let config = dist_config(512 * 1024 * 1024, 32);
+            let ctx = MLContext::with_config(config);
+            let script = Script::from_str(src.clone()).input("X", x.clone()).output("B");
+            ctx.execute(script).unwrap_err().to_string()
+        };
+        // DIST run: Z is a live blocked value when the slice fails.
+        let config = dist_config(16 * 1024, 32);
+        let ctx = MLContext::with_config(config.clone());
+        let comp = ctx.compile(&Script::from_str(src.clone()).input("X", x.clone())).unwrap();
+        let mut interp = Interpreter::new(comp.bundle, config);
+        interp.plan = Some(Arc::new(comp.plan));
+        let inputs: Scope = [("X".to_string(), Value::Matrix(x.clone()))].into_iter().collect();
+        let dist_err = interp.run(inputs).unwrap_err().to_string();
+        assert_eq!(cp_err, dist_err, "{case}: blocked bounds error must match CP");
+        let cluster = interp.cluster.as_ref().unwrap();
+        assert_eq!(
+            cluster.collect_count(),
+            0,
+            "{case}: the failed slice must not force the blocked value"
+        );
+    }
+}
+
+/// Left-index write-then-read parity: a blocked target is rewritten
+/// block-granularly on the cluster (it stays blocked, zero collects) and
+/// reads back exactly the CP result.
+#[test]
+fn left_index_write_then_read_parity_and_stays_blocked() {
+    let src = "Y = X %*% X\n\
+               Y[3:10, 5:12] = P\n\
+               Y[50, ] = X[1, ]\n\
+               s = sum(Y)";
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 82).unwrap();
+    let p = rand(8, 8, 5.0, 6.0, 1.0, Pdf::Uniform, 83).unwrap();
+    let run = |budget: usize| {
+        let config = dist_config(budget, 32);
+        let script = Script::from_str(src)
+            .input("X", x.clone())
+            .input("P", p.clone())
+            .output("Y")
+            .output("s");
+        run_inspectable(&script, &config)
+    };
+    let (_, cp_out, _) = run(512 * 1024 * 1024);
+    let (dist_interp, dist_out, _) = run(16 * 1024);
+    let cluster = dist_interp.cluster.as_ref().unwrap();
+    // The writes and the aggregate all ran without materializing Y.
+    assert_eq!(
+        cluster.collect_count(),
+        0,
+        "left-index on a blocked target must not force it to the driver"
+    );
+    assert!(
+        matches!(dist_out.get("Y"), Some(Value::Blocked(_))),
+        "the written target must stay blocked: {:?}",
+        dist_out.get("Y")
+    );
+    // Numerics: the matmult output differs only by block-partial
+    // summation order; the written cells are byte-identical.
+    let ya = cp_out.get("Y").unwrap().as_matrix().unwrap().to_row_major_vec();
+    let yb = dist_out.get("Y").unwrap().as_matrix().unwrap().to_row_major_vec();
+    assert!(approx_eq_slice(&ya, &yb, 1e-9));
+    let (sa, sb) = (
+        cp_out.get("s").unwrap().as_double().unwrap(),
+        dist_out.get("s").unwrap().as_double().unwrap(),
+    );
+    assert!((sa - sb).abs() <= 1e-9 * sa.abs().max(1.0), "{sa} vs {sb}");
+    // The written region reads back the patch exactly.
+    let y = dist_out.get("Y").unwrap().as_matrix().unwrap().clone();
+    assert_eq!(reorg::slice(&y, 2, 10, 4, 12).unwrap().to_row_major_vec(), p.to_row_major_vec());
+}
+
+/// Broadcast cellwise parity, byte-identical: row-vector, col-vector and
+/// 1x1 rhs operands against a DIST-placed matrix produce exactly the CP
+/// cells (the join applies the same per-cell kernel).
+#[test]
+fn broadcast_cellwise_parity_row_col_and_scalar_promotion() {
+    let src = "mu = colMeans(X)\n\
+               rs = rowSums(X ^ 2) + 1\n\
+               one = matrix(3, rows=1, cols=1)\n\
+               N1 = X - mu\n\
+               N2 = X / rs\n\
+               N3 = X * one\n\
+               N4 = N1 * one";
+    let x = rand(96, 96, -1.0, 1.0, 0.8, Pdf::Uniform, 84).unwrap();
+    let run = |budget: usize| {
+        let config = dist_config(budget, 32);
+        let script = Script::from_str(src)
+            .input("X", x.clone())
+            .output("N1")
+            .output("N2")
+            .output("N3")
+            .output("N4");
+        run_inspectable(&script, &config)
+    };
+    let (cp_interp, cp_out, _) = run(512 * 1024 * 1024);
+    let (dist_interp, dist_out, _) = run(16 * 1024);
+    assert_eq!(cp_interp.cluster.as_ref().unwrap().blockify_count(), 0);
+    let dc = dist_interp.cluster.as_ref().unwrap();
+    assert!(dc.tasks() > 0, "tiny budget must distribute the broadcast pairs");
+    // N4's 1x1 rhs promotes to a scalar map over N1's *blocked* output.
+    for name in ["N1", "N2", "N3", "N4"] {
+        let a = cp_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        let b = dist_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        assert_eq!(a, b, "{name} must be byte-identical across CP and broadcast join");
+    }
+    // A vector lhs is rejected identically on both paths (the CP kernel
+    // only broadcasts rhs vectors).
+    for budget in [512 * 1024 * 1024usize, 16 * 1024] {
+        let config = dist_config(budget, 32);
+        let ctx = MLContext::with_config(config);
+        let script = Script::from_str("mu = colMeans(X)\nB = mu - X")
+            .input("X", x.clone())
+            .output("B");
+        let err = ctx.execute(script).unwrap_err().to_string();
+        assert!(err.contains("dimension mismatch"), "budget {budget}: {err}");
+    }
+}
+
+/// Derived `X[..]#v` cache entries: created by a DIST slice of a driver
+/// operand after a guarded hit on `X#v`, reused on the next identical
+/// slice, and **invalidated by a left-index write** through the existing
+/// derived-entry machinery (deps include the base variable).
+#[test]
+fn derived_slice_entries_reuse_and_invalidate_on_left_index_write() {
+    // Unit-level: the cache drops a derived slice when its base is
+    // invalidated (exactly what note_rebind does on a left-index write).
+    let cl = Cluster::with_storage(2, 16, usize::MAX);
+    let m = rand(48, 48, -1.0, 1.0, 1.0, Pdf::Uniform, 85).unwrap();
+    let hx = LineageRef::var("X", 1);
+    let (xb, _) = cl.cache().acquire(&cl, Some(&hx), &m).unwrap();
+    let d = LineageRef::derived("X[1:16,1:48]".into(), 1, vec!["X".into()]);
+    cl.cache().put_keyed(&d, Arc::new(ops::slice_blocked(&cl, &xb, 0, 16, 0, 48).unwrap()));
+    assert!(cl.cache().resident_keyed(&d), "derived slice entry must be resident");
+    cl.cache().invalidate("X");
+    assert!(!cl.cache().resident_keyed(&d), "left-index write must drop derived slices");
+
+    // Script-level: the same slice repeated hits the derived entry (no
+    // extra blockify); a left-index write invalidates it and bumps the
+    // lineage version, so the next slice re-partitions the new content.
+    let src = "B1 = X[1:32, ]\n\
+               B2 = X[1:32, ]\n\
+               X[1:2, 1:2] = matrix(7, rows=2, cols=2)\n\
+               B3 = X[1:32, ]\n\
+               s = sum(B3)";
+    let config = dist_config(16 * 1024, 32);
+    let x = rand(96, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 86).unwrap();
+    let script = Script::from_str(src).input("X", x.clone()).output("B3").output("s");
+    let (interp, out, _) = run_inspectable(&script, &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    let stats = cluster.cache().stats();
+    assert!(
+        stats.invalidations >= 1,
+        "the left-index write must invalidate X's resident entries: {stats:?}"
+    );
+    // Blockifies: X exactly once (for B1; B2 reuses the derived slice
+    // entry). The write rewrites the resident blocks — X becomes a
+    // first-class blocked value, so B3 is a block selection of the
+    // written handle, not a repartition.
+    assert_eq!(
+        cluster.blockify_count(),
+        1,
+        "derived slice reuse then blocked write (stats: {stats:?})"
+    );
+    // Correctness: B3 reflects the written cells.
+    let b3 = out.get("B3").unwrap().as_matrix().unwrap().clone();
+    assert_eq!(b3.get(0, 0), 7.0);
+    assert_eq!(b3.get(1, 1), 7.0);
+    let mut expected = reorg::left_index(&x, 0, 0, &Matrix::filled(2, 2, 7.0)).unwrap();
+    expected = reorg::slice(&expected, 0, 32, 0, 96).unwrap();
+    assert_eq!(b3.to_row_major_vec(), expected.to_row_major_vec());
+}
+
+/// Acceptance (tentpole, kmeans half): a full Lloyd's loop — slice-seeded
+/// centroids, broadcast-cellwise distance line, blocked rowIndexMax —
+/// performs **zero** driver collects across the whole run, and at most
+/// the three freshly rebound driver intermediates repartition per
+/// iteration.
+#[test]
+fn kmeans_loop_runs_zero_collects_per_iteration() {
+    const ITERS: u64 = 5;
+    let src = "C = X[1:k, ]\n\
+               N = nrow(X)\n\
+               for (it in 1:max_iter) {\n\
+                 D2 = (-2) * (X %*% t(C)) + rowSums(X^2) + t(rowSums(C^2))\n\
+                 assign = rowIndexMax(-D2)\n\
+                 members = table(seq(1, N), assign, N, k)\n\
+                 counts = colSums(members)\n\
+                 C = (t(members) %*% X) / t(max(counts, 1))\n\
+               }\n\
+               D2 = (-2) * (X %*% t(C)) + rowSums(X^2) + t(rowSums(C^2))\n\
+               wcss = sum(rowMins(D2))";
+    let mut config = dist_config(32 * 1024, 48);
+    config.explain = true;
+    let x = rand(160, 48, -1.0, 1.0, 1.0, Pdf::Uniform, 87).unwrap();
+    let script = Script::from_str(src)
+        .input("X", x)
+        .input_scalar("k", 4.0)
+        .input_scalar("max_iter", ITERS as f64)
+        .output("wcss");
+    let (interp, out, _) = run_inspectable(&script, &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    assert_eq!(
+        cluster.collect_count(),
+        0,
+        "kmeans must run zero-collect end-to-end (stats: {:?})",
+        cluster.cache().stats()
+    );
+    // ≤ 3 repartitions per iteration: t(C), the anonymous X^2, and
+    // t(members); warmup is X plus the final distance line's two.
+    assert!(
+        cluster.blockify_count() <= 3 * ITERS + 3,
+        "kmeans blockify budget exceeded: {} > {}",
+        cluster.blockify_count(),
+        3 * ITERS + 3
+    );
+    assert!(out.get("wcss").unwrap().as_double().unwrap().is_finite());
+    let explain = interp.output().join("\n");
+    assert!(explain.contains("BCAST"), "broadcast joins must surface in EXPLAIN:\n{explain}");
+    assert!(explain.contains("IDX"), "the seeding slice must surface in EXPLAIN:\n{explain}");
+}
+
+/// Acceptance (tentpole, mini-batch half): an epoch loop of block-aligned
+/// batch slices → broadcast normalize → matmult → aggregate performs
+/// zero driver collects; the only per-batch repartition is the freshly
+/// rebound weight vector, and batch slices are pure block selections
+/// reused across epochs through derived `X[..]#v` entries.
+#[test]
+fn minibatch_epoch_loop_runs_zero_collects_per_iteration() {
+    const EPOCHS: u64 = 4;
+    let src = "w = matrix(0.001, rows=ncol(X), cols=1)\n\
+               mu = colMeans(X)\n\
+               sigma = sqrt(colMeans(X^2) - mu^2) + 0.1\n\
+               nb = nrow(X) / bsize\n\
+               for (e in 1:max_iter) {\n\
+                 for (b in 1:nb) {\n\
+                   beg = (b - 1) * bsize + 1\n\
+                   end = b * bsize\n\
+                   Xb = X[beg:end, ]\n\
+                   Xn = (Xb - mu) / sigma\n\
+                   g = t(Xn) %*% (Xn %*% w)\n\
+                   w = w - (0.01 / bsize) * g\n\
+                 }\n\
+               }\n\
+               wnorm = sum(w ^ 2)";
+    let mut config = dist_config(64 * 1024, 64);
+    config.explain = true;
+    let x = rand(256, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 88).unwrap();
+    let mk = |xm: Matrix| {
+        Script::from_str(src)
+            .input("X", xm)
+            .input_scalar("bsize", 128.0)
+            .input_scalar("max_iter", EPOCHS as f64)
+            .output("w")
+            .output("wnorm")
+    };
+    let (interp, out, _) = run_inspectable(&mk(x.clone()), &config);
+    let cluster = interp.cluster.as_ref().unwrap();
+    assert_eq!(
+        cluster.collect_count(),
+        0,
+        "mini-batch epochs must run zero-collect (stats: {:?})",
+        cluster.cache().stats()
+    );
+    // 2 batches per epoch, each repartitioning only w; warmup is X, the
+    // anonymous X^2, and the one-time broadcast registration of the
+    // loop-invariant mu and sigma vectors (cache hits afterwards, so
+    // they are not re-broadcast per batch). Slices never blockify —
+    // they select resident blocks (first epoch populates the derived
+    // entries, later epochs reuse them).
+    assert!(
+        cluster.blockify_count() <= 2 * EPOCHS + 4,
+        "mini-batch blockify budget exceeded: {} > {}",
+        cluster.blockify_count(),
+        2 * EPOCHS + 4
+    );
+    let explain = interp.output().join("\n");
+    assert!(
+        explain.contains("aligned, shuffle-free"),
+        "block-aligned batch slices must be selection-only:\n{explain}"
+    );
+    assert!(explain.contains("BCAST"), "normalization must broadcast-join:\n{explain}");
+    // Numerics agree with the all-CP run at matmult tolerance.
+    let (_, cp_out, _) = run_inspectable(&mk(x), &dist_config(512 * 1024 * 1024, 64));
+    let wa = cp_out.get("w").unwrap().as_matrix().unwrap().to_row_major_vec();
+    let wb = out.get("w").unwrap().as_matrix().unwrap().to_row_major_vec();
+    assert!(approx_eq_slice(&wa, &wb, 1e-9));
+    let (na, nb) = (
+        cp_out.get("wnorm").unwrap().as_double().unwrap(),
+        out.get("wnorm").unwrap().as_double().unwrap(),
+    );
+    assert!((na - nb).abs() <= 1e-9 * na.abs().max(1.0), "{na} vs {nb}");
+}
+
+/// The distributed mini-batch primitives agree with their CP kernels on
+/// random shapes (direct backend-level property check, complementing the
+/// script-level parity above).
+#[test]
+fn property_blocked_indexing_matches_cp() {
+    let cluster = Cluster::new(3, 16);
+    for seed in 0..12u64 {
+        let r = 8 + (seed as usize * 7) % 57;
+        let c = 8 + (seed as usize * 11) % 41;
+        let m = rand(r, c, -2.0, 2.0, 0.5, Pdf::Uniform, 900 + seed).unwrap();
+        let b = systemml::runtime::dist::BlockedMatrix::from_local(&m, 16).unwrap();
+        let rl = (seed as usize * 3) % (r / 2);
+        let ru = rl + 1 + (seed as usize * 5) % (r - rl - 1).max(1);
+        let cl = (seed as usize * 2) % (c / 2);
+        let cu = cl + 1 + (seed as usize * 13) % (c - cl - 1).max(1);
+        let local = reorg::slice(&m, rl, ru, cl, cu).unwrap();
+        let dist = ops::slice_blocked(&cluster, &b, rl, ru, cl, cu)
+            .unwrap()
+            .to_local()
+            .unwrap();
+        assert_eq!(
+            dist.to_row_major_vec(),
+            local.to_row_major_vec(),
+            "seed {seed}: [{rl}:{ru},{cl}:{cu}] of {r}x{c}"
+        );
+        // Write the slice back somewhere else and compare again.
+        let wr = (r - (ru - rl)) / 2;
+        let wc = (c - (cu - cl)) / 2;
+        let l_cp = reorg::left_index(&m, wr, wc, &local).unwrap();
+        let l_dist = ops::left_index_blocked(&cluster, &b, wr, wc, &local, false)
+            .unwrap()
+            .to_local()
+            .unwrap();
+        assert_eq!(l_dist.to_row_major_vec(), l_cp.to_row_major_vec(), "seed {seed}: write");
+    }
+    // Matmult over a slice (the batch-gradient shape) stays exact to 1e-9.
+    let m = rand(64, 32, -1.0, 1.0, 1.0, Pdf::Uniform, 990).unwrap();
+    let b = systemml::runtime::dist::BlockedMatrix::from_local(&m, 16).unwrap();
+    let batch = ops::slice_blocked(&cluster, &b, 16, 48, 0, 32).unwrap();
+    let w = rand(32, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 991).unwrap();
+    let wb = systemml::runtime::dist::BlockedMatrix::from_local(&w, 16).unwrap();
+    let prod = ops::matmult_blocked(&cluster, &batch, &wb).unwrap().to_local().unwrap();
+    let expect = mult::matmult(&reorg::slice(&m, 16, 48, 0, 32).unwrap(), &w).unwrap();
+    assert!(approx_eq_slice(&prod.to_row_major_vec(), &expect.to_row_major_vec(), 1e-9));
+}
