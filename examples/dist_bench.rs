@@ -1,11 +1,12 @@
 //! Distributed benchmark, run by CI's `bench` job.
 //!
-//! Three iterative workloads — conjugate-gradient linear regression, a
-//! Lloyd's k-means loop, and a **mini-batch SGD epoch loop** (batched
-//! slice → broadcast normalize → matmult → aggregate, the paper's
-//! headline scenario) — run on synthetic data with a driver budget small
-//! enough that every X-sized operator compiles to the distributed
-//! backend. Each workload is measured twice with different iteration
+//! Four iterative workloads — conjugate-gradient linear regression, a
+//! Lloyd's k-means loop, a **mini-batch SGD epoch loop** (batched
+//! slice → broadcast normalize → matmult → aggregate), and a **LeNet
+//! training epoch** (batched slice → conv2d → max_pool → affine →
+//! backward, the paper's distributed deep-learning scenario) — run on
+//! synthetic data with a driver budget small enough that every X-sized
+//! operator compiles to the distributed backend. Each workload is measured twice with different iteration
 //! counts, so the **marginal blockify/collect cost per iteration** falls
 //! out exactly — warmup repartitions cancel. With the lineage-keyed
 //! block cache the loop-invariant feature matrix is blockified **once**
@@ -107,6 +108,40 @@ for (e in 1:max_iter) {
   }
 }
 wnorm = sum(w ^ 2)
+"#;
+
+/// LeNet-style training epoch (the paper's distributed deep-learning
+/// scenario): each 128-image mini-batch — one flattened 1x8x8 image per
+/// row — is a block-aligned slice of the resident blocked `X` spanning
+/// two 64-row blocks, and the whole conv2d → max_pool → affine →
+/// backward chain runs worker-side over row bands: conv/pool outputs
+/// bind as blocked values, the filter ships as a broadcast variable, and
+/// the filter gradient returns with the job as per-band K×CRS partials.
+/// `max_iter` counts epochs. Gate: **zero driver collects per
+/// iteration**.
+const LENET: &str = r#"
+W1 = rand(rows=4, cols=9, min=-0.1, max=0.1, seed=7)
+W2 = rand(rows=64, cols=1, min=-0.1, max=0.1, seed=8)
+nb = nrow(X) / bsize
+for (e in 1:max_iter) {
+  for (b in 1:nb) {
+    beg = (b - 1) * bsize + 1
+    end = b * bsize
+    Xb = X[beg:end, ]
+    Yb = y[beg:end, ]
+    C1 = conv2d(Xb, W1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])
+    H1 = max_pool(C1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    P = H1 %*% W2
+    dP = (P - Yb) / bsize
+    dW2 = t(H1) %*% dP
+    dH1 = dP %*% t(W2)
+    dC1 = max_pool_backward(C1, dH1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    dW1 = conv2d_backward_filter(Xb, dC1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])
+    W1 = W1 - 0.05 * dW1
+    W2 = W2 - 0.05 * dW2
+  }
+}
+wnorm2 = sum(W1 ^ 2) + sum(W2 ^ 2)
 "#;
 
 struct RunStats {
@@ -245,8 +280,11 @@ fn main() {
     // Mini-batch epochs: 400 rows / bsize 128 = 3 block-aligned batches
     // per epoch; `max_iter` counts epochs.
     let mb = bench("minibatch", MINIBATCH, 2, 10, "wnorm");
+    // LeNet epochs over the same 400x64 batch layout (1x8x8 images):
+    // conv → pool → affine → backward, gated at 0 collects/iteration.
+    let ln = bench("lenet", LENET, 2, 10, "wnorm2");
 
-    for b in [&lm, &km, &mb] {
+    for b in [&lm, &km, &mb, &ln] {
         println!(
             "{:9} blockify/iter: {:.2} cached vs {:.2} uncached | collects/iter: {:.2} | hits {} | shuffle {} B | {:.1} ms",
             b.name,
@@ -285,8 +323,10 @@ fn main() {
     // Blocked-value gate (the tentpole acceptance): every loop's updates
     // must stay distributed — zero driver collects per iteration. For
     // kmeans this requires the broadcast cellwise join and blocked
-    // rowIndexMax; for minibatch the block-range batch slice.
-    for b in [&lm, &km, &mb] {
+    // rowIndexMax; for minibatch the block-range batch slice; for lenet
+    // the blocked conv/pool operators (outputs bound blocked, filter
+    // gradients returning with the job).
+    for b in [&lm, &km, &mb, &ln] {
         if b.collects_per_iter > 1e-9 {
             eprintln!(
                 "FAIL: {} collects-per-iteration {} > 0 — blocked values are being materialized inside the loop",
@@ -304,10 +344,11 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
+        "{{\n{},\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
         json_entry(&lm),
         json_entry(&km),
         json_entry(&mb),
+        json_entry(&ln),
         pass
     );
     std::fs::write("BENCH_dist.json", &json).expect("write BENCH_dist.json");
@@ -326,7 +367,7 @@ fn main() {
         std::process::exit(1);
     }
     println!(
-        "bench gate OK: loop-invariant operands stay resident, batch slices and \
-         broadcast cellwise stay blocked, zero collects per iteration"
+        "bench gate OK: loop-invariant operands stay resident, batch slices, \
+         broadcast cellwise and conv/pool stay blocked, zero collects per iteration"
     );
 }

@@ -22,7 +22,8 @@ pub fn builtin_names() -> &'static [&'static str] {
         "diag", "outer", "table", "solve", "inv", "rev", "removeEmpty", "as.scalar", "as.matrix",
         "as.integer", "as.double", "as.logical", "print", "toString", "stop", "ifelse", "cumsum",
         "nnz", "conv2d", "conv2d_backward_filter", "conv2d_backward_data", "max_pool",
-        "max_pool_backward", "avg_pool", "bias_add", "bias_multiply", "time", "assert",
+        "max_pool_backward", "avg_pool", "avg_pool_backward", "bias_add", "bias_multiply", "time",
+        "assert",
     ]
 }
 

@@ -484,6 +484,28 @@ impl<'a> DagBuilder<'a> {
                 }
                 Some(self.intern(HopOp::Call(name.to_string()), ids.to_vec(), s, pos))
             }
+            // Channel-wise bias ops are shape-preserving (bias_add
+            // densifies; keep 1.0 conservatively for both).
+            "bias_add" | "bias_multiply" => {
+                let mut s = shape0.unwrap_or_else(ShapeInfo::unknown);
+                s.sparsity = 1.0;
+                Some(self.intern(HopOp::Call(name.to_string()), ids.to_vec(), s, pos))
+            }
+            // NN builtins: output shapes follow from the literal shape
+            // lists (the batch dimension comes from the batch operand, so
+            // `input_shape=[bsize,...]` with a dynamic N still yields a
+            // known column count). Non-literal geometry stays unknown.
+            _ if crate::runtime::conv::conv_builtin(name).is_some() => {
+                let op = crate::runtime::conv::conv_builtin(name).unwrap();
+                let shape =
+                    self.conv_call_shape(op, args, ids).unwrap_or_else(ShapeInfo::unknown);
+                // Canonicalize the input order to [batch, companion?,
+                // shape args...] so the planner's role-positional rules
+                // (blocked-ness from batch operands only) hold for
+                // named-argument call styles too.
+                let ordered = conv_ordered_ids(op, args, ids);
+                Some(self.intern(HopOp::Call(name.to_string()), ordered, shape, pos))
+            }
             // Construction with statically-known shape arguments.
             "matrix" | "rand" => {
                 let rows = named_or_positional(args, if name == "rand" { 0 } else { 1 }, "rows")
@@ -507,6 +529,86 @@ impl<'a> DagBuilder<'a> {
             }
             _ => None,
         }
+    }
+
+    /// Static output shape of one conv/pool builtin call, when its
+    /// geometry is literal. The batch dimension (rows) comes from the
+    /// batch operand's inferred shape — `input` for most operators,
+    /// `dout` for conv2d_backward_data, and the literal K for
+    /// conv2d_backward_filter (whose output is the K×CRS gradient).
+    /// All arithmetic is checked: adversarial literals yield None
+    /// (unknown), never a panic.
+    fn conv_call_shape(
+        &self,
+        op: crate::runtime::conv::ConvOpKind,
+        args: &[Arg],
+        ids: &[NodeId],
+    ) -> Option<ShapeInfo> {
+        use crate::runtime::conv::{ConvOpKind as K, ConvShape};
+        let named =
+            |nm: &str| args.iter().find(|a| a.name.as_deref() == Some(nm)).map(|a| &a.value);
+        // C,H,W from input_shape's tail; its N entry may be dynamic.
+        let ins = match named("input_shape")? {
+            Expr::List(items, _) if items.len() == 4 => items,
+            _ => return None,
+        };
+        let as_usize = |e: &Expr| literal_int(e).and_then(|v| usize::try_from(v).ok());
+        let (c, h, w) = (as_usize(&ins[1])?, as_usize(&ins[2])?, as_usize(&ins[3])?);
+        let (k, r, s) = if op.needs_filter() {
+            let fs = match named("filter_shape")? {
+                Expr::List(items, _) if items.len() == 4 => items,
+                _ => return None,
+            };
+            (as_usize(&fs[0])?, as_usize(&fs[2])?, as_usize(&fs[3])?)
+        } else {
+            let ps = match named("pool_size")? {
+                Expr::List(items, _) if !items.is_empty() => items,
+                _ => return None,
+            };
+            let r = as_usize(&ps[0])?;
+            let s = match ps.get(1) {
+                Some(e) => as_usize(e)?,
+                None => r,
+            };
+            (c, r, s)
+        };
+        // Absent stride/padding default like the runtime; present but
+        // non-literal geometry bails to unknown (never a wrong shape).
+        let pair = |nm: &str, dflt: usize| -> Option<(usize, usize)> {
+            match named(nm) {
+                None => Some((dflt, dflt)),
+                Some(Expr::List(items, _)) if !items.is_empty() => {
+                    let a = as_usize(&items[0])?;
+                    let b = match items.get(1) {
+                        Some(e) => as_usize(e)?,
+                        None => a,
+                    };
+                    Some((a, b))
+                }
+                Some(_) => None,
+            }
+        };
+        let stride = pair("stride", 1)?;
+        let pad = pair("padding", 0)?;
+        let sh = ConvShape { c, h, w, k, r, s, stride, pad };
+        let (p, q) = sh.checked_pq()?;
+        let batch_rows = |pos: usize, nm: &str| -> Option<usize> {
+            self.nodes[*ids.get(conv_arg_index(args, pos, nm)?)?].shape.rows
+        };
+        let rows = match op {
+            K::Conv2dBackwardFilter => Some(k),
+            K::Conv2dBackwardData => batch_rows(1, "dout"),
+            _ => batch_rows(0, "input"),
+        };
+        let cols = match op {
+            K::Conv2d => k.checked_mul(p)?.checked_mul(q)?,
+            K::Conv2dBackwardFilter => c.checked_mul(r)?.checked_mul(s)?,
+            K::Conv2dBackwardData | K::MaxPoolBackward | K::AvgPoolBackward => {
+                c.checked_mul(h)?.checked_mul(w)?
+            }
+            K::MaxPool | K::AvgPool => c.checked_mul(p)?.checked_mul(q)?,
+        };
+        Some(ShapeInfo { rows, cols: Some(cols), sparsity: 1.0, scalar: false })
     }
 }
 
@@ -544,6 +646,49 @@ fn literal_num(e: &Expr) -> Option<f64> {
         Expr::Num(v, _) => Some(*v),
         _ => None,
     }
+}
+
+/// Index of a conv builtin's argument: by name, else the `pos`-th
+/// unnamed argument (the interpreter's binding rule).
+fn conv_arg_index(args: &[Arg], pos: usize, name: &str) -> Option<usize> {
+    args.iter().position(|a| a.name.as_deref() == Some(name)).or_else(|| {
+        args.iter().enumerate().filter(|(_, a)| a.name.is_none()).nth(pos).map(|(i, _)| i)
+    })
+}
+
+/// Conv-call inputs in canonical role order: the batch operand first,
+/// the companion (filter or dout) second, every remaining argument in
+/// source order. The planner's blocked-ness rules index by role, so the
+/// order must not depend on whether the call used named arguments.
+fn conv_ordered_ids(
+    op: crate::runtime::conv::ConvOpKind,
+    args: &[Arg],
+    ids: &[NodeId],
+) -> Vec<NodeId> {
+    use crate::runtime::conv::ConvOpKind as K;
+    let (batch, aux) = match op {
+        K::Conv2d => (conv_arg_index(args, 0, "input"), conv_arg_index(args, 1, "filter")),
+        K::Conv2dBackwardFilter | K::MaxPoolBackward | K::AvgPoolBackward => {
+            (conv_arg_index(args, 0, "input"), conv_arg_index(args, 1, "dout"))
+        }
+        K::Conv2dBackwardData => {
+            (conv_arg_index(args, 1, "dout"), conv_arg_index(args, 0, "filter"))
+        }
+        K::MaxPool | K::AvgPool => (conv_arg_index(args, 0, "input"), None),
+    };
+    let aux = if aux == batch { None } else { aux };
+    let mut ordered = Vec::with_capacity(ids.len());
+    for i in batch.iter().chain(aux.iter()) {
+        if let Some(id) = ids.get(*i) {
+            ordered.push(*id);
+        }
+    }
+    for (i, id) in ids.iter().enumerate() {
+        if Some(i) != batch && Some(i) != aux {
+            ordered.push(*id);
+        }
+    }
+    ordered
 }
 
 /// Stable rendering of one index range (hash-consing salt).

@@ -58,6 +58,9 @@ pub enum OpKind {
     /// Left-index write (`X[r1:r2, c1:c2] = ...`): touched-block rewrite
     /// on DIST — the target stays blocked.
     LeftIndex,
+    /// NN operators (conv2d / pooling builtins): row-banded worker-side
+    /// execution on DIST, filter shipped as a broadcast variable.
+    Conv,
 }
 
 impl fmt::Display for OpKind {
@@ -69,6 +72,7 @@ impl fmt::Display for OpKind {
             OpKind::Reorg => write!(f, "reorg"),
             OpKind::RightIndex => write!(f, "rix"),
             OpKind::LeftIndex => write!(f, "lix"),
+            OpKind::Conv => write!(f, "conv"),
         }
     }
 }
@@ -219,6 +223,9 @@ impl Plan {
                     }
                     if op.kind == OpKind::RightIndex {
                         line.push_str(" IDX");
+                    }
+                    if op.kind == OpKind::Conv {
+                        line.push_str(" CONV");
                     }
                     if op.bcast {
                         line.push_str(" BCAST");
@@ -666,6 +673,11 @@ fn record_stmt(
     let mut blocked = vec![false; dag.nodes.len()];
     for n in &dag.nodes {
         let in_blocked = n.inputs.iter().any(|i| blocked[*i]);
+        // Conv/pool builtin calls are placed operators (`OpKind::Conv`).
+        let conv_op = match &n.op {
+            HopOp::Call(c) => crate::runtime::conv::conv_builtin(c),
+            _ => None,
+        };
         let kind = match &n.op {
             HopOp::Binary(AstBinOp::MatMul) | HopOp::MatMul => OpKind::MatMult,
             HopOp::Binary(_) if !n.shape.scalar => OpKind::CellBinary,
@@ -674,6 +686,7 @@ fn record_stmt(
             // Right indexing is a placed operator: block-range selection
             // on DIST, with blocked-ness flowing through it.
             HopOp::Index => OpKind::RightIndex,
+            HopOp::Call(_) if conv_op.is_some() => OpKind::Conv,
             HopOp::Read(name) => {
                 blocked[n.id] = ctx.blocked_vars.contains(name);
                 continue;
@@ -685,6 +698,12 @@ fn record_stmt(
             }
             HopOp::Call(name) if is_cellwise_unary_builtin(name) => {
                 blocked[n.id] = in_blocked;
+                continue;
+            }
+            // Channel-wise bias ops map over resident blocks at runtime
+            // (dispatch_bias_value): residency follows the matrix input.
+            HopOp::Call(name) if name == "bias_add" || name == "bias_multiply" => {
+                blocked[n.id] = n.inputs.first().map(|i| blocked[*i]).unwrap_or(false);
                 continue;
             }
             // Literals and opaque calls produce driver values.
@@ -735,8 +754,24 @@ fn record_stmt(
         // collecting a resident operand to run CP is strictly worse.
         // This is the compile-time mirror of the runtime dispatch rule.
         // For a broadcast pair only the *lhs* (the big operand) decides —
-        // the runtime never collects it to honor a CP placement.
-        let eff_blocked = if bcast {
+        // the runtime never collects it to honor a CP placement. For a
+        // conv/pool call only the *batch* operands decide (input, and the
+        // dout companion; conv2d_backward_data's batch is its second
+        // argument) — a blocked filter is gathered worker-side, it never
+        // forces the op DIST.
+        let eff_blocked = if let Some(cop) = conv_op {
+            use crate::runtime::conv::ConvOpKind as CK;
+            // The DAG lowering canonicalizes conv inputs to
+            // [batch, companion?, ...], so roles are positional here
+            // even for named-argument call styles. The companion is a
+            // second batch operand (dout) for every has_dout op except
+            // backward_data, whose companion is the filter.
+            let mut e = n.inputs.first().map(|i| blocked[*i]).unwrap_or(false);
+            if cop.has_dout() && cop != CK::Conv2dBackwardData {
+                e |= n.inputs.get(1).map(|i| blocked[*i]).unwrap_or(false);
+            }
+            e
+        } else if bcast {
             n.inputs.first().map(|i| blocked[*i]).unwrap_or(false)
         } else {
             in_blocked
@@ -746,9 +781,14 @@ fn record_stmt(
         } else {
             est.map(|e| choose_exec(e, config, kind == OpKind::MatMult))
         };
-        if exec == Some(ExecType::Dist) && kind != OpKind::Agg {
+        if exec == Some(ExecType::Dist)
+            && kind != OpKind::Agg
+            && conv_op != Some(crate::runtime::conv::ConvOpKind::Conv2dBackwardFilter)
+        {
             // Multi-block DIST outputs bind as blocked values;
             // single-block outputs return to the driver with the job.
+            // (conv2d_backward_filter's K×CRS gradient always returns
+            // with the job — it is excluded above.)
             blocked[n.id] = multi_block(n.shape, bs);
         }
         if record {
@@ -868,6 +908,11 @@ fn op_mem_estimate(dag: &HopDag, node: NodeId, kind: OpKind) -> Option<usize> {
         if s.scalar {
             continue;
         }
+        // A conv/pool call's shape-argument lists are not data operands;
+        // the matrix operands (batch, filter) must still be known.
+        if kind == OpKind::Conv && matches!(dag.nodes[*i].op, HopOp::List | HopOp::LitStr(_)) {
+            continue;
+        }
         total = total.saturating_add(s.mem_estimate()?);
     }
     total = match kind {
@@ -881,6 +926,9 @@ fn op_mem_estimate(dag: &HopDag, node: NodeId, kind: OpKind) -> Option<usize> {
             };
             total.saturating_add(estimate::dense_size(r, c))
         }
+        // Conv accounts the output twice: once for the result, once as a
+        // proxy for the im2col-expanded patch matrix built per image.
+        OpKind::Conv => total.saturating_add(n.shape.mem_estimate()?.saturating_mul(2)),
         _ => total.saturating_add(n.shape.mem_estimate()?),
     };
     Some(total)
@@ -1214,6 +1262,56 @@ mod tests {
         // The aggregate after the write is DIST because Y is still
         // blocked (zero blockify), not merely because of its estimate.
         assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist]);
+    }
+
+    #[test]
+    fn conv_builtins_are_planned_and_propagate_blockedness() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        // X (96x64) is over budget → conv2d places DIST with a CONV
+        // marker; its 96x256 output flows blocked into max_pool, whose
+        // 96x64 output flows blocked through the bias map into the
+        // aggregate.
+        let plan = plan_src(
+            "C = conv2d(X, W, input_shape=[96,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\nH = max_pool(C, input_shape=[96,4,8,8], pool_size=[2,2], stride=[2,2])\nHb = bias_add(H, bv)\ns = sum(Hb)",
+            &[
+                ("X", ShapeInfo::matrix(96, 64, 1.0)),
+                ("W", ShapeInfo::matrix(4, 9, 1.0)),
+                ("bv", ShapeInfo::matrix(4, 1, 1.0)),
+            ],
+            &config,
+        );
+        assert_eq!(
+            plan.placed_execs(OpKind::Conv),
+            vec![ExecType::Dist, ExecType::Dist],
+            "{}",
+            plan.render()
+        );
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist], "{}", plan.render());
+        assert!(plan.render().contains(" CONV"), "{}", plan.render());
+    }
+
+    #[test]
+    fn conv_backward_filter_result_is_driver_resident() {
+        let mut config = SystemConfig::tiny_driver(32 * 1024);
+        config.block_size = 32;
+        let plan = plan_src(
+            "dW = conv2d_backward_filter(X, dC, input_shape=[96,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\nY = dW %*% t(dW)\ns = sum(Y)",
+            &[
+                ("X", ShapeInfo::matrix(96, 64, 1.0)),
+                ("dC", ShapeInfo::matrix(96, 256, 1.0)),
+            ],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::Conv), vec![ExecType::Dist], "{}", plan.render());
+        // The K×CRS gradient returns with the job, so dW is *not*
+        // modeled blocked: its tiny 4x9 matmult stays CP.
+        assert_eq!(
+            plan.placed_execs(OpKind::MatMult),
+            vec![ExecType::CP],
+            "{}",
+            plan.render()
+        );
     }
 
     #[test]

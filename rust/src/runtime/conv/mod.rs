@@ -17,7 +17,73 @@ use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
 
-pub use pool::{avg_pool2d, max_pool2d, max_pool2d_backward};
+pub use pool::{avg_pool2d, avg_pool2d_backward, max_pool2d, max_pool2d_backward};
+
+/// The seven conv/pool builtins (paper §3) as one enum, shared by the
+/// interpreter's builtin routing, the planner's `OpKind::Conv`
+/// placement, and the distributed dispatch path, so the three layers can
+/// never disagree about which names are NN operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvOpKind {
+    Conv2d,
+    Conv2dBackwardFilter,
+    Conv2dBackwardData,
+    MaxPool,
+    MaxPoolBackward,
+    AvgPool,
+    AvgPoolBackward,
+}
+
+impl ConvOpKind {
+    /// The builtin name (also the EXPLAIN label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvOpKind::Conv2d => "conv2d",
+            ConvOpKind::Conv2dBackwardFilter => "conv2d_backward_filter",
+            ConvOpKind::Conv2dBackwardData => "conv2d_backward_data",
+            ConvOpKind::MaxPool => "max_pool",
+            ConvOpKind::MaxPoolBackward => "max_pool_backward",
+            ConvOpKind::AvgPool => "avg_pool",
+            ConvOpKind::AvgPoolBackward => "avg_pool_backward",
+        }
+    }
+
+    /// Does this operator take a filter argument (conv family) rather
+    /// than a pool window?
+    pub fn needs_filter(&self) -> bool {
+        matches!(
+            self,
+            ConvOpKind::Conv2d | ConvOpKind::Conv2dBackwardFilter | ConvOpKind::Conv2dBackwardData
+        )
+    }
+
+    /// Does the operator take a second batch-shaped matrix operand
+    /// (`dout`, one row per image) that must match the first operand's
+    /// batch dimension?
+    pub fn has_dout(&self) -> bool {
+        matches!(
+            self,
+            ConvOpKind::Conv2dBackwardFilter
+                | ConvOpKind::Conv2dBackwardData
+                | ConvOpKind::MaxPoolBackward
+                | ConvOpKind::AvgPoolBackward
+        )
+    }
+}
+
+/// Map a builtin name to its conv/pool operator, if it is one.
+pub fn conv_builtin(name: &str) -> Option<ConvOpKind> {
+    Some(match name {
+        "conv2d" => ConvOpKind::Conv2d,
+        "conv2d_backward_filter" => ConvOpKind::Conv2dBackwardFilter,
+        "conv2d_backward_data" => ConvOpKind::Conv2dBackwardData,
+        "max_pool" => ConvOpKind::MaxPool,
+        "max_pool_backward" => ConvOpKind::MaxPoolBackward,
+        "avg_pool" => ConvOpKind::AvgPool,
+        "avg_pool_backward" => ConvOpKind::AvgPoolBackward,
+        _ => return None,
+    })
+}
 
 /// Convolution geometry. `N` is taken from the input matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,29 +113,85 @@ impl ConvShape {
     pub fn q(&self) -> usize {
         (self.w + 2 * self.pad.1 - self.s) / self.stride.1 + 1
     }
-    /// Validate against input/filter matrix shapes.
-    pub fn validate(&self, input: &Matrix, filter: &Matrix) -> Result<usize> {
-        let n = input.rows();
-        if input.cols() != self.c * self.h * self.w {
+    /// Output spatial extent, with fully checked arithmetic (None when
+    /// the window exceeds the padded input, a stride is zero, or the
+    /// padded extent overflows). Compile-time shape inference uses this
+    /// so adversarial literal geometry can never panic the planner.
+    pub fn checked_pq(&self) -> Option<(usize, usize)> {
+        if self.stride.0 == 0 || self.stride.1 == 0 {
+            return None;
+        }
+        let ph = self.h.checked_add(self.pad.0.checked_mul(2)?)?;
+        let pw = self.w.checked_add(self.pad.1.checked_mul(2)?)?;
+        let p = ph.checked_sub(self.r)? / self.stride.0 + 1;
+        let q = pw.checked_sub(self.s)? / self.stride.1 + 1;
+        Some((p, q))
+    }
+
+    /// Validate the input's dims from metadata alone (no cell access):
+    /// the blocked dispatch path raises the byte-identical error without
+    /// forcing. `op` names the builtin in the message.
+    pub fn validate_input_dims(&self, cols: usize, op: &str) -> Result<()> {
+        if cols != self.c * self.h * self.w {
             return Err(DmlError::rt(format!(
-                "conv2d: input has {} cols, expected C*H*W = {}",
-                input.cols(),
+                "{op}: input has {cols} cols, expected C*H*W = {}",
                 self.c * self.h * self.w
             )));
         }
-        if filter.rows() != self.k || filter.cols() != self.c * self.r * self.s {
+        Ok(())
+    }
+
+    /// Validate the filter's dims from metadata alone.
+    pub fn validate_filter_dims(&self, rows: usize, cols: usize, op: &str) -> Result<()> {
+        if rows != self.k || cols != self.c * self.r * self.s {
             return Err(DmlError::rt(format!(
-                "conv2d: filter is {}x{}, expected K x C*R*S = {}x{}",
-                filter.rows(),
-                filter.cols(),
+                "{op}: filter is {rows}x{cols}, expected K x C*R*S = {}x{}",
                 self.k,
                 self.c * self.r * self.s
             )));
         }
-        if self.r > self.h + 2 * self.pad.0 || self.s > self.w + 2 * self.pad.1 {
-            return Err(DmlError::rt("conv2d: filter larger than padded input"));
+        Ok(())
+    }
+
+    /// Validate that the window fits the padded input (shared by conv and
+    /// pool operators — an oversized window would underflow `p()`/`q()`,
+    /// and a zero stride would divide by zero).
+    pub fn validate_window(&self, op: &str) -> Result<()> {
+        if self.stride.0 == 0 || self.stride.1 == 0 {
+            return Err(DmlError::rt(format!("{op}: stride must be positive")));
         }
-        Ok(n)
+        if self.checked_pq().is_none() {
+            return Err(DmlError::rt(format!("{op}: filter larger than padded input")));
+        }
+        Ok(())
+    }
+
+    /// Validate a `dout` operand's dims — including the batch dimension
+    /// against the companion operand's `n` — from metadata alone.
+    /// `cols_expected` is K·P·Q for conv backwards, C·P·Q for pool
+    /// backwards.
+    pub fn validate_dout_dims(
+        &self,
+        n: usize,
+        rows: usize,
+        cols: usize,
+        cols_expected: usize,
+        op: &str,
+    ) -> Result<()> {
+        if rows != n || cols != cols_expected {
+            return Err(DmlError::rt(format!(
+                "{op}: dout is {rows}x{cols}, expected {n}x{cols_expected}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Validate against input/filter matrix shapes.
+    pub fn validate(&self, input: &Matrix, filter: &Matrix) -> Result<usize> {
+        self.validate_input_dims(input.cols(), "conv2d")?;
+        self.validate_filter_dims(filter.rows(), filter.cols(), "conv2d")?;
+        self.validate_window("conv2d")?;
+        Ok(input.rows())
     }
 }
 
@@ -135,17 +257,11 @@ pub fn conv2d_backward_filter(
     shape: &ConvShape,
 ) -> Result<Matrix> {
     let n = input.rows();
+    shape.validate_input_dims(input.cols(), "conv2d_backward_filter")?;
+    shape.validate_window("conv2d_backward_filter")?;
     let (p, q) = (shape.p(), shape.q());
     let (k, crs) = (shape.k, shape.c * shape.r * shape.s);
-    if dout.rows() != n || dout.cols() != k * p * q {
-        return Err(DmlError::rt(format!(
-            "conv2d_backward_filter: dout is {}x{}, expected {}x{}",
-            dout.rows(),
-            dout.cols(),
-            n,
-            k * p * q
-        )));
-    }
+    shape.validate_dout_dims(n, dout.rows(), dout.cols(), k * p * q, "conv2d_backward_filter")?;
     let mut df = DenseMatrix::zeros(k, crs);
     for img in 0..n {
         let col = im2col::im2col(input, img, shape); // (PQ)×(CRS)
@@ -168,11 +284,14 @@ pub fn conv2d_backward_data(
     shape: &ConvShape,
 ) -> Result<Matrix> {
     let n = dout.rows();
+    // Full validation (the filter's column count included — an
+    // unchecked narrow filter used to index past the dcol row in
+    // col2im_accumulate and panic).
+    shape.validate_filter_dims(filter.rows(), filter.cols(), "conv2d_backward_data")?;
+    shape.validate_window("conv2d_backward_data")?;
     let (p, q) = (shape.p(), shape.q());
     let (k, chw) = (shape.k, shape.c * shape.h * shape.w);
-    if filter.rows() != k || dout.cols() != k * p * q {
-        return Err(DmlError::rt("conv2d_backward_data: shape mismatch"));
-    }
+    shape.validate_dout_dims(n, dout.rows(), dout.cols(), k * p * q, "conv2d_backward_data")?;
     let mut din = DenseMatrix::zeros(n, chw);
     for img in 0..n {
         let dd = dout_image_as_pq_by_k(dout, img, k, p * q); // (PQ)×K
@@ -209,7 +328,7 @@ fn dout_image_as_pq_by_k(dout: &Matrix, img: usize, k: usize, pq: usize) -> Dens
 
 /// bias_add: out[n, k*pq + i] = input[n, k*pq + i] + bias[k] (bias K×1).
 pub fn bias_add(input: &Matrix, bias: &Matrix, k: usize) -> Result<Matrix> {
-    if bias.rows() != k || bias.cols() != 1 {
+    if k == 0 || bias.rows() != k || bias.cols() != 1 {
         return Err(DmlError::rt(format!(
             "bias_add: bias must be {}x1, got {}x{}",
             k,
@@ -236,8 +355,13 @@ pub fn bias_add(input: &Matrix, bias: &Matrix, k: usize) -> Result<Matrix> {
 
 /// bias_multiply: channel-wise scaling, same layout as bias_add.
 pub fn bias_multiply(input: &Matrix, bias: &Matrix, k: usize) -> Result<Matrix> {
-    if bias.rows() != k || bias.cols() != 1 {
+    if k == 0 || bias.rows() != k || bias.cols() != 1 {
         return Err(DmlError::rt("bias_multiply: bias must be Kx1"));
+    }
+    if input.cols() % k != 0 {
+        // Same rule as bias_add — a silent partial scaling (the old
+        // behavior) also diverged from the blocked kernel's error.
+        return Err(DmlError::rt("bias_multiply: ncol(input) not divisible by K"));
     }
     let pq = input.cols() / k;
     let mut out = input.to_dense();

@@ -4,24 +4,21 @@
 use crate::runtime::conv::ConvShape;
 use crate::runtime::matrix::dense::DenseMatrix;
 use crate::runtime::matrix::Matrix;
-use crate::util::error::{DmlError, Result};
+use crate::util::error::Result;
 
 /// Pooling geometry: reuses [`ConvShape`] with r×s as the window and k
-/// ignored (channels preserved).
-fn validate_pool(input: &Matrix, sh: &ConvShape) -> Result<usize> {
-    if input.cols() != sh.c * sh.h * sh.w {
-        return Err(DmlError::rt(format!(
-            "pool: input has {} cols, expected C*H*W = {}",
-            input.cols(),
-            sh.c * sh.h * sh.w
-        )));
-    }
+/// ignored (channels preserved). Validation goes through the shared
+/// metadata validators so the blocked dispatch path raises byte-identical
+/// errors without forcing (`op` names the builtin in the message).
+fn validate_pool(input: &Matrix, sh: &ConvShape, op: &str) -> Result<usize> {
+    sh.validate_input_dims(input.cols(), op)?;
+    sh.validate_window(op)?;
     Ok(input.rows())
 }
 
 /// max_pool forward → N×(C·P·Q).
 pub fn max_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
-    let n = validate_pool(input, sh)?;
+    let n = validate_pool(input, sh, "max_pool")?;
     let (p, q) = (sh.p(), sh.q());
     let d = input.to_dense();
     let mut out = DenseMatrix::zeros(n, sh.c * p * q);
@@ -60,11 +57,9 @@ pub fn max_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
 
 /// max_pool backward: route dout to the argmax input cell of each window.
 pub fn max_pool2d_backward(input: &Matrix, dout: &Matrix, sh: &ConvShape) -> Result<Matrix> {
-    let n = validate_pool(input, sh)?;
+    let n = validate_pool(input, sh, "max_pool_backward")?;
     let (p, q) = (sh.p(), sh.q());
-    if dout.rows() != n || dout.cols() != sh.c * p * q {
-        return Err(DmlError::rt("max_pool backward: dout shape mismatch"));
-    }
+    sh.validate_dout_dims(n, dout.rows(), dout.cols(), sh.c * p * q, "max_pool_backward")?;
     let d = input.to_dense();
     let dd = dout.to_dense();
     let mut din = DenseMatrix::zeros(n, sh.c * sh.h * sh.w);
@@ -109,7 +104,7 @@ pub fn max_pool2d_backward(input: &Matrix, dout: &Matrix, sh: &ConvShape) -> Res
 /// avg_pool forward → N×(C·P·Q). Divides by the full window size
 /// (count_include_pad, matching SystemML).
 pub fn avg_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
-    let n = validate_pool(input, sh)?;
+    let n = validate_pool(input, sh, "avg_pool")?;
     let (p, q) = (sh.p(), sh.q());
     let d = input.to_dense();
     let win = (sh.r * sh.s) as f64;
@@ -141,6 +136,46 @@ pub fn avg_pool2d(input: &Matrix, sh: &ConvShape) -> Result<Matrix> {
         }
     }
     Ok(Matrix::Dense(out).examine_and_convert())
+}
+
+/// avg_pool backward: each output-cell gradient spreads uniformly over
+/// its window's in-bounds input cells, scaled by 1/(r·s) — the exact
+/// adjoint of the count_include_pad forward (padding cells receive their
+/// share of nothing). `input` only contributes its batch dimension, kept
+/// as an operand for symmetry with max_pool_backward (and so the same
+/// shape validation applies).
+pub fn avg_pool2d_backward(input: &Matrix, dout: &Matrix, sh: &ConvShape) -> Result<Matrix> {
+    let n = validate_pool(input, sh, "avg_pool_backward")?;
+    let (p, q) = (sh.p(), sh.q());
+    sh.validate_dout_dims(n, dout.rows(), dout.cols(), sh.c * p * q, "avg_pool_backward")?;
+    let dd = dout.to_dense();
+    let win = (sh.r * sh.s) as f64;
+    let mut din = DenseMatrix::zeros(n, sh.c * sh.h * sh.w);
+    for img in 0..n {
+        let dorow = dd.row(img);
+        let dirow = din.row_mut(img);
+        for c in 0..sh.c {
+            for op in 0..p {
+                for oq in 0..q {
+                    let g = dorow[c * p * q + op * q + oq] / win;
+                    for fr in 0..sh.r {
+                        let ih = (op * sh.stride.0 + fr) as isize - sh.pad.0 as isize;
+                        if ih < 0 || ih >= sh.h as isize {
+                            continue;
+                        }
+                        for fs in 0..sh.s {
+                            let iw = (oq * sh.stride.1 + fs) as isize - sh.pad.1 as isize;
+                            if iw < 0 || iw >= sh.w as isize {
+                                continue;
+                            }
+                            dirow[c * sh.h * sh.w + ih as usize * sh.w + iw as usize] += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Matrix::Dense(din).examine_and_convert())
 }
 
 #[cfg(test)]
@@ -222,6 +257,40 @@ mod tests {
                 grad.get(0, idx)
             );
         }
+    }
+
+    #[test]
+    fn avg_pool_backward_numeric_gradient() {
+        let x = Matrix::from_rows(&[&[
+            0.11, 0.52, 0.23, 0.94, //
+            0.35, 0.16, 0.87, 0.48, //
+            0.69, 0.21, 0.33, 0.75, //
+            0.14, 0.96, 0.57, 0.28,
+        ]]);
+        // Overlapping, padded windows so the adjoint is non-trivial.
+        let sh = ConvShape { c: 1, h: 4, w: 4, k: 1, r: 3, s: 3, stride: (2, 2), pad: (1, 1) };
+        let (p, q) = (sh.p(), sh.q());
+        let dout = Matrix::filled(1, p * q, 1.0);
+        let grad = avg_pool2d_backward(&x, &dout, &sh).unwrap();
+        let eps = 1e-6;
+        for idx in 0..16 {
+            let mut xp = x.to_dense();
+            xp.set(0, idx, xp.get(0, idx) + eps);
+            let lp: f64 =
+                avg_pool2d(&Matrix::Dense(xp.clone()), &sh).unwrap().to_row_major_vec().iter().sum();
+            xp.set(0, idx, xp.get(0, idx) - 2.0 * eps);
+            let lm: f64 =
+                avg_pool2d(&Matrix::Dense(xp), &sh).unwrap().to_row_major_vec().iter().sum();
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - grad.get(0, idx)).abs() < 1e-6,
+                "idx {idx}: numeric {num} vs {}",
+                grad.get(0, idx)
+            );
+        }
+        // Batch-dim mismatch raises the shared metadata error.
+        let bad = avg_pool2d_backward(&x, &Matrix::zeros(2, p * q), &sh).unwrap_err();
+        assert!(bad.to_string().contains("avg_pool_backward: dout is 2x"), "{bad}");
     }
 
     #[test]

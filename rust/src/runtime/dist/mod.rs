@@ -17,11 +17,15 @@
 //! the map-side broadcast join for row/col-vector operands), aggregates,
 //! transpose, and block-range right-/left-indexing, so iterative
 //! mini-batch loops (`X[beg:end,]` → normalize → matmult → aggregate)
-//! stay blocked end-to-end. The compiler's ExecType assignment (see
+//! stay blocked end-to-end — and in [`nn`], the blocked conv2d / pooling
+//! operators that run CNN training worker-side over row-partitioned
+//! mini-batches (filters broadcast, filter gradients combined as small
+//! driver-side partials). The compiler's ExecType assignment (see
 //! `hop::plan`) decides when the interpreter routes an operator here
 //! instead of CP.
 
 pub mod cache;
+pub mod nn;
 pub mod ops;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -296,13 +300,19 @@ impl Cluster {
 /// A block-partitioned matrix: an `rbrows × rbcols` grid of dense/sparse
 /// blocks of at most `block_size × block_size` cells, mirroring
 /// SystemML's binary-block RDD representation.
+///
+/// Blocks are refcounted (`Arc<Matrix>`): operators that carry blocks
+/// over unchanged — left-index writes outside the touched region,
+/// whole-block slice selection, row-band assembly on a one-column grid —
+/// share them instead of copying, so a touched-block rewrite is
+/// O(touched) in memory traffic.
 #[derive(Clone, Debug)]
 pub struct BlockedMatrix {
     rows: usize,
     cols: usize,
     block_size: usize,
     /// Blocks in row-major grid order.
-    blocks: Vec<Matrix>,
+    blocks: Vec<Arc<Matrix>>,
 }
 
 impl BlockedMatrix {
@@ -328,18 +338,35 @@ impl BlockedMatrix {
             for bc in 0..bcols {
                 let cl = bc * block_size;
                 let cu = (cl + block_size).min(cols);
-                blocks.push(reorg::slice(m, rl, ru, cl, cu)?.examine_and_convert());
+                blocks.push(Arc::new(reorg::slice(m, rl, ru, cl, cu)?.examine_and_convert()));
             }
         }
         Ok(BlockedMatrix { rows, cols, block_size, blocks })
     }
 
-    /// Assemble a blocked matrix from a pre-computed grid of blocks.
+    /// Assemble a blocked matrix from a pre-computed grid of fresh blocks.
     pub(crate) fn from_blocks(
         rows: usize,
         cols: usize,
         block_size: usize,
         blocks: Vec<Matrix>,
+    ) -> BlockedMatrix {
+        BlockedMatrix::from_shared_blocks(
+            rows,
+            cols,
+            block_size,
+            blocks.into_iter().map(Arc::new).collect(),
+        )
+    }
+
+    /// Assemble a blocked matrix from a grid that may share (`Arc` bump)
+    /// blocks with its sources — the carry-over path of left-index writes
+    /// and whole-block slice selection.
+    pub(crate) fn from_shared_blocks(
+        rows: usize,
+        cols: usize,
+        block_size: usize,
+        blocks: Vec<Arc<Matrix>>,
     ) -> BlockedMatrix {
         debug_assert_eq!(
             blocks.len(),
@@ -376,7 +403,20 @@ impl BlockedMatrix {
 
     /// Borrow the block at grid position (br, bc).
     pub fn block(&self, br: usize, bc: usize) -> &Matrix {
-        &self.blocks[br * self.block_cols() + bc]
+        self.blocks[br * self.block_cols() + bc].as_ref()
+    }
+
+    /// Strong-count of the block at (br, bc) — test hook observing
+    /// carry-over sharing.
+    #[cfg(test)]
+    pub(crate) fn block_refcount(&self, br: usize, bc: usize) -> usize {
+        Arc::strong_count(&self.blocks[br * self.block_cols() + bc])
+    }
+
+    /// Share the block at grid position (br, bc) — an `Arc` bump, used by
+    /// operators that carry blocks over unchanged.
+    pub(crate) fn shared_block(&self, br: usize, bc: usize) -> Arc<Matrix> {
+        self.blocks[br * self.block_cols() + bc].clone()
     }
 
     /// Exact number of non-zeros across all blocks.
@@ -431,6 +471,11 @@ pub struct HandleInner {
     blocks: Mutex<Option<Arc<BlockedMatrix>>>,
     /// Memoized driver materialization (the lazy collect).
     forced: OnceLock<Matrix>,
+    /// Memoized worker-side gather (rhs use: broadcast-join vector,
+    /// left-index patch, conv filter). Charged as one shuffle on first
+    /// use — never a collect — so a loop-invariant blocked rhs is
+    /// gathered once per loop, not once per op.
+    gathered: OnceLock<Matrix>,
     /// Serializes the first force so concurrent parfor readers perform
     /// exactly one driver collect.
     force_lock: Mutex<()>,
@@ -520,6 +565,7 @@ impl BlockedHandle {
             seq: cluster.live_seq.fetch_add(1, Ordering::Relaxed),
             blocks: Mutex::new(Some(blocked)),
             forced: OnceLock::new(),
+            gathered: OnceLock::new(),
             force_lock: Mutex::new(()),
             cluster: cluster.clone(),
         });
@@ -619,6 +665,38 @@ impl BlockedHandle {
     pub fn spill(&self) -> bool {
         self.inner.spill(&self.inner.cluster)
     }
+
+    /// Driver-format copy of this value for *rhs* use on the workers
+    /// (broadcast-join vector, left-index patch, conv filter): gathered
+    /// worker-side — charged as **one shuffle** of the value's bytes, not
+    /// a collect — and memoized on the handle, so a loop-invariant
+    /// blocked rhs is gathered once per loop rather than once per op
+    /// (the ROADMAP `gather_blocked_rhs` refinement). A handle whose
+    /// driver copy already exists (forced) serves that copy without any
+    /// charge.
+    pub fn gathered(&self) -> Result<&Matrix> {
+        if let Some(m) = self.inner.gathered.get() {
+            return Ok(m);
+        }
+        let _g = self.inner.force_lock.lock().unwrap();
+        if self.inner.gathered.get().is_none() {
+            let m = match self.inner.forced.get() {
+                // The lazy collect already materialized a driver copy:
+                // reuse it, nothing moves.
+                Some(m) => m.clone(),
+                None => {
+                    let resident = self.inner.blocks.lock().unwrap().clone();
+                    let b = resident.ok_or_else(|| {
+                        DmlError::rt("blocked value lost both its blocks and its driver copy")
+                    })?;
+                    self.inner.cluster.record_shuffle(self.inner.bytes as u64);
+                    b.to_local()?
+                }
+            };
+            let _ = self.inner.gathered.set(m);
+        }
+        Ok(self.inner.gathered.get().unwrap())
+    }
 }
 
 #[cfg(test)]
@@ -703,6 +781,36 @@ mod tests {
         // Dropping the last handle releases the charge.
         drop(h);
         assert_eq!(cluster.live_blocked_bytes(), 0);
+    }
+
+    #[test]
+    fn gathered_rhs_is_memoized_and_never_a_collect() {
+        let cluster = Arc::new(Cluster::new(2, 16));
+        let m = rand(40, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 7).unwrap();
+        let h = BlockedHandle::new(
+            cluster.clone(),
+            Arc::new(cluster.blockify(&m).unwrap()),
+        );
+        cluster.reset_accounting();
+        assert_eq!(*h.gathered().unwrap(), m);
+        let first = cluster.comm_bytes();
+        assert!(first > 0, "first gather is charged as a shuffle");
+        // Repeated gathers reuse the memoized copy: no new traffic, and
+        // never a collect.
+        assert_eq!(*h.gathered().unwrap(), m);
+        assert_eq!(*h.gathered().unwrap(), m);
+        assert_eq!(cluster.comm_bytes(), first, "gather must be memoized");
+        assert_eq!(cluster.collect_count(), 0);
+        assert!(!h.is_forced(), "a gather is not a force");
+        // An already-forced handle gathers from the driver copy for free.
+        let h2 = BlockedHandle::new(
+            cluster.clone(),
+            Arc::new(cluster.blockify(&m).unwrap()),
+        );
+        h2.force().unwrap();
+        cluster.reset_accounting();
+        assert_eq!(*h2.gathered().unwrap(), m);
+        assert_eq!(cluster.comm_bytes(), 0, "forced handles gather for free");
     }
 
     #[test]

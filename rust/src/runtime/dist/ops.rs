@@ -17,6 +17,8 @@
 //! Spark's cached-RDD + reused-broadcast behavior. The [`Residency`]
 //! flags carry that information from the dispatch layer.
 
+use std::sync::Arc;
+
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::dense::DenseMatrix;
@@ -436,32 +438,33 @@ pub fn slice_blocked(
             blocks.push(out);
         }
     }
-    Ok(BlockedMatrix::from_blocks(orows, ocols, bs, blocks))
+    Ok(BlockedMatrix::from_shared_blocks(orows, ocols, bs, blocks))
 }
 
 /// Assemble the cells of global region [grl,gru)×[gcl,gcu) from the
 /// source blocks covering it (one block when aligned; up to four when the
-/// region straddles block boundaries).
+/// region straddles block boundaries). Whole-block selection shares the
+/// source block (an `Arc` bump, no copy).
 fn gather_region(
     m: &BlockedMatrix,
     grl: usize,
     gru: usize,
     gcl: usize,
     gcu: usize,
-) -> Result<Matrix> {
+) -> Result<Arc<Matrix>> {
     let bs = m.block_size();
     let (bi0, bi1) = (grl / bs, (gru - 1) / bs);
     let (bj0, bj1) = (gcl / bs, (gcu - 1) / bs);
     if bi0 == bi1 && bj0 == bj1 {
-        // Single source block: whole-block selection (already in its
-        // preferred format — no nnz rescan) or an edge trim.
+        // Single source block: whole-block selection (shared — no copy,
+        // no nnz rescan) or an edge trim.
         let b = m.block(bi0, bj0);
         let (r0, c0) = (grl - bi0 * bs, gcl - bj0 * bs);
         let (r1, c1) = (gru - bi0 * bs, gcu - bj0 * bs);
         if (r0, c0) == (0, 0) && (r1, c1) == b.shape() {
-            return Ok(b.clone());
+            return Ok(m.shared_block(bi0, bj0));
         }
-        return Ok(reorg::slice(b, r0, r1, c0, c1)?.examine_and_convert());
+        return Ok(Arc::new(reorg::slice(b, r0, r1, c0, c1)?.examine_and_convert()));
     }
     // Straddling region: gather from each overlapping source block.
     let mut out = DenseMatrix::zeros(gru - grl, gcu - gcl);
@@ -480,7 +483,7 @@ fn gather_region(
             out.assign(br0 - grl, bc0 - gcl, &piece.to_dense())?;
         }
     }
-    Ok(Matrix::Dense(out).examine_and_convert())
+    Ok(Arc::new(Matrix::Dense(out).examine_and_convert()))
 }
 
 /// Blocked left-index write `X[rl.., cl..] = src`: only the blocks the
@@ -555,18 +558,18 @@ fn rewrite_touched_blocks(
     let (brows, bcols) = (target.block_rows(), target.block_cols());
     let (bi0, bi1) = (rl / bs, (ru - 1) / bs);
     let (bj0, bj1) = (cl / bs, (cu - 1) / bs);
-    // One pass over the grid: untouched blocks are carried over (a
-    // by-value copy in this simulation — refcounted sharing is a listed
-    // refinement); touched blocks are rewritten directly, never cloned
+    // One pass over the grid: untouched blocks are *shared* with the
+    // source grid (an `Arc` bump — the write is O(touched) in memory
+    // traffic); touched blocks are rewritten directly, never cloned
     // first.
-    let mut blocks: Vec<Matrix> = Vec::with_capacity(brows * bcols);
+    let mut blocks: Vec<Arc<Matrix>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
             let b = target.block(i, j);
             let touched =
                 (bi0..=bi1).contains(&i) && (bj0..=bj1).contains(&j);
             if !touched {
-                blocks.push(b.clone());
+                blocks.push(target.shared_block(i, j));
                 continue;
             }
             let gr0 = (i * bs).max(rl);
@@ -574,16 +577,16 @@ fn rewrite_touched_blocks(
             let gc0 = (j * bs).max(cl);
             let gc1 = (j * bs + b.cols()).min(cu);
             if gr0 >= gr1 || gc0 >= gc1 {
-                blocks.push(b.clone());
+                blocks.push(target.shared_block(i, j));
                 continue;
             }
             let patch = patch_for(gr0, gr1, gc0, gc1)?;
             let rewritten = reorg::left_index(b, gr0 - i * bs, gc0 - j * bs, &patch)?;
             cluster.record_task(cluster.worker_for(i, j), ((gr1 - gr0) * (gc1 - gc0)) as u64);
-            blocks.push(rewritten.examine_and_convert());
+            blocks.push(Arc::new(rewritten.examine_and_convert()));
         }
     }
-    Ok(BlockedMatrix::from_blocks(target.rows(), target.cols(), bs, blocks))
+    Ok(BlockedMatrix::from_shared_blocks(target.rows(), target.cols(), bs, blocks))
 }
 
 // ---- broadcast cellwise -------------------------------------------------
@@ -848,6 +851,25 @@ mod tests {
         let dist =
             left_index_blocked(&cluster, &b, 45, 45, &patch, false).unwrap_err().to_string();
         assert_eq!(cp, dist);
+    }
+
+    #[test]
+    fn left_index_shares_untouched_blocks_by_refcount() {
+        let cluster = Cluster::new(2, 16);
+        let m = rand(48, 48, -1.0, 1.0, 1.0, Pdf::Uniform, 75).unwrap();
+        let b = BlockedMatrix::from_local(&m, 16).unwrap();
+        let patch = rand(4, 4, 5.0, 6.0, 1.0, Pdf::Uniform, 76).unwrap();
+        // Touches only block (0,0) of the 3x3 grid.
+        let out = left_index_blocked(&cluster, &b, 2, 2, &patch, false).unwrap();
+        // Untouched blocks are shared with the source grid (refcount 2),
+        // the rewritten block is fresh (refcount 1).
+        assert_eq!(out.block_refcount(0, 0), 1, "touched block is rewritten");
+        for (i, j) in [(0, 1), (0, 2), (1, 0), (1, 1), (2, 2)] {
+            assert_eq!(out.block_refcount(i, j), 2, "block ({i},{j}) must be shared");
+        }
+        // Whole-block slice selection shares too.
+        let s = slice_blocked(&cluster, &b, 16, 48, 16, 48).unwrap();
+        assert_eq!(s.block_refcount(0, 0), 3, "selected block shared by b, out and s");
     }
 
     #[test]

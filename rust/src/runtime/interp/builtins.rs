@@ -2,7 +2,7 @@
 //! standard DML builtin library).
 
 use crate::dml::ast::Pos;
-use crate::runtime::conv::{self, ConvShape};
+use crate::runtime::conv::{self, ConvOpKind, ConvShape};
 use crate::runtime::dist::cache::LineageRef;
 use crate::runtime::interp::{Interpreter, Value};
 use crate::runtime::matrix::agg::{self, AggOp};
@@ -103,12 +103,22 @@ fn conv_shape(a: &Args, need_filter: bool) -> Result<ConvShape> {
         }
         (fs[0], fs[2], fs[3])
     } else {
-        // pooling: pool_size=[r,s]
+        // pooling: pool_size=[r,s] (a single entry means a square window)
         let ps = a.shape_list("pool_size")?;
-        (c, ps[0], ps[1])
+        match ps.as_slice() {
+            [r] => (c, *r, *r),
+            [r, s, ..] => (c, *r, *s),
+            [] => {
+                return Err(DmlError::rt(format!("{}: pool_size must be [r,s]", a.name)))
+            }
+        }
     };
     let stride = a.shape_list("stride").unwrap_or_else(|_| vec![1, 1]);
     let padding = a.shape_list("padding").unwrap_or_else(|_| vec![0, 0]);
+    let (s0, p0) = match (stride.first(), padding.first()) {
+        (Some(s0), Some(p0)) => (*s0, *p0),
+        _ => return Err(DmlError::rt(format!("{}: stride/padding must be non-empty", a.name))),
+    };
     Ok(ConvShape {
         c,
         h,
@@ -116,8 +126,8 @@ fn conv_shape(a: &Args, need_filter: bool) -> Result<ConvShape> {
         k,
         r,
         s,
-        stride: (stride[0], stride.get(1).copied().unwrap_or(stride[0])),
-        pad: (padding[0], padding.get(1).copied().unwrap_or(padding[0])),
+        stride: (s0, stride.get(1).copied().unwrap_or(s0)),
+        pad: (p0, padding.get(1).copied().unwrap_or(p0)),
     })
 }
 
@@ -434,55 +444,55 @@ pub fn call_builtin(
             one(Value::Int(ns))
         }
 
-        // ---- NN builtins (paper §3) ------------------------------------
-        "conv2d" => {
-            let x = a.matrix(0, "input")?;
-            let w = a.matrix(1, "filter")?;
-            let sh = conv_shape(&a, true)?;
-            if let Some(accel) = &interp.accel {
-                if let Some(out) = accel.try_conv2d(&x, &w, &sh)? {
-                    return m1(out);
+        // ---- NN builtins (paper §3): plan-aware conv/pool dispatch -----
+        // The seven conv/pool builtins flow through the unified
+        // `dispatch_conv` value path: shapes are validated from handle
+        // metadata before any force, blocked batches run worker-side over
+        // row bands with the filter broadcast, outputs bind blocked, and
+        // conv2d_backward_filter's small gradient returns with the job.
+        _ if conv::conv_builtin(name).is_some() => {
+            let op = conv::conv_builtin(name).unwrap();
+            let sh = conv_shape(&a, op.needs_filter())?;
+            // Operand roles: the batch-shaped operand leads; the filter
+            // (or the companion dout batch) rides as aux. Note
+            // conv2d_backward_data's batch operand is its *dout*
+            // (second argument).
+            let (x, hx, aux, haux) = match op {
+                ConvOpKind::Conv2d => (
+                    a.require(0, "input")?,
+                    a.hint(0, "input"),
+                    Some(a.require(1, "filter")?),
+                    a.hint(1, "filter"),
+                ),
+                ConvOpKind::Conv2dBackwardData => (
+                    a.require(1, "dout")?,
+                    a.hint(1, "dout"),
+                    Some(a.require(0, "filter")?),
+                    a.hint(0, "filter"),
+                ),
+                ConvOpKind::Conv2dBackwardFilter
+                | ConvOpKind::MaxPoolBackward
+                | ConvOpKind::AvgPoolBackward => (
+                    a.require(0, "input")?,
+                    a.hint(0, "input"),
+                    Some(a.require(1, "dout")?),
+                    a.hint(1, "dout"),
+                ),
+                ConvOpKind::MaxPool | ConvOpKind::AvgPool => {
+                    (a.require(0, "input")?, a.hint(0, "input"), None, None)
                 }
-            }
-            m1(conv::conv2d(&x, &w, &sh)?)
-        }
-        "conv2d_backward_filter" => {
-            let x = a.matrix(0, "input")?;
-            let dout = a.matrix(1, "dout")?;
-            let sh = conv_shape(&a, true)?;
-            m1(conv::conv2d_backward_filter(&x, &dout, &sh)?)
-        }
-        "conv2d_backward_data" => {
-            let w = a.matrix(0, "filter")?;
-            let dout = a.matrix(1, "dout")?;
-            let sh = conv_shape(&a, true)?;
-            m1(conv::conv2d_backward_data(&w, &dout, &sh)?)
-        }
-        "max_pool" => {
-            let x = a.matrix(0, "input")?;
-            let sh = conv_shape(&a, false)?;
-            m1(conv::max_pool2d(&x, &sh)?)
-        }
-        "max_pool_backward" => {
-            let x = a.matrix(0, "input")?;
-            let dout = a.matrix(1, "dout")?;
-            let sh = conv_shape(&a, false)?;
-            m1(conv::max_pool2d_backward(&x, &dout, &sh)?)
-        }
-        "avg_pool" => {
-            let x = a.matrix(0, "input")?;
-            let sh = conv_shape(&a, false)?;
-            m1(conv::avg_pool2d(&x, &sh)?)
+            };
+            one(interp.dispatch_conv_value(op, x, aux, &sh, Some(pos), hx, haux)?)
         }
         "bias_add" => {
-            let x = a.matrix(0, "input")?;
-            let b = a.matrix(1, "bias")?;
-            m1(conv::bias_add(&x, &b, b.rows())?)
+            let x = a.require(0, "input")?;
+            let b = a.require(1, "bias")?;
+            one(interp.dispatch_bias_value(x, b, false, a.hint(1, "bias"))?)
         }
         "bias_multiply" => {
-            let x = a.matrix(0, "input")?;
-            let b = a.matrix(1, "bias")?;
-            m1(conv::bias_multiply(&x, &b, b.rows())?)
+            let x = a.require(0, "input")?;
+            let b = a.require(1, "bias")?;
+            one(interp.dispatch_bias_value(x, b, true, a.hint(1, "bias"))?)
         }
 
         other => Err(DmlError::rt(format!("unknown builtin '{other}'"))),

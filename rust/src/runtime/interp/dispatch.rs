@@ -26,7 +26,9 @@ use crate::dml::ast::Pos;
 use crate::hop::dag::agg_name;
 use crate::hop::estimate;
 use crate::hop::plan::{choose_exec, ExecType, OpKind};
+use crate::runtime::conv::{self, ConvOpKind, ConvShape};
 use crate::runtime::dist::cache::{CacheOutcome, Guard, LineageRef};
+use crate::runtime::dist::nn as dist_nn;
 use crate::runtime::dist::ops as dist_ops;
 use crate::runtime::dist::{BlockedHandle, BlockedMatrix, Cluster};
 use crate::runtime::interp::{Interpreter, Value};
@@ -105,23 +107,32 @@ impl<'a> Operand<'a> {
     }
 }
 
-/// A blocked rhs operand (broadcast-join vector or left-index patch) in
-/// driver form, plus whether its cells already live cluster-side. A
-/// forced handle's memoized driver copy behaves like any driver operand
-/// (it will be charged as a broadcast, resident = false); an unforced
-/// handle is gathered worker-side — charged as a shuffle here, and
-/// marked resident so the consuming op does not charge a second
-/// broadcast of the same bytes. (Memoizing the gathered copy on the
-/// handle is a listed refinement; today a repeated blocked rhs
-/// re-gathers.)
-fn gather_blocked_rhs<'a>(
-    cluster: &Cluster,
-    h: &'a BlockedHandle,
-) -> Result<(Cow<'a, Matrix>, bool)> {
+/// Blocked rhs operands up to this size memoize their worker-side
+/// gathered copy on the handle (vectors, filters, bias terms — the
+/// loop-invariant case worth caching). Larger operands (batch-sized
+/// left-index patches) gather transiently instead: pinning a second
+/// full materialization on a live handle would double its footprint
+/// outside any storage accounting.
+const GATHER_MEMO_MAX_BYTES: usize = 4 << 20;
+
+/// A blocked rhs operand (broadcast-join vector, left-index patch, conv
+/// filter) in driver form, plus whether its cells already live
+/// cluster-side. A forced handle's memoized driver copy behaves like any
+/// driver operand (it will be charged as a broadcast, resident = false);
+/// an unforced handle is gathered worker-side — charged as a shuffle,
+/// never a collect — through the handle's **memoized** gather
+/// ([`BlockedHandle::gathered`]) when small (one shuffle on first use,
+/// free afterwards: a loop-invariant blocked rhs gathers once per loop,
+/// not once per op), or transiently when larger than
+/// [`GATHER_MEMO_MAX_BYTES`]. Either way it is marked resident so the
+/// consuming op does not charge a second broadcast of the same bytes.
+fn gather_blocked_rhs(h: &BlockedHandle) -> Result<(Cow<'_, Matrix>, bool)> {
     if h.is_forced() {
         Ok((Cow::Borrowed(h.force()?), false))
+    } else if h.size_in_bytes() <= GATHER_MEMO_MAX_BYTES {
+        Ok((Cow::Borrowed(h.gathered()?), true))
     } else {
-        cluster.record_shuffle(h.size_in_bytes() as u64);
+        h.cluster().record_shuffle(h.size_in_bytes() as u64);
         Ok((Cow::Owned(h.blocked()?.to_local()?), true))
     }
 }
@@ -539,7 +550,7 @@ impl Interpreter {
                         };
                         (Cow::Borrowed(*m), resident)
                     }
-                    Operand::Handle(h) => gather_blocked_rhs(cluster, h)?,
+                    Operand::Handle(h) => gather_blocked_rhs(h)?,
                 };
                 if self.config.explain {
                     self.emit(format!(
@@ -809,7 +820,7 @@ impl Interpreter {
                     // worker-side (see gather_blocked_rhs — a shuffle,
                     // never a collect).
                     let (src, src_resident): (Cow<Matrix>, bool) = match rhs {
-                        Value::Blocked(h) => gather_blocked_rhs(cluster, h)?,
+                        Value::Blocked(h) => gather_blocked_rhs(h)?,
                         v => (Cow::Borrowed(v.as_matrix()?), false),
                     };
                     dist_ops::left_index_blocked(cluster, &tb, rl, cl, src.as_ref(), src_resident)?
@@ -847,6 +858,269 @@ impl Interpreter {
         match v {
             Value::Blocked(h) => dist_ops::row_index_max_blocked(h.cluster(), &h.blocked()?),
             _ => Ok(agg::row_index_max(v.as_matrix()?)),
+        }
+    }
+
+    // ---- NN operators (conv2d / pooling) ------------------------------
+
+    /// A conv filter (or bias) rhs operand in driver form plus whether
+    /// its cells already live on the workers. A *named* driver filter
+    /// registers in the block cache like matmult's broadcast side — a
+    /// guarded hit means the workers still hold the broadcast, so a
+    /// loop-invariant filter is charged once per loop, not once per
+    /// batch. A blocked filter gathers worker-side through the handle's
+    /// memoized gather (a shuffle, never a collect).
+    fn conv_rhs_operand<'v>(
+        &self,
+        cluster: &Cluster,
+        v: &'v Value,
+        hint: Option<&LineageRef>,
+    ) -> Result<(Cow<'v, Matrix>, bool)> {
+        match v {
+            Value::Blocked(h) => gather_blocked_rhs(h),
+            v => {
+                let m = v.as_matrix()?;
+                let resident = match hint {
+                    Some(hint) => {
+                        let (_, outcome) = self.cache_acquire(cluster, Some(hint), m, "filter")?;
+                        outcome.is_hit()
+                    }
+                    None => false,
+                };
+                Ok((Cow::Borrowed(m), resident))
+            }
+        }
+    }
+
+    /// Unified dispatch for the seven conv/pool builtins (paper §3's NN
+    /// functions). Every operand's dims are validated from **metadata**
+    /// before anything is forced — through the same validators the CP
+    /// kernels use, so a blocked operand with bad geometry (including a
+    /// mismatched `dout` batch dimension, which the CP kernels used to
+    /// discover only after a force) raises the byte-identical CP error
+    /// with zero collects. On DIST placements the batch runs worker-side
+    /// over row bands (`runtime::dist::nn`) with the filter shipped as a
+    /// broadcast variable; conv/pool outputs bind as blocked values, and
+    /// `conv2d_backward_filter` returns its small K×CRS gradient with
+    /// the job — like an aggregate, never a collect.
+    ///
+    /// Operand roles: `x` is the batch-shaped operand (`input`, or
+    /// `dout` for conv2d_backward_data); `aux` is the filter
+    /// (broadcast rhs) or the companion `dout` batch, per
+    /// [`ConvOpKind::has_dout`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_conv_value(
+        &self,
+        op: ConvOpKind,
+        x: &Value,
+        aux: Option<&Value>,
+        sh: &ConvShape,
+        pos: Option<Pos>,
+        hx: Option<&LineageRef>,
+        haux: Option<&LineageRef>,
+    ) -> Result<Value> {
+        let a = Operand::of(x)?;
+        let aux_op = aux.map(Operand::of).transpose()?;
+        let name = op.name();
+        if aux_op.is_none() && !matches!(op, ConvOpKind::MaxPool | ConvOpKind::AvgPool) {
+            return Err(DmlError::rt(format!("{name}: missing matrix operand")));
+        }
+        let (n, xc) = a.shape();
+        let (k, crs, chw) = (sh.k, sh.c * sh.r * sh.s, sh.c * sh.h * sh.w);
+        // Metadata validation in the CP kernels' exact order (shared
+        // validators → byte-identical messages, no force).
+        match op {
+            ConvOpKind::Conv2d => {
+                sh.validate_input_dims(xc, name)?;
+                let (fr, fc) = aux_op.as_ref().map(|o| o.shape()).unwrap_or((0, 0));
+                sh.validate_filter_dims(fr, fc, name)?;
+                sh.validate_window(name)?;
+            }
+            ConvOpKind::Conv2dBackwardFilter => {
+                sh.validate_input_dims(xc, name)?;
+                sh.validate_window(name)?;
+                let (dr, dc) = aux_op.as_ref().map(|o| o.shape()).unwrap_or((0, 0));
+                sh.validate_dout_dims(n, dr, dc, k * sh.p() * sh.q(), name)?;
+            }
+            ConvOpKind::Conv2dBackwardData => {
+                // `x` is dout here; `aux` is the filter.
+                let (fr, fc) = aux_op.as_ref().map(|o| o.shape()).unwrap_or((0, 0));
+                sh.validate_filter_dims(fr, fc, name)?;
+                sh.validate_window(name)?;
+                sh.validate_dout_dims(n, n, xc, k * sh.p() * sh.q(), name)?;
+            }
+            ConvOpKind::MaxPool | ConvOpKind::AvgPool => {
+                sh.validate_input_dims(xc, name)?;
+                sh.validate_window(name)?;
+            }
+            ConvOpKind::MaxPoolBackward | ConvOpKind::AvgPoolBackward => {
+                sh.validate_input_dims(xc, name)?;
+                sh.validate_window(name)?;
+                let (dr, dc) = aux_op.as_ref().map(|o| o.shape()).unwrap_or((0, 0));
+                sh.validate_dout_dims(n, dr, dc, sh.c * sh.p() * sh.q(), name)?;
+            }
+        }
+        let (p, q) = (sh.p(), sh.q()); // safe: the window was validated
+        // Accelerator first for conv2d forward, like matmult: compiled
+        // artifacts only serve driver-resident operands.
+        if op == ConvOpKind::Conv2d {
+            if let (Operand::Driver(xm), Some(Operand::Driver(fm)), Some(accel)) =
+                (&a, &aux_op, &self.accel)
+            {
+                if let Some(out) = accel.try_conv2d(xm, fm, sh)? {
+                    return Ok(Value::Matrix(out));
+                }
+            }
+        }
+        let out_dims = match op {
+            ConvOpKind::Conv2d => (n, k * p * q),
+            ConvOpKind::Conv2dBackwardFilter => (k, crs),
+            ConvOpKind::Conv2dBackwardData => (n, chw),
+            ConvOpKind::MaxPool | ConvOpKind::AvgPool => (n, sh.c * p * q),
+            ConvOpKind::MaxPoolBackward | ConvOpKind::AvgPoolBackward => (n, chw),
+        };
+        // Worst-case memory: operands + output + the im2col-expanded
+        // patch matrix ((P·Q)×(C·R·S), built one image at a time).
+        let col_bytes =
+            if op.needs_filter() { estimate::dense_size(p * q, crs) } else { 0 };
+        let aux_bytes = aux_op.as_ref().map(|o| o.size_in_bytes()).unwrap_or(0);
+        let est = a
+            .size_in_bytes()
+            .saturating_add(aux_bytes)
+            .saturating_add(estimate::dense_size(out_dims.0, out_dims.1))
+            .saturating_add(col_bytes);
+        let desc = format!("{name} ({n}x{xc})");
+        // Only *batch* operands force DIST (mirrors the planner's
+        // eff_blocked rule): conv2d_backward_data's aux is its filter —
+        // a blocked filter is gathered worker-side, it never forces the
+        // op DIST.
+        let aux_batch_blocked = op.has_dout()
+            && op != ConvOpKind::Conv2dBackwardData
+            && aux_op.as_ref().map(|o| o.is_blocked()).unwrap_or(false);
+        let blocked_in = a.is_blocked() || aux_batch_blocked;
+        match self.resolve_exec(OpKind::Conv, pos, est, &desc, blocked_in)? {
+            ExecType::Dist => {
+                let cluster = self.cluster_ref()?;
+                let (xb, _) = self.acquire_operand(cluster, &a, hx, "input")?;
+                if self.config.explain {
+                    self.emit(format!(
+                        "EXPLAIN: CONV {name} over {} row band(s) ({n}x{xc} batch, block {})",
+                        xb.block_rows(),
+                        xb.block_size()
+                    ));
+                }
+                let out = match op {
+                    ConvOpKind::Conv2d | ConvOpKind::Conv2dBackwardData => {
+                        let (fm, f_res) =
+                            self.conv_rhs_operand(cluster, aux.unwrap(), haux)?;
+                        if op == ConvOpKind::Conv2d {
+                            dist_nn::conv2d_blocked(cluster, &xb, fm.as_ref(), sh, f_res)?
+                        } else {
+                            dist_nn::conv2d_backward_data_blocked(
+                                cluster,
+                                fm.as_ref(),
+                                &xb,
+                                sh,
+                                f_res,
+                            )?
+                        }
+                    }
+                    ConvOpKind::Conv2dBackwardFilter => {
+                        let (db, _) = self.acquire_operand(
+                            cluster,
+                            aux_op.as_ref().unwrap(),
+                            haux,
+                            "dout",
+                        )?;
+                        // The K×CRS gradient returns with the job (per-band
+                        // partials folded at the driver) — not a collect.
+                        return Ok(Value::Matrix(dist_nn::conv2d_backward_filter_blocked(
+                            cluster, &xb, &db, sh,
+                        )?));
+                    }
+                    ConvOpKind::MaxPool => dist_nn::max_pool_blocked(cluster, &xb, sh)?,
+                    ConvOpKind::AvgPool => dist_nn::avg_pool_blocked(cluster, &xb, sh)?,
+                    ConvOpKind::MaxPoolBackward | ConvOpKind::AvgPoolBackward => {
+                        let (db, _) = self.acquire_operand(
+                            cluster,
+                            aux_op.as_ref().unwrap(),
+                            haux,
+                            "dout",
+                        )?;
+                        if op == ConvOpKind::MaxPoolBackward {
+                            dist_nn::max_pool_backward_blocked(cluster, &xb, &db, sh)?
+                        } else {
+                            dist_nn::avg_pool_backward_blocked(cluster, &xb, &db, sh)?
+                        }
+                    }
+                };
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => {
+                let xm = a.force()?;
+                let auxm = match &aux_op {
+                    Some(o) => Some(o.force()?),
+                    None => None,
+                };
+                Ok(Value::Matrix(match op {
+                    ConvOpKind::Conv2d => conv::conv2d(xm, auxm.unwrap(), sh)?,
+                    ConvOpKind::Conv2dBackwardFilter => {
+                        conv::conv2d_backward_filter(xm, auxm.unwrap(), sh)?
+                    }
+                    ConvOpKind::Conv2dBackwardData => {
+                        conv::conv2d_backward_data(auxm.unwrap(), xm, sh)?
+                    }
+                    ConvOpKind::MaxPool => conv::max_pool2d(xm, sh)?,
+                    ConvOpKind::MaxPoolBackward => {
+                        conv::max_pool2d_backward(xm, auxm.unwrap(), sh)?
+                    }
+                    ConvOpKind::AvgPool => conv::avg_pool2d(xm, sh)?,
+                    ConvOpKind::AvgPoolBackward => {
+                        conv::avg_pool2d_backward(xm, auxm.unwrap(), sh)?
+                    }
+                }))
+            }
+        }
+    }
+
+    /// bias_add / bias_multiply dispatch: a blocked input maps the K×1
+    /// bias over its resident blocks (each block derives its channel from
+    /// its global column offset — no band assembly, no collect); driver
+    /// inputs run the CP kernels. The bias rides like the conv filter:
+    /// a *named* driver bias registers in the block cache (a
+    /// loop-invariant bias broadcasts once per loop, not once per batch)
+    /// and a *blocked* bias gathers worker-side through the handle's
+    /// memoized gather — a shuffle, never a collect.
+    pub fn dispatch_bias_value(
+        &self,
+        v: &Value,
+        bias: &Value,
+        mul: bool,
+        hint: Option<&LineageRef>,
+    ) -> Result<Value> {
+        match v {
+            Value::Blocked(h) => {
+                let cluster = h.cluster();
+                let (bm, resident) = self.conv_rhs_operand(cluster, bias, hint)?;
+                let out = dist_nn::bias_op_blocked(
+                    cluster,
+                    &h.blocked()?,
+                    bm.as_ref(),
+                    bm.rows(),
+                    mul,
+                    resident,
+                )?;
+                self.bind_dist_result(cluster, Arc::new(out))
+            }
+            _ => {
+                let m = v.as_matrix()?;
+                let b = bias.as_matrix()?;
+                Ok(Value::Matrix(if mul {
+                    conv::bias_multiply(m, b, b.rows())?
+                } else {
+                    conv::bias_add(m, b, b.rows())?
+                }))
+            }
         }
     }
 

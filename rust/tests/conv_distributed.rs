@@ -1,0 +1,239 @@
+//! Distributed NN-operator integration: CP-vs-blocked parity for all
+//! seven conv/pool builtins (stride/pad variants, batches straddling
+//! multiple row blocks, multi-column image grids), metadata-validated
+//! error parity with zero collects, blocked bias ops, and the
+//! LeNet-style training-epoch acceptance gate: a conv → pool → affine →
+//! backward epoch over a blocked dataset runs with **zero driver
+//! collects**, conv/pool outputs bound as `Value::Blocked`.
+
+use std::sync::Arc;
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::interp::{Interpreter, Scope, Value};
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::util::quickcheck::approx_eq_slice;
+
+/// Compile a script and run it on an inspectable interpreter.
+fn run_inspectable(
+    script: &Script,
+    config: &SystemConfig,
+) -> (Interpreter, Scope, systemml::hop::plan::Plan) {
+    let ctx = MLContext::with_config(config.clone());
+    let comp = ctx.compile(script).expect("compile");
+    let plan = comp.plan.clone();
+    let mut interp = Interpreter::new(comp.bundle, config.clone());
+    interp.plan = Some(Arc::new(comp.plan));
+    let inputs: Scope = script.inputs.clone().into_iter().collect();
+    let out = interp.run(inputs).expect("run");
+    (interp, out, plan)
+}
+
+fn dist_config(budget: usize, block: usize) -> SystemConfig {
+    let mut c = SystemConfig::tiny_driver(budget);
+    c.block_size = block;
+    c.num_workers = 4;
+    c
+}
+
+/// All seven builtins, CP vs blocked, over 2x6x5 images with stride/pad
+/// variants. The 96-image batch spans three 32-row blocks and the 60
+/// image columns span two 32-column blocks, so both the multi-band and
+/// the band-assembly (multi-column) paths are exercised. Everything
+/// except the multi-band `conv2d_backward_filter` fold must be
+/// byte-identical (per-image kernels); the filter gradient matches to
+/// 1e-9 (per-band partials fold at the driver — summation order).
+#[test]
+fn conv_builtin_parity_cp_vs_blocked() {
+    let src = "C1 = conv2d(X, W, input_shape=[96,2,6,5], filter_shape=[3,2,3,2], stride=[2,1], padding=[1,1])\n\
+               Cb = bias_add(C1, bvec)\n\
+               dX = conv2d_backward_data(W, dC, input_shape=[96,2,6,5], filter_shape=[3,2,3,2], stride=[2,1], padding=[1,1])\n\
+               dW = conv2d_backward_filter(X, dC, input_shape=[96,2,6,5], filter_shape=[3,2,3,2], stride=[2,1], padding=[1,1])\n\
+               P1 = max_pool(X, input_shape=[96,2,6,5], pool_size=[2,2], stride=[2,2], padding=[0,0])\n\
+               P2 = avg_pool(X, input_shape=[96,2,6,5], pool_size=[3,3], stride=[1,2], padding=[1,1])\n\
+               dP1 = max_pool_backward(X, dP, input_shape=[96,2,6,5], pool_size=[2,2], stride=[2,2], padding=[0,0])\n\
+               dP2 = avg_pool_backward(X, dQ, input_shape=[96,2,6,5], pool_size=[3,3], stride=[1,2], padding=[1,1])";
+    let x = rand(96, 60, -1.0, 1.0, 0.6, Pdf::Uniform, 70).unwrap();
+    let w = rand(3, 12, -1.0, 1.0, 1.0, Pdf::Uniform, 71).unwrap();
+    let bvec = rand(3, 1, -1.0, 1.0, 1.0, Pdf::Uniform, 72).unwrap();
+    // conv output: p=3, q=6 → K*P*Q = 54; max_pool: c*p*q = 12;
+    // avg_pool: c*p*q = 36.
+    let dc = rand(96, 54, -1.0, 1.0, 1.0, Pdf::Uniform, 73).unwrap();
+    let dp = rand(96, 12, -1.0, 1.0, 1.0, Pdf::Uniform, 74).unwrap();
+    let dq = rand(96, 36, -1.0, 1.0, 1.0, Pdf::Uniform, 75).unwrap();
+    let outputs = ["C1", "Cb", "dX", "dW", "P1", "P2", "dP1", "dP2"];
+    let run = |budget: usize, explain: bool| {
+        let mut config = dist_config(budget, 32);
+        config.explain = explain;
+        let mut script = Script::from_str(src)
+            .input("X", x.clone())
+            .input("W", w.clone())
+            .input("bvec", bvec.clone())
+            .input("dC", dc.clone())
+            .input("dP", dp.clone())
+            .input("dQ", dq.clone());
+        for o in outputs {
+            script = script.output(o);
+        }
+        run_inspectable(&script, &config)
+    };
+    let (cp_interp, cp_out, _) = run(512 * 1024 * 1024, false);
+    let (dist_interp, dist_out, plan) = run(16 * 1024, true);
+    assert_eq!(cp_interp.cluster.as_ref().unwrap().blockify_count(), 0, "huge budget stays CP");
+    let cluster = dist_interp.cluster.as_ref().unwrap();
+    assert!(cluster.tasks() > 0, "tiny budget must run the conv ops DIST");
+    // Blocked bindings: batch-shaped outputs stay distributed; the
+    // filter gradient returns with the job as a driver matrix.
+    for name in ["C1", "Cb", "dX", "P1", "P2", "dP1", "dP2"] {
+        assert!(
+            matches!(dist_out.get(name), Some(Value::Blocked(_))),
+            "{name} must bind blocked: {:?}",
+            dist_out.get(name)
+        );
+    }
+    assert!(
+        matches!(dist_out.get("dW"), Some(Value::Matrix(_))),
+        "dW returns with the job: {:?}",
+        dist_out.get("dW")
+    );
+    // The planner placed and annotated the conv operators.
+    assert!(plan.render().contains(" CONV"), "{}", plan.render());
+    assert!(
+        dist_interp.output().iter().any(|l| l.contains("EXPLAIN: CONV")),
+        "runtime EXPLAIN must surface the banded conv dispatch"
+    );
+    // Parity (forcing the blocked outputs counts collects — checked
+    // after the zero-collect assertions in the epoch test below).
+    for name in outputs {
+        let a = cp_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        let b = dist_out.get(name).unwrap().as_matrix().unwrap().to_row_major_vec();
+        if name == "dW" {
+            assert!(approx_eq_slice(&a, &b, 1e-9), "dW matches to summation order");
+        } else {
+            assert_eq!(a, b, "{name} must be byte-identical across CP and blocked");
+        }
+    }
+}
+
+/// Bugfix gate: two-operand conv/pool builtins validate *both* operands
+/// — including the dout batch dimension — from handle metadata. A
+/// blocked batch with a mismatched dout raises exactly the CP error with
+/// zero collects (the CP kernels used to discover this only after a
+/// force; narrow filters used to panic conv2d_backward_data outright).
+#[test]
+fn blocked_conv_shape_errors_match_cp_without_collect() {
+    let x = rand(64, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 76).unwrap();
+    // Z = X %*% X is 64x64 and blocked under the tiny budget; 64 cols =
+    // [1,8,8] images. max_pool 2x2 → dout should be 64x16.
+    let cases = [
+        // dout batch-dim mismatch (50 != 64).
+        "E = max_pool_backward(Z, D, input_shape=[64,1,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])",
+        // dout wrong width for the conv geometry.
+        "E = conv2d_backward_filter(Z, D, input_shape=[64,1,8,8], filter_shape=[2,1,3,3], stride=[1,1], padding=[1,1])",
+        // input width does not match C*H*W.
+        "E = conv2d(Z, F, input_shape=[64,1,9,9], filter_shape=[2,1,3,3], stride=[1,1], padding=[1,1])",
+    ];
+    let d = rand(50, 16, -1.0, 1.0, 1.0, Pdf::Uniform, 77).unwrap();
+    let f = rand(2, 9, -1.0, 1.0, 1.0, Pdf::Uniform, 78).unwrap();
+    for case in cases {
+        let src = format!("Z = X %*% X\n{case}");
+        let run = |budget: usize| {
+            let config = dist_config(budget, 32);
+            let ctx = MLContext::with_config(config.clone());
+            let script = Script::from_str(&src)
+                .input("X", x.clone())
+                .input("D", d.clone())
+                .input("F", f.clone());
+            let comp = ctx.compile(&script).expect("compile");
+            let mut interp = Interpreter::new(comp.bundle, config.clone());
+            interp.plan = Some(Arc::new(comp.plan));
+            let inputs: Scope = script.inputs.clone().into_iter().collect();
+            let err = interp.run(inputs).expect_err("bad geometry must fail");
+            (interp, err.to_string())
+        };
+        let (_, cp_err) = run(512 * 1024 * 1024);
+        let (dist_interp, dist_err) = run(16 * 1024);
+        assert_eq!(cp_err, dist_err, "{case}");
+        let cluster = dist_interp.cluster.as_ref().unwrap();
+        assert_eq!(
+            cluster.collect_count(),
+            0,
+            "{case}: metadata validation must not force the blocked batch"
+        );
+    }
+}
+
+/// Acceptance gate (the tentpole): a LeNet-style training epoch —
+/// blocked `X[beg:end,]` batch → conv2d → max_pool → affine → loss →
+/// affine backward → pool backward → conv filter gradient → driver-side
+/// weight updates — runs entirely on the blocked backend with **zero
+/// driver collects**, batches straddling two row blocks. CP and blocked
+/// runs agree on the trained weights to summation order.
+#[test]
+fn lenet_epoch_runs_with_zero_collects() {
+    let src = "nb = nrow(X) / bsize\n\
+               for (e in 1:epochs) {\n\
+                 for (b in 1:nb) {\n\
+                   beg = (b - 1) * bsize + 1\n\
+                   end = b * bsize\n\
+                   Xb = X[beg:end, ]\n\
+                   Yb = Y[beg:end, ]\n\
+                   C1 = conv2d(Xb, W1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\n\
+                   H1 = max_pool(C1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])\n\
+                   P = H1 %*% W2\n\
+                   dP = (P - Yb) / bsize\n\
+                   dW2 = t(H1) %*% dP\n\
+                   dH1 = dP %*% t(W2)\n\
+                   dC1 = max_pool_backward(C1, dH1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])\n\
+                   dW1 = conv2d_backward_filter(Xb, dC1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\n\
+                   W1 = W1 - lr * dW1\n\
+                   W2 = W2 - lr * dW2\n\
+                 }\n\
+               }\n\
+               wsum = sum(W1 ^ 2) + sum(W2 ^ 2)";
+    // 256 images of 1x8x8 over 64-blocks: each 128-image batch spans two
+    // row blocks; block-aligned slice origins.
+    let x = rand(256, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 90).unwrap();
+    let y = rand(256, 10, 0.0, 1.0, 1.0, Pdf::Uniform, 91).unwrap();
+    let w1 = rand(4, 9, -0.5, 0.5, 1.0, Pdf::Uniform, 92).unwrap();
+    let w2 = rand(64, 10, -0.5, 0.5, 1.0, Pdf::Uniform, 93).unwrap();
+    let run = |budget: usize| {
+        let config = dist_config(budget, 64);
+        let script = Script::from_str(src)
+            .input("X", x.clone())
+            .input("Y", y.clone())
+            .input("W1", w1.clone())
+            .input("W2", w2.clone())
+            .input_scalar("bsize", 128.0)
+            .input_scalar("epochs", 2.0)
+            .input_scalar("lr", 0.05)
+            .output("wsum")
+            .output("W1")
+            .output("W2");
+        run_inspectable(&script, &config)
+    };
+    let (cp_interp, cp_out, _) = run(512 * 1024 * 1024);
+    let (dist_interp, dist_out, _) = run(32 * 1024);
+    assert_eq!(cp_interp.cluster.as_ref().unwrap().blockify_count(), 0, "huge budget stays CP");
+    let cluster = dist_interp.cluster.as_ref().unwrap();
+    assert!(cluster.tasks() > 0, "the epoch must run on the blocked backend");
+    // THE gate: nothing in the training loop may materialize a blocked
+    // value at the driver — conv/pool outputs stay distributed, scalar
+    // and K×CRS results return with their jobs.
+    assert_eq!(cluster.collect_count(), 0, "LeNet epoch must run with zero driver collects");
+    // Trained weights are driver values (single-block / job results).
+    assert!(matches!(dist_out.get("W1"), Some(Value::Matrix(_))));
+    assert!(matches!(dist_out.get("W2"), Some(Value::Matrix(_))));
+    // Parity with the CP run, to summation order.
+    for name in ["W1", "W2", "wsum"] {
+        let a = match cp_out.get(name).unwrap() {
+            v if v.is_matrix() => v.as_matrix().unwrap().to_row_major_vec(),
+            v => vec![v.as_double().unwrap()],
+        };
+        let b = match dist_out.get(name).unwrap() {
+            v if v.is_matrix() => v.as_matrix().unwrap().to_row_major_vec(),
+            v => vec![v.as_double().unwrap()],
+        };
+        assert!(approx_eq_slice(&a, &b, 1e-9), "{name}: CP vs blocked epoch diverged");
+    }
+}
