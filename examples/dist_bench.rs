@@ -31,7 +31,12 @@
 //!   regression; for kmeans and minibatch this is the distributed
 //!   indexing + broadcast-cellwise acceptance gate), or
 //! - caching stops reducing blockify volume vs. a cache-off run, or
-//! - cached and uncached runs disagree numerically.
+//! - cached and uncached runs disagree numerically, or
+//! - (PR 6) the wall-sized LeNet epoch misses its parallel-speedup bar —
+//!   `dist_threads=4` vs the serial escape hatch, 1.5x on 4+ hardware
+//!   threads, 1.15x on 2-3, reported-only on 1 — or
+//! - (PR 6) the packed GEMM kernel fails to beat the previous
+//!   cache-blocked kernel's GFLOP/s (best of 3 at 384^3).
 //!
 //! ```bash
 //! cargo run --release --example dist_bench
@@ -41,9 +46,11 @@ use std::time::Instant;
 
 use systemml::api::{MLContext, Script};
 use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::dense::DenseMatrix;
 use systemml::runtime::matrix::randgen::synthetic_classification;
-use systemml::runtime::matrix::{reorg, Matrix};
+use systemml::runtime::matrix::{mult, reorg, Matrix};
 use systemml::util::metrics;
+use systemml::util::prng::Prng;
 
 /// Conjugate gradient on the normal equations (scripts/algorithms/lm_cg
 /// inlined with a fixed iteration count): `X` and `t(X)` are
@@ -137,6 +144,35 @@ for (e in 1:max_iter) {
     dH1 = dP %*% t(W2)
     dC1 = max_pool_backward(C1, dH1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])
     dW1 = conv2d_backward_filter(Xb, dC1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])
+    W1 = W1 - 0.05 * dW1
+    W2 = W2 - 0.05 * dW2
+  }
+}
+wnorm2 = sum(W1 ^ 2) + sum(W2 ^ 2)
+"#;
+
+/// LeNet epoch sized for **wall-clock** scaling (not marginal-cost
+/// accounting): 1024 flattened 1x16x16 images, 16 filters, bsize 512
+/// over 64-row blocks — 8 row bands per mini-batch, so the banded
+/// conv/pool tasks actually fan out across the worker threads.
+const LENET_WALL: &str = r#"
+W1 = rand(rows=16, cols=9, min=-0.1, max=0.1, seed=7)
+W2 = rand(rows=1024, cols=1, min=-0.1, max=0.1, seed=8)
+nb = nrow(X) / bsize
+for (e in 1:max_iter) {
+  for (b in 1:nb) {
+    beg = (b - 1) * bsize + 1
+    end = b * bsize
+    Xb = X[beg:end, ]
+    Yb = y[beg:end, ]
+    C1 = conv2d(Xb, W1, input_shape=[bsize,1,16,16], filter_shape=[16,1,3,3], stride=[1,1], padding=[1,1])
+    H1 = max_pool(C1, input_shape=[bsize,16,16,16], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    P = H1 %*% W2
+    dP = (P - Yb) / bsize
+    dW2 = t(H1) %*% dP
+    dH1 = dP %*% t(W2)
+    dC1 = max_pool_backward(C1, dH1, input_shape=[bsize,16,16,16], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    dW1 = conv2d_backward_filter(Xb, dC1, input_shape=[bsize,1,16,16], filter_shape=[16,1,3,3], stride=[1,1], padding=[1,1])
     W1 = W1 - 0.05 * dW1
     W2 = W2 - 0.05 * dW2
   }
@@ -238,6 +274,102 @@ fn bench(name: &'static str, src: &str, short_iters: usize, long_iters: usize, o
     }
 }
 
+// ---- wall-clock: serial escape hatch vs worker thread pool -------------
+
+struct Wall {
+    name: &'static str,
+    serial_ms: f64,
+    parallel_ms: f64,
+}
+
+impl Wall {
+    fn speedup(&self) -> f64 {
+        self.serial_ms / self.parallel_ms.max(1e-9)
+    }
+}
+
+/// One timed end-to-end run of `src` under `dist_threads = threads`;
+/// returns (elapsed ms, result). Results must be byte-identical across
+/// thread counts — asserted by the caller.
+fn timed_run(
+    src: &str,
+    x: &Matrix,
+    y: &Matrix,
+    bsize: f64,
+    iters: usize,
+    output: &str,
+    threads: usize,
+) -> (f64, f64) {
+    let mut c = config(true);
+    c.dist_threads = threads;
+    let ctx = MLContext::with_config(c);
+    let script = Script::from_str(src)
+        .input("X", x.clone())
+        .input("y", y.clone())
+        .input_scalar("k", 4.0)
+        .input_scalar("lambda", 0.001)
+        .input_scalar("bsize", bsize)
+        .input_scalar("max_iter", iters as f64)
+        .output(output);
+    let t0 = Instant::now();
+    let res = ctx.execute(script).expect("wall workload failed");
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    (ms, res.double(output).unwrap())
+}
+
+/// Serial (threads=1) vs parallel (threads=4) wall clock, best of `reps`
+/// runs each (alternating, so thermal/noise drift hits both sides).
+fn wall_bench(
+    name: &'static str,
+    src: &str,
+    x: &Matrix,
+    y: &Matrix,
+    bsize: f64,
+    iters: usize,
+    output: &str,
+    reps: usize,
+) -> Wall {
+    let mut serial_ms = f64::INFINITY;
+    let mut parallel_ms = f64::INFINITY;
+    for _ in 0..reps {
+        let (sm, sr) = timed_run(src, x, y, bsize, iters, output, 1);
+        let (pm, pr) = timed_run(src, x, y, bsize, iters, output, 4);
+        assert_eq!(
+            sr.to_bits(),
+            pr.to_bits(),
+            "{name}: threads=1 vs threads=4 results diverged: {sr} vs {pr}"
+        );
+        serial_ms = serial_ms.min(sm);
+        parallel_ms = parallel_ms.min(pm);
+    }
+    Wall { name, serial_ms, parallel_ms }
+}
+
+// ---- packed GEMM vs reference kernel ------------------------------------
+
+/// Best-of-3 GFLOP/s of a dense GEMM kernel at `size`^3.
+fn gemm_gflops(kernel: &dyn Fn(&DenseMatrix, &DenseMatrix) -> DenseMatrix, size: usize) -> f64 {
+    let mut rng = Prng::new(123);
+    let mk = |rng: &mut Prng| {
+        let mut d = DenseMatrix::zeros(size, size);
+        for v in d.data.iter_mut() {
+            *v = rng.uniform(-1.0, 1.0);
+        }
+        d
+    };
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+    let flops = 2.0 * (size * size * size) as f64;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let c = kernel(&a, &b);
+        best = best.min(t0.elapsed().as_secs_f64());
+        std::hint::black_box(c.data[size / 2]);
+    }
+    flops / best.max(1e-9) / 1e9
+}
+
 fn json_entry(b: &Bench) -> String {
     let s = &b.long_cached;
     format!(
@@ -283,6 +415,44 @@ fn main() {
     // LeNet epochs over the same 400x64 batch layout (1x8x8 images):
     // conv → pool → affine → backward, gated at 0 collects/iteration.
     let ln = bench("lenet", LENET, 2, 10, "wnorm2");
+
+    // Wall clock, threads=1 (serial escape hatch) vs threads=4 (worker
+    // pool). The small accounting workloads are reported for visibility;
+    // the speedup gate runs on the wall-sized LeNet epoch, whose 8-band
+    // batches give the pool real per-task work.
+    println!("\nwall clock: dist_threads=1 vs dist_threads=4");
+    let (x4, ylab4) = synthetic_classification(400, 64, 4, 42);
+    let y4 = reorg::slice(&ylab4, 0, 400, 0, 1).unwrap();
+    let (xw, ylabw) = synthetic_classification(1024, 256, 4, 43);
+    let yw = reorg::slice(&ylabw, 0, 1024, 0, 1).unwrap();
+    let walls = [
+        wall_bench("lm_cg", LM_CG, &x4, &y4, 128.0, 20, "final_norm", 1),
+        wall_bench("kmeans", KMEANS, &x4, &y4, 128.0, 10, "wcss", 1),
+        wall_bench("minibatch", MINIBATCH, &x4, &y4, 128.0, 8, "wnorm", 1),
+        wall_bench("lenet", LENET_WALL, &xw, &yw, 512.0, 3, "wnorm2", 2),
+    ];
+    for w in &walls {
+        println!(
+            "{:9} serial {:8.1} ms | parallel {:8.1} ms | speedup {:.2}x",
+            w.name,
+            w.serial_ms,
+            w.parallel_ms,
+            w.speedup()
+        );
+    }
+
+    // Packed GEMM vs the previous cache-blocked kernel, best of 3 at
+    // 384^3 (large enough that packing pays for itself, small enough for
+    // a CI bench job).
+    const GEMM_N: usize = 384;
+    let packed_gflops = gemm_gflops(&|a, b| mult::mm_dense_dense(a, b), GEMM_N);
+    let reference_gflops = gemm_gflops(&|a, b| mult::mm_dense_dense_reference(a, b), GEMM_N);
+    println!(
+        "\ngemm {GEMM_N}^3: packed {:.2} GFLOP/s vs reference {:.2} GFLOP/s ({:.2}x)",
+        packed_gflops,
+        reference_gflops,
+        packed_gflops / reference_gflops.max(1e-9)
+    );
 
     for b in [&lm, &km, &mb, &ln] {
         println!(
@@ -343,12 +513,68 @@ fn main() {
         }
     }
 
+    // Parallel-speedup gate (the PR 6 tentpole acceptance), adaptive to
+    // the runner: a 4-thread pool cannot beat 1.5x on fewer than 4
+    // hardware threads, so the bar drops to 1.15x on 2-3 cores and the
+    // gate is skipped (reported, not enforced) on a single core. The
+    // thresholds are deliberately generous vs the ideal 4x/2x to absorb
+    // shared-runner noise.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let lenet_wall = &walls[3];
+    let (min_speedup, gate_status) = if hw >= 4 {
+        (1.5, if lenet_wall.speedup() >= 1.5 { "pass" } else { "fail" })
+    } else if hw >= 2 {
+        (1.15, if lenet_wall.speedup() >= 1.15 { "pass" } else { "fail" })
+    } else {
+        (0.0, "skipped")
+    };
+    if gate_status == "fail" {
+        eprintln!(
+            "FAIL: lenet wall speedup {:.2}x < {min_speedup}x on {hw} hardware threads — \
+             the worker pool is not delivering parallel wall-clock wins",
+            lenet_wall.speedup()
+        );
+        pass = false;
+    } else if gate_status == "skipped" {
+        println!("speedup gate skipped: single hardware thread (speedup {:.2}x reported only)", lenet_wall.speedup());
+    }
+
+    // Packed-kernel gate: the packed GEMM must beat the old kernel's
+    // throughput (best-of-3 each, so a single scheduler hiccup cannot
+    // flip the comparison).
+    if packed_gflops <= reference_gflops {
+        eprintln!(
+            "FAIL: packed GEMM {packed_gflops:.2} GFLOP/s does not beat the reference kernel {reference_gflops:.2} GFLOP/s"
+        );
+        pass = false;
+    }
+
+    let wall_fields = walls
+        .iter()
+        .map(|w| {
+            format!(
+                "    \"{}_serial_ms\": {:.2},\n    \"{}_parallel_ms\": {:.2},\n    \"{}_speedup\": {:.3}",
+                w.name, w.serial_ms, w.name, w.parallel_ms, w.name,
+                w.speedup()
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let wall_json = format!(
+        "  \"wall\": {{\n    \"threads\": 4,\n    \"hw_threads\": {hw},\n{wall_fields},\n    \"lenet_gate_min_speedup\": {min_speedup},\n    \"lenet_gate\": \"{gate_status}\"\n  }}"
+    );
+    let gemm_json = format!(
+        "  \"gemm\": {{\n    \"size\": {GEMM_N},\n    \"packed_gflops\": {packed_gflops:.3},\n    \"reference_gflops\": {reference_gflops:.3},\n    \"speedup\": {:.3}\n  }}",
+        packed_gflops / reference_gflops.max(1e-9)
+    );
     let json = format!(
-        "{{\n{},\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
+        "{{\n{},\n{},\n{},\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
         json_entry(&lm),
         json_entry(&km),
         json_entry(&mb),
         json_entry(&ln),
+        wall_json,
+        gemm_json,
         pass
     );
     std::fs::write("BENCH_dist.json", &json).expect("write BENCH_dist.json");
@@ -368,6 +594,7 @@ fn main() {
     }
     println!(
         "bench gate OK: loop-invariant operands stay resident, batch slices, \
-         broadcast cellwise and conv/pool stay blocked, zero collects per iteration"
+         broadcast cellwise and conv/pool stay blocked, zero collects per iteration, \
+         worker pool delivers its wall-clock bar, packed GEMM beats the reference kernel"
     );
 }

@@ -32,6 +32,12 @@ pub struct SystemConfig {
     pub blocked_values: bool,
     /// Block size (rows/cols) for blocked distributed matrices.
     pub block_size: usize,
+    /// Worker threads executing blocked tasks concurrently. `0` means
+    /// "one thread per simulated worker" (the default — `num_workers`
+    /// becomes actual concurrency); `1` restores fully serial in-line
+    /// execution for debugging. Results are byte-identical either way:
+    /// the pool preserves the driver-side reduction order.
+    pub dist_threads: usize,
     /// Enable the distributed backend (if false, everything runs CP and
     /// over-budget allocations are errors — like local-mode SystemML).
     pub dist_enabled: bool,
@@ -58,6 +64,7 @@ impl Default for SystemConfig {
             cache_enabled: true,
             blocked_values: true,
             block_size: 1024,
+            dist_threads: 0,
             dist_enabled: true,
             accel_enabled: false,
             accel_memory: 256 * 1024 * 1024,

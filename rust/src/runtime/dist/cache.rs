@@ -39,6 +39,19 @@
 //!   assignment that names it) picks it up without a round trip through
 //!   the driver. The driver copy is only materialized on CP demand by
 //!   the dispatch layer (the lazy `to_dense` flush).
+//!
+//! # Lock granularity (thread-pool audit, PR 6)
+//!
+//! The cache is guarded by one `Mutex<Inner>`, and that is fine for the
+//! parallel execution path: **pool tasks never touch this lock.** All
+//! cache traffic — `acquire`, `get_keyed`/`put_keyed`, `adopt`,
+//! reservations — happens at *dispatch* time on the driver thread(s),
+//! before task closures are built over `Arc<Matrix>` block clones.
+//! Hit/miss/eviction counters are atomics outside the mutex. The only
+//! O(cells) work near the lock were the guard fingerprints: `acquire`
+//! already computed its fingerprint before locking, and `adopt` now does
+//! too, so concurrent parfor drivers serialize only on O(entries) map
+//! operations.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -520,17 +533,24 @@ impl BlockCache {
         if !self.enabled() {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
         // Cheap pre-filter before the O(cells) content fingerprint: most
         // assignments bind CP results while no DIST output is pending.
-        let dims_match = match inner.pending.as_ref() {
-            Some(p) => p.guard.rows == m.rows() && p.guard.cols == m.cols(),
-            None => return,
-        };
-        if !dims_match {
-            return;
+        {
+            let inner = self.inner.lock().unwrap();
+            let dims_match = match inner.pending.as_ref() {
+                Some(p) => p.guard.rows == m.rows() && p.guard.cols == m.cols(),
+                None => return,
+            };
+            if !dims_match {
+                return;
+            }
         }
+        // The O(cells) fingerprint runs *outside* the mutex so concurrent
+        // parfor drivers adopting results don't serialize on it; the
+        // pending slot is re-checked under the lock below (it may have
+        // been claimed or replaced while we scanned).
         let guard = Guard::of(m);
+        let mut inner = self.inner.lock().unwrap();
         if inner.pending.as_ref().is_some_and(|p| p.guard == guard) {
             let p = inner.pending.take().unwrap();
             let h = LineageRef::var(name, version);

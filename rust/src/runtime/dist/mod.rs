@@ -23,10 +23,35 @@
 //! driver-side partials). The compiler's ExecType assignment (see
 //! `hop::plan`) decides when the interpreter routes an operator here
 //! instead of CP.
+//!
+//! # Execution model (thread-level parallelism)
+//!
+//! Since PR 6 the per-block work is *actually* concurrent, not just
+//! accounted: every blocked operator builds a **task batch** — one
+//! `'static` closure per block (or per row band for the NN operators),
+//! capturing `Arc<Matrix>` block clones — and hands it to the [`pool`]
+//! owned by this cluster via [`Cluster::run_tasks`]. Each task executes
+//! on the long-lived worker thread matching [`Cluster::worker_for`]`(i,j)`
+//! (the same placement the FLOP accounting attributes), the batch joins
+//! at a barrier, and the results come back in **submission order**. All
+//! reductions — the k-accumulation inside a matmult task, aggregate
+//! partial folds, conv2d filter-gradient band folds — happen either
+//! inside a single task or on the driver in the original serial order, so
+//! results are **byte-identical** to serial execution regardless of the
+//! thread count.
+//!
+//! The thread count comes from `SystemConfig::dist_threads` (default: one
+//! thread per simulated worker). Setting `dist_threads = 1` is the escape
+//! hatch that restores fully serial in-line execution for debugging —
+//! same results, zero threads spawned. Tasks are pure compute: all
+//! cache/handle bookkeeping (the [`cache::BlockCache`] mutex, live-value
+//! registration) happens at dispatch time on the driver thread, so tasks
+//! never contend on a lock.
 
 pub mod cache;
 pub mod nn;
 pub mod ops;
+pub mod pool;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, Weak};
@@ -72,6 +97,8 @@ pub struct Cluster {
     live_budget: usize,
     /// Resident block-partition cache (lineage-keyed reuse).
     cache: BlockCache,
+    /// Long-lived worker threads executing block tasks (see [`pool`]).
+    pool: pool::WorkerPool,
 }
 
 impl Cluster {
@@ -100,6 +127,21 @@ impl Cluster {
         cache_storage: usize,
         live_storage: usize,
     ) -> Cluster {
+        let threads = num_workers.max(1);
+        Cluster::with_budgets_threads(num_workers, block_size, cache_storage, live_storage, threads)
+    }
+
+    /// [`Cluster::with_budgets`] with an explicit worker-thread count.
+    /// `threads = 1` restores serial in-line task execution (the
+    /// debugging escape hatch); the default elsewhere is one thread per
+    /// simulated worker so `num_workers` means actual concurrency.
+    pub fn with_budgets_threads(
+        num_workers: usize,
+        block_size: usize,
+        cache_storage: usize,
+        live_storage: usize,
+        threads: usize,
+    ) -> Cluster {
         let workers = num_workers.max(1);
         Cluster {
             num_workers: workers,
@@ -115,11 +157,33 @@ impl Cluster {
             live_seq: AtomicU64::new(0),
             live_budget: live_storage,
             cache: BlockCache::new(cache_storage),
+            pool: pool::WorkerPool::new(threads.max(1)),
         }
+    }
+
+    /// A cluster with an explicit thread count and unbounded storage
+    /// (test/bench hook for serial-vs-parallel comparisons).
+    pub fn with_threads(num_workers: usize, block_size: usize, threads: usize) -> Cluster {
+        Cluster::with_budgets_threads(num_workers, block_size, usize::MAX, usize::MAX, threads)
     }
 
     pub fn num_workers(&self) -> usize {
         self.num_workers
+    }
+
+    /// Worker threads executing block tasks (1 = serial in-line mode).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Execute a batch of per-block tasks on the worker pool and return
+    /// the results in submission order (see [`pool::WorkerPool::run_tasks`]).
+    /// Operators in [`ops`]/[`nn`] place each task with
+    /// [`Cluster::worker_for`] so execution matches the accounting.
+    /// Public so tests and benches can probe the execution backend
+    /// directly (e.g. asserting inline vs pool-thread execution).
+    pub fn run_tasks<R: Send + 'static>(&self, tasks: Vec<pool::DistTask<R>>) -> Vec<R> {
+        self.pool.run_tasks(tasks)
     }
 
     /// The resident block-partition cache.

@@ -40,6 +40,7 @@
 use std::sync::Arc;
 
 use crate::runtime::conv::{self, ConvShape};
+use crate::runtime::dist::pool::DistTask;
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::dense::DenseMatrix;
 use crate::runtime::matrix::{reorg, Matrix};
@@ -130,23 +131,42 @@ fn pool_image_flops(sh: &ConvShape) -> u64 {
 
 /// Shared band-map skeleton for the forward / data-gradient operators:
 /// validate, charge the filter broadcast (when present) and the band
-/// re-partition, run `kernel` per band on the band's owning worker, and
+/// re-partition, run `kernel` per band on the band's owning worker (one
+/// pool task per band — bands are independent images, so the blocked
+/// output is byte-identical however the tasks interleave), and
 /// reassemble the blocked output of `out_cols` columns.
 fn band_map(
     cluster: &Cluster,
     x: &BlockedMatrix,
     out_cols: usize,
     flops_per_image: u64,
-    mut kernel: impl FnMut(&Matrix) -> Result<Matrix>,
+    kernel: impl Fn(&Matrix) -> Result<Matrix> + Send + Sync + 'static,
 ) -> Result<BlockedMatrix> {
     charge_band_shuffle(cluster, x);
     let bs = x.block_size();
     let obc = super::ceil_div(out_cols, bs);
-    let mut blocks = Vec::with_capacity(x.block_rows() * obc);
+    let src = Arc::new(x.clone());
+    let kernel = Arc::new(kernel);
+    let mut tasks: Vec<DistTask<Result<(Vec<Arc<Matrix>>, u64)>>> =
+        Vec::with_capacity(x.block_rows());
     for i in 0..x.block_rows() {
-        let band = row_band(x, i)?;
-        cluster.record_task(cluster.worker_for(i, 0), flops_per_image * band.rows() as u64);
-        split_band(kernel(&band)?, bs, out_cols, &mut blocks)?;
+        let src = Arc::clone(&src);
+        let kernel = Arc::clone(&kernel);
+        tasks.push((
+            cluster.worker_for(i, 0),
+            Box::new(move || {
+                let band = row_band(&src, i)?;
+                let mut out = Vec::with_capacity(obc);
+                split_band(kernel(&band)?, bs, out_cols, &mut out)?;
+                Ok((out, band.rows() as u64))
+            }),
+        ));
+    }
+    let mut blocks = Vec::with_capacity(x.block_rows() * obc);
+    for (i, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (band_blocks, band_rows) = res?;
+        cluster.record_task(cluster.worker_for(i, 0), flops_per_image * band_rows);
+        blocks.extend(band_blocks);
     }
     Ok(BlockedMatrix::from_shared_blocks(x.rows(), out_cols, bs, blocks))
 }
@@ -168,8 +188,12 @@ pub fn conv2d_blocked(
         cluster.record_broadcast(filter.size_in_bytes() as u64);
     }
     let (p, q) = (sh.p(), sh.q());
-    band_map(cluster, x, sh.k * p * q, conv_image_flops(sh), |band| {
-        conv::conv2d(band, filter, sh)
+    // The tasks read the broadcast copy of the filter (owned clone; the
+    // blocked batch itself is shared, never copied).
+    let bf = filter.clone();
+    let sh = *sh;
+    band_map(cluster, x, sh.k * p * q, conv_image_flops(&sh), move |band| {
+        conv::conv2d(band, &bf, &sh)
     })
 }
 
@@ -195,8 +219,10 @@ pub fn conv2d_backward_data_blocked(
     if !filter_resident {
         cluster.record_broadcast(filter.size_in_bytes() as u64);
     }
-    band_map(cluster, dout, sh.c * sh.h * sh.w, conv_image_flops(sh), |band| {
-        conv::conv2d_backward_data(filter, band, sh)
+    let bf = filter.clone();
+    let sh = *sh;
+    band_map(cluster, dout, sh.c * sh.h * sh.w, conv_image_flops(&sh), move |band| {
+        conv::conv2d_backward_data(&bf, band, &sh)
     })
 }
 
@@ -221,12 +247,30 @@ pub fn conv2d_backward_filter_blocked(
     let dout = realigned.as_ref().unwrap_or(dout);
     charge_band_shuffle(cluster, x);
     charge_band_shuffle(cluster, dout);
-    let mut acc: Option<DenseMatrix> = None;
+    // One task per band computes its partial gradient; the partials fold
+    // at the driver in ascending band order — the serial fold order, so
+    // multi-band results are byte-identical to threads=1.
+    let xs = Arc::new(x.clone());
+    let ds = Arc::new(dout.clone());
+    let sh = *sh;
+    let mut tasks: Vec<DistTask<Result<(Matrix, u64)>>> = Vec::with_capacity(x.block_rows());
     for i in 0..x.block_rows() {
-        let xb = row_band(x, i)?;
-        let db = row_band(dout, i)?;
-        cluster.record_task(cluster.worker_for(i, 0), conv_image_flops(sh) * xb.rows() as u64);
-        let partial = conv::conv2d_backward_filter(&xb, &db, sh)?;
+        let xs = Arc::clone(&xs);
+        let ds = Arc::clone(&ds);
+        tasks.push((
+            cluster.worker_for(i, 0),
+            Box::new(move || {
+                let xb = row_band(&xs, i)?;
+                let db = row_band(&ds, i)?;
+                let partial = conv::conv2d_backward_filter(&xb, &db, &sh)?;
+                Ok((partial, xb.rows() as u64))
+            }),
+        ));
+    }
+    let mut acc: Option<DenseMatrix> = None;
+    for (i, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (partial, band_rows) = res?;
+        cluster.record_task(cluster.worker_for(i, 0), conv_image_flops(&sh) * band_rows);
         acc = Some(match acc {
             // First band's partial is adopted as-is (byte-identical for
             // single-band batches).
@@ -252,7 +296,10 @@ pub fn max_pool_blocked(
     sh.validate_input_dims(x.cols(), "max_pool")?;
     sh.validate_window("max_pool")?;
     let (p, q) = (sh.p(), sh.q());
-    band_map(cluster, x, sh.c * p * q, pool_image_flops(sh), |band| conv::max_pool2d(band, sh))
+    let sh = *sh;
+    band_map(cluster, x, sh.c * p * q, pool_image_flops(&sh), move |band| {
+        conv::max_pool2d(band, &sh)
+    })
 }
 
 /// Blocked avg_pool forward → N×(C·P·Q) blocked.
@@ -264,7 +311,10 @@ pub fn avg_pool_blocked(
     sh.validate_input_dims(x.cols(), "avg_pool")?;
     sh.validate_window("avg_pool")?;
     let (p, q) = (sh.p(), sh.q());
-    band_map(cluster, x, sh.c * p * q, pool_image_flops(sh), |band| conv::avg_pool2d(band, sh))
+    let sh = *sh;
+    band_map(cluster, x, sh.c * p * q, pool_image_flops(&sh), move |band| {
+        conv::avg_pool2d(band, &sh)
+    })
 }
 
 /// Blocked pool backward (shared by max and avg): `x` and `dout` are both
@@ -275,7 +325,7 @@ fn pool_backward_blocked(
     dout: &BlockedMatrix,
     sh: &ConvShape,
     op: &str,
-    kernel: impl Fn(&Matrix, &Matrix, &ConvShape) -> Result<Matrix>,
+    kernel: impl Fn(&Matrix, &Matrix, &ConvShape) -> Result<Matrix> + Send + Sync + 'static,
 ) -> Result<BlockedMatrix> {
     sh.validate_input_dims(x.cols(), op)?;
     sh.validate_window(op)?;
@@ -288,12 +338,32 @@ fn pool_backward_blocked(
     let bs = x.block_size();
     let out_cols = sh.c * sh.h * sh.w;
     let obc = super::ceil_div(out_cols, bs);
-    let mut blocks = Vec::with_capacity(x.block_rows() * obc);
+    let xs = Arc::new(x.clone());
+    let ds = Arc::new(dout.clone());
+    let sh = *sh;
+    let kernel = Arc::new(kernel);
+    let mut tasks: Vec<DistTask<Result<(Vec<Arc<Matrix>>, u64)>>> =
+        Vec::with_capacity(x.block_rows());
     for i in 0..x.block_rows() {
-        let xb = row_band(x, i)?;
-        let db = row_band(dout, i)?;
-        cluster.record_task(cluster.worker_for(i, 0), pool_image_flops(sh) * xb.rows() as u64);
-        split_band(kernel(&xb, &db, sh)?, bs, out_cols, &mut blocks)?;
+        let xs = Arc::clone(&xs);
+        let ds = Arc::clone(&ds);
+        let kernel = Arc::clone(&kernel);
+        tasks.push((
+            cluster.worker_for(i, 0),
+            Box::new(move || {
+                let xb = row_band(&xs, i)?;
+                let db = row_band(&ds, i)?;
+                let mut out = Vec::with_capacity(obc);
+                split_band(kernel(&xb, &db, &sh)?, bs, out_cols, &mut out)?;
+                Ok((out, xb.rows() as u64))
+            }),
+        ));
+    }
+    let mut blocks = Vec::with_capacity(x.block_rows() * obc);
+    for (i, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (band_blocks, band_rows) = res?;
+        cluster.record_task(cluster.worker_for(i, 0), pool_image_flops(&sh) * band_rows);
+        blocks.extend(band_blocks);
     }
     Ok(BlockedMatrix::from_shared_blocks(x.rows(), out_cols, bs, blocks))
 }
@@ -352,26 +422,39 @@ pub fn bias_op_blocked(
     let pq = m.cols() / k;
     let bs = m.block_size();
     let (brows, bcols) = (m.block_rows(), m.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    // Each task joins its block against the broadcast bias copy.
+    let bias = Arc::new(bias.clone());
+    let mut tasks: Vec<DistTask<Arc<Matrix>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let b = m.block(i, j);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            let mut d = b.to_dense();
-            for r in 0..d.rows {
-                let row = d.row_mut(r);
-                for (local, cell) in row.iter_mut().enumerate() {
-                    let kk = (j * bs + local) / pq;
-                    let bv = bias.get(kk, 0);
-                    if mul {
-                        *cell *= bv;
-                    } else {
-                        *cell += bv;
+            let b = m.shared_block(i, j);
+            let bias = Arc::clone(&bias);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || {
+                    let mut d = b.to_dense();
+                    for r in 0..d.rows {
+                        let row = d.row_mut(r);
+                        for (local, cell) in row.iter_mut().enumerate() {
+                            let kk = (j * bs + local) / pq;
+                            let bv = bias.get(kk, 0);
+                            if mul {
+                                *cell *= bv;
+                            } else {
+                                *cell += bv;
+                            }
+                        }
                     }
-                }
-            }
-            blocks.push(Arc::new(Matrix::Dense(d).examine_and_convert()));
+                    Arc::new(Matrix::Dense(d).examine_and_convert())
+                }),
+            ));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, out) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        blocks.push(out);
     }
     Ok(BlockedMatrix::from_shared_blocks(m.rows(), m.cols(), bs, blocks))
 }

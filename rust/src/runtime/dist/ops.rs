@@ -8,7 +8,12 @@
 //! Every operator assigns block tasks to workers deterministically,
 //! accounts per-worker FLOPs and broadcast/shuffle bytes on the
 //! [`Cluster`], and bumps the global `dist_tasks` metric — that is how
-//! benches and tests observe which physical plan ran.
+//! benches and tests observe which physical plan ran. Since PR 6 the
+//! tasks are *executed* on the cluster's worker thread pool too
+//! ([`Cluster::run_tasks`]): each operator builds one `'static` closure
+//! per output block over `Arc<Matrix>` block clones, and all reductions
+//! fold driver-side in the serial iteration order, keeping results
+//! byte-identical to `threads = 1` (see [`super::pool`]).
 //!
 //! Communication accounting is **cache-aware**: an operand whose blocked
 //! partitions are already resident on the workers (a block-cache hit —
@@ -19,6 +24,7 @@
 
 use std::sync::Arc;
 
+use crate::runtime::dist::pool::DistTask;
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::dense::DenseMatrix;
@@ -121,35 +127,48 @@ pub fn matmult_blocked_reuse(
         }
     }
     // The arithmetic is identical for both plans: out(i,j) = Σ_k A(i,k)B(k,j).
+    // One task per output block; the k-accumulation runs *inside* the
+    // task in ascending k order, so the summation order is exactly the
+    // serial loop's and results are byte-identical to threads=1.
     let bs = a.block_size();
     let (brows, bcols, bk) = (a.block_rows(), b.block_cols(), a.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Result<(Matrix, u64)>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let mut acc: Option<Matrix> = None;
-            let mut flops = 0u64;
-            for k in 0..bk {
-                let (lb, rb) = (a.block(i, k), b.block(k, j));
-                flops += 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
-                let p = mult::matmult(lb, rb)?;
-                acc = Some(match acc {
-                    None => p,
-                    Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
-                });
-            }
-            // An empty k extent (0-column lhs) contributes an all-zero
-            // product block — empty matrices flow legally from indexing.
-            let out = match acc {
-                Some(m) => m,
-                None => {
-                    let r = (a.rows() - i * bs).min(bs);
-                    let c = (b.cols() - j * bs).min(bs);
-                    Matrix::zeros(r, c)
-                }
-            };
-            cluster.record_task(cluster.worker_for(i, j), flops);
-            blocks.push(out.examine_and_convert());
+            let lhs: Vec<Arc<Matrix>> = (0..bk).map(|k| a.shared_block(i, k)).collect();
+            let rhs: Vec<Arc<Matrix>> = (0..bk).map(|k| b.shared_block(k, j)).collect();
+            let r = (a.rows() - i * bs).min(bs);
+            let c = (b.cols() - j * bs).min(bs);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || {
+                    let mut acc: Option<Matrix> = None;
+                    let mut flops = 0u64;
+                    for (lb, rb) in lhs.iter().zip(rhs.iter()) {
+                        flops += 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
+                        let p = mult::matmult(lb, rb)?;
+                        acc = Some(match acc {
+                            None => p,
+                            Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
+                        });
+                    }
+                    // An empty k extent (0-column lhs) contributes an
+                    // all-zero product block — empty matrices flow
+                    // legally from indexing.
+                    let out = match acc {
+                        Some(m) => m,
+                        None => Matrix::zeros(r, c),
+                    };
+                    Ok((out.examine_and_convert(), flops))
+                }),
+            ));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (out, flops) = res?;
+        cluster.record_task(cluster.worker_for(idx / bcols, idx % bcols), flops);
+        blocks.push(out);
     }
     Ok(BlockedMatrix::from_blocks(a.rows(), b.cols(), bs, blocks))
 }
@@ -197,14 +216,22 @@ pub fn binary_blocked(
         return binary_blocked(cluster, a, &rb, op);
     }
     let (brows, bcols) = (a.block_rows(), a.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Result<Matrix>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let lb = a.block(i, j);
-            let out = elementwise::binary(lb, b.block(i, j), op)?;
-            cluster.record_task(cluster.worker_for(i, j), lb.len() as u64);
-            blocks.push(out);
+            let lb = a.shared_block(i, j);
+            let rb = b.shared_block(i, j);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || elementwise::binary(&lb, &rb, op)),
+            ));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), a.block(i, j).len() as u64);
+        blocks.push(res?);
     }
     Ok(BlockedMatrix::from_blocks(a.rows(), a.cols(), a.block_size(), blocks))
 }
@@ -225,14 +252,19 @@ pub fn binary(cluster: &Cluster, a: &Matrix, b: &Matrix, op: BinOp) -> Result<Ma
 /// symmetric partitioner. No collect, no re-blockify.
 pub fn transpose_blocked(cluster: &Cluster, m: &BlockedMatrix) -> BlockedMatrix {
     let (brows, bcols) = (m.block_rows(), m.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Matrix>> = Vec::with_capacity(brows * bcols);
     // Output grid is bcols × brows, row-major over the swapped indices.
     for j in 0..bcols {
         for i in 0..brows {
-            let b = m.block(i, j);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            blocks.push(reorg::transpose(b));
+            let b = m.shared_block(i, j);
+            tasks.push((cluster.worker_for(i, j), Box::new(move || reorg::transpose(&b))));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, out) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (j, i) = (idx / brows, idx % brows);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        blocks.push(out);
     }
     BlockedMatrix::from_blocks(m.cols(), m.rows(), m.block_size(), blocks)
 }
@@ -247,13 +279,21 @@ pub fn scalar_blocked(
     swapped: bool,
 ) -> Result<BlockedMatrix> {
     let (brows, bcols) = (m.block_rows(), m.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Result<Matrix>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let b = m.block(i, j);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            blocks.push(elementwise::scalar_op(b, s, op, swapped)?);
+            let b = m.shared_block(i, j);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || elementwise::scalar_op(&b, s, op, swapped)),
+            ));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        blocks.push(res?);
     }
     Ok(BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks))
 }
@@ -261,13 +301,18 @@ pub fn scalar_blocked(
 /// Blocked unary cellwise op (exp, sqrt, neg, ...): a map over blocks.
 pub fn unary_blocked(cluster: &Cluster, m: &BlockedMatrix, op: UnaryOp) -> BlockedMatrix {
     let (brows, bcols) = (m.block_rows(), m.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Matrix>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let b = m.block(i, j);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            blocks.push(elementwise::unary(b, op));
+            let b = m.shared_block(i, j);
+            tasks.push((cluster.worker_for(i, j), Box::new(move || elementwise::unary(&b, op))));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, out) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        blocks.push(out);
     }
     BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks)
 }
@@ -281,13 +326,19 @@ pub fn full_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> f64 
         other => other,
     };
     let bcols = m.block_cols();
-    let mut partials = Vec::with_capacity(m.block_rows() * bcols);
+    let mut tasks: Vec<DistTask<f64>> = Vec::with_capacity(m.block_rows() * bcols);
     for i in 0..m.block_rows() {
         for j in 0..bcols {
-            let b = m.block(i, j);
-            partials.push(agg::full_agg(b, partial_op));
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+            let b = m.shared_block(i, j);
+            tasks.push((cluster.worker_for(i, j), Box::new(move || agg::full_agg(&b, partial_op))));
         }
+    }
+    // Per-block partials come back in grid order; the driver-side folds
+    // below consume them in exactly the serial iteration order.
+    let partials = cluster.run_tasks(tasks);
+    for (idx, _) in partials.iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
     }
     match op {
         AggOp::Sum | AggOp::SumSq => partials.iter().sum(),
@@ -311,13 +362,23 @@ pub fn row_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> Resul
         other => other,
     };
     let combine = combine_binop(op);
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut tasks: Vec<DistTask<Matrix>> = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = m.shared_block(i, j);
+            tasks.push((cluster.worker_for(i, j), Box::new(move || agg::row_agg(&b, partial_op))));
+        }
+    }
+    // Partials fold on the driver in ascending j per block row — the
+    // serial order, so the combine is byte-identical to threads=1.
+    let mut partials = cluster.run_tasks(tasks).into_iter();
     let mut out = DenseMatrix::zeros(m.rows(), 1);
-    for i in 0..m.block_rows() {
+    for i in 0..brows {
         let mut acc: Option<Matrix> = None;
-        for j in 0..m.block_cols() {
-            let b = m.block(i, j);
-            let p = agg::row_agg(b, partial_op);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+        for j in 0..bcols {
+            let p = partials.next().expect("row-agg partial per block");
+            cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
             acc = Some(match acc {
                 None => p,
                 Some(q) => elementwise::binary(&q, &p, combine)?,
@@ -342,13 +403,23 @@ pub fn col_agg_blocked(cluster: &Cluster, m: &BlockedMatrix, op: AggOp) -> Resul
         other => other,
     };
     let combine = combine_binop(op);
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    // Tasks in the serial iteration order (j outer, i inner) so the
+    // driver-side fold below consumes partials in the same order.
+    let mut tasks: Vec<DistTask<Matrix>> = Vec::with_capacity(brows * bcols);
+    for j in 0..bcols {
+        for i in 0..brows {
+            let b = m.shared_block(i, j);
+            tasks.push((cluster.worker_for(i, j), Box::new(move || agg::col_agg(&b, partial_op))));
+        }
+    }
+    let mut partials = cluster.run_tasks(tasks).into_iter();
     let mut out = DenseMatrix::zeros(1, m.cols());
-    for j in 0..m.block_cols() {
+    for j in 0..bcols {
         let mut acc: Option<Matrix> = None;
-        for i in 0..m.block_rows() {
-            let b = m.block(i, j);
-            let p = agg::col_agg(b, partial_op);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
+        for i in 0..brows {
+            let p = partials.next().expect("col-agg partial per block");
+            cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
             acc = Some(match acc {
                 None => p,
                 Some(q) => elementwise::binary(&q, &p, combine)?,
@@ -414,14 +485,17 @@ pub fn slice_blocked(
         cluster.record_shuffle((orows as u64) * (ocols as u64) * 8);
     }
     let (obr, obc) = (super::ceil_div(orows, bs), super::ceil_div(ocols, bs));
-    let mut blocks = Vec::with_capacity(obr * obc);
+    // Tasks share the source grid (`Arc` bumps) so the gathers can run
+    // concurrently without borrowing `m`.
+    let src = Arc::new(m.clone());
+    let mut tasks: Vec<DistTask<Result<Arc<Matrix>>>> = Vec::with_capacity(obr * obc);
+    let mut workers = Vec::with_capacity(obr * obc);
     for i in 0..obr {
         let grl = rl + i * bs;
         let gru = (grl + bs).min(ru);
         for j in 0..obc {
             let gcl = cl + j * bs;
             let gcu = (gcl + bs).min(cu);
-            let out = gather_region(m, grl, gru, gcl, gcu)?;
             // Task attribution: a single-source selection/trim is a
             // narrow dependency executed where the source block lives
             // (that is what makes the aligned case genuinely
@@ -434,9 +508,16 @@ pub fn slice_blocked(
             } else {
                 cluster.worker_for(i, j)
             };
-            cluster.record_task(worker, out.len() as u64);
-            blocks.push(out);
+            workers.push(worker);
+            let src = Arc::clone(&src);
+            tasks.push((worker, Box::new(move || gather_region(&src, grl, gru, gcl, gcu))));
         }
+    }
+    let mut blocks = Vec::with_capacity(obr * obc);
+    for (res, worker) in cluster.run_tasks(tasks).into_iter().zip(workers) {
+        let out = res?;
+        cluster.record_task(worker, out.len() as u64);
+        blocks.push(out);
     }
     Ok(BlockedMatrix::from_shared_blocks(orows, ocols, bs, blocks))
 }
@@ -560,16 +641,20 @@ fn rewrite_touched_blocks(
     let (bj0, bj1) = (cl / bs, (cu - 1) / bs);
     // One pass over the grid: untouched blocks are *shared* with the
     // source grid (an `Arc` bump — the write is O(touched) in memory
-    // traffic); touched blocks are rewritten directly, never cloned
-    // first.
-    let mut blocks: Vec<Arc<Matrix>> = Vec::with_capacity(brows * bcols);
+    // traffic); touched blocks are rewritten by pool tasks, never cloned
+    // first. The patches are cut driver-side (`patch_for` borrows the
+    // broadcast source), then each rewrite runs on the touched block's
+    // worker.
+    let mut blocks: Vec<Option<Arc<Matrix>>> = Vec::with_capacity(brows * bcols);
+    let mut tasks: Vec<DistTask<Result<Matrix>>> = Vec::new();
+    let mut touched_meta: Vec<(usize, usize, u64)> = Vec::new(); // (grid idx, worker, flops)
     for i in 0..brows {
         for j in 0..bcols {
             let b = target.block(i, j);
             let touched =
                 (bi0..=bi1).contains(&i) && (bj0..=bj1).contains(&j);
             if !touched {
-                blocks.push(target.shared_block(i, j));
+                blocks.push(Some(target.shared_block(i, j)));
                 continue;
             }
             let gr0 = (i * bs).max(rl);
@@ -577,15 +662,25 @@ fn rewrite_touched_blocks(
             let gc0 = (j * bs).max(cl);
             let gc1 = (j * bs + b.cols()).min(cu);
             if gr0 >= gr1 || gc0 >= gc1 {
-                blocks.push(target.shared_block(i, j));
+                blocks.push(Some(target.shared_block(i, j)));
                 continue;
             }
             let patch = patch_for(gr0, gr1, gc0, gc1)?;
-            let rewritten = reorg::left_index(b, gr0 - i * bs, gc0 - j * bs, &patch)?;
-            cluster.record_task(cluster.worker_for(i, j), ((gr1 - gr0) * (gc1 - gc0)) as u64);
-            blocks.push(Arc::new(rewritten.examine_and_convert()));
+            let block = target.shared_block(i, j);
+            let (r0, c0) = (gr0 - i * bs, gc0 - j * bs);
+            let worker = cluster.worker_for(i, j);
+            touched_meta.push((blocks.len(), worker, ((gr1 - gr0) * (gc1 - gc0)) as u64));
+            tasks.push((worker, Box::new(move || reorg::left_index(&block, r0, c0, &patch))));
+            blocks.push(None);
         }
     }
+    for ((idx, worker, flops), res) in
+        touched_meta.into_iter().zip(cluster.run_tasks(tasks).into_iter())
+    {
+        cluster.record_task(worker, flops);
+        blocks[idx] = Some(Arc::new(res?.examine_and_convert()));
+    }
+    let blocks = blocks.into_iter().map(|b| b.expect("every grid slot filled")).collect();
     Ok(BlockedMatrix::from_shared_blocks(target.rows(), target.cols(), bs, blocks))
 }
 
@@ -621,59 +716,120 @@ pub fn binary_broadcast_blocked(
     }
     let bs = m.block_size();
     let (brows, bcols) = (m.block_rows(), m.block_cols());
-    let mut blocks = Vec::with_capacity(brows * bcols);
+    // Each worker slices the matching vector segment out of its broadcast
+    // copy and joins it against the resident block.
+    let bv = Arc::new(v.clone());
+    let mut tasks: Vec<DistTask<Result<Matrix>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
         for j in 0..bcols {
-            let b = m.block(i, j);
-            // Each worker joins its block against the matching vector
-            // segment of the broadcast copy.
-            let seg = if col {
-                reorg::slice(v, i * bs, i * bs + b.rows(), 0, 1)?
-            } else {
-                reorg::slice(v, 0, 1, j * bs, j * bs + b.cols())?
-            };
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            blocks.push(elementwise::binary(b, &seg, op)?);
+            let b = m.shared_block(i, j);
+            let bv = Arc::clone(&bv);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || {
+                    let seg = if col {
+                        reorg::slice(&bv, i * bs, i * bs + b.rows(), 0, 1)?
+                    } else {
+                        reorg::slice(&bv, 0, 1, j * bs, j * bs + b.cols())?
+                    };
+                    elementwise::binary(&b, &seg, op)
+                }),
+            ));
         }
+    }
+    let mut blocks = Vec::with_capacity(brows * bcols);
+    for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        blocks.push(res?);
     }
     Ok(BlockedMatrix::from_blocks(mr, mc, bs, blocks))
 }
 
-/// Blocked rowIndexMax: each worker scans its block's cells and the
-/// running (value, index) state folds across the row's column groups at
-/// the driver (the rows×1 output returns with the job, like the axis
-/// aggregates). The fold is **CP's exact left-to-right strict-`>` scan,
-/// chunked by block** — the initial best is the row's first cell and a
-/// candidate only wins with `>` — so first-occurrence ties *and* rows
-/// containing NaN anywhere agree with `agg::row_index_max` by
-/// construction (per-block argmax composition would not: a block-leading
-/// NaN poisons that block's local argmax).
+/// Blocked rowIndexMax: each worker scans its block's rows into per-row
+/// **candidates** and the driver folds them across the row's column
+/// groups in ascending j (the rows×1 output returns with the job, like
+/// the axis aggregates). The composition reproduces **CP's exact
+/// left-to-right strict-`>` scan** (`agg::row_index_max`):
+///
+/// * the j=0 block scans with CP's initialization — the row's first cell
+///   is the initial best, so a leading NaN sticks (no cell compares `>`
+///   against NaN);
+/// * later blocks scan against `-inf` and produce `Some((value, global
+///   column))` only for cells that could displace *some* running best —
+///   NaN/`-inf` cells never can, so an all-NaN block yields `None`
+///   instead of a poisoned local argmax;
+/// * the driver takes a j>0 candidate only on strict `>`, preserving
+///   first-occurrence ties.
+///
+/// A block's chained scan ends at the leftmost occurrence of its maximum,
+/// which is exactly what the block-local scan emits — so the fold is
+/// byte-identical to the serial chained scan for every NaN/tie layout.
 pub fn row_index_max_blocked(cluster: &Cluster, m: &BlockedMatrix) -> Result<Matrix> {
     let rows = m.rows();
     let bs = m.block_size();
+    let (brows, bcols) = (m.block_rows(), m.block_cols());
+    let mut tasks: Vec<DistTask<Vec<Option<(f64, f64)>>>> = Vec::with_capacity(brows * bcols);
+    for i in 0..brows {
+        for j in 0..bcols {
+            let b = m.shared_block(i, j);
+            tasks.push((
+                cluster.worker_for(i, j),
+                Box::new(move || {
+                    let d = b.to_dense();
+                    let mut cands = Vec::with_capacity(d.rows);
+                    for r in 0..d.rows {
+                        let row = d.row(r);
+                        if j == 0 {
+                            // CP's initial best: the row's first cell,
+                            // NaN included (a NaN best is never
+                            // displaced within this block).
+                            let mut bv = row[0];
+                            let mut bi = 1.0f64;
+                            for (c, v) in row.iter().enumerate().skip(1) {
+                                if *v > bv {
+                                    bv = *v;
+                                    bi = (c + 1) as f64;
+                                }
+                            }
+                            cands.push(Some((bv, bi)));
+                        } else {
+                            // Leftmost strict maximum vs -inf; NaN/-inf
+                            // cells never become candidates.
+                            let mut cand: Option<(f64, f64)> = None;
+                            for (c, v) in row.iter().enumerate() {
+                                let wins = match cand {
+                                    None => *v > f64::NEG_INFINITY,
+                                    Some((bv, _)) => *v > bv,
+                                };
+                                if wins {
+                                    cand = Some((*v, (j * bs + c + 1) as f64));
+                                }
+                            }
+                            cands.push(cand);
+                        }
+                    }
+                    cands
+                }),
+            ));
+        }
+    }
+    let results = cluster.run_tasks(tasks);
     let mut best_val = vec![f64::NEG_INFINITY; rows];
     let mut best_idx = vec![1.0f64; rows];
-    for i in 0..m.block_rows() {
-        for j in 0..m.block_cols() {
-            let b = m.block(i, j);
-            cluster.record_task(cluster.worker_for(i, j), b.len() as u64);
-            let d = b.to_dense();
-            for r in 0..d.rows {
-                let g = i * bs + r;
-                let row = d.row(r);
-                let mut start = 0usize;
-                if j == 0 {
-                    // CP's initial best: the row's first cell, NaN
-                    // included (a NaN best is never displaced).
-                    best_val[g] = row[0];
-                    best_idx[g] = 1.0;
-                    start = 1;
-                }
-                for (c, v) in row.iter().enumerate().skip(start) {
-                    if *v > best_val[g] {
-                        best_val[g] = *v;
-                        best_idx[g] = (j * bs + c + 1) as f64;
-                    }
+    for (idx, cands) in results.iter().enumerate() {
+        let (i, j) = (idx / bcols, idx % bcols);
+        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        for (r, cand) in cands.iter().enumerate() {
+            let g = i * bs + r;
+            if j == 0 {
+                let (v, ix) = cand.expect("j=0 scan always yields a best");
+                best_val[g] = v;
+                best_idx[g] = ix;
+            } else if let Some((v, ix)) = cand {
+                if *v > best_val[g] {
+                    best_val[g] = *v;
+                    best_idx[g] = *ix;
                 }
             }
         }

@@ -1,0 +1,349 @@
+//! Hand-rolled worker thread pool for the blocked backend.
+//!
+//! SystemML's distributed operators execute as Spark tasks: one task per
+//! block (or band), placed on the executor that holds the partition, with
+//! a barrier at the stage boundary before the driver combines partial
+//! results. This module reproduces that execution model with plain OS
+//! threads and zero dependencies:
+//!
+//! * [`WorkerPool::new`] spawns `threads` long-lived workers, each owning
+//!   a private FIFO job queue (a `Mutex<VecDeque>` + `Condvar` pair — not
+//!   an mpsc channel, so any number of driver threads can submit
+//!   concurrently without cloning senders).
+//! * [`WorkerPool::run_tasks`] takes a batch of `(worker, closure)` tasks,
+//!   enqueues each closure on the queue of `worker % threads` (the caller
+//!   passes `Cluster::worker_for(i, j)`, so tasks land on the thread that
+//!   "owns" the block, like partition-local Spark tasks), and blocks at a
+//!   barrier until every task in the batch has finished. Results come back
+//!   in **submission order**, regardless of completion order — the driver
+//!   then folds them exactly as the serial loop did, which is what keeps
+//!   parallel results byte-identical to serial execution.
+//! * A pool built with `threads <= 1` spawns nothing: `run_tasks` runs
+//!   every closure inline on the caller thread. That is the `threads = 1`
+//!   escape hatch (`SystemConfig::dist_threads = 1`) restoring fully
+//!   serial execution for debugging.
+//!
+//! Safety/correctness notes:
+//! * Task closures must be `'static`: operators capture `Arc<Matrix>`
+//!   block clones (refcount bumps), never borrows of the block grid.
+//! * Tasks are pure compute — they must not submit nested batches to the
+//!   same pool or take driver-side locks ([`super::cache::BlockCache`]'s
+//!   mutex is only touched at dispatch time, before tasks are built).
+//!   A task that blocked on its own pool could deadlock; nothing in
+//!   `dist/ops.rs` / `dist/nn.rs` does.
+//! * A panicking task is caught on the worker (so the barrier still
+//!   completes and the pool survives) and re-raised on the submitting
+//!   driver thread, preserving the serial panic behavior.
+//! * Batches from concurrent drivers (parfor bodies issuing DIST ops) may
+//!   interleave on the worker queues; each batch tracks its own
+//!   remaining-task count, so the barriers are independent.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::metrics;
+
+/// A unit of work bound for one worker thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One task of a batch: the owning worker index and the compute closure.
+/// The closure's return value is surfaced by [`WorkerPool::run_tasks`] in
+/// submission order.
+pub type DistTask<R> = (usize, Box<dyn FnOnce() -> R + Send + 'static>);
+
+/// One worker's job queue.
+struct Queue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        st.jobs.push_back(job);
+        drop(st);
+        self.ready.notify_one();
+    }
+}
+
+/// Per-batch barrier state: one result slot per task plus a countdown the
+/// submitting driver waits on.
+struct Batch<R> {
+    slots: Vec<Mutex<Option<std::thread::Result<R>>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+/// The long-lived worker pool owned by a `Cluster`.
+pub struct WorkerPool {
+    /// One queue per worker thread; empty in serial (`threads <= 1`) mode.
+    queues: Vec<Arc<Queue>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` long-lived workers. `threads <= 1` spawns nothing
+    /// and makes [`run_tasks`](WorkerPool::run_tasks) execute inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        if threads <= 1 {
+            return WorkerPool { queues: Vec::new(), workers: Vec::new() };
+        }
+        let queues: Vec<Arc<Queue>> = (0..threads).map(|_| Arc::new(Queue::new())).collect();
+        let workers = queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let q = Arc::clone(q);
+                std::thread::Builder::new()
+                    .name(format!("dist-worker-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawn dist worker thread")
+            })
+            .collect();
+        WorkerPool { queues, workers }
+    }
+
+    /// Number of concurrent task lanes (1 in serial mode).
+    pub fn threads(&self) -> usize {
+        self.queues.len().max(1)
+    }
+
+    /// True when the pool runs every task inline on the caller thread.
+    pub fn is_serial(&self) -> bool {
+        self.queues.is_empty()
+    }
+
+    /// Execute a batch of tasks and return their results in submission
+    /// order. Each task runs on the thread `worker % threads`; the call
+    /// blocks at a barrier until the whole batch has completed. A task
+    /// panic is re-raised here after the barrier (the pool survives).
+    pub fn run_tasks<R: Send + 'static>(&self, tasks: Vec<DistTask<R>>) -> Vec<R> {
+        if self.queues.is_empty() {
+            // Serial escape hatch: the caller thread is the one worker.
+            return tasks.into_iter().map(|(_, f)| f()).collect();
+        }
+        let n = tasks.len();
+        metrics::global().pool_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics::global().pool_tasks.fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        let batch = Arc::new(Batch {
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+        });
+        for (idx, (worker, f)) in tasks.into_iter().enumerate() {
+            let b = Arc::clone(&batch);
+            self.queues[worker % self.queues.len()].push(Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(f));
+                *b.slots[idx].lock().unwrap() = Some(out);
+                let mut rem = b.remaining.lock().unwrap();
+                *rem -= 1;
+                if *rem == 0 {
+                    b.done.notify_all();
+                }
+            }));
+        }
+        // Barrier: wait for the batch countdown to hit zero.
+        let mut rem = batch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = batch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        batch
+            .slots
+            .iter()
+            .map(|slot| match slot.lock().unwrap().take().expect("dist task completed") {
+                Ok(r) => r,
+                Err(panic) => resume_unwind(panic),
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.state.lock().unwrap().shutdown = true;
+            q.ready.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkerPool(threads={})", self.threads())
+    }
+}
+
+fn worker_loop(q: &Queue) {
+    loop {
+        let job = {
+            let mut st = q.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = q.ready.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// Run one closure per entry on scoped threads and return the results in
+/// spawn order, re-raising the first panic. This is the shared
+/// fork-join helper for drivers whose bodies *borrow* caller state (the
+/// `runtime/parfor` executor runs interpreter chunks over `&Interpreter`
+/// and so cannot use the `'static` pool above); block-level DIST tasks
+/// use the long-lived [`WorkerPool`] instead.
+pub fn run_scoped<T, F>(fns: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = fns.into_iter().map(|f| s.spawn(f)).collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(panic) => resume_unwind(panic),
+            })
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.is_serial());
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        let out = pool.run_tasks::<bool>(vec![
+            (0, Box::new(move || std::thread::current().id() == caller) as Box<_>),
+        ]);
+        assert_eq!(out, vec![true], "threads=1 must execute on the caller");
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<DistTask<usize>> = (0..64)
+            .map(|i| {
+                (
+                    i % 4,
+                    Box::new(move || {
+                        // Stagger completion so order would scramble
+                        // without the ordered result slots.
+                        if i % 4 == 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        i
+                    }) as Box<_>,
+                )
+            })
+            .collect();
+        let out = pool.run_tasks(tasks);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_run_on_their_assigned_worker() {
+        let pool = WorkerPool::new(3);
+        let names = pool.run_tasks::<String>(
+            (0..9)
+                .map(|i| {
+                    (
+                        i % 3,
+                        Box::new(|| std::thread::current().name().unwrap_or("").to_string())
+                            as Box<_>,
+                    )
+                })
+                .collect(),
+        );
+        for (i, name) in names.iter().enumerate() {
+            assert_eq!(name, &format!("dist-worker-{}", i % 3));
+        }
+    }
+
+    #[test]
+    fn concurrent_batches_do_not_interfere() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let drivers: Vec<_> = (0..4)
+            .map(|d| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        let out = pool.run_tasks::<usize>(
+                            (0..8).map(|i| (i, Box::new(move || d * 100 + i) as Box<_>)).collect(),
+                        );
+                        assert_eq!(out, (0..8).map(|i| d * 100 + i).collect::<Vec<_>>());
+                        total.fetch_add(out.len(), Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for d in drivers {
+            d.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 8);
+    }
+
+    #[test]
+    fn task_panic_propagates_but_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks::<usize>(vec![
+                (0, Box::new(|| panic!("boom")) as Box<_>),
+                (1, Box::new(|| 7) as Box<_>),
+            ]);
+        }));
+        assert!(res.is_err(), "task panic must reach the driver");
+        // The pool is still usable after the panic.
+        let out = pool.run_tasks::<usize>(vec![(0, Box::new(|| 42) as Box<_>)]);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn empty_batch_returns_immediately() {
+        let pool = WorkerPool::new(2);
+        let out: Vec<usize> = pool.run_tasks(Vec::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_scoped_keeps_spawn_order() {
+        let vals = vec![3usize, 1, 4, 1, 5];
+        let fns: Vec<_> = vals.iter().map(|&v| move || v * 2).collect();
+        assert_eq!(run_scoped(fns), vec![6, 2, 8, 2, 10]);
+    }
+}

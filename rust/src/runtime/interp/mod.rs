@@ -69,11 +69,19 @@ impl Interpreter {
             // every chained DIST result back to the driver.
             let storage = config.worker_storage.saturating_mul(config.num_workers.max(1));
             let cache_storage = if config.cache_enabled { storage } else { 0 };
-            Some(Arc::new(crate::runtime::dist::Cluster::with_budgets(
+            // dist_threads=0 means one pool thread per simulated worker;
+            // dist_threads=1 is the serial escape hatch (see dist::pool).
+            let threads = if config.dist_threads == 0 {
+                config.num_workers.max(1)
+            } else {
+                config.dist_threads
+            };
+            Some(Arc::new(crate::runtime::dist::Cluster::with_budgets_threads(
                 config.num_workers,
                 config.block_size,
                 cache_storage,
                 storage,
+                threads,
             )))
         } else {
             None

@@ -56,18 +56,150 @@ pub fn matmult_traced(lhs: &Matrix, rhs: &Matrix) -> Result<(Matrix, MmOperator)
     Ok((out.examine_and_convert(), op))
 }
 
-/// Dense×dense: cache-blocked i-k-j kernel with 4-wide inner unrolling.
-/// This is the CP hot path; see EXPERIMENTS.md §Perf for the iteration log.
+// Tile sizes shared by the packed kernel and the reference kernel. Tuned
+// on the benchmark VM (see EXPERIMENTS.md §Perf): the packed B panel
+// (KB x NB x 8B = 192 KB) stays L2-resident while an A micro-panel strip
+// (MR x KB = 4 KB) streams from L1.
+const MB: usize = 64;
+const KB: usize = 128;
+const NB: usize = 192;
+/// Micro-kernel register tile: MR x NR accumulators live in registers for
+/// the whole k-panel, so each FLOP touches packed memory only.
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// Dense×dense: packed, tiled GEMM (GotoBLAS-style). The CP hot path —
+/// also reused by the conv2d im2col path and, per-block, by the blocked
+/// backend's matmult tasks. See EXPERIMENTS.md §Perf for the iteration log.
+///
+/// Structure: for each NB column panel of B, for each KB k-panel, B is
+/// packed once into contiguous kb×NR micro-panels; each MB×kb slab of A is
+/// packed into MR×kb micro-panels; a 4×4 register micro-kernel then runs
+/// `+=` rank-kb updates over C in ascending k0 order. A and B edges are
+/// zero-padded in M/N inside the packs (never in K), and the writeback
+/// clips the padded rows/cols, so odd sizes take the same code path.
 pub fn mm_dense_dense(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     metrics::global().add_flops(2 * (m * k * n) as u64);
     let mut c = DenseMatrix::zeros(m, n);
-    // Block sizes tuned on the benchmark VM (see EXPERIMENTS.md §Perf):
-    // the B panel (KB x NB x 8B = 192 KB) stays L2-resident, and the
-    // 2-row micro-kernel halves B traffic per FLOP.
-    const MB: usize = 64;
-    const KB: usize = 128;
-    const NB: usize = 192;
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+    // Packing buffers, allocated once and reused across panels. Sized for
+    // full tiles; edge tiles simply use a prefix.
+    let mut apack = vec![0.0f64; MB * KB];
+    let mut bpack = vec![0.0f64; KB * NB];
+    for j0 in (0..n).step_by(NB) {
+        let j1 = (j0 + NB).min(n);
+        let nb = j1 - j0;
+        let njr = nb.div_ceil(NR); // NR-wide micro-panels in this B panel
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let kb = k1 - k0;
+            pack_b_panel(b, k0, kb, j0, nb, &mut bpack);
+            for i0 in (0..m).step_by(MB) {
+                let i1 = (i0 + MB).min(m);
+                let mb = i1 - i0;
+                let nir = mb.div_ceil(MR); // MR-tall micro-panels in this A slab
+                pack_a_panel(a, i0, mb, k0, kb, &mut apack);
+                for ip in 0..nir {
+                    let ap = &apack[ip * MR * kb..(ip + 1) * MR * kb];
+                    for jp in 0..njr {
+                        let bp = &bpack[jp * kb * NR..(jp + 1) * kb * NR];
+                        let mut acc = [0.0f64; MR * NR];
+                        micro_kernel_4x4(ap, bp, &mut acc);
+                        // Writeback (`+=` across k0 panels), clipping the
+                        // zero-padded edge rows/cols.
+                        let rbase = i0 + ip * MR;
+                        let cbase = j0 + jp * NR;
+                        for r in 0..MR.min(m - rbase) {
+                            let crow = &mut c.data[(rbase + r) * n..];
+                            for cc in 0..NR.min(n - cbase) {
+                                crow[cbase + cc] += acc[r * NR + cc];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Pack `a[i0..i0+mb, k0..k0+kb]` into MR-tall micro-panels: panel `ip`
+/// occupies `apack[ip*MR*kb ..]`, laid out k-major so the micro-kernel
+/// reads MR values per k step contiguously. Rows past `mb` are zeroed.
+fn pack_a_panel(a: &DenseMatrix, i0: usize, mb: usize, k0: usize, kb: usize, apack: &mut [f64]) {
+    let lda = a.cols;
+    for ip in 0..mb.div_ceil(MR) {
+        let panel = &mut apack[ip * MR * kb..(ip + 1) * MR * kb];
+        let rows = MR.min(mb - ip * MR);
+        for r in 0..rows {
+            let arow = &a.data[(i0 + ip * MR + r) * lda + k0..];
+            for (p, av) in arow.iter().take(kb).enumerate() {
+                panel[p * MR + r] = *av;
+            }
+        }
+        for r in rows..MR {
+            for p in 0..kb {
+                panel[p * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack `b[k0..k0+kb, j0..j0+nb]` into NR-wide micro-panels: panel `jp`
+/// occupies `bpack[jp*kb*NR ..]`, k-major (NR values per k step). Columns
+/// past `nb` are zeroed.
+fn pack_b_panel(b: &DenseMatrix, k0: usize, kb: usize, j0: usize, nb: usize, bpack: &mut [f64]) {
+    let ldb = b.cols;
+    for jp in 0..nb.div_ceil(NR) {
+        let panel = &mut bpack[jp * kb * NR..(jp + 1) * kb * NR];
+        let cols = NR.min(nb - jp * NR);
+        for p in 0..kb {
+            let brow = &b.data[(k0 + p) * ldb + j0 + jp * NR..];
+            let dst = &mut panel[p * NR..p * NR + NR];
+            dst[..cols].copy_from_slice(&brow[..cols]);
+            for cv in dst.iter_mut().skip(cols) {
+                *cv = 0.0;
+            }
+        }
+    }
+}
+
+/// 4×4 register micro-kernel: 16 accumulators, one rank-1 update per k
+/// step from the packed panels (`ap`: MR values/step, `bp`: NR values/
+/// step). `chunks_exact` pairs the panels step-for-step, so `kb` is
+/// implicit in the panel lengths.
+#[inline(always)]
+fn micro_kernel_4x4(ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        acc[0] += av[0] * bv[0];
+        acc[1] += av[0] * bv[1];
+        acc[2] += av[0] * bv[2];
+        acc[3] += av[0] * bv[3];
+        acc[4] += av[1] * bv[0];
+        acc[5] += av[1] * bv[1];
+        acc[6] += av[1] * bv[2];
+        acc[7] += av[1] * bv[3];
+        acc[8] += av[2] * bv[0];
+        acc[9] += av[2] * bv[1];
+        acc[10] += av[2] * bv[2];
+        acc[11] += av[2] * bv[3];
+        acc[12] += av[3] * bv[0];
+        acc[13] += av[3] * bv[1];
+        acc[14] += av[3] * bv[2];
+        acc[15] += av[3] * bv[3];
+    }
+}
+
+/// The previous dense×dense kernel (cache-blocked i-k-j with 4-wide
+/// k-unrolling, no packing) — kept as the GFLOP/s baseline the bench
+/// compares the packed kernel against, and as a correctness oracle.
+pub fn mm_dense_dense_reference(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    metrics::global().add_flops(2 * (m * k * n) as u64);
+    let mut c = DenseMatrix::zeros(m, n);
     for i0 in (0..m).step_by(MB) {
         let i1 = (i0 + MB).min(m);
         for k0 in (0..k).step_by(KB) {
@@ -304,6 +436,49 @@ mod tests {
         let b = random(&mut rng, 301, 67, 1.0);
         let c = matmult(&a, &b).unwrap();
         assert!(approx_eq_slice(&c.to_row_major_vec(), &naive_mm(&a, &b), 1e-9));
+    }
+
+    #[test]
+    fn packed_kernel_matches_reference_across_edge_geometries() {
+        // Exercise every padding path of the packed kernel: sizes below one
+        // micro-tile, exact tile multiples, one-past-tile edges, and tall/
+        // wide/deep skew. Reference kernel is the oracle (both are exact
+        // reorderings of the same products, so only summation order may
+        // differ → approx compare).
+        let mut rng = Prng::new(11);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),                // smaller than one MR x NR tile
+            (4, 128, 4),              // exactly one micro-tile, one k-panel
+            (64, 128, 192),           // exactly one MB x KB x NB macro-tile
+            (65, 129, 193),           // one past every tile edge
+            (130, 301, 67),           // odd everything
+            (7, 400, 3),              // deep k: multiple k-panels, += writeback
+            (200, 2, 9),              // shallow k
+        ] {
+            let a = random(&mut rng, m, k, 1.0);
+            let b = random(&mut rng, k, n, 1.0);
+            let (ad, bd) = (a.to_dense(), b.to_dense());
+            let packed = mm_dense_dense(&ad, &bd);
+            let reference = mm_dense_dense_reference(&ad, &bd);
+            assert!(
+                approx_eq_slice(&packed.data, &reference.data, 1e-9),
+                "packed vs reference mismatch at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_kernel_handles_empty_dims() {
+        let a = DenseMatrix::zeros(0, 5);
+        let b = DenseMatrix::zeros(5, 3);
+        let c = mm_dense_dense(&a, &b);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let a = DenseMatrix::zeros(4, 0);
+        let b = DenseMatrix::zeros(0, 3);
+        let c = mm_dense_dense(&a, &b);
+        assert_eq!((c.rows, c.cols), (4, 3));
+        assert!(c.data.iter().all(|v| *v == 0.0));
     }
 
     #[test]

@@ -9,9 +9,8 @@
 
 pub mod deps;
 
-use std::sync::Mutex;
-
 use crate::dml::ast::{ParForOpts, Stmt};
+use crate::runtime::dist::pool;
 use crate::runtime::interp::{Ctx, Interpreter, Scope, Value};
 use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
@@ -89,24 +88,29 @@ pub fn execute_parfor(
         }
     }
 
-    // 2. Execute chunks. Workers get contiguous iteration ranges.
+    // 2. Execute chunks. Workers get contiguous iteration ranges. The
+    //    fork-join goes through the shared scoped-run helper in
+    //    `dist::pool` (chunk bodies borrow the interpreter, so they use
+    //    scoped threads rather than the cluster's 'static task pool);
+    //    results come back in chunk order, making the merge below
+    //    deterministic regardless of completion order. DIST ops issued
+    //    inside the bodies submit batches to the cluster pool from these
+    //    driver threads concurrently — the pool is built for that.
     let chunks: Vec<Vec<f64>> = split_chunks(iters, plan.degree);
-    let results: Mutex<Vec<Result<Scope>>> = Mutex::new(Vec::new());
-    std::thread::scope(|s| {
-        for (wid, chunk) in chunks.iter().enumerate() {
-            let base_scope = scope.clone();
-            let results = &results;
-            let plan = &plan;
-            s.spawn(move || {
-                let out = run_chunk(interp, var, chunk, body, base_scope, ctx, plan, wid);
-                results.lock().unwrap().push(out);
-            });
-        }
-    });
+    let plan_ref = &plan;
+    let worker_scopes: Vec<Result<Scope>> = pool::run_scoped(
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(wid, chunk)| {
+                let base_scope = scope.clone();
+                move || run_chunk(interp, var, chunk, body, base_scope, ctx, plan_ref, wid)
+            })
+            .collect(),
+    );
 
     // 3. Merge: copy back cells that differ from the original (exact for
     //    disjoint writes, which the dependency analysis guarantees).
-    let worker_scopes = results.into_inner().unwrap();
     let mut merged: Vec<(String, Matrix)> = originals.clone();
     for ws in worker_scopes {
         let ws = ws?;

@@ -33,6 +33,11 @@ pub struct Metrics {
     pub cache_evictions: AtomicU64,
     /// parfor tasks launched.
     pub parfor_tasks: AtomicU64,
+    /// Task batches executed on the dist worker thread pool (parallel
+    /// mode only; serial `threads=1` batches run inline and don't count).
+    pub pool_batches: AtomicU64,
+    /// Individual tasks executed on dist worker pool threads.
+    pub pool_tasks: AtomicU64,
     /// Host->device bytes copied by the accelerator backend.
     pub h2d_bytes: AtomicU64,
     /// Device->host bytes copied by the accelerator backend.
@@ -61,6 +66,8 @@ static GLOBAL: Metrics = Metrics {
     cache_misses: AtomicU64::new(0),
     cache_evictions: AtomicU64::new(0),
     parfor_tasks: AtomicU64::new(0),
+    pool_batches: AtomicU64::new(0),
+    pool_tasks: AtomicU64::new(0),
     h2d_bytes: AtomicU64::new(0),
     d2h_bytes: AtomicU64::new(0),
     device_evictions: AtomicU64::new(0),
@@ -103,6 +110,8 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             parfor_tasks: self.parfor_tasks.load(Ordering::Relaxed),
+            pool_batches: self.pool_batches.load(Ordering::Relaxed),
+            pool_tasks: self.pool_tasks.load(Ordering::Relaxed),
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
             device_evictions: self.device_evictions.load(Ordering::Relaxed),
@@ -126,6 +135,8 @@ impl Metrics {
         self.cache_misses.store(0, Ordering::Relaxed);
         self.cache_evictions.store(0, Ordering::Relaxed);
         self.parfor_tasks.store(0, Ordering::Relaxed);
+        self.pool_batches.store(0, Ordering::Relaxed);
+        self.pool_tasks.store(0, Ordering::Relaxed);
         self.h2d_bytes.store(0, Ordering::Relaxed);
         self.d2h_bytes.store(0, Ordering::Relaxed);
         self.device_evictions.store(0, Ordering::Relaxed);
@@ -150,6 +161,8 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub cache_evictions: u64,
     pub parfor_tasks: u64,
+    pub pool_batches: u64,
+    pub pool_tasks: u64,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
     pub device_evictions: u64,
@@ -174,6 +187,8 @@ impl MetricsSnapshot {
             cache_misses: self.cache_misses - earlier.cache_misses,
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
             parfor_tasks: self.parfor_tasks - earlier.parfor_tasks,
+            pool_batches: self.pool_batches - earlier.pool_batches,
+            pool_tasks: self.pool_tasks - earlier.pool_tasks,
             h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
             d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
             device_evictions: self.device_evictions - earlier.device_evictions,
