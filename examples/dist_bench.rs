@@ -36,7 +36,12 @@
 //!   `dist_threads=4` vs the serial escape hatch, 1.5x on 4+ hardware
 //!   threads, 1.15x on 2-3, reported-only on 1 — or
 //! - (PR 6) the packed GEMM kernel fails to beat the previous
-//!   cache-blocked kernel's GFLOP/s (best of 3 at 384^3).
+//!   cache-blocked kernel's GFLOP/s (best of 3 at 384^3), or
+//! - (PR 7) the fully-resident multi-epoch momentum LeNet performs any
+//!   driver collect at all (the gate is **0 for the whole job**, warmup
+//!   included), diverges bitwise across worker counts, or its
+//!   tree-allreduce byte volume misses the exact 1:2:3 ratio across
+//!   2/4/8 workers that the ceil(log2(W))-rounds model predicts.
 //!
 //! ```bash
 //! cargo run --release --example dist_bench
@@ -151,6 +156,44 @@ for (e in 1:max_iter) {
 wnorm2 = sum(W1 ^ 2) + sum(W2 ^ 2)
 "#;
 
+/// Multi-epoch **fully-resident** LeNet training (the PR 7 tentpole
+/// scenario): SGD with momentum, where the weights `W1`/`W2` and the
+/// momentum buffers `vW1`/`vW2` live on the cluster as replicated
+/// blocked values for the whole job. Both filter gradients come back
+/// through the modeled tree-allreduce (`conv2d_backward_filter` band
+/// partials; the `t(H1) %*% dP` contraction), the update chain stays
+/// replicated worker-side, and the final norms are blocked aggregates —
+/// so the **entire multi-epoch job runs at 0 driver collects**, and the
+/// allreduce traffic grows exactly ∝ ceil(log2(workers)).
+const LENET_RESIDENT: &str = r#"
+W1 = rand(rows=4, cols=9, min=-0.1, max=0.1, seed=7)
+W2 = rand(rows=64, cols=1, min=-0.1, max=0.1, seed=8)
+vW1 = matrix(0, rows=4, cols=9)
+vW2 = matrix(0, rows=64, cols=1)
+nb = nrow(X) / bsize
+for (e in 1:max_iter) {
+  for (b in 1:nb) {
+    beg = (b - 1) * bsize + 1
+    end = b * bsize
+    Xb = X[beg:end, ]
+    Yb = y[beg:end, ]
+    C1 = conv2d(Xb, W1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])
+    H1 = max_pool(C1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    P = H1 %*% W2
+    dP = (P - Yb) / bsize
+    dW2 = t(H1) %*% dP
+    dH1 = dP %*% t(W2)
+    dC1 = max_pool_backward(C1, dH1, input_shape=[bsize,4,8,8], pool_size=[2,2], stride=[2,2], padding=[0,0])
+    dW1 = conv2d_backward_filter(Xb, dC1, input_shape=[bsize,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])
+    vW1 = 0.9 * vW1 - 0.05 * dW1
+    vW2 = 0.9 * vW2 - 0.05 * dW2
+    W1 = W1 + vW1
+    W2 = W2 + vW2
+  }
+}
+wnorm2 = sum(W1 ^ 2) + sum(W2 ^ 2)
+"#;
+
 /// LeNet epoch sized for **wall-clock** scaling (not marginal-cost
 /// accounting): 1024 flattened 1x16x16 images, 16 filters, bsize 512
 /// over 64-row blocks — 8 row bands per mini-batch, so the banded
@@ -191,15 +234,20 @@ struct RunStats {
     wall_ms: f64,
 }
 
+// X (400x64 doubles = 200 KB) must not fit the driver budget, so all
+// X-sized operators place DIST.
+fn config_with(cache: bool, threads: usize, workers: usize) -> SystemConfig {
+    SystemConfig::builder()
+        .driver_memory(128 * 1024)
+        .block_size(64)
+        .num_workers(workers)
+        .dist_threads(threads)
+        .cache_enabled(cache)
+        .build()
+}
+
 fn config(cache: bool) -> SystemConfig {
-    let mut c = SystemConfig::default();
-    // X (400x64 doubles = 200 KB) must not fit the driver budget, so all
-    // X-sized operators place DIST.
-    c.driver_memory = 128 * 1024;
-    c.block_size = 64;
-    c.num_workers = 4;
-    c.cache_enabled = cache;
-    c
+    config_with(cache, 0, 4)
 }
 
 fn run(src: &str, iters: usize, cache: bool, output: &str) -> RunStats {
@@ -300,9 +348,7 @@ fn timed_run(
     output: &str,
     threads: usize,
 ) -> (f64, f64) {
-    let mut c = config(true);
-    c.dist_threads = threads;
-    let ctx = MLContext::with_config(c);
+    let ctx = MLContext::with_config(config_with(true, threads, 4));
     let script = Script::from_str(src)
         .input("X", x.clone())
         .input("y", y.clone())
@@ -343,6 +389,48 @@ fn wall_bench(
         parallel_ms = parallel_ms.min(pm);
     }
     Wall { name, serial_ms, parallel_ms }
+}
+
+// ---- fully-resident multi-epoch LeNet (tree-allreduce) ------------------
+
+/// Per-session accounting of one resident-LeNet job, read off the
+/// session cluster's own counters (collects/allreduce are **totals for
+/// the whole job**, not marginals — the gate is absolute zero).
+struct ResidentRun {
+    workers: usize,
+    result: f64,
+    collects: u64,
+    allreduce_rounds: u64,
+    allreduce_bytes: u64,
+    comm_bytes: u64,
+    blockify: u64,
+    wall_ms: f64,
+}
+
+fn resident_lenet(workers: usize, epochs: usize) -> ResidentRun {
+    let (x, ylab) = synthetic_classification(400, 64, 4, 42);
+    let y = reorg::slice(&ylab, 0, 400, 0, 1).unwrap();
+    let ctx = MLContext::with_config(config_with(true, 0, workers));
+    let script = Script::from_str(LENET_RESIDENT)
+        .input("X", x)
+        .input("y", y)
+        .input_scalar("bsize", 128.0)
+        .input_scalar("max_iter", epochs as f64)
+        .output("wnorm2");
+    let t0 = Instant::now();
+    let res = ctx.execute(script).expect("resident lenet failed");
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cluster = ctx.cluster().expect("resident lenet needs the dist backend");
+    ResidentRun {
+        workers,
+        result: res.double("wnorm2").unwrap(),
+        collects: cluster.collect_count(),
+        allreduce_rounds: cluster.allreduce_round_count(),
+        allreduce_bytes: cluster.allreduce_byte_count(),
+        comm_bytes: cluster.comm_bytes(),
+        blockify: cluster.blockify_count(),
+        wall_ms,
+    }
 }
 
 // ---- packed GEMM vs reference kernel ------------------------------------
@@ -415,6 +503,21 @@ fn main() {
     // LeNet epochs over the same 400x64 batch layout (1x8x8 images):
     // conv → pool → affine → backward, gated at 0 collects/iteration.
     let ln = bench("lenet", LENET, 2, 10, "wnorm2");
+
+    // Fully-resident multi-epoch LeNet with momentum: weights and
+    // optimizer state never leave the cluster, gradients tree-allreduce.
+    // Three cluster widths check the log2(workers) traffic model
+    // exactly — rounds per allreduce are 1 / 2 / 3 for 2 / 4 / 8
+    // workers over the same job-determined byte volume, so the total
+    // allreduce bytes must land on an exact 1:2:3 ratio.
+    println!("\nresident lenet: multi-epoch momentum training, weights stay on the cluster");
+    let resident = [resident_lenet(2, 3), resident_lenet(4, 3), resident_lenet(8, 3)];
+    for r in &resident {
+        println!(
+            "  workers={} collects={} allreduce_rounds={} allreduce_bytes={} wall={:.1} ms",
+            r.workers, r.collects, r.allreduce_rounds, r.allreduce_bytes, r.wall_ms
+        );
+    }
 
     // Wall clock, threads=1 (serial escape hatch) vs threads=4 (worker
     // pool). The small accounting workloads are reported for visibility;
@@ -513,6 +616,45 @@ fn main() {
         }
     }
 
+    // Resident-training gates (the PR 7 tentpole acceptance): the whole
+    // multi-epoch job must run at **0 driver collects** — not 0 marginal,
+    // absolute zero including warmup — with byte-identical results at
+    // every cluster width, and the allreduce shuffle volume must grow
+    // exactly with ceil(log2(workers)).
+    for r in &resident {
+        if r.collects != 0 {
+            eprintln!(
+                "FAIL: resident lenet at {} workers performed {} driver collects (must be 0 for the whole job)",
+                r.workers, r.collects
+            );
+            pass = false;
+        }
+        if r.result.to_bits() != resident[0].result.to_bits() {
+            eprintln!(
+                "FAIL: resident lenet result diverged across worker counts: {} vs {}",
+                r.result, resident[0].result
+            );
+            pass = false;
+        }
+    }
+    let base_ar = resident[0].allreduce_bytes;
+    if base_ar == 0 {
+        eprintln!("FAIL: resident lenet recorded no allreduce traffic — gradients are not tree-reduced");
+        pass = false;
+    } else if resident[1].allreduce_bytes != 2 * base_ar
+        || resident[2].allreduce_bytes != 3 * base_ar
+    {
+        eprintln!(
+            "FAIL: allreduce bytes off the log2(workers) model: w2={} w4={} w8={} (want exact 1:2:3)",
+            base_ar, resident[1].allreduce_bytes, resident[2].allreduce_bytes
+        );
+        pass = false;
+    }
+    if resident.iter().any(|r| r.allreduce_bytes > r.comm_bytes) {
+        eprintln!("FAIL: allreduce bytes exceed the comm volume — not charged to shuffle accounting");
+        pass = false;
+    }
+
     // Parallel-speedup gate (the PR 6 tentpole acceptance), adaptive to
     // the runner: a 4-thread pool cannot beat 1.5x on fewer than 4
     // hardware threads, so the bar drops to 1.15x on 2-3 cores and the
@@ -567,12 +709,43 @@ fn main() {
         "  \"gemm\": {{\n    \"size\": {GEMM_N},\n    \"packed_gflops\": {packed_gflops:.3},\n    \"reference_gflops\": {reference_gflops:.3},\n    \"speedup\": {:.3}\n  }}",
         packed_gflops / reference_gflops.max(1e-9)
     );
+    let r4 = &resident[1];
+    let resident_json = format!(
+        concat!(
+            "  \"lenet_resident\": {{\n",
+            "    \"epochs\": 3,\n",
+            "    \"workers\": {},\n",
+            "    \"total_collects\": {},\n",
+            "    \"allreduce_rounds\": {},\n",
+            "    \"allreduce_bytes\": {},\n",
+            "    \"allreduce_bytes_w2\": {},\n",
+            "    \"allreduce_bytes_w4\": {},\n",
+            "    \"allreduce_bytes_w8\": {},\n",
+            "    \"comm_bytes\": {},\n",
+            "    \"blockify_total\": {},\n",
+            "    \"wall_ms\": {:.2},\n",
+            "    \"result\": {}\n",
+            "  }}"
+        ),
+        r4.workers,
+        r4.collects,
+        r4.allreduce_rounds,
+        r4.allreduce_bytes,
+        resident[0].allreduce_bytes,
+        resident[1].allreduce_bytes,
+        resident[2].allreduce_bytes,
+        r4.comm_bytes,
+        r4.blockify,
+        r4.wall_ms,
+        r4.result,
+    );
     let json = format!(
-        "{{\n{},\n{},\n{},\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"pass\": {} }}\n}}\n",
+        "{{\n{},\n{},\n{},\n{},\n{},\n{},\n{},\n  \"gate\": {{ \"max_blockify_per_iter\": 1.0, \"kmeans_max_blockify_per_iter\": 3.0, \"max_collects_per_iter\": 0.0, \"resident_max_collects_total\": 0.0, \"pass\": {} }}\n}}\n",
         json_entry(&lm),
         json_entry(&km),
         json_entry(&mb),
         json_entry(&ln),
+        resident_json,
         wall_json,
         gemm_json,
         pass
@@ -595,6 +768,8 @@ fn main() {
     println!(
         "bench gate OK: loop-invariant operands stay resident, batch slices, \
          broadcast cellwise and conv/pool stay blocked, zero collects per iteration, \
-         worker pool delivers its wall-clock bar, packed GEMM beats the reference kernel"
+         resident momentum training runs whole multi-epoch jobs at zero collects with \
+         log2-scaling allreduce traffic, worker pool delivers its wall-clock bar, \
+         packed GEMM beats the reference kernel"
     );
 }

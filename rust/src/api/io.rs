@@ -1,5 +1,9 @@
 //! Matrix I/O: CSV and a simple binary block format (SystemML's
 //! read/write with format="csv" / "binary").
+//!
+//! Every error raised here — open/create failures included — names the
+//! offending path, so a failing `read()` deep inside a script is
+//! diagnosable from the message alone.
 
 use std::io::{BufRead, BufWriter, Read, Write};
 use std::path::Path;
@@ -7,27 +11,34 @@ use std::path::Path;
 use crate::runtime::matrix::{DenseMatrix, Matrix};
 use crate::util::error::{DmlError, Result};
 
+/// Wrap an I/O-layer error with the file path it concerns.
+fn at_path(path: &Path, what: &str, e: impl std::fmt::Display) -> DmlError {
+    DmlError::rt(format!("{what} '{}': {e}", path.display()))
+}
+
 /// Write a matrix as CSV.
 pub fn write_csv(m: &Matrix, path: impl AsRef<Path>) -> Result<()> {
-    let f = std::fs::File::create(path)?;
+    let path = path.as_ref();
+    let f = std::fs::File::create(path).map_err(|e| at_path(path, "cannot create csv", e))?;
     let mut w = BufWriter::new(f);
     let d = m.to_dense();
     for r in 0..d.rows {
         let row: Vec<String> = d.row(r).iter().map(|v| format!("{v}")).collect();
-        writeln!(w, "{}", row.join(","))?;
+        writeln!(w, "{}", row.join(",")).map_err(|e| at_path(path, "csv write failed", e))?;
     }
     Ok(())
 }
 
 /// Read a CSV matrix.
 pub fn read_csv(path: impl AsRef<Path>) -> Result<Matrix> {
-    let f = std::fs::File::open(path)?;
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).map_err(|e| at_path(path, "cannot open csv", e))?;
     let reader = std::io::BufReader::new(f);
     let mut data = Vec::new();
     let mut cols = 0usize;
     let mut rows = 0usize;
     for line in reader.lines() {
-        let line = line?;
+        let line = line.map_err(|e| at_path(path, "csv read failed", e))?;
         if line.trim().is_empty() {
             continue;
         }
@@ -35,12 +46,13 @@ pub fn read_csv(path: impl AsRef<Path>) -> Result<Matrix> {
             .split(',')
             .map(|s| s.trim().parse::<f64>())
             .collect::<std::result::Result<_, _>>()
-            .map_err(|e| DmlError::rt(format!("csv parse error at row {rows}: {e}")))?;
+            .map_err(|e| at_path(path, &format!("csv parse error at row {rows}"), e))?;
         if rows == 0 {
             cols = vals.len();
         } else if vals.len() != cols {
             return Err(DmlError::rt(format!(
-                "csv: row {rows} has {} columns, expected {cols}",
+                "csv '{}': row {rows} has {} columns, expected {cols}",
+                path.display(),
                 vals.len()
             )));
         }
@@ -55,34 +67,42 @@ const MAGIC: &[u8; 8] = b"SYSMLMB1";
 
 /// Write the binary block format.
 pub fn write_binary(m: &Matrix, path: impl AsRef<Path>) -> Result<()> {
-    let f = std::fs::File::create(path)?;
+    let path = path.as_ref();
+    let f = std::fs::File::create(path).map_err(|e| at_path(path, "cannot create binary", e))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&(m.rows() as u64).to_le_bytes())?;
-    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    let write_err = |e| at_path(path, "binary write failed", e);
+    w.write_all(MAGIC).map_err(write_err)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes()).map_err(write_err)?;
+    w.write_all(&(m.cols() as u64).to_le_bytes()).map_err(write_err)?;
     for v in m.to_row_major_vec() {
-        w.write_all(&v.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes()).map_err(write_err)?;
     }
     Ok(())
 }
 
 /// Read the binary block format.
 pub fn read_binary(path: impl AsRef<Path>) -> Result<Matrix> {
-    let mut f = std::fs::File::open(path)?;
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).map_err(|e| at_path(path, "cannot open binary", e))?;
+    let read_err = |e| at_path(path, "binary read failed", e);
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).map_err(read_err)?;
     if &magic != MAGIC {
-        return Err(DmlError::rt("not a systemml binary matrix file".to_string()));
+        return Err(DmlError::rt(format!(
+            "'{}' is not a systemml binary matrix file",
+            path.display()
+        )));
     }
     let mut dims = [0u8; 16];
-    f.read_exact(&mut dims)?;
+    f.read_exact(&mut dims).map_err(read_err)?;
     let rows = u64::from_le_bytes(dims[..8].try_into().unwrap()) as usize;
     let cols = u64::from_le_bytes(dims[8..].try_into().unwrap()) as usize;
     let mut buf = Vec::new();
-    f.read_to_end(&mut buf)?;
+    f.read_to_end(&mut buf).map_err(read_err)?;
     if buf.len() != rows * cols * 8 {
         return Err(DmlError::rt(format!(
-            "binary matrix: expected {} bytes of data, found {}",
+            "binary matrix '{}': expected {} bytes of data, found {}",
+            path.display(),
             rows * cols * 8,
             buf.len()
         )));
@@ -134,5 +154,14 @@ mod tests {
         std::fs::write(&p, b"NOTMAGIC").unwrap();
         assert!(read_binary(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn io_errors_name_the_path() {
+        let p = std::env::temp_dir().join("sysml_io_definitely_missing.csv");
+        let err = read_csv(&p).unwrap_err().to_string();
+        assert!(err.contains("sysml_io_definitely_missing.csv"), "got: {err}");
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("sysml_io_definitely_missing.csv"), "got: {err}");
     }
 }

@@ -12,9 +12,37 @@
 //! let results = ctx.execute(script).unwrap();
 //! assert_eq!(results.double("s").unwrap(), 64.0);
 //! ```
+//!
+//! # Session semantics
+//!
+//! An [`MLContext`] is a **session**: every `execute` call runs against
+//! the same simulated cluster (created lazily from the context's config
+//! on first use), and each script's *requested outputs* are retained by
+//! name. The next `execute` sees them as pre-bound inputs — explicit
+//! [`Script`] inputs win on a name clash. That makes the resident-state
+//! training loop compose across scripts with **zero collects**:
+//!
+//! * a training script's blocked weight outputs (`W1`, `vW1`, ...) stay
+//!   resident on the cluster between calls — [`Results::blocked`] and
+//!   [`Results::value`] hand them back without forcing, and the session
+//!   carries them into the next script (another epoch, or a scoring
+//!   call) with no blockify and no collect;
+//! * [`Results::matrix`] **forces** the value to the driver (a collect
+//!   for multi-block values; free for replicated allreduce results) —
+//!   use it only when a driver-local copy is actually wanted;
+//! * [`Script::input_value`] binds any runtime value, including a
+//!   `Value::Blocked` handle from a previous execution (valid only with
+//!   the context that produced it — handles are tied to the session
+//!   cluster);
+//! * [`MLContext::clear_session`] drops the retained values (and with
+//!   them the resident partitions' storage reservation).
+//!
+//! Config changes made after the first `execute` do not rebuild the
+//! session cluster — create a new context for a new cluster shape.
 
 pub mod io;
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -23,8 +51,9 @@ use crate::dml::parser::parse;
 use crate::dml::validate::{self, Bundle};
 use crate::hop::dag::ShapeInfo;
 use crate::hop::plan::{compile_plan, Plan};
+use crate::runtime::dist::{BlockedHandle, Cluster};
 use crate::runtime::interp::registry::build_bundle;
-use crate::runtime::interp::{Interpreter, Scope, Value};
+use crate::runtime::interp::{build_cluster, Interpreter, Scope, Value};
 use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
 
@@ -65,6 +94,15 @@ impl Script {
         self
     }
 
+    /// Bind any runtime value — including a `Value::Blocked` handle taken
+    /// from a previous execution's [`Results::blocked`]. The handle stays
+    /// cluster-resident; binding it never forces a collect. Blocked
+    /// handles are only valid with the [`MLContext`] that produced them.
+    pub fn input_value(mut self, name: &str, v: Value) -> Script {
+        self.inputs.insert(name.to_string(), v);
+        self
+    }
+
     /// Request an output variable.
     pub fn output(mut self, name: &str) -> Script {
         self.outputs.push(name.to_string());
@@ -83,39 +121,106 @@ impl Results {
     pub fn get(&self, name: &str) -> Option<&Value> {
         self.values.get(name)
     }
-    pub fn matrix(&self, name: &str) -> Result<Matrix> {
-        Ok(self
-            .values
-            .get(name)
-            .ok_or_else(|| DmlError::rt(format!("no output '{name}'")))?
-            .as_matrix()?
-            .clone())
-    }
-    pub fn double(&self, name: &str) -> Result<f64> {
+
+    /// The raw output value, **without** forcing a collect: blocked
+    /// outputs come back as `Value::Blocked` handles that stay resident
+    /// on the cluster.
+    pub fn value(&self, name: &str) -> Result<&Value> {
         self.values
             .get(name)
-            .ok_or_else(|| DmlError::rt(format!("no output '{name}'")))?
-            .as_double()
+            .ok_or_else(|| DmlError::rt(format!("no output '{name}'")))
+    }
+
+    /// The output as a cluster-resident blocked handle, **without**
+    /// forcing a collect. Errors if the output is missing or was
+    /// driver-resident (use [`Results::matrix`] for those).
+    pub fn blocked(&self, name: &str) -> Result<BlockedHandle> {
+        match self.value(name)? {
+            Value::Blocked(h) => Ok(h.clone()),
+            v => Err(DmlError::rt(format!(
+                "output '{name}' is not blocked (found {})",
+                v.type_name()
+            ))),
+        }
+    }
+
+    /// The output as a driver-local matrix. **Forces** blocked values:
+    /// multi-block outputs pay a collect; replicated (allreduce) outputs
+    /// materialize free. Prefer [`Results::blocked`] to keep training
+    /// state resident.
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        Ok(self.value(name)?.as_matrix()?.clone())
+    }
+
+    pub fn double(&self, name: &str) -> Result<f64> {
+        self.value(name)?.as_double()
     }
 }
 
-/// The MLContext: configuration + execution entry point.
+/// The MLContext: configuration + execution entry point. A context is a
+/// **session** — see the module docs: one lazily-created cluster shared
+/// by every `execute`, and requested outputs retained by name as inputs
+/// for the next script.
 #[derive(Default)]
 pub struct MLContext {
     pub config: SystemConfig,
     /// Echo DML print() output to stdout.
     pub echo: bool,
+    /// The session cluster, created from `config` on first execute and
+    /// reused for every subsequent script so blocked values stay valid
+    /// across calls.
+    cluster: RefCell<Option<Arc<Cluster>>>,
+    /// Values retained from previous executions' requested outputs;
+    /// seeded into the next script's scope (explicit inputs win).
+    session: RefCell<HashMap<String, Value>>,
 }
 
 impl MLContext {
     /// Context with default configuration.
     pub fn new() -> MLContext {
-        MLContext { config: SystemConfig::default(), echo: false }
+        MLContext::with_config(SystemConfig::default())
     }
 
     /// Context with explicit configuration.
     pub fn with_config(config: SystemConfig) -> MLContext {
-        MLContext { config, echo: false }
+        MLContext {
+            config,
+            echo: false,
+            cluster: RefCell::new(None),
+            session: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// The session cluster, building it from the current config on first
+    /// use. `None` when distributed execution is disabled.
+    fn session_cluster(&self) -> Option<Arc<Cluster>> {
+        if !self.config.dist_enabled {
+            return None;
+        }
+        let mut slot = self.cluster.borrow_mut();
+        if slot.is_none() {
+            *slot = build_cluster(&self.config);
+        }
+        slot.clone()
+    }
+
+    /// The session cluster (building it from the current config on first
+    /// use): exposes the backend's per-session accounting — collects,
+    /// spills, allreduce rounds — to benchmarks and tests. `None` when
+    /// distributed execution is disabled.
+    pub fn cluster(&self) -> Option<Arc<Cluster>> {
+        self.session_cluster()
+    }
+
+    /// A value retained in the session (a previous execution's output).
+    pub fn session_value(&self, name: &str) -> Option<Value> {
+        self.session.borrow().get(name).cloned()
+    }
+
+    /// Drop all session-retained values, releasing their cluster-resident
+    /// partitions' storage reservation.
+    pub fn clear_session(&self) {
+        self.session.borrow_mut().clear();
     }
 
     /// Parse, validate, and plan a script without executing (SystemML
@@ -124,23 +229,39 @@ impl MLContext {
     /// bound input shapes. The returned bundle reflects plan-driven AST
     /// rewrites (e.g. matmult chain reordering).
     pub fn compile(&self, script: &Script) -> Result<Compilation> {
+        self.compile_with_session(script, &self.session.borrow())
+    }
+
+    /// Compile against a session snapshot: session values and explicit
+    /// inputs are both pre-defined for validation and shape inference
+    /// (explicit inputs win on a name clash).
+    fn compile_with_session(
+        &self,
+        script: &Script,
+        session: &HashMap<String, Value>,
+    ) -> Result<Compilation> {
         let mut prog = parse(&script.source)?;
         // Static rewrites (HOP-level): constant folding.
         crate::hop::rewrite::fold_program(&mut prog);
         let mut bundle = build_bundle(prog, &self.config)?;
-        // Validation treats bound inputs as pre-defined.
-        let warnings = validate_with_inputs(&bundle, script.inputs.keys())?;
-        let shapes = input_shapes(&script.inputs);
+        let warnings =
+            validate_with_inputs(&bundle, session.keys().chain(script.inputs.keys()))?;
+        let mut shapes = input_shapes(session);
+        shapes.extend(input_shapes(&script.inputs));
         let plan = compile_plan(&mut bundle, &shapes, &self.config);
         Ok(Compilation { bundle, plan, warnings })
     }
 
     /// Execute a script and collect its outputs. The interpreter runs
-    /// against the compiled plan's per-operator ExecType placements; with
-    /// `explain` enabled the annotated HOP plan is printed first.
+    /// against the compiled plan's per-operator ExecType placements on the
+    /// shared session cluster; with `explain` enabled the annotated HOP
+    /// plan is printed first. Requested outputs are retained in the
+    /// session for the next script — blocked outputs stay resident.
     pub fn execute(&self, script: Script) -> Result<Results> {
-        let Compilation { bundle, plan, .. } = self.compile(&script)?;
-        let mut interp = Interpreter::new(bundle, self.config.clone());
+        let session = self.session.borrow().clone();
+        let Compilation { bundle, plan, .. } = self.compile_with_session(&script, &session)?;
+        let mut interp =
+            Interpreter::with_cluster(bundle, self.config.clone(), self.session_cluster());
         interp.echo = self.echo;
         if self.config.explain {
             for line in plan.render().lines() {
@@ -148,7 +269,9 @@ impl MLContext {
             }
         }
         interp.plan = Some(Arc::new(plan));
-        let scope: Scope = script.inputs.clone().into_iter().collect();
+        // Session values seed the scope; explicit script inputs win.
+        let mut scope: Scope = session.into_iter().collect();
+        scope.extend(script.inputs.clone());
         let final_scope = interp.run(scope)?;
         let mut out = Results { values: HashMap::new(), stdout: interp.output() };
         for name in &script.outputs {
@@ -157,6 +280,10 @@ impl MLContext {
             })?;
             out.values.insert(name.clone(), v.clone());
         }
+        // Carry-over: requested outputs stay warm for the next script.
+        self.session
+            .borrow_mut()
+            .extend(out.values.iter().map(|(k, v)| (k.clone(), v.clone())));
         Ok(out)
     }
 }
@@ -177,6 +304,11 @@ fn input_shapes(inputs: &HashMap<String, Value>) -> HashMap<String, ShapeInfo> {
     for (name, v) in inputs {
         let shape = match v {
             Value::Matrix(m) => ShapeInfo::matrix(m.rows(), m.cols(), m.sparsity()),
+            Value::Blocked(h) => {
+                let cells = h.rows() * h.cols();
+                let sp = if cells == 0 { 0.0 } else { h.nnz() as f64 / cells as f64 };
+                ShapeInfo::matrix(h.rows(), h.cols(), sp)
+            }
             _ => ShapeInfo::scalar_value(),
         };
         out.insert(name.clone(), shape);
@@ -249,5 +381,72 @@ mod tests {
         let script = Script::from_str("print(\"hello \" + 42)");
         let res = ctx.execute(script).unwrap();
         assert_eq!(res.stdout, vec!["hello 42"]);
+    }
+
+    fn dist_config() -> SystemConfig {
+        let mut config = SystemConfig::tiny_driver(8 * 1024);
+        config.block_size = 32;
+        config.num_workers = 4;
+        config
+    }
+
+    #[test]
+    fn session_carries_blocked_outputs_without_collect() {
+        let ctx = MLContext::with_config(dist_config());
+        let train = Script::from_str("Y = X %*% t(X)")
+            .input("X", Matrix::filled(96, 8, 0.5))
+            .output("Y");
+        let res1 = ctx.execute(train).unwrap();
+        // The multi-block product is handed back as a resident handle.
+        let y = res1.blocked("Y").unwrap();
+        assert_eq!((y.rows(), y.cols()), (96, 96));
+        assert!(matches!(res1.value("Y").unwrap(), Value::Blocked(_)));
+        assert!(ctx.session_value("Y").is_some());
+
+        // The next script sees Y without re-binding it; the whole
+        // two-script session never collects to the driver (checked on
+        // the session cluster's own counter, so concurrent tests can't
+        // interfere).
+        let score = Script::from_str("s = sum(Y)").output("s");
+        let res2 = ctx.execute(score).unwrap();
+        assert_eq!(res2.double("s").unwrap(), 96.0 * 96.0 * 2.0);
+        assert_eq!(
+            ctx.cluster().unwrap().collect_count(),
+            0,
+            "session carry-over must not collect"
+        );
+
+        ctx.clear_session();
+        assert!(ctx.session_value("Y").is_none());
+    }
+
+    #[test]
+    fn explicit_inputs_shadow_session_values() {
+        let ctx = MLContext::new();
+        let first = Script::from_str("x = 7").output("x");
+        ctx.execute(first).unwrap();
+        // `x` comes from the session here...
+        let reuse = Script::from_str("y = x + 1").output("y");
+        assert_eq!(ctx.execute(reuse).unwrap().double("y").unwrap(), 8.0);
+        // ...but an explicit input takes precedence over it.
+        let shadow = Script::from_str("y = x + 1").input_scalar("x", 100.0).output("y");
+        assert_eq!(ctx.execute(shadow).unwrap().double("y").unwrap(), 101.0);
+    }
+
+    #[test]
+    fn input_value_accepts_blocked_handles() {
+        let ctx = MLContext::with_config(dist_config());
+        let make = Script::from_str("Y = X %*% t(X)")
+            .input("X", Matrix::filled(96, 8, 0.5))
+            .output("Y");
+        let y = ctx.execute(make).unwrap().blocked("Y").unwrap();
+        ctx.clear_session();
+        // Rebind the handle under a fresh name: no blockify, no collect
+        // until `matrix` forces it.
+        let use_it = Script::from_str("s = sum(Z)")
+            .input_value("Z", Value::Blocked(y))
+            .output("s");
+        let res = ctx.execute(use_it).unwrap();
+        assert_eq!(res.double("s").unwrap(), 96.0 * 96.0 * 2.0);
     }
 }

@@ -85,6 +85,86 @@ impl SystemConfig {
     pub fn tiny_driver(budget: usize) -> Self {
         SystemConfig { driver_memory: budget, ..Default::default() }
     }
+
+    /// Fluent builder starting from the default configuration. Fields
+    /// stay public, so direct struct mutation keeps working; the builder
+    /// is the preferred way to derive configs in examples and tests:
+    ///
+    /// ```
+    /// use systemml::conf::SystemConfig;
+    /// let c = SystemConfig::builder()
+    ///     .num_workers(8)
+    ///     .dist_threads(4)
+    ///     .worker_storage(64 * 1024 * 1024)
+    ///     .build();
+    /// assert_eq!(c.num_workers, 8);
+    /// ```
+    pub fn builder() -> SystemConfigBuilder {
+        SystemConfigBuilder { config: SystemConfig::default() }
+    }
+}
+
+/// Builder returned by [`SystemConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct SystemConfigBuilder {
+    config: SystemConfig,
+}
+
+macro_rules! builder_setters {
+    ($($(#[$doc:meta])* $name:ident: $ty:ty),* $(,)?) => {
+        $(
+            $(#[$doc])*
+            pub fn $name(mut self, v: $ty) -> Self {
+                self.config.$name = v;
+                self
+            }
+        )*
+    };
+}
+
+impl SystemConfigBuilder {
+    builder_setters! {
+        /// Driver memory budget in bytes.
+        driver_memory: usize,
+        /// Simulated cluster size.
+        num_workers: usize,
+        /// Per-worker memory budget in bytes.
+        worker_memory: usize,
+        /// Per-worker storage budget for resident block partitions.
+        worker_storage: usize,
+        /// Keep blocked partitions resident across statements.
+        cache_enabled: bool,
+        /// Bind DIST outputs as first-class blocked values.
+        blocked_values: bool,
+        /// Block size for blocked distributed matrices.
+        block_size: usize,
+        /// Worker threads for blocked tasks (0 = one per worker).
+        dist_threads: usize,
+        /// Enable the distributed backend.
+        dist_enabled: bool,
+        /// Enable the accelerator (PJRT) backend.
+        accel_enabled: bool,
+        /// Accelerator device-memory budget in bytes.
+        accel_memory: usize,
+        /// Print plan/exec-type decisions.
+        explain: bool,
+    }
+
+    /// Append a directory to the `source("...")` search path.
+    pub fn script_path(mut self, p: impl Into<PathBuf>) -> Self {
+        self.config.script_paths.push(p.into());
+        self
+    }
+
+    /// Directory holding AOT artifacts.
+    pub fn artifacts_dir(mut self, p: impl Into<PathBuf>) -> Self {
+        self.config.artifacts_dir = p.into();
+        self
+    }
+
+    pub fn build(self) -> SystemConfig {
+        self.config
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +176,24 @@ mod tests {
         let c = SystemConfig::default();
         assert!(c.script_paths.iter().any(|p| p.ends_with("scripts")));
         assert!(c.dist_enabled);
+    }
+
+    #[test]
+    fn builder_overrides_compose_with_defaults() {
+        let c = SystemConfig::builder()
+            .num_workers(7)
+            .dist_threads(4)
+            .worker_storage(1 << 20)
+            .cache_enabled(false)
+            .build();
+        assert_eq!(c.num_workers, 7);
+        assert_eq!(c.dist_threads, 4);
+        assert_eq!(c.worker_storage, 1 << 20);
+        assert!(!c.cache_enabled);
+        // Untouched knobs keep their defaults; fields stay public.
+        let mut c = c;
+        c.block_size = 64;
+        assert_eq!(c.block_size, 64);
+        assert_eq!(c.driver_memory, SystemConfig::default().driver_memory);
     }
 }

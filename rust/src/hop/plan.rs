@@ -9,7 +9,11 @@
 //! The compiled [`Plan`] is consulted by the interpreter's unified
 //! dispatch (`runtime::interp::dispatch`) through per-operator
 //! placements keyed by source position, and rendered by `EXPLAIN` like
-//! SystemML's `explain(hops)`. Operators whose shapes are unknown at
+//! SystemML's `explain(hops)` — including `ALLREDUCE` markers on
+//! aggregation-shaped DIST outputs (gradient matmults, backward-filter
+//! gradients, single-block axis aggregates) that are tree-allreduced and
+//! stay replicated on the workers, which is what lets blocked-ness flow
+//! through a whole optimizer update chain. Operators whose shapes are unknown at
 //! compile time (loop-carried dims, user-function results) carry no
 //! placement and are decided at runtime with the same cost model
 //! ([`choose_exec`]) — SystemML's dynamic recompilation, in miniature.
@@ -96,6 +100,12 @@ pub struct PlannedOp {
     /// Vector-broadcast cellwise pair (rendered as `BCAST` in EXPLAIN):
     /// the rhs is a row/col vector joined map-side on DIST placements.
     pub bcast: bool,
+    /// Aggregation-shaped DIST output (rendered as `ALLREDUCE` in
+    /// EXPLAIN): a gradient matmult with a multi-block inner dimension, a
+    /// `conv2d_backward_filter` gradient, or a single-block axis
+    /// aggregate — combined in log2(workers) tree-allreduce rounds and
+    /// bound replicated on the workers.
+    pub allreduce: bool,
 }
 
 /// Plan of one statement: its DAG plus the heavy operators found in it.
@@ -229,6 +239,9 @@ impl Plan {
                     }
                     if op.bcast {
                         line.push_str(" BCAST");
+                    }
+                    if op.allreduce {
+                        line.push_str(" ALLREDUCE");
                     }
                 }
                 if uses[n.id] > 1 {
@@ -718,8 +731,10 @@ fn record_stmt(
             if any_scalar || rhs_dims == Some((1, 1)) {
                 // Matrix∘scalar (including 1x1-rhs promotion) follows its
                 // matrix operand's residency (a blocked operand maps
-                // cluster-side, no placement).
-                blocked[n.id] = in_blocked && multi_block(n.shape, bs);
+                // cluster-side, no placement) — single-block included,
+                // since single-block blocked values are replicated and a
+                // per-block map keeps them so.
+                blocked[n.id] = in_blocked;
                 continue;
             }
             let mismatch = n.inputs.iter().any(|i| {
@@ -781,15 +796,46 @@ fn record_stmt(
         } else {
             est.map(|e| choose_exec(e, config, kind == OpKind::MatMult))
         };
-        if exec == Some(ExecType::Dist)
-            && kind != OpKind::Agg
-            && conv_op != Some(crate::runtime::conv::ConvOpKind::Conv2dBackwardFilter)
-        {
-            // Multi-block DIST outputs bind as blocked values;
-            // single-block outputs return to the driver with the job.
-            // (conv2d_backward_filter's K×CRS gradient always returns
-            // with the job — it is excluded above.)
-            blocked[n.id] = multi_block(n.shape, bs);
+        let mut allreduce = false;
+        if exec == Some(ExecType::Dist) {
+            use crate::runtime::conv::ConvOpKind as CK;
+            // Multi-block DIST outputs bind as blocked values.
+            // Single-block outputs split two ways (mirroring the runtime
+            // dispatch): an *aggregation-shaped* result tree-allreduces
+            // and stays **replicated** on the workers (blocked), while
+            // any other single-block output returns to the driver with
+            // the job.
+            let single = !multi_block(n.shape, bs);
+            blocked[n.id] = match kind {
+                OpKind::Agg => {
+                    // colSums-style gradients: single-block axis
+                    // aggregates replicate; scalars and multi-block
+                    // aggregate vectors return to the driver.
+                    allreduce = single && !n.shape.scalar && n.shape.known_dims().is_some();
+                    allreduce
+                }
+                OpKind::Conv if conv_op == Some(CK::Conv2dBackwardFilter) => {
+                    // The K×CRS gradient is always allreduce-combined;
+                    // it stays replicated when it fits one block.
+                    allreduce = true;
+                    single && n.shape.known_dims().is_some()
+                }
+                OpKind::MatMult if single => {
+                    // Gradient-shaped product (t(X) %*% dout): a
+                    // multi-block inner dimension reduced into one block.
+                    allreduce = n
+                        .inputs
+                        .first()
+                        .and_then(|i| dag.nodes[*i].shape.known_dims())
+                        .map(|(_, k)| k > bs)
+                        .unwrap_or(false);
+                    allreduce
+                }
+                // Cellwise maps and transposes over a replicated operand
+                // keep it replicated (the optimizer update chain).
+                OpKind::CellBinary | OpKind::Reorg if single => eff_blocked,
+                _ => multi_block(n.shape, bs),
+            };
         }
         if record {
             if let (Some(e), Some(x)) = (est, exec) {
@@ -814,7 +860,7 @@ fn record_stmt(
                     }
                 }
             }
-            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est, bcast });
+            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est, bcast, allreduce });
         }
     }
     let root_blocked = blocked[dag.root];
@@ -1292,26 +1338,58 @@ mod tests {
     }
 
     #[test]
-    fn conv_backward_filter_result_is_driver_resident() {
+    fn conv_backward_filter_gradient_is_allreduce_and_stays_blocked() {
         let mut config = SystemConfig::tiny_driver(32 * 1024);
         config.block_size = 32;
         let plan = plan_src(
-            "dW = conv2d_backward_filter(X, dC, input_shape=[96,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\nY = dW %*% t(dW)\ns = sum(Y)",
+            "dW = conv2d_backward_filter(X, dC, input_shape=[96,1,8,8], filter_shape=[4,1,3,3], stride=[1,1], padding=[1,1])\nW = W - 0.05 * dW\ns = sum(W)",
             &[
                 ("X", ShapeInfo::matrix(96, 64, 1.0)),
                 ("dC", ShapeInfo::matrix(96, 256, 1.0)),
+                ("W", ShapeInfo::matrix(4, 9, 1.0)),
             ],
             &config,
         );
         assert_eq!(plan.placed_execs(OpKind::Conv), vec![ExecType::Dist], "{}", plan.render());
-        // The K×CRS gradient returns with the job, so dW is *not*
-        // modeled blocked: its tiny 4x9 matmult stays CP.
+        assert!(plan.render().contains(" ALLREDUCE"), "{}", plan.render());
+        // The K×CRS gradient tree-allreduces and stays replicated on the
+        // workers, so the weight-update chain consuming dW is modeled
+        // blocked: the cellwise update is forced DIST (zero blockify) and
+        // the aggregate over the updated weights stays DIST too.
         assert_eq!(
-            plan.placed_execs(OpKind::MatMult),
-            vec![ExecType::CP],
+            plan.placed_execs(OpKind::CellBinary),
+            vec![ExecType::Dist],
             "{}",
             plan.render()
         );
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist], "{}", plan.render());
+    }
+
+    #[test]
+    fn gradient_matmult_is_allreduce_and_update_chain_stays_blocked() {
+        let mut config = SystemConfig::tiny_driver(8 * 1024);
+        config.block_size = 32;
+        // t(X) %*% y: 8x96 @ 96x8 -> 8x8 single block with a multi-block
+        // inner dimension — the allreduce shape. The SGD update chain on
+        // the replicated gradient stays blocked end to end.
+        let plan = plan_src(
+            "g = t(X) %*% y\nw = w - 0.1 * g\ns = sum(w)",
+            &[
+                ("X", ShapeInfo::matrix(96, 8, 1.0)),
+                ("y", ShapeInfo::matrix(96, 8, 1.0)),
+                ("w", ShapeInfo::matrix(8, 8, 1.0)),
+            ],
+            &config,
+        );
+        assert_eq!(plan.placed_execs(OpKind::MatMult), vec![ExecType::Dist], "{}", plan.render());
+        assert!(plan.render().contains(" ALLREDUCE"), "{}", plan.render());
+        assert_eq!(
+            plan.placed_execs(OpKind::CellBinary),
+            vec![ExecType::Dist],
+            "{}",
+            plan.render()
+        );
+        assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist], "{}", plan.render());
     }
 
     #[test]

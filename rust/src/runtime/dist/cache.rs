@@ -23,7 +23,12 @@
 //!   resident bytes here ([`BlockCache::reserve`]); the eviction sweep
 //!   counts them against the same budget, and the cluster spills the
 //!   oldest live value to the driver when eviction alone cannot make
-//!   room.
+//!   room. *Replicated* values (PR 7: allreduce results — weights and
+//!   optimizer state living on every worker) reserve bytes × cluster
+//!   size; spilling one is collect-free (the driver copy travels with
+//!   the allreduce), and its next DIST use re-enters as a broadcast
+//!   rebuild — so a session-long training job survives storage
+//!   pressure on its resident model state without ever collecting.
 //! * **Memory-budgeted LRU.** Resident bytes are bounded by the
 //!   per-worker storage budget × cluster size; least-recently-used
 //!   unpinned entries are evicted to make room.

@@ -47,6 +47,33 @@
 //! cache/handle bookkeeping (the [`cache::BlockCache`] mutex, live-value
 //! registration) happens at dispatch time on the driver thread, so tasks
 //! never contend on a lock.
+//!
+//! # Tree-allreduce and replicated values (resident training)
+//!
+//! Gradient-shaped results — a single-block matmult output folded over a
+//! multi-block inner dimension, a `conv2d_backward_filter` band fold, a
+//! single-block axis aggregate of a blocked operand — used to be the one
+//! value class that returned to the driver every iteration. They are now
+//! aggregated via a modeled **tree-allreduce**
+//! ([`Cluster::record_allreduce`]): `ceil(log2(num_workers))` reduction
+//! rounds, each moving the result's bytes, charged to shuffle accounting
+//! (and attributed separately as `allreduce_rounds`/`allreduce_bytes`).
+//! The arithmetic fold itself stays sequential in a **fixed partial
+//! order** (ascending inner-block / band index) that depends only on the
+//! block grid, never on the worker or thread count — so results are
+//! byte-identical across `num_workers` and `dist_threads`.
+//!
+//! The product of an allreduce is a **replicated** blocked value
+//! ([`BlockedHandle::replicated`]): a single-block value resident on
+//! *every* worker, the shape model state takes during training. A
+//! replicated handle forces ([`BlockedHandle::force`]) and gathers for
+//! free — the value arrives with the job, like SystemML's SINGLE_BLOCK
+//! aggregation, never as a collect — and its storage charge is
+//! `bytes × num_workers`. Optimizer updates (`W - lr*dW`, momentum
+//! maps) on replicated operands produce replicated outputs, so weights
+//! and moment buffers stay cluster-resident for a whole multi-epoch job
+//! at **0 driver collects total**. A spilled replicated value re-enters
+//! the cluster as a broadcast (it must reach every worker again).
 
 pub mod cache;
 pub mod nn;
@@ -80,6 +107,8 @@ pub struct Cluster {
     worker_flops: Vec<AtomicU64>,
     broadcast_bytes: AtomicU64,
     shuffle_bytes: AtomicU64,
+    allreduce_rounds: AtomicU64,
+    allreduce_bytes: AtomicU64,
     tasks: AtomicU64,
     blockify_ops: AtomicU64,
     collects: AtomicU64,
@@ -149,6 +178,8 @@ impl Cluster {
             worker_flops: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             broadcast_bytes: AtomicU64::new(0),
             shuffle_bytes: AtomicU64::new(0),
+            allreduce_rounds: AtomicU64::new(0),
+            allreduce_bytes: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
             blockify_ops: AtomicU64::new(0),
             collects: AtomicU64::new(0),
@@ -246,7 +277,7 @@ impl Cluster {
     /// value alone exceeds the budget, which we tolerate (the data has to
     /// live somewhere).
     fn register_live(&self, inner: &Arc<HandleInner>) {
-        self.cache.reserve(inner.bytes);
+        self.cache.reserve(inner.charged_bytes());
         {
             let mut live = self.live.lock().unwrap();
             live.retain(|(_, w)| w.strong_count() > 0);
@@ -299,6 +330,8 @@ impl Cluster {
         }
         self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.shuffle_bytes.store(0, Ordering::Relaxed);
+        self.allreduce_rounds.store(0, Ordering::Relaxed);
+        self.allreduce_bytes.store(0, Ordering::Relaxed);
         self.tasks.store(0, Ordering::Relaxed);
         self.blockify_ops.store(0, Ordering::Relaxed);
         self.collects.store(0, Ordering::Relaxed);
@@ -358,6 +391,37 @@ impl Cluster {
     pub(crate) fn record_shuffle(&self, bytes: u64) {
         self.shuffle_bytes.fetch_add(bytes, Ordering::Relaxed);
         metrics::global().add_shuffle(bytes);
+    }
+
+    /// Record a modeled tree-allreduce of a `bytes`-sized result:
+    /// `ceil(log2(num_workers))` reduction rounds, each moving the result
+    /// once, charged to shuffle accounting and attributed separately to
+    /// the allreduce counters. One worker needs no reduction — 0 rounds,
+    /// 0 bytes — so allreduce traffic grows exactly ∝ log2(workers).
+    pub(crate) fn record_allreduce(&self, bytes: u64) {
+        let rounds = (usize::BITS - (self.num_workers - 1).leading_zeros()) as u64;
+        if rounds == 0 {
+            return;
+        }
+        let total = rounds * bytes;
+        self.allreduce_rounds.fetch_add(rounds, Ordering::Relaxed);
+        self.allreduce_bytes.fetch_add(total, Ordering::Relaxed);
+        self.shuffle_bytes.fetch_add(total, Ordering::Relaxed);
+        let g = metrics::global();
+        g.allreduce_rounds.fetch_add(rounds, Ordering::Relaxed);
+        g.allreduce_bytes.fetch_add(total, Ordering::Relaxed);
+        g.add_shuffle(total);
+    }
+
+    /// Tree-allreduce reduction rounds executed since the last reset.
+    pub fn allreduce_round_count(&self) -> u64 {
+        self.allreduce_rounds.load(Ordering::Relaxed)
+    }
+
+    /// Bytes moved by tree-allreduce rounds since the last reset (a
+    /// subset of the shuffle volume).
+    pub fn allreduce_byte_count(&self) -> u64 {
+        self.allreduce_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -526,9 +590,14 @@ pub struct HandleInner {
     rows: usize,
     cols: usize,
     nnz: usize,
-    /// Resident size of the blocked representation.
+    /// Resident size of the blocked representation (one copy).
     bytes: usize,
     block_size: usize,
+    /// Replicated values live on *every* worker (allreduce products,
+    /// model/optimizer state): force and gather are free — the value
+    /// arrives with the job, never as a collect — and the storage charge
+    /// is `bytes × num_workers`.
+    replicated: bool,
     /// Registration order on the cluster (spill is oldest-first).
     seq: u64,
     /// The resident blocked representation; `None` after a spill.
@@ -550,16 +619,32 @@ impl HandleInner {
         self.blocks.lock().unwrap().is_some()
     }
 
+    /// Bytes this value charges against the storage budget: one copy for
+    /// a distributed value, one copy *per worker* for a replicated one.
+    fn charged_bytes(&self) -> usize {
+        if self.replicated {
+            self.bytes.saturating_mul(self.cluster.num_workers)
+        } else {
+            self.bytes
+        }
+    }
+
     /// Spill to the driver: make sure the dense copy exists, then drop
     /// the blocked representation and release its storage charge.
-    /// Returns false if the value was already spilled (racing callers).
+    /// A replicated value materializes for free (the driver already
+    /// receives it with the job — dropping the worker copies moves no
+    /// data), so spilling resident optimizer state never charges a
+    /// collect. Returns false if the value was already spilled (racing
+    /// callers).
     fn spill(&self, cluster: &Cluster) -> bool {
         if self.forced.get().is_none() {
             let _g = self.force_lock.lock().unwrap();
             if self.forced.get().is_none() {
                 let resident = self.blocks.lock().unwrap().clone();
                 let Some(b) = resident else { return false };
-                match cluster.collect(&b) {
+                let collected =
+                    if self.replicated { b.to_local() } else { cluster.collect(&b) };
+                match collected {
                     Ok(m) => {
                         let _ = self.forced.set(m);
                     }
@@ -570,7 +655,7 @@ impl HandleInner {
         let taken = self.blocks.lock().unwrap().take();
         match taken {
             Some(_) => {
-                cluster.cache.unreserve(self.bytes);
+                cluster.cache.unreserve(self.charged_bytes());
                 cluster.spills.fetch_add(1, Ordering::Relaxed);
                 metrics::global().dist_spills.fetch_add(1, Ordering::Relaxed);
                 true
@@ -585,7 +670,8 @@ impl Drop for HandleInner {
         // Last reference gone: release the storage charge if the blocked
         // representation is still resident.
         if self.blocks.get_mut().map(|b| b.is_some()).unwrap_or(false) {
-            self.cluster.cache.unreserve(self.bytes);
+            let bytes = self.charged_bytes();
+            self.cluster.cache.unreserve(bytes);
         }
     }
 }
@@ -604,12 +690,13 @@ impl std::fmt::Debug for BlockedHandle {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "BlockedHandle({}x{}, nnz {}, {}, {})",
+            "BlockedHandle({}x{}, nnz {}, {}, {}{})",
             self.inner.rows,
             self.inner.cols,
             self.inner.nnz,
             if self.is_resident() { "resident" } else { "spilled" },
-            if self.is_forced() { "forced" } else { "lazy" }
+            if self.is_forced() { "forced" } else { "lazy" },
+            if self.inner.replicated { ", replicated" } else { "" }
         )
     }
 }
@@ -619,6 +706,27 @@ impl BlockedHandle {
     /// the resident bytes against the cluster's storage budget (which may
     /// spill *older* live values to the driver — never this one).
     pub fn new(cluster: Arc<Cluster>, blocked: Arc<BlockedMatrix>) -> BlockedHandle {
+        BlockedHandle::bind(cluster, blocked, false)
+    }
+
+    /// Bind an allreduce product (or derived model state) as a
+    /// **replicated** live value: a single-block value resident on every
+    /// worker. Forcing and gathering it are free — the value arrives with
+    /// the job, never as a collect — and it charges
+    /// `bytes × num_workers` to the storage budget.
+    pub fn replicated(cluster: Arc<Cluster>, blocked: Arc<BlockedMatrix>) -> BlockedHandle {
+        debug_assert!(
+            blocked.block_rows() * blocked.block_cols() <= 1,
+            "replicated values are single-block by construction"
+        );
+        BlockedHandle::bind(cluster, blocked, true)
+    }
+
+    fn bind(
+        cluster: Arc<Cluster>,
+        blocked: Arc<BlockedMatrix>,
+        replicated: bool,
+    ) -> BlockedHandle {
         let (rows, cols) = blocked.shape();
         let inner = Arc::new(HandleInner {
             rows,
@@ -626,6 +734,7 @@ impl BlockedHandle {
             nnz: blocked.nnz(),
             bytes: blocked.size_in_bytes(),
             block_size: blocked.block_size(),
+            replicated,
             seq: cluster.live_seq.fetch_add(1, Ordering::Relaxed),
             blocks: Mutex::new(Some(blocked)),
             forced: OnceLock::new(),
@@ -635,6 +744,12 @@ impl BlockedHandle {
         });
         cluster.register_live(&inner);
         BlockedHandle { inner }
+    }
+
+    /// Is this value replicated on every worker (allreduce product /
+    /// resident model state)?
+    pub fn is_replicated(&self) -> bool {
+        self.inner.replicated
     }
 
     pub fn rows(&self) -> usize {
@@ -680,6 +795,9 @@ impl BlockedHandle {
     /// The blocked representation, for DIST consumers. Resident handles
     /// return their shared blocks; a spilled handle re-blockifies from
     /// the (guaranteed-present) driver copy and becomes resident again.
+    /// A spilled *replicated* value instead re-enters as a broadcast
+    /// (charged as such — it must reach every worker again) without
+    /// bumping the blockify counters.
     pub fn blocked(&self) -> Result<Arc<BlockedMatrix>> {
         if let Some(b) = self.inner.blocks.lock().unwrap().clone() {
             return Ok(b);
@@ -688,15 +806,21 @@ impl BlockedHandle {
         let m = self.inner.forced.get().ok_or_else(|| {
             DmlError::rt("blocked value lost both its blocks and its driver copy")
         })?;
-        let b = Arc::new(self.inner.cluster.blockify(m)?);
+        let b = if self.inner.replicated {
+            let b = BlockedMatrix::from_local(m, self.inner.block_size)?;
+            self.inner.cluster.record_broadcast(self.inner.bytes as u64);
+            Arc::new(b)
+        } else {
+            Arc::new(self.inner.cluster.blockify(m)?)
+        };
         // Reserve *before* publishing the blocks: a concurrent spill can
         // only unreserve after it observes the slot populated, so the
         // accounting can never transiently go negative.
-        self.inner.cluster.cache.reserve(self.inner.bytes);
+        self.inner.cluster.cache.reserve(self.inner.charged_bytes());
         let mut slot = self.inner.blocks.lock().unwrap();
         if let Some(existing) = slot.clone() {
             drop(slot);
-            self.inner.cluster.cache.unreserve(self.inner.bytes);
+            self.inner.cluster.cache.unreserve(self.inner.charged_bytes());
             return Ok(existing); // raced with another rebuild
         }
         *slot = Some(b.clone());
@@ -707,7 +831,9 @@ impl BlockedHandle {
 
     /// Force the driver materialization (the lazy collect), memoized:
     /// the first CP consumer pays one `Cluster::collect`, every later
-    /// consumer reads the cached dense copy.
+    /// consumer reads the cached dense copy. A **replicated** value
+    /// forces for free — it arrived at the driver with the job, like
+    /// SINGLE_BLOCK aggregation, so no collect is charged.
     pub fn force(&self) -> Result<&Matrix> {
         if let Some(m) = self.inner.forced.get() {
             return Ok(m);
@@ -718,7 +844,11 @@ impl BlockedHandle {
             let b = resident.ok_or_else(|| {
                 DmlError::rt("blocked value lost both its blocks and its driver copy")
             })?;
-            let m = self.inner.cluster.collect(&b)?;
+            let m = if self.inner.replicated {
+                b.to_local()?
+            } else {
+                self.inner.cluster.collect(&b)?
+            };
             let _ = self.inner.forced.set(m);
         }
         Ok(self.inner.forced.get().unwrap())
@@ -753,7 +883,11 @@ impl BlockedHandle {
                     let b = resident.ok_or_else(|| {
                         DmlError::rt("blocked value lost both its blocks and its driver copy")
                     })?;
-                    self.inner.cluster.record_shuffle(self.inner.bytes as u64);
+                    // A replicated value already lives on every worker —
+                    // a worker-side gather of it moves nothing.
+                    if !self.inner.replicated {
+                        self.inner.cluster.record_shuffle(self.inner.bytes as u64);
+                    }
                     b.to_local()?
                 }
             };
@@ -875,6 +1009,59 @@ mod tests {
         cluster.reset_accounting();
         assert_eq!(*h2.gathered().unwrap(), m);
         assert_eq!(cluster.comm_bytes(), 0, "forced handles gather for free");
+    }
+
+    #[test]
+    fn allreduce_accounting_scales_log2_workers() {
+        for (workers, rounds) in [(1usize, 0u64), (2, 1), (4, 2), (7, 3), (8, 3)] {
+            let c = Cluster::new(workers, 16);
+            c.record_allreduce(100);
+            assert_eq!(c.allreduce_round_count(), rounds, "workers={workers}");
+            assert_eq!(c.allreduce_byte_count(), rounds * 100, "workers={workers}");
+            // Allreduce traffic is charged to shuffle accounting.
+            assert_eq!(c.comm_bytes(), rounds * 100, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn replicated_handle_forces_and_gathers_free() {
+        let cluster = Arc::new(Cluster::new(4, 64));
+        let m = rand(8, 8, -1.0, 1.0, 1.0, Pdf::Uniform, 11).unwrap();
+        let b = Arc::new(BlockedMatrix::from_local(&m, 64).unwrap());
+        let h = BlockedHandle::replicated(cluster.clone(), b);
+        assert!(h.is_replicated());
+        // One copy per worker is charged to storage.
+        assert_eq!(cluster.live_blocked_bytes(), h.size_in_bytes() * 4);
+        cluster.reset_accounting();
+        assert_eq!(*h.force().unwrap(), m);
+        assert_eq!(*h.gathered().unwrap(), m);
+        assert_eq!(cluster.collect_count(), 0, "replicated force is free");
+        assert_eq!(cluster.comm_bytes(), 0, "replicated gather moves nothing");
+    }
+
+    #[test]
+    fn replicated_spill_is_collect_free_and_rebuild_broadcasts() {
+        let cluster = Arc::new(Cluster::new(4, 64));
+        let m = rand(8, 8, -1.0, 1.0, 1.0, Pdf::Uniform, 12).unwrap();
+        let b = Arc::new(BlockedMatrix::from_local(&m, 64).unwrap());
+        let h = BlockedHandle::replicated(cluster.clone(), b);
+        cluster.reset_accounting();
+        assert!(h.spill());
+        assert_eq!(cluster.spill_count(), 1);
+        assert_eq!(cluster.collect_count(), 0, "spilling replicated state never collects");
+        assert_eq!(cluster.live_blocked_bytes(), 0);
+        // Re-entering the cluster is a broadcast of one copy to every
+        // worker, with no blockify op counted.
+        let blockifies = cluster.blockify_count();
+        let rebuilt = h.blocked().unwrap();
+        assert_eq!(rebuilt.to_local().unwrap(), m);
+        assert_eq!(cluster.blockify_count(), blockifies);
+        assert_eq!(
+            cluster.comm_bytes(),
+            h.size_in_bytes() as u64 * 4,
+            "rebuild is charged as a broadcast"
+        );
+        assert_eq!(cluster.live_blocked_bytes(), h.size_in_bytes() * 4);
     }
 
     #[test]

@@ -27,12 +27,18 @@
 //!   result. The filter ships as a **broadcast variable** (charged to
 //!   broadcast accounting unless already resident on the workers).
 //! * **`conv2d_backward_filter`**: every band computes its *partial*
-//!   filter gradient (a small K×(C·R·S) matrix); the partials return with
-//!   their tasks — like the per-block partials of the blocked aggregates,
-//!   **not** a collect of the batch — and fold at the driver in band
-//!   order. Note the fold associates per band, so multi-band gradients
-//!   match CP up to floating-point summation order (single-band batches
-//!   are byte-identical); everything else in this module is exact.
+//!   filter gradient (a small K×(C·R·S) matrix); the partials are
+//!   combined via a modeled **tree-allreduce** — charged as
+//!   `log2(workers)` rounds of the gradient's bytes
+//!   ([`Cluster::record_allreduce`]), **not** a collect of the batch —
+//!   with the arithmetic fold running in ascending band order (a fixed
+//!   order that depends only on the block grid, so results are
+//!   byte-identical across worker/thread counts). Note the fold
+//!   associates per band, so multi-band gradients match CP up to
+//!   floating-point summation order (single-band batches are
+//!   byte-identical); everything else in this module is exact. The
+//!   dispatch layer binds the gradient **replicated** on every worker, so
+//!   the optimizer update consumes it cluster-side.
 //! * **`bias_add` / `bias_multiply`**: pure per-block maps — each block
 //!   derives its channel index from its global column offset, so the
 //!   K×1 bias broadcast joins map-side without band assembly.
@@ -227,11 +233,11 @@ pub fn conv2d_backward_data_blocked(
 }
 
 /// Blocked conv2d_backward_filter: per-band **partial** filter gradients
-/// (each a small K×(C·R·S) matrix) fold at the driver in band order —
-/// the partials return with their tasks like blocked aggregate partials,
-/// never as a collect of the batch. Single-band batches are
-/// byte-identical to CP; multi-band gradients match up to summation
-/// order (documented in the module docs).
+/// (each a small K×(C·R·S) matrix) combined via a modeled tree-allreduce
+/// — `log2(workers)` rounds of the gradient's bytes, never a collect of
+/// the batch — with the arithmetic fold in ascending band order.
+/// Single-band batches are byte-identical to CP; multi-band gradients
+/// match up to summation order (documented in the module docs).
 pub fn conv2d_backward_filter_blocked(
     cluster: &Cluster,
     x: &BlockedMatrix,
@@ -284,7 +290,12 @@ pub fn conv2d_backward_filter_blocked(
             }
         });
     }
-    Ok(Matrix::Dense(acc.unwrap_or_else(|| DenseMatrix::zeros(k, crs))))
+    let out = Matrix::Dense(acc.unwrap_or_else(|| DenseMatrix::zeros(k, crs)));
+    // The reduction of band partials (and the replication of the summed
+    // gradient to every worker) is a tree-allreduce: log2(workers)
+    // rounds of the gradient's bytes, charged to shuffle accounting.
+    cluster.record_allreduce(out.size_in_bytes() as u64);
+    Ok(out)
 }
 
 /// Blocked max_pool forward → N×(C·P·Q) blocked.

@@ -21,6 +21,20 @@
 //! so the cluster's communication totals reflect reuse exactly like
 //! Spark's cached-RDD + reused-broadcast behavior. The [`Residency`]
 //! flags carry that information from the dispatch layer.
+//!
+//! Gradient-shaped matmults — a **single-block output folded over a
+//! multi-block inner dimension** (`t(X) %*% y`, `t(H) %*% dout`) — run as
+//! a modeled **tree-allreduce** instead of mapmm/rmm
+//! ([`is_allreduce_matmult`]): one task per inner block k computes its
+//! partial product where both operand blocks live (`(0,k)` and `(k,0)`
+//! share worker `k % n` under the symmetric placement — a narrow
+//! dependency, no operand movement), and the partials fold in ascending
+//! k — the same summation order as the previous in-task fold, so results
+//! are byte-identical — while the reduction is charged as
+//! `log2(workers)` rounds of the result's bytes
+//! ([`Cluster::record_allreduce`]). The dispatch layer binds the product
+//! replicated on every worker, which is what keeps model state resident
+//! across a whole training job.
 
 use std::sync::Arc;
 
@@ -94,6 +108,9 @@ pub fn matmult_blocked_reuse(
             b.cols(),
             b.block_size()
         )));
+    }
+    if is_allreduce_matmult(a, b) {
+        return matmult_allreduce(cluster, a, b);
     }
     let (op, _) = choose_mm_operator(cluster, a, b);
     // Communication accounting per the chosen plan, skipping operands
@@ -171,6 +188,57 @@ pub fn matmult_blocked_reuse(
         blocks.push(out);
     }
     Ok(BlockedMatrix::from_blocks(a.rows(), b.cols(), bs, blocks))
+}
+
+/// Is `a %*% b` a gradient-shaped **allreduce matmult**: single-block
+/// output folded over a multi-block inner dimension? Shared by the
+/// operator (which routes it through [`matmult_allreduce`]) and the
+/// dispatch layer (which binds the product replicated), so the two can
+/// never disagree.
+pub fn is_allreduce_matmult(a: &BlockedMatrix, b: &BlockedMatrix) -> bool {
+    a.block_rows() <= 1 && b.block_cols() <= 1 && a.block_cols() > 1
+}
+
+/// Tree-allreduce matmult for a single-block output over a multi-block
+/// inner dimension: one task per inner block k computes the partial
+/// product `A(0,k) %*% B(k,0)` on worker `k % n` — where *both* operand
+/// blocks already live under the symmetric placement, so no operand
+/// moves — and the partials fold in **ascending k**, the exact summation
+/// order of the general operator's in-task fold (byte-identical results,
+/// independent of worker/thread counts). The reduction is charged as
+/// `log2(workers)` rounds of the result's bytes.
+fn matmult_allreduce(
+    cluster: &Cluster,
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+) -> Result<BlockedMatrix> {
+    let bk = a.block_cols();
+    let mut tasks: Vec<DistTask<Result<(Matrix, u64)>>> = Vec::with_capacity(bk);
+    for k in 0..bk {
+        let lb = a.shared_block(0, k);
+        let rb = b.shared_block(k, 0);
+        tasks.push((
+            cluster.worker_for(0, k),
+            Box::new(move || {
+                let flops = 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
+                Ok((mult::matmult(&lb, &rb)?, flops))
+            }),
+        ));
+    }
+    let mut acc: Option<Matrix> = None;
+    for (k, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
+        let (p, flops) = res?;
+        cluster.record_task(cluster.worker_for(0, k), flops);
+        acc = Some(match acc {
+            None => p,
+            Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
+        });
+    }
+    let out = acc
+        .ok_or_else(|| DmlError::rt("allreduce matmult: empty inner dimension"))?
+        .examine_and_convert();
+    cluster.record_allreduce(out.size_in_bytes() as u64);
+    Ok(BlockedMatrix::from_blocks(a.rows(), b.cols(), a.block_size(), vec![out]))
 }
 
 /// Cost-based operator selection: mapmm broadcasts the smaller input to
@@ -882,6 +950,48 @@ mod tests {
                 approx_eq_slice(&c_dist.to_row_major_vec(), &c_local.to_row_major_vec(), 1e-12),
                 "col {op:?}"
             );
+        }
+    }
+
+    #[test]
+    fn allreduce_matmult_byte_identical_across_workers_and_threads() {
+        let am = rand(8, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 81).unwrap();
+        let bm = rand(96, 8, -1.0, 1.0, 0.6, Pdf::Uniform, 82).unwrap();
+        let a = BlockedMatrix::from_local(&am, 16).unwrap();
+        let b = BlockedMatrix::from_local(&bm, 16).unwrap();
+        assert!(is_allreduce_matmult(&a, &b), "1x6 @ 6x1 grid folds over k");
+        let reference = matmult_blocked(&Cluster::with_threads(1, 16, 1), &a, &b)
+            .unwrap()
+            .to_row_major_vec();
+        for workers in [1usize, 2, 4, 7] {
+            for threads in [1usize, 4] {
+                let cluster = Cluster::with_threads(workers, 16, threads);
+                let out = matmult_blocked(&cluster, &a, &b).unwrap().to_row_major_vec();
+                let same = out.len() == reference.len()
+                    && out.iter().zip(&reference).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "workers={workers} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_matmult_charges_log2_rounds_not_broadcast() {
+        let am = rand(8, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 83).unwrap();
+        let bm = rand(96, 8, -1.0, 1.0, 1.0, Pdf::Uniform, 84).unwrap();
+        let a = BlockedMatrix::from_local(&am, 16).unwrap();
+        let b = BlockedMatrix::from_local(&bm, 16).unwrap();
+        for (workers, rounds) in [(2usize, 1u64), (4, 2), (8, 3)] {
+            let cluster = Cluster::new(workers, 16);
+            let out = matmult_blocked(&cluster, &a, &b).unwrap();
+            assert_eq!(cluster.allreduce_round_count(), rounds, "workers={workers}");
+            assert_eq!(
+                cluster.allreduce_byte_count(),
+                rounds * out.size_in_bytes() as u64,
+                "workers={workers}"
+            );
+            // No mapmm broadcast / rmm shuffle beyond the allreduce: the
+            // per-k partials are computed where the operands live.
+            assert_eq!(cluster.comm_bytes(), cluster.allreduce_byte_count());
         }
     }
 

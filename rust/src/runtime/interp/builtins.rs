@@ -233,7 +233,7 @@ pub fn call_builtin(
                 _ => AggOp::Min,
             };
             let row_wise = name.starts_with("row");
-            m1(interp.dispatch_agg_axis_value(
+            one(interp.dispatch_agg_axis_value(
                 a.require(0, "target")?,
                 op,
                 row_wise,

@@ -14,10 +14,17 @@
 //! it forces the operator DIST (collecting it to honor a CP placement
 //! would cost more than the distributed op). DIST results are bound as
 //! blocked values again (`bind_dist_result`), so chains of distributed
-//! operators never round-trip through the driver; the only exception is
-//! a single-block output (e.g. the 1x1 of `t(p) %*% q`), which returns
-//! to the driver as part of the job — SystemML's SINGLE_BLOCK
-//! aggregation — rather than staying distributed.
+//! operators never round-trip through the driver. Single-block outputs
+//! split two ways: an *aggregation-shaped* result (a gradient matmult
+//! `t(X) %*% dout`, a `conv2d_backward_filter` gradient, a single-block
+//! axis aggregate) is combined via a modeled tree-allreduce and bound
+//! **replicated** on every worker (`bind_replicated_result`) so the
+//! optimizer update that consumes it runs cluster-side with zero
+//! collects; any other single-block output returns to the driver as part
+//! of the job — SystemML's SINGLE_BLOCK aggregation. Operators over a
+//! replicated operand (scalar/unary/cellwise maps, transpose) bind their
+//! single-block result replicated again, which is what keeps model state
+//! and optimizer moment buffers resident across a whole training job.
 
 use std::borrow::Cow;
 use std::sync::Arc;
@@ -312,6 +319,31 @@ impl Interpreter {
         Ok(Value::Blocked(BlockedHandle::new(cluster.clone(), out)))
     }
 
+    /// Bind an allreduce-combined single-block output **replicated** on
+    /// every worker: the value stays cluster-side (one copy per worker,
+    /// charged to storage accordingly), forces and gathers for free, and
+    /// keeps downstream per-block maps — the optimizer update chain —
+    /// distributed. With `blocked_values` disabled this falls back to the
+    /// eager-collect legacy path of [`Self::bind_dist_result`].
+    fn bind_replicated_result(
+        &self,
+        cluster: &Arc<Cluster>,
+        out: Arc<BlockedMatrix>,
+    ) -> Result<Value> {
+        if !self.config.blocked_values {
+            return self.bind_dist_result(cluster, out);
+        }
+        if self.config.explain {
+            self.emit(format!(
+                "EXPLAIN: ALLREDUCE result {}x{} replicated on {} worker(s)",
+                out.rows(),
+                out.cols(),
+                cluster.num_workers()
+            ));
+        }
+        Ok(Value::Blocked(BlockedHandle::replicated(cluster.clone(), out)))
+    }
+
     // ---- matrix multiplication ---------------------------------------
 
     /// Heavy-operator dispatch for `%*%`: ACCEL when a compiled artifact
@@ -400,7 +432,14 @@ impl Interpreter {
                 let (ab, ra) = self.acquire_operand(cluster, &a, ha, "lhs")?;
                 let (bb, rb) = self.acquire_operand(cluster, &b, hb, "rhs")?;
                 let resident = dist_ops::Residency { lhs: ra, rhs: rb };
+                let allreduce = dist_ops::is_allreduce_matmult(&ab, &bb);
                 let out = dist_ops::matmult_blocked_reuse(cluster, &ab, &bb, resident)?;
+                if allreduce {
+                    // Gradient-shaped product (t(X) %*% dout): the k
+                    // partials tree-allreduce into a single block that
+                    // stays replicated on the workers.
+                    return self.bind_replicated_result(cluster, Arc::new(out));
+                }
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(mult::matmult(a.force()?, b.force()?)?)),
@@ -472,9 +511,18 @@ impl Interpreter {
         match self.resolve_exec(OpKind::CellBinary, pos, est, &desc, blocked_in)? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
+                // W + vW on resident model state: if either side is
+                // replicated the (single-block) result is too — the
+                // optimizer update runs as a per-block map on every
+                // worker and the weights never leave the cluster.
+                let replicated_in = matches!(&a, Operand::Handle(h) if h.is_replicated())
+                    || matches!(&b, Operand::Handle(h) if h.is_replicated());
                 let (ab, _) = self.acquire_operand(cluster, &a, ha, "lhs")?;
                 let (bb, _) = self.acquire_operand(cluster, &b, hb, "rhs")?;
                 let out = dist_ops::binary_blocked(cluster, &ab, &bb, op)?;
+                if replicated_in && out.block_rows() * out.block_cols() <= 1 {
+                    return self.bind_replicated_result(cluster, Arc::new(out));
+                }
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
@@ -507,6 +555,9 @@ impl Interpreter {
                 Operand::Handle(h) => {
                     let cluster = h.cluster();
                     let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, false)?;
+                    if h.is_replicated() {
+                        return self.bind_replicated_result(cluster, Arc::new(out));
+                    }
                     self.bind_dist_result(cluster, Arc::new(out))
                 }
                 Operand::Driver(m) => {
@@ -560,6 +611,11 @@ impl Interpreter {
                 }
                 let out =
                     dist_ops::binary_broadcast_blocked(cluster, &ab, vm.as_ref(), op, v_resident)?;
+                if matches!(&a, Operand::Handle(h) if h.is_replicated())
+                    && out.block_rows() * out.block_cols() <= 1
+                {
+                    return self.bind_replicated_result(cluster, Arc::new(out));
+                }
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
@@ -580,6 +636,11 @@ impl Interpreter {
             Value::Blocked(h) => {
                 let cluster = h.cluster();
                 let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, swapped)?;
+                if h.is_replicated() {
+                    // lr * dW on replicated gradient state: a per-block
+                    // map on every worker's copy — stays replicated.
+                    return self.bind_replicated_result(cluster, Arc::new(out));
+                }
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(elementwise::scalar_op(v.as_matrix()?, s, op, swapped)?)),
@@ -593,6 +654,9 @@ impl Interpreter {
             Value::Blocked(h) => {
                 let cluster = h.cluster();
                 let out = dist_ops::unary_blocked(cluster, &h.blocked()?, op);
+                if h.is_replicated() {
+                    return self.bind_replicated_result(cluster, Arc::new(out));
+                }
                 self.bind_dist_result(cluster, Arc::new(out))
             }
             _ => Ok(Value::Matrix(elementwise::unary(v.as_matrix()?, op))),
@@ -623,6 +687,9 @@ impl Interpreter {
                 match &a {
                     Operand::Handle(h) => {
                         let out = dist_ops::transpose_blocked(cluster, &h.blocked()?);
+                        if h.is_replicated() {
+                            return self.bind_replicated_result(cluster, Arc::new(out));
+                        }
                         self.bind_dist_result(cluster, Arc::new(out))
                     }
                     Operand::Driver(m) => {
@@ -901,8 +968,9 @@ impl Interpreter {
     /// with zero collects. On DIST placements the batch runs worker-side
     /// over row bands (`runtime::dist::nn`) with the filter shipped as a
     /// broadcast variable; conv/pool outputs bind as blocked values, and
-    /// `conv2d_backward_filter` returns its small K×CRS gradient with
-    /// the job — like an aggregate, never a collect.
+    /// `conv2d_backward_filter` combines its small K×CRS gradient via
+    /// tree-allreduce and binds it **replicated** on the workers — never
+    /// a collect, and the weight update consumes it cluster-side.
     ///
     /// Operand roles: `x` is the batch-shaped operand (`input`, or
     /// `dout` for conv2d_backward_data); `aux` is the filter
@@ -1032,11 +1100,19 @@ impl Interpreter {
                             haux,
                             "dout",
                         )?;
-                        // The K×CRS gradient returns with the job (per-band
-                        // partials folded at the driver) — not a collect.
-                        return Ok(Value::Matrix(dist_nn::conv2d_backward_filter_blocked(
-                            cluster, &xb, &db, sh,
-                        )?));
+                        // The K×CRS gradient is combined via tree-allreduce
+                        // (charged inside the blocked kernel) — never a
+                        // collect. When it fits one block it stays
+                        // replicated on the workers so the weight update
+                        // consumes it cluster-side.
+                        let grad =
+                            dist_nn::conv2d_backward_filter_blocked(cluster, &xb, &db, sh)?;
+                        let bs = cluster.block_size;
+                        if grad.rows() <= bs && grad.cols() <= bs {
+                            let gb = BlockedMatrix::from_local(&grad, bs)?;
+                            return self.bind_replicated_result(cluster, Arc::new(gb));
+                        }
+                        return Ok(Value::Matrix(grad));
                     }
                     ConvOpKind::MaxPool => dist_nn::max_pool_blocked(cluster, &xb, sh)?,
                     ConvOpKind::AvgPool => dist_nn::avg_pool_blocked(cluster, &xb, sh)?,
@@ -1174,7 +1250,8 @@ impl Interpreter {
     }
 
     /// Unified dispatch for row-/column-wise aggregates (`rowSums`,
-    /// `colMaxs`, ...). `row_wise` selects the reduction axis.
+    /// `colMaxs`, ...). `row_wise` selects the reduction axis. Returns a
+    /// driver matrix (forcing a replicated result — free, no collect).
     pub fn dispatch_agg_axis(
         &self,
         m: &Matrix,
@@ -1182,7 +1259,8 @@ impl Interpreter {
         row_wise: bool,
         pos: Option<Pos>,
     ) -> Result<Matrix> {
-        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, None)
+        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, None)?
+            .into_matrix()
     }
 
     /// [`Self::dispatch_agg_axis`] with the operand's lineage reference.
@@ -1194,10 +1272,13 @@ impl Interpreter {
         pos: Option<Pos>,
         hint: Option<&LineageRef>,
     ) -> Result<Matrix> {
-        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, hint)
+        self.agg_axis_operand(Operand::Driver(m), op, row_wise, pos, hint)?
+            .into_matrix()
     }
 
-    /// Value-level axis aggregate.
+    /// Value-level axis aggregate: a single-block DIST result (the
+    /// `colSums(dH)` bias gradient) binds replicated; anything else
+    /// returns a driver matrix.
     pub fn dispatch_agg_axis_value(
         &self,
         v: &Value,
@@ -1205,7 +1286,7 @@ impl Interpreter {
         row_wise: bool,
         pos: Option<Pos>,
         hint: Option<&LineageRef>,
-    ) -> Result<Matrix> {
+    ) -> Result<Value> {
         self.agg_axis_operand(Operand::of(v)?, op, row_wise, pos, hint)
     }
 
@@ -1216,7 +1297,7 @@ impl Interpreter {
         row_wise: bool,
         pos: Option<Pos>,
         hint: Option<&LineageRef>,
-    ) -> Result<Matrix> {
+    ) -> Result<Value> {
         let out = if row_wise {
             estimate::dense_size(m.rows(), 1)
         } else {
@@ -1229,17 +1310,27 @@ impl Interpreter {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
                 let (mb, _) = self.acquire_operand(cluster, &m, hint, "arg")?;
-                if row_wise {
-                    dist_ops::row_agg_blocked(cluster, &mb, op)
+                let out = if row_wise {
+                    dist_ops::row_agg_blocked(cluster, &mb, op)?
                 } else {
-                    dist_ops::col_agg_blocked(cluster, &mb, op)
+                    dist_ops::col_agg_blocked(cluster, &mb, op)?
+                };
+                let bs = cluster.block_size;
+                if out.rows() <= bs && out.cols() <= bs {
+                    // Single-block aggregate: the per-block partials are
+                    // combined via tree-allreduce and the vector stays
+                    // replicated on the workers (the bias-update case).
+                    cluster.record_allreduce(out.size_in_bytes() as u64);
+                    let ob = BlockedMatrix::from_local(&out, bs)?;
+                    return self.bind_replicated_result(cluster, Arc::new(ob));
                 }
+                Ok(Value::Matrix(out))
             }
-            _ => Ok(if row_wise {
+            _ => Ok(Value::Matrix(if row_wise {
                 agg::row_agg(m.force()?, op)
             } else {
                 agg::col_agg(m.force()?, op)
-            }),
+            })),
         }
     }
 }
@@ -1321,7 +1412,7 @@ mod tests {
     }
 
     #[test]
-    fn matmult_values_binds_blocked_and_single_block_returns_driver() {
+    fn matmult_values_binds_blocked_and_allreduce_result_stays_replicated() {
         let mut config = SystemConfig::tiny_driver(32 * 1024);
         config.block_size = 32;
         let it = interp(config);
@@ -1334,15 +1425,22 @@ mod tests {
         let cluster = it.cluster.as_ref().unwrap();
         assert!(matches!(out, Value::Blocked(_)), "{out:?}");
         assert_eq!(cluster.collect_count(), 0, "no collect for a blocked bind");
-        // Feed the blocked value back in: 1x96 @ 96x1 -> 1x1 single block
-        // returns a driver matrix without a collect.
+        // Feed the blocked value back in: 1x96 @ 96x1 is the
+        // gradient-shaped (allreduce) matmult — the 1x1 result binds
+        // replicated on the workers instead of returning to the driver.
+        let before = crate::util::metrics::global().snapshot();
         let tv = it
             .dispatch_transpose_value(&out, None, None)
             .unwrap();
         let s = it.dispatch_matmult_values(&tv, &out, None, None, None).unwrap();
-        assert!(matches!(s, Value::Matrix(_)), "{s:?}");
-        assert_eq!(cluster.collect_count(), 0, "single-block output is not a collect");
-        // Numerics match CP end to end.
+        match &s {
+            Value::Blocked(h) => assert!(h.is_replicated(), "allreduce result is replicated"),
+            other => panic!("allreduce result must bind blocked, got {other:?}"),
+        }
+        let d = crate::util::metrics::global().snapshot().delta(&before);
+        assert!(d.allreduce_rounds > 0, "allreduce rounds are charged");
+        assert_eq!(cluster.collect_count(), 0, "allreduce output is not a collect");
+        // Numerics match CP end to end (forcing replicated state is free).
         let xv = mult::matmult(&x, &v).unwrap();
         let expected = mult::matmult(&reorg::transpose(&xv), &xv).unwrap();
         assert!(approx_eq_slice(
@@ -1350,6 +1448,7 @@ mod tests {
             &expected.to_row_major_vec(),
             1e-9
         ));
+        assert_eq!(cluster.collect_count(), 0, "replicated force is free");
     }
 
     #[test]

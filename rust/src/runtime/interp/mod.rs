@@ -59,33 +59,62 @@ pub struct Ctx {
     pub depth: usize,
 }
 
+/// Build the simulated cluster an interpreter would use for `config`, or
+/// None when the distributed backend is disabled. Factored out so a
+/// session-persistent `MLContext` can keep ONE cluster alive across
+/// `execute` calls (resident blocked values and the block cache survive
+/// between scripts) and hand it to each interpreter via
+/// [`Interpreter::with_cluster`].
+pub fn build_cluster(config: &SystemConfig) -> Option<Arc<crate::runtime::dist::Cluster>> {
+    if !config.dist_enabled {
+        return None;
+    }
+    // The aggregate worker storage bounds both resident caches.
+    // cache_enabled=false collapses only the *partition cache*
+    // budget to 0 (no lineage reuse); live blocked values keep
+    // the full budget, so disabling the cache does not force
+    // every chained DIST result back to the driver.
+    let storage = config.worker_storage.saturating_mul(config.num_workers.max(1));
+    let cache_storage = if config.cache_enabled { storage } else { 0 };
+    // dist_threads=0 means one pool thread per simulated worker;
+    // dist_threads=1 is the serial escape hatch (see dist::pool).
+    let threads = if config.dist_threads == 0 {
+        config.num_workers.max(1)
+    } else {
+        config.dist_threads
+    };
+    Some(Arc::new(crate::runtime::dist::Cluster::with_budgets_threads(
+        config.num_workers,
+        config.block_size,
+        cache_storage,
+        storage,
+        threads,
+    )))
+}
+
 impl Interpreter {
     pub fn new(bundle: Bundle, config: SystemConfig) -> Self {
-        let cluster = if config.dist_enabled {
-            // The aggregate worker storage bounds both resident caches.
-            // cache_enabled=false collapses only the *partition cache*
-            // budget to 0 (no lineage reuse); live blocked values keep
-            // the full budget, so disabling the cache does not force
-            // every chained DIST result back to the driver.
-            let storage = config.worker_storage.saturating_mul(config.num_workers.max(1));
-            let cache_storage = if config.cache_enabled { storage } else { 0 };
-            // dist_threads=0 means one pool thread per simulated worker;
-            // dist_threads=1 is the serial escape hatch (see dist::pool).
-            let threads = if config.dist_threads == 0 {
-                config.num_workers.max(1)
-            } else {
-                config.dist_threads
-            };
-            Some(Arc::new(crate::runtime::dist::Cluster::with_budgets_threads(
-                config.num_workers,
-                config.block_size,
-                cache_storage,
-                storage,
-                threads,
-            )))
-        } else {
-            None
-        };
+        let cluster = build_cluster(&config);
+        Interpreter::assemble(bundle, config, cluster)
+    }
+
+    /// Like [`Interpreter::new`], but executing against a caller-owned
+    /// cluster (the session-persistent MLContext path): blocked values
+    /// bound on `cluster` by earlier scripts stay resident and can be
+    /// passed in as inputs with zero blockify/collect cost.
+    pub fn with_cluster(
+        bundle: Bundle,
+        config: SystemConfig,
+        cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+    ) -> Self {
+        Interpreter::assemble(bundle, config, cluster)
+    }
+
+    fn assemble(
+        bundle: Bundle,
+        config: SystemConfig,
+        cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+    ) -> Self {
         let accel = if config.accel_enabled {
             crate::runtime::accel::AccelBackend::open(&config)
                 .map(Arc::new)

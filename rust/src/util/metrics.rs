@@ -15,6 +15,11 @@ pub struct Metrics {
     pub flops: AtomicU64,
     /// Bytes moved through simulated-cluster shuffles.
     pub shuffle_bytes: AtomicU64,
+    /// Tree-allreduce reduction rounds executed (log2(workers) per op).
+    pub allreduce_rounds: AtomicU64,
+    /// Bytes moved by tree-allreduce rounds (also charged to
+    /// `shuffle_bytes` — this counter attributes the allreduce share).
+    pub allreduce_bytes: AtomicU64,
     /// Bytes broadcast to simulated workers.
     pub broadcast_bytes: AtomicU64,
     /// Distributed tasks launched.
@@ -57,6 +62,8 @@ pub struct Metrics {
 static GLOBAL: Metrics = Metrics {
     flops: AtomicU64::new(0),
     shuffle_bytes: AtomicU64::new(0),
+    allreduce_rounds: AtomicU64::new(0),
+    allreduce_bytes: AtomicU64::new(0),
     broadcast_bytes: AtomicU64::new(0),
     dist_tasks: AtomicU64::new(0),
     blockify_ops: AtomicU64::new(0),
@@ -101,6 +108,8 @@ impl Metrics {
         MetricsSnapshot {
             flops: self.flops.load(Ordering::Relaxed),
             shuffle_bytes: self.shuffle_bytes.load(Ordering::Relaxed),
+            allreduce_rounds: self.allreduce_rounds.load(Ordering::Relaxed),
+            allreduce_bytes: self.allreduce_bytes.load(Ordering::Relaxed),
             broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
             dist_tasks: self.dist_tasks.load(Ordering::Relaxed),
             blockify_ops: self.blockify_ops.load(Ordering::Relaxed),
@@ -126,6 +135,8 @@ impl Metrics {
     pub fn reset(&self) {
         self.flops.store(0, Ordering::Relaxed);
         self.shuffle_bytes.store(0, Ordering::Relaxed);
+        self.allreduce_rounds.store(0, Ordering::Relaxed);
+        self.allreduce_bytes.store(0, Ordering::Relaxed);
         self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.dist_tasks.store(0, Ordering::Relaxed);
         self.blockify_ops.store(0, Ordering::Relaxed);
@@ -152,6 +163,8 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub flops: u64,
     pub shuffle_bytes: u64,
+    pub allreduce_rounds: u64,
+    pub allreduce_bytes: u64,
     pub broadcast_bytes: u64,
     pub dist_tasks: u64,
     pub blockify_ops: u64,
@@ -178,6 +191,8 @@ impl MetricsSnapshot {
         MetricsSnapshot {
             flops: self.flops - earlier.flops,
             shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,
+            allreduce_rounds: self.allreduce_rounds - earlier.allreduce_rounds,
+            allreduce_bytes: self.allreduce_bytes - earlier.allreduce_bytes,
             broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
             dist_tasks: self.dist_tasks - earlier.dist_tasks,
             blockify_ops: self.blockify_ops - earlier.blockify_ops,
