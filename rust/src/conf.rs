@@ -38,6 +38,16 @@ pub struct SystemConfig {
     /// execution for debugging. Results are byte-identical either way:
     /// the pool preserves the driver-side reduction order.
     pub dist_threads: usize,
+    /// Per-block sparsity turn point for the blocked backend: a block
+    /// whose `nnz / cells` ratio is strictly below this (and that is
+    /// large enough for the CSR encoding to pay off — see
+    /// `runtime::matrix::MIN_SPARSE_CELLS`) is stored CSR; denser
+    /// blocks stay dense. Blockify inspects every block against this
+    /// threshold and blocked operators re-examine their outputs, so
+    /// representation follows the data through a plan. Mirrors
+    /// SystemML's 0.4 sparsity turn point; `1.0` makes every eligible
+    /// block sparse, `0.0` forces all-dense blocks.
+    pub sparsity_threshold: f64,
     /// Enable the distributed backend (if false, everything runs CP and
     /// over-budget allocations are errors — like local-mode SystemML).
     pub dist_enabled: bool,
@@ -65,6 +75,7 @@ impl Default for SystemConfig {
             blocked_values: true,
             block_size: 1024,
             dist_threads: 0,
+            sparsity_threshold: crate::runtime::matrix::SPARSITY_TURN_POINT,
             dist_enabled: true,
             accel_enabled: false,
             accel_memory: 256 * 1024 * 1024,
@@ -140,6 +151,8 @@ impl SystemConfigBuilder {
         block_size: usize,
         /// Worker threads for blocked tasks (0 = one per worker).
         dist_threads: usize,
+        /// Per-block sparsity turn point for CSR block encoding.
+        sparsity_threshold: f64,
         /// Enable the distributed backend.
         dist_enabled: bool,
         /// Enable the accelerator (PJRT) backend.

@@ -346,7 +346,16 @@ impl<'a> DagBuilder<'a> {
                 let base_shape = self.nodes[b].shape;
                 let rdim = self.index_extent(rows, base_shape.rows);
                 let cdim = self.index_extent(cols, base_shape.cols);
-                let shape = ShapeInfo { rows: rdim, cols: cdim, sparsity: 1.0, scalar: false };
+                // Indexing keeps the base's sparsity estimate: a slice of
+                // a sparse matrix is planned sparse (SystemML's rix
+                // worst-case estimate), so placement costs shrink instead
+                // of snapping back to dense.
+                let shape = ShapeInfo {
+                    rows: rdim,
+                    cols: cdim,
+                    sparsity: base_shape.sparsity,
+                    scalar: false,
+                };
                 // Distinct index ranges must not hash-cons together: salt
                 // the key with the printed ranges.
                 let salt = format!("{}|{}", render_range(rows), render_range(cols));
@@ -479,7 +488,11 @@ impl<'a> DagBuilder<'a> {
             "exp" | "log" | "sqrt" | "abs" | "round" | "floor" | "ceil" | "ceiling" | "sign"
             | "sin" | "cos" | "tan" | "sigmoid" => {
                 let mut s = shape0.unwrap_or_else(ShapeInfo::unknown);
-                if !matches!(name, "sqrt" | "abs" | "round" | "floor" | "sign" | "sin" | "tan") {
+                if !matches!(
+                    name,
+                    "sqrt" | "abs" | "round" | "floor" | "ceil" | "ceiling" | "sign" | "sin"
+                        | "tan"
+                ) {
                     s.sparsity = 1.0;
                 }
                 Some(self.intern(HopOp::Call(name.to_string()), ids.to_vec(), s, pos))
@@ -791,6 +804,19 @@ mod tests {
         let dag = lower_first("Y = X %*% W", &syms);
         assert_eq!(dag.shape_of(dag.root).known_dims(), None);
         assert!(dag.shape_of(dag.root).mem_estimate().is_none());
+    }
+
+    #[test]
+    fn index_carries_base_sparsity() {
+        let mut syms = HashMap::new();
+        syms.insert("X".to_string(), ShapeInfo::matrix(1000, 200, 0.01));
+        let dag = lower_first("B = X[1:100,]", &syms);
+        let s = dag.shape_of(dag.root);
+        assert_eq!(s.known_dims(), Some((100, 200)));
+        assert!((s.sparsity - 0.01).abs() < 1e-12, "{}", s.sparsity);
+        // ceil is sparse-safe: ceil(0) = 0 keeps the input sparsity.
+        let dag2 = lower_first("C = ceil(X)", &syms);
+        assert!((dag2.shape_of(dag2.root).sparsity - 0.01).abs() < 1e-12);
     }
 
     #[test]

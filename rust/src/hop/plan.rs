@@ -106,6 +106,11 @@ pub struct PlannedOp {
     /// aggregate — combined in log2(workers) tree-allreduce rounds and
     /// bound replicated on the workers.
     pub allreduce: bool,
+    /// Sparse-sized estimate (rendered as `SPARSE` in EXPLAIN): the
+    /// output or a matrix input is estimated below the sparsity turn
+    /// point at CSR-eligible size, so the placement decision above was
+    /// made against encoded (CSR) bytes rather than dense bytes.
+    pub sparse: bool,
 }
 
 /// Plan of one statement: its DAG plus the heavy operators found in it.
@@ -242,6 +247,9 @@ impl Plan {
                     }
                     if op.allreduce {
                         line.push_str(" ALLREDUCE");
+                    }
+                    if op.sparse {
+                        line.push_str(" SPARSE");
                     }
                 }
                 if uses[n.id] > 1 {
@@ -860,7 +868,20 @@ fn record_stmt(
                     }
                 }
             }
-            ops.push(PlannedOp { node: n.id, kind, pos: n.pos, exec, est, bcast, allreduce });
+            // Sparse-sized decision: the estimate above was charged CSR
+            // bytes for the output or a matrix input, so EXPLAIN flags it.
+            let sparse = shape_plans_sparse(n.shape)
+                || n.inputs.iter().any(|i| shape_plans_sparse(dag.nodes[*i].shape));
+            ops.push(PlannedOp {
+                node: n.id,
+                kind,
+                pos: n.pos,
+                exec,
+                est,
+                bcast,
+                allreduce,
+                sparse,
+            });
         }
     }
     let root_blocked = blocked[dag.root];
@@ -903,6 +924,20 @@ fn place_key(
         _ => {
             plan.placements.insert(key, Placement { exec, est });
         }
+    }
+}
+
+/// Is this shape estimated in the sparse (CSR) size regime — below the
+/// sparsity turn point and large enough for the CSR overhead to pay off?
+/// Mirrors `hop::estimate::estimate_size`'s format choice so the EXPLAIN
+/// `SPARSE` marker agrees with the bytes the placement was costed at.
+fn shape_plans_sparse(shape: ShapeInfo) -> bool {
+    use crate::runtime::matrix::{MIN_SPARSE_CELLS, SPARSITY_TURN_POINT};
+    match shape.known_dims() {
+        Some((r, c)) => {
+            r.saturating_mul(c) >= MIN_SPARSE_CELLS && shape.sparsity < SPARSITY_TURN_POINT
+        }
+        None => false,
     }
 }
 
@@ -1390,6 +1425,33 @@ mod tests {
             plan.render()
         );
         assert_eq!(plan.placed_execs(OpKind::Agg), vec![ExecType::Dist], "{}", plan.render());
+    }
+
+    #[test]
+    fn sparse_estimates_shrink_placement_and_render_sparse() {
+        let config = SystemConfig::tiny_driver(256 * 1024);
+        // Dense 400x400: ~3.8 MB estimate flips the matmult to DIST.
+        let dense = plan_src(
+            "Y = X %*% X\ns = sum(Y)",
+            &[("X", ShapeInfo::matrix(400, 400, 1.0))],
+            &config,
+        );
+        assert_eq!(dense.placed_execs(OpKind::MatMult), vec![ExecType::Dist]);
+        assert!(!dense.render().contains(" SPARSE"), "{}", dense.render());
+        // Same shapes at 1% density: CSR-sized estimates fit the driver,
+        // so the placement stays CP and EXPLAIN carries SPARSE.
+        let sparse = plan_src(
+            "Y = X %*% X\ns = sum(Y)",
+            &[("X", ShapeInfo::matrix(400, 400, 0.01))],
+            &config,
+        );
+        assert_eq!(
+            sparse.placed_execs(OpKind::MatMult),
+            vec![ExecType::CP],
+            "{}",
+            sparse.render()
+        );
+        assert!(sparse.render().contains(" SPARSE"), "{}", sparse.render());
     }
 
     #[test]

@@ -10,11 +10,13 @@
 //! time — to resident [`BlockedMatrix`] handles:
 //!
 //! * **Guard-checked reuse.** A hit is only served when the live driver
-//!   value still matches the resident blocks (dims, nnz, and a full
-//!   content fingerprint), so a stale entry can never change a result —
-//!   at worst it degrades to a miss. The fingerprint is an O(cells) scan
-//!   of the driver copy; it is what makes the globally versioned lineage
-//!   table safe across function frames and parfor workers. Since
+//!   value still matches the resident blocks (dims, nnz, and a content
+//!   fingerprint), so a stale entry can never change a result — at worst
+//!   it degrades to a miss. Small matrices fingerprint every nonzero
+//!   (an O(cells) scan); above [`GUARD_SAMPLE_CUTOFF_CELLS`] the guard
+//!   switches to exact nnz plus a strided sample of cell values, capping
+//!   the per-adoption cost. It is what makes the globally versioned
+//!   lineage table safe across function frames and parfor workers. Since
 //!   first-class blocked values (`Value::Blocked`) bypass the cache
 //!   entirely — the value *is* the handle — this scan is only paid when
 //!   **adopting a driver-resident matrix** into blocked form, not on the
@@ -97,11 +99,23 @@ impl LineageRef {
     }
 }
 
+/// Full-fingerprint cutoff: matrices above this many cells use a sampled
+/// guard (dims + exact nnz + a strided sample of cell values) instead of
+/// hashing every nonzero — capping the cost that every pending-result
+/// adoption and guarded acquire pays. The sampling scheme is a pure
+/// function of the dims, so the guard computed at offer time and the one
+/// computed at adoption time always agree.
+const GUARD_SAMPLE_CUTOFF_CELLS: usize = 1 << 16;
+/// Strided cell samples in a sampled guard.
+const GUARD_SAMPLES: usize = 1024;
+
 /// Content guard of a resident entry: reuse is only legal while the live
-/// driver value still matches what was blockified. The fingerprint covers
-/// every non-zero cell (position and bit pattern), so dense/sparse
-/// representations of the same content agree and collisions require
-/// identical dims, nnz and cell content.
+/// driver value still matches what was blockified. Below the sampling
+/// cutoff the fingerprint covers every non-zero cell (position and bit
+/// pattern); above it the guard carries exact dims/nnz plus a strided
+/// sample of cell values. Either way dense/sparse representations of the
+/// same content agree — format changes never produce a false hit — and a
+/// collision requires matching dims, nnz and (sampled) cell content.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Guard {
     pub rows: usize,
@@ -111,9 +125,26 @@ pub struct Guard {
 }
 
 impl Guard {
-    /// Guard of a local (driver) matrix: one pass over the cells.
+    /// Guard of a local (driver) matrix: one pass over the cells below
+    /// the sampling cutoff, dims + nnz + a strided sample above it.
     pub fn of(m: &Matrix) -> Guard {
         let (rows, cols) = m.shape();
+        let cells = rows.saturating_mul(cols);
+        if cells > GUARD_SAMPLE_CUTOFF_CELLS {
+            // Strided sample over row-major positions, zeros included:
+            // the stride depends only on the dims, so dense and sparse
+            // walks visit identical positions (`Matrix::get` is
+            // representation-agnostic). nnz stays exact, so any change
+            // in the nonzero count is caught even off the sample grid.
+            let stride = (cells / GUARD_SAMPLES).max(1);
+            let mut h = FNV_OFFSET;
+            let mut idx = 0usize;
+            while idx < cells {
+                h = fnv_cell(h, idx as u64, m.get(idx / cols, idx % cols));
+                idx += stride;
+            }
+            return Guard { rows, cols, nnz: m.nnz(), fingerprint: h };
+        }
         let mut nnz = 0usize;
         let mut h = FNV_OFFSET;
         match m {
@@ -633,6 +664,39 @@ mod tests {
         let a = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 8).unwrap();
         let b = rand(10, 10, -1.0, 1.0, 1.0, Pdf::Uniform, 9).unwrap();
         assert_ne!(Guard::of(&a).fingerprint, Guard::of(&b).fingerprint);
+    }
+
+    #[test]
+    fn sampled_guard_formats_agree_and_detect_drift() {
+        // 90_000 cells — above the sampling cutoff, so this exercises the
+        // strided-sample path end to end.
+        let m = rand(300, 300, -1.0, 1.0, 0.05, Pdf::Uniform, 21).unwrap();
+        let dense = Matrix::Dense(m.to_dense());
+        let sparse = m.clone().into_sparse_format();
+        assert_eq!(Guard::of(&dense), Guard::of(&sparse));
+        // Deterministic: recomputing yields the identical guard.
+        assert_eq!(Guard::of(&dense), Guard::of(&dense));
+        // nnz stays exact in the sampled guard: zeroing one cell is
+        // caught even when it falls off the sample grid.
+        let mut d = m.to_dense();
+        let idx = d.data.iter().position(|v| *v != 0.0).unwrap();
+        d.data[idx] = 0.0;
+        assert_ne!(Guard::of(&Matrix::Dense(d)), Guard::of(&dense));
+    }
+
+    #[test]
+    fn sampled_guard_serves_cache_hits() {
+        let cl = cluster_with(usize::MAX);
+        let m = rand(300, 300, -1.0, 1.0, 0.05, Pdf::Uniform, 22).unwrap();
+        let h = LineageRef::var("X", 1);
+        let (_, o1) = cl.cache().acquire(&cl, Some(&h), &m).unwrap();
+        assert!(!o1.is_hit());
+        let (_, o2) = cl.cache().acquire(&cl, Some(&h), &m).unwrap();
+        assert!(o2.is_hit());
+        // A different matrix of the same shape must still guard-miss.
+        let m2 = rand(300, 300, -1.0, 1.0, 0.05, Pdf::Uniform, 23).unwrap();
+        let (_, o3) = cl.cache().acquire(&cl, Some(&h), &m2).unwrap();
+        assert!(!o3.is_hit());
     }
 
     #[test]

@@ -74,6 +74,35 @@
 //! and moment buffers stay cluster-resident for a whole multi-epoch job
 //! at **0 driver collects total**. A spilled replicated value re-enters
 //! the cluster as a broadcast (it must reach every worker again).
+//!
+//! # CSR block lifecycle (per-block representation)
+//!
+//! Every block of a [`BlockedMatrix`] is an ordinary [`Matrix`] and so
+//! carries its own physical format — dense row-major or CSR — chosen
+//! per block, exactly as SystemML's binary-block RDDs mix dense and
+//! sparse `MatrixBlock`s within one matrix:
+//!
+//! 1. **Blockify** inspects each block's exact nnz and stores it CSR
+//!    when `nnz/cells` is below the cluster's sparsity turn point
+//!    ([`Cluster::sparsity_threshold`], from
+//!    `SystemConfig::sparsity_threshold`, default 0.4) and the block
+//!    has at least `MIN_SPARSE_CELLS` cells. A mostly-empty stripe of
+//!    an otherwise dense matrix blockifies sparse on its own.
+//! 2. **Operators** run format-aware CP kernels per block (sparse×dense
+//!    / dense×sparse / sparse×sparse matmult, intersect/union cellwise,
+//!    counting-sort transpose, row-range CSR slice) and re-examine each
+//!    *output* block against the same threshold, so representation
+//!    follows the data through a plan: a `*` that annihilates a block
+//!    crosses to CSR; an `exp` map densifies. Worker tasks build the
+//!    CSR blocks; all driver-side folds keep the serial block order, so
+//!    results stay byte-identical across `dist_threads`.
+//! 3. **Accounting** charges communication and storage by *encoded*
+//!    bytes (`Matrix::size_in_bytes` of the actual representation), so
+//!    broadcast/shuffle/allreduce volumes, live-value budgets, cache
+//!    charges and the planner's comm costing all shrink with sparsity.
+//! 4. **Cache guards** hash content format-independently (see
+//!    [`cache`]), so a dense↔CSR representation change of equal values
+//!    still hits, while any value change misses.
 
 pub mod cache;
 pub mod nn;
@@ -85,7 +114,7 @@ use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 use crate::runtime::dist::cache::{BlockCache, CacheOutcome, LineageRef};
 use crate::runtime::matrix::dense::DenseMatrix;
-use crate::runtime::matrix::{reorg, Matrix};
+use crate::runtime::matrix::{reorg, Matrix, SPARSITY_TURN_POINT};
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
 
@@ -104,6 +133,9 @@ pub struct Cluster {
     num_workers: usize,
     /// Block size (rows/cols) used when blockifying local matrices.
     pub block_size: usize,
+    /// Per-block sparsity turn point: blocks below this density are
+    /// stored CSR (see the module docs' CSR block lifecycle).
+    sparsity_threshold: f64,
     worker_flops: Vec<AtomicU64>,
     broadcast_bytes: AtomicU64,
     shuffle_bytes: AtomicU64,
@@ -175,6 +207,7 @@ impl Cluster {
         Cluster {
             num_workers: workers,
             block_size: block_size.max(1),
+            sparsity_threshold: SPARSITY_TURN_POINT,
             worker_flops: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             broadcast_bytes: AtomicU64::new(0),
             shuffle_bytes: AtomicU64::new(0),
@@ -196,6 +229,21 @@ impl Cluster {
     /// (test/bench hook for serial-vs-parallel comparisons).
     pub fn with_threads(num_workers: usize, block_size: usize, threads: usize) -> Cluster {
         Cluster::with_budgets_threads(num_workers, block_size, usize::MAX, usize::MAX, threads)
+    }
+
+    /// Consuming setter for the per-block sparsity turn point (applied
+    /// before the cluster is shared behind an `Arc`): blocks whose
+    /// density falls strictly below `t` — and that clear the
+    /// `MIN_SPARSE_CELLS` floor — are stored CSR by blockify and by
+    /// every blocked operator's output re-examination.
+    pub fn with_sparsity_threshold(mut self, t: f64) -> Cluster {
+        self.sparsity_threshold = t.clamp(0.0, 1.0);
+        self
+    }
+
+    /// The per-block sparsity turn point in effect (default 0.4).
+    pub fn sparsity_threshold(&self) -> f64 {
+        self.sparsity_threshold
     }
 
     pub fn num_workers(&self) -> usize {
@@ -226,7 +274,7 @@ impl Cluster {
     /// this cluster and in the global metrics. All blockifies of this
     /// cluster flow through here so reuse is observable per cluster.
     pub fn blockify(&self, m: &Matrix) -> Result<BlockedMatrix> {
-        let b = BlockedMatrix::from_local(m, self.block_size)?;
+        let b = BlockedMatrix::from_local_with(m, self.block_size, self.sparsity_threshold)?;
         self.blockify_ops.fetch_add(1, Ordering::Relaxed);
         metrics::global().blockify_ops.fetch_add(1, Ordering::Relaxed);
         Ok(b)
@@ -450,6 +498,18 @@ impl BlockedMatrix {
     /// empty indexing range) yields an empty blocked handle with a 0-extent
     /// grid rather than an error.
     pub fn from_local(m: &Matrix, block_size: usize) -> Result<BlockedMatrix> {
+        BlockedMatrix::from_local_with(m, block_size, SPARSITY_TURN_POINT)
+    }
+
+    /// [`BlockedMatrix::from_local`] with an explicit per-block sparsity
+    /// turn point: each block is cut out and stored dense or CSR
+    /// according to its *own* exact nnz (see the module docs' CSR block
+    /// lifecycle), so one matrix can mix formats across its grid.
+    pub fn from_local_with(
+        m: &Matrix,
+        block_size: usize,
+        sparsity_threshold: f64,
+    ) -> Result<BlockedMatrix> {
         if block_size == 0 {
             return Err(DmlError::rt("blockify: block size must be positive"));
         }
@@ -466,7 +526,10 @@ impl BlockedMatrix {
             for bc in 0..bcols {
                 let cl = bc * block_size;
                 let cu = (cl + block_size).min(cols);
-                blocks.push(Arc::new(reorg::slice(m, rl, ru, cl, cu)?.examine_and_convert()));
+                blocks.push(Arc::new(
+                    reorg::slice(m, rl, ru, cl, cu)?
+                        .examine_and_convert_with(sparsity_threshold),
+                ));
             }
         }
         Ok(BlockedMatrix { rows, cols, block_size, blocks })
@@ -918,6 +981,42 @@ mod tests {
         let m = rand(50, 50, -1.0, 1.0, 0.1, Pdf::Uniform, 2).unwrap();
         let b = BlockedMatrix::from_local(&m, 16).unwrap();
         assert_eq!(b.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn blockify_mixes_block_formats_per_nnz() {
+        // Left half dense, right half nearly empty: the per-block nnz
+        // inspection stores them in different formats within one grid.
+        let mut d = crate::runtime::matrix::dense::DenseMatrix::zeros(64, 128);
+        for r in 0..64 {
+            for c in 0..64 {
+                d.set(r, c, 1.0 + (r * 64 + c) as f64);
+            }
+        }
+        d.set(0, 100, 5.0);
+        let m = Matrix::Dense(d);
+        let b = BlockedMatrix::from_local(&m, 64).unwrap();
+        assert!(!b.block(0, 0).is_sparse(), "fully dense block stays dense");
+        assert!(b.block(0, 1).is_sparse(), "1-nnz block goes CSR");
+        assert_eq!(b.nnz(), m.nnz());
+        assert_eq!(b.to_local().unwrap(), m);
+        // Encoded size accounting reflects the mixed representation.
+        assert!(b.size_in_bytes() < m.len() * 8 + 96);
+    }
+
+    #[test]
+    fn sparsity_threshold_knob_controls_block_format() {
+        let m = rand(64, 64, -1.0, 1.0, 0.05, Pdf::Uniform, 9).unwrap();
+        // Turn point 0.0: nothing qualifies as sparse, even at 5% density.
+        let dense_only = Cluster::new(2, 64).with_sparsity_threshold(0.0);
+        let bd = dense_only.blockify(&m).unwrap();
+        assert!(!bd.block(0, 0).is_sparse());
+        // Default turn point (0.4): a 5%-dense block is CSR.
+        let default = Cluster::new(2, 64);
+        assert_eq!(default.sparsity_threshold(), crate::runtime::matrix::SPARSITY_TURN_POINT);
+        let bs = default.blockify(&m).unwrap();
+        assert!(bs.block(0, 0).is_sparse());
+        assert_eq!(bd.to_local().unwrap(), bs.to_local().unwrap());
     }
 
     #[test]

@@ -42,6 +42,15 @@
 //! * **`bias_add` / `bias_multiply`**: pure per-block maps — each block
 //!   derives its channel index from its global column offset, so the
 //!   K×1 bias broadcast joins map-side without band assembly.
+//!
+//! # Per-block representation
+//!
+//! Every broadcast/shuffle/allreduce above is charged by the operand's
+//! **encoded** bytes (`size_in_bytes()`), so CSR blocks move CSR-sized
+//! traffic. Output blocks re-examine their format against the cluster's
+//! sparsity threshold (`Cluster::sparsity_threshold`) when split back
+//! into the grid, matching the lifecycle contract in the module docs of
+//! [`crate::runtime::dist`].
 
 use std::sync::Arc;
 
@@ -81,11 +90,15 @@ fn charge_band_shuffle(cluster: &Cluster, m: &BlockedMatrix) {
 }
 
 /// Split a band's output (rows of one block-row, all `out_cols` columns)
-/// into `block_size`-column blocks, appending them in grid order.
+/// into `block_size`-column blocks, appending them in grid order. Each
+/// block re-examines its format against the cluster's sparsity turn
+/// point `thr` — sparse conv outputs (post-ReLU activations at high
+/// sparsity) land as CSR blocks.
 fn split_band(
     band_out: Matrix,
     bs: usize,
     out_cols: usize,
+    thr: f64,
     blocks: &mut Vec<Arc<Matrix>>,
 ) -> Result<()> {
     let obc = super::ceil_div(out_cols, bs);
@@ -95,14 +108,16 @@ fn split_band(
         return Ok(());
     }
     if obc == 1 {
-        blocks.push(Arc::new(band_out));
+        blocks.push(Arc::new(band_out.examine_and_convert_with(thr)));
         return Ok(());
     }
     let rows = band_out.rows();
     for j in 0..obc {
         let cl = j * bs;
         let cu = (cl + bs).min(out_cols);
-        blocks.push(Arc::new(reorg::slice(&band_out, 0, rows, cl, cu)?.examine_and_convert()));
+        blocks.push(Arc::new(
+            reorg::slice(&band_out, 0, rows, cl, cu)?.examine_and_convert_with(thr),
+        ));
     }
     Ok(())
 }
@@ -150,6 +165,7 @@ fn band_map(
 ) -> Result<BlockedMatrix> {
     charge_band_shuffle(cluster, x);
     let bs = x.block_size();
+    let thr = cluster.sparsity_threshold();
     let obc = super::ceil_div(out_cols, bs);
     let src = Arc::new(x.clone());
     let kernel = Arc::new(kernel);
@@ -163,7 +179,7 @@ fn band_map(
             Box::new(move || {
                 let band = row_band(&src, i)?;
                 let mut out = Vec::with_capacity(obc);
-                split_band(kernel(&band)?, bs, out_cols, &mut out)?;
+                split_band(kernel(&band)?, bs, out_cols, thr, &mut out)?;
                 Ok((out, band.rows() as u64))
             }),
         ));
@@ -347,6 +363,7 @@ fn pool_backward_blocked(
     charge_band_shuffle(cluster, x);
     charge_band_shuffle(cluster, dout);
     let bs = x.block_size();
+    let thr = cluster.sparsity_threshold();
     let out_cols = sh.c * sh.h * sh.w;
     let obc = super::ceil_div(out_cols, bs);
     let xs = Arc::new(x.clone());
@@ -365,7 +382,7 @@ fn pool_backward_blocked(
                 let xb = row_band(&xs, i)?;
                 let db = row_band(&ds, i)?;
                 let mut out = Vec::with_capacity(obc);
-                split_band(kernel(&xb, &db, &sh)?, bs, out_cols, &mut out)?;
+                split_band(kernel(&xb, &db, &sh)?, bs, out_cols, thr, &mut out)?;
                 Ok((out, xb.rows() as u64))
             }),
         ));
@@ -432,6 +449,7 @@ pub fn bias_op_blocked(
     }
     let pq = m.cols() / k;
     let bs = m.block_size();
+    let thr = cluster.sparsity_threshold();
     let (brows, bcols) = (m.block_rows(), m.block_cols());
     // Each task joins its block against the broadcast bias copy.
     let bias = Arc::new(bias.clone());
@@ -456,7 +474,7 @@ pub fn bias_op_blocked(
                             }
                         }
                     }
-                    Arc::new(Matrix::Dense(d).examine_and_convert())
+                    Arc::new(Matrix::Dense(d).examine_and_convert_with(thr))
                 }),
             ));
         }

@@ -46,6 +46,41 @@ use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
 use crate::runtime::matrix::{mult, reorg, Matrix};
 use crate::util::error::{DmlError, Result};
 
+// ---- sparse-aware per-block costing -------------------------------------
+//
+// Blocks carry their own dense/CSR format (see the module docs' CSR block
+// lifecycle), so task FLOPs are charged by what the format-aware CP
+// kernels actually execute, mirroring the formulas in `matrix::mult` —
+// not by dense dimensions. Communication is charged by encoded bytes
+// (`size_in_bytes` of the actual representation) throughout.
+
+/// FLOPs of one per-block matmult `a %*% b`, matching the CP kernel the
+/// operand formats select: 2·m·k·n dense×dense, 2·nnz(a)·n for a sparse
+/// lhs, 2·m·nnz(b) for a sparse rhs, and for sparse×sparse the Gustavson
+/// bound 2·nnz(a)·(nnz(b)/k) (lhs entries × average rhs row length).
+fn mm_block_flops(a: &Matrix, b: &Matrix) -> u64 {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    match (a.is_sparse(), b.is_sparse()) {
+        (false, false) => 2 * (m * k * n) as u64,
+        (true, false) => 2 * (a.nnz() * n) as u64,
+        (false, true) => 2 * (m * b.nnz()) as u64,
+        (true, true) => 2 * (a.nnz() as u64) * (b.nnz() as u64) / (k.max(1) as u64),
+    }
+}
+
+/// Cost (cell visits) of a cellwise map over one block: a sparse-safe op
+/// touches only the stored entries of a CSR block; anything else scans
+/// every cell. Dense blocks always cost their full cell count, so dense
+/// accounting is unchanged.
+#[inline]
+fn block_work(m: &Matrix, sparse_safe: bool) -> u64 {
+    if sparse_safe && m.is_sparse() {
+        m.nnz() as u64
+    } else {
+        m.len() as u64
+    }
+}
+
 /// Distributed `a %*% b` over local inputs: blockify, run the blocked
 /// matmult, collect the result to the driver.
 pub fn matmult(cluster: &Cluster, a: &Matrix, b: &Matrix) -> Result<Matrix> {
@@ -148,6 +183,7 @@ pub fn matmult_blocked_reuse(
     // task in ascending k order, so the summation order is exactly the
     // serial loop's and results are byte-identical to threads=1.
     let bs = a.block_size();
+    let thr = cluster.sparsity_threshold();
     let (brows, bcols, bk) = (a.block_rows(), b.block_cols(), a.block_cols());
     let mut tasks: Vec<DistTask<Result<(Matrix, u64)>>> = Vec::with_capacity(brows * bcols);
     for i in 0..brows {
@@ -162,7 +198,7 @@ pub fn matmult_blocked_reuse(
                     let mut acc: Option<Matrix> = None;
                     let mut flops = 0u64;
                     for (lb, rb) in lhs.iter().zip(rhs.iter()) {
-                        flops += 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
+                        flops += mm_block_flops(lb, rb);
                         let p = mult::matmult(lb, rb)?;
                         acc = Some(match acc {
                             None => p,
@@ -176,7 +212,7 @@ pub fn matmult_blocked_reuse(
                         Some(m) => m,
                         None => Matrix::zeros(r, c),
                     };
-                    Ok((out.examine_and_convert(), flops))
+                    Ok((out.examine_and_convert_with(thr), flops))
                 }),
             ));
         }
@@ -220,7 +256,7 @@ fn matmult_allreduce(
         tasks.push((
             cluster.worker_for(0, k),
             Box::new(move || {
-                let flops = 2 * (lb.rows() * lb.cols() * rb.cols()) as u64;
+                let flops = mm_block_flops(&lb, &rb);
                 Ok((mult::matmult(&lb, &rb)?, flops))
             }),
         ));
@@ -236,7 +272,9 @@ fn matmult_allreduce(
     }
     let out = acc
         .ok_or_else(|| DmlError::rt("allreduce matmult: empty inner dimension"))?
-        .examine_and_convert();
+        .examine_and_convert_with(cluster.sparsity_threshold());
+    // The reduction moves the result's *encoded* bytes — a sparse
+    // gradient allreduces at CSR size.
     cluster.record_allreduce(out.size_in_bytes() as u64);
     Ok(BlockedMatrix::from_blocks(a.rows(), b.cols(), a.block_size(), vec![out]))
 }
@@ -295,10 +333,12 @@ pub fn binary_blocked(
             ));
         }
     }
+    let safe = op.sparse_safe();
     let mut blocks = Vec::with_capacity(brows * bcols);
     for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
         let (i, j) = (idx / bcols, idx % bcols);
-        cluster.record_task(cluster.worker_for(i, j), a.block(i, j).len() as u64);
+        let cost = block_work(a.block(i, j), safe).max(block_work(b.block(i, j), safe));
+        cluster.record_task(cluster.worker_for(i, j), cost);
         blocks.push(res?);
     }
     Ok(BlockedMatrix::from_blocks(a.rows(), a.cols(), a.block_size(), blocks))
@@ -331,7 +371,8 @@ pub fn transpose_blocked(cluster: &Cluster, m: &BlockedMatrix) -> BlockedMatrix 
     let mut blocks = Vec::with_capacity(brows * bcols);
     for (idx, out) in cluster.run_tasks(tasks).into_iter().enumerate() {
         let (j, i) = (idx / brows, idx % brows);
-        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        // CSR transpose is a counting sort over stored entries.
+        cluster.record_task(cluster.worker_for(i, j), block_work(m.block(i, j), true));
         blocks.push(out);
     }
     BlockedMatrix::from_blocks(m.cols(), m.rows(), m.block_size(), blocks)
@@ -357,10 +398,12 @@ pub fn scalar_blocked(
             ));
         }
     }
+    // Sparse-safe iff the op maps an untouched zero cell to zero.
+    let safe = if swapped { op.apply(s, 0.0) == 0.0 } else { op.apply(0.0, s) == 0.0 };
     let mut blocks = Vec::with_capacity(brows * bcols);
     for (idx, res) in cluster.run_tasks(tasks).into_iter().enumerate() {
         let (i, j) = (idx / bcols, idx % bcols);
-        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        cluster.record_task(cluster.worker_for(i, j), block_work(m.block(i, j), safe));
         blocks.push(res?);
     }
     Ok(BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks))
@@ -376,10 +419,11 @@ pub fn unary_blocked(cluster: &Cluster, m: &BlockedMatrix, op: UnaryOp) -> Block
             tasks.push((cluster.worker_for(i, j), Box::new(move || elementwise::unary(&b, op))));
         }
     }
+    let safe = op.sparse_safe();
     let mut blocks = Vec::with_capacity(brows * bcols);
     for (idx, out) in cluster.run_tasks(tasks).into_iter().enumerate() {
         let (i, j) = (idx / bcols, idx % bcols);
-        cluster.record_task(cluster.worker_for(i, j), m.block(i, j).len() as u64);
+        cluster.record_task(cluster.worker_for(i, j), block_work(m.block(i, j), safe));
         blocks.push(out);
     }
     BlockedMatrix::from_blocks(m.rows(), m.cols(), m.block_size(), blocks)
@@ -548,10 +592,8 @@ pub fn slice_blocked(
         return Err(reorg::slice_range_error(rl, ru, cl, cu, m.rows(), m.cols()));
     }
     let bs = m.block_size();
+    let thr = cluster.sparsity_threshold();
     let (orows, ocols) = (ru - rl, cu - cl);
-    if !slice_selection_only(bs, rl, ru, cl, cu) {
-        cluster.record_shuffle((orows as u64) * (ocols as u64) * 8);
-    }
     let (obr, obc) = (super::ceil_div(orows, bs), super::ceil_div(ocols, bs));
     // Tasks share the source grid (`Arc` bumps) so the gathers can run
     // concurrently without borrowing `m`.
@@ -567,8 +609,8 @@ pub fn slice_blocked(
             // Task attribution: a single-source selection/trim is a
             // narrow dependency executed where the source block lives
             // (that is what makes the aligned case genuinely
-            // shuffle-free); a straddling gather was charged as a
-            // shuffle above and lands on the output block's owner.
+            // shuffle-free); a straddling gather is charged as a
+            // shuffle below and lands on the output block's owner.
             let (sbi, sbj) = (grl / bs, gcl / bs);
             let single_source = sbi == (gru - 1) / bs && sbj == (gcu - 1) / bs;
             let worker = if single_source {
@@ -578,7 +620,7 @@ pub fn slice_blocked(
             };
             workers.push(worker);
             let src = Arc::clone(&src);
-            tasks.push((worker, Box::new(move || gather_region(&src, grl, gru, gcl, gcu))));
+            tasks.push((worker, Box::new(move || gather_region(&src, thr, grl, gru, gcl, gcu))));
         }
     }
     let mut blocks = Vec::with_capacity(obr * obc);
@@ -587,7 +629,15 @@ pub fn slice_blocked(
         cluster.record_task(worker, out.len() as u64);
         blocks.push(out);
     }
-    Ok(BlockedMatrix::from_shared_blocks(orows, ocols, bs, blocks))
+    let out = BlockedMatrix::from_shared_blocks(orows, ocols, bs, blocks);
+    // A non-aligned slice re-aligns cells across block boundaries: one
+    // shuffle of the output's *encoded* bytes — a 1%-dense mini-batch
+    // slice moves CSR bytes, not dense dims (SystemML's general
+    // `rightIndex` Spark instruction, sparse-sized).
+    if !slice_selection_only(bs, rl, ru, cl, cu) {
+        cluster.record_shuffle(out.size_in_bytes() as u64);
+    }
+    Ok(out)
 }
 
 /// Assemble the cells of global region [grl,gru)×[gcl,gcu) from the
@@ -596,6 +646,7 @@ pub fn slice_blocked(
 /// source block (an `Arc` bump, no copy).
 fn gather_region(
     m: &BlockedMatrix,
+    thr: f64,
     grl: usize,
     gru: usize,
     gcl: usize,
@@ -613,7 +664,7 @@ fn gather_region(
         if (r0, c0) == (0, 0) && (r1, c1) == b.shape() {
             return Ok(m.shared_block(bi0, bj0));
         }
-        return Ok(Arc::new(reorg::slice(b, r0, r1, c0, c1)?.examine_and_convert()));
+        return Ok(Arc::new(reorg::slice(b, r0, r1, c0, c1)?.examine_and_convert_with(thr)));
     }
     // Straddling region: gather from each overlapping source block.
     let mut out = DenseMatrix::zeros(gru - grl, gcu - gcl);
@@ -632,7 +683,7 @@ fn gather_region(
             out.assign(br0 - grl, bc0 - gcl, &piece.to_dense())?;
         }
     }
-    Ok(Arc::new(Matrix::Dense(out).examine_and_convert()))
+    Ok(Arc::new(Matrix::Dense(out).examine_and_convert_with(thr)))
 }
 
 /// Blocked left-index write `X[rl.., cl..] = src`: only the blocks the
@@ -746,7 +797,10 @@ fn rewrite_touched_blocks(
         touched_meta.into_iter().zip(cluster.run_tasks(tasks).into_iter())
     {
         cluster.record_task(worker, flops);
-        blocks[idx] = Some(Arc::new(res?.examine_and_convert()));
+        // Rewritten blocks re-examine their exact nnz: a write of zeros
+        // into a sparse block (or of dense data into one) crosses the
+        // representation threshold here.
+        blocks[idx] = Some(Arc::new(res?.examine_and_convert_with(cluster.sparsity_threshold())));
     }
     let blocks = blocks.into_iter().map(|b| b.expect("every grid slot filled")).collect();
     Ok(BlockedMatrix::from_shared_blocks(target.rows(), target.cols(), bs, blocks))

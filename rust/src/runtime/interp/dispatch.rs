@@ -88,16 +88,26 @@ impl<'a> Operand<'a> {
         }
     }
 
+    fn nnz(&self) -> usize {
+        match self {
+            Operand::Driver(m) => m.nnz(),
+            Operand::Handle(h) => h.nnz(),
+        }
+    }
+
     fn sparsity(&self) -> f64 {
         let cells = self.rows() * self.cols();
         if cells == 0 {
             return 0.0;
         }
-        let nnz = match self {
-            Operand::Driver(m) => m.nnz(),
-            Operand::Handle(h) => h.nnz(),
-        };
-        nnz as f64 / cells as f64
+        self.nnz() as f64 / cells as f64
+    }
+
+    /// Would the estimator size this operand as CSR? Drives the
+    /// ` SPARSE` EXPLAIN tag — the runtime mirror of the planner's
+    /// marker, so a sparse-sized placement decision is observable.
+    fn plans_sparse(&self) -> bool {
+        Matrix::prefers_sparse(self.rows(), self.cols(), self.nnz())
     }
 
     fn is_blocked(&self) -> bool {
@@ -424,7 +434,8 @@ impl Interpreter {
             b.cols(),
             b.sparsity(),
         );
-        let desc = format!("%*% ({}x{} @ {}x{})", a.rows(), a.cols(), b.rows(), b.cols());
+        let tag = if a.plans_sparse() || b.plans_sparse() { " SPARSE" } else { "" };
+        let desc = format!("%*% ({}x{} @ {}x{}){tag}", a.rows(), a.cols(), b.rows(), b.cols());
         let blocked_in = a.is_blocked() || b.is_blocked();
         match self.resolve_exec(OpKind::MatMult, pos, est, &desc, blocked_in)? {
             ExecType::Dist => {
@@ -506,7 +517,8 @@ impl Interpreter {
         }
         let est =
             estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), a.rows(), a.cols());
-        let desc = format!("b({op:?}) ({}x{})", a.rows(), a.cols());
+        let tag = if a.plans_sparse() || b.plans_sparse() { " SPARSE" } else { "" };
+        let desc = format!("b({op:?}) ({}x{}){tag}", a.rows(), a.cols());
         let blocked_in = a.is_blocked() || b.is_blocked();
         match self.resolve_exec(OpKind::CellBinary, pos, est, &desc, blocked_in)? {
             ExecType::Dist => {
@@ -680,7 +692,8 @@ impl Interpreter {
         let a = Operand::of(v)?;
         let est = a.size_in_bytes()
             + estimate::estimate_size(a.cols(), a.rows(), a.sparsity());
-        let desc = format!("r(t) ({}x{})", a.rows(), a.cols());
+        let tag = if a.plans_sparse() { " SPARSE" } else { "" };
+        let desc = format!("r(t) ({}x{}){tag}", a.rows(), a.cols());
         match self.resolve_exec(OpKind::Reorg, pos, est, &desc, a.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
@@ -762,8 +775,12 @@ impl Interpreter {
         if ru > r || cu > c || rl >= ru || cl >= cu {
             return Err(reorg::slice_range_error(rl, ru, cl, cu, r, c));
         }
-        let est = a.size_in_bytes() + estimate::dense_size(ru - rl, cu - cl);
-        let desc = format!("rix ({}x{} -> {}x{})", r, c, ru - rl, cu - cl);
+        // The slice inherits the base's sparsity estimate (the planner's
+        // rix rule): a slice of a sparse operand is costed at CSR bytes.
+        let est = a.size_in_bytes()
+            + estimate::estimate_size(ru - rl, cu - cl, a.sparsity());
+        let tag = if a.plans_sparse() { " SPARSE" } else { "" };
+        let desc = format!("rix ({}x{} -> {}x{}){tag}", r, c, ru - rl, cu - cl);
         match self.resolve_exec(OpKind::RightIndex, pos, est, &desc, a.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
@@ -860,11 +877,14 @@ impl Interpreter {
                 )));
             }
         }
+        // The patch region is costed at the target's sparsity: rewriting
+        // a sparse target moves CSR-sized blocks, not dense ones.
         let est = a
             .size_in_bytes()
             .saturating_mul(2)
-            .saturating_add(estimate::dense_size(region.0, region.1));
-        let desc = format!("lix ({}x{} <- {}x{})", r, c, region.0, region.1);
+            .saturating_add(estimate::estimate_size(region.0, region.1, a.sparsity()));
+        let tag = if a.plans_sparse() { " SPARSE" } else { "" };
+        let desc = format!("lix ({}x{} <- {}x{}){tag}", r, c, region.0, region.1);
         match self.resolve_exec(OpKind::LeftIndex, pos, est, &desc, a.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;

@@ -83,13 +83,16 @@ pub fn build_cluster(config: &SystemConfig) -> Option<Arc<crate::runtime::dist::
     } else {
         config.dist_threads
     };
-    Some(Arc::new(crate::runtime::dist::Cluster::with_budgets_threads(
-        config.num_workers,
-        config.block_size,
-        cache_storage,
-        storage,
-        threads,
-    )))
+    Some(Arc::new(
+        crate::runtime::dist::Cluster::with_budgets_threads(
+            config.num_workers,
+            config.block_size,
+            cache_storage,
+            storage,
+            threads,
+        )
+        .with_sparsity_threshold(config.sparsity_threshold),
+    ))
 }
 
 impl Interpreter {

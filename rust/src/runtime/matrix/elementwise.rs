@@ -339,6 +339,9 @@ pub fn unary(m: &Matrix, op: UnaryOp) -> Matrix {
             for v in out.values.iter_mut() {
                 *v = op.apply(*v);
             }
+            // A sparse-safe op can still map a *nonzero* to zero (e.g.
+            // round(0.4)); drop those entries so nnz stays exact.
+            out.compact();
             Matrix::Sparse(out)
         }
         _ => {
@@ -445,6 +448,20 @@ mod tests {
         let a = dense(&[&[4.0, 0.0], &[0.0, 9.0]]).into_sparse_format();
         let c = unary(&a, UnaryOp::Sqrt);
         assert_eq!(c, dense(&[&[2.0, 0.0], &[0.0, 3.0]]));
+    }
+
+    #[test]
+    fn unary_zero_producing_recompacts_sparse() {
+        // round maps 0.4 → 0 while staying sparse-safe: the output must
+        // not carry explicit zeros (nnz is load-bearing for format
+        // decisions in the blocked backend).
+        let a = dense(&[&[0.4, 0.0, 1.6], &[0.0, 0.3, 0.0]]).into_sparse_format();
+        let c = unary(&a, UnaryOp::Round);
+        assert_eq!(c, dense(&[&[0.0, 0.0, 2.0], &[0.0, 0.0, 0.0]]));
+        assert_eq!(c.nnz(), 1, "explicit zeros must be compacted away");
+        // sign() of a negative nonzero stays nonzero; sign(0) unreached.
+        let s = unary(&a, UnaryOp::Sign);
+        assert_eq!(s.nnz(), 3);
     }
 
     #[test]

@@ -127,15 +127,30 @@ impl Matrix {
 
     /// Would the sparse format be chosen for (rows, cols, nnz)?
     pub fn prefers_sparse(rows: usize, cols: usize, nnz: usize) -> bool {
+        Matrix::prefers_sparse_with(rows, cols, nnz, SPARSITY_TURN_POINT)
+    }
+
+    /// [`Matrix::prefers_sparse`] with an explicit sparsity turn point —
+    /// the blocked backend routes its per-block format decisions through
+    /// here so `SystemConfig::sparsity_threshold` is honored. The
+    /// `MIN_SPARSE_CELLS` floor always applies: tiny blocks never pay
+    /// the CSR overhead regardless of the turn point.
+    pub fn prefers_sparse_with(rows: usize, cols: usize, nnz: usize, turn_point: f64) -> bool {
         let cells = rows * cols;
-        cells >= MIN_SPARSE_CELLS && (nnz as f64) < SPARSITY_TURN_POINT * cells as f64
+        cells >= MIN_SPARSE_CELLS && (nnz as f64) < turn_point * cells as f64
     }
 
     /// Re-examine nnz and convert to the preferred format.
     pub fn examine_and_convert(self) -> Matrix {
+        self.examine_and_convert_with(SPARSITY_TURN_POINT)
+    }
+
+    /// [`Matrix::examine_and_convert`] with an explicit sparsity turn
+    /// point (see [`Matrix::prefers_sparse_with`]).
+    pub fn examine_and_convert_with(self, turn_point: f64) -> Matrix {
         let (r, c) = self.shape();
         let nnz = self.nnz();
-        if Matrix::prefers_sparse(r, c, nnz) {
+        if Matrix::prefers_sparse_with(r, c, nnz, turn_point) {
             self.into_sparse_format()
         } else {
             self.into_dense_format()

@@ -160,6 +160,35 @@ impl SparseCsr {
         out
     }
 
+    /// Does this CSR carry explicit (stored) zero entries? Stored zeros
+    /// corrupt `nnz()` — which the blocked backend now also uses for
+    /// per-block format decisions — so value-mapping operators must
+    /// [`SparseCsr::compact`] whenever a mapped value can hit 0.
+    pub fn has_explicit_zeros(&self) -> bool {
+        self.values.iter().any(|v| *v == 0.0)
+    }
+
+    /// Drop explicit zero entries in place, restoring the `nnz() ==
+    /// values.len()` invariant. O(nnz); no-op when already compact.
+    pub fn compact(&mut self) {
+        if !self.has_explicit_zeros() {
+            return;
+        }
+        let mut out = SparseCsr::with_capacity(self.rows, self.cols, self.nnz());
+        for r in 0..self.rows {
+            out.row_ptr[r] = out.values.len();
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                if *v != 0.0 {
+                    out.col_idx.push(*c);
+                    out.values.push(*v);
+                }
+            }
+        }
+        out.row_ptr[self.rows] = out.values.len();
+        *self = out;
+    }
+
     /// Row slice [rl, ru) as CSR (cheap: copies the row ranges).
     pub fn slice_rows(&self, rl: usize, ru: usize) -> SparseCsr {
         let (s, e) = (self.row_ptr[rl], self.row_ptr[ru]);
@@ -314,6 +343,25 @@ mod tests {
         let s = csr.slice_rows(1, 3);
         assert_eq!(s.rows, 2);
         assert_eq!(s.to_dense(), sample_dense().slice(1, 3, 0, 4).unwrap());
+    }
+
+    #[test]
+    fn compact_drops_explicit_zeros() {
+        let mut csr = SparseCsr::from_dense(&sample_dense());
+        // Zero out one stored entry in place (what a careless value map
+        // would do) and verify compact() restores the nnz invariant.
+        csr.values[1] = 0.0;
+        assert!(csr.has_explicit_zeros());
+        assert_eq!(csr.nnz(), 5, "stored zero still counted");
+        let dense = csr.to_dense();
+        csr.compact();
+        assert!(!csr.has_explicit_zeros());
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.to_dense(), dense, "compaction preserves values");
+        // Idempotent.
+        let before = csr.clone();
+        csr.compact();
+        assert_eq!(csr, before);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Sparse blocked backend: per-block dense/CSR grids agree with local
+//! (CP) execution, format transitions flow both directions, nnz stays
+//! exact through block rewrites, cache guards see content (not
+//! representation), and results are byte-identical across thread counts.
+
+use systemml::runtime::dist::cache::LineageRef;
+use systemml::runtime::dist::{ops, BlockedMatrix, Cluster};
+use systemml::runtime::matrix::elementwise::BinOp;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::{elementwise, mult, reorg, Matrix};
+use systemml::util::quickcheck::approx_eq_slice;
+
+/// A matrix whose blockified grid genuinely mixes formats: a ~2%-dense
+/// background with a fully dense patch covering the top-left block, so
+/// with block size 64 block (0,0) stays dense while the rest go CSR.
+fn mixed(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let base = rand(rows, cols, -1.0, 1.0, 0.02, Pdf::Uniform, seed).unwrap();
+    let pr = 64.min(rows);
+    let pc = 64.min(cols);
+    let patch = rand(pr, pc, -1.0, 1.0, 1.0, Pdf::Uniform, seed ^ 0x9e37).unwrap();
+    reorg::left_index(&base, 0, 0, &patch).unwrap()
+}
+
+#[test]
+fn blockify_mixes_formats_and_keeps_nnz() {
+    let cluster = Cluster::new(4, 64);
+    let m = mixed(256, 192, 41);
+    let b = cluster.blockify(&m).unwrap();
+    let mut sparse_blocks = 0usize;
+    let mut dense_blocks = 0usize;
+    for i in 0..b.block_rows() {
+        for j in 0..b.block_cols() {
+            if b.block(i, j).is_sparse() {
+                sparse_blocks += 1;
+            } else {
+                dense_blocks += 1;
+            }
+        }
+    }
+    assert!(sparse_blocks > 0, "low-density blocks should be CSR");
+    assert!(dense_blocks > 0, "the dense patch block should stay dense");
+    assert_eq!(b.nnz(), m.nnz());
+    assert_eq!(b.to_local().unwrap(), m);
+}
+
+#[test]
+fn mixed_grid_matmult_matches_cp() {
+    let cluster = Cluster::new(4, 64);
+    // sparse×dense, dense×sparse and sparse×sparse block pairings all
+    // occur inside these grids.
+    let a = mixed(192, 160, 51);
+    let d = rand(160, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 52).unwrap();
+    let s = rand(160, 128, -1.0, 1.0, 0.02, Pdf::Uniform, 53).unwrap();
+    for rhs in [&d, &s] {
+        let local = mult::matmult(&a, rhs).unwrap();
+        let dist = ops::matmult(&cluster, &a, rhs).unwrap();
+        assert!(approx_eq_slice(
+            &dist.to_row_major_vec(),
+            &local.to_row_major_vec(),
+            1e-9
+        ));
+    }
+}
+
+#[test]
+fn mixed_grid_cellwise_transpose_slice_match_cp_exactly() {
+    let cluster = Cluster::new(3, 64);
+    let x = mixed(200, 150, 61);
+    let y = mixed(200, 150, 62);
+    let xb = cluster.blockify(&x).unwrap();
+    let yb = cluster.blockify(&y).unwrap();
+    // Cellwise maps, transpose and slice apply the same per-cell kernel
+    // in both backends — results are byte-identical, not just close.
+    for op in [BinOp::Add, BinOp::Mul, BinOp::Min] {
+        let local = elementwise::binary(&x, &y, op).unwrap();
+        let dist = ops::binary_blocked(&cluster, &xb, &yb, op).unwrap();
+        assert_eq!(dist.to_local().unwrap(), local);
+        assert_eq!(dist.nnz(), local.nnz(), "{op:?} nnz drifted");
+    }
+    let local_t = reorg::transpose(&x);
+    let dist_t = ops::transpose_blocked(&cluster, &xb);
+    assert_eq!(dist_t.to_local().unwrap(), local_t);
+    assert_eq!(dist_t.nnz(), x.nnz());
+    // Block-misaligned slice exercises the straddling gather path.
+    let local_s = reorg::slice(&x, 3, 131, 5, 140).unwrap();
+    let dist_s = ops::slice_blocked(&cluster, &xb, 3, 131, 5, 140).unwrap();
+    assert_eq!(dist_s.to_local().unwrap(), local_s);
+    assert_eq!(dist_s.nnz(), local_s.nnz());
+}
+
+#[test]
+fn left_index_rewrites_keep_nnz_exact() {
+    let cluster = Cluster::new(4, 64);
+    let x = rand(200, 200, -1.0, 1.0, 0.01, Pdf::Uniform, 71).unwrap();
+    let xb = cluster.blockify(&x).unwrap();
+    // A patch that both adds and erases nonzeros: dense values with an
+    // all-zero stripe, written across block boundaries.
+    let mut patch = rand(70, 90, -1.0, 1.0, 1.0, Pdf::Uniform, 72).unwrap().to_dense();
+    for c in 0..90 {
+        patch.set(10, c, 0.0);
+    }
+    let patch = Matrix::Dense(patch);
+    let local = reorg::left_index(&x, 30, 40, &patch).unwrap();
+    let dist = ops::left_index_blocked(&cluster, &xb, 30, 40, &patch, false).unwrap();
+    assert_eq!(dist.to_local().unwrap(), local);
+    assert_eq!(dist.nnz(), local.nnz());
+    // Fill with zero erases the region's nonzeros; nnz must track that.
+    let local_fill = reorg::left_index(&x, 0, 0, &Matrix::zeros(64, 64)).unwrap();
+    let dist_fill = ops::left_index_fill_blocked(&cluster, &xb, 0, 64, 0, 64, 0.0).unwrap();
+    assert_eq!(dist_fill.to_local().unwrap(), local_fill);
+    assert_eq!(dist_fill.nnz(), local_fill.nnz());
+}
+
+#[test]
+fn ops_transition_block_formats_both_directions() {
+    let cluster = Cluster::new(4, 64);
+    // dense → sparse: a dense lhs times a rhs with a single nonzero
+    // column yields output blocks far below the turn point, so the
+    // matmult re-examines them into CSR.
+    let a = rand(128, 128, -1.0, 1.0, 1.0, Pdf::Uniform, 81).unwrap();
+    let mut rhs = Matrix::zeros(128, 128).to_dense();
+    for r in 0..128 {
+        rhs.set(r, 3, 1.0);
+    }
+    let ab = cluster.blockify(&a).unwrap();
+    let rb = cluster.blockify(&Matrix::Dense(rhs)).unwrap();
+    let prod = ops::matmult_blocked(&cluster, &ab, &rb).unwrap();
+    assert!(
+        (0..prod.block_rows()).any(|i| prod.block(i, 0).is_sparse()),
+        "near-empty matmult output blocks should convert to CSR"
+    );
+    // sparse → dense: writing a dense patch over a CSR block re-examines
+    // it back to dense; untouched blocks keep their format.
+    let x = rand(128, 128, -1.0, 1.0, 0.01, Pdf::Uniform, 82).unwrap();
+    let xb = cluster.blockify(&x).unwrap();
+    assert!(xb.block(0, 0).is_sparse() && xb.block(1, 1).is_sparse());
+    let patch = rand(64, 64, -1.0, 1.0, 1.0, Pdf::Uniform, 83).unwrap();
+    let out = ops::left_index_blocked(&cluster, &xb, 0, 0, &patch, false).unwrap();
+    assert!(!out.block(0, 0).is_sparse(), "dense patch should flip the block to dense");
+    assert!(out.block(1, 1).is_sparse(), "untouched block keeps CSR");
+}
+
+#[test]
+fn sparsity_threshold_knob_controls_formats_end_to_end() {
+    let m = rand(256, 256, -1.0, 1.0, 0.05, Pdf::Uniform, 91).unwrap();
+    let force_dense = Cluster::new(2, 64).with_sparsity_threshold(0.0);
+    let b = force_dense.blockify(&m).unwrap();
+    assert!((0..b.block_rows())
+        .all(|i| (0..b.block_cols()).all(|j| !b.block(i, j).is_sparse())));
+    let force_sparse = Cluster::new(2, 64).with_sparsity_threshold(1.0);
+    let b = force_sparse.blockify(&m).unwrap();
+    assert!((0..b.block_rows())
+        .all(|i| (0..b.block_cols()).all(|j| b.block(i, j).is_sparse())));
+}
+
+#[test]
+fn cache_guard_sees_content_not_representation() {
+    // 300×300 = 90k cells: large enough to take the sampled-guard path.
+    let cluster = Cluster::with_storage(2, 64, 1 << 22);
+    let dense = rand(300, 300, -1.0, 1.0, 0.05, Pdf::Uniform, 101).unwrap().to_dense();
+    let dense = Matrix::Dense(dense);
+    let sparse = dense.clone().examine_and_convert();
+    assert!(sparse.is_sparse(), "5% density should convert");
+    let h = LineageRef::var("X", 1);
+    let (_, first) = cluster.acquire_blocked(Some(&h), &dense).unwrap();
+    assert!(!first.is_hit());
+    // Same logical content in CSR form: the guard fingerprints cells,
+    // not the encoding, so this is a legitimate hit.
+    let (_, refetch) = cluster.acquire_blocked(Some(&h), &sparse).unwrap();
+    assert!(refetch.is_hit(), "representation change alone must not evict");
+    // Content change that also flips the format (mass zeroing) must
+    // never ride the cached dense value: nnz drift breaks the guard.
+    let mut drifted = dense.to_dense();
+    for r in 0..300 {
+        for c in 0..300 {
+            if (r + c) % 7 != 0 {
+                drifted.set(r, c, 0.0);
+            }
+        }
+    }
+    let drifted = Matrix::Dense(drifted).examine_and_convert();
+    assert!(drifted.is_sparse());
+    let (got, third) = cluster.acquire_blocked(Some(&h), &drifted).unwrap();
+    assert!(!third.is_hit(), "dense→sparse content change must miss");
+    assert_eq!(got.to_local().unwrap(), drifted);
+}
+
+#[test]
+fn results_byte_identical_across_thread_counts() {
+    let run = |threads: usize| -> (Vec<f64>, u64) {
+        let cluster = Cluster::with_threads(4, 64, threads);
+        let x = mixed(192, 160, 111);
+        let w = rand(160, 96, -1.0, 1.0, 1.0, Pdf::Uniform, 112).unwrap();
+        let xb = cluster.blockify(&x).unwrap();
+        let wb = cluster.blockify(&w).unwrap();
+        let p = ops::matmult_blocked(&cluster, &xb, &wb).unwrap();
+        let s = ops::scalar_blocked(&cluster, &p, 0.5, BinOp::Mul, false).unwrap();
+        let t = ops::transpose_blocked(&cluster, &s);
+        let sl = ops::slice_blocked(&cluster, &t, 1, 90, 2, 130).unwrap();
+        (sl.to_row_major_vec(), cluster.comm_bytes())
+    };
+    let (v1, c1) = run(1);
+    let (v4, c4) = run(4);
+    // Bit-for-bit equal outputs and identical comm accounting: the task
+    // pool preserves submission order regardless of thread count.
+    assert_eq!(v1, v4);
+    assert_eq!(c1, c4);
+}
+
+#[test]
+fn sparse_comm_is_charged_by_encoded_bytes() {
+    let comm_for = |density: f64, seed: u64| -> u64 {
+        let cluster = Cluster::new(4, 64);
+        let a = rand(512, 256, -1.0, 1.0, 1.0, Pdf::Uniform, seed).unwrap();
+        let b = rand(256, 128, -1.0, 1.0, density, Pdf::Uniform, seed + 1).unwrap();
+        ops::matmult(&cluster, &a, &b).unwrap();
+        cluster.comm_bytes()
+    };
+    let dense_bytes = comm_for(1.0, 121);
+    let sparse_bytes = comm_for(0.01, 123);
+    assert!(sparse_bytes > 0);
+    assert!(
+        sparse_bytes * 4 <= dense_bytes,
+        "CSR broadcast should cost ≤25% of dense: sparse={sparse_bytes} dense={dense_bytes}"
+    );
+}
+
+#[test]
+fn shared_blocks_survive_blockify_roundtrip_in_both_formats() {
+    // Whole-block selection shares the source blocks (an Arc bump, no
+    // copy and no nnz rescan), for dense and CSR blocks alike.
+    let cluster = Cluster::new(2, 64);
+    let x = mixed(128, 128, 131);
+    let xb = cluster.blockify(&x).unwrap();
+    let whole = ops::slice_blocked(&cluster, &xb, 0, 128, 0, 128).unwrap();
+    assert_eq!(whole.nnz(), x.nnz());
+    for i in 0..xb.block_rows() {
+        for j in 0..xb.block_cols() {
+            assert!(
+                std::ptr::eq(xb.block(i, j), whole.block(i, j)),
+                "block ({i},{j}) should be shared, not copied"
+            );
+        }
+    }
+}
