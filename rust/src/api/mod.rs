@@ -240,16 +240,7 @@ impl MLContext {
         script: &Script,
         session: &HashMap<String, Value>,
     ) -> Result<Compilation> {
-        let mut prog = parse(&script.source)?;
-        // Static rewrites (HOP-level): constant folding.
-        crate::hop::rewrite::fold_program(&mut prog);
-        let mut bundle = build_bundle(prog, &self.config)?;
-        let warnings =
-            validate_with_inputs(&bundle, session.keys().chain(script.inputs.keys()))?;
-        let mut shapes = input_shapes(session);
-        shapes.extend(input_shapes(&script.inputs));
-        let plan = compile_plan(&mut bundle, &shapes, &self.config);
-        Ok(Compilation { bundle, plan, warnings })
+        compile_source(&script.source, &self.config, session, &script.inputs)
     }
 
     /// Execute a script and collect its outputs. The interpreter runs
@@ -286,6 +277,43 @@ impl MLContext {
             .extend(out.values.iter().map(|(k, v)| (k.clone(), v.clone())));
         Ok(out)
     }
+
+    /// Turn this session into a scoring service
+    /// ([`crate::runtime::serve::ScoreService`]): the script's inputs
+    /// plus the session's retained values become the resident model
+    /// (driver matrices are promoted to cluster-resident blocked handles
+    /// with ONE recorded model broadcast; blocked training outputs stay
+    /// where they are), `batch_input` names the variable each
+    /// micro-batch is bound under (`features` columns), and the script's
+    /// requested output is the scores matrix. Plans are cached inside
+    /// the service per padded batch geometry — compilation happens once
+    /// per distinct padded batch size, not per request.
+    ///
+    /// The returned service is `Sync` and detached from this context's
+    /// `RefCell` state: concurrent micro-batches score against it
+    /// directly while the context remains usable for further `execute`
+    /// calls on the same session cluster.
+    pub fn score_service(
+        &self,
+        script: &Script,
+        batch_input: &str,
+        features: usize,
+    ) -> Result<crate::runtime::serve::ScoreService> {
+        let cluster = self.session_cluster().ok_or_else(|| {
+            DmlError::rt("score_service requires the distributed backend (dist_enabled)")
+        })?;
+        let session = self.session.borrow().clone();
+        crate::runtime::serve::ScoreService::new(
+            self.config.clone(),
+            cluster,
+            session,
+            &script.source,
+            &script.inputs,
+            &script.outputs,
+            batch_input,
+            features,
+        )
+    }
 }
 
 /// Result of [`MLContext::compile`]: the validated (and plan-rewritten)
@@ -295,6 +323,30 @@ pub struct Compilation {
     pub bundle: Bundle,
     pub plan: Plan,
     pub warnings: Vec<String>,
+}
+
+/// The full compile pipeline (parse → constant folding → bundle →
+/// validation → plan) against two layers of pre-bound values: a session
+/// snapshot and explicit inputs (explicit wins on a name clash). Shared
+/// by [`MLContext::compile`]/[`MLContext::execute`] and the scoring
+/// service's per-geometry plan cache
+/// ([`crate::runtime::serve::ScoreService`]), which compiles the same
+/// scoring script once per distinct padded batch shape.
+pub(crate) fn compile_source(
+    source: &str,
+    config: &SystemConfig,
+    session: &HashMap<String, Value>,
+    inputs: &HashMap<String, Value>,
+) -> Result<Compilation> {
+    let mut prog = parse(source)?;
+    // Static rewrites (HOP-level): constant folding.
+    crate::hop::rewrite::fold_program(&mut prog);
+    let mut bundle = build_bundle(prog, config)?;
+    let warnings = validate_with_inputs(&bundle, session.keys().chain(inputs.keys()))?;
+    let mut shapes = input_shapes(session);
+    shapes.extend(input_shapes(inputs));
+    let plan = compile_plan(&mut bundle, &shapes, config);
+    Ok(Compilation { bundle, plan, warnings })
 }
 
 /// Compile-time shapes of the bound inputs (rows/cols/sparsity for

@@ -51,6 +51,22 @@ pub struct SystemConfig {
     /// Enable the distributed backend (if false, everything runs CP and
     /// over-budget allocations are errors — like local-mode SystemML).
     pub dist_enabled: bool,
+    /// Serving: maximum rows the micro-batcher packs into one scoring
+    /// batch before flushing (the size bound). Batches are padded up to
+    /// the next `block_size` multiple, so plans are compiled once per
+    /// distinct padded geometry — keeping this a multiple of
+    /// `block_size` means a single cached plan serves every full batch.
+    pub serve_max_batch: usize,
+    /// Serving: maximum simulated ticks the *oldest* admitted request may
+    /// wait before the micro-batcher flushes a partial batch (the latency
+    /// bound). The batcher flushes on whichever of the two bounds hits
+    /// first.
+    pub serve_max_wait_ticks: u64,
+    /// Blocked rhs operands up to this size (bytes) memoize their
+    /// worker-side gathered copy on the handle — the loop-invariant
+    /// vector/filter case worth caching. Memoized gathers are charged to
+    /// the cluster storage budget; larger operands gather transiently.
+    pub gather_memo_bytes: usize,
     /// Enable the accelerator (PJRT) backend — the paper's GPU backend.
     pub accel_enabled: bool,
     /// Accelerator "device memory" budget in bytes (drives LRU eviction).
@@ -77,6 +93,9 @@ impl Default for SystemConfig {
             dist_threads: 0,
             sparsity_threshold: crate::runtime::matrix::SPARSITY_TURN_POINT,
             dist_enabled: true,
+            serve_max_batch: 64,
+            serve_max_wait_ticks: 8,
+            gather_memo_bytes: 4 << 20,
             accel_enabled: false,
             accel_memory: 256 * 1024 * 1024,
             script_paths: vec![
@@ -155,6 +174,12 @@ impl SystemConfigBuilder {
         sparsity_threshold: f64,
         /// Enable the distributed backend.
         dist_enabled: bool,
+        /// Serving: micro-batcher size bound (rows per scoring batch).
+        serve_max_batch: usize,
+        /// Serving: micro-batcher wait bound in simulated ticks.
+        serve_max_wait_ticks: u64,
+        /// Memoization cap (bytes) for worker-side gathered rhs copies.
+        gather_memo_bytes: usize,
         /// Enable the accelerator (PJRT) backend.
         accel_enabled: bool,
         /// Accelerator device-memory budget in bytes.
@@ -208,5 +233,21 @@ mod tests {
         c.block_size = 64;
         assert_eq!(c.block_size, 64);
         assert_eq!(c.driver_memory, SystemConfig::default().driver_memory);
+    }
+
+    #[test]
+    fn serving_and_gather_knobs_build() {
+        let c = SystemConfig::builder()
+            .serve_max_batch(128)
+            .serve_max_wait_ticks(4)
+            .gather_memo_bytes(1 << 20)
+            .build();
+        assert_eq!(c.serve_max_batch, 128);
+        assert_eq!(c.serve_max_wait_ticks, 4);
+        assert_eq!(c.gather_memo_bytes, 1 << 20);
+        let d = SystemConfig::default();
+        assert_eq!(d.serve_max_batch, 64);
+        assert_eq!(d.serve_max_wait_ticks, 8);
+        assert_eq!(d.gather_memo_bytes, 4 << 20);
     }
 }

@@ -109,7 +109,7 @@ pub mod nn;
 pub mod ops;
 pub mod pool;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 use crate::runtime::dist::cache::{BlockCache, CacheOutcome, LineageRef};
@@ -672,6 +672,11 @@ pub struct HandleInner {
     /// use — never a collect — so a loop-invariant blocked rhs is
     /// gathered once per loop, not once per op.
     gathered: OnceLock<Matrix>,
+    /// Bytes the memoized gather charged to the storage budget (0 until
+    /// the gather is memoized; released when the handle drops). Keeps
+    /// many small memoized copies — the serving scatter case — from
+    /// pinning driver memory outside any accounting.
+    gathered_charge: AtomicUsize,
     /// Serializes the first force so concurrent parfor readers perform
     /// exactly one driver collect.
     force_lock: Mutex<()>,
@@ -735,6 +740,11 @@ impl Drop for HandleInner {
         if self.blocks.get_mut().map(|b| b.is_some()).unwrap_or(false) {
             let bytes = self.charged_bytes();
             self.cluster.cache.unreserve(bytes);
+        }
+        // ...and the memoized gather's charge, if one was taken.
+        let gathered = self.gathered_charge.load(Ordering::Relaxed);
+        if gathered > 0 {
+            self.cluster.cache.unreserve(gathered);
         }
     }
 }
@@ -802,6 +812,7 @@ impl BlockedHandle {
             blocks: Mutex::new(Some(blocked)),
             forced: OnceLock::new(),
             gathered: OnceLock::new(),
+            gathered_charge: AtomicUsize::new(0),
             force_lock: Mutex::new(()),
             cluster: cluster.clone(),
         });
@@ -930,31 +941,50 @@ impl BlockedHandle {
     /// blocked rhs is gathered once per loop rather than once per op
     /// (the ROADMAP `gather_blocked_rhs` refinement). A handle whose
     /// driver copy already exists (forced) serves that copy without any
-    /// charge.
+    /// communication charge.
+    ///
+    /// The memoized copy pins driver memory for as long as the handle
+    /// lives, so it is charged to the cluster's **storage budget** like
+    /// any resident representation (released when the handle drops) —
+    /// many small memoized gathers (the serving scatter case) surface as
+    /// storage pressure instead of silently pinning unbounded memory.
+    /// The memoize-vs-transient decision itself lives with the caller
+    /// (`SystemConfig::gather_memo_bytes`).
     pub fn gathered(&self) -> Result<&Matrix> {
         if let Some(m) = self.inner.gathered.get() {
             return Ok(m);
         }
-        let _g = self.inner.force_lock.lock().unwrap();
-        if self.inner.gathered.get().is_none() {
-            let m = match self.inner.forced.get() {
-                // The lazy collect already materialized a driver copy:
-                // reuse it, nothing moves.
-                Some(m) => m.clone(),
-                None => {
-                    let resident = self.inner.blocks.lock().unwrap().clone();
-                    let b = resident.ok_or_else(|| {
-                        DmlError::rt("blocked value lost both its blocks and its driver copy")
-                    })?;
-                    // A replicated value already lives on every worker —
-                    // a worker-side gather of it moves nothing.
-                    if !self.inner.replicated {
-                        self.inner.cluster.record_shuffle(self.inner.bytes as u64);
+        let mut charged = 0usize;
+        {
+            let _g = self.inner.force_lock.lock().unwrap();
+            if self.inner.gathered.get().is_none() {
+                let m = match self.inner.forced.get() {
+                    // The lazy collect already materialized a driver copy:
+                    // reuse it, nothing moves.
+                    Some(m) => m.clone(),
+                    None => {
+                        let resident = self.inner.blocks.lock().unwrap().clone();
+                        let b = resident.ok_or_else(|| {
+                            DmlError::rt("blocked value lost both its blocks and its driver copy")
+                        })?;
+                        // A replicated value already lives on every worker —
+                        // a worker-side gather of it moves nothing.
+                        if !self.inner.replicated {
+                            self.inner.cluster.record_shuffle(self.inner.bytes as u64);
+                        }
+                        b.to_local()?
                     }
-                    b.to_local()?
-                }
-            };
-            let _ = self.inner.gathered.set(m);
+                };
+                charged = m.size_in_bytes();
+                self.inner.cluster.cache.reserve(charged);
+                self.inner.gathered_charge.store(charged, Ordering::Relaxed);
+                let _ = self.inner.gathered.set(m);
+            }
+        }
+        // Relieve any pressure the new charge created — outside the
+        // force lock, since spilling a victim takes *its* force lock.
+        if charged > 0 {
+            self.inner.cluster.enforce_storage(self.inner.seq);
         }
         Ok(self.inner.gathered.get().unwrap())
     }

@@ -38,6 +38,7 @@
 
 use std::sync::Arc;
 
+use crate::hop::estimate::matmult_output_sparsity;
 use crate::runtime::dist::pool::DistTask;
 use crate::runtime::dist::{BlockedMatrix, Cluster};
 use crate::runtime::matrix::agg::{self, AggOp};
@@ -66,6 +67,31 @@ fn mm_block_flops(a: &Matrix, b: &Matrix) -> u64 {
         (false, true) => 2 * (m * b.nnz()) as u64,
         (true, true) => 2 * (a.nnz() as u64) * (b.nnz() as u64) / (k.max(1) as u64),
     }
+}
+
+/// Upfront output-format decision for a blocked matmult, made from
+/// operand *metadata* before any block materializes: feed the aggregate
+/// operand sparsities through the planner's worst-case estimator
+/// (`1 - (1 - sA·sB)^k`, [`matmult_output_sparsity`]) and ask whether a
+/// block of the given extent with that estimated nnz clears the CSR turn
+/// point. When it does, per-k partial products are produced straight in
+/// CSR ([`mult::matmult_sparse_out`]) and the k-accumulation runs as
+/// sparse unions — no dense allocate-then-convert for sparse×sparse
+/// chains. Values are bit-identical either way (only the storage format
+/// of intermediates differs), and the final
+/// `examine_and_convert_with(thr)` still corrects estimate misses.
+fn estimate_sparse_output(
+    a: &BlockedMatrix,
+    b: &BlockedMatrix,
+    rows: usize,
+    cols: usize,
+    turn_point: f64,
+) -> bool {
+    let sa = a.nnz() as f64 / (a.rows() * a.cols()).max(1) as f64;
+    let sb = b.nnz() as f64 / (b.rows() * b.cols()).max(1) as f64;
+    let est = matmult_output_sparsity(sa, sb, a.cols());
+    let est_nnz = (est * (rows * cols) as f64).ceil() as usize;
+    Matrix::prefers_sparse_with(rows, cols, est_nnz, turn_point)
 }
 
 /// Cost (cell visits) of a cellwise map over one block: a sparse-safe op
@@ -192,6 +218,10 @@ pub fn matmult_blocked_reuse(
             let rhs: Vec<Arc<Matrix>> = (0..bk).map(|k| b.shared_block(k, j)).collect();
             let r = (a.rows() - i * bs).min(bs);
             let c = (b.cols() - j * bs).min(bs);
+            // Decide the accumulator format *before* materializing any
+            // partial: a sparse-estimated output block accumulates in CSR
+            // from the first product on (no dense detour).
+            let sparse_out = estimate_sparse_output(a, b, r, c, thr);
             tasks.push((
                 cluster.worker_for(i, j),
                 Box::new(move || {
@@ -199,7 +229,11 @@ pub fn matmult_blocked_reuse(
                     let mut flops = 0u64;
                     for (lb, rb) in lhs.iter().zip(rhs.iter()) {
                         flops += mm_block_flops(lb, rb);
-                        let p = mult::matmult(lb, rb)?;
+                        let p = if sparse_out {
+                            mult::matmult_sparse_out(lb, rb)?
+                        } else {
+                            mult::matmult(lb, rb)?
+                        };
                         acc = Some(match acc {
                             None => p,
                             Some(q) => elementwise::binary(&q, &p, BinOp::Add)?,
@@ -249,6 +283,8 @@ fn matmult_allreduce(
     b: &BlockedMatrix,
 ) -> Result<BlockedMatrix> {
     let bk = a.block_cols();
+    let sparse_out =
+        estimate_sparse_output(a, b, a.rows(), b.cols(), cluster.sparsity_threshold());
     let mut tasks: Vec<DistTask<Result<(Matrix, u64)>>> = Vec::with_capacity(bk);
     for k in 0..bk {
         let lb = a.shared_block(0, k);
@@ -257,7 +293,12 @@ fn matmult_allreduce(
             cluster.worker_for(0, k),
             Box::new(move || {
                 let flops = mm_block_flops(&lb, &rb);
-                Ok((mult::matmult(&lb, &rb)?, flops))
+                let p = if sparse_out {
+                    mult::matmult_sparse_out(&lb, &rb)?
+                } else {
+                    mult::matmult(&lb, &rb)?
+                };
+                Ok((p, flops))
             }),
         ));
     }
@@ -1005,6 +1046,35 @@ mod tests {
                 "col {op:?}"
             );
         }
+    }
+
+    #[test]
+    fn sparse_sparse_blocked_estimates_csr_upfront() {
+        let cluster = Cluster::new(3, 64);
+        let a = rand(160, 160, -1.0, 1.0, 0.02, Pdf::Uniform, 91).unwrap();
+        let b = rand(160, 160, -1.0, 1.0, 0.02, Pdf::Uniform, 92).unwrap();
+        let ab = BlockedMatrix::from_local(&a, 64).unwrap();
+        let bb = BlockedMatrix::from_local(&b, 64).unwrap();
+        // The metadata-only estimate commits to CSR accumulators before
+        // any partial product materializes (2%×2% over k=160 stays well
+        // under the turn point)...
+        assert!(estimate_sparse_output(&ab, &bb, 64, 64, cluster.sparsity_threshold()));
+        // ...and values match the local kernel (approx: blocked splits k,
+        // so summation order differs from the unblocked reference).
+        let out = matmult_blocked(&cluster, &ab, &bb).unwrap();
+        let local = mult::matmult(&a, &b).unwrap();
+        assert!(approx_eq_slice(
+            &out.to_local().unwrap().to_row_major_vec(),
+            &local.to_row_major_vec(),
+            1e-9
+        ));
+        // Dense operands at full density keep the dense path.
+        let d = BlockedMatrix::from_local(
+            &rand(160, 160, -1.0, 1.0, 1.0, Pdf::Uniform, 93).unwrap(),
+            64,
+        )
+        .unwrap();
+        assert!(!estimate_sparse_output(&d, &d, 64, 64, cluster.sparsity_threshold()));
     }
 
     #[test]

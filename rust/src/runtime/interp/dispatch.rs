@@ -124,29 +124,24 @@ impl<'a> Operand<'a> {
     }
 }
 
-/// Blocked rhs operands up to this size memoize their worker-side
-/// gathered copy on the handle (vectors, filters, bias terms — the
-/// loop-invariant case worth caching). Larger operands (batch-sized
-/// left-index patches) gather transiently instead: pinning a second
-/// full materialization on a live handle would double its footprint
-/// outside any storage accounting.
-const GATHER_MEMO_MAX_BYTES: usize = 4 << 20;
-
 /// A blocked rhs operand (broadcast-join vector, left-index patch, conv
 /// filter) in driver form, plus whether its cells already live
 /// cluster-side. A forced handle's memoized driver copy behaves like any
 /// driver operand (it will be charged as a broadcast, resident = false);
 /// an unforced handle is gathered worker-side — charged as a shuffle,
 /// never a collect — through the handle's **memoized** gather
-/// ([`BlockedHandle::gathered`]) when small (one shuffle on first use,
-/// free afterwards: a loop-invariant blocked rhs gathers once per loop,
-/// not once per op), or transiently when larger than
-/// [`GATHER_MEMO_MAX_BYTES`]. Either way it is marked resident so the
-/// consuming op does not charge a second broadcast of the same bytes.
-fn gather_blocked_rhs(h: &BlockedHandle) -> Result<(Cow<'_, Matrix>, bool)> {
+/// ([`BlockedHandle::gathered`]) when it fits `memo_cap` (one shuffle on
+/// first use, free afterwards: a loop-invariant blocked rhs gathers once
+/// per loop, not once per op; the memoized copy is charged to the
+/// cluster's storage budget), or transiently when larger — pinning a
+/// second full materialization on a big live handle would double its
+/// footprint. The cap is `SystemConfig::gather_memo_bytes`. Either way
+/// the operand is marked resident so the consuming op does not charge a
+/// second broadcast of the same bytes.
+fn gather_blocked_rhs(h: &BlockedHandle, memo_cap: usize) -> Result<(Cow<'_, Matrix>, bool)> {
     if h.is_forced() {
         Ok((Cow::Borrowed(h.force()?), false))
-    } else if h.size_in_bytes() <= GATHER_MEMO_MAX_BYTES {
+    } else if h.size_in_bytes() <= memo_cap {
         Ok((Cow::Borrowed(h.gathered()?), true))
     } else {
         h.cluster().record_shuffle(h.size_in_bytes() as u64);
@@ -613,7 +608,9 @@ impl Interpreter {
                         };
                         (Cow::Borrowed(*m), resident)
                     }
-                    Operand::Handle(h) => gather_blocked_rhs(h)?,
+                    Operand::Handle(h) => {
+                        gather_blocked_rhs(h, self.config.gather_memo_bytes)?
+                    }
                 };
                 if self.config.explain {
                     self.emit(format!(
@@ -907,7 +904,9 @@ impl Interpreter {
                     // worker-side (see gather_blocked_rhs — a shuffle,
                     // never a collect).
                     let (src, src_resident): (Cow<Matrix>, bool) = match rhs {
-                        Value::Blocked(h) => gather_blocked_rhs(h)?,
+                        Value::Blocked(h) => {
+                            gather_blocked_rhs(h, self.config.gather_memo_bytes)?
+                        }
                         v => (Cow::Borrowed(v.as_matrix()?), false),
                     };
                     dist_ops::left_index_blocked(cluster, &tb, rl, cl, src.as_ref(), src_resident)?
@@ -964,7 +963,7 @@ impl Interpreter {
         hint: Option<&LineageRef>,
     ) -> Result<(Cow<'v, Matrix>, bool)> {
         match v {
-            Value::Blocked(h) => gather_blocked_rhs(h),
+            Value::Blocked(h) => gather_blocked_rhs(h, self.config.gather_memo_bytes),
             v => {
                 let m = v.as_matrix()?;
                 let resident = match hint {

@@ -56,6 +56,37 @@ pub fn matmult_traced(lhs: &Matrix, rhs: &Matrix) -> Result<(Matrix, MmOperator)
     Ok((out.examine_and_convert(), op))
 }
 
+/// Like [`matmult`], but the caller has already *estimated* the product
+/// sparse (the planner's worst-case matmult output-sparsity estimator
+/// over operand metadata — see `hop::estimate::matmult_output_sparsity`):
+/// the result comes back in CSR form with no dense materialization in
+/// between. Sparse×sparse products flow straight out of the Gustavson
+/// kernel's sparse accumulator, skipping [`matmult_traced`]'s
+/// examine-and-convert (which would densify a ≥40%-full partial only for
+/// the blocked accumulator chain to convert it back); mixed and dense
+/// pairs still run their dense-output kernel — that output was going to
+/// materialize dense regardless — and convert once at the end. Cell
+/// values are bit-identical to [`matmult`]'s either way; only the
+/// storage format of the returned block differs.
+pub fn matmult_sparse_out(lhs: &Matrix, rhs: &Matrix) -> Result<Matrix> {
+    if let (Matrix::Sparse(a), Matrix::Sparse(b)) = (lhs, rhs) {
+        if lhs.cols() != rhs.rows() {
+            return Err(DmlError::DimMismatch {
+                op: "%*%".into(),
+                lhs_rows: lhs.rows(),
+                lhs_cols: lhs.cols(),
+                rhs_rows: rhs.rows(),
+                rhs_cols: rhs.cols(),
+            });
+        }
+        metrics::global()
+            .sparse_ops
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        return Ok(mm_sparse_sparse(a, b));
+    }
+    Ok(matmult_traced(lhs, rhs)?.0.into_sparse_format())
+}
+
 // Tile sizes shared by the packed kernel and the reference kernel. Tuned
 // on the benchmark VM (see EXPERIMENTS.md §Perf): the packed B panel
 // (KB x NB x 8B = 192 KB) stays L2-resident while an A micro-panel strip
@@ -489,6 +520,28 @@ mod tests {
         let c = matmult(&a, &b).unwrap();
         assert!(c.is_sparse(), "1%×1% product should stay sparse");
         assert!(approx_eq_slice(&c.to_row_major_vec(), &naive_mm(&a, &b), 1e-9));
+    }
+
+    #[test]
+    fn sparse_out_matches_matmult_bitwise() {
+        let mut rng = Prng::new(77);
+        let a = random(&mut rng, 64, 64, 0.05).into_sparse_format();
+        let b = random(&mut rng, 64, 64, 0.05).into_sparse_format();
+        let hinted = matmult_sparse_out(&a, &b).unwrap();
+        assert!(hinted.is_sparse(), "sparse×sparse hinted product must come back CSR");
+        let plain = matmult(&a, &b).unwrap();
+        let (h, p) = (hinted.to_row_major_vec(), plain.to_row_major_vec());
+        assert!(h.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // Mixed pair: dense-output kernel runs, then a single conversion.
+        let dense_lhs = random(&mut rng, 32, 64, 1.0);
+        let mixed = matmult_sparse_out(&dense_lhs, &b).unwrap();
+        assert!(mixed.is_sparse());
+        let mixed_ref = matmult(&dense_lhs, &b).unwrap().to_row_major_vec();
+        assert!(mixed
+            .to_row_major_vec()
+            .iter()
+            .zip(&mixed_ref)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

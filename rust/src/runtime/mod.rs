@@ -1,5 +1,6 @@
 //! The SystemML runtime: matrix engine, NN builtins, interpreter,
-//! distributed blocked backend, parfor, and the PJRT accelerator backend.
+//! distributed blocked backend, parfor, the micro-batched scoring
+//! service, and the PJRT accelerator backend.
 
 pub mod accel;
 pub mod conv;
@@ -7,3 +8,4 @@ pub mod dist;
 pub mod interp;
 pub mod matrix;
 pub mod parfor;
+pub mod serve;

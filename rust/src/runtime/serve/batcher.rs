@@ -1,0 +1,231 @@
+//! Admission queue + dynamic micro-batcher for the scoring service.
+//!
+//! Single-row scoring requests enter an admission queue in arrival
+//! order; the [`MicroBatcher`] flushes them into block-aligned batches
+//! under two knobs (`SystemConfig::{serve_max_batch, serve_max_wait_ticks}`),
+//! on whichever bound hits first:
+//!
+//! * **Size bound** — the queue reached `serve_max_batch` rows: flush
+//!   exactly that many (a full batch; one cached plan serves it).
+//! * **Wait bound** — the *oldest* queued request has waited
+//!   `serve_max_wait_ticks` simulated ticks: flush everything queued (a
+//!   partial batch) so tail latency stays bounded under light load.
+//!
+//! Time is **simulated ticks** — the arrival process ([`ArrivalProcess`])
+//! is a seeded deterministic generator (no wall clock, no global RNG), so
+//! batch composition, per-request latency in ticks, and therefore scores
+//! are reproducible bit-for-bit across runs, thread counts, and machines.
+
+use std::collections::VecDeque;
+
+use crate::conf::SystemConfig;
+use crate::util::prng::Prng;
+
+/// One single-row scoring request.
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    /// Dense request id in admission order (simulation results are
+    /// indexed by it).
+    pub id: u64,
+    /// Simulated tick at which the request entered the admission queue.
+    pub arrival_tick: u64,
+    /// The feature row to score.
+    pub row: Vec<f64>,
+}
+
+/// Why a batch left the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The queue reached `serve_max_batch` rows.
+    Size,
+    /// The oldest queued request hit `serve_max_wait_ticks`.
+    Wait,
+    /// Shutdown drain of the final partial batch.
+    Drain,
+}
+
+/// A flushed micro-batch: the requests it packs, the tick it left the
+/// queue, and which bound triggered it.
+#[derive(Debug)]
+pub struct MicroBatch {
+    pub requests: Vec<ScoreRequest>,
+    pub flush_tick: u64,
+    pub reason: FlushReason,
+}
+
+impl MicroBatch {
+    /// Queueing latency of each packed request in ticks
+    /// (`flush_tick - arrival_tick`, in request order).
+    pub fn latencies(&self) -> Vec<u64> {
+        self.requests.iter().map(|r| self.flush_tick - r.arrival_tick).collect()
+    }
+}
+
+/// The dynamic micro-batcher: a FIFO admission queue flushed by the
+/// first-hit of the size/wait bounds (module docs).
+#[derive(Debug)]
+pub struct MicroBatcher {
+    max_batch: usize,
+    max_wait_ticks: u64,
+    queue: VecDeque<ScoreRequest>,
+}
+
+impl MicroBatcher {
+    pub fn new(max_batch: usize, max_wait_ticks: u64) -> MicroBatcher {
+        assert!(max_batch > 0, "serve_max_batch must be positive");
+        MicroBatcher { max_batch, max_wait_ticks, queue: VecDeque::new() }
+    }
+
+    /// Batcher configured from the serving knobs.
+    pub fn from_config(config: &SystemConfig) -> MicroBatcher {
+        MicroBatcher::new(config.serve_max_batch, config.serve_max_wait_ticks)
+    }
+
+    /// Admit a request into the queue (FIFO).
+    pub fn admit(&mut self, req: ScoreRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Queued (not yet flushed) requests.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Flush check at tick `now`: a full batch if the size bound is hit,
+    /// else everything queued if the oldest request hit the wait bound,
+    /// else `None`. Call repeatedly until `None` — a burst can fill the
+    /// size bound several times over within one tick.
+    pub fn poll(&mut self, now: u64) -> Option<MicroBatch> {
+        if self.queue.len() >= self.max_batch {
+            return Some(self.take(self.max_batch, now, FlushReason::Size));
+        }
+        match self.queue.front() {
+            Some(oldest) if now.saturating_sub(oldest.arrival_tick) >= self.max_wait_ticks => {
+                let n = self.queue.len();
+                Some(self.take(n, now, FlushReason::Wait))
+            }
+            _ => None,
+        }
+    }
+
+    /// Shutdown flush: whatever is queued leaves as a final partial
+    /// batch, regardless of either bound.
+    pub fn drain(&mut self, now: u64) -> Option<MicroBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.take(n, now, FlushReason::Drain))
+    }
+
+    fn take(&mut self, n: usize, now: u64, reason: FlushReason) -> MicroBatch {
+        let requests: Vec<ScoreRequest> = self.queue.drain(..n).collect();
+        MicroBatch { requests, flush_tick: now, reason }
+    }
+}
+
+/// Deterministic simulated arrival process: seeded xoshiro256** gaps
+/// (uniform integer ticks in `[0, max_gap]`) and seeded feature rows —
+/// no wall clock, no global RNG, so a (seed, features, max_gap) triple
+/// names one exact request stream forever.
+#[derive(Debug)]
+pub struct ArrivalProcess {
+    prng: Prng,
+    features: usize,
+    max_gap: u64,
+    tick: u64,
+    next_id: u64,
+}
+
+impl ArrivalProcess {
+    pub fn new(seed: u64, features: usize, max_gap: u64) -> ArrivalProcess {
+        ArrivalProcess { prng: Prng::new(seed), features, max_gap, tick: 0, next_id: 0 }
+    }
+
+    /// Generate the next request: advance the clock by a seeded gap
+    /// (the first request arrives at tick 0) and draw its feature row.
+    /// Feature values are uniform in [0.5, 1.5) — strictly nonzero, so
+    /// padded-batch forward passes never hit signed-zero edge cases and
+    /// scores stay bit-comparable across batch geometries.
+    pub fn next_request(&mut self) -> ScoreRequest {
+        if self.next_id > 0 && self.max_gap > 0 {
+            self.tick += self.prng.next_u64() % (self.max_gap + 1);
+        }
+        let row = (0..self.features).map(|_| self.prng.uniform(0.5, 1.5)).collect();
+        let req = ScoreRequest { id: self.next_id, arrival_tick: self.tick, row };
+        self.next_id += 1;
+        req
+    }
+
+    /// The current simulated clock (arrival tick of the latest request).
+    pub fn now(&self) -> u64 {
+        self.tick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tick: u64) -> ScoreRequest {
+        ScoreRequest { id, arrival_tick: tick, row: vec![1.0] }
+    }
+
+    #[test]
+    fn flushes_full_batch_on_size_bound() {
+        let mut b = MicroBatcher::new(4, 100);
+        for i in 0..9 {
+            b.admit(req(i, 0));
+        }
+        let first = b.poll(0).unwrap();
+        assert_eq!(first.reason, FlushReason::Size);
+        assert_eq!(first.requests.len(), 4);
+        let second = b.poll(0).unwrap();
+        assert_eq!(second.reason, FlushReason::Size);
+        assert_eq!(second.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        // One leftover: neither bound hit yet.
+        assert!(b.poll(0).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_wait_bound() {
+        let mut b = MicroBatcher::new(64, 8);
+        b.admit(req(0, 3));
+        b.admit(req(1, 5));
+        assert!(b.poll(10).is_none(), "oldest has waited 7 < 8 ticks");
+        let batch = b.poll(11).unwrap();
+        assert_eq!(batch.reason, FlushReason::Wait);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.latencies(), vec![8, 6]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_flushes_final_partial_batch() {
+        let mut b = MicroBatcher::new(64, 1000);
+        b.admit(req(0, 0));
+        b.admit(req(1, 2));
+        assert!(b.poll(3).is_none());
+        let batch = b.drain(3).unwrap();
+        assert_eq!(batch.reason, FlushReason::Drain);
+        assert_eq!(batch.requests.len(), 2);
+        assert!(b.drain(3).is_none(), "drain on an empty queue is None");
+    }
+
+    #[test]
+    fn arrival_process_is_deterministic_and_monotone() {
+        let mut a = ArrivalProcess::new(42, 3, 4);
+        let mut b = ArrivalProcess::new(42, 3, 4);
+        let mut last = 0;
+        for _ in 0..50 {
+            let ra = a.next_request();
+            let rb = b.next_request();
+            assert_eq!(ra.arrival_tick, rb.arrival_tick);
+            assert_eq!(ra.row, rb.row);
+            assert!(ra.arrival_tick >= last, "arrivals must be monotone");
+            assert!(ra.row.iter().all(|v| (0.5..1.5).contains(v)));
+            last = ra.arrival_tick;
+        }
+    }
+}

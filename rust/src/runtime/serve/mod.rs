@@ -1,0 +1,480 @@
+//! Scoring-as-a-service: dynamic micro-batched inference on the blocked
+//! backend.
+//!
+//! The paper frames SystemML as one framework spanning model
+//! preparation, training, and evaluation on a shared cluster; this
+//! module adds the missing serving leg — the millions-of-users scoring
+//! scenario — as a four-stage dataflow:
+//!
+//! ```text
+//! admission ──▶ micro-batch ──▶ blocked forward ──▶ per-request scatter
+//!  (queue of     (flush on        (session-resident    (metadata-only row
+//!   1-row         size OR wait     weights, worker      slices; responses
+//!   requests)     bound)           pool, zero collects) charged as shuffle)
+//! ```
+//!
+//! * **Admission + batching** live in [`batcher`]: a FIFO queue of
+//!   single-row requests flushed under
+//!   `SystemConfig::{serve_max_batch, serve_max_wait_ticks}` — whichever
+//!   bound hits first. Arrivals come from a seeded, wall-clock-free
+//!   simulated process, so every run is deterministic.
+//! * **Forward pass**: [`ScoreService`] keeps the model state
+//!   cluster-resident for the whole session — session-carried blocked
+//!   training outputs stay where they are, driver-local weight matrices
+//!   are promoted to resident (replicated when single-block) handles at
+//!   construction with **one** recorded broadcast of the model bytes.
+//!   Each batch is zero-padded to the next `block_size` multiple and
+//!   bound as a first-class blocked value, which pins the whole pipeline
+//!   on the DIST path (no CP↔DIST placement thrash for small batches)
+//!   and on the cluster's worker thread pool. Warm batches run with
+//!   **zero driver collects**.
+//! * **Plan cache**: compilation is amortized per padded batch
+//!   *geometry*, not per request — one cached [`Interpreter`] (bundle +
+//!   compiled plan) per distinct padded row count, so a service at the
+//!   default knobs compiles at most twice (full batches + one partial
+//!   size). [`ScoreService::compile_count`] exposes the cache behavior.
+//! * **Scatter**: result rows are sliced per request straight off the
+//!   resident output blocks (metadata-only blocked right-indexing — an
+//!   `Arc` walk, never a collect); the emitted response bytes are
+//!   charged as shuffle volume, modeling workers streaming responses
+//!   back to clients.
+//!
+//! [`run_simulation`] drives all four stages end-to-end (optionally with
+//! several micro-batches in flight on scoped threads) and reports
+//! per-request latency in simulated ticks plus per-batch wall time —
+//! the `serving` workload of `examples/dist_bench.rs` gates its p50/p99
+//! ratio, its batched-vs-unbatched throughput, and the zero-collect
+//! invariant in CI.
+
+pub mod batcher;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::conf::SystemConfig;
+use crate::runtime::dist::pool::run_scoped;
+use crate::runtime::dist::{BlockedHandle, Cluster};
+use crate::runtime::interp::{Interpreter, Scope, Value};
+use crate::runtime::matrix::dense::DenseMatrix;
+use crate::runtime::matrix::Matrix;
+use crate::util::error::{DmlError, Result};
+use batcher::{ArrivalProcess, FlushReason, MicroBatch, MicroBatcher};
+
+/// A session-resident scoring service: one scoring script, one resident
+/// model, one plan cache — shared by any number of concurrent
+/// micro-batches (the service is `Sync`; `score_batch` takes `&self`).
+/// Built by `MLContext::score_service`.
+pub struct ScoreService {
+    config: SystemConfig,
+    cluster: Arc<Cluster>,
+    source: String,
+    /// Scope name the scoring script reads the batch matrix under.
+    batch_input: String,
+    /// Scope name of the scores matrix the script assigns.
+    output: String,
+    /// Feature count of every request row (= columns of the batch input).
+    features: usize,
+    /// Resident model state: blocked weight handles + passthrough
+    /// scalars, cloned into every batch's scope. Handle clones are `Arc`
+    /// bumps — the blocks themselves stay put on the cluster.
+    state: HashMap<String, Value>,
+    /// Plan cache, keyed by padded batch row count: one compiled
+    /// interpreter per distinct padded geometry.
+    interps: Mutex<HashMap<usize, Arc<Interpreter>>>,
+    compiles: AtomicU64,
+    batches: AtomicU64,
+    rows_scored: AtomicU64,
+}
+
+impl ScoreService {
+    /// Build a service from a session snapshot (see
+    /// `MLContext::score_service`, the public entry point). `script`
+    /// carries the scoring DML, the model inputs (driver matrices,
+    /// scalars, or resident blocked handles from a training session) and
+    /// the requested scores output; `batch_input` names the variable the
+    /// per-batch feature matrix is bound under; `features` is its column
+    /// count.
+    ///
+    /// Driver-local weight matrices are promoted to cluster-resident
+    /// blocked handles here — replicated when they fit a single block
+    /// (free force/gather, like allreduce products), plain blocked
+    /// otherwise — and their bytes are recorded as ONE model broadcast.
+    /// Values that are already blocked handles are resident by
+    /// definition and move nothing.
+    pub(crate) fn new(
+        config: SystemConfig,
+        cluster: Arc<Cluster>,
+        session: HashMap<String, Value>,
+        source: &str,
+        inputs: &HashMap<String, Value>,
+        outputs: &[String],
+        batch_input: &str,
+        features: usize,
+    ) -> Result<ScoreService> {
+        let output = outputs.first().cloned().ok_or_else(|| {
+            DmlError::rt("score_service: the scoring script must request its scores output")
+        })?;
+        if features == 0 {
+            return Err(DmlError::rt("score_service: features must be positive"));
+        }
+        // Model state = session carry-over ∪ explicit inputs (explicit
+        // wins, mirroring execute()); the batch input is bound per call.
+        let mut state = session;
+        state.extend(inputs.clone());
+        state.remove(batch_input);
+        let bs = config.block_size;
+        let mut broadcast_bytes = 0u64;
+        for v in state.values_mut() {
+            if let Value::Matrix(m) = v {
+                let blocked = Arc::new(cluster.blockify(m)?);
+                broadcast_bytes += blocked.size_in_bytes() as u64;
+                let handle = if m.rows() <= bs && m.cols() <= bs {
+                    BlockedHandle::replicated(Arc::clone(&cluster), blocked)
+                } else {
+                    BlockedHandle::new(Arc::clone(&cluster), blocked)
+                };
+                *v = Value::Blocked(handle);
+            }
+        }
+        if broadcast_bytes > 0 {
+            cluster.record_broadcast(broadcast_bytes);
+        }
+        Ok(ScoreService {
+            config,
+            cluster,
+            source: source.to_string(),
+            batch_input: batch_input.to_string(),
+            output,
+            features,
+            state,
+            interps: Mutex::new(HashMap::new()),
+            compiles: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows_scored: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.config
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Plan compilations so far — stays at the number of *distinct
+    /// padded batch geometries* seen, not the number of batches.
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Micro-batches scored so far.
+    pub fn batch_count(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Request rows scored so far.
+    pub fn rows_scored(&self) -> u64 {
+        self.rows_scored.load(Ordering::Relaxed)
+    }
+
+    /// Batch rows padded up to the next block-size multiple — the padded
+    /// geometry that keys the plan cache.
+    pub fn padded_rows(&self, n: usize) -> usize {
+        let bs = self.config.block_size.max(1);
+        n.max(1).div_ceil(bs) * bs
+    }
+
+    /// The cached interpreter for one padded geometry, compiling it on
+    /// first sight. The lock is held across compilation so a distinct
+    /// geometry compiles exactly once even under concurrent batches.
+    fn interpreter_for(&self, padded: usize) -> Result<Arc<Interpreter>> {
+        let mut cache = self.interps.lock().unwrap();
+        if let Some(interp) = cache.get(&padded) {
+            return Ok(Arc::clone(interp));
+        }
+        // Compile against the resident state plus a dense stand-in for
+        // the batch shape (the plan only reads dims/sparsity).
+        let mut inputs = HashMap::new();
+        inputs.insert(
+            self.batch_input.clone(),
+            Value::Matrix(Matrix::Dense(DenseMatrix::filled(padded, self.features, 1.0))),
+        );
+        let compiled =
+            crate::api::compile_source(&self.source, &self.config, &self.state, &inputs)?;
+        let mut interp = Interpreter::with_cluster(
+            compiled.bundle,
+            self.config.clone(),
+            Some(Arc::clone(&self.cluster)),
+        );
+        interp.plan = Some(Arc::new(compiled.plan));
+        let interp = Arc::new(interp);
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        cache.insert(padded, Arc::clone(&interp));
+        Ok(interp)
+    }
+
+    /// Score one micro-batch: pad to the block boundary, run the blocked
+    /// forward pass against the resident model, and scatter one score
+    /// row back per request. Zero-padded rows keep the forward pass
+    /// row-independent, so each returned row is exactly what the request
+    /// alone would have produced.
+    pub fn score_batch(&self, rows: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let n = rows.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != self.features {
+                return Err(DmlError::rt(format!(
+                    "score_batch: request {i} has {} features, the service expects {}",
+                    r.len(),
+                    self.features
+                )));
+            }
+        }
+        let padded = self.padded_rows(n);
+        let interp = self.interpreter_for(padded)?;
+        let mut x = DenseMatrix::zeros(padded, self.features);
+        for (i, r) in rows.iter().enumerate() {
+            x.data[i * self.features..(i + 1) * self.features].copy_from_slice(r);
+        }
+        // Bind the batch as a first-class blocked value: every operator
+        // touching it (or the blocked weights) resolves DIST, keeping
+        // the pipeline on the worker pool with no CP↔DIST thrash.
+        let blocked = Arc::new(self.cluster.blockify(&Matrix::Dense(x))?);
+        let handle = BlockedHandle::new(Arc::clone(&self.cluster), blocked);
+        let mut scope: Scope = self.state.clone();
+        scope.insert(self.batch_input.clone(), Value::Blocked(handle));
+        let final_scope = interp.run(scope)?;
+        let scores = final_scope.get(&self.output).ok_or_else(|| {
+            DmlError::rt(format!(
+                "score_service: output '{}' was never assigned by the scoring script",
+                self.output
+            ))
+        })?;
+        let out = self.scatter(scores, n)?;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows_scored.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Per-request scatter: slice row `r` of the scores value for each
+    /// of the `n` real (unpadded) requests.
+    ///
+    /// * A single-block result already returned with the job as a driver
+    ///   matrix (the dispatch layer's free materialization) — slicing it
+    ///   is pure driver work.
+    /// * A multi-block result is read straight off the resident blocks:
+    ///   each request row lives in exactly one block row, so the slice
+    ///   is metadata-only blocked right-indexing (an `Arc` walk). The
+    ///   emitted response bytes are charged as shuffle volume — workers
+    ///   streaming responses to clients — never as a driver collect.
+    fn scatter(&self, scores: &Value, n: usize) -> Result<Vec<Vec<f64>>> {
+        match scores {
+            Value::Matrix(m) => {
+                if m.rows() < n {
+                    return Err(DmlError::rt(format!(
+                        "score_service: scores have {} rows for {} requests",
+                        m.rows(),
+                        n
+                    )));
+                }
+                Ok((0..n).map(|r| (0..m.cols()).map(|c| m.get(r, c)).collect()).collect())
+            }
+            Value::Blocked(h) => {
+                if h.rows() < n {
+                    return Err(DmlError::rt(format!(
+                        "score_service: scores have {} rows for {} requests",
+                        h.rows(),
+                        n
+                    )));
+                }
+                let bm = h.blocked()?;
+                let bs = bm.block_size();
+                let mut out = Vec::with_capacity(n);
+                for r in 0..n {
+                    let (br, lr) = (r / bs, r % bs);
+                    let mut row = Vec::with_capacity(bm.cols());
+                    for bc in 0..bm.block_cols() {
+                        let blk = bm.block(br, bc);
+                        for c in 0..blk.cols() {
+                            row.push(blk.get(lr, c));
+                        }
+                    }
+                    out.push(row);
+                }
+                self.cluster.record_shuffle((n * bm.cols() * 8) as u64);
+                Ok(out)
+            }
+            other => Err(DmlError::rt(format!(
+                "score_service: output '{}' is not a matrix (found {})",
+                self.output,
+                other.type_name()
+            ))),
+        }
+    }
+}
+
+/// End-to-end result of [`run_simulation`], indexed by request id.
+#[derive(Debug)]
+pub struct ServingReport {
+    /// One score row per request.
+    pub scores: Vec<Vec<f64>>,
+    /// Queueing latency per request in simulated ticks
+    /// (`flush_tick - arrival_tick`) — deterministic for a given
+    /// (seed, knobs) pair.
+    pub latency_ticks: Vec<u64>,
+    /// Wall-clock execution time per request in seconds (the duration of
+    /// the batch that carried it).
+    pub wall_secs: Vec<f64>,
+    /// Micro-batches flushed, with size and flush reason.
+    pub flushes: Vec<(usize, FlushReason)>,
+    /// Total wall-clock seconds spent executing batches (summed across
+    /// in-flight groups; the sustained-throughput denominator).
+    pub exec_secs: f64,
+}
+
+impl ServingReport {
+    /// Nearest-rank percentile of the simulated-tick latencies
+    /// (`p` in [0, 100]).
+    pub fn latency_percentile_ticks(&self, p: f64) -> u64 {
+        percentile_u64(&self.latency_ticks, p)
+    }
+
+    /// Nearest-rank percentile of the wall-clock latencies.
+    pub fn wall_percentile_secs(&self, p: f64) -> f64 {
+        let mut sorted = self.wall_secs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        nearest_rank(&sorted, p).copied().unwrap_or(0.0)
+    }
+}
+
+/// Nearest-rank percentile over unsorted u64 samples.
+pub fn percentile_u64(samples: &[u64], p: f64) -> u64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    nearest_rank(&sorted, p).copied().unwrap_or(0)
+}
+
+fn nearest_rank<T>(sorted: &[T], p: f64) -> Option<&T> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted.get(rank.max(1) - 1)
+}
+
+/// Drive the full admission → batch → forward → scatter dataflow for
+/// `requests` seeded arrivals and return per-request scores + latencies.
+///
+/// The simulated clock advances tick by tick: arrivals are admitted at
+/// their arrival tick, the batcher is polled every tick (size bound
+/// first, then wait bound), and flushed batches execute on the service —
+/// `inflight` of them concurrently on scoped threads (each in-flight
+/// group joins in submission order, and scores depend only on the
+/// requests of their own batch, so results are identical for any
+/// `inflight`). Batch composition and tick latencies are a pure function
+/// of (seed, max_gap, knobs); execution wall times are measured per
+/// batch for the report.
+pub fn run_simulation(
+    service: &ScoreService,
+    requests: usize,
+    seed: u64,
+    max_gap: u64,
+    inflight: usize,
+) -> Result<ServingReport> {
+    let mut arrivals = ArrivalProcess::new(seed, service.features(), max_gap);
+    let reqs: Vec<_> = (0..requests).map(|_| arrivals.next_request()).collect();
+
+    // Phase 1 (pure, deterministic): admission + batching over the
+    // simulated clock. Execution does not feed back into arrival times —
+    // the admission process is open-loop, like an external client fleet.
+    let mut batcher = MicroBatcher::from_config(service.config());
+    let mut batches: Vec<MicroBatch> = Vec::new();
+    let mut pending = reqs.into_iter().peekable();
+    let mut now = 0u64;
+    while pending.peek().is_some() || batcher.pending() > 0 {
+        while pending.peek().map_or(false, |r| r.arrival_tick <= now) {
+            batcher.admit(pending.next().unwrap());
+            // A burst can hit the size bound several times in one tick.
+            while let Some(b) = batcher.poll(now) {
+                batches.push(b);
+            }
+        }
+        while let Some(b) = batcher.poll(now) {
+            batches.push(b);
+        }
+        now += 1;
+    }
+
+    // Phase 2: execute the flushed batches, `inflight` at a time.
+    let mut scores: Vec<Option<Vec<f64>>> = (0..requests).map(|_| None).collect();
+    let mut latency_ticks = vec![0u64; requests];
+    let mut wall_secs = vec![0f64; requests];
+    let mut exec_secs = 0f64;
+    for group in batches.chunks(inflight.max(1)) {
+        let group_start = std::time::Instant::now();
+        let results: Vec<(Result<Vec<Vec<f64>>>, f64)> = run_scoped(
+            group
+                .iter()
+                .map(|b| {
+                    let rows: Vec<Vec<f64>> = b.requests.iter().map(|r| r.row.clone()).collect();
+                    move || {
+                        let start = std::time::Instant::now();
+                        let out = service.score_batch(&rows);
+                        (out, start.elapsed().as_secs_f64())
+                    }
+                })
+                .collect(),
+        );
+        exec_secs += group_start.elapsed().as_secs_f64();
+        for (batch, (result, batch_secs)) in group.iter().zip(results) {
+            let rows = result?;
+            for (req, row) in batch.requests.iter().zip(rows) {
+                let id = req.id as usize;
+                scores[id] = Some(row);
+                latency_ticks[id] = batch.flush_tick - req.arrival_tick;
+                wall_secs[id] = batch_secs;
+            }
+        }
+    }
+    let scores = scores
+        .into_iter()
+        .enumerate()
+        .map(|(id, s)| s.ok_or_else(|| DmlError::rt(format!("request {id} was never scored"))))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ServingReport {
+        scores,
+        latency_ticks,
+        wall_secs,
+        flushes: batches.iter().map(|b| (b.requests.len(), b.reason)).collect(),
+        exec_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_service_is_sync() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<ScoreService>();
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let lat: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_u64(&lat, 50.0), 50);
+        assert_eq!(percentile_u64(&lat, 99.0), 99);
+        assert_eq!(percentile_u64(&lat, 100.0), 100);
+        assert_eq!(percentile_u64(&[7], 50.0), 7);
+        assert_eq!(percentile_u64(&[], 99.0), 0);
+    }
+}

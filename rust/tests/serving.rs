@@ -1,0 +1,264 @@
+//! Scoring-as-a-service gates (PR 9): the dynamic micro-batcher flushes
+//! on whichever of the size/wait bounds hits first; a warm service with
+//! resident weights scores every micro-batch with **zero driver
+//! collects** and compiles once per distinct padded batch geometry; and
+//! the batched blocked forward pass is **byte-identical** to a
+//! one-row-at-a-time CP reference — across `dist_threads` 1 vs 4 and
+//! with several micro-batches in flight concurrently.
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::randgen::{rand, Pdf};
+use systemml::runtime::matrix::Matrix;
+use systemml::runtime::serve::batcher::{FlushReason, MicroBatcher, ScoreRequest};
+use systemml::runtime::serve::{run_simulation, ScoreService};
+
+/// Two-layer MLP forward pass. Every model dimension fits one 32-wide
+/// block, so each matmult has a single k-block — no partial-sum
+/// reassociation — which is what makes batched blocked scores
+/// bit-comparable to the single-row CP reference.
+const SERVE_SRC: &str = "H = max(X %*% W1 + b1, 0)\n\
+                         S = H %*% W2 + b2";
+
+const FEATURES: usize = 12;
+const HIDDEN: usize = 16;
+const CLASSES: usize = 4;
+
+fn weights() -> Vec<(&'static str, Matrix)> {
+    vec![
+        ("W1", rand(FEATURES, HIDDEN, -0.5, 0.5, 1.0, Pdf::Uniform, 41).unwrap()),
+        ("b1", rand(1, HIDDEN, -0.1, 0.1, 1.0, Pdf::Uniform, 42).unwrap()),
+        ("W2", rand(HIDDEN, CLASSES, -0.5, 0.5, 1.0, Pdf::Uniform, 43).unwrap()),
+        ("b2", rand(1, CLASSES, -0.1, 0.1, 1.0, Pdf::Uniform, 44).unwrap()),
+    ]
+}
+
+fn scoring_script() -> Script {
+    let mut s = Script::from_str(SERVE_SRC).output("S");
+    for (name, m) in weights() {
+        s = s.input(name, m);
+    }
+    s
+}
+
+fn serve_config(threads: usize) -> SystemConfig {
+    SystemConfig::builder()
+        .driver_memory(8 * 1024)
+        .block_size(32)
+        .num_workers(4)
+        .dist_threads(threads)
+        .serve_max_batch(64)
+        .serve_max_wait_ticks(8)
+        .build()
+}
+
+fn service(threads: usize) -> (MLContext, ScoreService) {
+    let ctx = MLContext::with_config(serve_config(threads));
+    let svc = ctx.score_service(&scoring_script(), "X", FEATURES).unwrap();
+    (ctx, svc)
+}
+
+/// One-row-at-a-time CP reference: a local-mode context (dist disabled)
+/// scoring each request row as its own 1-row script execution.
+fn cp_reference_scores(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut config = SystemConfig::default();
+    config.dist_enabled = false;
+    let ctx = MLContext::with_config(config);
+    rows.iter()
+        .map(|row| {
+            let mut x = Matrix::zeros(1, FEATURES).into_dense_format();
+            for (c, v) in row.iter().enumerate() {
+                if let Matrix::Dense(d) = &mut x {
+                    d.data[c] = *v;
+                }
+            }
+            let script = scoring_script().input("X", x);
+            let s = ctx.execute(script).unwrap().matrix("S").unwrap();
+            (0..CLASSES).map(|c| s.get(0, c)).collect()
+        })
+        .collect()
+}
+
+fn bits(rows: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    rows.iter().map(|r| r.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+// ---- batcher bounds ------------------------------------------------------
+
+fn req(id: u64, tick: u64) -> ScoreRequest {
+    ScoreRequest { id, arrival_tick: tick, row: vec![1.0; FEATURES] }
+}
+
+#[test]
+fn batcher_flushes_on_size_bound() {
+    let mut b = MicroBatcher::from_config(&serve_config(1));
+    for i in 0..65 {
+        b.admit(req(i, 5));
+    }
+    let batch = b.poll(5).expect("size bound hit");
+    assert_eq!(batch.reason, FlushReason::Size);
+    assert_eq!(batch.requests.len(), 64);
+    assert_eq!(batch.flush_tick, 5);
+    // The 65th request waits for more arrivals or the wait bound.
+    assert!(b.poll(5).is_none());
+    assert_eq!(b.pending(), 1);
+}
+
+#[test]
+fn batcher_flushes_on_wait_bound() {
+    let mut b = MicroBatcher::from_config(&serve_config(1));
+    b.admit(req(0, 10));
+    b.admit(req(1, 14));
+    assert!(b.poll(17).is_none(), "oldest has waited 7 < 8 ticks");
+    let batch = b.poll(18).expect("wait bound hit");
+    assert_eq!(batch.reason, FlushReason::Wait);
+    assert_eq!(batch.requests.len(), 2, "a wait flush takes the whole partial queue");
+    assert_eq!(batch.latencies(), vec![8, 4]);
+}
+
+#[test]
+fn batcher_drains_partial_final_batch() {
+    let mut b = MicroBatcher::from_config(&serve_config(1));
+    for i in 0..3 {
+        b.admit(req(i, 100));
+    }
+    assert!(b.poll(101).is_none(), "neither bound hit");
+    let last = b.drain(101).expect("shutdown drain");
+    assert_eq!(last.reason, FlushReason::Drain);
+    assert_eq!(last.requests.len(), 3);
+    assert_eq!(b.pending(), 0);
+    assert!(b.drain(101).is_none());
+}
+
+// ---- scoring correctness -------------------------------------------------
+
+#[test]
+fn batched_scores_byte_identical_to_cp_one_row_reference() {
+    let (_ctx, svc) = service(4);
+    let report = run_simulation(&svc, 40, 7, 2, 1).unwrap();
+    assert_eq!(report.scores.len(), 40);
+    // Reconstruct the exact request rows the simulation generated (same
+    // seeded arrival process) and score them one at a time in CP.
+    let mut arrivals =
+        systemml::runtime::serve::batcher::ArrivalProcess::new(7, FEATURES, 2);
+    let rows: Vec<Vec<f64>> = (0..40).map(|_| arrivals.next_request().row).collect();
+    let reference = cp_reference_scores(&rows);
+    assert_eq!(
+        bits(&report.scores),
+        bits(&reference),
+        "micro-batched blocked scores must be bit-equal to the 1-row CP reference"
+    );
+    // The wait bound (8 ticks) bounds every queueing latency.
+    assert!(report.latency_ticks.iter().all(|&t| t <= 8));
+    assert!(!report.flushes.is_empty());
+}
+
+#[test]
+fn warm_service_scores_with_zero_collects() {
+    let (ctx, svc) = service(4);
+    let cluster = ctx.cluster().unwrap();
+    // Warmup: compiles the plan for the padded geometry and touches
+    // every weight handle once.
+    let warm: Vec<Vec<f64>> = (0..5).map(|i| vec![0.5 + i as f64 * 0.01; FEATURES]).collect();
+    svc.score_batch(&warm).unwrap();
+    let compiles_after_warmup = svc.compile_count();
+    assert_eq!(compiles_after_warmup, 1);
+
+    cluster.reset_accounting();
+    let report = run_simulation(&svc, 60, 3, 1, 1).unwrap();
+    assert_eq!(report.scores.len(), 60);
+    assert_eq!(
+        cluster.collect_count(),
+        0,
+        "a warm service must never collect to the driver"
+    );
+    // The model broadcast happened at construction; warm batches move
+    // only the batch blocks in and the response rows out.
+    assert_eq!(svc.compile_count(), compiles_after_warmup, "no recompilation while warm");
+    assert!(svc.rows_scored() >= 65);
+}
+
+#[test]
+fn plans_cached_per_padded_geometry_not_per_request() {
+    let (_ctx, svc) = service(1);
+    assert_eq!(svc.padded_rows(1), 32);
+    assert_eq!(svc.padded_rows(32), 32);
+    assert_eq!(svc.padded_rows(33), 64);
+    // Ten batches over two distinct padded geometries (32 and 64 rows).
+    for n in [3usize, 10, 32, 5, 17, 40, 64, 33, 8, 50] {
+        let rows: Vec<Vec<f64>> = (0..n).map(|i| vec![1.0 + i as f64 * 0.001; FEATURES]).collect();
+        let out = svc.score_batch(&rows).unwrap();
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|r| r.len() == CLASSES));
+    }
+    assert_eq!(svc.batch_count(), 10);
+    assert_eq!(svc.compile_count(), 2, "one compile per distinct padded batch size");
+}
+
+#[test]
+fn padding_does_not_leak_into_scores() {
+    // The same request row must score bit-identically whether its batch
+    // was full (64 → padded 64) or nearly empty (2 → padded 32): padding
+    // rows are zero and the forward pass is row-independent.
+    let (_ctx, svc) = service(1);
+    let row: Vec<f64> = (0..FEATURES).map(|c| 0.75 + c as f64 * 0.05).collect();
+    let small = svc.score_batch(std::slice::from_ref(&row)).unwrap();
+    let mut big_rows = vec![vec![0.9; FEATURES]; 63];
+    big_rows.insert(7, row);
+    let big = svc.score_batch(&big_rows).unwrap();
+    assert_eq!(bits(&small), bits(&[big[7].clone()]));
+}
+
+// ---- determinism ---------------------------------------------------------
+
+#[test]
+fn deterministic_across_thread_counts_and_inflight_batches() {
+    let (_ctx, serial) = service(1);
+    let (_ctx2, threaded) = service(4);
+    let a = run_simulation(&serial, 80, 99, 2, 1).unwrap();
+    // 4 pool threads AND 3 micro-batches in flight concurrently.
+    let b = run_simulation(&threaded, 80, 99, 2, 3).unwrap();
+    assert_eq!(a.latency_ticks, b.latency_ticks, "batch composition is seed-determined");
+    assert_eq!(
+        a.flushes.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+        b.flushes.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        bits(&a.scores),
+        bits(&b.scores),
+        "scores must be byte-identical across dist_threads 1 vs 4 and concurrent batches"
+    );
+}
+
+#[test]
+fn session_trained_weights_serve_without_rebroadcast() {
+    // Train-then-serve on ONE session: the training script's blocked
+    // outputs stay resident, and score_service picks them up from the
+    // session without re-broadcasting the already-resident state.
+    let ctx = MLContext::with_config(serve_config(4));
+    let x = rand(96, FEATURES, -1.0, 1.0, 1.0, Pdf::Uniform, 51).unwrap();
+    let y = rand(96, HIDDEN, -1.0, 1.0, 1.0, Pdf::Uniform, 52).unwrap();
+    let w0 = rand(FEATURES, HIDDEN, -0.1, 0.1, 1.0, Pdf::Uniform, 53).unwrap();
+    let train = Script::from_str(
+        "for (e in 1:2) {\n\
+           R = X %*% W1 - Y\n\
+           g = t(X) %*% R\n\
+           W1 = W1 - 0.01 * g\n\
+         }",
+    )
+    .input("X", x)
+    .input("Y", y)
+    .input("W1", w0)
+    .output("W1");
+    ctx.execute(train).unwrap();
+
+    // The scoring script reads the session-resident W1 plus fresh
+    // driver-local second-layer weights.
+    let score = Script::from_str("S = max(X %*% W1, 0) %*% W2")
+        .input("W2", rand(HIDDEN, CLASSES, -0.5, 0.5, 1.0, Pdf::Uniform, 54).unwrap())
+        .output("S");
+    let svc = ctx.score_service(&score, "X", FEATURES).unwrap();
+    let report = run_simulation(&svc, 30, 13, 2, 1).unwrap();
+    assert_eq!(report.scores.len(), 30);
+    assert_eq!(ctx.cluster().unwrap().collect_count(), 0, "train-then-serve never collects");
+}
