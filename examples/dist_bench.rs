@@ -67,6 +67,7 @@ use systemml::runtime::serve::batcher::ArrivalProcess;
 use systemml::runtime::serve::run_simulation;
 use systemml::util::metrics;
 use systemml::util::prng::Prng;
+use systemml::util::stats::OpStat;
 
 /// Conjugate gradient on the normal equations (scripts/algorithms/lm_cg
 /// inlined with a fixed iteration count): `X` and `t(X)` are
@@ -267,6 +268,10 @@ struct RunStats {
     shuffle_bytes: u64,
     broadcast_bytes: u64,
     wall_ms: f64,
+    /// Top-5 heavy-hitter rows from the session's `-stats` table.
+    heavy: Vec<OpStat>,
+    /// Max/mean worker busy-time ratio (always finite; 1.0 when idle).
+    skew: f64,
 }
 
 // X (400x64 doubles = 200 KB) must not fit the driver budget, so all
@@ -281,14 +286,24 @@ fn config_with(cache: bool, threads: usize, workers: usize) -> SystemConfig {
         .build()
 }
 
-fn config(cache: bool) -> SystemConfig {
-    config_with(cache, 0, 4)
+/// Same knobs as [`config_with`]`(cache, 0, 4)`, with the `-stats`
+/// registry on: the accounting runs feed each workload's heavy-hitter
+/// table and worker-skew ratio into `BENCH_dist.json`.
+fn stats_config(cache: bool) -> SystemConfig {
+    SystemConfig::builder()
+        .driver_memory(128 * 1024)
+        .block_size(64)
+        .num_workers(4)
+        .dist_threads(0)
+        .cache_enabled(cache)
+        .stats_enabled(true)
+        .build()
 }
 
 fn run(src: &str, iters: usize, cache: bool, output: &str) -> RunStats {
     let (x, ylab) = synthetic_classification(400, 64, 4, 42);
     let y = reorg::slice(&ylab, 0, 400, 0, 1).unwrap();
-    let ctx = MLContext::with_config(config(cache));
+    let ctx = MLContext::with_config(stats_config(cache));
     let script = Script::from_str(src)
         .input("X", x)
         .input("y", y)
@@ -302,6 +317,7 @@ fn run(src: &str, iters: usize, cache: bool, output: &str) -> RunStats {
     let res = ctx.execute(script).expect("workload failed");
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let d = metrics::global().snapshot().delta(&before);
+    let report = ctx.stats().expect("accounting runs keep -stats enabled");
     RunStats {
         result: res.double(output).unwrap(),
         blockify: d.blockify_ops,
@@ -311,6 +327,8 @@ fn run(src: &str, iters: usize, cache: bool, output: &str) -> RunStats {
         shuffle_bytes: d.shuffle_bytes,
         broadcast_bytes: d.broadcast_bytes,
         wall_ms,
+        heavy: report.heavy_hitters(5),
+        skew: report.skew_ratio,
     }
 }
 
@@ -626,6 +644,32 @@ fn gemm_gflops(kernel: &dyn Fn(&DenseMatrix, &DenseMatrix) -> DenseMatrix, size:
     flops / best.max(1e-9) / 1e9
 }
 
+/// Top-k heavy-hitter rows as a JSON array (counts/FLOPs/bytes are
+/// deterministic; `time_ms` is wall clock and varies run to run).
+fn heavy_json(rows: &[OpStat]) -> String {
+    if rows.is_empty() {
+        return "[]".to_string();
+    }
+    let body = rows
+        .iter()
+        .map(|o| {
+            format!(
+                "      {{ \"op\": \"{}\", \"pos\": \"{}\", \"exec\": \"{}\", \"count\": {}, \
+                 \"time_ms\": {:.3}, \"gflop\": {:.6}, \"comm_kb\": {:.3} }}",
+                o.op,
+                o.pos,
+                o.exec,
+                o.count,
+                o.nanos as f64 / 1e6,
+                o.flops as f64 / 1e9,
+                o.comm_bytes as f64 / 1024.0,
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    format!("[\n{body}\n    ]")
+}
+
 fn json_entry(b: &Bench) -> String {
     let s = &b.long_cached;
     format!(
@@ -642,6 +686,8 @@ fn json_entry(b: &Bench) -> String {
             "    \"shuffle_bytes\": {},\n",
             "    \"broadcast_bytes\": {},\n",
             "    \"wall_ms\": {:.2},\n",
+            "    \"worker_skew\": {:.4},\n",
+            "    \"heavy_hitters\": {},\n",
             "    \"result\": {}\n",
             "  }}"
         ),
@@ -657,6 +703,8 @@ fn json_entry(b: &Bench) -> String {
         s.shuffle_bytes,
         s.broadcast_bytes,
         s.wall_ms,
+        s.skew,
+        heavy_json(&s.heavy),
         s.result,
     )
 }
@@ -810,6 +858,28 @@ fn main() {
             eprintln!(
                 "FAIL: {} cached blockify/iter {} is not below uncached {}",
                 b.name, b.per_iter_cached, b.per_iter_uncached
+            );
+            pass = false;
+        }
+    }
+
+    // Statistics gates (the PR 10 observability acceptance): with
+    // `-stats` on, every accounting workload must surface a non-empty
+    // heavy-hitter table and a finite worker-skew ratio (max/mean busy
+    // time is >= 1 by construction, 1.0 exactly when idle).
+    for b in [&lm, &km, &mb, &ln] {
+        let s = &b.long_cached;
+        if s.heavy.is_empty() {
+            eprintln!(
+                "FAIL: {} produced an empty heavy-hitter table with stats enabled",
+                b.name
+            );
+            pass = false;
+        }
+        if !s.skew.is_finite() || s.skew < 1.0 {
+            eprintln!(
+                "FAIL: {} worker-skew ratio {} is not a finite value >= 1",
+                b.name, s.skew
             );
             pass = false;
         }
@@ -1079,6 +1149,33 @@ fn main() {
     println!("\nwrote BENCH_dist.json");
     // Self-check that the emitted report is well-formed JSON.
     systemml::util::json::Json::parse(&json).expect("BENCH_dist.json must parse");
+
+    // Structured-trace artifact: one short traced lm_cg run writes
+    // TRACE_lm_cg.jsonl (JSON-lines session/script/statement/operator
+    // spans plus blockify/broadcast/shuffle/cache events) for CI to
+    // upload, and its `-stats` table goes to the log.
+    {
+        let (x, ylab) = synthetic_classification(400, 64, 4, 42);
+        let y = reorg::slice(&ylab, 0, 400, 0, 1).unwrap();
+        let cfg = SystemConfig::builder()
+            .driver_memory(128 * 1024)
+            .block_size(64)
+            .num_workers(4)
+            .cache_enabled(true)
+            .stats_enabled(true)
+            .trace_path("TRACE_lm_cg.jsonl")
+            .build();
+        let ctx = MLContext::with_config(cfg);
+        let script = Script::from_str(LM_CG)
+            .input("X", x)
+            .input("y", y)
+            .input_scalar("lambda", 0.001)
+            .input_scalar("max_iter", 4.0)
+            .output("final_norm");
+        ctx.execute(script).expect("traced lm_cg failed");
+        println!("\nwrote TRACE_lm_cg.jsonl; lm_cg statistics:");
+        print!("{}", ctx.statistics());
+    }
 
     // Keep the empty-matrix regression visible where CI watches perf: a
     // 0-row slice must blockify to an empty handle, not an error.

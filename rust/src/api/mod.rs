@@ -53,9 +53,10 @@ use crate::hop::dag::ShapeInfo;
 use crate::hop::plan::{compile_plan, Plan};
 use crate::runtime::dist::{BlockedHandle, Cluster};
 use crate::runtime::interp::registry::build_bundle;
-use crate::runtime::interp::{build_cluster, Interpreter, Scope, Value};
+use crate::runtime::interp::{build_cluster_with_stats, Interpreter, Scope, Value};
 use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
+use crate::util::stats::{Stats, StatsReport};
 
 /// A DML script plus its input bindings and requested outputs.
 #[derive(Clone, Debug, Default)]
@@ -173,6 +174,10 @@ pub struct MLContext {
     /// Values retained from previous executions' requested outputs;
     /// seeded into the next script's scope (explicit inputs win).
     session: RefCell<HashMap<String, Value>>,
+    /// The session's statistics/trace registry (SystemML `-stats`),
+    /// created lazily from `config` like the cluster; `None` when both
+    /// stats knobs are off.
+    stats: RefCell<Option<Arc<Stats>>>,
 }
 
 impl MLContext {
@@ -188,7 +193,19 @@ impl MLContext {
             echo: false,
             cluster: RefCell::new(None),
             session: RefCell::new(HashMap::new()),
+            stats: RefCell::new(None),
         }
+    }
+
+    /// The session's stats registry, building it from the current config
+    /// on first use. `None` when both stats knobs are off — the
+    /// zero-cost path.
+    fn session_stats(&self) -> Option<Arc<Stats>> {
+        let mut slot = self.stats.borrow_mut();
+        if slot.is_none() {
+            *slot = Stats::from_config(&self.config);
+        }
+        slot.clone()
     }
 
     /// The session cluster, building it from the current config on first
@@ -197,9 +214,10 @@ impl MLContext {
         if !self.config.dist_enabled {
             return None;
         }
+        let stats = self.session_stats();
         let mut slot = self.cluster.borrow_mut();
         if slot.is_none() {
-            *slot = build_cluster(&self.config);
+            *slot = build_cluster_with_stats(&self.config, stats);
         }
         slot.clone()
     }
@@ -221,6 +239,30 @@ impl MLContext {
     /// partitions' storage reservation.
     pub fn clear_session(&self) {
         self.session.borrow_mut().clear();
+    }
+
+    /// SystemML's `-stats` output for the session so far: the top-10
+    /// heavy-hitter instruction table and per-worker utilization /
+    /// skew. A one-line placeholder when statistics are disabled.
+    pub fn statistics(&self) -> String {
+        match self.session_stats() {
+            Some(s) => s.render(10),
+            None => "SystemML Statistics: disabled (set stats_enabled)\n".to_string(),
+        }
+    }
+
+    /// Structured statistics snapshot for programmatic consumers
+    /// (benches, tests), or `None` when statistics are disabled.
+    pub fn stats(&self) -> Option<StatsReport> {
+        self.session_stats().map(|s| s.report())
+    }
+
+    /// Clear the heavy-hitter table and per-worker counters (the trace
+    /// file, if any, keeps appending).
+    pub fn reset_stats(&self) {
+        if let Some(s) = self.session_stats() {
+            s.reset();
+        }
     }
 
     /// Parse, validate, and plan a script without executing (SystemML
@@ -251,8 +293,12 @@ impl MLContext {
     pub fn execute(&self, script: Script) -> Result<Results> {
         let session = self.session.borrow().clone();
         let Compilation { bundle, plan, .. } = self.compile_with_session(&script, &session)?;
-        let mut interp =
-            Interpreter::with_cluster(bundle, self.config.clone(), self.session_cluster());
+        let mut interp = Interpreter::with_cluster_and_stats(
+            bundle,
+            self.config.clone(),
+            self.session_cluster(),
+            self.session_stats(),
+        );
         interp.echo = self.echo;
         if self.config.explain {
             for line in plan.render().lines() {
@@ -263,7 +309,18 @@ impl MLContext {
         // Session values seed the scope; explicit script inputs win.
         let mut scope: Scope = session.into_iter().collect();
         scope.extend(script.inputs.clone());
-        let final_scope = interp.run(scope)?;
+        let run_started = std::time::Instant::now();
+        if let Some(s) = &interp.stats {
+            s.span_open("script", "execute");
+        }
+        let run_result = interp.run(scope);
+        if let Some(s) = &interp.stats {
+            // Balance the script span on success AND failure, then flush
+            // so the trace is readable without dropping the context.
+            s.span_close("script", "execute", run_started.elapsed().as_nanos() as u64);
+            s.flush_trace();
+        }
+        let final_scope = run_result?;
         let mut out = Results { values: HashMap::new(), stdout: interp.output() };
         for name in &script.outputs {
             let v = final_scope.get(name).ok_or_else(|| {

@@ -77,6 +77,17 @@ pub struct SystemConfig {
     pub artifacts_dir: PathBuf,
     /// Print plan/exec-type decisions (SystemML's `-explain`).
     pub explain: bool,
+    /// Collect per-operator / per-worker execution statistics
+    /// (SystemML's `-stats`). When false the stats path is compiled to
+    /// `None` checks only: no locks, no allocation on dispatch hot
+    /// paths. Reports render through `MLContext::statistics()`.
+    pub stats_enabled: bool,
+    /// Optional JSON-lines execution trace. When set, session / script /
+    /// statement / operator spans plus blockify / broadcast / shuffle /
+    /// allreduce / cache / spill / collect events (with byte counts) are
+    /// appended to this file. Implies stats collection for the spans it
+    /// records; deterministic except wall-time fields.
+    pub trace_path: Option<PathBuf>,
 }
 
 impl Default for SystemConfig {
@@ -105,6 +116,8 @@ impl Default for SystemConfig {
             ],
             artifacts_dir: manifest_dir.join("artifacts"),
             explain: false,
+            stats_enabled: false,
+            trace_path: None,
         }
     }
 }
@@ -186,6 +199,14 @@ impl SystemConfigBuilder {
         accel_memory: usize,
         /// Print plan/exec-type decisions.
         explain: bool,
+        /// Collect per-operator / per-worker statistics (`-stats`).
+        stats_enabled: bool,
+    }
+
+    /// Write a JSON-lines execution trace to this path.
+    pub fn trace_path(mut self, p: impl Into<PathBuf>) -> Self {
+        self.config.trace_path = Some(p.into());
+        self
     }
 
     /// Append a directory to the `source("...")` search path.
@@ -249,5 +270,18 @@ mod tests {
         assert_eq!(d.serve_max_batch, 64);
         assert_eq!(d.serve_max_wait_ticks, 8);
         assert_eq!(d.gather_memo_bytes, 4 << 20);
+    }
+
+    #[test]
+    fn stats_knobs_default_off_and_build() {
+        let d = SystemConfig::default();
+        assert!(!d.stats_enabled);
+        assert!(d.trace_path.is_none());
+        let c = SystemConfig::builder()
+            .stats_enabled(true)
+            .trace_path("/tmp/trace.jsonl")
+            .build();
+        assert!(c.stats_enabled);
+        assert_eq!(c.trace_path.as_deref(), Some(std::path::Path::new("/tmp/trace.jsonl")));
     }
 }

@@ -15,7 +15,6 @@ use crate::runtime::matrix::dense::DenseMatrix;
 use crate::runtime::matrix::mult;
 use crate::runtime::matrix::Matrix;
 use crate::util::error::{DmlError, Result};
-use crate::util::metrics;
 
 pub use pool::{avg_pool2d, avg_pool2d_backward, max_pool2d, max_pool2d_backward};
 
@@ -246,7 +245,6 @@ pub fn conv2d_traced(
             }
         }
     }
-    metrics::global().accel_launches.load(std::sync::atomic::Ordering::Relaxed);
     Ok((Matrix::Dense(out).examine_and_convert(), op))
 }
 

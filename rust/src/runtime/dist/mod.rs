@@ -117,6 +117,7 @@ use crate::runtime::matrix::dense::DenseMatrix;
 use crate::runtime::matrix::{reorg, Matrix, SPARSITY_TURN_POINT};
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
+use crate::util::stats::{Stats, WorkerSlot};
 
 /// Ceiling division for block-grid extents.
 #[inline]
@@ -160,6 +161,13 @@ pub struct Cluster {
     cache: BlockCache,
     /// Long-lived worker threads executing block tasks (see [`pool`]).
     pool: pool::WorkerPool,
+    /// Session statistics (`-stats`); `None` means disabled and every
+    /// stats check on the hot paths is a single pointer test.
+    stats: Option<Arc<Stats>>,
+    /// Per-worker utilization slots fetched once from `stats` at
+    /// construction (empty when stats are off), stamped per task by
+    /// [`Cluster::run_tasks`].
+    worker_slots: Vec<Arc<WorkerSlot>>,
 }
 
 impl Cluster {
@@ -222,6 +230,8 @@ impl Cluster {
             live_budget: live_storage,
             cache: BlockCache::new(cache_storage),
             pool: pool::WorkerPool::new(threads.max(1)),
+            stats: None,
+            worker_slots: Vec::new(),
         }
     }
 
@@ -246,6 +256,25 @@ impl Cluster {
         self.sparsity_threshold
     }
 
+    /// Consuming setter wiring the session's statistics object in
+    /// (applied before the cluster is shared behind an `Arc`, like
+    /// [`Cluster::with_sparsity_threshold`]). Fetches the per-worker
+    /// utilization slots once so the per-task stamping path touches
+    /// only atomics the cluster already holds. `None` leaves stats off.
+    pub fn with_stats(mut self, stats: Option<Arc<Stats>>) -> Cluster {
+        self.worker_slots = match &stats {
+            Some(s) => s.worker_slots(self.num_workers),
+            None => Vec::new(),
+        };
+        self.stats = stats;
+        self
+    }
+
+    /// The session statistics object, if stats are enabled.
+    pub fn stats(&self) -> Option<&Arc<Stats>> {
+        self.stats.as_ref()
+    }
+
     pub fn num_workers(&self) -> usize {
         self.num_workers
     }
@@ -262,6 +291,30 @@ impl Cluster {
     /// Public so tests and benches can probe the execution backend
     /// directly (e.g. asserting inline vs pool-thread execution).
     pub fn run_tasks<R: Send + 'static>(&self, tasks: Vec<pool::DistTask<R>>) -> Vec<R> {
+        if self.worker_slots.is_empty() {
+            return self.pool.run_tasks(tasks);
+        }
+        // Stats enabled: stamp each task's wall time and count against
+        // its simulated worker's utilization slot. The stamping runs on
+        // the executing thread (pool worker, or the caller in serial
+        // mode); counts depend only on block placement, so they are
+        // identical across `dist_threads` settings — busy time is wall
+        // time and is not.
+        let tasks = tasks
+            .into_iter()
+            .map(|(worker, f)| {
+                let slot = Arc::clone(&self.worker_slots[worker % self.num_workers]);
+                let timed: Box<dyn FnOnce() -> R + Send + 'static> = Box::new(move || {
+                    let t0 = std::time::Instant::now();
+                    let r = f();
+                    slot.busy_nanos
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    slot.tasks.fetch_add(1, Ordering::Relaxed);
+                    r
+                });
+                (worker, timed)
+            })
+            .collect();
         self.pool.run_tasks(tasks)
     }
 
@@ -277,6 +330,9 @@ impl Cluster {
         let b = BlockedMatrix::from_local_with(m, self.block_size, self.sparsity_threshold)?;
         self.blockify_ops.fetch_add(1, Ordering::Relaxed);
         metrics::global().blockify_ops.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = &self.stats {
+            s.event("blockify", b.size_in_bytes() as u64);
+        }
         Ok(b)
     }
 
@@ -294,6 +350,9 @@ impl Cluster {
     pub fn collect(&self, b: &BlockedMatrix) -> Result<Matrix> {
         self.collects.fetch_add(1, Ordering::Relaxed);
         metrics::global().dist_collects.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = &self.stats {
+            s.event("collect", b.size_in_bytes() as u64);
+        }
         b.to_local()
     }
 
@@ -433,12 +492,18 @@ impl Cluster {
         let total = bytes * self.num_workers as u64;
         self.broadcast_bytes.fetch_add(total, Ordering::Relaxed);
         metrics::global().add_broadcast(total);
+        if let Some(s) = &self.stats {
+            s.event("broadcast", total);
+        }
     }
 
     /// Record `bytes` moved through a shuffle.
     pub(crate) fn record_shuffle(&self, bytes: u64) {
         self.shuffle_bytes.fetch_add(bytes, Ordering::Relaxed);
         metrics::global().add_shuffle(bytes);
+        if let Some(s) = &self.stats {
+            s.event("shuffle", bytes);
+        }
     }
 
     /// Record a modeled tree-allreduce of a `bytes`-sized result:
@@ -459,6 +524,9 @@ impl Cluster {
         g.allreduce_rounds.fetch_add(rounds, Ordering::Relaxed);
         g.allreduce_bytes.fetch_add(total, Ordering::Relaxed);
         g.add_shuffle(total);
+        if let Some(s) = &self.stats {
+            s.event("allreduce", total);
+        }
     }
 
     /// Tree-allreduce reduction rounds executed since the last reset.
@@ -726,6 +794,9 @@ impl HandleInner {
                 cluster.cache.unreserve(self.charged_bytes());
                 cluster.spills.fetch_add(1, Ordering::Relaxed);
                 metrics::global().dist_spills.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = &cluster.stats {
+                    s.event("spill", self.charged_bytes() as u64);
+                }
                 true
             }
             None => false,

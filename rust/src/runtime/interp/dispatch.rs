@@ -43,6 +43,7 @@ use crate::runtime::matrix::agg::{self, AggOp};
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
 use crate::runtime::matrix::{mult, reorg, Matrix};
 use crate::util::error::{DmlError, Result};
+use crate::util::metrics;
 
 /// A matrix operand as the dispatch layer sees it: driver-resident, or a
 /// live blocked value whose metadata (dims/nnz/bytes) is available
@@ -149,11 +150,68 @@ fn gather_blocked_rhs(h: &BlockedHandle, memo_cap: usize) -> Result<(Cow<'_, Mat
     }
 }
 
+/// In-flight measurement of one dispatched operator: the baselines its
+/// deltas are computed against. Created by [`Interpreter::op_begin`]
+/// (`None` when stats are off — the zero-cost path) and consumed by
+/// [`Interpreter::op_end`] on each success branch; error paths drop the
+/// probe, so failed operators never pollute the heavy-hitter table.
+pub(crate) struct OpProbe {
+    op: String,
+    t0: std::time::Instant,
+    flops0: u64,
+    comm0: u64,
+}
+
+/// SystemML's `CP`/`SP` instruction prefix for the heavy-hitter table.
+fn exec_str(e: ExecType) -> &'static str {
+    match e {
+        ExecType::CP => "CP",
+        ExecType::Dist => "DIST",
+        ExecType::Accel => "ACCEL",
+    }
+}
+
 impl Interpreter {
     fn cluster_ref(&self) -> Result<&Arc<Cluster>> {
         self.cluster
             .as_ref()
             .ok_or_else(|| DmlError::rt("distributed backend unavailable"))
+    }
+
+    /// Open an operator probe (and its trace span). The opcode closure
+    /// runs only when stats are on, so the disabled path allocates
+    /// nothing and costs a single pointer check.
+    #[inline]
+    pub(crate) fn op_begin<F: FnOnce() -> String>(&self, op: F) -> Option<OpProbe> {
+        let stats = self.stats.as_ref()?;
+        let op = op();
+        stats.span_open("operator", &op);
+        Some(OpProbe {
+            op,
+            t0: std::time::Instant::now(),
+            flops0: metrics::global().flops.load(std::sync::atomic::Ordering::Relaxed),
+            comm0: self.cluster.as_ref().map_or(0, |c| c.comm_bytes()),
+        })
+    }
+
+    /// Close an operator probe: record invocation count, wall time, FLOP
+    /// and communication deltas under `(opcode, position, exec type)`.
+    /// All deltas except wall time are taken from driver-side accounting
+    /// after the (barriered) op completed, so they are byte-identical
+    /// across `dist_threads` settings.
+    pub(crate) fn op_end(&self, probe: Option<OpProbe>, pos: Option<Pos>, exec: ExecType) {
+        let (Some(p), Some(stats)) = (probe, self.stats.as_ref()) else {
+            return;
+        };
+        let nanos = p.t0.elapsed().as_nanos() as u64;
+        let flops = metrics::global()
+            .flops
+            .load(std::sync::atomic::Ordering::Relaxed)
+            .saturating_sub(p.flops0);
+        let comm =
+            self.cluster.as_ref().map_or(0, |c| c.comm_bytes()).saturating_sub(p.comm0);
+        let pos = pos.map_or_else(|| "-".to_string(), |p| format!("{}:{}", p.line, p.col));
+        stats.record_op(&p.op, &pos, exec_str(exec), nanos, flops, comm);
     }
 
     /// Resolve the execution type for one heavy operator instance.
@@ -241,6 +299,10 @@ impl Interpreter {
         side: &str,
     ) -> Result<(Arc<BlockedMatrix>, CacheOutcome)> {
         let (blocked, outcome) = cluster.acquire_blocked(hint, m)?;
+        if let Some(stats) = &self.stats {
+            let kind = if outcome.is_hit() { "cache_hit" } else { "cache_miss" };
+            stats.event(kind, blocked.size_in_bytes() as u64);
+        }
         if self.config.explain {
             match &outcome {
                 CacheOutcome::Hit { key } => self.emit(format!(
@@ -401,6 +463,7 @@ impl Interpreter {
         ha: Option<&LineageRef>,
         hb: Option<&LineageRef>,
     ) -> Result<Value> {
+        let probe = self.op_begin(|| "ba+*".to_string());
         // Accelerator first: compiled artifacts handle specific shapes
         // (driver-resident operands only — blocked data stays cluster-side).
         if let (Operand::Driver(am), Operand::Driver(bm), Some(accel)) =
@@ -417,6 +480,7 @@ impl Interpreter {
                         self.config.accel_memory
                     ));
                 }
+                self.op_end(probe, pos, ExecType::Accel);
                 return Ok(Value::Matrix(out));
             }
         }
@@ -440,15 +504,22 @@ impl Interpreter {
                 let resident = dist_ops::Residency { lhs: ra, rhs: rb };
                 let allreduce = dist_ops::is_allreduce_matmult(&ab, &bb);
                 let out = dist_ops::matmult_blocked_reuse(cluster, &ab, &bb, resident)?;
-                if allreduce {
+                let bound = if allreduce {
                     // Gradient-shaped product (t(X) %*% dout): the k
                     // partials tree-allreduce into a single block that
                     // stays replicated on the workers.
-                    return self.bind_replicated_result(cluster, Arc::new(out));
-                }
-                self.bind_dist_result(cluster, Arc::new(out))
+                    self.bind_replicated_result(cluster, Arc::new(out))
+                } else {
+                    self.bind_dist_result(cluster, Arc::new(out))
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(mult::matmult(a.force()?, b.force()?)?)),
+            _ => {
+                let out = mult::matmult(a.force()?, b.force()?)?;
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -507,9 +578,10 @@ impl Interpreter {
     ) -> Result<Value> {
         if a.shape() != b.shape() {
             // Broadcasting pair (1x1 / row-vector / col-vector rhs):
-            // map-side broadcast join on DIST placements.
+            // map-side broadcast join on DIST placements (probed there).
             return self.binary_broadcast_operands(a, b, op, pos, ha, hb);
         }
+        let probe = self.op_begin(|| format!("b({op:?})"));
         let est =
             estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), a.rows(), a.cols());
         let tag = if a.plans_sparse() || b.plans_sparse() { " SPARSE" } else { "" };
@@ -527,12 +599,19 @@ impl Interpreter {
                 let (ab, _) = self.acquire_operand(cluster, &a, ha, "lhs")?;
                 let (bb, _) = self.acquire_operand(cluster, &b, hb, "rhs")?;
                 let out = dist_ops::binary_blocked(cluster, &ab, &bb, op)?;
-                if replicated_in && out.block_rows() * out.block_cols() <= 1 {
-                    return self.bind_replicated_result(cluster, Arc::new(out));
-                }
-                self.bind_dist_result(cluster, Arc::new(out))
+                let bound = if replicated_in && out.block_rows() * out.block_cols() <= 1 {
+                    self.bind_replicated_result(cluster, Arc::new(out))
+                } else {
+                    self.bind_dist_result(cluster, Arc::new(out))
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
+            _ => {
+                let out = elementwise::binary(a.force()?, b.force()?, op)?;
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -555,6 +634,7 @@ impl Interpreter {
         hb: Option<&LineageRef>,
     ) -> Result<Value> {
         let ((lr, lc), (rr, rc)) = (a.shape(), b.shape());
+        let probe = self.op_begin(|| format!("b({op:?})"));
         // 1x1 rhs promotion (the CP kernel's scalar broadcast).
         if (rr, rc) == (1, 1) && (lr, lc) != (1, 1) {
             let s = b.force()?.get(0, 0);
@@ -562,13 +642,18 @@ impl Interpreter {
                 Operand::Handle(h) => {
                     let cluster = h.cluster();
                     let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, false)?;
-                    if h.is_replicated() {
-                        return self.bind_replicated_result(cluster, Arc::new(out));
-                    }
-                    self.bind_dist_result(cluster, Arc::new(out))
+                    let bound = if h.is_replicated() {
+                        self.bind_replicated_result(cluster, Arc::new(out))
+                    } else {
+                        self.bind_dist_result(cluster, Arc::new(out))
+                    };
+                    self.op_end(probe, pos, ExecType::Dist);
+                    bound
                 }
                 Operand::Driver(m) => {
-                    Ok(Value::Matrix(elementwise::scalar_op(m, s, op, false)?))
+                    let out = elementwise::scalar_op(m, s, op, false)?;
+                    self.op_end(probe, pos, ExecType::CP);
+                    Ok(Value::Matrix(out))
                 }
             };
         }
@@ -577,7 +662,9 @@ impl Interpreter {
         if !(col || row) {
             // True mismatch (or a vector lhs, which the CP kernel also
             // rejects): the kernel raises the canonical DimMismatch.
-            return Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?));
+            let out = elementwise::binary(a.force()?, b.force()?, op)?;
+            self.op_end(probe, pos, ExecType::CP);
+            return Ok(Value::Matrix(out));
         }
         let est =
             estimate::binary_mem_parts(a.size_in_bytes(), b.size_in_bytes(), lr, lc);
@@ -620,14 +707,21 @@ impl Interpreter {
                 }
                 let out =
                     dist_ops::binary_broadcast_blocked(cluster, &ab, vm.as_ref(), op, v_resident)?;
-                if matches!(&a, Operand::Handle(h) if h.is_replicated())
+                let bound = if matches!(&a, Operand::Handle(h) if h.is_replicated())
                     && out.block_rows() * out.block_cols() <= 1
                 {
-                    return self.bind_replicated_result(cluster, Arc::new(out));
-                }
-                self.bind_dist_result(cluster, Arc::new(out))
+                    self.bind_replicated_result(cluster, Arc::new(out))
+                } else {
+                    self.bind_dist_result(cluster, Arc::new(out))
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(elementwise::binary(a.force()?, b.force()?, op)?)),
+            _ => {
+                let out = elementwise::binary(a.force()?, b.force()?, op)?;
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -641,34 +735,50 @@ impl Interpreter {
         op: BinOp,
         swapped: bool,
     ) -> Result<Value> {
+        let probe = self.op_begin(|| format!("s({op:?})"));
         match v {
             Value::Blocked(h) => {
                 let cluster = h.cluster();
                 let out = dist_ops::scalar_blocked(cluster, &h.blocked()?, s, op, swapped)?;
-                if h.is_replicated() {
+                let bound = if h.is_replicated() {
                     // lr * dW on replicated gradient state: a per-block
                     // map on every worker's copy — stays replicated.
-                    return self.bind_replicated_result(cluster, Arc::new(out));
-                }
-                self.bind_dist_result(cluster, Arc::new(out))
+                    self.bind_replicated_result(cluster, Arc::new(out))
+                } else {
+                    self.bind_dist_result(cluster, Arc::new(out))
+                };
+                self.op_end(probe, None, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(elementwise::scalar_op(v.as_matrix()?, s, op, swapped)?)),
+            _ => {
+                let out = elementwise::scalar_op(v.as_matrix()?, s, op, swapped)?;
+                self.op_end(probe, None, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
     /// Unary cellwise op (exp, sqrt, neg, ...). Blocked operands map
     /// over resident blocks; driver matrices stay CP.
     pub fn dispatch_unary_value(&self, v: &Value, op: UnaryOp) -> Result<Value> {
+        let probe = self.op_begin(|| format!("u({op:?})"));
         match v {
             Value::Blocked(h) => {
                 let cluster = h.cluster();
                 let out = dist_ops::unary_blocked(cluster, &h.blocked()?, op);
-                if h.is_replicated() {
-                    return self.bind_replicated_result(cluster, Arc::new(out));
-                }
-                self.bind_dist_result(cluster, Arc::new(out))
+                let bound = if h.is_replicated() {
+                    self.bind_replicated_result(cluster, Arc::new(out))
+                } else {
+                    self.bind_dist_result(cluster, Arc::new(out))
+                };
+                self.op_end(probe, None, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(elementwise::unary(v.as_matrix()?, op))),
+            _ => {
+                let out = elementwise::unary(v.as_matrix()?, op);
+                self.op_end(probe, None, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -687,6 +797,7 @@ impl Interpreter {
         hint: Option<&LineageRef>,
     ) -> Result<Value> {
         let a = Operand::of(v)?;
+        let probe = self.op_begin(|| "r(t)".to_string());
         let est = a.size_in_bytes()
             + estimate::estimate_size(a.cols(), a.rows(), a.sparsity());
         let tag = if a.plans_sparse() { " SPARSE" } else { "" };
@@ -694,13 +805,14 @@ impl Interpreter {
         match self.resolve_exec(OpKind::Reorg, pos, est, &desc, a.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
-                match &a {
+                let bound = match &a {
                     Operand::Handle(h) => {
                         let out = dist_ops::transpose_blocked(cluster, &h.blocked()?);
                         if h.is_replicated() {
-                            return self.bind_replicated_result(cluster, Arc::new(out));
+                            self.bind_replicated_result(cluster, Arc::new(out))
+                        } else {
+                            self.bind_dist_result(cluster, Arc::new(out))
                         }
-                        self.bind_dist_result(cluster, Arc::new(out))
                     }
                     Operand::Driver(m) => {
                         let derived = hint.map(|h| {
@@ -717,9 +829,10 @@ impl Interpreter {
                         // That over-counts shared storage in the
                         // conservative direction — at worst an early
                         // spill, never an overrun.
+                        // Base guard-verified at this version: the
+                        // derived transpose (if resident) is valid.
+                        let mut reused = None;
                         if outcome.is_hit() {
-                            // Base guard-verified at this version: the
-                            // derived transpose (if resident) is valid.
                             if let Some(d) = &derived {
                                 if let Some(tb) = cluster.cache().get_keyed(d) {
                                     if self.config.explain {
@@ -728,19 +841,31 @@ impl Interpreter {
                                             d.render()
                                         ));
                                     }
-                                    return self.bind_dist_result(cluster, tb);
+                                    reused = Some(tb);
                                 }
                             }
                         }
-                        let out = Arc::new(dist_ops::transpose_blocked(cluster, &xb));
-                        if let Some(d) = &derived {
-                            cluster.cache().put_keyed(d, out.clone());
+                        match reused {
+                            Some(tb) => self.bind_dist_result(cluster, tb),
+                            None => {
+                                let out =
+                                    Arc::new(dist_ops::transpose_blocked(cluster, &xb));
+                                if let Some(d) = &derived {
+                                    cluster.cache().put_keyed(d, out.clone());
+                                }
+                                self.bind_dist_result(cluster, out)
+                            }
                         }
-                        self.bind_dist_result(cluster, out)
                     }
-                }
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(reorg::transpose(a.force()?))),
+            _ => {
+                let out = reorg::transpose(a.force()?);
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -772,6 +897,7 @@ impl Interpreter {
         if ru > r || cu > c || rl >= ru || cl >= cu {
             return Err(reorg::slice_range_error(rl, ru, cl, cu, r, c));
         }
+        let probe = self.op_begin(|| "rix".to_string());
         // The slice inherits the base's sparsity estimate (the planner's
         // rix rule): a slice of a sparse operand is costed at CSR bytes.
         let est = a.size_in_bytes()
@@ -793,7 +919,7 @@ impl Interpreter {
                         if selection { "aligned, shuffle-free" } else { "realigned" }
                     ));
                 }
-                match &a {
+                let bound = match &a {
                     Operand::Handle(h) => {
                         let out = dist_ops::slice_blocked(cluster, &h.blocked()?, rl, ru, cl, cu)?;
                         self.bind_dist_result(cluster, Arc::new(out))
@@ -807,9 +933,10 @@ impl Interpreter {
                             )
                         });
                         let (xb, outcome) = self.cache_acquire(cluster, hint, m, "base")?;
+                        // Base guard-verified at this version: a
+                        // resident derived slice is valid.
+                        let mut reused = None;
                         if outcome.is_hit() {
-                            // Base guard-verified at this version: a
-                            // resident derived slice is valid.
                             if let Some(d) = &derived {
                                 if let Some(sb) = cluster.cache().get_keyed(d) {
                                     if self.config.explain {
@@ -818,20 +945,32 @@ impl Interpreter {
                                             d.render()
                                         ));
                                     }
-                                    return self.bind_dist_result(cluster, sb);
+                                    reused = Some(sb);
                                 }
                             }
                         }
-                        let out =
-                            Arc::new(dist_ops::slice_blocked(cluster, &xb, rl, ru, cl, cu)?);
-                        if let Some(d) = &derived {
-                            cluster.cache().put_keyed(d, out.clone());
+                        match reused {
+                            Some(sb) => self.bind_dist_result(cluster, sb),
+                            None => {
+                                let out = Arc::new(dist_ops::slice_blocked(
+                                    cluster, &xb, rl, ru, cl, cu,
+                                )?);
+                                if let Some(d) = &derived {
+                                    cluster.cache().put_keyed(d, out.clone());
+                                }
+                                self.bind_dist_result(cluster, out)
+                            }
                         }
-                        self.bind_dist_result(cluster, out)
                     }
-                }
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
-            _ => Ok(Value::Matrix(reorg::slice(a.force()?, rl, ru, cl, cu)?)),
+            _ => {
+                let out = reorg::slice(a.force()?, rl, ru, cl, cu)?;
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
+            }
         }
     }
 
@@ -874,6 +1013,7 @@ impl Interpreter {
                 )));
             }
         }
+        let probe = self.op_begin(|| "lix".to_string());
         // The patch region is costed at the target's sparsity: rewriting
         // a sparse target moves CSR-sized blocks, not dense ones.
         let est = a
@@ -923,7 +1063,9 @@ impl Interpreter {
                         rhs.as_double()?,
                     )?
                 };
-                self.bind_dist_result(cluster, Arc::new(out))
+                let bound = self.bind_dist_result(cluster, Arc::new(out));
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
             _ => {
                 let src: Matrix = match rhs {
@@ -932,7 +1074,9 @@ impl Interpreter {
                         Matrix::filled(region.0, region.1, other.as_double()?).into_dense_format()
                     }
                 };
-                Ok(Value::Matrix(reorg::left_index(a.force()?, rl, cl, &src)?))
+                let out = reorg::left_index(a.force()?, rl, cl, &src)?;
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
             }
         }
     }
@@ -941,9 +1085,18 @@ impl Interpreter {
     /// argmaxes on the workers and combines offsets at the driver — the
     /// rows×1 output returns with the job, not as a collect.
     pub fn dispatch_row_index_max(&self, v: &Value) -> Result<Matrix> {
+        let probe = self.op_begin(|| "uarimax".to_string());
         match v {
-            Value::Blocked(h) => dist_ops::row_index_max_blocked(h.cluster(), &h.blocked()?),
-            _ => Ok(agg::row_index_max(v.as_matrix()?)),
+            Value::Blocked(h) => {
+                let out = dist_ops::row_index_max_blocked(h.cluster(), &h.blocked()?)?;
+                self.op_end(probe, None, ExecType::Dist);
+                Ok(out)
+            }
+            _ => {
+                let out = agg::row_index_max(v.as_matrix()?);
+                self.op_end(probe, None, ExecType::CP);
+                Ok(out)
+            }
         }
     }
 
@@ -1009,6 +1162,7 @@ impl Interpreter {
         let a = Operand::of(x)?;
         let aux_op = aux.map(Operand::of).transpose()?;
         let name = op.name();
+        let probe = self.op_begin(|| name.to_string());
         if aux_op.is_none() && !matches!(op, ConvOpKind::MaxPool | ConvOpKind::AvgPool) {
             return Err(DmlError::rt(format!("{name}: missing matrix operand")));
         }
@@ -1055,6 +1209,7 @@ impl Interpreter {
                 (&a, &aux_op, &self.accel)
             {
                 if let Some(out) = accel.try_conv2d(xm, fm, sh)? {
+                    self.op_end(probe, pos, ExecType::Accel);
                     return Ok(Value::Matrix(out));
                 }
             }
@@ -1129,8 +1284,11 @@ impl Interpreter {
                         let bs = cluster.block_size;
                         if grad.rows() <= bs && grad.cols() <= bs {
                             let gb = BlockedMatrix::from_local(&grad, bs)?;
-                            return self.bind_replicated_result(cluster, Arc::new(gb));
+                            let bound = self.bind_replicated_result(cluster, Arc::new(gb));
+                            self.op_end(probe, pos, ExecType::Dist);
+                            return bound;
                         }
+                        self.op_end(probe, pos, ExecType::Dist);
                         return Ok(Value::Matrix(grad));
                     }
                     ConvOpKind::MaxPool => dist_nn::max_pool_blocked(cluster, &xb, sh)?,
@@ -1149,7 +1307,9 @@ impl Interpreter {
                         }
                     }
                 };
-                self.bind_dist_result(cluster, Arc::new(out))
+                let bound = self.bind_dist_result(cluster, Arc::new(out));
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
             }
             _ => {
                 let xm = a.force()?;
@@ -1157,7 +1317,7 @@ impl Interpreter {
                     Some(o) => Some(o.force()?),
                     None => None,
                 };
-                Ok(Value::Matrix(match op {
+                let out = match op {
                     ConvOpKind::Conv2d => conv::conv2d(xm, auxm.unwrap(), sh)?,
                     ConvOpKind::Conv2dBackwardFilter => {
                         conv::conv2d_backward_filter(xm, auxm.unwrap(), sh)?
@@ -1173,7 +1333,9 @@ impl Interpreter {
                     ConvOpKind::AvgPoolBackward => {
                         conv::avg_pool2d_backward(xm, auxm.unwrap(), sh)?
                     }
-                }))
+                };
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(Value::Matrix(out))
             }
         }
     }
@@ -1193,6 +1355,8 @@ impl Interpreter {
         mul: bool,
         hint: Option<&LineageRef>,
     ) -> Result<Value> {
+        let probe =
+            self.op_begin(|| if mul { "bias_multiply" } else { "bias_add" }.to_string());
         match v {
             Value::Blocked(h) => {
                 let cluster = h.cluster();
@@ -1205,16 +1369,20 @@ impl Interpreter {
                     mul,
                     resident,
                 )?;
-                self.bind_dist_result(cluster, Arc::new(out))
+                let bound = self.bind_dist_result(cluster, Arc::new(out));
+                self.op_end(probe, None, ExecType::Dist);
+                bound
             }
             _ => {
                 let m = v.as_matrix()?;
                 let b = bias.as_matrix()?;
-                Ok(Value::Matrix(if mul {
+                let out = if mul {
                     conv::bias_multiply(m, b, b.rows())?
                 } else {
                     conv::bias_add(m, b, b.rows())?
-                }))
+                };
+                self.op_end(probe, None, ExecType::CP);
+                Ok(Value::Matrix(out))
             }
         }
     }
@@ -1256,15 +1424,22 @@ impl Interpreter {
         pos: Option<Pos>,
         hint: Option<&LineageRef>,
     ) -> Result<f64> {
+        let probe = self.op_begin(|| format!("ua({})", agg_name(op)));
         let est = m.size_in_bytes() + estimate::dense_size(1, 1);
         let desc = format!("ua({}) ({}x{})", agg_name(op), m.rows(), m.cols());
         match self.resolve_exec(OpKind::Agg, pos, est, &desc, m.is_blocked())? {
             ExecType::Dist => {
                 let cluster = self.cluster_ref()?;
                 let (mb, _) = self.acquire_operand(cluster, &m, hint, "arg")?;
-                Ok(dist_ops::full_agg_blocked(cluster, &mb, op))
+                let out = dist_ops::full_agg_blocked(cluster, &mb, op);
+                self.op_end(probe, pos, ExecType::Dist);
+                Ok(out)
             }
-            _ => Ok(agg::full_agg(m.force()?, op)),
+            _ => {
+                let out = agg::full_agg(m.force()?, op);
+                self.op_end(probe, pos, ExecType::CP);
+                Ok(out)
+            }
         }
     }
 
@@ -1324,6 +1499,7 @@ impl Interpreter {
         };
         let est = m.size_in_bytes() + out;
         let dir = if row_wise { "uar" } else { "uac" };
+        let probe = self.op_begin(|| format!("{dir}({})", agg_name(op)));
         let desc = format!("{dir}({}) ({}x{})", agg_name(op), m.rows(), m.cols());
         match self.resolve_exec(OpKind::Agg, pos, est, &desc, m.is_blocked())? {
             ExecType::Dist => {
@@ -1335,21 +1511,28 @@ impl Interpreter {
                     dist_ops::col_agg_blocked(cluster, &mb, op)?
                 };
                 let bs = cluster.block_size;
-                if out.rows() <= bs && out.cols() <= bs {
+                let bound = if out.rows() <= bs && out.cols() <= bs {
                     // Single-block aggregate: the per-block partials are
                     // combined via tree-allreduce and the vector stays
                     // replicated on the workers (the bias-update case).
                     cluster.record_allreduce(out.size_in_bytes() as u64);
                     let ob = BlockedMatrix::from_local(&out, bs)?;
-                    return self.bind_replicated_result(cluster, Arc::new(ob));
-                }
+                    self.bind_replicated_result(cluster, Arc::new(ob))
+                } else {
+                    Ok(Value::Matrix(out))
+                };
+                self.op_end(probe, pos, ExecType::Dist);
+                bound
+            }
+            _ => {
+                let out = if row_wise {
+                    agg::row_agg(m.force()?, op)
+                } else {
+                    agg::col_agg(m.force()?, op)
+                };
+                self.op_end(probe, pos, ExecType::CP);
                 Ok(Value::Matrix(out))
             }
-            _ => Ok(Value::Matrix(if row_wise {
-                agg::row_agg(m.force()?, op)
-            } else {
-                agg::col_agg(m.force()?, op)
-            })),
         }
     }
 }

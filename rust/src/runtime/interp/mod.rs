@@ -21,6 +21,7 @@ use crate::runtime::dist::cache::LineageRef;
 use crate::runtime::matrix::elementwise::{self, BinOp, UnaryOp};
 use crate::util::error::{DmlError, Result};
 use crate::util::metrics;
+use crate::util::stats::Stats;
 pub use value::Value;
 
 /// Variable scope (one frame; DML functions do not close over callers).
@@ -49,6 +50,9 @@ pub struct Interpreter {
     pub lineage: Arc<lineage::LineageTable>,
     /// Accelerator backend handle (PJRT), if enabled.
     pub accel: Option<Arc<crate::runtime::accel::AccelBackend>>,
+    /// Execution statistics / trace registry (SystemML `-stats`); `None`
+    /// when both stats knobs are off — the zero-cost disabled path.
+    pub stats: Option<Arc<Stats>>,
 }
 
 /// Per-execution context: current namespace (for bare-call resolution in
@@ -66,6 +70,16 @@ pub struct Ctx {
 /// between scripts) and hand it to each interpreter via
 /// [`Interpreter::with_cluster`].
 pub fn build_cluster(config: &SystemConfig) -> Option<Arc<crate::runtime::dist::Cluster>> {
+    build_cluster_with_stats(config, None)
+}
+
+/// [`build_cluster`] with the session's statistics registry attached:
+/// the cluster stamps per-worker task time against `stats` and emits
+/// blockify / broadcast / shuffle / allreduce / spill trace events.
+pub fn build_cluster_with_stats(
+    config: &SystemConfig,
+    stats: Option<Arc<Stats>>,
+) -> Option<Arc<crate::runtime::dist::Cluster>> {
     if !config.dist_enabled {
         return None;
     }
@@ -91,32 +105,56 @@ pub fn build_cluster(config: &SystemConfig) -> Option<Arc<crate::runtime::dist::
             storage,
             threads,
         )
-        .with_sparsity_threshold(config.sparsity_threshold),
+        .with_sparsity_threshold(config.sparsity_threshold)
+        .with_stats(stats),
     ))
 }
 
 impl Interpreter {
     pub fn new(bundle: Bundle, config: SystemConfig) -> Self {
-        let cluster = build_cluster(&config);
-        Interpreter::assemble(bundle, config, cluster)
+        let stats = Stats::from_config(&config);
+        let cluster = build_cluster_with_stats(&config, stats.clone());
+        Interpreter::assemble(bundle, config, cluster, stats)
     }
 
     /// Like [`Interpreter::new`], but executing against a caller-owned
     /// cluster (the session-persistent MLContext path): blocked values
     /// bound on `cluster` by earlier scripts stay resident and can be
-    /// passed in as inputs with zero blockify/collect cost.
+    /// passed in as inputs with zero blockify/collect cost. The stats
+    /// registry is inherited from the cluster (keeping the session's
+    /// heavy-hitter table accumulating across scripts); a stats-less
+    /// cluster falls back to the config knobs.
     pub fn with_cluster(
         bundle: Bundle,
         config: SystemConfig,
         cluster: Option<Arc<crate::runtime::dist::Cluster>>,
     ) -> Self {
-        Interpreter::assemble(bundle, config, cluster)
+        let stats = match &cluster {
+            Some(c) => c.stats().cloned(),
+            None => Stats::from_config(&config),
+        };
+        Interpreter::assemble(bundle, config, cluster, stats)
+    }
+
+    /// [`Interpreter::with_cluster`] with an explicit stats registry:
+    /// the MLContext owns ONE session-wide [`Stats`] and hands it to
+    /// every interpreter, so the heavy-hitter table keeps accumulating
+    /// across scripts even when the distributed backend is off (and no
+    /// second trace file is ever opened).
+    pub fn with_cluster_and_stats(
+        bundle: Bundle,
+        config: SystemConfig,
+        cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+        stats: Option<Arc<Stats>>,
+    ) -> Self {
+        Interpreter::assemble(bundle, config, cluster, stats)
     }
 
     fn assemble(
         bundle: Bundle,
         config: SystemConfig,
         cluster: Option<Arc<crate::runtime::dist::Cluster>>,
+        stats: Option<Arc<Stats>>,
     ) -> Self {
         let accel = if config.accel_enabled {
             crate::runtime::accel::AccelBackend::open(&config)
@@ -138,6 +176,7 @@ impl Interpreter {
             cluster,
             lineage: Arc::new(lineage::LineageTable::default()),
             accel,
+            stats,
         }
     }
 
@@ -176,6 +215,20 @@ impl Interpreter {
 
     pub fn exec_stmt(&self, stmt: &Stmt, scope: &mut Scope, ctx: &Ctx) -> Result<()> {
         metrics::global().instructions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match &self.stats {
+            Some(s) if s.trace_enabled() => {
+                let kind = stmt_kind(stmt);
+                s.span_open("statement", kind);
+                let t0 = std::time::Instant::now();
+                let r = self.exec_stmt_inner(stmt, scope, ctx);
+                s.span_close("statement", kind, t0.elapsed().as_nanos() as u64);
+                r
+            }
+            _ => self.exec_stmt_inner(stmt, scope, ctx),
+        }
+    }
+
+    fn exec_stmt_inner(&self, stmt: &Stmt, scope: &mut Scope, ctx: &Ctx) -> Result<()> {
         match stmt {
             Stmt::Assign { target, value, pos } => {
                 let v = self.eval(value, scope, ctx)?;
@@ -661,6 +714,19 @@ impl Interpreter {
             out.push(v);
         }
         Ok(out)
+    }
+}
+
+/// Trace-span name of a statement kind.
+fn stmt_kind(stmt: &Stmt) -> &'static str {
+    match stmt {
+        Stmt::Assign { .. } => "assign",
+        Stmt::MultiAssign { .. } => "multi_assign",
+        Stmt::If { .. } => "if",
+        Stmt::For { .. } => "for",
+        Stmt::ParFor { .. } => "parfor",
+        Stmt::While { .. } => "while",
+        Stmt::ExprStmt { .. } => "expr",
     }
 }
 

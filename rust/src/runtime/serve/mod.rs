@@ -225,9 +225,16 @@ impl ScoreService {
     /// row-independent, so each returned row is exactly what the request
     /// alone would have produced.
     pub fn score_batch(&self, rows: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        Ok(self.score_batch_timed(rows)?.0)
+    }
+
+    /// [`ScoreService::score_batch`] plus the batch's wall-clock phase
+    /// split (execute vs scatter) for latency attribution.
+    pub fn score_batch_timed(&self, rows: &[Vec<f64>]) -> Result<(Vec<Vec<f64>>, BatchPhases)> {
+        let t0 = std::time::Instant::now();
         let n = rows.len();
         if n == 0 {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), BatchPhases::default()));
         }
         for (i, r) in rows.iter().enumerate() {
             if r.len() != self.features {
@@ -258,10 +265,17 @@ impl ScoreService {
                 self.output
             ))
         })?;
+        let t1 = std::time::Instant::now();
         let out = self.scatter(scores, n)?;
+        let t2 = std::time::Instant::now();
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.rows_scored.fetch_add(n as u64, Ordering::Relaxed);
-        Ok(out)
+        let phases = BatchPhases {
+            exec_nanos: t1.duration_since(t0).as_nanos() as u64,
+            scatter_nanos: t2.duration_since(t1).as_nanos() as u64,
+            total_nanos: t2.duration_since(t0).as_nanos() as u64,
+        };
+        Ok((out, phases))
     }
 
     /// Per-request scatter: slice row `r` of the scores value for each
@@ -321,6 +335,37 @@ impl ScoreService {
     }
 }
 
+/// Wall-clock phase split of one scored micro-batch. The three fields
+/// are integer-nano differences over the same boundary instants, so
+/// `total_nanos == exec_nanos + scatter_nanos` holds exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchPhases {
+    /// Forward-pass time: padding, blockify, and the blocked run.
+    pub exec_nanos: u64,
+    /// Per-request scatter time (response rows off the resident blocks).
+    pub scatter_nanos: u64,
+    /// The batch end to end.
+    pub total_nanos: u64,
+}
+
+/// Per-request latency attribution: where each request's end-to-end
+/// latency went. Queue wait is simulated (deterministic per seed); the
+/// two wall phases are those of the carrying batch, and
+/// `exec_nanos + scatter_nanos == total_nanos` exactly (see
+/// [`BatchPhases`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestPhases {
+    /// Simulated ticks spent queued before the carrying batch flushed
+    /// (`flush_tick - arrival_tick` — identical to `latency_ticks`).
+    pub queue_ticks: u64,
+    /// Wall nanos of the carrying batch's forward pass.
+    pub exec_nanos: u64,
+    /// Wall nanos of the carrying batch's scatter.
+    pub scatter_nanos: u64,
+    /// Wall nanos of the carrying batch end to end.
+    pub total_nanos: u64,
+}
+
 /// End-to-end result of [`run_simulation`], indexed by request id.
 #[derive(Debug)]
 pub struct ServingReport {
@@ -338,6 +383,9 @@ pub struct ServingReport {
     /// Total wall-clock seconds spent executing batches (summed across
     /// in-flight groups; the sustained-throughput denominator).
     pub exec_secs: f64,
+    /// Latency attribution per request: queue wait vs execute vs
+    /// scatter (see [`RequestPhases`]).
+    pub phases: Vec<RequestPhases>,
 }
 
 impl ServingReport {
@@ -417,17 +465,18 @@ pub fn run_simulation(
     let mut scores: Vec<Option<Vec<f64>>> = (0..requests).map(|_| None).collect();
     let mut latency_ticks = vec![0u64; requests];
     let mut wall_secs = vec![0f64; requests];
+    let mut phases = vec![RequestPhases::default(); requests];
     let mut exec_secs = 0f64;
     for group in batches.chunks(inflight.max(1)) {
         let group_start = std::time::Instant::now();
-        let results: Vec<(Result<Vec<Vec<f64>>>, f64)> = run_scoped(
+        let results: Vec<(Result<(Vec<Vec<f64>>, BatchPhases)>, f64)> = run_scoped(
             group
                 .iter()
                 .map(|b| {
                     let rows: Vec<Vec<f64>> = b.requests.iter().map(|r| r.row.clone()).collect();
                     move || {
                         let start = std::time::Instant::now();
-                        let out = service.score_batch(&rows);
+                        let out = service.score_batch_timed(&rows);
                         (out, start.elapsed().as_secs_f64())
                     }
                 })
@@ -435,12 +484,18 @@ pub fn run_simulation(
         );
         exec_secs += group_start.elapsed().as_secs_f64();
         for (batch, (result, batch_secs)) in group.iter().zip(results) {
-            let rows = result?;
+            let (rows, bp) = result?;
             for (req, row) in batch.requests.iter().zip(rows) {
                 let id = req.id as usize;
                 scores[id] = Some(row);
                 latency_ticks[id] = batch.flush_tick - req.arrival_tick;
                 wall_secs[id] = batch_secs;
+                phases[id] = RequestPhases {
+                    queue_ticks: latency_ticks[id],
+                    exec_nanos: bp.exec_nanos,
+                    scatter_nanos: bp.scatter_nanos,
+                    total_nanos: bp.total_nanos,
+                };
             }
         }
     }
@@ -455,6 +510,7 @@ pub fn run_simulation(
         wall_secs,
         flushes: batches.iter().map(|b| (b.requests.len(), b.reason)).collect(),
         exec_secs,
+        phases,
     })
 }
 

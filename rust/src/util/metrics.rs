@@ -185,9 +185,16 @@ pub struct MetricsSnapshot {
     pub dense_ops: u64,
 }
 
+/// A [`MetricsSnapshot`] interpreted as counter *deltas* between two
+/// snapshots. The global atomics bleed across concurrent clusters and
+/// tests; assertions must always be phrased over a delta
+/// (`after.delta(&before)`) so a parallel test run can only *inflate*
+/// a window, never subtract from it — never over raw counter loads.
+pub type MetricsDelta = MetricsSnapshot;
+
 impl MetricsSnapshot {
     /// Counter deltas since `earlier`.
-    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsDelta {
         MetricsSnapshot {
             flops: self.flops - earlier.flops,
             shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,

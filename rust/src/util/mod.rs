@@ -9,5 +9,6 @@ pub mod json;
 pub mod metrics;
 pub mod prng;
 pub mod quickcheck;
+pub mod stats;
 
 pub use error::{DmlError, Result};

@@ -1,0 +1,593 @@
+//! Execution statistics and structured tracing — SystemML's `-stats`.
+//!
+//! SystemML's `-stats` flag prints, after every script, (a) a *heavy
+//! hitter* table of the top-k instructions by accumulated execution
+//! time, (b) buffer-pool / caching counters, and (c) Spark-specific
+//! counters (collects, broadcasts, parallelize). This module is that
+//! subsystem for the reproduction, with each report section mapping to
+//! a SystemML analogue:
+//!
+//! * **Heavy hitter instructions** (`-stats` "Heavy hitter
+//!   instructions" table): every dispatched operator records invocation
+//!   count, wall time, FLOPs and communication bytes keyed by
+//!   `(op kind, source position, exec type CP/DIST)` — the exec-type
+//!   split is SystemML's `CP`/`SP` instruction prefix, the source
+//!   position is what `-explain`'s line attribution gives SystemML
+//!   users.
+//! * **Per-worker utilization** (no direct `-stats` analogue; Spark's
+//!   per-executor task-time view in the UI): the blocked backend stamps
+//!   each task's wall time against its simulated worker, giving busy
+//!   time, task counts and a max/mean skew ratio — the input signal for
+//!   straggler detection.
+//! * **Structured trace** (SystemML's fine-grained `Statistics` +
+//!   Spark's event log): an optional JSON-lines span log (session →
+//!   script → statement → operator) with blockify / broadcast /
+//!   shuffle / allreduce / cache-hit / cache-miss / spill / collect
+//!   events carrying byte counts. Deterministic in everything except
+//!   the `ts_ns` / `nanos` wall-time fields.
+//! * **Serving latency breakdown** (no SystemML analogue; standard
+//!   serving observability): `runtime::serve::run_simulation`
+//!   attributes each request's latency to queue-wait vs execute vs
+//!   scatter phases — see [`crate::runtime::serve::RequestPhases`].
+//!
+//! Collection is gated by [`SystemConfig::stats_enabled`] and
+//! [`SystemConfig::trace_path`](crate::conf::SystemConfig): when both
+//! are off no [`Stats`] object exists anywhere (every holder keeps an
+//! `Option<Arc<Stats>>` that is `None`), so the disabled path costs a
+//! single pointer check — no locks, no allocation.
+//!
+//! Counts, FLOPs and bytes in the report are byte-identical across
+//! `dist_threads` settings because all of them are recorded driver-side
+//! at dispatch time (the blocked backend's accounting discipline);
+//! only wall-time fields vary run to run.
+//!
+//! [`SystemConfig::stats_enabled`]: crate::conf::SystemConfig::stats_enabled
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::conf::SystemConfig;
+
+/// Key of one heavy-hitter table row: what ran, where in the script,
+/// and on which backend.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OpKey {
+    /// Operator kind (SystemML instruction opcode, e.g. `ba+*`, `r'`).
+    pub op: String,
+    /// Source position `line:col` ("-" when synthetic).
+    pub pos: String,
+    /// Exec type: `"CP"` or `"DIST"` (SystemML's `CP`/`SP` prefix).
+    pub exec: &'static str,
+}
+
+/// Accumulated measurements for one heavy-hitter row.
+#[derive(Clone, Copy, Debug, Default)]
+struct OpAccum {
+    count: u64,
+    nanos: u64,
+    flops: u64,
+    comm_bytes: u64,
+}
+
+/// One row of the heavy-hitter table (key + accumulated measurements).
+#[derive(Clone, Debug)]
+pub struct OpStat {
+    pub op: String,
+    pub pos: String,
+    pub exec: &'static str,
+    pub count: u64,
+    /// Accumulated wall time (nondeterministic; everything else in this
+    /// row is byte-identical across `dist_threads` settings).
+    pub nanos: u64,
+    pub flops: u64,
+    pub comm_bytes: u64,
+}
+
+/// Per-worker utilization slot. The cluster stamps one of these per
+/// simulated worker; `busy_nanos` is wall time of tasks attributed to
+/// the worker (nondeterministic), `tasks` is the task count
+/// (deterministic — block ownership does not depend on thread count).
+#[derive(Debug, Default)]
+pub struct WorkerSlot {
+    pub busy_nanos: AtomicU64,
+    pub tasks: AtomicU64,
+}
+
+/// Per-worker utilization row in a [`StatsReport`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerStat {
+    pub worker: usize,
+    pub busy_nanos: u64,
+    pub tasks: u64,
+}
+
+/// Structured snapshot of the statistics, for programmatic access
+/// (`MLContext::stats()`); `render()` formats the human table.
+#[derive(Clone, Debug, Default)]
+pub struct StatsReport {
+    /// All rows, sorted by key (deterministic order).
+    pub ops: Vec<OpStat>,
+    /// Per-worker utilization (empty when no distributed work ran).
+    pub workers: Vec<WorkerStat>,
+    /// Max/mean busy-time ratio across workers (1.0 when idle or only
+    /// one worker) — the straggler-detector signal. Always finite.
+    pub skew_ratio: f64,
+}
+
+impl StatsReport {
+    /// Top-k rows by accumulated time (ties broken by key, so the
+    /// ordering is stable when times collapse to zero).
+    pub fn heavy_hitters(&self, k: usize) -> Vec<OpStat> {
+        let mut rows = self.ops.clone();
+        rows.sort_by(|a, b| {
+            b.nanos
+                .cmp(&a.nanos)
+                .then_with(|| (&a.op, &a.pos, a.exec).cmp(&(&b.op, &b.pos, b.exec)))
+        });
+        rows.truncate(k);
+        rows
+    }
+}
+
+/// JSON-lines trace writer (one object per line, hand-rolled — no
+/// serde). `seq` orders records; `ts_ns` is wall time since the session
+/// opened and is the only nondeterministic field.
+struct Tracer {
+    state: Mutex<TracerState>,
+    epoch: Instant,
+}
+
+struct TracerState {
+    out: BufWriter<File>,
+    seq: u64,
+}
+
+impl Tracer {
+    fn write_line(&self, body: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.seq += 1;
+        let seq = st.seq;
+        let ts = self.epoch.elapsed().as_nanos() as u64;
+        // Trace I/O is best effort: a full disk must not fail the job.
+        let _ = writeln!(st.out, "{{\"seq\":{seq},{body},\"ts_ns\":{ts}}}");
+    }
+
+    fn flush(&self) {
+        let _ = self.state.lock().unwrap().out.flush();
+    }
+}
+
+/// Escape a string for embedding in a JSON trace line.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The statistics registry. One instance is shared (as
+/// `Option<Arc<Stats>>`) by the `MLContext`, the `Interpreter` and the
+/// `Cluster` of a session; `None` everywhere means stats are off and
+/// the hot paths do no work.
+pub struct Stats {
+    /// Collect the per-op table (`stats_enabled`). The trace can be on
+    /// with the table off and vice versa.
+    table: bool,
+    ops: Mutex<BTreeMap<OpKey, OpAccum>>,
+    workers: Mutex<Vec<Arc<WorkerSlot>>>,
+    tracer: Option<Tracer>,
+}
+
+impl std::fmt::Debug for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Stats(table={}, trace={})", self.table, self.tracer.is_some())
+    }
+}
+
+impl Stats {
+    /// Build the session's stats object from the config, or `None` when
+    /// both knobs are off (the zero-cost path). A trace file that
+    /// cannot be created is reported to stderr and tracing disabled —
+    /// observability must not fail the job.
+    pub fn from_config(config: &SystemConfig) -> Option<Arc<Stats>> {
+        if !config.stats_enabled && config.trace_path.is_none() {
+            return None;
+        }
+        let stats = Arc::new(Stats::new(
+            config.stats_enabled,
+            config.trace_path.as_deref(),
+        ));
+        stats.span_open("session", "mlcontext");
+        Some(stats)
+    }
+
+    /// Build directly (tests and embedders). `from_config` is the
+    /// normal entry point and also opens the session span.
+    pub fn new(table: bool, trace_path: Option<&Path>) -> Stats {
+        let tracer = trace_path.and_then(|p| match File::create(p) {
+            Ok(f) => Some(Tracer {
+                state: Mutex::new(TracerState { out: BufWriter::new(f), seq: 0 }),
+                epoch: Instant::now(),
+            }),
+            Err(e) => {
+                eprintln!("stats: cannot create trace file {}: {e}", p.display());
+                None
+            }
+        });
+        Stats {
+            table,
+            ops: Mutex::new(BTreeMap::new()),
+            workers: Mutex::new(Vec::new()),
+            tracer,
+        }
+    }
+
+    /// Whether the per-op table is being collected.
+    pub fn table_enabled(&self) -> bool {
+        self.table
+    }
+
+    /// Whether trace records are being written.
+    pub fn trace_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    // ---- per-operator table -------------------------------------------
+
+    /// Record one operator invocation. Called driver-side at dispatch
+    /// time, so counts / FLOPs / bytes are deterministic; `nanos` is
+    /// the only wall-time field.
+    pub fn record_op(
+        &self,
+        op: &str,
+        pos: &str,
+        exec: &'static str,
+        nanos: u64,
+        flops: u64,
+        comm_bytes: u64,
+    ) {
+        if self.table {
+            let key = OpKey { op: op.to_string(), pos: pos.to_string(), exec };
+            let mut ops = self.ops.lock().unwrap();
+            let acc = ops.entry(key).or_default();
+            acc.count += 1;
+            acc.nanos += nanos;
+            acc.flops += flops;
+            acc.comm_bytes += comm_bytes;
+        }
+        if self.tracer.is_some() {
+            self.span_close_op(op, pos, exec, nanos, flops, comm_bytes);
+        }
+    }
+
+    // ---- per-worker utilization ---------------------------------------
+
+    /// Register (growing on demand) and return the utilization slots
+    /// for `n` workers. The cluster fetches these once at construction
+    /// and stamps them per task, so the per-task path touches only
+    /// atomics it already holds.
+    pub fn worker_slots(&self, n: usize) -> Vec<Arc<WorkerSlot>> {
+        let mut ws = self.workers.lock().unwrap();
+        while ws.len() < n {
+            ws.push(Arc::new(WorkerSlot::default()));
+        }
+        ws[..n].iter().map(Arc::clone).collect()
+    }
+
+    // ---- structured trace ---------------------------------------------
+
+    /// Open a span (`session`, `script`, `statement`, `operator`).
+    pub fn span_open(&self, kind: &str, name: &str) {
+        if let Some(t) = &self.tracer {
+            t.write_line(&format!(
+                "\"ev\":\"span_open\",\"kind\":\"{}\",\"name\":\"{}\"",
+                json_escape(kind),
+                json_escape(name)
+            ));
+        }
+    }
+
+    /// Close a span opened with [`span_open`](Stats::span_open).
+    pub fn span_close(&self, kind: &str, name: &str, nanos: u64) {
+        if let Some(t) = &self.tracer {
+            t.write_line(&format!(
+                "\"ev\":\"span_close\",\"kind\":\"{}\",\"name\":\"{}\",\"nanos\":{nanos}",
+                json_escape(kind),
+                json_escape(name)
+            ));
+        }
+    }
+
+    /// Close an operator span, carrying its measurements.
+    fn span_close_op(
+        &self,
+        op: &str,
+        pos: &str,
+        exec: &'static str,
+        nanos: u64,
+        flops: u64,
+        comm_bytes: u64,
+    ) {
+        if let Some(t) = &self.tracer {
+            t.write_line(&format!(
+                "\"ev\":\"span_close\",\"kind\":\"operator\",\"name\":\"{}\",\"pos\":\"{}\",\
+                 \"exec\":\"{exec}\",\"nanos\":{nanos},\"flops\":{flops},\"bytes\":{comm_bytes}",
+                json_escape(op),
+                json_escape(pos)
+            ));
+        }
+    }
+
+    /// Emit a point event (`blockify`, `broadcast`, `shuffle`,
+    /// `allreduce`, `collect`, `spill`, `cache_hit`, `cache_miss`)
+    /// with its byte count.
+    pub fn event(&self, kind: &str, bytes: u64) {
+        if let Some(t) = &self.tracer {
+            t.write_line(&format!(
+                "\"ev\":\"event\",\"kind\":\"{}\",\"bytes\":{bytes}",
+                json_escape(kind)
+            ));
+        }
+    }
+
+    /// Flush the trace writer (tests read the file back mid-session).
+    pub fn flush_trace(&self) {
+        if let Some(t) = &self.tracer {
+            t.flush();
+        }
+    }
+
+    // ---- reporting -----------------------------------------------------
+
+    /// Structured snapshot of the current counters.
+    pub fn report(&self) -> StatsReport {
+        let ops = self
+            .ops
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, a)| OpStat {
+                op: k.op.clone(),
+                pos: k.pos.clone(),
+                exec: k.exec,
+                count: a.count,
+                nanos: a.nanos,
+                flops: a.flops,
+                comm_bytes: a.comm_bytes,
+            })
+            .collect();
+        let workers: Vec<WorkerStat> = self
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, s)| WorkerStat {
+                worker: i,
+                busy_nanos: s.busy_nanos.load(Ordering::Relaxed),
+                tasks: s.tasks.load(Ordering::Relaxed),
+            })
+            .collect();
+        let skew_ratio = skew(&workers);
+        StatsReport { ops, workers, skew_ratio }
+    }
+
+    /// Render the SystemML-style statistics text.
+    pub fn render(&self, top_k: usize) -> String {
+        let report = self.report();
+        let mut out = String::new();
+        out.push_str("SystemML Statistics:\n");
+        out.push_str(&format!("Heavy hitter instructions (top {top_k} by time):\n"));
+        out.push_str("  #   op               pos      exec  count     time(ms)        GFLOP      comm(KB)\n");
+        for (i, row) in report.heavy_hitters(top_k).iter().enumerate() {
+            out.push_str(&format!(
+                "  {:<3} {:<16} {:<8} {:<5} {:<9} {:>12.3} {:>12.3} {:>13.1}\n",
+                i + 1,
+                row.op,
+                row.pos,
+                row.exec,
+                row.count,
+                row.nanos as f64 / 1e6,
+                row.flops as f64 / 1e9,
+                row.comm_bytes as f64 / 1024.0,
+            ));
+        }
+        if report.ops.is_empty() {
+            out.push_str("  (no operators recorded)\n");
+        }
+        out.push_str("Per-worker utilization:\n");
+        if report.workers.is_empty() {
+            out.push_str("  (no distributed work)\n");
+        } else {
+            out.push_str("  worker  tasks     busy(ms)\n");
+            for w in &report.workers {
+                out.push_str(&format!(
+                    "  {:<7} {:<9} {:>10.3}\n",
+                    w.worker,
+                    w.tasks,
+                    w.busy_nanos as f64 / 1e6,
+                ));
+            }
+            out.push_str(&format!("  skew (max/mean busy): {:.3}\n", report.skew_ratio));
+        }
+        out
+    }
+
+    /// Clear the per-op table and worker slots (`reset_stats`). The
+    /// trace file keeps appending — resets do not truncate history.
+    pub fn reset(&self) {
+        self.ops.lock().unwrap().clear();
+        for s in self.workers.lock().unwrap().iter() {
+            s.busy_nanos.store(0, Ordering::Relaxed);
+            s.tasks.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for Stats {
+    fn drop(&mut self) {
+        // Balance the session span opened by `from_config` and flush.
+        if let Some(t) = &self.tracer {
+            t.write_line("\"ev\":\"span_close\",\"kind\":\"session\",\"name\":\"mlcontext\"");
+            t.flush();
+        }
+    }
+}
+
+/// Max/mean busy-time ratio; 1.0 when there is no busy time at all so
+/// the signal is always finite.
+fn skew(workers: &[WorkerStat]) -> f64 {
+    let total: u64 = workers.iter().map(|w| w.busy_nanos).sum();
+    if workers.is_empty() || total == 0 {
+        return 1.0;
+    }
+    let max = workers.iter().map(|w| w.busy_nanos).max().unwrap_or(0) as f64;
+    let mean = total as f64 / workers.len() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sysml_stats_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn table_accumulates_by_key() {
+        let s = Stats::new(true, None);
+        s.record_op("ba+*", "3:9", "DIST", 10, 100, 4096);
+        s.record_op("ba+*", "3:9", "DIST", 20, 100, 4096);
+        s.record_op("ba+*", "5:1", "DIST", 5, 50, 0);
+        s.record_op("ba+*", "3:9", "CP", 1, 2, 0);
+        let r = s.report();
+        assert_eq!(r.ops.len(), 3);
+        let hot = r
+            .ops
+            .iter()
+            .find(|o| o.pos == "3:9" && o.exec == "DIST")
+            .expect("dist row present");
+        assert_eq!(hot.count, 2);
+        assert_eq!(hot.nanos, 30);
+        assert_eq!(hot.flops, 200);
+        assert_eq!(hot.comm_bytes, 8192);
+    }
+
+    #[test]
+    fn heavy_hitters_sort_by_time_then_key() {
+        let s = Stats::new(true, None);
+        s.record_op("slow", "1:1", "CP", 100, 0, 0);
+        s.record_op("fast", "2:1", "CP", 1, 0, 0);
+        s.record_op("mid", "3:1", "CP", 50, 0, 0);
+        let hh = s.report().heavy_hitters(2);
+        assert_eq!(hh.len(), 2);
+        assert_eq!(hh[0].op, "slow");
+        assert_eq!(hh[1].op, "mid");
+        // Zero-time ties fall back to key order.
+        let s2 = Stats::new(true, None);
+        s2.record_op("b", "1:1", "CP", 0, 0, 0);
+        s2.record_op("a", "1:1", "CP", 0, 0, 0);
+        let hh2 = s2.report().heavy_hitters(5);
+        assert_eq!(hh2[0].op, "a");
+    }
+
+    #[test]
+    fn disabled_table_records_nothing() {
+        let s = Stats::new(false, None);
+        s.record_op("ba+*", "1:1", "CP", 10, 10, 10);
+        assert!(s.report().ops.is_empty());
+    }
+
+    #[test]
+    fn worker_slots_grow_and_skew_is_finite() {
+        let s = Stats::new(true, None);
+        let slots = s.worker_slots(3);
+        assert_eq!(slots.len(), 3);
+        // Idle cluster: skew defined as 1.0 (finite).
+        assert_eq!(s.report().skew_ratio, 1.0);
+        slots[0].busy_nanos.store(300, Ordering::Relaxed);
+        slots[0].tasks.store(3, Ordering::Relaxed);
+        slots[1].busy_nanos.store(150, Ordering::Relaxed);
+        slots[2].busy_nanos.store(150, Ordering::Relaxed);
+        let r = s.report();
+        assert_eq!(r.workers[0].tasks, 3);
+        // max=300, mean=200 -> 1.5
+        assert!((r.skew_ratio - 1.5).abs() < 1e-12);
+        // Re-requesting fewer slots returns the same (shared) ones.
+        let again = s.worker_slots(2);
+        assert_eq!(again[0].busy_nanos.load(Ordering::Relaxed), 300);
+        s.reset();
+        assert_eq!(s.report().workers[0].busy_nanos, 0);
+        assert!(s.report().ops.is_empty());
+    }
+
+    #[test]
+    fn trace_writes_balanced_json_lines() {
+        let path = tmp("trace_balanced");
+        {
+            let s = Stats::new(false, Some(&path));
+            assert!(s.trace_enabled());
+            s.span_open("script", "test");
+            s.event("broadcast", 4096);
+            s.record_op("ba+*", "1:1", "DIST", 5, 10, 4096);
+            s.span_close("script", "test", 99);
+            s.flush_trace();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // span_open script, event, operator span_close, span_close
+        // script (no session span: `new` doesn't open one).
+        assert_eq!(lines.len(), 4);
+        let mut opens = 0i64;
+        let mut closes = 0i64;
+        for line in &lines {
+            let v = crate::util::json::Json::parse(line).expect("valid JSON line");
+            match v.get("ev").as_str().unwrap() {
+                "span_open" => opens += 1,
+                "span_close" => closes += 1,
+                _ => {}
+            }
+            assert!(v.get("seq").as_f64().is_some());
+            assert!(v.get("ts_ns").as_f64().is_some());
+        }
+        assert_eq!(opens, 1);
+        // operator span_close + script span_close (operator open spans
+        // are emitted by the dispatcher, not by record_op).
+        assert_eq!(closes, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn render_mentions_sections() {
+        let s = Stats::new(true, None);
+        s.record_op("ba+*", "3:9", "DIST", 1_000_000, 2_000_000_000, 2048);
+        let slots = s.worker_slots(2);
+        slots[0].busy_nanos.store(10, Ordering::Relaxed);
+        let text = s.render(5);
+        assert!(text.contains("Heavy hitter instructions"));
+        assert!(text.contains("ba+*"));
+        assert!(text.contains("Per-worker utilization"));
+        assert!(text.contains("skew (max/mean busy)"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Observability gates (PR 10): the SystemML `-stats`-style registry
+//! must be deterministic where it claims to be — per-op counts and
+//! communication bytes byte-identical across `dist_threads` settings —
+//! report nothing (and cost nothing) when disabled, write a
+//! well-formed JSON-lines trace with balanced span open/close pairs,
+//! name the dominant matmult of an lm_cg loop in its heavy-hitter
+//! table, and attribute serving latency so that queue + execute +
+//! scatter accounts for every request exactly.
+
+use std::collections::BTreeMap;
+
+use systemml::api::{MLContext, Script};
+use systemml::conf::SystemConfig;
+use systemml::runtime::matrix::randgen::{rand, synthetic_classification, Pdf};
+use systemml::runtime::matrix::reorg;
+use systemml::runtime::serve::run_simulation;
+use systemml::util::json::Json;
+
+/// Conjugate-gradient loop on the normal equations: `t(X)` and `X` are
+/// loop-invariant DIST operands, `p` rebinds every iteration. Matmult
+/// invocations per run: 1 warmup (`t(X) %*% y`) + 3 per iteration.
+const LM_CG: &str = r#"
+w = matrix(0, rows=ncol(X), cols=1)
+r = t(X) %*% y
+p = r
+norm_r2 = sum(r^2)
+i = 0
+while (i < max_iter) {
+  i = i + 1
+  q = t(X) %*% (X %*% p) + lambda * p
+  alpha = norm_r2 / as.scalar(t(p) %*% q)
+  w = w + alpha * p
+  r = r - alpha * q
+  old_norm = norm_r2
+  norm_r2 = sum(r^2)
+  p = r + (norm_r2 / old_norm) * p
+}
+final_norm = norm_r2
+"#;
+
+// X (400x64 doubles = 200 KB) exceeds the driver budget, so X-sized
+// operators place DIST — same forcing as the dist bench.
+fn stats_config(threads: usize) -> SystemConfig {
+    SystemConfig::builder()
+        .driver_memory(128 * 1024)
+        .block_size(64)
+        .num_workers(4)
+        .dist_threads(threads)
+        .cache_enabled(true)
+        .stats_enabled(true)
+        .build()
+}
+
+fn lm_cg_ctx(config: SystemConfig, iters: usize) -> MLContext {
+    let (x, ylab) = synthetic_classification(400, 64, 4, 42);
+    let y = reorg::slice(&ylab, 0, 400, 0, 1).unwrap();
+    let ctx = MLContext::with_config(config);
+    let script = Script::from_str(LM_CG)
+        .input("X", x)
+        .input("y", y)
+        .input_scalar("lambda", 0.001)
+        .input_scalar("max_iter", iters as f64)
+        .output("final_norm");
+    ctx.execute(script).expect("lm_cg run failed");
+    ctx
+}
+
+/// The deterministic slice of the report: `(op, pos, exec)` keys with
+/// their invocation counts and communication bytes. Wall time and
+/// FLOPs-by-window are excluded by design (timings are exempt; the
+/// FLOP counter is process-global, so parallel tests overlap it).
+fn deterministic_rows(ctx: &MLContext) -> BTreeMap<(String, String, String), (u64, u64)> {
+    ctx.stats()
+        .expect("stats enabled")
+        .ops
+        .into_iter()
+        .map(|o| ((o.op, o.pos, o.exec.to_string()), (o.count, o.comm_bytes)))
+        .collect()
+}
+
+#[test]
+fn op_counts_and_comm_identical_across_thread_counts() {
+    let serial = lm_cg_ctx(stats_config(1), 5);
+    let parallel = lm_cg_ctx(stats_config(4), 5);
+    let a = deterministic_rows(&serial);
+    let b = deterministic_rows(&parallel);
+    assert!(!a.is_empty(), "stats-enabled run produced no operator rows");
+    assert_eq!(
+        a, b,
+        "per-op counts/comm bytes diverged between dist_threads 1 and 4"
+    );
+}
+
+#[test]
+fn disabled_mode_reports_nothing() {
+    let (x, ylab) = synthetic_classification(400, 64, 4, 42);
+    let y = reorg::slice(&ylab, 0, 400, 0, 1).unwrap();
+    let config = SystemConfig::builder()
+        .driver_memory(128 * 1024)
+        .block_size(64)
+        .num_workers(4)
+        .cache_enabled(true)
+        .build();
+    assert!(!config.stats_enabled, "stats must default to off");
+    let ctx = MLContext::with_config(config);
+    let script = Script::from_str(LM_CG)
+        .input("X", x)
+        .input("y", y)
+        .input_scalar("lambda", 0.001)
+        .input_scalar("max_iter", 2.0)
+        .output("final_norm");
+    ctx.execute(script).expect("lm_cg run failed");
+    assert!(ctx.stats().is_none(), "disabled mode must expose no report");
+    assert!(
+        ctx.statistics().contains("disabled"),
+        "disabled mode must say so: {}",
+        ctx.statistics()
+    );
+}
+
+#[test]
+fn trace_is_json_lines_with_balanced_spans() {
+    let path = std::env::temp_dir()
+        .join(format!("systemml_stats_trace_{}.jsonl", std::process::id()));
+    {
+        let config = SystemConfig::builder()
+            .driver_memory(128 * 1024)
+            .block_size(64)
+            .num_workers(4)
+            .cache_enabled(true)
+            .stats_enabled(true)
+            .trace_path(&path)
+            .build();
+        // Session span closes when the context (the last `Stats` owner)
+        // drops, so read the file only after this scope ends.
+        let _ctx = lm_cg_ctx(config, 2);
+    }
+    let text = std::fs::read_to_string(&path).expect("trace file must exist");
+    let _ = std::fs::remove_file(&path);
+    let mut opens = 0u64;
+    let mut closes = 0u64;
+    let mut operator_spans = 0u64;
+    let mut events = 0u64;
+    let mut last_seq = 0u64;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = Json::parse(line).expect("every trace line must be valid JSON");
+        let seq = v.get("seq").as_f64().expect("seq field") as u64;
+        assert_eq!(seq, last_seq + 1, "seq must increase by 1 per record");
+        last_seq = seq;
+        match v.get("ev").as_str().expect("ev field") {
+            "span_open" => opens += 1,
+            "span_close" => {
+                closes += 1;
+                if v.get("kind").as_str() == Some("operator") {
+                    operator_spans += 1;
+                    assert!(v.get("bytes").as_f64().is_some(), "operator spans carry bytes");
+                }
+            }
+            "event" => {
+                events += 1;
+                assert!(v.get("bytes").as_f64().is_some(), "events carry bytes");
+            }
+            other => panic!("unknown trace event kind: {other}"),
+        }
+    }
+    assert!(opens > 0, "trace recorded no spans");
+    assert_eq!(opens, closes, "span open/close records must balance");
+    assert!(operator_spans > 0, "trace recorded no operator spans");
+    assert!(events > 0, "trace recorded no blockify/broadcast/cache events");
+}
+
+#[test]
+fn heavy_hitters_name_dominant_matmult() {
+    let iters = 5u64;
+    let ctx = lm_cg_ctx(stats_config(0), iters as usize);
+    let report = ctx.stats().expect("stats enabled");
+    // 1 warmup matmult + 3 per iteration, placement-independent.
+    let ba_total: u64 = report
+        .ops
+        .iter()
+        .filter(|o| o.op == "ba+*")
+        .map(|o| o.count)
+        .sum();
+    assert_eq!(ba_total, 1 + 3 * iters, "unexpected matmult invocation count");
+    assert!(
+        report.ops.iter().any(|o| o.op == "ba+*" && o.exec == "DIST"),
+        "the X-sized matmults must run on the blocked backend"
+    );
+    assert!(
+        report.heavy_hitters(5).iter().any(|o| o.op == "ba+*"),
+        "the loop's matmults must make the top-5 heavy hitters: {}",
+        ctx.statistics()
+    );
+    assert!(report.skew_ratio.is_finite() && report.skew_ratio >= 1.0);
+    assert!(
+        report.workers.iter().any(|w| w.tasks > 0),
+        "distributed work must stamp worker utilization slots"
+    );
+}
+
+#[test]
+fn serving_phases_account_for_every_request() {
+    const FEATS: usize = 12;
+    let config = SystemConfig::builder()
+        .driver_memory(8 * 1024)
+        .block_size(32)
+        .num_workers(4)
+        .serve_max_batch(64)
+        .serve_max_wait_ticks(8)
+        .build();
+    let ctx = MLContext::with_config(config);
+    let script = Script::from_str("S = X %*% W + b")
+        .input("W", rand(FEATS, 4, -0.5, 0.5, 1.0, Pdf::Uniform, 41).unwrap())
+        .input("b", rand(1, 4, -0.1, 0.1, 1.0, Pdf::Uniform, 42).unwrap())
+        .output("S");
+    let svc = ctx.score_service(&script, "X", FEATS).expect("score service");
+    let requests = 64;
+    let report = run_simulation(&svc, requests, 7, 3, 2).expect("simulation failed");
+    assert_eq!(report.phases.len(), requests, "one phase split per request");
+    for (i, p) in report.phases.iter().enumerate() {
+        assert_eq!(
+            p.exec_nanos + p.scatter_nanos,
+            p.total_nanos,
+            "request {i}: execute + scatter must sum to the batch total exactly"
+        );
+        assert!(p.total_nanos > 0, "request {i}: batch wall time cannot be zero");
+        assert_eq!(
+            p.queue_ticks, report.latency_ticks[i],
+            "request {i}: queue wait must equal the simulated queueing latency"
+        );
+    }
+}
